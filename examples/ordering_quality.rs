@@ -1,0 +1,47 @@
+//! Ordering-quality comparison across the matrix suite: AMD vs ParAMD vs
+//! MMD vs ND, with #fill-ins and timing — the paper's Table 4.2/4.4 view.
+//!
+//! Run: `cargo run --release --example ordering_quality [-- --scale small]`
+
+use paramd::bench_util::{fmt_sci, Table};
+use paramd::matgen::{self, Scale};
+use paramd::nd::NestedDissection;
+use paramd::ordering::{amd_seq::AmdSeq, mmd::Mmd, paramd::ParAmd, Ordering, OrderingResult};
+use paramd::symbolic;
+use paramd::util::timer::Timer;
+
+fn main() {
+    let scale = if std::env::args().any(|a| a == "small") {
+        Scale::Small
+    } else {
+        Scale::Tiny
+    };
+    let mut table = Table::new(&["Matrix", "Method", "Time (s)", "#Fill-ins", "vs AMD"]);
+    for e in matgen::suite() {
+        let g = (e.gen)(scale);
+        let mut base_fill = 0f64;
+        let runs: Vec<(&str, Box<dyn Fn() -> OrderingResult>)> = vec![
+            ("amd", Box::new(|| AmdSeq::default().order(&g))),
+            ("paramd-8", Box::new(|| ParAmd::new(8).order(&g))),
+            ("mmd", Box::new(|| Mmd::default().order(&g))),
+            ("nd", Box::new(|| NestedDissection::default().order(&g))),
+        ];
+        for (name, run) in runs {
+            let t = Timer::new();
+            let r = run();
+            let secs = t.secs();
+            let fill = symbolic::fill_in(&g, &r.perm) as f64;
+            if name == "amd" {
+                base_fill = fill;
+            }
+            table.row(vec![
+                e.name.into(),
+                name.into(),
+                format!("{secs:.3}"),
+                fmt_sci(fill),
+                format!("{:.2}x", fill / base_fill),
+            ]);
+        }
+    }
+    table.print();
+}

@@ -1,0 +1,44 @@
+//! Quickstart: order a 3D-mesh matrix with sequential AMD and ParAMD,
+//! compare fill-in and runtime, show the cost-model speedup.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use paramd::matgen;
+use paramd::ordering::{amd_seq::AmdSeq, paramd::ParAmd, Ordering as _};
+use paramd::symbolic;
+use paramd::util::timer::Timer;
+
+fn main() {
+    // A 3D structural mesh, the AMD sweet spot (paper Table 4.1 family).
+    let g = matgen::mesh3d(20, 20, 20);
+    println!("matrix: 3D 7-pt mesh, n = {}, nnz = {}", g.n, g.nnz());
+
+    let t = Timer::new();
+    let seq = AmdSeq::default().order(&g);
+    let t_seq = t.secs();
+    let fill_seq = symbolic::fill_in(&g, &seq.perm);
+    println!("\nsequential AMD : {t_seq:.3}s, fill-ins = {:.3e}", fill_seq as f64);
+
+    let t = Timer::new();
+    let (par, detail) = ParAmd::new(8).order_detailed(&g);
+    let t_par = t.secs();
+    let fill_par = symbolic::fill_in(&g, &par.perm);
+    println!(
+        "ParAMD (8 thr) : {t_par:.3}s wall (1-core testbed), fill-ins = {:.3e}",
+        fill_par as f64
+    );
+    println!(
+        "fill ratio     : {:.3}x  (paper Table 4.2 band: 1.01–1.19x)",
+        fill_par as f64 / fill_seq as f64
+    );
+    println!(
+        "rounds         : {} multiple-elimination rounds, avg |D2 set| = {:.1}",
+        par.stats.rounds,
+        par.stats.pivots as f64 / par.stats.rounds as f64
+    );
+    println!(
+        "cost model     : {:.2}x speedup on an ideal 8-core machine \
+         (critical-path over per-round work)",
+        detail.model_speedup
+    );
+}

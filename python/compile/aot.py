@@ -1,0 +1,78 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text — never `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla_extension
+0.5.1 backing the `xla` crate rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts are f64 (`jax_enable_x64`): the Rust sparse solver is f64 and
+the dense trailing block must not dominate its residual. A real-TPU build
+would emit bf16/f32 kernels and recover precision with iterative
+refinement (DESIGN.md §3).
+
+Usage: python -m compile.aot --out ../artifacts/model.hlo.txt
+The `--out` path names the *primary* artifact; every sized variant plus a
+manifest is written next to it.
+"""
+
+import argparse
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile import model  # noqa: E402
+
+# Dense-tail tile sizes the Rust runtime may request (padded upward).
+SIZES = (32, 64, 128, 256)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_factor(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    return to_hlo_text(jax.jit(model.cholesky_factor).lower(spec))
+
+
+def lower_solve(n: int) -> str:
+    a = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    b = jax.ShapeDtypeStruct((n,), jnp.float64)
+    return to_hlo_text(jax.jit(model.cholesky_solve).lower(a, b))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--sizes", type=int, nargs="*", default=list(SIZES))
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    art_dir = out.parent
+    art_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = []
+    for n in args.sizes:
+        for kind, lower in (("chol", lower_factor), ("solve", lower_solve)):
+            path = art_dir / f"{kind}_{n}.hlo.txt"
+            text = lower(n)
+            path.write_text(text)
+            manifest.append(f"{kind} {n} {path.name}")
+            print(f"wrote {path} ({len(text)} chars)")
+    (art_dir / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    # The primary artifact doubles as the make-target sentinel.
+    out.write_text((art_dir / f"chol_{max(args.sizes)}.hlo.txt").read_text())
+    print(f"wrote {out} (sentinel, chol_{max(args.sizes)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Layer-1 Pallas kernel: blocked dense Cholesky factorization.
+
+The paper's end-to-end experiments run a GPU direct solver (cuDSS); our
+substrate factors the dense trailing Schur complement of the sparse
+factorization with this kernel (DESIGN.md §3, hardware adaptation).
+
+TPU mapping (instead of a mechanical CUDA port):
+
+- the whole tile lives in VMEM (a 256×256 f32 tile is 256 KiB — far under
+  the ~16 MiB VMEM budget, leaving room for double buffering);
+- the inner loop is organised around `bs×bs` blocks so the `trsm` panel
+  solve and the rank-`bs` trailing update are MXU-shaped matmuls
+  (`jax.lax.linalg.triangular_solve` / `@`), not scalar WMMA-style code;
+- the block step uses full-height masked panels: dynamic shapes are not
+  expressible in XLA, so each step does a fixed-shape (n×bs) solve and a
+  masked (n×n) update. This wastes ≤3× FLOPs versus a perfectly shrinking
+  trailing matrix but keeps every op a dense MXU matmul.
+
+`interpret=True` is mandatory: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO ops with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 32
+
+
+def _inv_lower(l: jax.Array) -> jax.Array:
+    """Explicit inverse of a small lower-triangular block by forward
+    substitution (row-recurrence with vectorized matmuls).
+
+    `jax.lax.linalg.triangular_solve` is avoided on purpose: its CPU
+    lowering is a LAPACK typed-FFI custom-call that the xla_extension
+    0.5.1 backing the Rust `xla` crate cannot parse; this formulation
+    lowers to plain HLO ops (and is MXU-matmul-shaped on TPU).
+    """
+    n = l.shape[0]
+    eye = jnp.eye(n, dtype=l.dtype)
+
+    def step(i, y):
+        row = (eye[i] - l[i] @ y) / l[i, i]
+        return y.at[i].set(row)
+
+    return jax.lax.fori_loop(0, n, step, jnp.zeros_like(l))
+
+
+def _unblocked_cholesky(a: jax.Array) -> jax.Array:
+    """Column-by-column Cholesky of a small (bs×bs) SPD block.
+
+    Runs inside the kernel for the diagonal block; O(bs) sequential steps
+    of vectorized column updates.
+    """
+    n = a.shape[0]
+    idx = jnp.arange(n)
+
+    def step(k, a):
+        lkk = jnp.sqrt(a[k, k])
+        col = jnp.where(idx > k, a[:, k] / lkk, 0.0)
+        col = col.at[k].set(lkk)
+        mask = (idx[:, None] > k) & (idx[None, :] > k)
+        a = a - jnp.where(mask, jnp.outer(col, col), 0.0)
+        a = a.at[:, k].set(col)
+        return a
+
+    a = jax.lax.fori_loop(0, n, step, a)
+    return jnp.tril(a)
+
+
+def _cholesky_kernel(a_ref, o_ref, *, bs: int):
+    """Right-looking blocked Cholesky over the VMEM-resident tile."""
+    a = a_ref[...]
+    n = a.shape[0]
+    nb = n // bs
+    idx = jnp.arange(n)
+
+    def block_step(b, a):
+        off = b * bs
+        # potrf: factor the bs×bs diagonal block.
+        dblk = jax.lax.dynamic_slice(a, (off, off), (bs, bs))
+        ld = _unblocked_cholesky(dblk)
+        # trsm: full-height panel solve  P · ld^{-T}  (MXU matmul shape).
+        pan = jax.lax.dynamic_slice(a, (0, off), (n, bs))
+        sol = pan @ _inv_lower(ld).T
+        below = idx[:, None] >= off + bs
+        lpan = jnp.where(below, sol, 0.0)
+        # Assemble the full block column of L: ld in the block rows, the
+        # solved panel below, zeros above.
+        ldfull = jax.lax.dynamic_update_slice(jnp.zeros((n, bs), a.dtype), ld, (off, 0))
+        col_l = ldfull + lpan
+        a = jax.lax.dynamic_update_slice(a, col_l, (0, off))
+
+        # syrk: per-block-column trailing update. A full masked n×n update
+        # would issue 3× the useful FLOPs (see EXPERIMENTS.md §Perf change
+        # #4); instead each remaining block column jb gets an
+        # (n×bs)·(bs×bs) matmul. Rows above the diagonal of later columns
+        # receive garbage, but every later read (pan/dblk) masks or avoids
+        # that region, and the final tril() discards it.
+        def col_update(jb, a):
+            joff = jb * bs
+            colj = jax.lax.dynamic_slice(col_l, (joff, 0), (bs, bs))
+            upd = col_l @ colj.T # (n, bs)
+            blk = jax.lax.dynamic_slice(a, (0, joff), (n, bs))
+            return jax.lax.dynamic_update_slice(a, blk - upd, (0, joff))
+
+        a = jax.lax.fori_loop(b + 1, nb, col_update, a)
+        return a
+
+    a = jax.lax.fori_loop(0, nb, block_step, a)
+    o_ref[...] = jnp.tril(a)
+
+
+@functools.partial(jax.jit, static_argnames=("bs",))
+def blocked_cholesky(a: jax.Array, bs: int = DEFAULT_BLOCK) -> jax.Array:
+    """Factor a dense SPD matrix `a` (n×n, n a multiple of `bs`) into its
+    lower Cholesky factor via the Pallas kernel.
+
+    Not positive definite ⇒ NaNs in the output (checked by the caller;
+    the Rust runtime converts NaN to an error).
+    """
+    n = a.shape[0]
+    if n % bs != 0:
+        raise ValueError(f"size {n} not a multiple of block {bs}")
+    return pl.pallas_call(
+        functools.partial(_cholesky_kernel, bs=bs),
+        out_shape=jax.ShapeDtypeStruct((n, n), a.dtype),
+        interpret=True,  # CPU-PJRT execution path; see module docstring
+    )(a)
+
+
+def vmem_footprint_bytes(n: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of the kernel for an n×n tile: the tile,
+    one block column, and the update product (double-buffered input)."""
+    tile = n * n * dtype_bytes
+    col = n * DEFAULT_BLOCK * dtype_bytes
+    return 2 * tile + 2 * col
+
+
+def mxu_utilization_estimate(n: int, bs: int = DEFAULT_BLOCK) -> float:
+    """Fraction of issued MXU FLOPs that are mathematically useful.
+
+    Per block step: inv_lower (bs³) + full-height trsm (n·bs²) + one
+    (n×bs)·(bs×bs) matmul per remaining block column. Useful Cholesky
+    work is n³/3. TPU-side utilization is this ratio times the MXU
+    efficiency of the constituent matmuls.
+    """
+    nb = n // bs
+    issued = nb * (bs**3 + n * bs * bs) + nb * (nb - 1) // 2 * (n * bs * bs)
+    useful = n**3 / 3
+    return useful / issued

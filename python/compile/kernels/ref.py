@@ -1,0 +1,20 @@
+"""Pure-jnp correctness oracles for the Layer-1 kernels."""
+
+import jax
+import jax.numpy as jnp
+
+
+def cholesky_ref(a: jax.Array) -> jax.Array:
+    """Reference lower Cholesky factor (XLA's built-in)."""
+    return jnp.linalg.cholesky(a)
+
+
+def solve_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference SPD solve."""
+    return jnp.linalg.solve(a, b)
+
+
+def random_spd(key, n: int, dtype=jnp.float32) -> jax.Array:
+    """Well-conditioned random SPD matrix: B·Bᵀ + n·I."""
+    b = jax.random.normal(key, (n, n), dtype=dtype)
+    return b @ b.T + n * jnp.eye(n, dtype=dtype)

@@ -1,0 +1,44 @@
+"""Layer-2 JAX model: dense factor/solve graphs over the Layer-1 kernel.
+
+These functions are what `aot.py` lowers to HLO text; the Rust runtime
+executes the artifacts on the request path (Python never runs there).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import chol_block
+
+
+def cholesky_factor(a: jax.Array) -> tuple[jax.Array]:
+    """Lower Cholesky factor of an SPD tile via the Pallas kernel."""
+    return (chol_block.blocked_cholesky(a),)
+
+
+def _forward_sub(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve L y = b by forward substitution (plain HLO ops; see
+    kernels.chol_block._inv_lower for why triangular_solve is avoided)."""
+    n = l.shape[0]
+
+    def step(i, y):
+        return y.at[i].set((b[i] - l[i] @ y) / l[i, i])
+
+    return jax.lax.fori_loop(0, n, step, jnp.zeros_like(b))
+
+
+def _backward_sub(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve Lᵀ x = b by backward substitution."""
+    n = l.shape[0]
+
+    def step(k, x):
+        i = n - 1 - k
+        return x.at[i].set((b[i] - l[:, i] @ x) / l[i, i])
+
+    return jax.lax.fori_loop(0, n, step, jnp.zeros_like(b))
+
+
+def cholesky_solve(a: jax.Array, b: jax.Array) -> tuple[jax.Array]:
+    """Solve A x = b by factor + two triangular solves (fused into one
+    HLO module with the kernel)."""
+    (l,) = cholesky_factor(a)
+    return (_backward_sub(l, _forward_sub(l, b)),)

@@ -1,0 +1,89 @@
+"""Layer-1 correctness: the Pallas blocked-Cholesky kernel against the
+pure-jnp oracle, swept over shapes/dtypes/seeds with hypothesis."""
+
+import sys
+import pathlib
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chol_block, ref
+
+BS = chol_block.DEFAULT_BLOCK
+
+
+def tol(dtype):
+    return dict(rtol=5e-4, atol=5e-3) if dtype == jnp.float32 else dict(rtol=1e-10, atol=1e-9)
+
+
+@pytest.mark.parametrize("n", [32, 64, 96, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_kernel_matches_ref(n, dtype):
+    a = ref.random_spd(jax.random.PRNGKey(n), n, dtype)
+    l = chol_block.blocked_cholesky(a)
+    lref = ref.cholesky_ref(a)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lref), **tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(nb, seed):
+    n = nb * BS
+    a = ref.random_spd(jax.random.PRNGKey(seed), n)
+    l = chol_block.blocked_cholesky(a)
+    lref = ref.cholesky_ref(a)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(lref), rtol=5e-4, atol=5e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_factor_reconstructs_input(seed):
+    n = 64
+    a = ref.random_spd(jax.random.PRNGKey(seed), n)
+    l = chol_block.blocked_cholesky(a)
+    np.testing.assert_allclose(np.asarray(l @ l.T), np.asarray(a), rtol=1e-3, atol=5e-2)
+
+
+def test_output_is_lower_triangular():
+    a = ref.random_spd(jax.random.PRNGKey(7), 64)
+    l = np.asarray(chol_block.blocked_cholesky(a))
+    assert np.allclose(np.triu(l, 1), 0.0)
+
+
+def test_indefinite_produces_nan():
+    a = -jnp.eye(32, dtype=jnp.float32)
+    l = chol_block.blocked_cholesky(a)
+    assert bool(jnp.isnan(l).any())
+
+
+def test_rejects_non_multiple_of_block():
+    a = jnp.eye(33, dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        chol_block.blocked_cholesky(a)
+
+
+def test_identity_factor():
+    a = 4.0 * jnp.eye(32, dtype=jnp.float32)
+    l = np.asarray(chol_block.blocked_cholesky(a))
+    assert np.allclose(l, 2.0 * np.eye(32))
+
+
+def test_block_size_invariance():
+    a = ref.random_spd(jax.random.PRNGKey(3), 64)
+    l1 = chol_block.blocked_cholesky(a, bs=32)
+    l2 = chol_block.blocked_cholesky(a, bs=16)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_and_mxu_estimates_sane():
+    assert chol_block.vmem_footprint_bytes(256) < 16 * 2**20  # fits VMEM
+    u = chol_block.mxu_utilization_estimate(256)
+    assert 0.1 < u < 1.0

@@ -1,0 +1,51 @@
+//! Ablation study of ParAMD's design choices (DESIGN.md §Perf): aggressive
+//! absorption on/off, the §5 adaptive-relaxation extension, and candidate
+//! budget — their effect on fill quality, rounds, and modeled scaling.
+//! Also positions the MD-family against RCM.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use paramd::bench_util::{fmt_sci, Table};
+use paramd::matgen;
+use paramd::ordering::{amd_seq::AmdSeq, paramd::ParAmd, rcm::Rcm, Ordering as _};
+use paramd::symbolic::fill_in;
+
+fn main() {
+    let t = bench_common::threads();
+    bench_common::banner("Ablation — ParAMD design choices", "DESIGN.md §Perf / paper §5");
+    for name in ["mini_nd24k", "mini_nlpkkt"] {
+        let e = matgen::suite_entry(name).unwrap();
+        let g = (e.gen)(bench_common::scale());
+        let f_seq = fill_in(&g, &AmdSeq::default().order(&g).perm) as f64;
+        let f_rcm = fill_in(&g, &Rcm.order(&g).perm) as f64;
+        println!("--- {name} (seq AMD fill {}; RCM fill {} = {:.1}x AMD) ---",
+            fmt_sci(f_seq), fmt_sci(f_rcm), f_rcm / f_seq);
+        let mut table = Table::new(&["variant", "fill ratio", "rounds", "avg |D|", "model speedup"]);
+        let variants: Vec<(&str, ParAmd)> = vec![
+            ("default", ParAmd::new(t)),
+            ("no aggressive absorption", {
+                let mut c = ParAmd::new(t);
+                c.aggressive = false;
+                c
+            }),
+            ("adaptive mult (§5 ext.)", ParAmd::new(t).with_adaptive()),
+            ("mult=1.0 (no relaxation)", ParAmd::new(t).with_mult(1.0)),
+            ("lim_total=paper 8192", ParAmd::new(t).with_lim_total(8192)),
+        ];
+        for (label, cfg) in variants {
+            let (r, d) = cfg.order_detailed(&g);
+            let fill = fill_in(&g, &r.perm) as f64;
+            let avg = r.stats.pivots as f64 / r.stats.rounds.max(1) as f64;
+            table.row(vec![
+                label.into(),
+                format!("{:.3}x", fill / f_seq),
+                format!("{}", r.stats.rounds),
+                format!("{avg:.1}"),
+                format!("{:.2}x", d.model_speedup),
+            ]);
+        }
+        table.print();
+        println!();
+    }
+}

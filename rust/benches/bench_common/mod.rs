@@ -1,0 +1,43 @@
+//! Shared helpers for the paper-table benches.
+
+use paramd::graph::csr::SymGraph;
+use paramd::graph::perm::permute_graph;
+use paramd::matgen::Scale;
+use paramd::util::rng::Rng;
+
+/// Benchmark scale from `PARAMD_SCALE` (tiny|small|full; default small).
+pub fn scale() -> Scale {
+    match std::env::var("PARAMD_SCALE").as_deref() {
+        Ok("tiny") => Scale::Tiny,
+        Ok("full") => Scale::Full,
+        _ => Scale::Small,
+    }
+}
+
+/// Thread count from `PARAMD_THREADS` (default 8; the paper used 64 — on
+/// this 1-core testbed more logical threads only add oversubscription).
+pub fn threads() -> usize {
+    std::env::var("PARAMD_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8)
+}
+
+/// The paper's evaluation protocol (§2.5.4 / Table 4.2): `k` fixed random
+/// input permutations shared by every method.
+pub fn random_permutations(g: &SymGraph, k: usize) -> Vec<SymGraph> {
+    (0..k)
+        .map(|i| {
+            let mut rng = Rng::new(0x7AB1E + i as u64);
+            permute_graph(g, &rng.permutation(g.n))
+        })
+        .collect()
+}
+
+/// Banner with reproduction context.
+pub fn banner(what: &str, paper_ref: &str) {
+    println!("=== {what} ===");
+    println!("(reproduces {paper_ref}; 1-core testbed — see DESIGN.md §2 for the");
+    println!(" scale/hardware substitutions; shapes, not absolute numbers, compare)");
+    println!();
+}

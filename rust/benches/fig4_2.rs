@@ -1,0 +1,52 @@
+//! Figure 4.2: distribution of distance-2 independent-set sizes across
+//! elimination rounds (the violin plots), printed as five-number summaries
+//! plus a text histogram and the share of rounds below 64 (the paper's
+//! full-utilization threshold).
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use paramd::bench_util::Table;
+use paramd::matgen;
+use paramd::ordering::paramd::ParAmd;
+use paramd::util::stats;
+
+fn main() {
+    let t = bench_common::threads();
+    bench_common::banner("Figure 4.2 — D2 set-size distributions", "paper §4.4 Fig 4.2");
+    let mut table = Table::new(&[
+        "Matrix", "rounds", "min", "p25", "median", "p75", "max", "frac < 64",
+    ]);
+    let mut hists = Vec::new();
+    for e in matgen::suite() {
+        let g = (e.gen)(bench_common::scale());
+        let (r, _) = ParAmd::new(t).order_detailed(&g);
+        let xs: Vec<f64> = r.stats.set_sizes.iter().map(|&s| s as f64).collect();
+        let s = stats::summary(&xs);
+        table.row(vec![
+            e.name.into(),
+            format!("{}", s.n),
+            format!("{:.0}", s.min),
+            format!("{:.0}", s.p25),
+            format!("{:.0}", s.median),
+            format!("{:.0}", s.p75),
+            format!("{:.0}", s.max),
+            format!("{:.2}", stats::frac_below(&xs, 64.0)),
+        ]);
+        hists.push((e.name, xs));
+    }
+    table.print();
+
+    println!("\ntext violins (each row: size-bucket low edge, density bar):");
+    for (name, xs) in hists {
+        let (edges, counts) = stats::histogram(&xs, 8);
+        let max = *counts.iter().max().unwrap_or(&1) as f64;
+        println!("  {name}");
+        for (e, c) in edges.iter().zip(&counts) {
+            let bar = "#".repeat(((*c as f64 / max) * 40.0).round() as usize);
+            println!("    {e:>8.0} | {bar}");
+        }
+    }
+    println!("\npaper shape: nd24k's sets are smallest (worst scaling); a significant");
+    println!("fraction of rounds sit below 64 even for the best matrices.");
+}

@@ -1,0 +1,62 @@
+//! Figure 4.3: the mult × lim parameter study on the worst-scaling
+//! (mini_nd24k) and best-scaling (mini_nlpkkt) matrices — core AMD time,
+//! distance-2 selection time, and #fill-ins over the grid.
+//!
+//! Times are the cost-model critical path (1-core testbed); the paper's
+//! qualitative findings to look for: too-small mult starves parallelism,
+//! too-large mult wrecks quality; the optimum sits near mult≈1.1–1.2 with
+//! a moderate lim.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use paramd::bench_util::{fmt_sci, Table};
+use paramd::matgen;
+use paramd::ordering::paramd::{cost, ParAmd};
+use paramd::symbolic::fill_in;
+use paramd::util::timer::Timer;
+
+fn main() {
+    let t = bench_common::threads();
+    bench_common::banner("Figure 4.3 — mult × lim sweep", "paper §4.5 Fig 4.3");
+    let mults = [1.0, 1.05, 1.1, 1.2, 1.4];
+    let lims = [64usize, 128, 512, 2048];
+    for name in ["mini_nd24k", "mini_nlpkkt"] {
+        let e = matgen::suite_entry(name).unwrap();
+        let g = (e.gen)(bench_common::scale());
+        println!("--- {name} ({t} threads) ---");
+        let mut table = Table::new(&[
+            "mult", "lim_total", "select cpu (s)", "core cpu (s)", "modeled (s)", "#fill-ins",
+        ]);
+        // Calibrate the work→time constant once per matrix.
+        let mut work_per_sec = 0.0;
+        {
+            let (_, d) = ParAmd::new(1).order_detailed(&g);
+            let total: u64 = d.round_work.iter().flatten().map(|w| w.select + w.elim).sum();
+            let secs: f64 = d.select_secs.iter().sum::<f64>() + d.elim_secs.iter().sum::<f64>();
+            work_per_sec = total as f64 / secs.max(1e-9);
+        }
+        for &mult in &mults {
+            for &lim in &lims {
+                let timer = Timer::new();
+                let (r, d) = ParAmd::new(t)
+                    .with_mult(mult)
+                    .with_lim_total(lim)
+                    .order_detailed(&g);
+                let _wall = timer.secs();
+                let fill = fill_in(&g, &r.perm) as f64;
+                table.row(vec![
+                    format!("{mult:.2}"),
+                    format!("{lim}"),
+                    format!("{:.3}", d.select_secs.iter().sum::<f64>()),
+                    format!("{:.3}", d.elim_secs.iter().sum::<f64>()),
+                    format!("{:.3}", cost::modeled_time(&d.round_work, work_per_sec, 5e-6)),
+                    fmt_sci(fill),
+                ]);
+            }
+        }
+        table.print();
+        println!();
+    }
+    println!("paper: optimum near mult=1.2/lim=128; defaults mult=1.1, lim=8192/threads.");
+}

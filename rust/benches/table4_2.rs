@@ -1,0 +1,69 @@
+//! Table 4.2: the headline comparison — sequential AMD vs ParAMD over the
+//! matrix suite, five shared random input permutations per matrix
+//! (decoupling tie-breaking, §2.5.4): ordering time mean ± std, speedup,
+//! #fill-ins, fill ratio.
+//!
+//! On this 1-core testbed the honest wall-clock of a multi-thread run is
+//! meaningless, so the "speedup" column uses the critical-path cost model
+//! (DESIGN.md §7) evaluated on the recorded per-round work distribution
+//! of the t-thread run; 1-thread wall-clock is also reported.
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use paramd::bench_util::{fmt_sci, Table};
+use paramd::matgen;
+use paramd::ordering::{amd_seq::AmdSeq, paramd::ParAmd, Ordering as _};
+use paramd::symbolic::fill_in;
+use paramd::util::stats;
+use paramd::util::timer::Timer;
+
+fn main() {
+    let t = bench_common::threads();
+    bench_common::banner("Table 4.2 — ordering comparison", "paper §4.3 Table 4.2");
+    let mut table = Table::new(&[
+        "Matrix",
+        "Seq (s)",
+        "ParAMD wall (s)",
+        "Model speedup",
+        "Fill seq",
+        "Fill par",
+        "Ratio",
+    ]);
+    for e in matgen::suite() {
+        let g0 = (e.gen)(bench_common::scale());
+        let perms = bench_common::random_permutations(&g0, 5);
+        let mut seq_times = vec![];
+        let mut par_times = vec![];
+        let mut speedups = vec![];
+        let mut fill_seq = vec![];
+        let mut fill_par = vec![];
+        for g in &perms {
+            let timer = Timer::new();
+            let rs = AmdSeq::default().order(g);
+            seq_times.push(timer.secs());
+            fill_seq.push(fill_in(g, &rs.perm) as f64);
+
+            let timer = Timer::new();
+            let (rp, d) = ParAmd::new(t).order_detailed(g);
+            par_times.push(timer.secs());
+            speedups.push(d.model_speedup);
+            fill_par.push(fill_in(g, &rp.perm) as f64);
+        }
+        table.row(vec![
+            e.name.into(),
+            format!("{:.3} ± {:.3}", stats::mean(&seq_times), stats::std_dev(&seq_times)),
+            format!("{:.3} ± {:.3}", stats::mean(&par_times), stats::std_dev(&par_times)),
+            format!("{:.2}x", stats::mean(&speedups)),
+            fmt_sci(stats::mean(&fill_seq)),
+            fmt_sci(stats::mean(&fill_par)),
+            format!("{:.2}x", stats::mean(&fill_par) / stats::mean(&fill_seq)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper (64t, EPYC 7763): speedups 3.18–7.29x, fill ratios 1.01–1.19x.\n\
+         Expected shape here: fill ratio ≈ 1.0–1.4x; model speedup grows with\n\
+         avg D2-set size (mini_nd24k worst, mini_nlpkkt/flan best)."
+    );
+}

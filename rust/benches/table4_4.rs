@@ -1,0 +1,46 @@
+//! Table 4.4: #fill-ins of SuiteSparse-style AMD vs ParAMD vs ND on the
+//! SPD subset (mean over shared random permutations).
+
+#[path = "bench_common/mod.rs"]
+mod bench_common;
+
+use paramd::bench_util::{fmt_sci, Table};
+use paramd::matgen;
+use paramd::nd::NestedDissection;
+use paramd::ordering::{amd_seq::AmdSeq, paramd::ParAmd, Ordering};
+use paramd::symbolic::fill_in;
+use paramd::util::stats;
+
+fn main() {
+    let t = bench_common::threads();
+    bench_common::banner("Table 4.4 — #fill-ins by ordering method", "paper §4.6 Table 4.4");
+    let mut table = Table::new(&["Matrix", "AMD", "ParAMD", "ND", "ND/AMD"]);
+    for e in matgen::suite() {
+        if !e.symmetric {
+            continue;
+        }
+        let g0 = (e.gen)(bench_common::scale());
+        let perms = bench_common::random_permutations(&g0, 3);
+        let mut f_amd = vec![];
+        let mut f_par = vec![];
+        let mut f_nd = vec![];
+        for g in &perms {
+            f_amd.push(fill_in(g, &AmdSeq::default().order(g).perm) as f64);
+            f_par.push(fill_in(g, &ParAmd::new(t).order(g).perm) as f64);
+            f_nd.push(fill_in(g, &NestedDissection::default().order(g).perm) as f64);
+        }
+        table.row(vec![
+            e.name.into(),
+            fmt_sci(stats::mean(&f_amd)),
+            fmt_sci(stats::mean(&f_par)),
+            fmt_sci(stats::mean(&f_nd)),
+            format!("{:.2}x", stats::mean(&f_nd) / stats::mean(&f_amd)),
+        ]);
+    }
+    table.print();
+    println!(
+        "\npaper: ND reaches 0.64–0.93x of AMD's fill at 24k–5.3M rows; at mini\n\
+         scale separators are relatively larger, so ND/AMD near or above 1.0 is\n\
+         expected — the ParAMD ≈ 1.0–1.2x AMD column is the reproduced claim."
+    );
+}

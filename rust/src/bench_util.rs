@@ -1,0 +1,121 @@
+//! Micro-benchmark harness (criterion is unavailable in the offline
+//! registry). Benches are plain binaries with `harness = false`; this
+//! module provides warmup + repeated timing with mean ± std reporting and
+//! simple Markdown table emission matching the paper's table layouts.
+
+use crate::util::stats;
+use crate::util::timer::Timer;
+
+/// Time `f` `reps` times after `warmup` runs; returns per-rep seconds.
+pub fn time_reps<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..reps)
+        .map(|_| {
+            let t = Timer::new();
+            std::hint::black_box(f());
+            t.secs()
+        })
+        .collect()
+}
+
+/// `mean ± std` formatting used throughout the paper's Table 4.2/4.3.
+pub fn fmt_mean_std(xs: &[f64]) -> String {
+    format!("{:.3} ± {:.3}", stats::mean(xs), stats::std_dev(xs))
+}
+
+/// Scientific notation like the paper's fill-in columns (`5.03e+08`).
+pub fn fmt_sci(x: f64) -> String {
+    format!("{x:.2e}")
+}
+
+/// A Markdown table writer for bench reports.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for c in 0..ncol {
+            width[c] = self.header[c].len();
+            for r in &self.rows {
+                width[c] = width[c].max(r[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", cell, w = width[c]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reps_counts() {
+        let xs = time_reps(1, 5, || 1 + 1);
+        assert_eq!(xs.len(), 5);
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["Matrix", "Time"]);
+        t.row(vec!["nd24k".into(), "0.82".into()]);
+        let s = t.render();
+        assert!(s.contains("| Matrix |"));
+        assert!(s.contains("| nd24k  |"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_sci(5.03e8), "5.03e8");
+        assert!(fmt_mean_std(&[1.0, 1.0]).starts_with("1.000 ±"));
+    }
+}

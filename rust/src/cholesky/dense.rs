@@ -1,0 +1,132 @@
+//! Dense Cholesky kernels for the trailing Schur-complement block.
+//!
+//! [`NativeDense`] is the pure-Rust fallback; the PJRT-backed
+//! implementation ([`crate::runtime::PjrtDense`]) runs the AOT-compiled
+//! JAX/Pallas kernel and satisfies the same trait, so the sparse solver is
+//! oblivious to which engine factors its tail.
+
+/// A dense lower-Cholesky engine: factor `a` (n×n, row-major, full
+/// symmetric content) in place into its lower factor `L` (upper part
+/// zeroed). Returns `Err` if the matrix is not positive definite.
+///
+/// Deliberately not `Sync`: the PJRT-backed engine wraps non-thread-safe
+/// FFI handles, so the coordinator pins it to a dedicated solver thread.
+pub trait DenseCholesky {
+    fn factor(&self, a: &mut [f64], n: usize) -> Result<(), String>;
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Straightforward right-looking dense Cholesky (kij), cache-blocked
+/// enough for the tail sizes we use (≤ 1024).
+pub struct NativeDense;
+
+impl DenseCholesky for NativeDense {
+    fn factor(&self, a: &mut [f64], n: usize) -> Result<(), String> {
+        assert_eq!(a.len(), n * n);
+        for k in 0..n {
+            let akk = a[k * n + k];
+            if akk <= 0.0 || !akk.is_finite() {
+                return Err(format!(
+                    "matrix not positive definite at dense column {k} (pivot {akk:e})"
+                ));
+            }
+            let lkk = akk.sqrt();
+            a[k * n + k] = lkk;
+            let inv = 1.0 / lkk;
+            for i in k + 1..n {
+                a[i * n + k] *= inv;
+            }
+            for j in k + 1..n {
+                let ljk = a[j * n + k];
+                if ljk != 0.0 {
+                    // Update the lower triangle of the trailing block.
+                    for i in j..n {
+                        a[i * n + j] -= a[i * n + k] * ljk;
+                    }
+                }
+            }
+        }
+        // Zero the strict upper triangle for a clean L.
+        for i in 0..n {
+            for j in i + 1..n {
+                a[i * n + j] = 0.0;
+            }
+        }
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn check_dense_factor(engine: &dyn DenseCholesky, n: usize, seed: u64) {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    // SPD: A = B B^T + n·I
+    let b: Vec<f64> = (0..n * n).map(|_| rng.f64() * 2.0 - 1.0).collect();
+    let mut a = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += b[i * n + k] * b[j * n + k];
+            }
+            a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+        }
+    }
+    let orig = a.clone();
+    engine.factor(&mut a, n).unwrap();
+    // L L^T == A
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..=i.min(j) {
+                s += a[i * n + k] * a[j * n + k];
+            }
+            assert!(
+                (s - orig[i * n + j]).abs() < 1e-8 * n as f64,
+                "({i},{j}): {s} vs {}",
+                orig[i * n + j]
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_factors_spd() {
+        for n in [1usize, 2, 5, 16, 33] {
+            check_dense_factor(&NativeDense, n, n as u64);
+        }
+    }
+
+    #[test]
+    fn native_identity() {
+        let mut a = vec![0.0; 9];
+        for i in 0..3 {
+            a[i * 3 + i] = 4.0;
+        }
+        NativeDense.factor(&mut a, 3).unwrap();
+        for i in 0..3 {
+            assert_eq!(a[i * 3 + i], 2.0);
+        }
+    }
+
+    #[test]
+    fn native_rejects_indefinite() {
+        let mut a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(NativeDense.factor(&mut a, 2).is_err());
+    }
+
+    #[test]
+    fn zero_size() {
+        let mut a: Vec<f64> = vec![];
+        NativeDense.factor(&mut a, 0).unwrap();
+    }
+}

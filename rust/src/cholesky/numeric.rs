@@ -1,0 +1,299 @@
+//! Up-looking numeric Cholesky (the `cs_chol` algorithm) with an optional
+//! dense trailing block.
+//!
+//! Rows `k < split` follow the classic up-looking scheme: the pattern of
+//! row `k` of `L` is the row subtree reached by `ereach`, and each entry
+//! `L(k,i)` is appended to column `i`. Rows `k ≥ split` compute only their
+//! *sparse* panel entries (`i < split`); what accumulates at columns
+//! `[split, k]` is then exactly the Schur complement
+//! `S = C[tail,tail] − L_panel L_panelᵀ`, which is handed to a dense
+//! Cholesky engine (native or PJRT) and written back into the CSC factor.
+
+use crate::graph::csr::CsrMatrix;
+use crate::symbolic::SymbolicInfo;
+
+use super::dense::DenseCholesky;
+
+/// Lower-triangular factor in CSC form; each column stores the diagonal
+/// first, then strictly-lower rows in increasing order.
+pub struct CscFactor {
+    pub n: usize,
+    pub lp: Vec<usize>,
+    pub li: Vec<i32>,
+    pub lx: Vec<f64>,
+}
+
+/// Build `C = P A Pᵀ` (values included, rows sorted).
+fn permute_matrix(a: &CsrMatrix, perm: &[i32]) -> CsrMatrix {
+    let n = a.nrows;
+    let mut inv = vec![0i32; n];
+    for (k, &v) in perm.iter().enumerate() {
+        inv[v as usize] = k as i32;
+    }
+    let mut trip = Vec::with_capacity(a.nnz());
+    for k in 0..n {
+        let v = perm[k] as usize;
+        for p in a.rowptr[v]..a.rowptr[v + 1] {
+            trip.push((k, inv[a.colind[p] as usize] as usize, a.values[p]));
+        }
+    }
+    CsrMatrix::from_triplets(n, n, &trip)
+}
+
+/// Nonzero pattern of row `k` of `L`: walk the elimination tree from each
+/// entry of row `k` of `C` (columns `< k`) until hitting a marked node;
+/// emits the pattern in topological order into `s[top..n]`.
+fn ereach(
+    c: &CsrMatrix,
+    k: usize,
+    parent: &[i32],
+    s: &mut [i32],
+    wmark: &mut [i32],
+) -> usize {
+    let n = c.nrows;
+    let mut top = n;
+    wmark[k] = k as i32;
+    for p in c.rowptr[k]..c.rowptr[k + 1] {
+        let mut i = c.colind[p] as usize;
+        if i >= k {
+            continue;
+        }
+        let mut len = 0usize;
+        while wmark[i] != k as i32 {
+            s[len] = i as i32;
+            len += 1;
+            wmark[i] = k as i32;
+            let pi = parent[i];
+            if pi < 0 {
+                break;
+            }
+            i = pi as usize;
+        }
+        // Push the path onto the output stack (reversing into topo order).
+        while len > 0 {
+            len -= 1;
+            top -= 1;
+            s[top] = s[len];
+        }
+    }
+    top
+}
+
+/// Factor with the up-looking algorithm; `split == n` means fully sparse.
+pub fn factor_uplooking(
+    a: &CsrMatrix,
+    perm: &[i32],
+    info: &SymbolicInfo,
+    split: usize,
+    dense_chol: &dyn DenseCholesky,
+) -> Result<CscFactor, String> {
+    let n = a.nrows;
+    let c = permute_matrix(a, perm);
+    let m = n - split; // dense tail size
+
+    // Column pointers: sparse columns use the symbolic counts; tail
+    // columns hold a full dense triangle.
+    let mut lp = vec![0usize; n + 1];
+    for j in 0..n {
+        let cap = if j < split {
+            info.counts[j] as usize
+        } else {
+            n - j
+        };
+        lp[j + 1] = lp[j] + cap;
+    }
+    let nnz_cap = lp[n];
+    let mut li = vec![0i32; nnz_cap];
+    let mut lx = vec![0f64; nnz_cap];
+    // Next free slot per column (cs_chol's `c` array).
+    let mut cfree: Vec<usize> = lp[..n].to_vec();
+
+    let mut x = vec![0f64; n]; // dense scratch row
+    let mut s = vec![0i32; n]; // ereach stack
+    let mut wmark = vec![-1i32; n];
+    // Dense Schur block, row-major m×m (lower triangle filled).
+    let mut schur = vec![0f64; m * m];
+
+    for k in 0..n {
+        let top = ereach(&c, k, &info.parent, &mut s, &mut wmark);
+        // Scatter row k of C (columns ≤ k).
+        let mut d = 0.0; // diagonal accumulator
+        for p in c.rowptr[k]..c.rowptr[k + 1] {
+            let j = c.colind[p] as usize;
+            if j < k {
+                x[j] = c.values[p];
+            } else if j == k {
+                d = c.values[p];
+            }
+        }
+        // Sparse updates in topological order (skip tail columns — their
+        // coupling lives in the dense Schur block).
+        for &iv in &s[top..n] {
+            let i = iv as usize;
+            if i >= split {
+                // Tail-tail coupling: leave x[i] in place — it is read into
+                // the Schur row (and cleared) below.
+                continue;
+            }
+            let pdiag = lp[i];
+            let lkk = lx[pdiag];
+            let lki = x[i] / lkk;
+            x[i] = 0.0;
+            for p in pdiag + 1..cfree[i] {
+                x[li[p] as usize] -= lx[p] * lki;
+            }
+            d -= lki * lki;
+            if k < split {
+                // Append L(k,i) to column i.
+                let p = cfree[i];
+                debug_assert!(p < lp[i + 1], "column {i} overflow");
+                li[p] = k as i32;
+                lx[p] = lki;
+                cfree[i] += 1;
+            } else {
+                // Panel entry of a tail row: also appended to column i so
+                // later rows receive its updates.
+                let p = cfree[i];
+                debug_assert!(p < lp[i + 1], "column {i} overflow (panel)");
+                li[p] = k as i32;
+                lx[p] = lki;
+                cfree[i] += 1;
+            }
+        }
+        if k < split {
+            if d <= 0.0 || !d.is_finite() {
+                return Err(format!(
+                    "matrix not positive definite at column {k} (pivot {d:e})"
+                ));
+            }
+            let p = cfree[k];
+            li[p] = k as i32;
+            lx[p] = d.sqrt();
+            cfree[k] += 1;
+        } else {
+            // Row of the Schur complement: S[t][u] sits in x[split..k], the
+            // diagonal in d.
+            let t = k - split;
+            for u in 0..t {
+                schur[t * m + u] = x[split + u];
+                x[split + u] = 0.0;
+            }
+            schur[t * m + t] = d;
+        }
+    }
+
+    if m > 0 {
+        // Mirror to full symmetric content for the dense engine.
+        for t in 0..m {
+            for u in t + 1..m {
+                schur[t * m + u] = schur[u * m + t];
+            }
+        }
+        dense_chol.factor(&mut schur, m)?;
+        // Write the dense factor back into the tail columns.
+        for j in 0..m {
+            let col = split + j;
+            let mut p = lp[col];
+            for i in j..m {
+                li[p] = (split + i) as i32;
+                lx[p] = schur[i * m + j];
+                p += 1;
+            }
+            cfree[col] = p;
+        }
+    }
+
+    // Compact columns to their actual fill (sparse columns always fill
+    // exactly their symbolic count; keep an assert for the invariant).
+    for j in 0..split {
+        debug_assert_eq!(cfree[j], lp[j + 1], "column {j} underfilled");
+    }
+    Ok(CscFactor { n, lp, li, lx })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cholesky::dense::NativeDense;
+    use crate::graph::symmetrize;
+    use crate::matgen::laplacian_matrix;
+    use crate::ordering::{amd_seq::AmdSeq, Ordering as _};
+    use crate::symbolic::analyze;
+
+    /// Reconstruct P A Pᵀ from L and compare.
+    fn check_llt(a: &CsrMatrix, split_frac: f64) {
+        let g = symmetrize(a);
+        let perm = AmdSeq::default().order(&g).perm;
+        let info = analyze(&g, &perm);
+        let n = a.nrows;
+        let split = ((n as f64) * split_frac) as usize;
+        let l = factor_uplooking(a, &perm, &info, split, &NativeDense).unwrap();
+        let c = permute_matrix(a, &perm);
+        // dense L
+        let mut dl = vec![0.0; n * n];
+        for j in 0..n {
+            for p in l.lp[j]..l.lp[j + 1] {
+                dl[l.li[p] as usize * n + j] = l.lx[p];
+            }
+        }
+        for i in 0..n {
+            // row i of C as dense
+            let mut row = vec![0.0; n];
+            for p in c.rowptr[i]..c.rowptr[i + 1] {
+                row[c.colind[p] as usize] = c.values[p];
+            }
+            for j in 0..=i {
+                let mut sum = 0.0;
+                for k in 0..=j {
+                    sum += dl[i * n + k] * dl[j * n + k];
+                }
+                assert!(
+                    (sum - row[j]).abs() < 1e-9,
+                    "L L^T mismatch at ({i},{j}): {sum} vs {} (split={split})",
+                    row[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn llt_reconstructs_simplicial() {
+        check_llt(&laplacian_matrix(7, 7), 1.0);
+    }
+
+    #[test]
+    fn llt_reconstructs_half_dense() {
+        check_llt(&laplacian_matrix(7, 7), 0.5);
+    }
+
+    #[test]
+    fn llt_reconstructs_fully_dense() {
+        check_llt(&laplacian_matrix(5, 5), 0.0);
+    }
+
+    #[test]
+    fn ereach_pattern_is_row_subtree() {
+        // Path graph: row k of L has exactly {k-1} below-diagonal.
+        let a = {
+            let mut trip = vec![];
+            for i in 0..6 {
+                trip.push((i, i, 3.0));
+                if i + 1 < 6 {
+                    trip.push((i, i + 1, -1.0));
+                    trip.push((i + 1, i, -1.0));
+                }
+            }
+            CsrMatrix::from_triplets(6, 6, &trip)
+        };
+        let g = symmetrize(&a);
+        let id: Vec<i32> = (0..6).collect();
+        let info = analyze(&g, &id);
+        let c = permute_matrix(&a, &id);
+        let mut s = vec![0i32; 6];
+        let mut w = vec![-1i32; 6];
+        for k in 1..6 {
+            let top = ereach(&c, k, &info.parent, &mut s, &mut w);
+            assert_eq!(&s[top..6], &[(k - 1) as i32]);
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! Triangular solves over the CSC factor.
+
+use super::numeric::CscFactor;
+
+/// In-place forward solve `L y = b` (columns store diagonal first).
+pub fn lower_solve(l: &CscFactor, x: &mut [f64]) {
+    assert_eq!(x.len(), l.n);
+    for j in 0..l.n {
+        let pd = l.lp[j];
+        x[j] /= l.lx[pd];
+        let xj = x[j];
+        for p in pd + 1..l.lp[j + 1] {
+            x[l.li[p] as usize] -= l.lx[p] * xj;
+        }
+    }
+}
+
+/// In-place backward solve `Lᵀ y = b`.
+pub fn upper_solve(l: &CscFactor, x: &mut [f64]) {
+    assert_eq!(x.len(), l.n);
+    for j in (0..l.n).rev() {
+        let pd = l.lp[j];
+        let mut s = x[j];
+        for p in pd + 1..l.lp[j + 1] {
+            s -= l.lx[p] * x[l.li[p] as usize];
+        }
+        x[j] = s / l.lx[pd];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2x2 lower factor [[2,0],[1,3]] in CSC.
+    fn small_l() -> CscFactor {
+        CscFactor {
+            n: 2,
+            lp: vec![0, 2, 3],
+            li: vec![0, 1, 1],
+            lx: vec![2.0, 1.0, 3.0],
+        }
+    }
+
+    #[test]
+    fn forward_solve_known() {
+        let l = small_l();
+        let mut x = vec![4.0, 7.0]; // L y = b => y = [2, 5/3]
+        lower_solve(&l, &mut x);
+        assert!((x[0] - 2.0).abs() < 1e-14);
+        assert!((x[1] - 5.0 / 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn backward_solve_known() {
+        let l = small_l();
+        // L^T x = b with b = [2, 3]: x[1] = 1, x[0] = (2 - 1*1)/2 = 0.5
+        let mut x = vec![2.0, 3.0];
+        upper_solve(&l, &mut x);
+        assert!((x[1] - 1.0).abs() < 1e-14);
+        assert!((x[0] - 0.5).abs() < 1e-14);
+    }
+
+    #[test]
+    fn forward_then_backward_is_llt_solve() {
+        // A = L L^T = [[4,2],[2,10]]; b = A·[1,1] = [6,12]
+        let l = small_l();
+        let mut x = vec![6.0, 12.0];
+        lower_solve(&l, &mut x);
+        upper_solve(&l, &mut x);
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 1.0).abs() < 1e-12);
+    }
+}

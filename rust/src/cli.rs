@@ -1,0 +1,94 @@
+//! Minimal command-line flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, bare `--switch`, and
+//! positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv`. Flags in `switches` never consume a value; all other
+    /// `--flag` forms take the next token (or `--flag=value`).
+    pub fn parse(argv: impl IntoIterator<Item = String>, switches: &[&str]) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switches.contains(&stripped) {
+                    out.switches.push(stripped.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(switches: &[&str]) -> Self {
+        Self::parse(std::env::args().skip(1), switches)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()), &["verbose", "fast"])
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = parse(&["order", "--threads", "8", "--mult=1.2", "--verbose", "x.mtx"]);
+        assert_eq!(a.positional, vec!["order", "x.mtx"]);
+        assert_eq!(a.get("threads"), Some("8"));
+        assert_eq!(a.get_parse("threads", 1usize), 8);
+        assert_eq!(a.get_parse("mult", 1.0f64), 1.2);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+        assert_eq!(a.get_or("missing", "d"), "d");
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse(&["--fast"]);
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn bad_parse_falls_back() {
+        let a = parse(&["--threads", "abc"]);
+        assert_eq!(a.get_parse("threads", 7usize), 7);
+    }
+}

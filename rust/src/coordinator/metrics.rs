@@ -1,0 +1,91 @@
+//! Per-method service metrics: request counts, latency summaries,
+//! fill-in accumulation.
+
+use crate::util::stats;
+
+/// One method's accumulated numbers.
+#[derive(Clone, Debug, Default)]
+pub struct MethodMetrics {
+    pub requests: u64,
+    pub latencies: Vec<f64>,
+    pub total_fill: i64,
+}
+
+impl MethodMetrics {
+    pub fn mean_latency(&self) -> f64 {
+        stats::mean(&self.latencies)
+    }
+
+    pub fn p95_latency(&self) -> f64 {
+        stats::percentile(&self.latencies, 95.0)
+    }
+}
+
+/// Service-wide metrics keyed by method name.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    entries: Vec<(String, MethodMetrics)>,
+}
+
+impl Metrics {
+    pub fn record(&mut self, method: &str, latency_secs: f64, fill: Option<i64>) {
+        let e = match self.entries.iter_mut().find(|(m, _)| m == method) {
+            Some((_, e)) => e,
+            None => {
+                self.entries
+                    .push((method.to_string(), MethodMetrics::default()));
+                &mut self.entries.last_mut().unwrap().1
+            }
+        };
+        e.requests += 1;
+        e.latencies.push(latency_secs);
+        e.total_fill += fill.unwrap_or(0);
+    }
+
+    pub fn get(&self, method: &str) -> Option<&MethodMetrics> {
+        self.entries.iter().find(|(m, _)| m == method).map(|(_, e)| e)
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.entries.iter().map(|(_, e)| e.requests).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &MethodMetrics)> {
+        self.entries.iter().map(|(m, e)| (m.as_str(), e))
+    }
+
+    /// Render a compact report.
+    pub fn report(&self) -> String {
+        let mut s = String::from("method     reqs   mean(s)    p95(s)\n");
+        for (m, e) in self.iter() {
+            s.push_str(&format!(
+                "{:<10} {:<6} {:<10.4} {:<10.4}\n",
+                m,
+                e.requests,
+                e.mean_latency(),
+                e.p95_latency()
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = Metrics::default();
+        m.record("amd", 0.5, Some(100));
+        m.record("amd", 1.5, Some(200));
+        m.record("paramd", 0.1, None);
+        assert_eq!(m.total_requests(), 3);
+        let amd = m.get("amd").unwrap();
+        assert_eq!(amd.requests, 2);
+        assert!((amd.mean_latency() - 1.0).abs() < 1e-12);
+        assert_eq!(amd.total_fill, 300);
+        assert!(m.report().contains("paramd"));
+        assert!(m.get("nope").is_none());
+    }
+}

@@ -1,0 +1,323 @@
+//! The Layer-3 coordinator: an ordering/solve *service*.
+//!
+//! The paper's AMD use case is a pipeline stage inside a sparse direct
+//! solver; this module packages the library as one deployable component:
+//! a request queue, an ordering executor (ParAMD spawns its own thread
+//! pool per request), and a dedicated **solver thread** that owns the
+//! non-`Sync` PJRT engine and serves factor+solve requests over a channel.
+//! Metrics (latency summaries, counters) are collected per method.
+
+pub mod metrics;
+pub mod request;
+
+pub use metrics::Metrics;
+pub use request::{Method, OrderReply, OrderRequest, SolveReply, SolveSpec};
+
+use std::sync::mpsc;
+
+use crate::cholesky::{self, DenseTail, NativeDense};
+use crate::graph::symmetrize_parallel;
+use crate::ordering::{
+    amd_seq::AmdSeq, md::MinDegree, mmd::Mmd, paramd::ParAmd, Ordering as _, OrderingResult,
+};
+use crate::nd::NestedDissection;
+use crate::symbolic;
+use crate::util::timer::Timer;
+
+/// The ordering service. Construct once, submit requests, read metrics.
+pub struct Service {
+    metrics: Metrics,
+    /// Threads used for the symmetrization pre-processing (§4.2).
+    pre_threads: usize,
+    /// Dense-tail policy handed to the solver.
+    tail: DenseTail,
+    /// Channel to the dedicated PJRT solver thread (None = native only).
+    solver: Option<SolverHandle>,
+}
+
+struct SolverHandle {
+    tx: mpsc::Sender<SolveJob>,
+    _thread: std::thread::JoinHandle<()>,
+}
+
+struct SolveJob {
+    a: crate::graph::csr::CsrMatrix,
+    perm: Vec<i32>,
+    b: Vec<f64>,
+    tail: DenseTail,
+    reply: mpsc::Sender<Result<SolveReply, String>>,
+}
+
+impl Service {
+    /// A service with the native dense engine only.
+    pub fn new(pre_threads: usize) -> Self {
+        Self {
+            metrics: Metrics::default(),
+            pre_threads: pre_threads.max(1),
+            tail: DenseTail::default(),
+            solver: None,
+        }
+    }
+
+    /// Attach the PJRT-backed solver thread. The engine is created *on*
+    /// the thread (its FFI handles are not `Sync`, DESIGN.md §4) from
+    /// the given artifacts directory.
+    pub fn with_pjrt_solver(mut self, artifacts_dir: std::path::PathBuf) -> Result<Self, String> {
+        let (tx, rx) = mpsc::channel::<SolveJob>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<usize, String>>();
+        let thread = std::thread::spawn(move || {
+            let engine = match crate::runtime::PjrtEngine::load_dir(&artifacts_dir) {
+                Ok(e) => {
+                    let max = e
+                        .sizes(crate::runtime::ArtifactKind::Chol)
+                        .last()
+                        .copied()
+                        .unwrap_or(0);
+                    let _ = ready_tx.send(Ok(max));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            let dense = crate::runtime::PjrtDense { engine: &engine };
+            while let Ok(job) = rx.recv() {
+                let out = solve_with(&job.a, &job.perm, &job.b, job.tail, &dense, "pjrt");
+                let _ = job.reply.send(out);
+            }
+        });
+        let max_tile = ready_rx
+            .recv()
+            .map_err(|e| e.to_string())?
+            .map_err(|e| format!("pjrt solver init: {e}"))?;
+        // Clamp the dense-tail policy to what the artifacts can factor.
+        if let DenseTail::Auto { max, min_density } = self.tail {
+            self.tail = DenseTail::Auto {
+                max: max.min(max_tile),
+                min_density,
+            };
+        }
+        self.solver = Some(SolverHandle {
+            tx,
+            _thread: thread,
+        });
+        Ok(self)
+    }
+
+    pub fn with_tail(mut self, tail: DenseTail) -> Self {
+        self.tail = tail;
+        self
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Run an ordering request (synchronously; ParAMD parallelism happens
+    /// inside). Includes the `|A| + |A^T|` pre-processing unless the
+    /// request says the input is already symmetric (§4.2's advice).
+    pub fn order(&mut self, req: &OrderRequest) -> OrderReply {
+        let total = Timer::new();
+        let tpre = Timer::new();
+        let g = if let Some(g) = &req.pattern {
+            g.clone()
+        } else {
+            symmetrize_parallel(req.matrix.as_ref().expect("matrix or pattern"), self.pre_threads)
+        };
+        let pre_secs = tpre.secs();
+
+        let tord = Timer::new();
+        let result: OrderingResult = match &req.method {
+            Method::Amd => AmdSeq::default().order(&g),
+            Method::Mmd => Mmd::default().order(&g),
+            Method::MinDegree => MinDegree.order(&g),
+            Method::Nd => NestedDissection::default().order(&g),
+            Method::ParAmd {
+                threads,
+                mult,
+                lim_total,
+            } => ParAmd::new(*threads)
+                .with_mult(*mult)
+                .with_lim_total(*lim_total)
+                .order(&g),
+        };
+        let order_secs = tord.secs();
+
+        let fill = if req.compute_fill {
+            Some(symbolic::fill_in(&g, &result.perm))
+        } else {
+            None
+        };
+        let reply = OrderReply {
+            perm: result.perm,
+            fill_in: fill,
+            pre_secs,
+            order_secs,
+            total_secs: total.secs(),
+            rounds: result.stats.rounds,
+            gc_count: result.stats.gc_count,
+            modeled_time: result.stats.modeled_time,
+        };
+        self.metrics
+            .record(req.method.name(), reply.total_secs, reply.fill_in);
+        reply
+    }
+
+    /// Order + factor + solve. Uses the PJRT solver thread when attached,
+    /// otherwise the native dense engine inline.
+    pub fn solve(&mut self, req: &OrderRequest, spec: &SolveSpec) -> Result<SolveReply, String> {
+        let a = req
+            .matrix
+            .as_ref()
+            .ok_or("solve requires an explicit matrix")?
+            .clone();
+        let ordered = self.order(req);
+        let b = match spec {
+            SolveSpec::OnesSolution => {
+                let ones = vec![1.0; a.nrows];
+                let mut b = vec![0.0; a.nrows];
+                a.matvec(&ones, &mut b);
+                b
+            }
+            other => other.rhs(a.nrows),
+        };
+        let t = Timer::new();
+        let mut out = if let Some(handle) = &self.solver {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            handle
+                .tx
+                .send(SolveJob {
+                    a,
+                    perm: ordered.perm.clone(),
+                    b,
+                    tail: self.tail,
+                    reply: reply_tx,
+                })
+                .map_err(|e| e.to_string())?;
+            reply_rx.recv().map_err(|e| e.to_string())??
+        } else {
+            solve_with(&a, &ordered.perm, &b, self.tail, &NativeDense, "native")?
+        };
+        out.order_secs = ordered.order_secs;
+        out.pre_secs = ordered.pre_secs;
+        out.total_secs = ordered.total_secs + t.secs();
+        Ok(out)
+    }
+}
+
+/// Shared solve path (used inline and on the solver thread).
+fn solve_with(
+    a: &crate::graph::csr::CsrMatrix,
+    perm: &[i32],
+    b: &[f64],
+    tail: DenseTail,
+    dense: &dyn crate::cholesky::DenseCholesky,
+    engine: &'static str,
+) -> Result<SolveReply, String> {
+    let tfac = Timer::new();
+    let f = cholesky::factor(a, perm, tail, dense)?;
+    let factor_secs = tfac.secs();
+    let tsol = Timer::new();
+    let x = cholesky::solve(&f, b);
+    let solve_secs = tsol.secs();
+    let resid = cholesky::residual(a, &x, b);
+    Ok(SolveReply {
+        x,
+        residual: resid,
+        nnz_l: f.nnz_l,
+        dense_tail_cols: f.perm.len() - f.split,
+        factor_secs,
+        solve_secs,
+        engine,
+        order_secs: 0.0,
+        pre_secs: 0.0,
+        total_secs: 0.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{laplacian_matrix, mesh2d, spd_from_graph};
+
+    fn spd_request(method: Method) -> OrderRequest {
+        OrderRequest {
+            matrix: Some(spd_from_graph(&mesh2d(12, 12), 1.0)),
+            pattern: None,
+            method,
+            compute_fill: true,
+        }
+    }
+
+    #[test]
+    fn order_via_every_method() {
+        let mut svc = Service::new(2);
+        for m in [
+            Method::Amd,
+            Method::Mmd,
+            Method::Nd,
+            Method::ParAmd {
+                threads: 2,
+                mult: 1.1,
+                lim_total: 8192,
+            },
+        ] {
+            let rep = svc.order(&spd_request(m));
+            assert_eq!(rep.perm.len(), 144);
+            assert!(rep.fill_in.unwrap() >= 0);
+        }
+        assert_eq!(svc.metrics().total_requests(), 4);
+    }
+
+    #[test]
+    fn solve_native_end_to_end() {
+        let mut svc = Service::new(1);
+        let req = spd_request(Method::Amd);
+        let rep = svc
+            .solve(&req, &SolveSpec::OnesSolution)
+            .expect("solve must succeed");
+        assert!(rep.residual < 1e-10, "residual {:e}", rep.residual);
+        // b was built from x = ones.
+        for xi in &rep.x {
+            assert!((xi - 1.0).abs() < 1e-8);
+        }
+        assert_eq!(rep.engine, "native");
+    }
+
+    #[test]
+    fn solve_pjrt_end_to_end() {
+        let svc = Service::new(1).with_pjrt_solver("artifacts".into());
+        let mut svc = match svc {
+            Ok(s) => s,
+            Err(e) => panic!("pjrt solver init failed: {e} (run `make artifacts`)"),
+        };
+        let a = laplacian_matrix(10, 10);
+        let req = OrderRequest {
+            matrix: Some(a),
+            pattern: None,
+            method: Method::ParAmd {
+                threads: 2,
+                mult: 1.1,
+                lim_total: 8192,
+            },
+            compute_fill: false,
+        };
+        let rep = svc.solve(&req, &SolveSpec::RandomRhs { seed: 3 }).unwrap();
+        assert!(rep.residual < 1e-10, "residual {:e}", rep.residual);
+        assert_eq!(rep.engine, "pjrt");
+    }
+
+    #[test]
+    fn pattern_requests_skip_preprocessing() {
+        let mut svc = Service::new(1);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(mesh2d(10, 10)),
+            method: Method::Amd,
+            compute_fill: false,
+        };
+        let rep = svc.order(&req);
+        assert_eq!(rep.perm.len(), 100);
+    }
+}

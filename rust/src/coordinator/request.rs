@@ -1,0 +1,143 @@
+//! Request/reply types of the ordering service.
+
+use crate::graph::csr::{CsrMatrix, SymGraph};
+use crate::util::rng::Rng;
+
+/// Which ordering algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// Sequential AMD (the SuiteSparse baseline).
+    Amd,
+    /// The paper's parallel AMD.
+    ParAmd {
+        threads: usize,
+        mult: f64,
+        lim_total: usize,
+    },
+    /// Multiple minimum degree (Liu 1985).
+    Mmd,
+    /// Exact minimum degree (oracle; small inputs only).
+    MinDegree,
+    /// Multilevel nested dissection.
+    Nd,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Amd => "amd",
+            Method::ParAmd { .. } => "paramd",
+            Method::Mmd => "mmd",
+            Method::MinDegree => "md",
+            Method::Nd => "nd",
+        }
+    }
+
+    /// Parse `amd | paramd | mmd | md | nd` with ParAMD parameters.
+    pub fn parse(s: &str, threads: usize, mult: f64, lim_total: usize) -> Option<Method> {
+        match s {
+            "amd" => Some(Method::Amd),
+            "paramd" => Some(Method::ParAmd {
+                threads,
+                mult,
+                lim_total,
+            }),
+            "mmd" => Some(Method::Mmd),
+            "md" => Some(Method::MinDegree),
+            "nd" => Some(Method::Nd),
+            _ => None,
+        }
+    }
+}
+
+/// An ordering request: either a numeric matrix (symmetrized by the
+/// service, as SuiteSparse AMD always does — §4.2) or an explicit
+/// symmetric pattern (skipping pre-processing, the paper's advice for
+/// known-symmetric inputs).
+#[derive(Clone, Debug)]
+pub struct OrderRequest {
+    pub matrix: Option<CsrMatrix>,
+    pub pattern: Option<SymGraph>,
+    pub method: Method,
+    /// Compute exact #fill-ins (costs a symbolic analysis).
+    pub compute_fill: bool,
+}
+
+/// Ordering reply.
+#[derive(Clone, Debug)]
+pub struct OrderReply {
+    pub perm: Vec<i32>,
+    pub fill_in: Option<i64>,
+    pub pre_secs: f64,
+    pub order_secs: f64,
+    pub total_secs: f64,
+    pub rounds: u64,
+    pub gc_count: u64,
+    pub modeled_time: f64,
+}
+
+/// Right-hand-side specification for solve requests.
+#[derive(Clone, Debug)]
+pub enum SolveSpec {
+    /// b := A·1 (exact solution = ones; good for validation).
+    OnesSolution,
+    /// Uniform random b.
+    RandomRhs { seed: u64 },
+    /// Explicit b.
+    Explicit(Vec<f64>),
+}
+
+impl SolveSpec {
+    pub(crate) fn rhs(&self, n: usize) -> Vec<f64> {
+        match self {
+            // OnesSolution needs the matrix (b = A·1); the service
+            // computes it before reaching here.
+            SolveSpec::OnesSolution => unreachable!("handled by Service::solve"),
+            SolveSpec::RandomRhs { seed } => {
+                let mut rng = Rng::new(*seed);
+                (0..n).map(|_| rng.f64() * 2.0 - 1.0).collect()
+            }
+            SolveSpec::Explicit(b) => b.clone(),
+        }
+    }
+}
+
+/// Reply of a solve request.
+#[derive(Clone, Debug)]
+pub struct SolveReply {
+    pub x: Vec<f64>,
+    pub residual: f64,
+    pub nnz_l: usize,
+    pub dense_tail_cols: usize,
+    pub factor_secs: f64,
+    pub solve_secs: f64,
+    pub engine: &'static str,
+    pub order_secs: f64,
+    pub pre_secs: f64,
+    pub total_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(Method::parse("amd", 1, 1.1, 8192), Some(Method::Amd));
+        assert_eq!(
+            Method::parse("paramd", 4, 1.2, 100),
+            Some(Method::ParAmd {
+                threads: 4,
+                mult: 1.2,
+                lim_total: 100
+            })
+        );
+        assert!(Method::parse("bogus", 1, 1.0, 1).is_none());
+    }
+
+    #[test]
+    fn rhs_shapes() {
+        assert_eq!(SolveSpec::RandomRhs { seed: 1 }.rhs(5).len(), 5);
+        assert_eq!(SolveSpec::Explicit(vec![1.0, 2.0]).rhs(2), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,302 @@
+//! Compressed sparse row storage.
+//!
+//! Two types:
+//! - [`CsrMatrix`] — a general (possibly nonsymmetric, possibly valued)
+//!   sparse matrix, used for I/O and for the numeric solver.
+//! - [`SymGraph`] — the symmetric *pattern* the ordering algorithms consume:
+//!   adjacency of the undirected graph of `|A| + |A^T|`, diagonal removed,
+//!   no duplicate entries, neighbor lists sorted.
+
+/// General CSR sparse matrix with `f64` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointers, length `nrows + 1`.
+    pub rowptr: Vec<usize>,
+    /// Column indices, length `nnz`.
+    pub colind: Vec<i32>,
+    /// Values, length `nnz` (may be empty for pattern-only matrices).
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Build from unsorted triplets; duplicates are summed.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Self {
+        let mut count = vec![0usize; nrows + 1];
+        for &(r, _, _) in triplets {
+            assert!(r < nrows, "row index {r} out of bounds {nrows}");
+            count[r + 1] += 1;
+        }
+        for i in 0..nrows {
+            count[i + 1] += count[i];
+        }
+        let rowptr_raw = count.clone();
+        let mut colind = vec![0i32; triplets.len()];
+        let mut values = vec![0f64; triplets.len()];
+        let mut next = rowptr_raw.clone();
+        for &(r, c, v) in triplets {
+            assert!(c < ncols, "col index {c} out of bounds {ncols}");
+            let p = next[r];
+            colind[p] = c as i32;
+            values[p] = v;
+            next[r] += 1;
+        }
+        let mut m = Self {
+            nrows,
+            ncols,
+            rowptr: rowptr_raw,
+            colind,
+            values,
+        };
+        m.sort_and_dedup();
+        m
+    }
+
+    /// Sort each row by column and sum duplicates in place.
+    pub fn sort_and_dedup(&mut self) {
+        let mut new_rowptr = vec![0usize; self.nrows + 1];
+        let mut new_colind = Vec::with_capacity(self.colind.len());
+        let mut new_values = Vec::with_capacity(self.values.len());
+        let mut row: Vec<(i32, f64)> = Vec::new();
+        for r in 0..self.nrows {
+            row.clear();
+            for p in self.rowptr[r]..self.rowptr[r + 1] {
+                row.push((self.colind[p], self.values.get(p).copied().unwrap_or(1.0)));
+            }
+            row.sort_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row.len() {
+                let c = row[i].0;
+                let mut v = 0.0;
+                while i < row.len() && row[i].0 == c {
+                    v += row[i].1;
+                    i += 1;
+                }
+                new_colind.push(c);
+                new_values.push(v);
+            }
+            new_rowptr[r + 1] = new_colind.len();
+        }
+        self.rowptr = new_rowptr;
+        self.colind = new_colind;
+        self.values = new_values;
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.colind.len()
+    }
+
+    /// Column indices of row `r`.
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.colind[self.rowptr[r]..self.rowptr[r + 1]]
+    }
+
+    /// Values of row `r`.
+    pub fn row_values(&self, r: usize) -> &[f64] {
+        &self.values[self.rowptr[r]..self.rowptr[r + 1]]
+    }
+
+    /// Transpose (also yields CSC of the original).
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut count = vec![0usize; self.ncols + 1];
+        for &c in &self.colind {
+            count[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            count[i + 1] += count[i];
+        }
+        let rowptr = count.clone();
+        let mut next = count;
+        let mut colind = vec![0i32; self.nnz()];
+        let mut values = vec![0f64; self.nnz()];
+        for r in 0..self.nrows {
+            for p in self.rowptr[r]..self.rowptr[r + 1] {
+                let c = self.colind[p] as usize;
+                let q = next[c];
+                colind[q] = r as i32;
+                values[q] = self.values[p];
+                next[c] += 1;
+            }
+        }
+        CsrMatrix {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            rowptr,
+            colind,
+            values,
+        }
+    }
+
+    /// Structural symmetry check (pattern only).
+    pub fn is_pattern_symmetric(&self) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let t = self.transpose();
+        self.rowptr == t.rowptr && self.colind == t.colind
+    }
+
+    /// y = A x (dense vectors).
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let mut acc = 0.0;
+            for p in self.rowptr[r]..self.rowptr[r + 1] {
+                acc += self.values[p] * x[self.colind[p] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+}
+
+/// Symmetric adjacency pattern: what every ordering algorithm consumes.
+///
+/// Invariants (checked by [`SymGraph::validate`]):
+/// - square, no self-loops, no duplicates, rows sorted;
+/// - `(i, j)` present iff `(j, i)` present.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SymGraph {
+    pub n: usize,
+    pub rowptr: Vec<usize>,
+    pub colind: Vec<i32>,
+}
+
+impl SymGraph {
+    /// Build from an edge list of undirected edges (self-loops dropped,
+    /// duplicates merged).
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut trip = Vec::with_capacity(edges.len() * 2);
+        for &(u, v) in edges {
+            assert!(u < n && v < n);
+            if u != v {
+                trip.push((u, v, 1.0));
+                trip.push((v, u, 1.0));
+            }
+        }
+        let m = CsrMatrix::from_triplets(n, n, &trip);
+        Self {
+            n,
+            rowptr: m.rowptr,
+            colind: m.colind,
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.colind.len()
+    }
+
+    /// Number of undirected edges.
+    pub fn nedges(&self) -> usize {
+        self.nnz() / 2
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[i32] {
+        &self.colind[self.rowptr[v]..self.rowptr[v + 1]]
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.rowptr[v + 1] - self.rowptr[v]
+    }
+
+    /// Check all structural invariants; returns an error string on failure.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rowptr.len() != self.n + 1 {
+            return Err("rowptr length".into());
+        }
+        if self.rowptr[0] != 0 || *self.rowptr.last().unwrap() != self.colind.len() {
+            return Err("rowptr endpoints".into());
+        }
+        for v in 0..self.n {
+            if self.rowptr[v] > self.rowptr[v + 1] {
+                return Err(format!("rowptr not monotone at {v}"));
+            }
+            let nb = self.neighbors(v);
+            for w in nb.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {v} not strictly sorted"));
+                }
+            }
+            for &u in nb {
+                if u < 0 || u as usize >= self.n {
+                    return Err(format!("row {v}: index {u} out of range"));
+                }
+                if u as usize == v {
+                    return Err(format!("self loop at {v}"));
+                }
+                if self.neighbors(u as usize).binary_search(&(v as i32)).is_err() {
+                    return Err(format!("asymmetric edge ({v},{u})"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triplets_sorted_and_summed() {
+        let m = CsrMatrix::from_triplets(
+            2,
+            2,
+            &[(0, 1, 1.0), (0, 1, 2.0), (1, 0, 5.0), (0, 0, 1.0)],
+        );
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.row(0), &[0, 1]);
+        assert_eq!(m.row_values(0), &[1.0, 3.0]);
+        assert_eq!(m.row(1), &[0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = CsrMatrix::from_triplets(3, 2, &[(0, 1, 1.0), (2, 0, 3.0), (1, 1, 2.0)]);
+        let t = m.transpose();
+        assert_eq!(t.nrows, 2);
+        assert_eq!(t.ncols, 3);
+        let tt = t.transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn matvec_identity_like() {
+        let m = CsrMatrix::from_triplets(2, 2, &[(0, 0, 2.0), (1, 1, 3.0)]);
+        let mut y = vec![0.0; 2];
+        m.matvec(&[1.0, 1.0], &mut y);
+        assert_eq!(y, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn symgraph_from_edges() {
+        let g = SymGraph::from_edges(4, &[(0, 1), (1, 2), (1, 2), (3, 3)]);
+        g.validate().unwrap();
+        assert_eq!(g.nedges(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(3), 0);
+    }
+
+    #[test]
+    fn symgraph_validate_catches_asymmetry() {
+        let g = SymGraph {
+            n: 2,
+            rowptr: vec![0, 1, 1],
+            colind: vec![1],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn pattern_symmetry() {
+        let sym = CsrMatrix::from_triplets(2, 2, &[(0, 1, 1.0), (1, 0, 9.0)]);
+        assert!(sym.is_pattern_symmetric());
+        let asym = CsrMatrix::from_triplets(2, 2, &[(0, 1, 1.0)]);
+        assert!(!asym.is_pattern_symmetric());
+    }
+}

@@ -1,0 +1,198 @@
+//! Matrix Market (.mtx) reader/writer.
+//!
+//! Supports the `matrix coordinate` format with `real | integer | pattern`
+//! fields and `general | symmetric | skew-symmetric` symmetries — the
+//! subset covering the SuiteSparse Matrix Collection files the paper uses.
+
+use std::io::{BufRead, BufReader, Write as _};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::csr::CsrMatrix;
+
+/// Parsed header of a Matrix Market file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MmSymmetry {
+    General,
+    Symmetric,
+    SkewSymmetric,
+}
+
+/// Read a Matrix Market coordinate file into a [`CsrMatrix`].
+/// Symmetric/skew storage is expanded to full storage.
+pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut reader = BufReader::new(f);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let header: Vec<String> = line.trim().split_whitespace().map(|s| s.to_lowercase()).collect();
+    if header.len() < 5 || header[0] != "%%matrixmarket" || header[1] != "matrix" {
+        bail!("not a MatrixMarket matrix file: {line:?}");
+    }
+    if header[2] != "coordinate" {
+        bail!("only coordinate format supported, got {}", header[2]);
+    }
+    let field = header[3].as_str();
+    if !matches!(field, "real" | "integer" | "pattern") {
+        bail!("unsupported field type {field}");
+    }
+    let sym = match header[4].as_str() {
+        "general" => MmSymmetry::General,
+        "symmetric" => MmSymmetry::Symmetric,
+        "skew-symmetric" => MmSymmetry::SkewSymmetric,
+        s => bail!("unsupported symmetry {s}"),
+    };
+
+    // Skip comments, read size line.
+    let (nrows, ncols, nnz) = loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("missing size line");
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let nr: usize = it.next().context("nrows")?.parse()?;
+        let nc: usize = it.next().context("ncols")?.parse()?;
+        let nz: usize = it.next().context("nnz")?.parse()?;
+        break (nr, nc, nz);
+    };
+
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(
+        nnz * if sym == MmSymmetry::General { 1 } else { 2 },
+    );
+    let mut count = 0usize;
+    while count < nnz {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("unexpected EOF: read {count} of {nnz} entries");
+        }
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("row")?.parse::<usize>()? - 1;
+        let c: usize = it.next().context("col")?.parse::<usize>()? - 1;
+        let v: f64 = if field == "pattern" {
+            1.0
+        } else {
+            it.next().context("value")?.parse()?
+        };
+        if r >= nrows || c >= ncols {
+            bail!("entry ({},{}) out of bounds {}x{}", r + 1, c + 1, nrows, ncols);
+        }
+        triplets.push((r, c, v));
+        if r != c {
+            match sym {
+                MmSymmetry::Symmetric => triplets.push((c, r, v)),
+                MmSymmetry::SkewSymmetric => triplets.push((c, r, -v)),
+                MmSymmetry::General => {}
+            }
+        }
+        count += 1;
+    }
+    Ok(CsrMatrix::from_triplets(nrows, ncols, &triplets))
+}
+
+/// Write a matrix in `general real coordinate` format.
+pub fn write_matrix_market(path: &Path, m: &CsrMatrix) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "% written by paramd")?;
+    writeln!(w, "{} {} {}", m.nrows, m.ncols, m.nnz())?;
+    for r in 0..m.nrows {
+        for p in m.rowptr[r]..m.rowptr[r + 1] {
+            writeln!(w, "{} {} {:.17e}", r + 1, m.colind[p] + 1, m.values[p])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("paramd_mm_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_general() {
+        let m = CsrMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 1.5), (0, 2, -2.0), (1, 1, 3.0), (2, 0, 4.0)],
+        );
+        let p = tmp("rt.mtx");
+        write_matrix_market(&p, &m).unwrap();
+        let m2 = read_matrix_market(&p).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn symmetric_expansion() {
+        let p = tmp("sym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 3\n1 1 2.0\n2 1 5.0\n3 2 7.0\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.nnz(), 5);
+        assert!(m.is_pattern_symmetric());
+        assert_eq!(m.row(0), &[0, 1]);
+        assert_eq!(m.row_values(1), &[5.0, 7.0]);
+    }
+
+    #[test]
+    fn pattern_field() {
+        let p = tmp("pat.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern general\n% comment\n2 2 2\n1 2\n2 1\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row_values(0), &[1.0]);
+    }
+
+    #[test]
+    fn skew_symmetric() {
+        let p = tmp("skew.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real skew-symmetric\n2 2 1\n2 1 3.0\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.row_values(0), &[-3.0]);
+        assert_eq!(m.row_values(1), &[3.0]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad.mtx");
+        std::fs::write(&p, "hello world\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds() {
+        let p = tmp("oob.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+        )
+        .unwrap();
+        assert!(read_matrix_market(&p).is_err());
+    }
+}

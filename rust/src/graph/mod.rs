@@ -1,0 +1,12 @@
+//! Sparse-graph substrate: CSR symmetric graphs, Matrix Market I/O, the
+//! parallel `|A| + |A^T|` symmetrization pre-processing step (paper §4.2),
+//! and permutation utilities.
+
+pub mod csr;
+pub mod mm;
+pub mod perm;
+pub mod symmetrize;
+
+pub use csr::{CsrMatrix, SymGraph};
+pub use perm::{compose, invert_perm, is_valid_perm, permute_graph};
+pub use symmetrize::{symmetrize, symmetrize_parallel};

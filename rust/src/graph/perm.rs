@@ -1,0 +1,121 @@
+//! Permutation utilities.
+//!
+//! Convention (matches SuiteSparse AMD): `perm[k] = v` means vertex `v` of
+//! the original graph is eliminated `k`-th, i.e. row/column `v` of `A` maps
+//! to position `k` of `P A P^T`. `iperm` is the inverse: `iperm[v] = k`.
+
+use crate::graph::csr::SymGraph;
+
+/// Is `perm` a permutation of `0..n`?
+pub fn is_valid_perm(perm: &[i32]) -> bool {
+    let n = perm.len();
+    let mut seen = vec![false; n];
+    for &v in perm {
+        if v < 0 || v as usize >= n || seen[v as usize] {
+            return false;
+        }
+        seen[v as usize] = true;
+    }
+    true
+}
+
+/// Invert a permutation: `out[perm[k]] = k`.
+pub fn invert_perm(perm: &[i32]) -> Vec<i32> {
+    let mut inv = vec![0i32; perm.len()];
+    for (k, &v) in perm.iter().enumerate() {
+        inv[v as usize] = k as i32;
+    }
+    inv
+}
+
+/// Compose permutations: applying `first` then `second`.
+/// `(second ∘ first)[k] = first[second[k]]`.
+pub fn compose(first: &[i32], second: &[i32]) -> Vec<i32> {
+    second.iter().map(|&k| first[k as usize]).collect()
+}
+
+/// Relabel a graph by a permutation: vertex `perm[k]` becomes vertex `k` of
+/// the result (i.e. the graph of `P A P^T`).
+pub fn permute_graph(g: &SymGraph, perm: &[i32]) -> SymGraph {
+    assert_eq!(perm.len(), g.n);
+    debug_assert!(is_valid_perm(perm));
+    let inv = invert_perm(perm);
+    let mut rowptr = vec![0usize; g.n + 1];
+    for k in 0..g.n {
+        rowptr[k + 1] = rowptr[k] + g.degree(perm[k] as usize);
+    }
+    let mut colind = vec![0i32; g.nnz()];
+    for k in 0..g.n {
+        let v = perm[k] as usize;
+        let dst = &mut colind[rowptr[k]..rowptr[k + 1]];
+        for (i, &u) in g.neighbors(v).iter().enumerate() {
+            dst[i] = inv[u as usize];
+        }
+        dst.sort_unstable();
+    }
+    SymGraph {
+        n: g.n,
+        rowptr,
+        colind,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn validity() {
+        assert!(is_valid_perm(&[2, 0, 1]));
+        assert!(!is_valid_perm(&[0, 0, 1]));
+        assert!(!is_valid_perm(&[0, 3, 1]));
+        assert!(!is_valid_perm(&[-1, 0, 1]));
+        assert!(is_valid_perm(&[]));
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let mut rng = Rng::new(11);
+        let p = rng.permutation(50);
+        let inv = invert_perm(&p);
+        for k in 0..50 {
+            assert_eq!(inv[p[k] as usize], k as i32);
+            assert_eq!(p[inv[k] as usize], k as i32);
+        }
+    }
+
+    #[test]
+    fn compose_with_inverse_is_identity() {
+        let mut rng = Rng::new(13);
+        let p = rng.permutation(20);
+        let inv = invert_perm(&p);
+        let id = compose(&p, &inv);
+        assert_eq!(id, (0..20).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn permute_graph_preserves_structure() {
+        let g = SymGraph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)]);
+        let mut rng = Rng::new(17);
+        let p = rng.permutation(5);
+        let pg = permute_graph(&g, &p);
+        pg.validate().unwrap();
+        assert_eq!(pg.nedges(), g.nedges());
+        // Edge (perm[i], perm[j]) in g  <=>  edge (i, j) in pg.
+        let inv = invert_perm(&p);
+        for v in 0..5 {
+            for &u in g.neighbors(v) {
+                let (a, b) = (inv[v] as usize, inv[u as usize]);
+                assert!(pg.neighbors(a).binary_search(&(b as i32)).is_ok());
+            }
+        }
+    }
+
+    #[test]
+    fn permute_by_identity_is_noop() {
+        let g = SymGraph::from_edges(4, &[(0, 1), (2, 3)]);
+        let id: Vec<i32> = (0..4).collect();
+        assert_eq!(permute_graph(&g, &id), g);
+    }
+}

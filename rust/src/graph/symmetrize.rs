@@ -1,0 +1,209 @@
+//! The `|A| + |A^T|` pre-processing step (paper §4.2).
+//!
+//! SuiteSparse AMD always forms the symmetrized pattern before ordering so
+//! that nonsymmetric inputs (UMFPACK-style use) are handled; the paper
+//! parallelizes this step "using simple atomic operations" and reports it in
+//! the runtime breakdown (Figure 4.1), where it is a scaling bottleneck.
+//!
+//! We provide both the sequential version and a faithful parallel version:
+//! per-row counts accumulated with atomic fetch-adds, then a parallel
+//! scatter into the output CSR, then per-row sort+dedup in parallel.
+
+use std::sync::atomic::{AtomicUsize, Ordering as AO};
+
+use crate::graph::csr::{CsrMatrix, SymGraph};
+use crate::util::chunk_range;
+
+/// Sequential symmetrization: pattern of `A + A^T` with the diagonal
+/// dropped, as a [`SymGraph`].
+pub fn symmetrize(a: &CsrMatrix) -> SymGraph {
+    assert_eq!(a.nrows, a.ncols, "ordering needs a square matrix");
+    let n = a.nrows;
+    let mut edges = Vec::with_capacity(a.nnz());
+    for r in 0..n {
+        for &c in a.row(r) {
+            let c = c as usize;
+            if c != r {
+                edges.push((r, c));
+            }
+        }
+    }
+    SymGraph::from_edges(n, &edges)
+}
+
+/// Parallel symmetrization with `t` threads, mirroring the paper's
+/// atomic-based implementation. Deterministic output (rows are sorted and
+/// deduplicated at the end).
+pub fn symmetrize_parallel(a: &CsrMatrix, t: usize) -> SymGraph {
+    assert_eq!(a.nrows, a.ncols, "ordering needs a square matrix");
+    let n = a.nrows;
+    let t = t.max(1);
+    if t == 1 || n < 1024 {
+        return symmetrize(a);
+    }
+
+    // Pass 1: atomic per-row counts of directed arcs in both directions.
+    let count: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    std::thread::scope(|s| {
+        for tid in 0..t {
+            let count = &count;
+            s.spawn(move || {
+                let (lo, hi) = chunk_range(n, t, tid);
+                for r in lo..hi {
+                    for &c in a.row(r) {
+                        let c = c as usize;
+                        if c != r {
+                            count[r].fetch_add(1, AO::Relaxed);
+                            count[c].fetch_add(1, AO::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    // Prefix sum (sequential; O(n)).
+    let mut rowptr = vec![0usize; n + 1];
+    for i in 0..n {
+        rowptr[i + 1] = rowptr[i] + count[i].load(AO::Relaxed);
+    }
+    let total = rowptr[n];
+
+    // Pass 2: parallel scatter with atomic cursors.
+    let cursor: Vec<AtomicUsize> = rowptr[..n].iter().map(|&p| AtomicUsize::new(p)).collect();
+    let colind: Vec<std::sync::atomic::AtomicI32> =
+        (0..total).map(|_| std::sync::atomic::AtomicI32::new(-1)).collect();
+    std::thread::scope(|s| {
+        for tid in 0..t {
+            let cursor = &cursor;
+            let colind = &colind;
+            s.spawn(move || {
+                let (lo, hi) = chunk_range(n, t, tid);
+                for r in lo..hi {
+                    for &c in a.row(r) {
+                        let c = c as usize;
+                        if c != r {
+                            let p = cursor[r].fetch_add(1, AO::Relaxed);
+                            colind[p].store(c as i32, AO::Relaxed);
+                            let q = cursor[c].fetch_add(1, AO::Relaxed);
+                            colind[q].store(r as i32, AO::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let mut colind: Vec<i32> = colind.into_iter().map(|a| a.into_inner()).collect();
+
+    // Pass 3: parallel per-row sort + dedup, then sequential compaction.
+    let dedup_len: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+    {
+        let colind_ptr = ColindPtr(colind.as_mut_ptr());
+        std::thread::scope(|s| {
+            for tid in 0..t {
+                let dedup_len = &dedup_len;
+                let rowptr = &rowptr;
+                let cp = &colind_ptr;
+                s.spawn(move || {
+                    let (lo, hi) = chunk_range(n, t, tid);
+                    for r in lo..hi {
+                        // SAFETY: row ranges [rowptr[r], rowptr[r+1]) are
+                        // disjoint across rows, and rows are partitioned
+                        // across threads.
+                        let row = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                cp.0.add(rowptr[r]),
+                                rowptr[r + 1] - rowptr[r],
+                            )
+                        };
+                        row.sort_unstable();
+                        let mut w = 0usize;
+                        for i in 0..row.len() {
+                            if w == 0 || row[i] != row[w - 1] {
+                                row[w] = row[i];
+                                w += 1;
+                            }
+                        }
+                        dedup_len[r].store(w, AO::Relaxed);
+                    }
+                });
+            }
+        });
+    }
+
+    let mut out_rowptr = vec![0usize; n + 1];
+    for i in 0..n {
+        out_rowptr[i + 1] = out_rowptr[i] + dedup_len[i].load(AO::Relaxed);
+    }
+    let mut out_colind = vec![0i32; out_rowptr[n]];
+    for r in 0..n {
+        let len = dedup_len[r].load(AO::Relaxed);
+        out_colind[out_rowptr[r]..out_rowptr[r] + len]
+            .copy_from_slice(&colind[rowptr[r]..rowptr[r] + len]);
+    }
+
+    SymGraph {
+        n,
+        rowptr: out_rowptr,
+        colind: out_colind,
+    }
+}
+
+/// Raw-pointer wrapper so disjoint row slices can be mutated from multiple
+/// threads (safe by the row-partition argument above).
+struct ColindPtr(*mut i32);
+unsafe impl Sync for ColindPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_square(n: usize, nnz: usize, seed: u64) -> CsrMatrix {
+        let mut rng = Rng::new(seed);
+        let trip: Vec<(usize, usize, f64)> = (0..nnz)
+            .map(|_| (rng.below(n), rng.below(n), 1.0))
+            .collect();
+        CsrMatrix::from_triplets(n, n, &trip)
+    }
+
+    #[test]
+    fn symmetrize_small_known() {
+        // A = [[1, x], [0, 1]] -> pattern of A+A^T has edge (0,1).
+        let a = CsrMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (0, 1, 5.0), (1, 1, 1.0)]);
+        let g = symmetrize(&a);
+        g.validate().unwrap();
+        assert_eq!(g.nedges(), 1);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+    }
+
+    #[test]
+    fn parallel_matches_sequential() {
+        for seed in 0..3 {
+            let a = random_square(2000, 12_000, seed);
+            let g1 = symmetrize(&a);
+            for t in [2, 4, 8] {
+                let g2 = symmetrize_parallel(&a, t);
+                assert_eq!(g1, g2, "t={t} seed={seed}");
+            }
+            g1.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn parallel_small_falls_back() {
+        let a = random_square(50, 200, 9);
+        let g1 = symmetrize(&a);
+        let g2 = symmetrize_parallel(&a, 8);
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let a = CsrMatrix::from_triplets(5, 5, &[]);
+        let g = symmetrize(&a);
+        g.validate().unwrap();
+        assert_eq!(g.nnz(), 0);
+    }
+}

@@ -1,0 +1,47 @@
+//! # ParAMD — Parallel Approximate Minimum Degree Ordering
+//!
+//! A reproduction of *"Parallelizing the Approximate Minimum Degree Ordering
+//! Algorithm: Strategies and Evaluation"* (Chang, Buluç, Demmel, 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)**: the parallel AMD algorithm itself — multiple
+//!   elimination on distance-2 independent sets, concurrent degree lists and
+//!   connection updates — plus every substrate the paper's evaluation needs:
+//!   a SuiteSparse-faithful sequential AMD baseline, an MMD baseline, a
+//!   multilevel nested-dissection comparator, symbolic analysis (elimination
+//!   trees, exact fill-in counts), a sparse Cholesky solver, Matrix Market
+//!   I/O, a synthetic matrix suite, and a coordinator service.
+//! - **Layer 2 (python/compile/model.py)**: JAX blocked-Cholesky compute
+//!   graphs, AOT-lowered to HLO text at build time.
+//! - **Layer 1 (python/compile/kernels/)**: Pallas kernels for the dense
+//!   factorization hot-spot, validated against pure-jnp oracles.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API; Python
+//! never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use paramd::matgen;
+//! use paramd::ordering::{amd_seq::AmdSeq, paramd::ParAmd, Ordering as _};
+//!
+//! let g = matgen::mesh2d(64, 64); // 5-point Laplacian pattern
+//! let seq = AmdSeq::default().order(&g);
+//! let par = ParAmd::new(8).order(&g);
+//! let fill_seq = paramd::symbolic::fill_in(&g, &seq.perm);
+//! let fill_par = paramd::symbolic::fill_in(&g, &par.perm);
+//! println!("fill ratio = {:.3}", fill_par as f64 / fill_seq as f64);
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod cholesky;
+pub mod coordinator;
+pub mod graph;
+pub mod matgen;
+pub mod nd;
+pub mod ordering;
+pub mod prop;
+pub mod runtime;
+pub mod symbolic;
+pub mod util;

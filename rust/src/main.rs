@@ -1,0 +1,186 @@
+//! `paramd` — CLI for the parallel AMD ordering library.
+//!
+//! Subcommands:
+//!   order --matrix <file.mtx | gen:NAME> [--method amd|paramd|mmd|nd]
+//!         [--threads T] [--mult M] [--lim L] [--scale tiny|small|full]
+//!   solve --matrix <...> [--method ...] [--pjrt] — order+factor+solve
+//!   gen   --name mini_nd24k --scale small --out m.mtx
+//!   suite — list the built-in matrix suite
+//!   serve --requests N [--pjrt] — service demo with metrics
+
+use paramd::cli::Args;
+use paramd::coordinator::{Method, OrderRequest, Service, SolveSpec};
+use paramd::graph::csr::CsrMatrix;
+use paramd::graph::mm;
+use paramd::matgen::{self, Scale};
+
+fn scale_of(s: &str) -> Scale {
+    match s {
+        "tiny" => Scale::Tiny,
+        "full" => Scale::Full,
+        _ => Scale::Small,
+    }
+}
+
+/// Resolve `--matrix`: a Matrix Market path or `gen:<suite name>`.
+fn load_matrix(spec: &str, scale: Scale) -> Result<CsrMatrix, String> {
+    if let Some(name) = spec.strip_prefix("gen:") {
+        let e = matgen::suite_entry(name)
+            .ok_or_else(|| format!("unknown suite matrix {name:?}; try `paramd suite`"))?;
+        let g = (e.gen)(scale);
+        Ok(matgen::spd_from_graph(&g, 1.0))
+    } else {
+        mm::read_matrix_market(std::path::Path::new(spec)).map_err(|e| e.to_string())
+    }
+}
+
+fn method_of(args: &Args) -> Result<Method, String> {
+    let threads = args.get_parse("threads", 8usize);
+    let mult = args.get_parse("mult", 1.1f64);
+    let lim = args.get_parse("lim", 8192usize);
+    Method::parse(args.get_or("method", "paramd"), threads, mult, lim)
+        .ok_or_else(|| "unknown method (amd|paramd|mmd|md|nd)".into())
+}
+
+fn main() {
+    let args = Args::from_env(&["pjrt", "no-fill"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "order" => cmd_order(&args),
+        "solve" => cmd_solve(&args),
+        "gen" => cmd_gen(&args),
+        "suite" => cmd_suite(),
+        "serve" => cmd_serve(&args),
+        _ => {
+            eprintln!(
+                "usage: paramd <order|solve|gen|suite|serve> [flags]\n\
+                 see `rust/src/main.rs` header for the flag list"
+            );
+            Ok(())
+        }
+    }
+    .map_err(|e: String| {
+        eprintln!("error: {e}");
+        1
+    })
+    .err()
+    .unwrap_or(0);
+    std::process::exit(code);
+}
+
+fn cmd_order(args: &Args) -> Result<(), String> {
+    let scale = scale_of(args.get_or("scale", "small"));
+    let matrix = load_matrix(args.get("matrix").ok_or("--matrix required")?, scale)?;
+    let method = method_of(args)?;
+    let mut svc = Service::new(args.get_parse("pre-threads", 4usize));
+    let req = OrderRequest {
+        matrix: Some(matrix),
+        pattern: None,
+        method,
+        compute_fill: !args.has("no-fill"),
+    };
+    let rep = svc.order(&req);
+    println!("method      : {}", method.name());
+    println!("n           : {}", rep.perm.len());
+    println!("pre-process : {:.4}s", rep.pre_secs);
+    println!("ordering    : {:.4}s", rep.order_secs);
+    if rep.modeled_time > 0.0 {
+        println!(
+            "modeled-par : {:.4}s (critical-path cost model)",
+            rep.modeled_time
+        );
+    }
+    if let Some(f) = rep.fill_in {
+        println!("fill-ins    : {:.3e}", f as f64);
+    }
+    if rep.gc_count > 0 {
+        println!("gc          : {}", rep.gc_count);
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<(), String> {
+    let scale = scale_of(args.get_or("scale", "small"));
+    let matrix = load_matrix(args.get("matrix").ok_or("--matrix required")?, scale)?;
+    let method = method_of(args)?;
+    let mut svc = Service::new(args.get_parse("pre-threads", 4usize));
+    if args.has("pjrt") {
+        svc = svc.with_pjrt_solver(args.get_or("artifacts", "artifacts").into())?;
+    }
+    let req = OrderRequest {
+        matrix: Some(matrix),
+        pattern: None,
+        method,
+        compute_fill: false,
+    };
+    let rep = svc.solve(&req, &SolveSpec::OnesSolution)?;
+    println!("method      : {}", method.name());
+    println!("engine      : {}", rep.engine);
+    println!("ordering    : {:.4}s", rep.order_secs);
+    println!(
+        "factor      : {:.4}s (nnz(L) = {:.3e}, dense tail = {} cols)",
+        rep.factor_secs, rep.nnz_l as f64, rep.dense_tail_cols
+    );
+    println!("solve       : {:.4}s", rep.solve_secs);
+    println!("residual    : {:.3e}", rep.residual);
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<(), String> {
+    let name = args.get("name").ok_or("--name required")?;
+    let scale = scale_of(args.get_or("scale", "small"));
+    let out = args.get("out").ok_or("--out required")?;
+    let e = matgen::suite_entry(name).ok_or_else(|| format!("unknown matrix {name:?}"))?;
+    let g = (e.gen)(scale);
+    let a = matgen::spd_from_graph(&g, 1.0);
+    mm::write_matrix_market(std::path::Path::new(out), &a).map_err(|e| e.to_string())?;
+    println!("wrote {out}: n={} nnz={}", a.nrows, a.nnz());
+    Ok(())
+}
+
+fn cmd_suite() -> Result<(), String> {
+    println!("{:<14} {:<12} {}", "name", "stands for", "family");
+    for e in matgen::suite() {
+        println!("{:<14} {:<12} {}", e.name, e.paper_name, e.family);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let n_req = args.get_parse("requests", 8usize);
+    let mut svc = Service::new(args.get_parse("pre-threads", 2usize));
+    if args.has("pjrt") {
+        svc = svc.with_pjrt_solver(args.get_or("artifacts", "artifacts").into())?;
+    }
+    let suite = matgen::suite();
+    for i in 0..n_req {
+        let e = &suite[i % suite.len()];
+        let g = (e.gen)(Scale::Tiny);
+        let method = if i % 2 == 0 {
+            Method::ParAmd {
+                threads: 4,
+                mult: 1.1,
+                lim_total: 8192,
+            }
+        } else {
+            Method::Amd
+        };
+        let req = OrderRequest {
+            matrix: Some(matgen::spd_from_graph(&g, 1.0)),
+            pattern: None,
+            method,
+            compute_fill: true,
+        };
+        let rep = svc.order(&req);
+        println!(
+            "req {i:>3}: {:<12} {:<7} n={:<7} {:.4}s fill={:.2e}",
+            e.name,
+            method.name(),
+            rep.perm.len(),
+            rep.total_secs,
+            rep.fill_in.unwrap_or(0) as f64
+        );
+    }
+    println!("\n{}", svc.metrics().report());
+    Ok(())
+}

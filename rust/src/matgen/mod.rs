@@ -1,0 +1,373 @@
+//! Synthetic matrix/graph generators — the stand-in for the paper's matrix
+//! suite (SuiteSparse Matrix Collection + M3E, Table 4.1).
+//!
+//! AMD's behaviour is driven by sparsity *structure* (mesh dimensionality,
+//! degree distribution, separator size), so each generator reproduces the
+//! structural family of a paper matrix at laptop scale; [`suite`] names the
+//! analogs (`mini_nd24k`, `mini_nlpkkt`, …). See DESIGN.md §2.
+
+pub mod spd;
+
+use crate::graph::csr::{CsrMatrix, SymGraph};
+use crate::util::rng::Rng;
+
+pub use spd::{laplacian_matrix, spd_from_graph};
+
+/// 5-point stencil on an `nx × ny` grid (2D mesh problem).
+pub fn mesh2d(nx: usize, ny: usize) -> SymGraph {
+    let id = |x: usize, y: usize| x * ny + y;
+    let mut edges = Vec::with_capacity(2 * nx * ny);
+    for x in 0..nx {
+        for y in 0..ny {
+            if x + 1 < nx {
+                edges.push((id(x, y), id(x + 1, y)));
+            }
+            if y + 1 < ny {
+                edges.push((id(x, y), id(x, y + 1)));
+            }
+        }
+    }
+    SymGraph::from_edges(nx * ny, &edges)
+}
+
+/// 9-point stencil on an `nx × ny` grid (denser 2D mesh; structural FEM-ish).
+pub fn mesh2d_9pt(nx: usize, ny: usize) -> SymGraph {
+    let id = |x: usize, y: usize| x * ny + y;
+    let mut edges = Vec::new();
+    for x in 0..nx {
+        for y in 0..ny {
+            for (dx, dy) in [(1i64, 0i64), (0, 1), (1, 1), (1, -1)] {
+                let (xx, yy) = (x as i64 + dx, y as i64 + dy);
+                if xx >= 0 && (xx as usize) < nx && yy >= 0 && (yy as usize) < ny {
+                    edges.push((id(x, y), id(xx as usize, yy as usize)));
+                }
+            }
+        }
+    }
+    SymGraph::from_edges(nx * ny, &edges)
+}
+
+/// 7-point stencil on an `nx × ny × nz` grid (3D mesh problem — the
+/// structural family of nd24k / Flan_1565 / Cube5317k).
+pub fn mesh3d(nx: usize, ny: usize, nz: usize) -> SymGraph {
+    let id = |x: usize, y: usize, z: usize| (x * ny + y) * nz + z;
+    let mut edges = Vec::with_capacity(3 * nx * ny * nz);
+    for x in 0..nx {
+        for y in 0..ny {
+            for z in 0..nz {
+                if x + 1 < nx {
+                    edges.push((id(x, y, z), id(x + 1, y, z)));
+                }
+                if y + 1 < ny {
+                    edges.push((id(x, y, z), id(x, y + 1, z)));
+                }
+                if z + 1 < nz {
+                    edges.push((id(x, y, z), id(x, y, z + 1)));
+                }
+            }
+        }
+    }
+    SymGraph::from_edges(nx * ny * nz, &edges)
+}
+
+/// 27-point stencil 3D mesh (denser 3D elements, nd24k-like density).
+pub fn mesh3d_27pt(nx: usize, ny: usize, nz: usize) -> SymGraph {
+    let id = |x: usize, y: usize, z: usize| (x * ny + y) * nz + z;
+    let mut edges = Vec::new();
+    for x in 0..nx {
+        for y in 0..ny {
+            for z in 0..nz {
+                for dx in -1i64..=1 {
+                    for dy in -1i64..=1 {
+                        for dz in -1i64..=1 {
+                            if (dx, dy, dz) <= (0, 0, 0) {
+                                continue; // each undirected edge once
+                            }
+                            let (xx, yy, zz) =
+                                (x as i64 + dx, y as i64 + dy, z as i64 + dz);
+                            if xx >= 0
+                                && (xx as usize) < nx
+                                && yy >= 0
+                                && (yy as usize) < ny
+                                && zz >= 0
+                                && (zz as usize) < nz
+                            {
+                                edges.push((
+                                    id(x, y, z),
+                                    id(xx as usize, yy as usize, zz as usize),
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    SymGraph::from_edges(nx * ny * nz, &edges)
+}
+
+/// KKT saddle-point structure `[H  J^T; J  0]` where `H` is a 3D-mesh
+/// Hessian over `np` primal variables and `J` couples each of the `nc`
+/// constraints to a few primal variables (the nlpkkt240 family).
+pub fn kkt(nx: usize, ny: usize, nz: usize, couple: usize, seed: u64) -> SymGraph {
+    let h = mesh3d(nx, ny, nz);
+    let np = h.n;
+    let nc = np / 2;
+    let mut rng = Rng::new(seed);
+    let mut edges: Vec<(usize, usize)> = Vec::with_capacity(h.nedges() + nc * couple);
+    for v in 0..np {
+        for &u in h.neighbors(v) {
+            if (u as usize) > v {
+                edges.push((v, u as usize));
+            }
+        }
+    }
+    for c in 0..nc {
+        // Constraint c couples a small contiguous window plus a random far
+        // variable — reproduces the bipartite KKT coupling pattern.
+        let base = (c * 2).min(np - 1);
+        for k in 0..couple {
+            edges.push((np + c, (base + k) % np));
+        }
+        edges.push((np + c, rng.below(np)));
+    }
+    SymGraph::from_edges(np + nc, &edges)
+}
+
+/// Erdős–Rényi-ish random symmetric pattern with expected degree `deg`.
+pub fn random_graph(n: usize, deg: usize, seed: u64) -> SymGraph {
+    let mut rng = Rng::new(seed);
+    let m = n * deg / 2;
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    SymGraph::from_edges(n, &edges)
+}
+
+/// A nonsymmetric CFD-like matrix (HV15R family): a 3D mesh pattern with
+/// one-directional "convection" arcs added, returned as a general
+/// [`CsrMatrix`] so the `|A|+|A^T|` pre-processing path is exercised.
+pub fn nonsymmetric_flow(nx: usize, ny: usize, nz: usize, seed: u64) -> CsrMatrix {
+    let g = mesh3d(nx, ny, nz);
+    let mut rng = Rng::new(seed);
+    let mut trip: Vec<(usize, usize, f64)> = Vec::with_capacity(g.nnz() + g.n * 2);
+    for v in 0..g.n {
+        trip.push((v, v, 8.0));
+        for &u in g.neighbors(v) {
+            // Keep ~70% of the off-diagonal arcs, direction-dependent.
+            if rng.chance(0.7) {
+                trip.push((v, u as usize, -1.0));
+            }
+        }
+        // Downstream convection arc (one-directional).
+        if v + ny * nz < g.n && rng.chance(0.5) {
+            trip.push((v, v + ny * nz, -0.25));
+        }
+    }
+    CsrMatrix::from_triplets(g.n, g.n, &trip)
+}
+
+/// A named matrix in the evaluation suite.
+pub struct SuiteEntry {
+    /// Analog name (`mini_<paper matrix>`).
+    pub name: &'static str,
+    /// The paper matrix this stands in for.
+    pub paper_name: &'static str,
+    /// Structural family description.
+    pub family: &'static str,
+    /// Whether the pattern is symmetric (Table 4.1 column).
+    pub symmetric: bool,
+    /// Generator.
+    pub gen: fn(Scale) -> SymGraph,
+}
+
+/// Global size multiplier for the suite (small for tests, large for benches).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// ~1–4k vertices per matrix: unit/integration tests.
+    Tiny,
+    /// ~10–40k vertices: default benchmark scale.
+    Small,
+    /// ~60–250k vertices: the headline benchmark scale.
+    Full,
+}
+
+impl Scale {
+    fn pick(self, tiny: usize, small: usize, full: usize) -> usize {
+        match self {
+            Scale::Tiny => tiny,
+            Scale::Small => small,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// The named analog suite, ordered like the paper's Table 4.1 (by density /
+/// structural family). See DESIGN.md §2 for the substitution rationale.
+pub fn suite() -> Vec<SuiteEntry> {
+    vec![
+        SuiteEntry {
+            name: "mini_nd24k",
+            paper_name: "nd24k",
+            family: "dense 3D mesh (27-pt)",
+            symmetric: true,
+            gen: |s| {
+                let k = s.pick(8, 16, 28);
+                mesh3d_27pt(k, k, k)
+            },
+        },
+        SuiteEntry {
+            name: "mini_ldoor",
+            paper_name: "ldoor",
+            family: "thin structural shell (9-pt 2D)",
+            symmetric: true,
+            gen: |s| {
+                let k = s.pick(16, 64, 160);
+                mesh2d_9pt(4 * k, k)
+            },
+        },
+        SuiteEntry {
+            name: "mini_serena",
+            paper_name: "Serena",
+            family: "3D structural mesh (7-pt)",
+            symmetric: true,
+            gen: |s| {
+                let k = s.pick(10, 24, 44);
+                mesh3d(k, k, k)
+            },
+        },
+        SuiteEntry {
+            name: "mini_flan",
+            paper_name: "Flan_1565",
+            family: "3D structural mesh (27-pt, elongated)",
+            symmetric: true,
+            gen: |s| {
+                let k = s.pick(6, 12, 20);
+                mesh3d_27pt(4 * k, k, k)
+            },
+        },
+        SuiteEntry {
+            name: "mini_hv15r",
+            paper_name: "HV15R",
+            family: "nonsymmetric CFD (sym. pre-processing path)",
+            symmetric: false,
+            gen: |s| {
+                let k = s.pick(9, 20, 36);
+                let a = nonsymmetric_flow(k, k, k, 0x4815);
+                crate::graph::symmetrize(&a)
+            },
+        },
+        SuiteEntry {
+            name: "mini_queen",
+            paper_name: "Queen_4147",
+            family: "large 3D structural mesh",
+            symmetric: true,
+            gen: |s| {
+                let k = s.pick(11, 26, 48);
+                mesh3d(k, k, k)
+            },
+        },
+        SuiteEntry {
+            name: "mini_nlpkkt",
+            paper_name: "nlpkkt240",
+            family: "KKT saddle-point (optimization)",
+            symmetric: true,
+            gen: |s| {
+                let k = s.pick(8, 20, 36);
+                kkt(k, k, k, 3, 0x240)
+            },
+        },
+    ]
+}
+
+/// Look up a suite entry by analog name.
+pub fn suite_entry(name: &str) -> Option<SuiteEntry> {
+    suite().into_iter().find(|e| e.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh2d_structure() {
+        let g = mesh2d(3, 3);
+        g.validate().unwrap();
+        assert_eq!(g.n, 9);
+        assert_eq!(g.nedges(), 12); // 2*3*2 horizontal + vertical
+        assert_eq!(g.degree(4), 4); // center of 3x3
+        assert_eq!(g.degree(0), 2); // corner
+    }
+
+    #[test]
+    fn mesh3d_structure() {
+        let g = mesh3d(3, 3, 3);
+        g.validate().unwrap();
+        assert_eq!(g.n, 27);
+        assert_eq!(g.nedges(), 3 * 3 * 3 * 2); // 3 directions * 2*9 each = 54
+        assert_eq!(g.degree(13), 6); // center
+    }
+
+    #[test]
+    fn mesh3d_27pt_center_degree() {
+        let g = mesh3d_27pt(3, 3, 3);
+        g.validate().unwrap();
+        assert_eq!(g.degree(13), 26);
+    }
+
+    #[test]
+    fn mesh2d_9pt_center_degree() {
+        let g = mesh2d_9pt(3, 3);
+        g.validate().unwrap();
+        assert_eq!(g.degree(4), 8);
+    }
+
+    #[test]
+    fn kkt_is_saddle_shaped() {
+        let g = kkt(4, 4, 4, 3, 1);
+        g.validate().unwrap();
+        let np = 64;
+        // Constraint rows only touch primal variables (no constraint-constraint edges).
+        for c in np..g.n {
+            for &u in g.neighbors(c) {
+                assert!((u as usize) < np, "constraint-constraint edge");
+            }
+        }
+    }
+
+    #[test]
+    fn random_graph_valid() {
+        let g = random_graph(500, 8, 3);
+        g.validate().unwrap();
+        assert!(g.nedges() > 500);
+    }
+
+    #[test]
+    fn nonsymmetric_flow_is_nonsymmetric() {
+        let a = nonsymmetric_flow(5, 5, 5, 7);
+        assert!(!a.is_pattern_symmetric());
+        let g = crate::graph::symmetrize(&a);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn suite_generates_at_tiny_scale() {
+        for e in suite() {
+            let g = (e.gen)(Scale::Tiny);
+            g.validate().unwrap();
+            assert!(g.n >= 256, "{} too small: {}", e.name, g.n);
+            assert!(g.n <= 100_000, "{} too large for tiny: {}", e.name, g.n);
+        }
+    }
+
+    #[test]
+    fn suite_lookup() {
+        assert!(suite_entry("mini_nd24k").is_some());
+        assert!(suite_entry("nope").is_none());
+    }
+}

@@ -1,0 +1,239 @@
+//! Multilevel bisection: BFS region growing on the coarsest graph,
+//! Fiduccia–Mattheyses edge-cut refinement at every uncoarsening level.
+
+use super::coarsen::{coarsen_hierarchy, WeightedGraph};
+use super::NestedDissection;
+use crate::graph::csr::SymGraph;
+use crate::util::rng::Rng;
+
+/// Bisect `g`, returning a 0/1 side per vertex.
+pub fn multilevel_bisect(g: &SymGraph, cfg: &NestedDissection) -> Vec<u8> {
+    let wg = WeightedGraph::from_sym(g);
+    let mut rng = Rng::new(cfg.seed ^ (g.n as u64).rotate_left(17));
+    let (coarsest, levels) = coarsen_hierarchy(wg, cfg.coarsen_to, &mut rng);
+    let mut parts = initial_bisection(&coarsest, &mut rng);
+    fm_refine(&coarsest, &mut parts, cfg.fm_passes);
+    // Project back up the hierarchy, refining at each level.
+    for level in levels.iter().rev() {
+        let mut fine_parts = vec![0u8; level.graph.n];
+        for v in 0..level.graph.n {
+            fine_parts[v] = parts[level.map[v] as usize];
+        }
+        fm_refine(&level.graph, &mut fine_parts, cfg.fm_passes);
+        parts = fine_parts;
+    }
+    parts
+}
+
+/// BFS region growing from a pseudo-peripheral vertex until half the total
+/// vertex weight is claimed.
+pub fn initial_bisection(g: &WeightedGraph, rng: &mut Rng) -> Vec<u8> {
+    let n = g.n;
+    if n == 0 {
+        return vec![];
+    }
+    let start = pseudo_peripheral(g, rng.below(n));
+    let half = g.total_vweight() / 2;
+    let mut parts = vec![1u8; n];
+    let mut weight = 0i64;
+    let mut queue = std::collections::VecDeque::new();
+    let mut visited = vec![false; n];
+    queue.push_back(start);
+    visited[start] = true;
+    while let Some(v) = queue.pop_front() {
+        if weight >= half {
+            break;
+        }
+        parts[v] = 0;
+        weight += g.vweight[v];
+        for (u, _) in g.neighbors(v) {
+            if !visited[u as usize] {
+                visited[u as usize] = true;
+                queue.push_back(u as usize);
+            }
+        }
+    }
+    // Disconnected remainder: BFS may exhaust a component early. Claim
+    // unvisited vertices greedily until balanced.
+    if weight < half {
+        for v in 0..n {
+            if weight >= half {
+                break;
+            }
+            if parts[v] == 1 && !visited[v] {
+                parts[v] = 0;
+                weight += g.vweight[v];
+            }
+        }
+    }
+    parts
+}
+
+/// Find a far-from-`seed` vertex by repeated BFS (2 sweeps).
+fn pseudo_peripheral(g: &WeightedGraph, seed: usize) -> usize {
+    let mut v = seed;
+    for _ in 0..2 {
+        let mut dist = vec![-1i32; g.n];
+        let mut queue = std::collections::VecDeque::new();
+        dist[v] = 0;
+        queue.push_back(v);
+        let mut last = v;
+        while let Some(x) = queue.pop_front() {
+            last = x;
+            for (u, _) in g.neighbors(x) {
+                if dist[u as usize] == -1 {
+                    dist[u as usize] = dist[x] + 1;
+                    queue.push_back(u as usize);
+                }
+            }
+        }
+        v = last;
+    }
+    v
+}
+
+/// Total weight of cut edges (each undirected edge counted once).
+pub fn cut_weight(g: &WeightedGraph, parts: &[u8]) -> i64 {
+    let mut cut = 0i64;
+    for v in 0..g.n {
+        for (u, w) in g.neighbors(v) {
+            if (u as usize) > v && parts[v] != parts[u as usize] {
+                cut += w;
+            }
+        }
+    }
+    cut
+}
+
+/// Simplified Fiduccia–Mattheyses: passes of single-vertex moves in gain
+/// order with a balance constraint; each pass keeps the best prefix.
+pub fn fm_refine(g: &WeightedGraph, parts: &mut [u8], passes: usize) {
+    let n = g.n;
+    if n < 4 {
+        return;
+    }
+    let total = g.total_vweight();
+    let max_imbalance = (total / 10).max(2); // 10% slack
+    let side_weight = |parts: &[u8]| -> [i64; 2] {
+        let mut w = [0i64; 2];
+        for v in 0..n {
+            w[parts[v] as usize] += g.vweight[v];
+        }
+        w
+    };
+    for _ in 0..passes {
+        let mut w = side_weight(parts);
+        // gain(v) = external - internal edge weight.
+        let gain = |v: usize, parts: &[u8]| -> i64 {
+            let mut ext = 0i64;
+            let mut int = 0i64;
+            for (u, ew) in g.neighbors(v) {
+                if parts[u as usize] == parts[v] {
+                    int += ew;
+                } else {
+                    ext += ew;
+                }
+            }
+            ext - int
+        };
+        let mut locked = vec![false; n];
+        let mut moves: Vec<usize> = Vec::new();
+        let mut cum_gain = 0i64;
+        let mut best_prefix = 0usize;
+        let mut best_gain = 0i64;
+        // Greedy sequence of up to n/4 moves.
+        for _ in 0..(n / 4).max(8).min(n) {
+            let mut best_v = usize::MAX;
+            let mut best_g = i64::MIN;
+            for v in 0..n {
+                if locked[v] {
+                    continue;
+                }
+                let from = parts[v] as usize;
+                // Balance: moving v must not over-drain its side.
+                if w[from] - g.vweight[v] < total / 2 - max_imbalance {
+                    continue;
+                }
+                let gv = gain(v, parts);
+                if gv > best_g {
+                    best_g = gv;
+                    best_v = v;
+                }
+            }
+            if best_v == usize::MAX {
+                break;
+            }
+            let from = parts[best_v] as usize;
+            parts[best_v] ^= 1;
+            w[from] -= g.vweight[best_v];
+            w[1 - from] += g.vweight[best_v];
+            locked[best_v] = true;
+            cum_gain += best_g;
+            moves.push(best_v);
+            if cum_gain > best_gain {
+                best_gain = cum_gain;
+                best_prefix = moves.len();
+            }
+        }
+        // Roll back moves beyond the best prefix.
+        for &v in &moves[best_prefix..] {
+            parts[v] ^= 1;
+        }
+        if best_gain <= 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{mesh2d, random_graph};
+    use crate::nd::NestedDissection;
+
+    #[test]
+    fn bisection_is_balanced() {
+        let g = mesh2d(16, 16);
+        let parts = multilevel_bisect(&g, &NestedDissection::default());
+        let zero = parts.iter().filter(|&&p| p == 0).count();
+        let frac = zero as f64 / g.n as f64;
+        assert!(
+            (0.25..=0.75).contains(&frac),
+            "unbalanced bisection: {frac:.2}"
+        );
+    }
+
+    #[test]
+    fn refinement_does_not_worsen_cut() {
+        let g0 = mesh2d(12, 12);
+        let wg = WeightedGraph::from_sym(&g0);
+        let mut rng = Rng::new(5);
+        let mut parts = initial_bisection(&wg, &mut rng);
+        let before = cut_weight(&wg, &parts);
+        fm_refine(&wg, &mut parts, 4);
+        let after = cut_weight(&wg, &parts);
+        assert!(after <= before, "FM worsened the cut: {before} -> {after}");
+    }
+
+    #[test]
+    fn mesh_cut_is_near_perimeter() {
+        // A k×k mesh has a natural cut of ~k; multilevel bisection should
+        // land within a small factor.
+        let k = 20;
+        let g = mesh2d(k, k);
+        let parts = multilevel_bisect(&g, &NestedDissection::default());
+        let wg = WeightedGraph::from_sym(&g);
+        let cut = cut_weight(&wg, &parts);
+        assert!(cut <= 4 * k as i64, "cut {cut} far above O(k)={k}");
+        assert!(cut >= 1);
+    }
+
+    #[test]
+    fn handles_random_graphs() {
+        for seed in 0..3 {
+            let g = random_graph(200, 4, seed);
+            let parts = multilevel_bisect(&g, &NestedDissection::default());
+            assert_eq!(parts.len(), g.n);
+        }
+    }
+}

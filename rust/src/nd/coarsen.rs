@@ -1,0 +1,210 @@
+//! Heavy-edge-matching coarsening for multilevel nested dissection.
+//!
+//! Works on weighted graphs: vertex weights are the number of original
+//! vertices collapsed into each coarse vertex; edge weights count collapsed
+//! multi-edges — the quantities FM refinement balances and cuts.
+
+use crate::util::rng::Rng;
+
+/// A weighted graph for the multilevel hierarchy.
+#[derive(Clone, Debug)]
+pub struct WeightedGraph {
+    pub n: usize,
+    pub rowptr: Vec<usize>,
+    pub colind: Vec<i32>,
+    /// Edge weights, parallel to `colind`.
+    pub eweight: Vec<i64>,
+    /// Vertex weights.
+    pub vweight: Vec<i64>,
+}
+
+impl WeightedGraph {
+    pub fn from_sym(g: &crate::graph::csr::SymGraph) -> Self {
+        Self {
+            n: g.n,
+            rowptr: g.rowptr.clone(),
+            colind: g.colind.clone(),
+            eweight: vec![1; g.nnz()],
+            vweight: vec![1; g.n],
+        }
+    }
+
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = (i32, i64)> + '_ {
+        (self.rowptr[v]..self.rowptr[v + 1]).map(move |p| (self.colind[p], self.eweight[p]))
+    }
+
+    pub fn total_vweight(&self) -> i64 {
+        self.vweight.iter().sum()
+    }
+}
+
+/// One coarsening level: the coarse graph plus the fine→coarse vertex map.
+pub struct CoarseLevel {
+    pub graph: WeightedGraph,
+    pub map: Vec<i32>,
+}
+
+/// Heavy-edge matching: visit vertices in random order, match each
+/// unmatched vertex with its unmatched neighbor of maximum edge weight.
+/// Returns the fine→coarse map and the number of coarse vertices.
+pub fn heavy_edge_matching(g: &WeightedGraph, rng: &mut Rng) -> (Vec<i32>, usize) {
+    let n = g.n;
+    let mut match_of = vec![-1i32; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    for &vu in &order {
+        let v = vu as usize;
+        if match_of[v] != -1 {
+            continue;
+        }
+        let mut best = -1i32;
+        let mut best_w = i64::MIN;
+        for (u, w) in g.neighbors(v) {
+            if match_of[u as usize] == -1 && u as usize != v && w > best_w {
+                best = u;
+                best_w = w;
+            }
+        }
+        if best != -1 {
+            match_of[v] = best;
+            match_of[best as usize] = v as i32;
+        } else {
+            match_of[v] = v as i32; // self-matched (isolated or all matched)
+        }
+    }
+    // Assign coarse ids: each pair gets one id.
+    let mut map = vec![-1i32; n];
+    let mut next = 0i32;
+    for v in 0..n {
+        if map[v] != -1 {
+            continue;
+        }
+        let m = match_of[v] as usize;
+        map[v] = next;
+        map[m] = next;
+        next += 1;
+    }
+    (map, next as usize)
+}
+
+/// Contract the graph along a matching map.
+pub fn contract(g: &WeightedGraph, map: &[i32], coarse_n: usize) -> WeightedGraph {
+    // Accumulate coarse adjacency with a dense scratch keyed by coarse id.
+    let mut vweight = vec![0i64; coarse_n];
+    for v in 0..g.n {
+        vweight[map[v] as usize] += g.vweight[v];
+    }
+    let mut rowptr = vec![0usize; coarse_n + 1];
+    let mut colind: Vec<i32> = Vec::with_capacity(g.colind.len() / 2 + coarse_n);
+    let mut eweight: Vec<i64> = Vec::with_capacity(colind.capacity());
+    // Group fine vertices by coarse id.
+    let mut members_head = vec![-1i32; coarse_n];
+    let mut members_next = vec![-1i32; g.n];
+    for v in (0..g.n).rev() {
+        let c = map[v] as usize;
+        members_next[v] = members_head[c];
+        members_head[c] = v as i32;
+    }
+    let mut seen = vec![-1i32; coarse_n]; // coarse id -> index into this row
+    for c in 0..coarse_n {
+        let row_start = colind.len();
+        let mut m = members_head[c];
+        while m != -1 {
+            let v = m as usize;
+            for (u, w) in g.neighbors(v) {
+                let cu = map[u as usize] as usize;
+                if cu == c {
+                    continue; // internal edge disappears
+                }
+                if seen[cu] >= row_start as i32 {
+                    eweight[seen[cu] as usize] += w;
+                } else {
+                    seen[cu] = colind.len() as i32;
+                    colind.push(cu as i32);
+                    eweight.push(w);
+                }
+            }
+            m = members_next[v];
+        }
+        rowptr[c + 1] = colind.len();
+    }
+    WeightedGraph {
+        n: coarse_n,
+        rowptr,
+        colind,
+        eweight,
+        vweight,
+    }
+}
+
+/// Build the full coarsening hierarchy down to ~`target` vertices.
+/// `levels[0]` is the coarsest. Stops early if coarsening stalls.
+pub fn coarsen_hierarchy(
+    g0: WeightedGraph,
+    target: usize,
+    rng: &mut Rng,
+) -> (WeightedGraph, Vec<CoarseLevel>) {
+    let mut levels: Vec<CoarseLevel> = Vec::new();
+    let mut g = g0;
+    while g.n > target {
+        let (map, coarse_n) = heavy_edge_matching(&g, rng);
+        if coarse_n as f64 > g.n as f64 * 0.95 {
+            break; // stalled (e.g. star graphs)
+        }
+        let coarse = contract(&g, &map, coarse_n);
+        levels.push(CoarseLevel {
+            graph: g,
+            map,
+        });
+        g = coarse;
+    }
+    (g, levels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::mesh2d;
+
+    #[test]
+    fn matching_is_valid() {
+        let g = WeightedGraph::from_sym(&mesh2d(8, 8));
+        let mut rng = Rng::new(1);
+        let (map, cn) = heavy_edge_matching(&g, &mut rng);
+        assert!(cn >= g.n / 2 && cn <= g.n);
+        // Every coarse id has 1 or 2 members.
+        let mut count = vec![0; cn];
+        for &c in &map {
+            count[c as usize] += 1;
+        }
+        assert!(count.iter().all(|&c| c == 1 || c == 2));
+    }
+
+    #[test]
+    fn contraction_preserves_total_weight() {
+        let g = WeightedGraph::from_sym(&mesh2d(10, 10));
+        let total = g.total_vweight();
+        let mut rng = Rng::new(2);
+        let (map, cn) = heavy_edge_matching(&g, &mut rng);
+        let c = contract(&g, &map, cn);
+        assert_eq!(c.total_vweight(), total);
+        assert_eq!(c.n, cn);
+        // Symmetric adjacency with positive weights.
+        for v in 0..c.n {
+            for (u, w) in c.neighbors(v) {
+                assert!(w > 0);
+                assert!(c.neighbors(u as usize).any(|(x, _)| x as usize == v));
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchy_reaches_target() {
+        let g = WeightedGraph::from_sym(&mesh2d(20, 20));
+        let mut rng = Rng::new(3);
+        let (coarsest, levels) = coarsen_hierarchy(g, 50, &mut rng);
+        assert!(coarsest.n <= 120, "coarsest still {} vertices", coarsest.n);
+        assert!(!levels.is_empty());
+        assert_eq!(coarsest.total_vweight(), 400);
+    }
+}

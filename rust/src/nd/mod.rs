@@ -1,0 +1,208 @@
+//! Multilevel nested dissection — the comparator ordering of the paper's
+//! §4.6 (cuDSS ND, a METIS variant). Same algorithmic family as METIS:
+//!
+//! 1. coarsen by heavy-edge matching until the graph is small;
+//! 2. bisect the coarsest graph by BFS region growing from a
+//!    pseudo-peripheral vertex;
+//! 3. uncoarsen, refining the edge cut with Fiduccia–Mattheyses passes at
+//!    every level;
+//! 4. turn the edge separator into a vertex separator (greedy cover);
+//! 5. recurse on the two parts; order leaves with AMD; emit
+//!    `[left, right, separator]`.
+
+pub mod bisect;
+pub mod coarsen;
+pub mod separator;
+
+use crate::graph::csr::SymGraph;
+use crate::ordering::{amd_seq::AmdSeq, Ordering, OrderingResult};
+use crate::util::timer::Timer;
+
+/// Nested dissection configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct NestedDissection {
+    /// Stop recursion below this many vertices; order the leaf with AMD.
+    pub leaf_size: usize,
+    /// Coarsening stops at this size.
+    pub coarsen_to: usize,
+    /// FM refinement passes per level.
+    pub fm_passes: usize,
+    /// RNG seed (matching + tie-breaking).
+    pub seed: u64,
+}
+
+impl Default for NestedDissection {
+    fn default() -> Self {
+        Self {
+            leaf_size: 64,
+            coarsen_to: 200,
+            fm_passes: 4,
+            seed: 0x5eed,
+        }
+    }
+}
+
+impl Ordering for NestedDissection {
+    fn name(&self) -> &'static str {
+        "nd"
+    }
+
+    fn order(&self, g: &SymGraph) -> OrderingResult {
+        let t = Timer::new();
+        let mut perm = Vec::with_capacity(g.n);
+        let all: Vec<i32> = (0..g.n as i32).collect();
+        self.dissect(g, &all, &mut perm);
+        debug_assert_eq!(perm.len(), g.n);
+        let mut r = OrderingResult::new(perm);
+        r.phases.add("core", t.secs());
+        r
+    }
+}
+
+impl NestedDissection {
+    /// Recursively order the subgraph induced by `verts` (original ids),
+    /// appending to `out` in elimination order.
+    fn dissect(&self, g: &SymGraph, verts: &[i32], out: &mut Vec<i32>) {
+        if verts.len() <= self.leaf_size {
+            self.order_leaf(g, verts, out);
+            return;
+        }
+        let (sub, ids) = induced_subgraph(g, verts);
+        let parts = bisect::multilevel_bisect(&sub, self);
+        let (left, right, sep) = separator::vertex_separator(&sub, &parts);
+        // Degenerate split (refinement collapse): fall back to AMD on the
+        // whole piece to guarantee progress.
+        if left.is_empty() || right.is_empty() {
+            self.order_leaf(g, verts, out);
+            return;
+        }
+        let to_orig = |v: &i32| ids[*v as usize];
+        let lverts: Vec<i32> = left.iter().map(to_orig).collect();
+        let rverts: Vec<i32> = right.iter().map(to_orig).collect();
+        self.dissect(g, &lverts, out);
+        self.dissect(g, &rverts, out);
+        out.extend(sep.iter().map(to_orig));
+    }
+
+    fn order_leaf(&self, g: &SymGraph, verts: &[i32], out: &mut Vec<i32>) {
+        if verts.len() <= 2 {
+            out.extend_from_slice(verts);
+            return;
+        }
+        let (sub, ids) = induced_subgraph(g, verts);
+        let r = AmdSeq::default().order(&sub);
+        out.extend(r.perm.iter().map(|&v| ids[v as usize]));
+    }
+}
+
+/// Induced subgraph of `verts`; returns the subgraph plus the local→orig
+/// id map.
+pub fn induced_subgraph(g: &SymGraph, verts: &[i32]) -> (SymGraph, Vec<i32>) {
+    let mut local = vec![-1i32; g.n];
+    for (k, &v) in verts.iter().enumerate() {
+        local[v as usize] = k as i32;
+    }
+    let mut rowptr = vec![0usize; verts.len() + 1];
+    let mut colind = Vec::new();
+    for (k, &v) in verts.iter().enumerate() {
+        for &u in g.neighbors(v as usize) {
+            if local[u as usize] != -1 {
+                colind.push(local[u as usize]);
+            }
+        }
+        rowptr[k + 1] = colind.len();
+    }
+    // Rows inherit sortedness only if `verts` is sorted; sort each row.
+    for k in 0..verts.len() {
+        colind[rowptr[k]..rowptr[k + 1]].sort_unstable();
+    }
+    (
+        SymGraph {
+            n: verts.len(),
+            rowptr,
+            colind,
+        },
+        verts.to_vec(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{mesh2d, mesh3d, random_graph};
+    use crate::ordering::test_support::check_ordering_contract;
+    use crate::symbolic::fill_in;
+
+    #[test]
+    fn valid_on_meshes() {
+        let g = mesh2d(20, 20);
+        let r = NestedDissection::default().order(&g);
+        check_ordering_contract(&g, &r);
+    }
+
+    #[test]
+    fn valid_on_random_graphs() {
+        for seed in 0..4 {
+            let g = random_graph(300, 6, seed);
+            let r = NestedDissection::default().order(&g);
+            check_ordering_contract(&g, &r);
+        }
+    }
+
+    #[test]
+    fn valid_on_disconnected_graphs() {
+        // Two disjoint meshes.
+        let a = mesh2d(10, 10);
+        let mut edges = vec![];
+        for v in 0..a.n {
+            for &u in a.neighbors(v) {
+                if (u as usize) > v {
+                    edges.push((v, u as usize));
+                    edges.push((v + a.n, u as usize + a.n));
+                }
+            }
+        }
+        let g = SymGraph::from_edges(2 * a.n, &edges);
+        let r = NestedDissection::default().order(&g);
+        check_ordering_contract(&g, &r);
+    }
+
+    #[test]
+    fn beats_natural_ordering_on_3d_mesh() {
+        let g = mesh3d(8, 8, 8);
+        let r = NestedDissection::default().order(&g);
+        check_ordering_contract(&g, &r);
+        let natural: Vec<i32> = (0..g.n as i32).collect();
+        assert!(fill_in(&g, &r.perm) < fill_in(&g, &natural));
+    }
+
+    #[test]
+    fn fill_competitive_with_amd_on_meshes() {
+        // The paper's Table 4.4: ND produces *fewer* fill-ins than AMD on
+        // large 3D meshes; at mini scale we accept parity within 2×.
+        let g = mesh3d(9, 9, 9);
+        let f_nd = fill_in(&g, &NestedDissection::default().order(&g).perm) as f64;
+        let f_amd = fill_in(&g, &AmdSeq::default().order(&g).perm) as f64;
+        assert!(f_nd < 2.0 * f_amd, "nd={f_nd} amd={f_amd}");
+    }
+
+    #[test]
+    fn induced_subgraph_correct() {
+        let g = mesh2d(3, 3);
+        let verts = vec![0i32, 1, 3, 4];
+        let (sub, ids) = induced_subgraph(&g, &verts);
+        sub.validate().unwrap();
+        assert_eq!(ids, verts);
+        // 0-1, 0-3, 1-4, 3-4 survive.
+        assert_eq!(sub.nedges(), 4);
+    }
+
+    #[test]
+    fn tiny_graphs() {
+        for n in 0..5 {
+            let g = SymGraph::from_edges(n, &[]);
+            let r = NestedDissection::default().order(&g);
+            check_ordering_contract(&g, &r);
+        }
+    }
+}

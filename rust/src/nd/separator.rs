@@ -1,0 +1,116 @@
+//! Vertex separator extraction from an edge cut: greedy minimal cover of
+//! the cut edges, preferring the vertex covering more cut edges (the
+//! standard METIS-style boundary-to-separator conversion).
+
+use crate::graph::csr::SymGraph;
+
+/// Given a 0/1 bisection, return `(left, right, separator)` vertex lists:
+/// removing `separator` disconnects `left` from `right`.
+pub fn vertex_separator(g: &SymGraph, parts: &[u8]) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    let n = g.n;
+    // Count, per boundary vertex, how many cut edges it touches.
+    let mut cut_deg = vec![0u32; n];
+    for v in 0..n {
+        for &u in g.neighbors(v) {
+            if parts[v] != parts[u as usize] {
+                cut_deg[v] += 1;
+            }
+        }
+    }
+    let mut in_sep = vec![false; n];
+    // Greedy cover: repeatedly take the endpoint of an uncovered cut edge
+    // with the larger cut degree. Process edges in a fixed order for
+    // determinism.
+    for v in 0..n {
+        for &uu in g.neighbors(v) {
+            let u = uu as usize;
+            if u < v || parts[v] == parts[u] || in_sep[v] || in_sep[u] {
+                continue;
+            }
+            let pick = if cut_deg[v] >= cut_deg[u] { v } else { u };
+            in_sep[pick] = true;
+        }
+    }
+    let mut left = Vec::new();
+    let mut right = Vec::new();
+    let mut sep = Vec::new();
+    for v in 0..n {
+        if in_sep[v] {
+            sep.push(v as i32);
+        } else if parts[v] == 0 {
+            left.push(v as i32);
+        } else {
+            right.push(v as i32);
+        }
+    }
+    (left, right, sep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::mesh2d;
+    use crate::nd::bisect::multilevel_bisect;
+    use crate::nd::NestedDissection;
+
+    fn assert_separates(g: &SymGraph, left: &[i32], right: &[i32], sep: &[i32]) {
+        let mut side = vec![-1i8; g.n];
+        for &v in left {
+            side[v as usize] = 0;
+        }
+        for &v in right {
+            side[v as usize] = 1;
+        }
+        for &v in sep {
+            side[v as usize] = 2;
+        }
+        assert!(side.iter().all(|&s| s != -1), "partition incomplete");
+        for v in 0..g.n {
+            if side[v] == 2 {
+                continue;
+            }
+            for &u in g.neighbors(v) {
+                let su = side[u as usize];
+                assert!(
+                    su == 2 || su == side[v],
+                    "edge ({v},{u}) crosses the separator"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn separator_disconnects_mesh() {
+        let g = mesh2d(14, 14);
+        let parts = multilevel_bisect(&g, &NestedDissection::default());
+        let (l, r, s) = vertex_separator(&g, &parts);
+        assert_eq!(l.len() + r.len() + s.len(), g.n);
+        assert!(!l.is_empty() && !r.is_empty());
+        assert!(!s.is_empty());
+        assert_separates(&g, &l, &r, &s);
+        // Separator of a k×k mesh should be O(k).
+        assert!(s.len() <= 4 * 14, "separator too large: {}", s.len());
+    }
+
+    #[test]
+    fn path_graph_separator_is_single_vertex() {
+        let n = 21;
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        let g = SymGraph::from_edges(n, &edges);
+        // Hand-made balanced bisection at the midpoint.
+        let parts: Vec<u8> = (0..n).map(|v| u8::from(v > n / 2)).collect();
+        let (l, r, s) = vertex_separator(&g, &parts);
+        assert_eq!(s.len(), 1);
+        assert_separates(&g, &l, &r, &s);
+    }
+
+    #[test]
+    fn no_cut_edges_gives_empty_separator() {
+        let g = SymGraph::from_edges(4, &[(0, 1), (2, 3)]);
+        let parts = vec![0u8, 0, 1, 1];
+        let (l, r, s) = vertex_separator(&g, &parts);
+        assert!(s.is_empty());
+        assert_eq!(l, vec![0, 1]);
+        assert_eq!(r, vec![2, 3]);
+    }
+}

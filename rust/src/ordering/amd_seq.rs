@@ -1,0 +1,901 @@
+//! Sequential approximate minimum degree (Amestoy–Davis–Duff 1996) — the
+//! SuiteSparse-`amd_2`-faithful baseline the paper compares against.
+//!
+//! The quotient graph lives in a single workspace `iw` with per-node
+//! pointers (`pe`) and lengths, elbow room at the tail, and garbage
+//! collection on exhaustion (§3.3.1 of the paper describes exactly this
+//! storage scheme). All the classic techniques are implemented:
+//!
+//! - **approximate external degrees** with the two-pass `w(e)` scan
+//!   (Algorithm 2.1 of the paper),
+//! - **mass elimination** (a neighbor whose adjacency collapses into the
+//!   pivot's element is eliminated together with the pivot),
+//! - **element absorption** (all elements adjacent to the pivot are
+//!   absorbed, plus *aggressive absorption* when `|L_e \ L_p| = 0`),
+//! - **indistinguishable-variable detection** via hashing and exact set
+//!   comparison, merging supervariables,
+//! - **degree lists** for O(1) pivot selection.
+//!
+//! Node states are tracked explicitly (`state[]`) instead of SuiteSparse's
+//! sign-flip encodings, trading a few bytes for clarity; the data-structure
+//! design and per-step algorithm follow AMD96 / `amd_2.c`.
+
+use crate::graph::csr::SymGraph;
+use crate::ordering::{Ordering, OrderingResult, OrderingStats};
+use crate::util::timer::Timer;
+
+/// Node role in the quotient graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    /// Live (super)variable.
+    Var,
+    /// Live element (eliminated pivot whose clique is still referenced).
+    Elem,
+    /// Variable absorbed into a supervariable or mass-eliminated into an
+    /// element; `parent[]` holds the absorber.
+    DeadVar,
+    /// Element absorbed into another element (or an empty root element).
+    DeadElem,
+}
+
+/// Per-step instrumentation for the paper's Table 3.1: the amount of
+/// intra-elimination parallelism available at each pivot.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    /// `|L_p|` — variables adjacent to the pivot (supervariable count).
+    pub lp: u32,
+    /// `Σ_{v∈L_p} |E_v|` — the work of the degree-update scan.
+    pub work: u32,
+    /// `|∪_{v∈L_p} E_v|` — unique elements touched (memory contention).
+    pub unique_elems: u32,
+}
+
+/// Sequential AMD configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct AmdSeq {
+    /// Enable aggressive element absorption (SuiteSparse default: on).
+    pub aggressive: bool,
+    /// Collect per-step [`StepStats`] (Table 3.1); costs some time.
+    pub collect_step_stats: bool,
+    /// Elbow-room factor over nnz (SuiteSparse uses ~1.2×nnz total; the
+    /// paper's parallel version pre-allocates 1.5).
+    pub elbow: f64,
+}
+
+impl Default for AmdSeq {
+    fn default() -> Self {
+        Self {
+            aggressive: true,
+            collect_step_stats: false,
+            elbow: 0.5,
+        }
+    }
+}
+
+impl Ordering for AmdSeq {
+    fn name(&self) -> &'static str {
+        "amd_seq"
+    }
+
+    fn order(&self, g: &SymGraph) -> OrderingResult {
+        let t = Timer::new();
+        let mut core = AmdCore::new(g, *self);
+        core.run();
+        let secs = t.secs();
+        let (perm, stats) = core.finish();
+        let mut r = OrderingResult::new(perm);
+        r.stats = stats;
+        r.phases.add("core", secs);
+        r
+    }
+}
+
+impl AmdSeq {
+    /// Run and also return the Table 3.1 per-step statistics.
+    pub fn order_with_step_stats(&self, g: &SymGraph) -> (OrderingResult, Vec<StepStats>) {
+        let cfg = AmdSeq {
+            collect_step_stats: true,
+            ..*self
+        };
+        let t = Timer::new();
+        let mut core = AmdCore::new(g, cfg);
+        core.run();
+        let secs = t.secs();
+        let steps = std::mem::take(&mut core.step_stats);
+        let (perm, stats) = core.finish();
+        let mut r = OrderingResult::new(perm);
+        r.stats = stats;
+        r.phases.add("core", secs);
+        (r, steps)
+    }
+}
+
+/// The quotient-graph elimination engine.
+pub(crate) struct AmdCore {
+    cfg: AmdSeq,
+    n: usize,
+    /// Workspace holding all adjacency lists. A live variable `v`'s list at
+    /// `pe[v] .. pe[v]+len[v]` holds `elen[v]` elements first, then
+    /// variables. An element `e`'s list is `L_e` (variables only).
+    iw: Vec<i32>,
+    pe: Vec<usize>,
+    len: Vec<i32>,
+    elen: Vec<i32>,
+    /// Supervariable size; 0 once dead. For elements: pivot block size.
+    nv: Vec<i32>,
+    /// For variables: approximate external degree (weighted). For elements:
+    /// weighted `|L_e|` (possibly stale-high; refreshed during GC).
+    degree: Vec<i32>,
+    state: Vec<NodeState>,
+    /// Absorption target for dead nodes (-1 if none).
+    parent: Vec<i32>,
+    /// Timestamp workspace (Algorithm 2.1's `w`); `u64` so it never wraps.
+    w: Vec<u64>,
+    wflg: u64,
+    /// Degree lists: `dhead[d]` -> first var with degree `d`; doubly linked.
+    dhead: Vec<i32>,
+    dnext: Vec<i32>,
+    dprev: Vec<i32>,
+    mindeg: usize,
+    /// First free slot in `iw`.
+    pfree: usize,
+    /// Number of original columns eliminated so far.
+    nel: usize,
+    /// Pivots in elimination order.
+    elim_order: Vec<i32>,
+    /// Hash buckets for supervariable detection.
+    hhead: Vec<i32>,
+    hnext: Vec<i32>,
+    hash_of: Vec<u64>,
+    pub(crate) step_stats: Vec<StepStats>,
+    stats: OrderingStats,
+}
+
+impl AmdCore {
+    pub fn new(g: &SymGraph, cfg: AmdSeq) -> Self {
+        let n = g.n;
+        let nnz = g.nnz();
+        let iwlen = nnz + (nnz as f64 * cfg.elbow) as usize + n + 16;
+        let mut iw = vec![0i32; iwlen];
+        let mut pe = vec![0usize; n];
+        let mut len = vec![0i32; n];
+        for v in 0..n {
+            pe[v] = g.rowptr[v];
+            len[v] = g.degree(v) as i32;
+        }
+        iw[..nnz].copy_from_slice(&g.colind);
+        let degree: Vec<i32> = (0..n).map(|v| g.degree(v) as i32).collect();
+
+        let mut s = Self {
+            cfg,
+            n,
+            iw,
+            pe,
+            len,
+            elen: vec![0i32; n],
+            nv: vec![1i32; n],
+            degree,
+            state: vec![NodeState::Var; n],
+            parent: vec![-1i32; n],
+            w: vec![0u64; n],
+            wflg: 1,
+            dhead: vec![-1i32; n + 1],
+            dnext: vec![-1i32; n],
+            dprev: vec![-1i32; n],
+            mindeg: 0,
+            pfree: nnz,
+            nel: 0,
+            elim_order: Vec::with_capacity(n),
+            hhead: vec![-1i32; n + 1],
+            hnext: vec![-1i32; n],
+            hash_of: vec![0u64; n],
+            step_stats: Vec::new(),
+            stats: OrderingStats::default(),
+        };
+        for v in 0..n {
+            s.deg_list_insert(v);
+        }
+        s
+    }
+
+    // ---- degree lists ---------------------------------------------------
+
+    fn deg_list_insert(&mut self, v: usize) {
+        let d = (self.degree[v].max(0) as usize).min(self.n);
+        let h = self.dhead[d];
+        self.dnext[v] = h;
+        self.dprev[v] = -1;
+        if h != -1 {
+            self.dprev[h as usize] = v as i32;
+        }
+        self.dhead[d] = v as i32;
+        if d < self.mindeg {
+            self.mindeg = d;
+        }
+    }
+
+    fn deg_list_remove(&mut self, v: usize) {
+        let prev = self.dprev[v];
+        let next = self.dnext[v];
+        if prev != -1 {
+            self.dnext[prev as usize] = next;
+        } else {
+            let d = (self.degree[v].max(0) as usize).min(self.n);
+            debug_assert_eq!(self.dhead[d], v as i32);
+            self.dhead[d] = next;
+        }
+        if next != -1 {
+            self.dprev[next as usize] = prev;
+        }
+        self.dnext[v] = -1;
+        self.dprev[v] = -1;
+    }
+
+    fn pop_min_degree(&mut self) -> Option<usize> {
+        while self.mindeg <= self.n {
+            let h = self.dhead[self.mindeg];
+            if h != -1 {
+                let v = h as usize;
+                self.deg_list_remove(v);
+                return Some(v);
+            }
+            self.mindeg += 1;
+        }
+        None
+    }
+
+    // ---- storage ----------------------------------------------------------
+
+    /// Ensure at least `need` free slots at `pfree`, running GC and then
+    /// growing if still insufficient.
+    fn reserve(&mut self, need: usize) {
+        if self.pfree + need <= self.iw.len() {
+            return;
+        }
+        self.garbage_collect();
+        if self.pfree + need > self.iw.len() {
+            let newlen = (self.pfree + need) * 3 / 2 + 16;
+            self.iw.resize(newlen, 0);
+        }
+    }
+
+    /// Compact all live lists to the front of `iw`, pruning dead entries
+    /// (and refreshing element weights).
+    fn garbage_collect(&mut self) {
+        self.stats.gc_count += 1;
+        let mut order: Vec<u32> = (0..self.n as u32)
+            .filter(|&i| {
+                matches!(self.state[i as usize], NodeState::Var | NodeState::Elem)
+                    && self.len[i as usize] > 0
+            })
+            .collect();
+        order.sort_by_key(|&i| self.pe[i as usize]);
+        let mut dst = 0usize;
+        for &iu in &order {
+            let i = iu as usize;
+            let src = self.pe[i];
+            debug_assert!(src >= dst, "live lists must not overlap");
+            match self.state[i] {
+                NodeState::Elem => {
+                    // Prune dead variables from L_e; refresh weighted size.
+                    let mut weight = 0i32;
+                    let mut kept = 0usize;
+                    for k in 0..self.len[i] as usize {
+                        let v = self.iw[src + k];
+                        if self.state[v as usize] == NodeState::Var {
+                            self.iw[dst + kept] = v;
+                            kept += 1;
+                            weight += self.nv[v as usize];
+                        }
+                    }
+                    self.pe[i] = dst;
+                    self.len[i] = kept as i32;
+                    self.degree[i] = weight;
+                    dst += kept;
+                }
+                NodeState::Var => {
+                    // Prune dead elements and dead variables; keep the
+                    // [elements][variables] layout.
+                    let mut kept_e = 0usize;
+                    for k in 0..self.elen[i] as usize {
+                        let e = self.iw[src + k];
+                        if self.state[e as usize] == NodeState::Elem {
+                            self.iw[dst + kept_e] = e;
+                            kept_e += 1;
+                        }
+                    }
+                    let mut kept = kept_e;
+                    for k in self.elen[i] as usize..self.len[i] as usize {
+                        let v = self.iw[src + k];
+                        if self.state[v as usize] == NodeState::Var {
+                            self.iw[dst + kept] = v;
+                            kept += 1;
+                        }
+                    }
+                    self.pe[i] = dst;
+                    self.elen[i] = kept_e as i32;
+                    self.len[i] = kept as i32;
+                    dst += kept;
+                }
+                _ => unreachable!(),
+            }
+        }
+        self.pfree = dst;
+    }
+
+    // ---- the elimination loop --------------------------------------------
+
+    pub fn run(&mut self) {
+        while self.nel < self.n {
+            let me = match self.pop_min_degree() {
+                Some(v) => v,
+                None => break,
+            };
+            debug_assert_eq!(self.state[me], NodeState::Var);
+            self.eliminate(me);
+        }
+        debug_assert_eq!(self.nel, self.n);
+    }
+
+    /// Eliminate pivot `me`: build `L_me`, absorb elements, update degrees
+    /// of all `v ∈ L_me`, merge indistinguishable variables.
+    pub(crate) fn eliminate(&mut self, me: usize) {
+        let nv_me = self.nv[me];
+        debug_assert!(nv_me > 0);
+        self.stats.rounds += 1;
+        self.stats.pivots += 1;
+        self.nel += nv_me as usize;
+
+        // ---- Phase 1: build L_me into fresh space -----------------------
+        let mut cap = (self.len[me] - self.elen[me]) as usize;
+        for k in 0..self.elen[me] as usize {
+            let e = self.iw[self.pe[me] + k] as usize;
+            if self.state[e] == NodeState::Elem {
+                cap += self.len[e] as usize;
+            }
+        }
+        self.reserve(cap);
+
+        self.wflg += self.n as u64 + 2; // past any stored w (≤ old mark + n)
+        let mark = self.wflg;
+        self.w[me] = mark; // exclude me itself
+        let pme = self.pfree;
+        // Weighted |L_me| is recomputed exactly in Phase 5 after mass
+        // eliminations and merges; no running accumulator is needed.
+        {
+            let p = self.pe[me];
+            let elen_me = self.elen[me] as usize;
+            let len_me = self.len[me] as usize;
+            // Variables directly adjacent (A_me).
+            for k in elen_me..len_me {
+                let v = self.iw[p + k];
+                let vu = v as usize;
+                if self.state[vu] == NodeState::Var && self.w[vu] != mark {
+                    self.w[vu] = mark;
+                    self.iw[self.pfree] = v;
+                    self.pfree += 1;
+                }
+            }
+            // Cliques of adjacent elements (∪ L_e), absorbing each element.
+            for k in 0..elen_me {
+                let e = self.iw[p + k] as usize;
+                if self.state[e] != NodeState::Elem {
+                    continue;
+                }
+                let ep = self.pe[e];
+                for q in 0..self.len[e] as usize {
+                    let v = self.iw[ep + q];
+                    let vu = v as usize;
+                    if self.state[vu] == NodeState::Var && self.w[vu] != mark {
+                        self.w[vu] = mark;
+                        self.iw[self.pfree] = v;
+                        self.pfree += 1;
+                    }
+                }
+                self.state[e] = NodeState::DeadElem;
+                self.parent[e] = me as i32;
+            }
+        }
+        let lme_len = self.pfree - pme;
+        self.pe[me] = pme;
+        self.len[me] = lme_len as i32;
+        self.elen[me] = 0;
+        self.state[me] = NodeState::Elem;
+        self.stats.work_words += (lme_len + cap) as u64;
+
+        // Remove L_me's variables from the degree lists (re-inserted after
+        // their degrees are updated).
+        for k in 0..lme_len {
+            let v = self.iw[pme + k] as usize;
+            self.deg_list_remove(v);
+        }
+
+        // ---- Phase 2: Algorithm 2.1 pass 1 — w(e)-based |L_e \ L_me| ----
+        // Elements and variables share the `w` array but have disjoint ids,
+        // so the `mark` epoch serves both the "v ∈ L_me" flag and the
+        // element weights.
+        let mut step = StepStats {
+            lp: lme_len as u32,
+            ..Default::default()
+        };
+        for k in 0..lme_len {
+            let v = self.iw[pme + k] as usize;
+            let p = self.pe[v];
+            let elen_v = self.elen[v] as usize;
+            step.work += elen_v as u32;
+            for q in 0..elen_v {
+                let e = self.iw[p + q] as usize;
+                if self.state[e] != NodeState::Elem {
+                    continue;
+                }
+                if self.w[e] >= mark {
+                    self.w[e] -= self.nv[v] as u64;
+                } else {
+                    // First touch this step: init from the (possibly
+                    // stale-high) weighted |L_e|.
+                    self.w[e] = mark + self.degree[e] as u64 - self.nv[v] as u64;
+                    step.unique_elems += 1;
+                }
+            }
+        }
+        self.stats.work_words += step.work as u64;
+
+        // ---- Phase 3: pass 2 — degree update, in-place list rebuild,
+        // aggressive absorption, mass elimination, supervariable hashing --
+        let mut nvpiv = nv_me; // grows with mass eliminations
+        let mut hash_list: Vec<i32> = Vec::new();
+        for k in 0..lme_len {
+            let v = self.iw[pme + k] as usize;
+            debug_assert_eq!(self.state[v], NodeState::Var);
+            let p = self.pe[v];
+            let elen_v = self.elen[v] as usize;
+            let len_v = self.len[v] as usize;
+
+            // Rebuild the element list in place, accumulating Σ|L_e \ L_me|.
+            let mut deg: i64 = 0;
+            let mut hash: u64 = 0;
+            let mut pn = p; // write cursor (never passes the read cursor)
+            for q in 0..elen_v {
+                let e = self.iw[p + q] as usize;
+                if self.state[e] != NodeState::Elem {
+                    continue; // absorbed this step or earlier
+                }
+                let dext = (self.w[e] - mark) as i64;
+                if dext > 0 || !self.cfg.aggressive {
+                    deg += dext;
+                    self.iw[pn] = e as i32;
+                    pn += 1;
+                    hash = hash.wrapping_add(e as u64);
+                } else {
+                    // |L_e \ L_me| = 0: aggressive absorption into me.
+                    debug_assert_eq!(dext, 0);
+                    self.state[e] = NodeState::DeadElem;
+                    self.parent[e] = me as i32;
+                }
+            }
+            let p3 = pn; // end of kept elements
+            // Rebuild the variable list: drop members of L_me (now covered
+            // by element me) and dead variables.
+            for q in elen_v..len_v {
+                let u = self.iw[p + q];
+                let uu = u as usize;
+                if self.state[uu] != NodeState::Var || self.w[uu] == mark {
+                    continue;
+                }
+                deg += self.nv[uu] as i64;
+                self.iw[pn] = u;
+                pn += 1;
+                hash = hash.wrapping_add(u as u64);
+            }
+
+            if deg == 0 && pn == p3 && self.cfg.aggressive {
+                // Mass elimination: N_v ⊆ L_me ∪ {me}.
+                self.state[v] = NodeState::DeadVar;
+                self.parent[v] = me as i32;
+                nvpiv += self.nv[v];
+                self.nel += self.nv[v] as usize;
+                self.nv[v] = 0;
+                continue;
+            }
+            // Splice `me` in at the elements/variables boundary: move the
+            // first kept variable (if any) to the end, put me at p3. At
+            // least one original entry was dropped (me from A_v, or a dead
+            // element from E_v), so the extra slot fits in v's allocation.
+            debug_assert!(pn - p < len_v, "rebuild must shrink v's list");
+            if pn > p3 {
+                self.iw[pn] = self.iw[p3];
+            }
+            self.iw[p3] = me as i32;
+            pn += 1;
+            hash = hash.wrapping_add(me as u64);
+            self.elen[v] = (p3 - p + 1) as i32;
+            self.len[v] = (pn - p) as i32;
+
+            if deg == 0 && pn - p == 1 {
+                // Non-aggressive mode mass elimination (E_v = {me} only).
+                self.state[v] = NodeState::DeadVar;
+                self.parent[v] = me as i32;
+                nvpiv += self.nv[v];
+                self.nel += self.nv[v] as usize;
+                self.nv[v] = 0;
+                continue;
+            }
+
+            // Partial degree (without the |L_me \ v| term, added in
+            // Phase 5 after supervariable merging — as amd_2 does).
+            let d = (self.degree[v] as i64).min(deg).max(0);
+            self.degree[v] = d as i32;
+            self.hash_of[v] = hash;
+            hash_list.push(v as i32);
+        }
+        self.stats.work_words += lme_len as u64;
+
+        // ---- Phase 4: supervariable detection ---------------------------
+        self.detect_supervariables(&hash_list);
+
+        // ---- Phase 5: compact L_me, final degrees, reinsert survivors ---
+        let mut kept = 0usize;
+        let mut degme_final = 0i32;
+        for k in 0..lme_len {
+            let v = self.iw[pme + k];
+            if self.state[v as usize] == NodeState::Var {
+                self.iw[pme + kept] = v;
+                kept += 1;
+                degme_final += self.nv[v as usize];
+            }
+        }
+        self.len[me] = kept as i32;
+        self.degree[me] = degme_final;
+        self.nv[me] = nvpiv;
+        self.pfree = pme + kept;
+        if kept == 0 {
+            // Empty element: nothing references it.
+            self.state[me] = NodeState::DeadElem;
+            self.parent[me] = -1;
+        }
+        for k in 0..kept {
+            let v = self.iw[pme + k] as usize;
+            // d_v = min(n - nel - nv_v, partial + |L_me \ v|), at least 1.
+            let ext = (degme_final - self.nv[v]) as i64;
+            let bound = (self.n - self.nel) as i64 - self.nv[v] as i64;
+            let d = (self.degree[v] as i64 + ext).min(bound).max(1);
+            self.degree[v] = d as i32;
+            self.deg_list_insert(v);
+        }
+
+        self.elim_order.push(me as i32);
+        if self.cfg.collect_step_stats {
+            self.step_stats.push(step);
+        }
+    }
+
+    /// Hash-based indistinguishable-variable detection among the updated
+    /// neighbors of the current pivot (Phase 4).
+    fn detect_supervariables(&mut self, hash_list: &[i32]) {
+        // Insert into buckets.
+        let nbuckets = self.n + 1;
+        for &vi in hash_list {
+            let v = vi as usize;
+            if self.state[v] != NodeState::Var {
+                continue;
+            }
+            let b = (self.hash_of[v] % nbuckets as u64) as usize;
+            self.hnext[v] = self.hhead[b];
+            self.hhead[b] = vi;
+        }
+        // For each bucket, compare pairs.
+        for &vi in hash_list {
+            let v = vi as usize;
+            let b = (self.hash_of[v] % nbuckets as u64) as usize;
+            let mut i = self.hhead[b];
+            if i == -1 {
+                continue; // bucket already processed
+            }
+            // Pairwise comparison within the bucket, merging into the
+            // earlier list entry.
+            while i != -1 {
+                let iu = i as usize;
+                let mut j = self.hnext[iu];
+                while j != -1 {
+                    let ju = j as usize;
+                    let jnext = self.hnext[ju];
+                    if self.state[ju] == NodeState::Var
+                        && self.state[iu] == NodeState::Var
+                        && self.hash_of[iu] == self.hash_of[ju]
+                        && self.elen[iu] == self.elen[ju]
+                        && self.len[iu] == self.len[ju]
+                        && self.lists_identical(iu, ju)
+                    {
+                        // Merge j into i.
+                        self.nv[iu] += self.nv[ju];
+                        self.nv[ju] = 0;
+                        self.state[ju] = NodeState::DeadVar;
+                        self.parent[ju] = i;
+                    }
+                    j = jnext;
+                }
+                i = self.hnext[iu];
+            }
+            self.hhead[b] = -1;
+        }
+        // Reset chains.
+        for &vi in hash_list {
+            self.hnext[vi as usize] = -1;
+        }
+    }
+
+    /// Exact set comparison of two variables' lists (elements + variables),
+    /// using a fresh mark epoch.
+    fn lists_identical(&mut self, a: usize, b: usize) -> bool {
+        self.wflg += self.n as u64 + 2; // past any stored w (≤ old mark + n)
+        let mark = self.wflg;
+        let (pa, la) = (self.pe[a], self.len[a] as usize);
+        for k in 0..la {
+            self.w[self.iw[pa + k] as usize] = mark;
+        }
+        let (pb, lb) = (self.pe[b], self.len[b] as usize);
+        debug_assert_eq!(la, lb);
+        (0..lb).all(|k| self.w[self.iw[pb + k] as usize] == mark)
+    }
+
+    // ---- helpers for multiple-elimination drivers (MMD) -----------------
+
+    /// Current state of a node.
+    pub(crate) fn node_state(&self, v: usize) -> NodeState {
+        self.state[v]
+    }
+
+    /// Columns eliminated so far.
+    pub(crate) fn eliminated(&self) -> usize {
+        self.nel
+    }
+
+    /// Remove a live variable from the degree lists (pre-elimination).
+    pub(crate) fn remove_from_degree_list(&mut self, v: usize) {
+        self.deg_list_remove(v);
+    }
+
+    /// Collect an independent set (in the *elimination graph*) of pivots
+    /// whose approximate degree is within `mindeg + delta`, greedily and
+    /// deterministically — Liu's multiple elimination (§2.3). Does not
+    /// modify the degree lists.
+    pub(crate) fn collect_independent_min_degree_set(&mut self, delta: i32) -> Vec<i32> {
+        while self.mindeg <= self.n && self.dhead[self.mindeg] == -1 {
+            self.mindeg += 1;
+        }
+        if self.mindeg > self.n {
+            return Vec::new();
+        }
+        let limit = (self.mindeg + delta.max(0) as usize).min(self.n);
+        let mut candidates: Vec<i32> = Vec::new();
+        for d in self.mindeg..=limit {
+            let mut h = self.dhead[d];
+            while h != -1 {
+                candidates.push(h);
+                h = self.dnext[h as usize];
+            }
+        }
+        self.wflg += self.n as u64 + 2; // past any stored w (≤ old mark + n)
+        let mark = self.wflg;
+        let mut selected = Vec::new();
+        'cand: for &vi in &candidates {
+            let v = vi as usize;
+            if self.state[v] != NodeState::Var {
+                continue;
+            }
+            // v conflicts if it lies in a selected pivot's neighborhood:
+            // directly marked, or sharing a marked element.
+            if self.w[v] == mark {
+                continue;
+            }
+            let (p, el, l) = (self.pe[v], self.elen[v] as usize, self.len[v] as usize);
+            for q in 0..el {
+                let e = self.iw[p + q] as usize;
+                if self.state[e] == NodeState::Elem && self.w[e] == mark {
+                    continue 'cand;
+                }
+            }
+            // Select v; mark its neighborhood (A_v vars and E_v elements).
+            for q in 0..el {
+                let e = self.iw[p + q] as usize;
+                if self.state[e] == NodeState::Elem {
+                    self.w[e] = mark;
+                }
+            }
+            for q in el..l {
+                let u = self.iw[p + q] as usize;
+                if self.state[u] == NodeState::Var {
+                    self.w[u] = mark;
+                }
+            }
+            self.w[v] = mark;
+            selected.push(vi);
+        }
+        selected
+    }
+
+    /// Reconstruct the final permutation from the elimination order and the
+    /// absorption forest, and return the collected statistics.
+    pub fn finish(self) -> (Vec<i32>, OrderingStats) {
+        let perm = crate::ordering::rebuild_perm(self.n, &self.elim_order, &self.parent);
+        (perm, self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::SymGraph;
+    use crate::matgen::{mesh2d, mesh3d, random_graph};
+    use crate::ordering::test_support::check_ordering_contract;
+    use crate::ordering::{md::MinDegree, Ordering as _};
+    use crate::symbolic::fill_in;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn path_graph_no_fill() {
+        let n = 12;
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        let g = SymGraph::from_edges(n, &edges);
+        let r = AmdSeq::default().order(&g);
+        check_ordering_contract(&g, &r);
+        assert_eq!(fill_in(&g, &r.perm), 0);
+    }
+
+    #[test]
+    fn star_no_fill() {
+        let g = SymGraph::from_edges(6, &[(0, 5), (1, 5), (2, 5), (3, 5), (4, 5)]);
+        let r = AmdSeq::default().order(&g);
+        check_ordering_contract(&g, &r);
+        assert_eq!(fill_in(&g, &r.perm), 0);
+    }
+
+    #[test]
+    fn complete_graph_valid() {
+        let mut edges = vec![];
+        for i in 0..7 {
+            for j in i + 1..7 {
+                edges.push((i, j));
+            }
+        }
+        let g = SymGraph::from_edges(7, &edges);
+        let r = AmdSeq::default().order(&g);
+        check_ordering_contract(&g, &r);
+        assert_eq!(fill_in(&g, &r.perm), 0);
+    }
+
+    #[test]
+    fn empty_and_isolated() {
+        let g = SymGraph::from_edges(5, &[]);
+        let r = AmdSeq::default().order(&g);
+        check_ordering_contract(&g, &r);
+        let g2 = SymGraph::from_edges(4, &[(1, 2)]);
+        let r2 = AmdSeq::default().order(&g2);
+        check_ordering_contract(&g2, &r2);
+        assert_eq!(fill_in(&g2, &r2.perm), 0);
+    }
+
+    #[test]
+    fn random_graphs_valid_permutations() {
+        for seed in 0..10 {
+            let g = random_graph(200, 6, seed);
+            let r = AmdSeq::default().order(&g);
+            check_ordering_contract(&g, &r);
+        }
+    }
+
+    #[test]
+    fn quality_close_to_exact_min_degree() {
+        // AMD's fill should be within a modest factor of exact MD's.
+        for seed in 0..5 {
+            let g = random_graph(120, 5, seed);
+            let amd = AmdSeq::default().order(&g);
+            let md = MinDegree.order(&g);
+            let f_amd = fill_in(&g, &amd.perm) as f64;
+            let f_md = fill_in(&g, &md.perm) as f64;
+            assert!(
+                f_amd <= (f_md * 2.0).max(f_md + 50.0),
+                "seed={seed}: AMD fill {f_amd} vs MD fill {f_md}"
+            );
+        }
+    }
+
+    #[test]
+    fn quality_beats_natural_on_meshes() {
+        let g = mesh2d(20, 20);
+        let r = AmdSeq::default().order(&g);
+        check_ordering_contract(&g, &r);
+        let natural: Vec<i32> = (0..g.n as i32).collect();
+        let f_amd = fill_in(&g, &r.perm);
+        let f_nat = fill_in(&g, &natural);
+        assert!(f_amd < f_nat, "AMD {f_amd} vs natural {f_nat}");
+    }
+
+    #[test]
+    fn works_on_3d_mesh() {
+        let g = mesh3d(7, 7, 7);
+        let r = AmdSeq::default().order(&g);
+        check_ordering_contract(&g, &r);
+    }
+
+    #[test]
+    fn non_aggressive_mode() {
+        let cfg = AmdSeq {
+            aggressive: false,
+            ..Default::default()
+        };
+        for seed in 0..3 {
+            let g = random_graph(150, 6, seed);
+            let r = cfg.order(&g);
+            check_ordering_contract(&g, &r);
+        }
+    }
+
+    #[test]
+    fn tiny_elbow_forces_gc() {
+        let cfg = AmdSeq {
+            elbow: 0.01,
+            ..Default::default()
+        };
+        let g = mesh2d(40, 40);
+        let r = cfg.order(&g);
+        check_ordering_contract(&g, &r);
+        assert!(r.stats.gc_count > 0, "expected at least one GC");
+        // Same ordering quality ballpark as the default config.
+        let f = fill_in(&g, &r.perm);
+        let f_def = fill_in(&g, &AmdSeq::default().order(&g).perm);
+        assert!((f as f64) < 3.0 * f_def as f64 + 100.0);
+    }
+
+    #[test]
+    fn supervariables_detected_on_duplicate_columns() {
+        // A graph where vertices 1 and 2 are indistinguishable.
+        let g = SymGraph::from_edges(
+            6,
+            &[(0, 1), (0, 2), (1, 3), (2, 3), (1, 4), (2, 4), (1, 2), (3, 5), (4, 5)],
+        );
+        let r = AmdSeq::default().order(&g);
+        check_ordering_contract(&g, &r);
+        // Fewer pivots than columns => merging and/or mass elimination fired.
+        assert!(r.stats.pivots < 6);
+    }
+
+    #[test]
+    fn step_stats_collected() {
+        let g = mesh2d(12, 12);
+        let (r, steps) = AmdSeq::default().order_with_step_stats(&g);
+        check_ordering_contract(&g, &r);
+        assert_eq!(steps.len(), r.stats.pivots as usize);
+        assert!(steps.iter().any(|s| s.lp > 0));
+        for s in &steps {
+            assert!(s.unique_elems <= s.work.max(1));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_input() {
+        let g = random_graph(300, 6, 42);
+        let a = AmdSeq::default().order(&g);
+        let b = AmdSeq::default().order(&g);
+        assert_eq!(a.perm, b.perm);
+    }
+
+    #[test]
+    fn fill_quality_on_permuted_inputs_is_stable() {
+        // The evaluation protocol: 5 random input permutations (§2.5.4).
+        let g = mesh2d(16, 16);
+        let mut fills = vec![];
+        for seed in 0..5 {
+            let mut rng = Rng::new(seed);
+            let p = rng.permutation(g.n);
+            let pg = crate::graph::perm::permute_graph(&g, &p);
+            let r = AmdSeq::default().order(&pg);
+            check_ordering_contract(&pg, &r);
+            fills.push(fill_in(&pg, &r.perm) as f64);
+        }
+        let mean = crate::util::stats::mean(&fills);
+        for &f in &fills {
+            assert!((f - mean).abs() < mean * 0.9 + 50.0, "fills={fills:?}");
+        }
+    }
+}

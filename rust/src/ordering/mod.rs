@@ -1,0 +1,149 @@
+//! Fill-reducing ordering algorithms.
+//!
+//! - [`md`] — textbook minimum degree on explicit elimination graphs
+//!   (the test oracle; O(n²), small inputs only).
+//! - [`mmd`] — multiple minimum degree (Liu 1985): multiple elimination on
+//!   maximal independent sets of minimum-degree pivots.
+//! - [`amd_seq`] — the sequential approximate minimum degree algorithm
+//!   (Amestoy–Davis–Duff 1996), data-structure-faithful to SuiteSparse
+//!   `amd_2`: the paper's baseline.
+//! - [`paramd`] — the paper's contribution: parallel AMD via multiple
+//!   elimination on distance-2 independent sets.
+
+pub mod amd_seq;
+pub mod md;
+pub mod mmd;
+pub mod rcm;
+pub mod paramd;
+
+use crate::graph::csr::SymGraph;
+use crate::util::timer::PhaseTimes;
+
+/// Result of an ordering run.
+#[derive(Clone, Debug)]
+pub struct OrderingResult {
+    /// `perm[k] = v`: original vertex `v` is eliminated k-th.
+    pub perm: Vec<i32>,
+    /// Inverse permutation: `iperm[v] = k`.
+    pub iperm: Vec<i32>,
+    /// Per-phase wall-clock seconds (Figure 4.1 breakdown).
+    pub phases: PhaseTimes,
+    /// Algorithm-specific counters (set sizes, contention stats, ...).
+    pub stats: OrderingStats,
+}
+
+/// Counters shared across ordering implementations; a superset — each
+/// algorithm fills what applies to it.
+#[derive(Clone, Debug, Default)]
+pub struct OrderingStats {
+    /// Number of elimination steps (outer rounds for multiple elimination).
+    pub rounds: u64,
+    /// Number of pivots eliminated (supervariables, not original columns).
+    pub pivots: u64,
+    /// Sizes of each selected independent set (ParAMD: distance-2 sets —
+    /// the Figure 4.2 distribution; MMD: independent sets).
+    pub set_sizes: Vec<u32>,
+    /// Garbage collections / elbow exhaustion events.
+    pub gc_count: u64,
+    /// Total quotient-graph words touched (cost-model input).
+    pub work_words: u64,
+    /// Per-thread per-phase work counters (cost-model input; empty for
+    /// sequential algorithms). Indexed `[thread][phase]`.
+    pub thread_work: Vec<Vec<u64>>,
+    /// Simulated parallel time from the critical-path cost model (seconds),
+    /// 0.0 when not applicable.
+    pub modeled_time: f64,
+}
+
+impl OrderingResult {
+    pub fn new(perm: Vec<i32>) -> Self {
+        let iperm = crate::graph::perm::invert_perm(&perm);
+        Self {
+            perm,
+            iperm,
+            phases: PhaseTimes::default(),
+            stats: OrderingStats::default(),
+        }
+    }
+}
+
+/// Common interface for all ordering algorithms.
+pub trait Ordering {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+    /// Compute a fill-reducing ordering of the symmetric pattern `g`.
+    fn order(&self, g: &SymGraph) -> OrderingResult;
+}
+
+/// Reconstruct the output permutation from a quotient-graph elimination:
+/// `elim_order` lists the pivots in elimination order and `parent` is the
+/// absorption forest (merged/mass-eliminated columns point at their
+/// absorber; pivots and never-absorbed nodes hold -1 or a pivot).
+///
+/// Each original column is assigned to the pivot that consumed it (itself
+/// if it was a pivot); buckets are emitted in elimination order with the
+/// pivot first (intra-bucket order is free — absorbed columns are
+/// indistinguishable from their pivot).
+pub(crate) fn rebuild_perm(n: usize, elim_order: &[i32], parent: &[i32]) -> Vec<i32> {
+    let mut pos_of_pivot = vec![-1i32; n];
+    for (k, &e) in elim_order.iter().enumerate() {
+        pos_of_pivot[e as usize] = k as i32;
+    }
+    let mut owner = vec![-1i32; n];
+    for v in 0..n {
+        if owner[v] != -1 {
+            continue;
+        }
+        let mut chain = vec![v as i32];
+        let mut x = v;
+        while pos_of_pivot[x] == -1 {
+            let p = parent[x];
+            debug_assert!(p >= 0, "node {x} neither pivot nor absorbed");
+            x = p as usize;
+            if owner[x] != -1 {
+                x = owner[x] as usize;
+                break;
+            }
+            chain.push(x as i32);
+        }
+        for c in chain {
+            owner[c as usize] = x as i32;
+        }
+    }
+    let mut bucket_count = vec![0usize; elim_order.len() + 1];
+    for v in 0..n {
+        bucket_count[pos_of_pivot[owner[v] as usize] as usize + 1] += 1;
+    }
+    for k in 0..elim_order.len() {
+        bucket_count[k + 1] += bucket_count[k];
+    }
+    let mut perm = vec![0i32; n];
+    let mut cursor = bucket_count;
+    for (k, &e) in elim_order.iter().enumerate() {
+        perm[cursor[k]] = e;
+        cursor[k] += 1;
+    }
+    for v in 0..n {
+        let k = pos_of_pivot[owner[v] as usize] as usize;
+        if v as i32 != elim_order[k] {
+            perm[cursor[k]] = v as i32;
+            cursor[k] += 1;
+        }
+    }
+    perm
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::graph::perm::is_valid_perm;
+
+    /// Assert the basic contract every ordering must satisfy.
+    pub fn check_ordering_contract(g: &SymGraph, r: &OrderingResult) {
+        assert_eq!(r.perm.len(), g.n);
+        assert!(is_valid_perm(&r.perm), "perm is not a permutation");
+        for k in 0..g.n {
+            assert_eq!(r.iperm[r.perm[k] as usize], k as i32);
+        }
+    }
+}

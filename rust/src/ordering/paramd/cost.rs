@@ -1,0 +1,112 @@
+//! Critical-path cost model for simulated thread scaling (DESIGN.md §7).
+//!
+//! This testbed has a single physical core, so wall-clock speedups of a
+//! 64-thread run are meaningless; what *is* machine-independent is the
+//! per-round per-thread work distribution, which the engine records in
+//! [`super::workspace::RoundWork`]. The model charges each round the
+//! maximum per-thread work (the parallel critical path) plus a fixed
+//! barrier cost, and reports
+//!
+//! ```text
+//! speedup = Σ_r Σ_tid work(r, tid)  /  Σ_r (max_tid work(r, tid) + β)
+//! ```
+//!
+//! i.e. ideal-work-over-critical-path — the same quantity a perfectly
+//! memory-neutral 64-core machine would realize, degraded by imbalance and
+//! round-synchronization exactly as the paper's Figure 4.1/4.2 analysis
+//! describes (small distance-2 sets ⇒ idle threads ⇒ poor scaling).
+
+use super::workspace::RoundWork;
+
+/// Default per-round synchronization cost in work units (5 barriers per
+/// round on real hardware, each O(µs); expressed relative to the ~ns-scale
+/// per-word work counter).
+pub const DEFAULT_BARRIER_COST: f64 = 2000.0;
+
+/// Work-over-critical-path speedup for a recorded run.
+/// `round_work[r][tid]`; returns 1.0 for degenerate inputs.
+pub fn model_speedup(round_work: &[Vec<RoundWork>], barrier_cost: f64) -> f64 {
+    let mut total = 0.0f64;
+    let mut critical = 0.0f64;
+    for round in round_work {
+        let mut max_w = 0u64;
+        for w in round {
+            let wsum = w.select + w.elim;
+            total += wsum as f64;
+            max_w = max_w.max(wsum);
+        }
+        critical += max_w as f64 + barrier_cost;
+    }
+    if critical <= 0.0 || total <= 0.0 {
+        return 1.0;
+    }
+    (total / critical).max(1.0 / 1e9)
+}
+
+/// Modeled wall-clock for `t` threads given a measured single-thread
+/// throughput (`work_per_sec`) and a recorded `t`-thread work log.
+pub fn modeled_time(round_work: &[Vec<RoundWork>], work_per_sec: f64, barrier_secs: f64) -> f64 {
+    if work_per_sec <= 0.0 {
+        return 0.0;
+    }
+    round_work
+        .iter()
+        .map(|round| {
+            let max_w = round.iter().map(|w| w.select + w.elim).max().unwrap_or(0);
+            max_w as f64 / work_per_sec + barrier_secs
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rw(select: u64, elim: u64) -> RoundWork {
+        RoundWork {
+            select,
+            elim,
+            pivots: 0,
+        }
+    }
+
+    #[test]
+    fn perfectly_balanced_rounds_scale_linearly() {
+        // 4 threads, each 1000 units per round, no barrier cost:
+        let log = vec![vec![rw(500, 500); 4]; 10];
+        let s = model_speedup(&log, 0.0);
+        assert!((s - 4.0).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn imbalance_caps_speedup() {
+        // One thread does everything: speedup 1 regardless of t.
+        let mut round = vec![rw(0, 0); 8];
+        round[3] = rw(1000, 1000);
+        let log = vec![round; 5];
+        let s = model_speedup(&log, 0.0);
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn barrier_cost_degrades_small_rounds() {
+        let log = vec![vec![rw(10, 10); 4]; 100];
+        let no_bar = model_speedup(&log, 0.0);
+        let with_bar = model_speedup(&log, 100.0);
+        assert!(with_bar < no_bar);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(model_speedup(&[], 0.0), 1.0);
+        let log = vec![vec![rw(0, 0); 2]];
+        assert_eq!(model_speedup(&log, 10.0), 1.0);
+    }
+
+    #[test]
+    fn modeled_time_sane() {
+        let log = vec![vec![rw(1000, 0); 2]; 3];
+        let t = modeled_time(&log, 1000.0, 0.001);
+        assert!((t - (3.0 + 0.003)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,256 @@
+//! Parallel distance-2 independent set selection — Algorithm 3.2 of the
+//! paper: a single iteration of the distance-2 analog of Luby's algorithm.
+//!
+//! Each thread gathers up to `lim` candidates from its local degree lists
+//! within the `mult`-relaxed degree window, assigns each a random priority
+//! `l(v) = (rand, v)`, resets `l_min` over `{v} ∪ N_v`, atomically
+//! min-reduces the priorities over the same sets, and keeps `v` iff its
+//! priority survived everywhere in its closed neighborhood. Two barriers
+//! (provided by the driver) separate the reset / min / validate phases.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use super::lists::{Affinity, ThreadLists};
+use super::shared::{SharedGraph, ST_ELEM, ST_VAR};
+use super::workspace::Workspace;
+
+/// Packed Luby priority: `(round_inv << 44) | (rand << 24) | v`.
+///
+/// The **inverted round number** in the top bits makes any `l_min` residue
+/// from an earlier round compare *greater* than every priority of the
+/// current round — i.e. stale entries act as +∞ — so the per-round
+/// `l_min := ∞` reset pass (Alg 3.2 line 12) and its barrier disappear
+/// entirely (EXPERIMENTS.md §Perf, change #2). Ties still break by index.
+///
+/// Layout: 20 bits inverted round | 20 bits random | 24 bits vertex.
+pub const MAX_ROUNDS: u32 = (1 << 20) - 1;
+pub const MAX_VERTICES: usize = 1 << 24;
+
+#[inline]
+pub fn priority(round: u32, rand: u32, v: usize) -> u64 {
+    debug_assert!(round <= MAX_ROUNDS);
+    debug_assert!(v < MAX_VERTICES);
+    (((MAX_ROUNDS - round) as u64) << 44) | (((rand & 0xF_FFFF) as u64) << 24) | v as u64
+}
+
+/// Phase 1 (Alg 3.2 lines 4–9): gather candidates with approximate degree
+/// in `[amd, floor(mult·amd)]` from this thread's lists, capped at `lim`.
+pub fn collect_candidates(
+    lists: &mut ThreadLists,
+    aff: &Affinity,
+    ws: &mut Workspace,
+    amd: usize,
+    mult: f64,
+    lim: usize,
+    n: usize,
+) {
+    ws.candidates.clear();
+    let hi = (((amd as f64) * mult).floor() as usize).min(n.saturating_sub(1));
+    for d in amd..=hi {
+        lists.get(aff, d, &mut ws.candidates);
+        if ws.candidates.len() >= lim {
+            ws.candidates.truncate(lim);
+            break;
+        }
+    }
+}
+
+/// Enumerate the (closed) neighborhood of variable `v` in the current
+/// quotient graph: `{v} ∪ A_v ∪ (∪_{e ∈ E_v} L_e)`, live entries only,
+/// possibly with duplicates (harmless for idempotent min/reset updates).
+pub fn closed_neighborhood(g: &SharedGraph, v: usize, out: &mut Vec<i32>, work: &mut u64) {
+    out.clear();
+    out.push(v as i32);
+    let p = g.pe_of(v);
+    let elen = g.elen_of(v) as usize;
+    let len = g.len_of(v) as usize;
+    *work += len as u64;
+    for k in elen..len {
+        let u = g.iw_at(p + k);
+        if g.st(u as usize) == ST_VAR {
+            out.push(u);
+        }
+    }
+    for k in 0..elen {
+        let e = g.iw_at(p + k) as usize;
+        if g.st(e) != ST_ELEM {
+            continue;
+        }
+        let ep = g.pe_of(e);
+        let el = g.len_of(e) as usize;
+        *work += el as u64;
+        for q in 0..el {
+            let u = g.iw_at(ep + q);
+            if g.st(u as usize) == ST_VAR && u as usize != v {
+                out.push(u);
+            }
+        }
+    }
+}
+
+/// Phase 2 (lines 10–11): assign priorities and cache each candidate's
+/// closed neighborhood. Returns the priorities, aligned with
+/// `ws.candidates`.
+///
+/// Perf: the neighborhoods are enumerated **once** here and cached in the
+/// workspace (`nbr_buf`/`nbr_ptr`) for the min and validate phases — the
+/// quotient graph cannot change between the phases (barriers separate
+/// them from any elimination), and the enumeration is ~half the selection
+/// cost (EXPERIMENTS.md §Perf, change #1). The explicit `l_min := ∞`
+/// reset of Alg 3.2 line 12 is subsumed by the round-stamped priorities
+/// (see [`priority`], change #2).
+pub fn luby_prepare(
+    g: &SharedGraph,
+    ws: &mut Workspace,
+    round: u32,
+    work: &mut u64,
+) -> Vec<u64> {
+    let mut prios = Vec::with_capacity(ws.candidates.len());
+    let candidates = std::mem::take(&mut ws.candidates);
+    ws.nbr_buf.clear();
+    ws.nbr_ptr.clear();
+    ws.nbr_ptr.push(0);
+    for &vi in &candidates {
+        let v = vi as usize;
+        prios.push(priority(round, ws.rng.next_u32(), v));
+        closed_neighborhood(g, v, &mut ws.nbrs, work);
+        ws.nbr_buf.extend_from_slice(&ws.nbrs);
+        ws.nbr_ptr.push(ws.nbr_buf.len());
+    }
+    ws.candidates = candidates;
+    prios
+}
+
+/// Phase 3 (lines 14–16): atomic min-reduction of each candidate's
+/// priority over its (cached) closed neighborhood.
+pub fn luby_min(
+    _g: &SharedGraph,
+    ws: &mut Workspace,
+    prios: &[u64],
+    lmin: &[AtomicU64],
+    work: &mut u64,
+) {
+    for i in 0..ws.candidates.len() {
+        let nbrs = &ws.nbr_buf[ws.nbr_ptr[i]..ws.nbr_ptr[i + 1]];
+        *work += nbrs.len() as u64;
+        for &u in nbrs {
+            lmin[u as usize].fetch_min(prios[i], Relaxed);
+        }
+    }
+}
+
+/// Phase 4 (lines 18–20): a candidate is valid iff its priority equals
+/// `l_min` everywhere in its (cached) closed neighborhood. Fills
+/// `ws.my_pivots`.
+pub fn luby_validate(
+    _g: &SharedGraph,
+    ws: &mut Workspace,
+    prios: &[u64],
+    lmin: &[AtomicU64],
+    work: &mut u64,
+) {
+    ws.my_pivots.clear();
+    'cand: for i in 0..ws.candidates.len() {
+        let nbrs = &ws.nbr_buf[ws.nbr_ptr[i]..ws.nbr_ptr[i + 1]];
+        *work += nbrs.len() as u64;
+        for &u in nbrs {
+            if lmin[u as usize].load(Relaxed) != prios[i] {
+                continue 'cand;
+            }
+        }
+        ws.my_pivots.push(ws.candidates[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::mesh2d;
+
+    fn lmin_arr(n: usize) -> Vec<AtomicU64> {
+        (0..n).map(|_| AtomicU64::new(u64::MAX)).collect()
+    }
+
+    /// Single-threaded end-to-end run of the four phases; checks the
+    /// distance-2 property of the result on the initial quotient graph
+    /// (where the elimination graph is the original graph).
+    #[test]
+    fn selected_set_is_distance2_independent() {
+        let g0 = mesh2d(8, 8);
+        let g = SharedGraph::new(&g0, 1.5);
+        let aff = Affinity::new(g0.n);
+        let mut lists = ThreadLists::new(0, g0.n);
+        for v in 0..g0.n {
+            lists.insert(&aff, v, g0.degree(v));
+        }
+        let mut ws = Workspace::new(0, g0.n, 1);
+        let lmin = lmin_arr(g0.n);
+        let mut work = 0u64;
+        let amd = lists.lamd(&aff);
+        collect_candidates(&mut lists, &aff, &mut ws, amd, 2.0, 10_000, g0.n);
+        assert!(!ws.candidates.is_empty());
+        let prios = luby_prepare(&g, &mut ws, 0, &mut work);
+        luby_min(&g, &mut ws, &prios, &lmin, &mut work);
+        luby_validate(&g, &mut ws, &prios, &lmin, &mut work);
+        let set: Vec<usize> = ws.my_pivots.iter().map(|&v| v as usize).collect();
+        assert!(!set.is_empty(), "Luby round must select at least one pivot");
+        // distance-2 check on the original mesh
+        for (i, &a) in set.iter().enumerate() {
+            for &b in &set[i + 1..] {
+                assert!(!g0.neighbors(a).contains(&(b as i32)), "adjacent pivots");
+                let common = g0
+                    .neighbors(a)
+                    .iter()
+                    .filter(|x| g0.neighbors(b).contains(x))
+                    .count();
+                assert_eq!(common, 0, "pivots {a},{b} share a neighbor");
+            }
+        }
+    }
+
+    #[test]
+    fn priority_ties_break_by_index() {
+        assert!(priority(0, 5, 1) < priority(0, 5, 2));
+        assert!(priority(0, 4, 9) < priority(0, 5, 0));
+    }
+
+    #[test]
+    fn stale_rounds_read_as_infinity() {
+        // Any priority of round r is smaller than any of round r-1.
+        assert!(priority(1, 0xF_FFFF, (1 << 24) - 1) < priority(0, 0, 0));
+        assert!(priority(7, 0, 0) < priority(6, 0xF_FFFF, 123));
+    }
+
+    #[test]
+    fn candidate_window_respects_mult_and_lim() {
+        let g0 = mesh2d(6, 6);
+        let aff = Affinity::new(g0.n);
+        let mut lists = ThreadLists::new(0, g0.n);
+        for v in 0..g0.n {
+            lists.insert(&aff, v, g0.degree(v));
+        }
+        let mut ws = Workspace::new(0, g0.n, 2);
+        // amd = 2 (corners). mult = 1.0 → only degree-2 vertices.
+        collect_candidates(&mut lists, &aff, &mut ws, 2, 1.0, 100, g0.n);
+        assert_eq!(ws.candidates.len(), 4);
+        // mult = 1.5 → degrees 2 and 3.
+        collect_candidates(&mut lists, &aff, &mut ws, 2, 1.5, 100, g0.n);
+        assert_eq!(ws.candidates.len(), 4 + 4 * 4);
+        // lim caps the collection.
+        collect_candidates(&mut lists, &aff, &mut ws, 2, 1.5, 7, g0.n);
+        assert_eq!(ws.candidates.len(), 7);
+    }
+
+    #[test]
+    fn closed_neighborhood_on_initial_graph() {
+        let g0 = mesh2d(3, 3);
+        let g = SharedGraph::new(&g0, 1.0);
+        let mut out = vec![];
+        let mut work = 0;
+        closed_neighborhood(&g, 4, &mut out, &mut work);
+        let mut got: Vec<i32> = out.clone();
+        got.sort();
+        assert_eq!(got, vec![1, 3, 4, 5, 7]);
+        assert!(work > 0);
+    }
+}

@@ -1,0 +1,413 @@
+//! Concurrent per-pivot elimination — the "core AMD" of Algorithm 3.3.
+//!
+//! A thread eliminates its pivots one at a time. Distance-2 independence
+//! makes every structure it *writes* exclusively owned (see shared.rs and
+//! DESIGN.md §6); the paper's §3.3.1 elbow-claim protocol is followed:
+//! `L_me` is first collected into thread-local scratch, then exactly-sized
+//! space is claimed with a single `fetch_add`, then the connection updates
+//! are published.
+
+use std::sync::atomic::Ordering::Relaxed;
+
+use super::lists::{Affinity, ThreadLists};
+use super::shared::{SharedGraph, ST_DEAD_ELEM, ST_DEAD_VAR, ST_ELEM, ST_VAR};
+use super::workspace::Workspace;
+
+/// Outcome of attempting to eliminate one pivot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Pivot eliminated; `mass` further columns went with it.
+    Eliminated { mass: u32, merged: u32 },
+    /// Elbow room exhausted; pivot left untouched (GC requested).
+    Deferred,
+}
+
+/// Eliminate pivot `me` owned by this thread. `aggressive` enables
+/// aggressive element absorption.
+pub fn eliminate_pivot(
+    g: &SharedGraph,
+    ws: &mut Workspace,
+    lists: &mut ThreadLists,
+    aff: &Affinity,
+    me: usize,
+    aggressive: bool,
+    work: &mut u64,
+) -> Outcome {
+    debug_assert_eq!(g.st(me), ST_VAR);
+    let nv_me = g.nv_of(me);
+
+    // ---- Phase 1a: collect L_me into scratch (reads only) ---------------
+    let mark = ws.bump_epoch();
+    ws.w[me] = mark;
+    ws.lme.clear();
+    let old_pe = g.pe_of(me);
+    let old_elen = g.elen_of(me) as usize;
+    let old_len = g.len_of(me) as usize;
+    for k in old_elen..old_len {
+        let v = g.iw_at(old_pe + k);
+        let vu = v as usize;
+        if g.st(vu) == ST_VAR && ws.w[vu] != mark {
+            ws.w[vu] = mark;
+            ws.lme.push(v);
+        }
+    }
+    for k in 0..old_elen {
+        let e = g.iw_at(old_pe + k) as usize;
+        if g.st(e) != ST_ELEM {
+            continue;
+        }
+        let ep = g.pe_of(e);
+        for q in 0..g.len_of(e) as usize {
+            let v = g.iw_at(ep + q);
+            let vu = v as usize;
+            if g.st(vu) == ST_VAR && ws.w[vu] != mark {
+                ws.w[vu] = mark;
+                ws.lme.push(v);
+            }
+        }
+    }
+    let lme_len = ws.lme.len();
+    *work += (old_len + lme_len) as u64;
+
+    // ---- Phase 1b: claim exactly |L_me| elbow slots (one fetch_add) -----
+    let pme = match g.claim(lme_len) {
+        Some(off) => off,
+        None => return Outcome::Deferred,
+    };
+    for (k, &v) in ws.lme.iter().enumerate() {
+        g.iw_set(pme + k, v);
+    }
+
+    // Publish me as an element; absorb its adjacent elements.
+    for k in 0..old_elen {
+        let e = g.iw_at(old_pe + k) as usize;
+        if g.st(e) == ST_ELEM {
+            g.set_st(e, ST_DEAD_ELEM);
+            g.parent[e].store(me as i32, Relaxed);
+        }
+    }
+    g.pe[me].store(pme, Relaxed);
+    g.len[me].store(lme_len as i32, Relaxed);
+    g.elen[me].store(0, Relaxed);
+    g.set_st(me, ST_ELEM);
+    g.nel.fetch_add(nv_me as usize, Relaxed);
+    lists.remove(aff, me);
+
+    // ---- Phase 2: Algorithm 2.1 pass 1 — thread-local w(e) weights ------
+    for &vi in &ws.lme {
+        let v = vi as usize;
+        let p = g.pe_of(v);
+        let elen_v = g.elen_of(v) as usize;
+        *work += elen_v as u64;
+        for q in 0..elen_v {
+            let e = g.iw_at(p + q) as usize;
+            if g.st(e) != ST_ELEM {
+                continue;
+            }
+            if ws.w[e] >= mark {
+                ws.w[e] -= g.nv_of(v) as u64;
+            } else {
+                ws.w[e] = mark + g.deg_of(e) as u64 - g.nv_of(v) as u64;
+            }
+        }
+    }
+
+    // ---- Phase 3: pass 2 — degree update, in-place rebuild, mass elim ---
+    let mut mass: u32 = 0;
+    let mut nvpiv = nv_me;
+    ws.hash_scratch.clear();
+    let lme = std::mem::take(&mut ws.lme);
+    for &vi in &lme {
+        let v = vi as usize;
+        debug_assert_eq!(g.st(v), ST_VAR);
+        let p = g.pe_of(v);
+        let elen_v = g.elen_of(v) as usize;
+        let len_v = g.len_of(v) as usize;
+        *work += len_v as u64;
+
+        let mut deg: i64 = 0;
+        let mut hash: u64 = 0;
+        let mut pn = p;
+        for q in 0..elen_v {
+            let e = g.iw_at(p + q) as usize;
+            if g.st(e) != ST_ELEM {
+                continue;
+            }
+            debug_assert!(ws.w[e] >= mark, "pass1 must have touched e");
+            let dext = (ws.w[e] - mark) as i64;
+            if dext > 0 || !aggressive {
+                deg += dext;
+                g.iw_set(pn, e as i32);
+                pn += 1;
+                hash = hash.wrapping_add(e as u64);
+            } else {
+                // Aggressive absorption: L_e ⊆ L_me ∪ {me}; every live
+                // variable of L_e is owned by this thread (distance-2
+                // argument), so the state flip cannot race with a reader.
+                g.set_st(e, ST_DEAD_ELEM);
+                g.parent[e].store(me as i32, Relaxed);
+            }
+        }
+        let p3 = pn;
+        for q in elen_v..len_v {
+            let u = g.iw_at(p + q);
+            let uu = u as usize;
+            if g.st(uu) != ST_VAR || ws.w[uu] == mark {
+                continue;
+            }
+            deg += g.nv_of(uu) as i64;
+            g.iw_set(pn, u);
+            pn += 1;
+            hash = hash.wrapping_add(u as u64);
+        }
+
+        if deg == 0 && pn == p3 && aggressive {
+            // Mass elimination: N_v ⊆ L_me ∪ {me}.
+            g.set_st(v, ST_DEAD_VAR);
+            g.parent[v].store(me as i32, Relaxed);
+            let w = g.nv_of(v);
+            nvpiv += w;
+            g.nel.fetch_add(w as usize, Relaxed);
+            g.nv[v].store(0, Relaxed);
+            lists.remove(aff, v);
+            mass += w as u32;
+            continue;
+        }
+        // Splice me at the element/variable boundary (amd_2's relocation;
+        // at least one entry was dropped, so the slot exists).
+        debug_assert!(pn - p < len_v, "rebuild must shrink v's list");
+        if pn > p3 {
+            let first_var = g.iw_at(p3);
+            g.iw_set(pn, first_var);
+        }
+        g.iw_set(p3, me as i32);
+        pn += 1;
+        hash = hash.wrapping_add(me as u64);
+        g.elen[v].store((p3 - p + 1) as i32, Relaxed);
+        g.len[v].store((pn - p) as i32, Relaxed);
+
+        if deg == 0 && pn - p == 1 {
+            // Non-aggressive-mode mass elimination (E_v = {me} only).
+            g.set_st(v, ST_DEAD_VAR);
+            g.parent[v].store(me as i32, Relaxed);
+            let w = g.nv_of(v);
+            nvpiv += w;
+            g.nel.fetch_add(w as usize, Relaxed);
+            g.nv[v].store(0, Relaxed);
+            lists.remove(aff, v);
+            mass += w as u32;
+            continue;
+        }
+
+        // Partial degree; the |L_me \ v| term is added in Phase 5.
+        let d = (g.deg_of(v) as i64).min(deg).max(0);
+        g.degree[v].store(d as i32, Relaxed);
+        ws.hash_scratch.push((hash, vi));
+    }
+    ws.lme = lme;
+
+    // ---- Phase 4: supervariable detection (within L_me only) ------------
+    let merged = detect_supervariables(g, ws, lists, aff, &mut nvpiv);
+
+    // ---- Phase 5: compact L_me, final degrees, reinsert survivors -------
+    let mut kept = 0usize;
+    let mut degme_final = 0i32;
+    let lme = std::mem::take(&mut ws.lme);
+    for &vi in &lme {
+        if g.st(vi as usize) == ST_VAR {
+            g.iw_set(pme + kept, vi);
+            kept += 1;
+            degme_final += g.nv_of(vi as usize);
+        }
+    }
+    g.len[me].store(kept as i32, Relaxed);
+    g.degree[me].store(degme_final, Relaxed);
+    g.nv[me].store(nvpiv, Relaxed);
+    if kept == 0 {
+        g.set_st(me, ST_DEAD_ELEM);
+        g.parent[me].store(-1, Relaxed);
+    }
+    let nel_now = g.nel.load(Relaxed);
+    for k in 0..kept {
+        let v = g.iw_at(pme + k) as usize;
+        let ext = (degme_final - g.nv_of(v)) as i64;
+        let bound = g.n as i64 - nel_now as i64 - g.nv_of(v) as i64;
+        let d = (g.deg_of(v) as i64 + ext).min(bound).max(1) as usize;
+        g.degree[v].store(d as i32, Relaxed);
+        lists.insert(aff, v, d);
+    }
+    ws.lme = lme;
+    *work += kept as u64;
+
+    Outcome::Eliminated { mass, merged }
+}
+
+/// Hash-grouped exact-comparison supervariable merging among the pivot's
+/// updated neighbors (`ws.hash_scratch` holds `(hash, v)` pairs).
+fn detect_supervariables(
+    g: &SharedGraph,
+    ws: &mut Workspace,
+    lists: &mut ThreadLists,
+    aff: &Affinity,
+    _nvpiv: &mut i32,
+) -> u32 {
+    let mut merged = 0u32;
+    ws.hash_scratch.sort_unstable();
+    let mut scratch = std::mem::take(&mut ws.hash_scratch);
+    let mut i = 0;
+    while i < scratch.len() {
+        let mut j = i + 1;
+        while j < scratch.len() && scratch[j].0 == scratch[i].0 {
+            j += 1;
+        }
+        // Group [i, j) shares a hash; pairwise-compare.
+        for a_idx in i..j {
+            let a = scratch[a_idx].1 as usize;
+            if g.st(a) != ST_VAR {
+                continue;
+            }
+            for b_idx in a_idx + 1..j {
+                let b = scratch[b_idx].1 as usize;
+                if g.st(b) != ST_VAR {
+                    continue;
+                }
+                if g.elen_of(a) == g.elen_of(b)
+                    && g.len_of(a) == g.len_of(b)
+                    && lists_identical(g, ws, a, b)
+                {
+                    // Merge b into a. Order matters for concurrent readers:
+                    // grow a first, then kill b (over-count, never under-).
+                    let w = g.nv_of(b);
+                    g.nv[a].fetch_add(w, Relaxed);
+                    g.nv[b].store(0, Relaxed);
+                    g.set_st(b, ST_DEAD_VAR);
+                    g.parent[b].store(a as i32, Relaxed);
+                    lists.remove(aff, b);
+                    merged += w as u32;
+                }
+            }
+        }
+        i = j;
+    }
+    scratch.clear();
+    ws.hash_scratch = scratch;
+    merged
+}
+
+/// Exact set comparison of two owned variables' lists via a fresh epoch.
+fn lists_identical(g: &SharedGraph, ws: &mut Workspace, a: usize, b: usize) -> bool {
+    let mark = ws.bump_epoch();
+    let (pa, la) = (g.pe_of(a), g.len_of(a) as usize);
+    for k in 0..la {
+        ws.w[g.iw_at(pa + k) as usize] = mark;
+    }
+    let (pb, lb) = (g.pe_of(b), g.len_of(b) as usize);
+    debug_assert_eq!(la, lb);
+    (0..lb).all(|k| ws.w[g.iw_at(pb + k) as usize] == mark)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::mesh2d;
+
+    /// Single-threaded elimination through the concurrent structures must
+    /// behave like the sequential engine: eliminate everything, produce a
+    /// valid absorption forest.
+    #[test]
+    fn single_thread_full_elimination() {
+        let g0 = mesh2d(6, 6);
+        let g = SharedGraph::new(&g0, 1.5);
+        let aff = Affinity::new(g0.n);
+        let mut lists = ThreadLists::new(0, g0.n);
+        for v in 0..g0.n {
+            lists.insert(&aff, v, g0.degree(v));
+        }
+        let mut ws = Workspace::new(0, g0.n, 3);
+        let mut work = 0u64;
+        let mut elim_order = vec![];
+        while g.nel.load(Relaxed) < g0.n {
+            let d = lists.lamd(&aff);
+            assert!(d < g0.n, "lists drained before all columns eliminated");
+            let mut cand = vec![];
+            lists.get(&aff, d, &mut cand);
+            let me = cand[0] as usize;
+            match eliminate_pivot(&g, &mut ws, &mut lists, &aff, me, true, &mut work) {
+                Outcome::Eliminated { .. } => elim_order.push(me as i32),
+                Outcome::Deferred => panic!("elbow 1.5 must suffice on a mesh"),
+            }
+        }
+        assert_eq!(g.nel.load(Relaxed), g0.n);
+        assert!(work > 0);
+        // Every column is a pivot or transitively absorbed into one.
+        let mut is_pivot = vec![false; g0.n];
+        for &e in &elim_order {
+            is_pivot[e as usize] = true;
+        }
+        for v in 0..g0.n {
+            let mut x = v;
+            let mut hops = 0;
+            while !is_pivot[x] {
+                let p = g.parent[x].load(Relaxed);
+                assert!(p >= 0, "column {v} unaccounted");
+                x = p as usize;
+                hops += 1;
+                assert!(hops <= g0.n);
+            }
+        }
+    }
+
+    #[test]
+    fn deferral_on_zero_elbow() {
+        let g0 = mesh2d(5, 5);
+        let g = SharedGraph::new(&g0, 0.0);
+        // Fill the (minimal) elbow so any claim fails.
+        let avail = g.iw.len() - g.pfree.load(Relaxed);
+        g.claim(avail).unwrap();
+        let aff = Affinity::new(g0.n);
+        let mut lists = ThreadLists::new(0, g0.n);
+        for v in 0..g0.n {
+            lists.insert(&aff, v, g0.degree(v));
+        }
+        let mut ws = Workspace::new(0, g0.n, 3);
+        let mut work = 0u64;
+        // Vertex 0 has neighbors, so its L_me claim must fail.
+        assert_eq!(
+            eliminate_pivot(&g, &mut ws, &mut lists, &aff, 0, true, &mut work),
+            Outcome::Deferred
+        );
+        assert!(g.gc_requested.load(Relaxed));
+        assert_eq!(g.st(0), ST_VAR, "deferred pivot must be untouched");
+        assert_eq!(g.nel.load(Relaxed), 0);
+    }
+
+    #[test]
+    fn mass_elimination_fires_on_cliques() {
+        // K4: first pivot absorbs everything via mass elimination.
+        let mut edges = vec![];
+        for i in 0..4 {
+            for j in i + 1..4 {
+                edges.push((i, j));
+            }
+        }
+        let g0 = crate::graph::csr::SymGraph::from_edges(4, &edges);
+        let g = SharedGraph::new(&g0, 1.5);
+        let aff = Affinity::new(4);
+        let mut lists = ThreadLists::new(0, 4);
+        for v in 0..4 {
+            lists.insert(&aff, v, g0.degree(v));
+        }
+        let mut ws = Workspace::new(0, 4, 1);
+        let mut work = 0;
+        // K4 \ {0} is a clique covered entirely by the new element, so all
+        // three neighbors mass-eliminate together with the pivot.
+        match eliminate_pivot(&g, &mut ws, &mut lists, &aff, 0, true, &mut work) {
+            Outcome::Eliminated { mass, merged } => {
+                assert_eq!(mass, 3);
+                assert_eq!(merged, 0);
+            }
+            o => panic!("unexpected outcome {o:?}"),
+        }
+        assert_eq!(g.nel.load(Relaxed), 4);
+    }
+}

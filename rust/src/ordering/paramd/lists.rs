@@ -1,0 +1,270 @@
+//! Concurrent approximate-degree lists — Algorithm 3.1 of the paper,
+//! verbatim.
+//!
+//! Each thread owns `n` doubly-linked degree lists plus a `loc` array
+//! recording which local list a variable sits in and a local `lamd`
+//! (minimum approximate degree among locally maintained variables). A
+//! single shared `affinity` array records which thread holds the freshest
+//! information for each variable; stale entries in other threads' lists
+//! are reclaimed lazily during [`ThreadLists::get`] traversals.
+//!
+//! Distance-2 independence guarantees a variable is updated by at most one
+//! thread per elimination round, so `Insert`/`Remove` for a given `v` never
+//! race; the only cross-thread traffic is the `affinity` flag.
+
+use std::sync::atomic::{AtomicI32, Ordering::Relaxed};
+
+/// Shared affinity flags: `affinity[v] = tid` of the owner of the freshest
+/// degree info for `v`, or -1 when `v` has been removed (eliminated).
+pub struct Affinity {
+    flags: Vec<AtomicI32>,
+}
+
+impl Affinity {
+    pub fn new(n: usize) -> Self {
+        Self {
+            flags: (0..n).map(|_| AtomicI32::new(-1)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, v: usize) -> i32 {
+        self.flags[v].load(Relaxed)
+    }
+
+    #[inline]
+    pub fn set(&self, v: usize, tid: i32) {
+        self.flags[v].store(tid, Relaxed);
+    }
+}
+
+/// One thread's degree lists (Algorithm 3.1 state for a single `tid`).
+pub struct ThreadLists {
+    pub tid: i32,
+    n: usize,
+    /// `dhead[d]` -> first variable in the local degree-`d` list.
+    dhead: Vec<i32>,
+    dnext: Vec<i32>,
+    dprev: Vec<i32>,
+    /// Local degree list each variable belongs to, -1 if none (the paper's
+    /// `loc` array).
+    loc: Vec<i32>,
+    /// Local minimum approximate degree (the paper's `lamd`).
+    lamd: usize,
+}
+
+impl ThreadLists {
+    pub fn new(tid: usize, n: usize) -> Self {
+        Self {
+            tid: tid as i32,
+            n,
+            dhead: vec![-1; n + 1],
+            dnext: vec![-1; n],
+            dprev: vec![-1; n],
+            loc: vec![-1; n],
+            lamd: n,
+        }
+    }
+
+    /// Algorithm 3.1 `REMOVE(tid, v)` — O(1): invalidate every copy of `v`
+    /// by clearing the affinity; physical entries are reclaimed lazily.
+    pub fn remove(&mut self, aff: &Affinity, v: usize) {
+        debug_assert!(v < self.n);
+        aff.set(v, -1);
+    }
+
+    /// Algorithm 3.1 `INSERT(tid, v, deg)`.
+    pub fn insert(&mut self, aff: &Affinity, v: usize, deg: usize) {
+        let deg = deg.min(self.n);
+        if self.loc[v] != -1 {
+            self.unlink(v, self.loc[v] as usize);
+        }
+        // Link v at the head of dlist[deg].
+        let h = self.dhead[deg];
+        self.dnext[v] = h;
+        self.dprev[v] = -1;
+        if h != -1 {
+            self.dprev[h as usize] = v as i32;
+        }
+        self.dhead[deg] = v as i32;
+        self.loc[v] = deg as i32;
+        aff.set(v, self.tid);
+        self.lamd = self.lamd.min(deg);
+    }
+
+    fn unlink(&mut self, v: usize, d: usize) {
+        let prev = self.dprev[v];
+        let next = self.dnext[v];
+        if prev != -1 {
+            self.dnext[prev as usize] = next;
+        } else {
+            debug_assert_eq!(self.dhead[d], v as i32);
+            self.dhead[d] = next;
+        }
+        if next != -1 {
+            self.dprev[next as usize] = prev;
+        }
+        self.dnext[v] = -1;
+        self.dprev[v] = -1;
+    }
+
+    /// Algorithm 3.1 `GET(tid, deg)`: collect the live entries of the local
+    /// degree-`deg` list into `out`, lazily unlinking entries whose
+    /// affinity moved to another thread (or -1).
+    pub fn get(&mut self, aff: &Affinity, deg: usize, out: &mut Vec<i32>) {
+        let mut v = self.dhead[deg.min(self.n)];
+        while v != -1 {
+            let vu = v as usize;
+            let next = self.dnext[vu];
+            if aff.get(vu) != self.tid {
+                self.unlink(vu, deg);
+                self.loc[vu] = -1;
+            } else {
+                out.push(v);
+            }
+            v = next;
+        }
+    }
+
+    /// Algorithm 3.1 `LAMD(tid)`: advance past empty/stale lists and return
+    /// the local minimum approximate degree (`n` when empty).
+    ///
+    /// Allocation-free: walks each list only until the first *live* entry,
+    /// purging stale ones on the way (they would be purged by the next
+    /// `get` anyway) — EXPERIMENTS.md §Perf change #3.
+    pub fn lamd(&mut self, aff: &Affinity) -> usize {
+        while self.lamd < self.n {
+            let mut v = self.dhead[self.lamd];
+            let mut found = false;
+            while v != -1 {
+                let vu = v as usize;
+                let next = self.dnext[vu];
+                if aff.get(vu) == self.tid {
+                    found = true;
+                    break;
+                }
+                self.unlink(vu, self.lamd);
+                self.loc[vu] = -1;
+                v = next;
+            }
+            if found {
+                return self.lamd;
+            }
+            self.lamd += 1;
+        }
+        self.n
+    }
+
+    /// Number of live entries currently linked (test helper; O(n)).
+    #[cfg(test)]
+    pub fn live_count(&self, aff: &Affinity) -> usize {
+        (0..=self.n)
+            .map(|d| {
+                let mut c = 0;
+                let mut v = self.dhead[d];
+                while v != -1 {
+                    if aff.get(v as usize) == self.tid {
+                        c += 1;
+                    }
+                    v = self.dnext[v as usize];
+                }
+                c
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let aff = Affinity::new(10);
+        let mut l = ThreadLists::new(0, 10);
+        l.insert(&aff, 3, 5);
+        l.insert(&aff, 4, 5);
+        l.insert(&aff, 7, 2);
+        let mut out = vec![];
+        l.get(&aff, 5, &mut out);
+        out.sort();
+        assert_eq!(out, vec![3, 4]);
+        assert_eq!(l.lamd(&aff), 2);
+    }
+
+    #[test]
+    fn reinsert_moves_between_lists() {
+        let aff = Affinity::new(10);
+        let mut l = ThreadLists::new(0, 10);
+        l.insert(&aff, 3, 5);
+        l.insert(&aff, 3, 2); // degree update moves it
+        let mut out = vec![];
+        l.get(&aff, 5, &mut out);
+        assert!(out.is_empty());
+        l.get(&aff, 2, &mut out);
+        assert_eq!(out, vec![3]);
+    }
+
+    #[test]
+    fn remove_invalidates_without_unlinking() {
+        let aff = Affinity::new(10);
+        let mut l = ThreadLists::new(0, 10);
+        l.insert(&aff, 3, 5);
+        l.remove(&aff, 3);
+        let mut out = vec![];
+        l.get(&aff, 5, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(l.live_count(&aff), 0);
+    }
+
+    #[test]
+    fn stale_entries_reclaimed_across_threads() {
+        // Thread 0 inserts v, thread 1 takes it over; thread 0's entry is
+        // stale and must be purged by get().
+        let aff = Affinity::new(10);
+        let mut t0 = ThreadLists::new(0, 10);
+        let mut t1 = ThreadLists::new(1, 10);
+        t0.insert(&aff, 5, 4);
+        t1.insert(&aff, 5, 7); // fresher info on thread 1
+        let mut out = vec![];
+        t0.get(&aff, 4, &mut out);
+        assert!(out.is_empty(), "stale entry must not be returned");
+        t1.get(&aff, 7, &mut out);
+        assert_eq!(out, vec![5]);
+    }
+
+    #[test]
+    fn lamd_skips_empty_lists() {
+        let aff = Affinity::new(20);
+        let mut l = ThreadLists::new(0, 20);
+        assert_eq!(l.lamd(&aff), 20); // empty
+        l.insert(&aff, 1, 15);
+        assert_eq!(l.lamd(&aff), 15);
+        l.insert(&aff, 2, 3);
+        assert_eq!(l.lamd(&aff), 3);
+        l.remove(&aff, 2);
+        assert_eq!(l.lamd(&aff), 15);
+    }
+
+    #[test]
+    fn lamd_is_monotone_after_removals() {
+        let aff = Affinity::new(8);
+        let mut l = ThreadLists::new(0, 8);
+        l.insert(&aff, 0, 1);
+        l.insert(&aff, 1, 4);
+        l.remove(&aff, 0);
+        assert_eq!(l.lamd(&aff), 4);
+        l.remove(&aff, 1);
+        assert_eq!(l.lamd(&aff), 8);
+    }
+
+    #[test]
+    fn degree_clamped_to_n() {
+        let aff = Affinity::new(4);
+        let mut l = ThreadLists::new(0, 4);
+        l.insert(&aff, 2, 1000); // clamped into bucket n
+        let mut out = vec![];
+        l.get(&aff, 1000, &mut out);
+        assert_eq!(out, vec![2]);
+    }
+}

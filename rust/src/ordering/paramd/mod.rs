@@ -1,0 +1,571 @@
+//! ParAMD — the paper's contribution (§3): parallel approximate minimum
+//! degree via multiple elimination on distance-2 independent sets.
+//!
+//! Algorithm 3.3 round structure, executed by `threads` OS threads
+//! synchronized with barriers:
+//!
+//! 1. every thread publishes its local minimum approximate degree
+//!    (`LAMD`, Algorithm 3.1) — the global `amd` is their minimum;
+//! 2. candidates with degree in `[amd, ⌊mult·amd⌋]` are gathered from the
+//!    per-thread degree lists, at most `lim` per thread;
+//! 3. one iteration of the distance-2 Luby analog (Algorithm 3.2) selects
+//!    a distance-2 independent pivot set `D`;
+//! 4. each thread eliminates the pivots it proposed, with concurrent
+//!    connection updates (single elbow claim per pivot, §3.3.1) and
+//!    concurrent degree lists (§3.3.2);
+//! 5. a stop-the-world GC runs at the round boundary if any claim failed.
+//!
+//! Memory: O(n·t) for the per-thread lists and `w` arrays plus the
+//! `1.5×nnz`-style elbow — the paper's §3.5.1 budget.
+
+pub mod cost;
+pub mod dist2;
+pub mod elim;
+pub mod lists;
+pub mod shared;
+pub mod workspace;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::Barrier;
+
+use crate::graph::csr::SymGraph;
+use crate::ordering::{Ordering, OrderingResult, OrderingStats};
+use crate::util::chunk_range;
+use crate::util::timer::Timer;
+
+use elim::Outcome;
+use lists::{Affinity, ThreadLists};
+use shared::SharedGraph;
+use workspace::{RoundWork, Workspace};
+
+/// ParAMD configuration (paper defaults: `mult = 1.1`,
+/// `lim = 8192 / threads`, elbow `1.5`).
+#[derive(Clone, Copy, Debug)]
+pub struct ParAmd {
+    pub threads: usize,
+    /// Multiplicative degree-relaxation factor (§3.2).
+    pub mult: f64,
+    /// Total candidate budget per round; each thread collects at most
+    /// `lim_total / threads` (§4.3's heuristic). `0` selects the
+    /// scale-adapted default `clamp(n/64, 64, 8192)` — the paper's 8192
+    /// was tuned for n ≈ 10⁶–10⁷ (0.03–0.8% of n); keeping the *fraction*
+    /// comparable preserves the ~1.1× fill-ratio target at any scale.
+    pub lim_total: usize,
+    /// Elbow-room factor over nnz (§3.3.1's empirical 1.5).
+    pub elbow: f64,
+    /// Aggressive element absorption (as in SuiteSparse).
+    pub aggressive: bool,
+    /// Seed for the Luby priorities.
+    pub seed: u64,
+    /// §5 future-work extension: dynamically adapt the relaxation factor
+    /// when low workload is detected. When the last round's distance-2
+    /// set was smaller than the thread count, `mult` is raised (up to
+    /// `adaptive_mult_max`); when parallelism is plentiful it decays back
+    /// toward the configured base, bounding the fill-quality cost.
+    pub adaptive: bool,
+    /// Upper bound for the adapted relaxation factor.
+    pub adaptive_mult_max: f64,
+}
+
+impl ParAmd {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            mult: 1.1,
+            lim_total: 0, // auto: clamp(n/64, 64, 8192)
+            elbow: 1.5,
+            aggressive: true,
+            seed: 0x9a_2a_3d,
+            adaptive: false,
+            adaptive_mult_max: 1.5,
+        }
+    }
+
+    /// Enable the §5 future-work dynamic-relaxation extension.
+    pub fn with_adaptive(mut self) -> Self {
+        self.adaptive = true;
+        self
+    }
+
+    pub fn with_mult(mut self, mult: f64) -> Self {
+        self.mult = mult;
+        self
+    }
+
+    pub fn with_lim_total(mut self, lim: usize) -> Self {
+        self.lim_total = lim;
+        self
+    }
+
+    pub fn with_elbow(mut self, elbow: f64) -> Self {
+        self.elbow = elbow;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+impl Ordering for ParAmd {
+    fn name(&self) -> &'static str {
+        "paramd"
+    }
+
+    fn order(&self, g: &SymGraph) -> OrderingResult {
+        self.order_detailed(g).0
+    }
+}
+
+/// Detailed per-run data beyond [`OrderingResult`]: the inputs to the
+/// Figure 4.1 / 4.2 analyses and the cost model.
+#[derive(Clone, Debug, Default)]
+pub struct ParAmdDetail {
+    /// `work[r][tid]` — per-round per-thread work counters.
+    pub round_work: Vec<Vec<RoundWork>>,
+    /// Per-round distance-2 set sizes (Figure 4.2).
+    pub set_sizes: Vec<u32>,
+    /// Wall-clock seconds per thread spent in selection vs elimination.
+    pub select_secs: Vec<f64>,
+    pub elim_secs: Vec<f64>,
+    /// Modeled parallel speedup from the critical-path cost model.
+    pub model_speedup: f64,
+}
+
+struct ThreadOutput {
+    ws: Workspace,
+    elim_log: Vec<(u32, i32)>, // (round, pivot) in local order
+    select_secs: f64,
+    elim_secs: f64,
+}
+
+impl ParAmd {
+    /// Run the ordering and return the detailed counters as well.
+    pub fn order_detailed(&self, g: &SymGraph) -> (OrderingResult, ParAmdDetail) {
+        let n = g.n;
+        let t = self.threads.max(1);
+        let lim_total = if self.lim_total == 0 {
+            (n / 64).clamp(64, 8192)
+        } else {
+            self.lim_total
+        };
+        let lim = (lim_total / t).max(1);
+        let total_timer = Timer::new();
+
+        if n == 0 {
+            return (OrderingResult::new(vec![]), ParAmdDetail::default());
+        }
+
+        assert!(
+            n < dist2::MAX_VERTICES,
+            "ParAMD supports up to 2^24 vertices (priority packing)"
+        );
+        let sg = SharedGraph::new(g, self.elbow);
+        let aff = Affinity::new(n);
+        // u64::MAX == "no candidate yet" (stale rounds also read as +∞,
+        // see dist2::priority).
+        let lmin: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(u64::MAX)).collect();
+        let lamds: Vec<AtomicUsize> = (0..t).map(|_| AtomicUsize::new(n)).collect();
+        let sizes: Vec<AtomicUsize> = (0..t).map(|_| AtomicUsize::new(0)).collect();
+        let progress_stall = AtomicUsize::new(0);
+        // Adapted relaxation factor in fixed-point (×1e6), leader-updated.
+        let adaptive_mult = AtomicUsize::new((self.mult * 1e6) as usize);
+        let poison = std::sync::atomic::AtomicBool::new(false);
+        let gc_count = AtomicUsize::new(0);
+        let barrier = Barrier::new(t);
+        let set_sizes_leader: std::sync::Mutex<Vec<u32>> = std::sync::Mutex::new(Vec::new());
+
+        let outputs: Vec<ThreadOutput> = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(t);
+            for tid in 0..t {
+                let sg = &sg;
+                let aff = &aff;
+                let lmin = &lmin;
+                let lamds = &lamds;
+                let sizes = &sizes;
+                let barrier = &barrier;
+                let progress_stall = &progress_stall;
+                let adaptive_mult = &adaptive_mult;
+                let poison = &poison;
+                let gc_count = &gc_count;
+                let set_sizes_leader = &set_sizes_leader;
+                let cfg = *self;
+                handles.push(scope.spawn(move || {
+                    run_thread(
+                        tid, t, lim, cfg, g, sg, aff, lmin, lamds, sizes, barrier,
+                        progress_stall, adaptive_mult, poison, gc_count, set_sizes_leader,
+                    )
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        assert!(
+            !poison.load(Relaxed),
+            "ParAMD stalled: elbow room exhausted even after GC — increase \
+             `elbow` (paper §3.3.1: the 1.5 factor is empirical and \
+             user-adjustable)"
+        );
+        assert_eq!(sg.nel.load(Relaxed), n, "not all columns eliminated");
+
+        // Merge elimination logs: (round, tid, local order) — deterministic
+        // given identical per-thread logs.
+        let mut merged: Vec<(u32, usize, usize, i32)> = Vec::new();
+        for (tid, out) in outputs.iter().enumerate() {
+            for (seq, &(round, p)) in out.elim_log.iter().enumerate() {
+                merged.push((round, tid, seq, p));
+            }
+        }
+        merged.sort_unstable();
+        let elim_order: Vec<i32> = merged.iter().map(|&(_, _, _, p)| p).collect();
+        let parent: Vec<i32> = sg.parent.iter().map(|a| a.load(Relaxed)).collect();
+        let perm = crate::ordering::rebuild_perm(n, &elim_order, &parent);
+
+        // Assemble detail + stats.
+        let rounds = outputs
+            .iter()
+            .map(|o| o.ws.work_log.len())
+            .max()
+            .unwrap_or(0);
+        let mut round_work = vec![vec![RoundWork::default(); t]; rounds];
+        for (tid, out) in outputs.iter().enumerate() {
+            for (r, w) in out.ws.work_log.iter().enumerate() {
+                round_work[r][tid] = *w;
+            }
+        }
+        let set_sizes = set_sizes_leader.into_inner().unwrap();
+        let model_speedup = cost::model_speedup(&round_work, cost::DEFAULT_BARRIER_COST);
+
+        let mut stats = OrderingStats {
+            rounds: rounds as u64,
+            pivots: elim_order.len() as u64,
+            set_sizes: set_sizes.clone(),
+            gc_count: gc_count.load(Relaxed) as u64,
+            work_words: round_work
+                .iter()
+                .flatten()
+                .map(|w| w.select + w.elim)
+                .sum(),
+            thread_work: outputs
+                .iter()
+                .map(|o| {
+                    vec![
+                        o.ws.work_log.iter().map(|w| w.select).sum::<u64>(),
+                        o.ws.work_log.iter().map(|w| w.elim).sum::<u64>(),
+                    ]
+                })
+                .collect(),
+            modeled_time: 0.0,
+        };
+        let total = total_timer.secs();
+        let select_total: f64 = outputs.iter().map(|o| o.select_secs).sum();
+        let elim_total: f64 = outputs.iter().map(|o| o.elim_secs).sum();
+        stats.modeled_time = if model_speedup > 0.0 {
+            (select_total + elim_total) / model_speedup
+        } else {
+            0.0
+        };
+
+        let mut r = OrderingResult::new(perm);
+        r.stats = stats;
+        r.phases.add("select", select_total);
+        r.phases.add("core", elim_total);
+        r.phases
+            .add("other", (total - select_total - elim_total).max(0.0));
+        let detail = ParAmdDetail {
+            round_work,
+            set_sizes,
+            select_secs: outputs.iter().map(|o| o.select_secs).collect(),
+            elim_secs: outputs.iter().map(|o| o.elim_secs).collect(),
+            model_speedup,
+        };
+        (r, detail)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_thread(
+    tid: usize,
+    t: usize,
+    lim: usize,
+    cfg: ParAmd,
+    g: &SymGraph,
+    sg: &SharedGraph,
+    aff: &Affinity,
+    lmin: &[AtomicU64],
+    lamds: &[AtomicUsize],
+    sizes: &[AtomicUsize],
+    barrier: &Barrier,
+    progress_stall: &AtomicUsize,
+    adaptive_mult: &AtomicUsize,
+    poison: &std::sync::atomic::AtomicBool,
+    gc_count: &AtomicUsize,
+    set_sizes_leader: &std::sync::Mutex<Vec<u32>>,
+) -> ThreadOutput {
+    let n = g.n;
+    let mut lists = ThreadLists::new(tid, n);
+    let mut ws = Workspace::new(tid, n, cfg.seed);
+    let mut elim_log: Vec<(u32, i32)> = Vec::new();
+    let mut select_secs = 0.0;
+    let mut elim_secs = 0.0;
+
+    // Initial population: static chunk of the vertices.
+    let (lo, hi) = chunk_range(n, t, tid);
+    for v in lo..hi {
+        lists.insert(aff, v, g.degree(v));
+    }
+
+    let mut round: u32 = 0;
+    loop {
+        let tsel = Timer::new();
+        // Phase A: global minimum approximate degree.
+        lamds[tid].store(lists.lamd(aff), Relaxed);
+        barrier.wait();
+        let amd = lamds.iter().map(|a| a.load(Relaxed)).min().unwrap();
+        if amd >= n {
+            break; // no live variables anywhere
+        }
+
+        // Phase B: candidates + Luby distance-2 independent set. The
+        // round-stamped priorities make explicit l_min resets (and their
+        // barrier) unnecessary.
+        assert!(round <= dist2::MAX_ROUNDS, "round counter overflow");
+        let mut work = RoundWork::default();
+        let mult = if cfg.adaptive {
+            adaptive_mult.load(Relaxed) as f64 / 1e6
+        } else {
+            cfg.mult
+        };
+        dist2::collect_candidates(&mut lists, aff, &mut ws, amd, mult, lim, n);
+        let prios = dist2::luby_prepare(sg, &mut ws, round, &mut work.select);
+        dist2::luby_min(sg, &mut ws, &prios, lmin, &mut work.select);
+        barrier.wait();
+        dist2::luby_validate(sg, &mut ws, &prios, lmin, &mut work.select);
+        select_secs += tsel.secs();
+
+        // Phase C: eliminate this thread's pivots.
+        let telim = Timer::new();
+        let mut eliminated_here: usize = 0;
+        let pivots = std::mem::take(&mut ws.my_pivots);
+        for &p in &pivots {
+            if sg.st(p as usize) != shared::ST_VAR {
+                debug_assert!(false, "pivot died before elimination");
+                continue;
+            }
+            match elim::eliminate_pivot(
+                sg,
+                &mut ws,
+                &mut lists,
+                aff,
+                p as usize,
+                cfg.aggressive,
+                &mut work.elim,
+            ) {
+                Outcome::Eliminated { .. } => {
+                    elim_log.push((round, p));
+                    eliminated_here += 1;
+                }
+                Outcome::Deferred => break, // elbow exhausted; stop batch
+            }
+        }
+        ws.my_pivots = pivots;
+        work.pivots = eliminated_here as u32;
+        sizes[tid].store(eliminated_here, Relaxed);
+        ws.work_log.push(work);
+        elim_secs += telim.secs();
+        barrier.wait();
+
+        // Phase D: leader bookkeeping — GC, set sizes, stall detection.
+        if tid == 0 {
+            let total: usize = sizes.iter().map(|s| s.load(Relaxed)).sum();
+            if total > 0 {
+                set_sizes_leader.lock().unwrap().push(total as u32);
+                progress_stall.store(0, Relaxed);
+            } else {
+                progress_stall.fetch_add(1, Relaxed);
+            }
+            if sg.gc_requested.load(Relaxed) {
+                sg.garbage_collect_exclusive();
+                gc_count.fetch_add(1, Relaxed);
+            }
+            if cfg.adaptive {
+                // §5 extension: widen the degree window when the round was
+                // starved of parallelism; relax back otherwise.
+                let total: usize = sizes.iter().map(|s| s.load(Relaxed)).sum();
+                let cur = adaptive_mult.load(Relaxed) as f64 / 1e6;
+                let next = if total < t {
+                    (cur * 1.05).min(cfg.adaptive_mult_max)
+                } else if total > 4 * t {
+                    (cur * 0.98).max(cfg.mult)
+                } else {
+                    cur
+                };
+                adaptive_mult.store((next * 1e6) as usize, Relaxed);
+            }
+            if progress_stall.load(Relaxed) >= 3 {
+                // Elbow exhausted and GC is no longer reclaiming anything:
+                // poison the run so every thread exits at the next check
+                // (a direct panic here would strand peers at the barrier).
+                poison.store(true, Relaxed);
+            }
+        }
+        barrier.wait();
+        if poison.load(Relaxed) {
+            break;
+        }
+        round += 1;
+    }
+
+    ThreadOutput {
+        ws,
+        elim_log,
+        select_secs,
+        elim_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{mesh2d, mesh3d, random_graph};
+    use crate::ordering::test_support::check_ordering_contract;
+    use crate::ordering::{amd_seq::AmdSeq, Ordering as _};
+    use crate::symbolic::fill_in;
+
+    #[test]
+    fn single_thread_valid_and_reasonable() {
+        let g = mesh2d(16, 16);
+        let r = ParAmd::new(1).order(&g);
+        check_ordering_contract(&g, &r);
+        let f_par = fill_in(&g, &r.perm) as f64;
+        let f_seq = fill_in(&g, &AmdSeq::default().order(&g).perm) as f64;
+        assert!(f_par <= f_seq * 1.6 + 100.0, "par={f_par} seq={f_seq}");
+    }
+
+    #[test]
+    fn multi_thread_valid_permutations() {
+        let g = mesh2d(20, 20);
+        for t in [2, 4, 8] {
+            let r = ParAmd::new(t).order(&g);
+            check_ordering_contract(&g, &r);
+        }
+    }
+
+    #[test]
+    fn random_graphs_many_threads() {
+        for seed in 0..4 {
+            let g = random_graph(400, 6, seed);
+            let r = ParAmd::new(4).with_seed(seed).order(&g);
+            check_ordering_contract(&g, &r);
+        }
+    }
+
+    #[test]
+    fn mesh3d_quality_within_paper_band() {
+        // The paper reports fill ratios of 1.01–1.19× over sequential AMD
+        // (Table 4.2) with mult=1.1; allow a wider band at mini scale.
+        let g = mesh3d(9, 9, 9);
+        let f_seq = fill_in(&g, &AmdSeq::default().order(&g).perm) as f64;
+        let r = ParAmd::new(4).order(&g);
+        check_ordering_contract(&g, &r);
+        let f_par = fill_in(&g, &r.perm) as f64;
+        let ratio = f_par / f_seq;
+        assert!(ratio < 1.6, "fill ratio {ratio:.3} out of band");
+    }
+
+    #[test]
+    fn multiple_elimination_reduces_rounds() {
+        let g = mesh2d(24, 24);
+        let r = ParAmd::new(4).order(&g);
+        assert!(r.stats.rounds > 0);
+        assert!(
+            (r.stats.rounds as usize) < g.n / 2,
+            "rounds {} too close to n {}",
+            r.stats.rounds,
+            g.n
+        );
+        assert!(!r.stats.set_sizes.is_empty());
+        let total: u32 = r.stats.set_sizes.iter().sum();
+        assert_eq!(total as u64, r.stats.pivots);
+    }
+
+    #[test]
+    fn mult_relaxation_grows_sets() {
+        let g = mesh3d(8, 8, 8);
+        let avg = |mult: f64| {
+            let r = ParAmd::new(4).with_mult(mult).order(&g);
+            let s = &r.stats.set_sizes;
+            s.iter().map(|&x| x as f64).sum::<f64>() / s.len() as f64
+        };
+        let a10 = avg(1.0);
+        let a12 = avg(1.2);
+        assert!(
+            a12 > a10,
+            "relaxed sets should be larger: mult1.0={a10:.1} mult1.2={a12:.1}"
+        );
+    }
+
+    #[test]
+    fn tiny_elbow_triggers_gc_and_still_completes() {
+        let g = mesh2d(30, 30);
+        let r = ParAmd::new(2).with_elbow(0.30).order(&g);
+        check_ordering_contract(&g, &r);
+        assert!(r.stats.gc_count > 0, "expected GC under a tiny elbow");
+    }
+
+    #[test]
+    fn single_thread_deterministic() {
+        let g = random_graph(300, 5, 11);
+        let a = ParAmd::new(1).with_seed(7).order(&g);
+        let b = ParAmd::new(1).with_seed(7).order(&g);
+        assert_eq!(a.perm, b.perm);
+    }
+
+    #[test]
+    fn detail_counters_consistent() {
+        let g = mesh2d(16, 16);
+        let (r, d) = ParAmd::new(3).order_detailed(&g);
+        check_ordering_contract(&g, &r);
+        assert_eq!(d.round_work.len(), r.stats.rounds as usize);
+        assert!(d.model_speedup > 0.0);
+        let pivots: u32 = d.round_work.iter().flatten().map(|w| w.pivots).sum();
+        assert_eq!(pivots as u64, r.stats.pivots);
+        assert_eq!(d.select_secs.len(), 3);
+    }
+
+    #[test]
+    fn adaptive_extension_grows_sets_when_starved() {
+        // mini_nd24k-like: dense 3D mesh with small D2 sets.
+        let g = crate::matgen::mesh3d_27pt(9, 9, 9);
+        let (r_base, d_base) = ParAmd::new(8).order_detailed(&g);
+        let (r_adapt, d_adapt) = ParAmd::new(8).with_adaptive().order_detailed(&g);
+        check_ordering_contract(&g, &r_adapt);
+        let avg = |r: &crate::ordering::OrderingResult| {
+            r.stats.pivots as f64 / r.stats.rounds.max(1) as f64
+        };
+        assert!(
+            avg(&r_adapt) > avg(&r_base) * 0.95,
+            "adaptive should not shrink sets: {} vs {}",
+            avg(&r_adapt),
+            avg(&r_base)
+        );
+        assert!(d_adapt.model_speedup >= d_base.model_speedup * 0.8);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = SymGraph::from_edges(0, &[]);
+        let r = ParAmd::new(4).order(&g);
+        assert!(r.perm.is_empty());
+    }
+
+    #[test]
+    fn isolated_vertices_only() {
+        let g = SymGraph::from_edges(7, &[]);
+        let r = ParAmd::new(3).order(&g);
+        check_ordering_contract(&g, &r);
+    }
+
+    use crate::graph::csr::SymGraph;
+}

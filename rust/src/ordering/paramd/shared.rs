@@ -1,0 +1,246 @@
+//! The concurrent quotient graph (§3.3.1 of the paper).
+//!
+//! All node arrays are plain atomics accessed with `Relaxed` ordering;
+//! the round barriers in the driver provide the cross-thread
+//! happens-before edges. Within a round, the distance-2 independence of
+//! the pivots guarantees (see DESIGN.md §6):
+//!
+//! - every variable/element *written* during elimination is owned by
+//!   exactly one pivot, hence one thread;
+//! - elements *read* by several threads (an element shared between two
+//!   pivots' periphery) are never concurrently absorbed or relocated;
+//! - the only benign races are reads of `nv`/`degree`/`state` of nodes
+//!   being merged by their owner — every observable value keeps the
+//!   AMD degrees approximate upper bounds.
+//!
+//! Storage follows SuiteSparse's single-`iw` scheme with elbow room; the
+//! elbow cursor `pfree` is claimed with a **single `fetch_add` per pivot**
+//! after the pivot's connection updates are collected in thread-local
+//! scratch, exactly as §3.3.1 prescribes. On exhaustion the pivot is
+//! deferred and a stop-the-world GC runs at the next round boundary.
+
+use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU8, AtomicUsize, Ordering::Relaxed};
+
+use crate::graph::csr::SymGraph;
+
+/// Node states, stored as `u8` atomics.
+pub const ST_VAR: u8 = 0;
+pub const ST_ELEM: u8 = 1;
+pub const ST_DEAD_VAR: u8 = 2;
+pub const ST_DEAD_ELEM: u8 = 3;
+
+/// The shared quotient graph.
+pub struct SharedGraph {
+    pub n: usize,
+    pub iw: Vec<AtomicI32>,
+    pub pe: Vec<AtomicUsize>,
+    pub len: Vec<AtomicI32>,
+    pub elen: Vec<AtomicI32>,
+    /// Supervariable size (vars); pivot block size (elements); 0 when dead.
+    pub nv: Vec<AtomicI32>,
+    /// Approximate external degree (vars) / weighted `|L_e|` (elements).
+    pub degree: Vec<AtomicI32>,
+    pub state: Vec<AtomicU8>,
+    pub parent: Vec<AtomicI32>,
+    /// Elbow cursor: next free slot in `iw`.
+    pub pfree: AtomicUsize,
+    /// Columns eliminated so far.
+    pub nel: AtomicUsize,
+    /// Set when a thread failed to claim elbow space; triggers GC.
+    pub gc_requested: AtomicBool,
+}
+
+impl SharedGraph {
+    /// Build from a symmetric pattern with `elbow × nnz` extra space
+    /// (the paper's empirical 1.5 default lives in the ParAMD config).
+    pub fn new(g: &SymGraph, elbow: f64) -> Self {
+        let n = g.n;
+        let nnz = g.nnz();
+        let iwlen = nnz + (nnz as f64 * elbow) as usize + 16;
+        let iw: Vec<AtomicI32> = (0..iwlen)
+            .map(|i| AtomicI32::new(if i < nnz { g.colind[i] } else { 0 }))
+            .collect();
+        SharedGraph {
+            n,
+            iw,
+            pe: (0..n).map(|v| AtomicUsize::new(g.rowptr[v])).collect(),
+            len: (0..n).map(|v| AtomicI32::new(g.degree(v) as i32)).collect(),
+            elen: (0..n).map(|_| AtomicI32::new(0)).collect(),
+            nv: (0..n).map(|_| AtomicI32::new(1)).collect(),
+            degree: (0..n).map(|v| AtomicI32::new(g.degree(v) as i32)).collect(),
+            state: (0..n).map(|_| AtomicU8::new(ST_VAR)).collect(),
+            parent: (0..n).map(|_| AtomicI32::new(-1)).collect(),
+            pfree: AtomicUsize::new(nnz),
+            nel: AtomicUsize::new(0),
+            gc_requested: AtomicBool::new(false),
+        }
+    }
+
+    // -- relaxed accessors (all cross-thread sync comes from barriers) ---
+
+    #[inline]
+    pub fn st(&self, i: usize) -> u8 {
+        self.state[i].load(Relaxed)
+    }
+    #[inline]
+    pub fn set_st(&self, i: usize, s: u8) {
+        self.state[i].store(s, Relaxed);
+    }
+    #[inline]
+    pub fn iw_at(&self, p: usize) -> i32 {
+        self.iw[p].load(Relaxed)
+    }
+    #[inline]
+    pub fn iw_set(&self, p: usize, v: i32) {
+        self.iw[p].store(v, Relaxed);
+    }
+    #[inline]
+    pub fn nv_of(&self, i: usize) -> i32 {
+        self.nv[i].load(Relaxed)
+    }
+    #[inline]
+    pub fn deg_of(&self, i: usize) -> i32 {
+        self.degree[i].load(Relaxed)
+    }
+    #[inline]
+    pub fn pe_of(&self, i: usize) -> usize {
+        self.pe[i].load(Relaxed)
+    }
+    #[inline]
+    pub fn len_of(&self, i: usize) -> i32 {
+        self.len[i].load(Relaxed)
+    }
+    #[inline]
+    pub fn elen_of(&self, i: usize) -> i32 {
+        self.elen[i].load(Relaxed)
+    }
+
+    /// Claim `need` slots of elbow room with one `fetch_add` (§3.3.1).
+    /// Returns the start offset, or `None` when exhausted (the caller
+    /// defers its pivot and requests a GC).
+    pub fn claim(&self, need: usize) -> Option<usize> {
+        let off = self.pfree.fetch_add(need, Relaxed);
+        if off + need <= self.iw.len() {
+            Some(off)
+        } else {
+            // Roll the cursor back best-effort; concurrent claims make this
+            // approximate, which is fine — GC recomputes it exactly.
+            self.pfree.fetch_sub(need, Relaxed);
+            self.gc_requested.store(true, Relaxed);
+            None
+        }
+    }
+
+    /// Stop-the-world garbage collection: compact all live lists to the
+    /// front of `iw`, pruning dead entries and refreshing element weights.
+    /// Must be called while every other thread is parked at a barrier.
+    pub fn garbage_collect_exclusive(&self) {
+        let mut order: Vec<u32> = (0..self.n as u32)
+            .filter(|&i| {
+                let s = self.st(i as usize);
+                (s == ST_VAR || s == ST_ELEM) && self.len_of(i as usize) > 0
+            })
+            .collect();
+        order.sort_by_key(|&i| self.pe_of(i as usize));
+        let mut dst = 0usize;
+        for &iu in &order {
+            let i = iu as usize;
+            let src = self.pe_of(i);
+            debug_assert!(src >= dst);
+            if self.st(i) == ST_ELEM {
+                let mut weight = 0i32;
+                let mut kept = 0usize;
+                for k in 0..self.len_of(i) as usize {
+                    let v = self.iw_at(src + k);
+                    if self.st(v as usize) == ST_VAR {
+                        self.iw_set(dst + kept, v);
+                        kept += 1;
+                        weight += self.nv_of(v as usize);
+                    }
+                }
+                self.pe[i].store(dst, Relaxed);
+                self.len[i].store(kept as i32, Relaxed);
+                self.degree[i].store(weight, Relaxed);
+                dst += kept;
+            } else {
+                let mut kept_e = 0usize;
+                for k in 0..self.elen_of(i) as usize {
+                    let e = self.iw_at(src + k);
+                    if self.st(e as usize) == ST_ELEM {
+                        self.iw_set(dst + kept_e, e);
+                        kept_e += 1;
+                    }
+                }
+                let mut kept = kept_e;
+                for k in self.elen_of(i) as usize..self.len_of(i) as usize {
+                    let v = self.iw_at(src + k);
+                    if self.st(v as usize) == ST_VAR {
+                        self.iw_set(dst + kept, v);
+                        kept += 1;
+                    }
+                }
+                self.pe[i].store(dst, Relaxed);
+                self.elen[i].store(kept_e as i32, Relaxed);
+                self.len[i].store(kept as i32, Relaxed);
+                dst += kept;
+            }
+        }
+        self.pfree.store(dst, Relaxed);
+        self.gc_requested.store(false, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::mesh2d;
+
+    #[test]
+    fn construction_mirrors_graph() {
+        let g = mesh2d(4, 4);
+        let sg = SharedGraph::new(&g, 1.5);
+        assert_eq!(sg.n, 16);
+        assert_eq!(sg.pfree.load(Relaxed), g.nnz());
+        for v in 0..g.n {
+            assert_eq!(sg.len_of(v) as usize, g.degree(v));
+            assert_eq!(sg.deg_of(v) as usize, g.degree(v));
+            assert_eq!(sg.st(v), ST_VAR);
+            let p = sg.pe_of(v);
+            let nbrs: Vec<i32> = (0..g.degree(v)).map(|k| sg.iw_at(p + k)).collect();
+            assert_eq!(nbrs.as_slice(), g.neighbors(v));
+        }
+    }
+
+    #[test]
+    fn claim_and_exhaust() {
+        let g = mesh2d(3, 3);
+        let sg = SharedGraph::new(&g, 0.0);
+        let avail = sg.iw.len() - sg.pfree.load(Relaxed);
+        assert!(sg.claim(avail).is_some());
+        assert!(sg.claim(1).is_none());
+        assert!(sg.gc_requested.load(Relaxed));
+    }
+
+    #[test]
+    fn gc_compacts_and_preserves_live_lists() {
+        let g = mesh2d(4, 4);
+        let sg = SharedGraph::new(&g, 1.0);
+        // Kill vertex 0 and re-point vertex 1's list into the elbow.
+        sg.set_st(0, ST_DEAD_VAR);
+        sg.len[0].store(0, Relaxed);
+        let off = sg.claim(2).unwrap();
+        sg.iw_set(off, 2);
+        sg.iw_set(off + 1, 5);
+        sg.pe[1].store(off, Relaxed);
+        sg.len[1].store(2, Relaxed);
+        sg.elen[1].store(0, Relaxed);
+        let before: Vec<i32> = (0..2).map(|k| sg.iw_at(sg.pe_of(1) + k)).collect();
+        sg.garbage_collect_exclusive();
+        let after: Vec<i32> = (0..sg.len_of(1) as usize)
+            .map(|k| sg.iw_at(sg.pe_of(1) + k))
+            .collect();
+        assert_eq!(before, after);
+        assert!(sg.pfree.load(Relaxed) < off + 2, "gc must reclaim space");
+        assert!(!sg.gc_requested.load(Relaxed));
+    }
+}

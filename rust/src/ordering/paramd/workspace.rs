@@ -1,0 +1,98 @@
+//! Per-thread workspaces and work counters.
+//!
+//! Each thread carries its own `w`/`wflg` timestamp array for the
+//! Algorithm 2.1 degree scan — the paper's O(nt) memory term — plus
+//! scratch buffers, an RNG stream for Luby priorities, and the per-round
+//! per-phase work counters that feed the critical-path cost model
+//! (DESIGN.md §7).
+
+use crate::util::rng::Rng;
+
+/// Work counters for one thread in one round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundWork {
+    /// Words touched during candidate collection + Luby selection.
+    pub select: u64,
+    /// Words touched during pivot elimination (core AMD).
+    pub elim: u64,
+    /// Pivots this thread eliminated this round.
+    pub pivots: u32,
+}
+
+/// Per-thread mutable state.
+pub struct Workspace {
+    pub tid: usize,
+    /// Timestamp array shared between "v ∈ L_me" marking and element
+    /// weights (disjoint id spaces), like the sequential engine.
+    pub w: Vec<u64>,
+    pub wflg: u64,
+    n: usize,
+    /// Scratch for building L_me.
+    pub lme: Vec<i32>,
+    /// Scratch for candidate collection.
+    pub candidates: Vec<i32>,
+    /// Scratch for the pivots this thread won this round.
+    pub my_pivots: Vec<i32>,
+    /// Scratch for neighborhood enumeration.
+    pub nbrs: Vec<i32>,
+    /// Per-round cache of candidate neighborhoods (flat CSR layout),
+    /// filled by the Luby reset phase and reused by min/validate.
+    pub nbr_buf: Vec<i32>,
+    pub nbr_ptr: Vec<usize>,
+    /// Luby priority RNG.
+    pub rng: Rng,
+    /// Per-round work log (indexed by round).
+    pub work_log: Vec<RoundWork>,
+    /// Scratch for supervariable hashing: (hash, var).
+    pub hash_scratch: Vec<(u64, i32)>,
+}
+
+impl Workspace {
+    pub fn new(tid: usize, n: usize, seed: u64) -> Self {
+        Self {
+            tid,
+            w: vec![0u64; n],
+            wflg: 1,
+            n,
+            lme: Vec::new(),
+            candidates: Vec::new(),
+            my_pivots: Vec::new(),
+            nbrs: Vec::new(),
+            nbr_buf: Vec::new(),
+            nbr_ptr: Vec::new(),
+            rng: Rng::new(seed ^ (tid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            work_log: Vec::new(),
+            hash_scratch: Vec::new(),
+        }
+    }
+
+    /// Start a fresh mark epoch, advanced past any stored weight
+    /// (`mark + degree ≤ mark + n`) to avoid epoch collisions.
+    #[inline]
+    pub fn bump_epoch(&mut self) -> u64 {
+        self.wflg += self.n as u64 + 2;
+        self.wflg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epochs_never_collide_with_stored_weights() {
+        let mut ws = Workspace::new(0, 100, 7);
+        let m1 = ws.bump_epoch();
+        // Largest value stored under epoch m1 is m1 + n.
+        let stored = m1 + 100;
+        let m2 = ws.bump_epoch();
+        assert!(m2 > stored);
+    }
+
+    #[test]
+    fn rng_streams_differ_by_tid() {
+        let mut a = Workspace::new(0, 8, 42);
+        let mut b = Workspace::new(1, 8, 42);
+        assert_ne!(a.rng.next_u64(), b.rng.next_u64());
+    }
+}

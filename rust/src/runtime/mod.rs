@@ -1,0 +1,315 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them from
+//! the Rust request path (Python never runs here).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. One compiled executable per artifact
+//! size; the engine picks the smallest size ≥ the request and pads.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cholesky::dense::DenseCholesky;
+
+/// Kinds of artifacts emitted by `python/compile/aot.py`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ArtifactKind {
+    /// `cholesky_factor`: `(f64[n,n]) -> (f64[n,n],)`.
+    Chol,
+    /// `cholesky_solve`: `(f64[n,n], f64[n]) -> (f64[n],)`.
+    Solve,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "chol" => Some(Self::Chol),
+            "solve" => Some(Self::Solve),
+            _ => None,
+        }
+    }
+}
+
+struct Loaded {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT engine: a CPU client plus compiled executables keyed by
+/// `(kind, size)`.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    execs: BTreeMap<(ArtifactKind, usize), Loaded>,
+    /// PJRT executions are serialized (single-device CPU client).
+    lock: Mutex<()>,
+}
+
+impl PjrtEngine {
+    /// Load every artifact listed in `<dir>/manifest.txt`.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {} — run `make artifacts` first", manifest.display()))?;
+        let mut execs = BTreeMap::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let (Some(kind), Some(size), Some(file)) = (it.next(), it.next(), it.next()) else {
+                continue;
+            };
+            let kind = ArtifactKind::parse(kind)
+                .ok_or_else(|| anyhow!("unknown artifact kind {kind:?}"))?;
+            let size: usize = size.parse()?;
+            let path: PathBuf = dir.join(file);
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(wrap)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(wrap)?;
+            execs.insert((kind, size), Loaded { exe });
+        }
+        if execs.is_empty() {
+            return Err(anyhow!("no artifacts in {}", dir.display()));
+        }
+        Ok(Self {
+            client,
+            execs,
+            lock: Mutex::new(()),
+        })
+    }
+
+    /// Default artifact directory: `$PARAMD_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Self> {
+        let dir = std::env::var("PARAMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load_dir(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Sizes available for a kind (ascending).
+    pub fn sizes(&self, kind: ArtifactKind) -> Vec<usize> {
+        self.execs
+            .keys()
+            .filter(|(k, _)| *k == kind)
+            .map(|&(_, s)| s)
+            .collect()
+    }
+
+    /// Smallest compiled size ≥ `n` for `kind`.
+    pub fn pick_size(&self, kind: ArtifactKind, n: usize) -> Option<usize> {
+        self.sizes(kind).into_iter().find(|&s| s >= n)
+    }
+
+    /// Execute the Cholesky-factor artifact on an `n×n` row-major matrix,
+    /// padding up to the artifact size with an identity tail (which
+    /// factors to itself and cannot pollute the leading block).
+    pub fn dense_cholesky(&self, a: &[f64], n: usize) -> Result<Vec<f64>> {
+        assert_eq!(a.len(), n * n);
+        let size = self
+            .pick_size(ArtifactKind::Chol, n)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no chol artifact ≥ {n} (have {:?})",
+                    self.sizes(ArtifactKind::Chol)
+                )
+            })?;
+        let mut padded = vec![0f64; size * size];
+        for i in 0..n {
+            padded[i * size..i * size + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+        }
+        for i in n..size {
+            padded[i * size + i] = 1.0;
+        }
+        let out = {
+            let _g = self.lock.lock().unwrap();
+            let lit = xla::Literal::vec1(&padded)
+                .reshape(&[size as i64, size as i64])
+                .map_err(wrap)?;
+            let exe = &self.execs[&(ArtifactKind::Chol, size)].exe;
+            let result = exe.execute::<xla::Literal>(&[lit]).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            result
+                .to_tuple1()
+                .map_err(wrap)?
+                .to_vec::<f64>()
+                .map_err(wrap)?
+        };
+        let mut l = vec![0f64; n * n];
+        for i in 0..n {
+            l[i * n..(i + 1) * n].copy_from_slice(&out[i * size..i * size + n]);
+        }
+        Ok(l)
+    }
+
+    /// Execute the fused factor+solve artifact: solves `A x = b`.
+    pub fn dense_solve(&self, a: &[f64], b: &[f64], n: usize) -> Result<Vec<f64>> {
+        assert_eq!(a.len(), n * n);
+        assert_eq!(b.len(), n);
+        let size = self
+            .pick_size(ArtifactKind::Solve, n)
+            .ok_or_else(|| anyhow!("no solve artifact ≥ {n}"))?;
+        let mut pa = vec![0f64; size * size];
+        for i in 0..n {
+            pa[i * size..i * size + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+        }
+        for i in n..size {
+            pa[i * size + i] = 1.0;
+        }
+        let mut pb = vec![0f64; size];
+        pb[..n].copy_from_slice(b);
+        let out = {
+            let _g = self.lock.lock().unwrap();
+            let la = xla::Literal::vec1(&pa)
+                .reshape(&[size as i64, size as i64])
+                .map_err(wrap)?;
+            let lb = xla::Literal::vec1(&pb)
+                .reshape(&[size as i64])
+                .map_err(wrap)?;
+            let exe = &self.execs[&(ArtifactKind::Solve, size)].exe;
+            let result = exe.execute::<xla::Literal>(&[la, lb]).map_err(wrap)?[0][0]
+                .to_literal_sync()
+                .map_err(wrap)?;
+            result
+                .to_tuple1()
+                .map_err(wrap)?
+                .to_vec::<f64>()
+                .map_err(wrap)?
+        };
+        Ok(out[..n].to_vec())
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}
+
+/// [`DenseCholesky`] engine backed by the PJRT executables — plugs the
+/// AOT Pallas kernel into the sparse solver's dense trailing block.
+pub struct PjrtDense<'a> {
+    pub engine: &'a PjrtEngine,
+}
+
+impl DenseCholesky for PjrtDense<'_> {
+    fn factor(&self, a: &mut [f64], n: usize) -> Result<(), String> {
+        if n == 0 {
+            return Ok(());
+        }
+        let l = self
+            .engine
+            .dense_cholesky(a, n)
+            .map_err(|e| format!("pjrt dense cholesky: {e}"))?;
+        if l.iter().any(|v| !v.is_finite()) {
+            return Err("matrix not positive definite (NaN from kernel)".into());
+        }
+        a.copy_from_slice(&l);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // Tests run from the crate root.
+        PathBuf::from("artifacts")
+    }
+
+    fn engine() -> PjrtEngine {
+        PjrtEngine::load_dir(&artifacts_dir()).expect("run `make artifacts` before cargo test")
+    }
+
+    #[test]
+    fn loads_manifest_and_reports_sizes() {
+        let e = engine();
+        let sizes = e.sizes(ArtifactKind::Chol);
+        assert!(sizes.contains(&32) && sizes.contains(&256), "{sizes:?}");
+        assert_eq!(e.pick_size(ArtifactKind::Chol, 33), Some(64));
+        assert_eq!(e.pick_size(ArtifactKind::Chol, 257), None);
+        assert_eq!(e.platform(), "cpu");
+    }
+
+    #[test]
+    fn dense_cholesky_exact_size() {
+        let e = engine();
+        let n = 32;
+        let a: Vec<f64> = (0..n * n)
+            .map(|i| if i % (n + 1) == 0 { 9.0 } else { 0.0 })
+            .collect();
+        let l = e.dense_cholesky(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 3.0 } else { 0.0 };
+                assert!((l[i * n + j] - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_cholesky_padded_size_matches_native() {
+        let e = engine();
+        let n = 50; // pads to 64
+        crate::cholesky::dense::check_dense_factor(&PjrtDense { engine: &e }, n, 1234);
+    }
+
+    #[test]
+    fn dense_solve_roundtrip() {
+        let e = engine();
+        let n = 40;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let b: Vec<f64> = (0..n * n).map(|_| rng.f64() - 0.5).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[i * n + k] * b[j * n + k];
+                }
+                a[i * n + j] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| (i as f64) / n as f64 - 0.3).collect();
+        let mut rhs = vec![0.0; n];
+        for i in 0..n {
+            rhs[i] = (0..n).map(|j| a[i * n + j] * x_true[j]).sum();
+        }
+        let x = e.dense_solve(&a, &rhs, n).unwrap();
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-8, "{xi} vs {ti}");
+        }
+    }
+
+    #[test]
+    fn pjrt_dense_rejects_indefinite() {
+        let e = engine();
+        let mut a = vec![-1.0, 0.0, 0.0, -1.0];
+        let r = PjrtDense { engine: &e }.factor(&mut a, 2);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn sparse_solver_with_pjrt_tail() {
+        use crate::cholesky::{factor, residual, solve, DenseTail};
+        use crate::matgen::laplacian_matrix;
+        use crate::ordering::{amd_seq::AmdSeq, Ordering as _};
+
+        let e = engine();
+        let a = laplacian_matrix(14, 14);
+        let g = crate::graph::symmetrize(&a);
+        let perm = AmdSeq::default().order(&g).perm;
+        let f = factor(&a, &perm, DenseTail::Fixed(100), &PjrtDense { engine: &e }).unwrap();
+        let b = vec![1.0; a.nrows];
+        let x = solve(&f, &b);
+        let r = residual(&a, &x, &b);
+        assert!(r < 1e-10, "residual {r:e} via PJRT tail");
+    }
+}

@@ -1,0 +1,190 @@
+//! Exact Cholesky column counts via the Gilbert–Ng–Peyton skeleton-leaf
+//! algorithm (the `cs_counts` formulation), O(nnz(A) · α(n)) time.
+
+use crate::graph::csr::SymGraph;
+
+/// For each column `j` of the Cholesky factor of the (already permuted)
+/// pattern `pg`, the number of nonzeros including the diagonal.
+///
+/// `parent` is the elimination tree, `post` its postorder.
+pub fn col_counts(pg: &SymGraph, parent: &[i32], post: &[i32]) -> Vec<i64> {
+    let n = pg.n;
+    let mut delta = vec![0i64; n];
+    let mut first = vec![-1i32; n];
+    let mut maxfirst = vec![-1i32; n];
+    let mut prevleaf = vec![-1i32; n];
+    let mut ancestor: Vec<i32> = (0..n as i32).collect();
+
+    // first[j] = postorder index of j's first descendant; delta[j] starts at
+    // 1 exactly when j is a leaf of the etree.
+    for (k, &jv) in post.iter().enumerate() {
+        let mut j = jv;
+        delta[j as usize] = i64::from(first[j as usize] == -1);
+        while j != -1 && first[j as usize] == -1 {
+            first[j as usize] = k as i32;
+            j = parent[j as usize];
+        }
+    }
+
+    for &jv in post {
+        let j = jv as usize;
+        if parent[j] != -1 {
+            delta[parent[j] as usize] -= 1;
+        }
+        for &iv in pg.neighbors(j) {
+            let i = iv as usize;
+            if let Some((jleaf, q)) =
+                leaf(i, j, &first, &mut maxfirst, &mut prevleaf, &mut ancestor)
+            {
+                if jleaf >= 1 {
+                    delta[j] += 1;
+                }
+                if jleaf == 2 {
+                    delta[q] -= 1;
+                }
+            }
+        }
+        if parent[j] != -1 {
+            ancestor[j] = parent[j];
+        }
+    }
+
+    // Accumulate child deltas up the tree: counts[parent] += counts[child].
+    // Processing in postorder guarantees children are final first.
+    let mut counts = delta;
+    for &jv in post {
+        let j = jv as usize;
+        if parent[j] != -1 {
+            counts[parent[j] as usize] += counts[j];
+        }
+    }
+    counts
+}
+
+/// The `cs_leaf` helper: determine whether `j` is a leaf of the `i`-th row
+/// subtree; returns `(jleaf, q)` where `jleaf` is 1 for the first leaf, 2
+/// for a subsequent leaf (with `q` the least common ancestor of `j` and the
+/// previous leaf), or `None` if `j` is not a leaf. Mutates the
+/// path-compressed `ancestor` forest.
+fn leaf(
+    i: usize,
+    j: usize,
+    first: &[i32],
+    maxfirst: &mut [i32],
+    prevleaf: &mut [i32],
+    ancestor: &mut [i32],
+) -> Option<(u8, usize)> {
+    if i <= j || first[j] <= maxfirst[i] {
+        return None;
+    }
+    maxfirst[i] = first[j];
+    let jprev = prevleaf[i];
+    prevleaf[i] = j as i32;
+    if jprev == -1 {
+        return Some((1, i));
+    }
+    // q = root of the path-compressed tree containing jprev.
+    let mut q = jprev as usize;
+    while q != ancestor[q] as usize {
+        q = ancestor[q] as usize;
+    }
+    // Path compression from jprev to q.
+    let mut s = jprev as usize;
+    while s != q {
+        let sparent = ancestor[s] as usize;
+        ancestor[s] = q as i32;
+        s = sparent;
+    }
+    Some((2, q))
+}
+
+/// Total nnz(L) (incl. diagonal) for a permuted pattern.
+pub fn nnz_l(pg: &SymGraph) -> i64 {
+    let parent = super::etree(pg);
+    let post = super::postorder(&parent);
+    col_counts(pg, &parent, &post).iter().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::SymGraph;
+    use crate::symbolic::{etree, postorder};
+
+    /// Brute-force column counts by explicit symbolic factorization.
+    fn counts_naive(pg: &SymGraph) -> Vec<i64> {
+        let n = pg.n;
+        // cols[j] = pattern of column j of L (rows >= j).
+        let mut cols: Vec<std::collections::BTreeSet<usize>> = (0..n)
+            .map(|j| {
+                let mut s: std::collections::BTreeSet<usize> = pg
+                    .neighbors(j)
+                    .iter()
+                    .filter(|&&i| (i as usize) > j)
+                    .map(|&i| i as usize)
+                    .collect();
+                s.insert(j);
+                s
+            })
+            .collect();
+        for j in 0..n {
+            // The parent is the smallest row index > j in column j.
+            let parent = cols[j].iter().cloned().find(|&i| i > j);
+            if let Some(p) = parent {
+                let add: Vec<usize> = cols[j].iter().cloned().filter(|&i| i > j).collect();
+                for i in add {
+                    cols[p].insert(i);
+                }
+            }
+        }
+        cols.iter().map(|c| c.len() as i64).collect()
+    }
+
+    fn check(pg: &SymGraph) {
+        let parent = etree(pg);
+        let post = postorder(&parent);
+        let fast = col_counts(pg, &parent, &post);
+        let slow = counts_naive(pg);
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn counts_on_small_meshes() {
+        check(&crate::matgen::mesh2d(5, 5));
+        check(&crate::matgen::mesh2d(4, 9));
+        check(&crate::matgen::mesh3d(3, 3, 3));
+    }
+
+    #[test]
+    fn counts_on_random_graphs() {
+        for seed in 0..8 {
+            check(&crate::matgen::random_graph(50, 5, seed));
+        }
+    }
+
+    #[test]
+    fn counts_on_permuted_graphs() {
+        use crate::graph::perm::permute_graph;
+        use crate::util::rng::Rng;
+        let g = crate::matgen::mesh2d(6, 6);
+        for seed in 0..4 {
+            let mut rng = Rng::new(seed);
+            let p = rng.permutation(g.n);
+            check(&permute_graph(&g, &p));
+        }
+    }
+
+    #[test]
+    fn path_graph_counts() {
+        let g = SymGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let parent = etree(&g);
+        let post = postorder(&parent);
+        assert_eq!(col_counts(&g, &parent, &post), vec![2, 2, 2, 1]);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = SymGraph::from_edges(3, &[]);
+        assert_eq!(nnz_l(&g), 3);
+    }
+}

@@ -1,0 +1,175 @@
+//! Elimination tree and postorder (Liu's algorithm, as in CSparse).
+
+use crate::graph::csr::SymGraph;
+
+/// Elimination tree of the (already permuted) symmetric pattern `pg`.
+/// `parent[k]` is the etree parent of column `k`, or `-1` for roots.
+///
+/// Uses path compression through an `ancestor` array; entries with `i >= k`
+/// are skipped so the full symmetric pattern can be passed directly.
+pub fn etree(pg: &SymGraph) -> Vec<i32> {
+    let n = pg.n;
+    let mut parent = vec![-1i32; n];
+    let mut ancestor = vec![-1i32; n];
+    for k in 0..n {
+        for &iv in pg.neighbors(k) {
+            let mut i = iv;
+            // Traverse from i up to the root of its current subtree, doing
+            // path compression; stop when reaching k's territory.
+            while i != -1 && (i as usize) < k {
+                let inext = ancestor[i as usize];
+                ancestor[i as usize] = k as i32;
+                if inext == -1 {
+                    parent[i as usize] = k as i32;
+                }
+                i = inext;
+            }
+        }
+    }
+    parent
+}
+
+/// Postorder of a forest given as a parent array. Children are visited in
+/// increasing node order (deterministic).
+pub fn postorder(parent: &[i32]) -> Vec<i32> {
+    let n = parent.len();
+    // Build first-child / next-sibling lists. Iterating nodes in *reverse*
+    // and pushing to the head yields children linked in increasing order.
+    let mut head = vec![-1i32; n];
+    let mut next = vec![-1i32; n];
+    for j in (0..n).rev() {
+        let p = parent[j];
+        if p != -1 {
+            next[j] = head[p as usize];
+            head[p as usize] = j as i32;
+        }
+    }
+    let mut post = Vec::with_capacity(n);
+    let mut stack: Vec<i32> = Vec::new();
+    for root in 0..n {
+        if parent[root] != -1 {
+            continue;
+        }
+        stack.push(root as i32);
+        while let Some(&top) = stack.last() {
+            let child = head[top as usize];
+            if child == -1 {
+                post.push(top);
+                stack.pop();
+            } else {
+                head[top as usize] = next[child as usize];
+                stack.push(child);
+            }
+        }
+    }
+    post
+}
+
+/// Depth of each node in the etree (roots at depth 0). Useful to reason
+/// about factorization parallelism (ND vs AMD comparison, §4.6).
+pub fn etree_depths(parent: &[i32]) -> Vec<u32> {
+    let n = parent.len();
+    let mut depth = vec![u32::MAX; n];
+    for mut j in 0..n {
+        let mut path = Vec::new();
+        while depth[j] == u32::MAX {
+            path.push(j);
+            if parent[j] == -1 {
+                depth[j] = 0;
+                break;
+            }
+            j = parent[j] as usize;
+        }
+        let base = depth[j];
+        for (k, &v) in path.iter().rev().enumerate() {
+            if depth[v] == u32::MAX {
+                depth[v] = base + k as u32;
+            }
+        }
+    }
+    // Fix up: path recorded nodes bottom-up; recompute cleanly.
+    let mut depth2 = vec![u32::MAX; n];
+    fn dep(j: usize, parent: &[i32], depth: &mut [u32]) -> u32 {
+        if depth[j] != u32::MAX {
+            return depth[j];
+        }
+        let d = if parent[j] == -1 {
+            0
+        } else {
+            dep(parent[j] as usize, parent, depth) + 1
+        };
+        depth[j] = d;
+        d
+    }
+    for j in 0..n {
+        dep(j, parent, &mut depth2);
+    }
+    depth2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::SymGraph;
+
+    #[test]
+    fn etree_of_path_graph() {
+        // Path 0-1-2-3 with natural order: parent chain i -> i+1.
+        let g = SymGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(etree(&g), vec![1, 2, 3, -1]);
+    }
+
+    #[test]
+    fn etree_of_star() {
+        // Star centered at 3 (eliminated last): all leaves point to... fill
+        // chain: eliminating 0 connects nothing (deg-1), parent[0]=3, etc.
+        let g = SymGraph::from_edges(4, &[(0, 3), (1, 3), (2, 3)]);
+        assert_eq!(etree(&g), vec![3, 3, 3, -1]);
+    }
+
+    #[test]
+    fn etree_dense_is_chain() {
+        let mut edges = vec![];
+        for i in 0..5 {
+            for j in i + 1..5 {
+                edges.push((i, j));
+            }
+        }
+        let g = SymGraph::from_edges(5, &edges);
+        assert_eq!(etree(&g), vec![1, 2, 3, 4, -1]);
+    }
+
+    #[test]
+    fn postorder_is_valid() {
+        let parent = vec![2i32, 2, 4, 4, -1, -1]; // two trees: {0,1,2,3,4}, {5}
+        let post = postorder(&parent);
+        assert_eq!(post.len(), 6);
+        // Every child appears before its parent.
+        let pos: Vec<usize> = {
+            let mut pos = vec![0; 6];
+            for (i, &v) in post.iter().enumerate() {
+                pos[v as usize] = i;
+            }
+            pos
+        };
+        for (j, &p) in parent.iter().enumerate() {
+            if p != -1 {
+                assert!(pos[j] < pos[p as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn postorder_handles_empty_forest() {
+        let parent = vec![-1i32; 3];
+        let post = postorder(&parent);
+        assert_eq!(post, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn depths() {
+        let parent = vec![2i32, 2, 4, 4, -1];
+        let d = etree_depths(&parent);
+        assert_eq!(d, vec![2, 2, 1, 1, 0]);
+    }
+}

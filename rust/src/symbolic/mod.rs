@@ -1,0 +1,156 @@
+//! Symbolic factorization analysis: elimination trees, postorders, exact
+//! Cholesky column counts (Gilbert–Ng–Peyton), and the fill-in metric used
+//! throughout the paper's evaluation (Tables 4.2 / 4.4).
+
+pub mod colcount;
+pub mod etree;
+
+pub use colcount::{col_counts, nnz_l};
+pub use etree::{etree, postorder};
+
+use crate::graph::csr::SymGraph;
+use crate::graph::perm::permute_graph;
+
+/// Full symbolic analysis of `P A P^T` for a given ordering.
+#[derive(Clone, Debug)]
+pub struct SymbolicInfo {
+    /// Elimination-tree parent of each (permuted) column, `-1` at roots.
+    pub parent: Vec<i32>,
+    /// Postorder of the elimination tree.
+    pub post: Vec<i32>,
+    /// nnz of each column of `L` (including the diagonal).
+    pub counts: Vec<i64>,
+    /// Total nnz(L) including the diagonal.
+    pub nnz_l: i64,
+    /// Fill-ins: nnz(L) minus nnz of the lower triangle of `A` (incl. diag).
+    pub fill_in: i64,
+    /// FLOPs for the numeric Cholesky factorization: Σ counts².
+    pub flops: f64,
+}
+
+/// Analyze the ordering `perm` (AMD convention: `perm[k]` eliminated k-th)
+/// applied to the symmetric pattern `g` (diagonal-free).
+pub fn analyze(g: &SymGraph, perm: &[i32]) -> SymbolicInfo {
+    let pg = permute_graph(g, perm);
+    let parent = etree(&pg);
+    let post = postorder(&parent);
+    let counts = col_counts(&pg, &parent, &post);
+    let nnz_l: i64 = counts.iter().sum();
+    let lower_a = (g.nnz() / 2 + g.n) as i64;
+    let flops = counts.iter().map(|&c| c as f64 * c as f64).sum();
+    SymbolicInfo {
+        parent,
+        post,
+        counts,
+        nnz_l,
+        fill_in: nnz_l - lower_a,
+        flops,
+    }
+}
+
+/// Convenience: just the fill-in count of an ordering.
+pub fn fill_in(g: &SymGraph, perm: &[i32]) -> i64 {
+    analyze(g, perm).fill_in
+}
+
+/// Reference fill-in computation by explicit elimination-graph simulation —
+/// O(n²)-ish, used only as a test oracle on small graphs.
+pub fn fill_in_naive(g: &SymGraph, perm: &[i32]) -> i64 {
+    let n = g.n;
+    let mut adj: Vec<std::collections::BTreeSet<i32>> = (0..n)
+        .map(|v| g.neighbors(v).iter().cloned().collect())
+        .collect();
+    let mut eliminated = vec![false; n];
+    let mut fill = 0i64;
+    for &pv in perm {
+        let p = pv as usize;
+        let nbrs: Vec<i32> = adj[p]
+            .iter()
+            .cloned()
+            .filter(|&u| !eliminated[u as usize])
+            .collect();
+        for (i, &a) in nbrs.iter().enumerate() {
+            for &b in &nbrs[i + 1..] {
+                if adj[a as usize].insert(b) {
+                    adj[b as usize].insert(a);
+                    fill += 1;
+                }
+            }
+        }
+        eliminated[p] = true;
+    }
+    fill
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{mesh2d, random_graph};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn analyze_matches_naive_on_random_graphs() {
+        for seed in 0..5 {
+            let g = random_graph(60, 6, seed);
+            let mut rng = Rng::new(seed + 100);
+            let perm = rng.permutation(g.n);
+            let info = analyze(&g, &perm);
+            assert_eq!(info.fill_in, fill_in_naive(&g, &perm), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn analyze_matches_naive_on_mesh() {
+        let g = mesh2d(7, 7);
+        let id: Vec<i32> = (0..g.n as i32).collect();
+        let info = analyze(&g, &id);
+        assert_eq!(info.fill_in, fill_in_naive(&g, &id));
+        // Natural ordering of a 7x7 5-pt grid is known to produce fill.
+        assert!(info.fill_in > 0);
+    }
+
+    #[test]
+    fn tree_graph_has_no_fill_with_leaf_ordering() {
+        // A path graph eliminated end-to-start produces no fill.
+        let n = 20;
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        let g = SymGraph::from_edges(n, &edges);
+        let perm: Vec<i32> = (0..n as i32).collect();
+        assert_eq!(fill_in(&g, &perm), 0);
+        // nnz(L) = diagonal + one off-diagonal per non-root column.
+        assert_eq!(analyze(&g, &perm).nnz_l, (2 * n - 1) as i64);
+    }
+
+    #[test]
+    fn complete_graph_never_fills() {
+        let n = 8;
+        let mut edges = vec![];
+        for i in 0..n {
+            for j in i + 1..n {
+                edges.push((i, j));
+            }
+        }
+        let g = SymGraph::from_edges(n, &edges);
+        let mut rng = Rng::new(5);
+        let perm = rng.permutation(n);
+        assert_eq!(fill_in(&g, &perm), 0);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = SymGraph::from_edges(4, &[]);
+        let perm: Vec<i32> = (0..4).collect();
+        let info = analyze(&g, &perm);
+        assert_eq!(info.fill_in, 0);
+        assert_eq!(info.nnz_l, 4);
+    }
+
+    #[test]
+    fn flops_positive_and_bounded() {
+        let g = mesh2d(10, 10);
+        let id: Vec<i32> = (0..g.n as i32).collect();
+        let info = analyze(&g, &id);
+        assert!(info.flops >= info.nnz_l as f64);
+        assert!(info.flops <= (g.n as f64).powi(3));
+    }
+}

@@ -1,0 +1,64 @@
+//! Small shared utilities: deterministic RNG, timers, statistics, logging.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+/// Ceiling division for `usize`.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Split `n` items into `t` contiguous chunks as evenly as possible and
+/// return the `[start, end)` range of chunk `tid`.
+///
+/// The first `n % t` chunks get one extra item, matching OpenMP's static
+/// schedule. Every index in `0..n` is covered exactly once.
+#[inline]
+pub fn chunk_range(n: usize, t: usize, tid: usize) -> (usize, usize) {
+    debug_assert!(tid < t);
+    let base = n / t;
+    let rem = n % t;
+    let start = tid * base + tid.min(rem);
+    let len = base + usize::from(tid < rem);
+    (start, start + len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 3), 0);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(3, 3), 1);
+        assert_eq!(ceil_div(4, 3), 2);
+    }
+
+    #[test]
+    fn chunk_range_covers_all() {
+        for n in [0usize, 1, 7, 64, 65, 1000] {
+            for t in [1usize, 2, 3, 7, 64] {
+                let mut next = 0usize;
+                for tid in 0..t {
+                    let (s, e) = chunk_range(n, t, tid);
+                    assert_eq!(s, next, "n={n} t={t} tid={tid}");
+                    assert!(e >= s);
+                    next = e;
+                }
+                assert_eq!(next, n);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_range_balanced() {
+        let (s0, e0) = chunk_range(10, 3, 0);
+        let (s1, e1) = chunk_range(10, 3, 1);
+        let (s2, e2) = chunk_range(10, 3, 2);
+        assert_eq!((e0 - s0, e1 - s1, e2 - s2), (4, 3, 3));
+    }
+}

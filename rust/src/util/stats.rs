@@ -1,0 +1,145 @@
+//! Descriptive statistics for benchmark reporting: mean ± std (Table 4.2),
+//! percentiles and histogram bins (the Figure 4.2 violin plots).
+
+/// Mean of a sample (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator; 0 for fewer than 2 points).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Linear-interpolated percentile, `q` in [0, 100]. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Five-number summary + mean, the series a violin/box plot needs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub min: f64,
+    pub p25: f64,
+    pub median: f64,
+    pub p75: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+pub fn summary(xs: &[f64]) -> Summary {
+    Summary {
+        min: percentile(xs, 0.0),
+        p25: percentile(xs, 25.0),
+        median: percentile(xs, 50.0),
+        p75: percentile(xs, 75.0),
+        max: percentile(xs, 100.0),
+        mean: mean(xs),
+        n: xs.len(),
+    }
+}
+
+/// Histogram over `bins` equal-width buckets spanning `[min, max]` of the
+/// data; returns `(bucket_low_edges, counts)`. Used to print violin-plot
+/// density series as text.
+pub fn histogram(xs: &[f64], bins: usize) -> (Vec<f64>, Vec<usize>) {
+    assert!(bins > 0);
+    if xs.is_empty() {
+        return (vec![0.0; bins], vec![0; bins]);
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let width = if hi > lo { (hi - lo) / bins as f64 } else { 1.0 };
+    let mut counts = vec![0usize; bins];
+    for &x in xs {
+        let mut b = ((x - lo) / width) as usize;
+        if b >= bins {
+            b = bins - 1;
+        }
+        counts[b] += 1;
+    }
+    let edges = (0..bins).map(|i| lo + i as f64 * width).collect();
+    (edges, counts)
+}
+
+/// Fraction of samples strictly below `threshold` (the paper quotes the
+/// share of distance-2 sets with size < 64 in §4.4).
+pub fn frac_below(xs: &[f64], threshold: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().filter(|&&x| x < threshold).count() as f64 / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935299395).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(std_dev(&[3.0]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_ordered() {
+        let xs = [5.0, 1.0, 9.0, 3.0, 7.0];
+        let s = summary(&xs);
+        assert!(s.min <= s.p25 && s.p25 <= s.median);
+        assert!(s.median <= s.p75 && s.p75 <= s.max);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.median, 5.0);
+    }
+
+    #[test]
+    fn histogram_counts_all() {
+        let xs = [0.0, 0.1, 0.5, 0.9, 1.0];
+        let (_, counts) = histogram(&xs, 4);
+        assert_eq!(counts.iter().sum::<usize>(), xs.len());
+    }
+
+    #[test]
+    fn frac_below_works() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((frac_below(&xs, 3.0) - 0.5).abs() < 1e-12);
+        assert_eq!(frac_below(&[], 3.0), 0.0);
+    }
+}

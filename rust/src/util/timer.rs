@@ -1,0 +1,108 @@
+//! Wall-clock timing helpers used by the benchmark harness and the
+//! coordinator's metrics.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Clone, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::new();
+    let out = f();
+    (out, t.secs())
+}
+
+/// An accumulating phase timer: named buckets of seconds, used for the
+/// paper's Figure 4.1 runtime breakdown.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimes {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimes {
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == phase) {
+            e.1 += secs;
+        } else {
+            self.entries.push((phase.to_string(), secs));
+        }
+    }
+
+    pub fn get(&self, phase: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == phase)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.entries.iter().map(|(n, s)| (n.as_str(), *s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::new();
+        let a = t.secs();
+        let b = t.secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let (v, s) = time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn phase_times_accumulate() {
+        let mut p = PhaseTimes::default();
+        p.add("select", 1.0);
+        p.add("core", 2.0);
+        p.add("select", 0.5);
+        assert_eq!(p.get("select"), 1.5);
+        assert_eq!(p.get("core"), 2.0);
+        assert_eq!(p.get("missing"), 0.0);
+        assert!((p.total() - 3.5).abs() < 1e-12);
+    }
+}

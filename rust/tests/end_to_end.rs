@@ -1,0 +1,130 @@
+//! Full-pipeline integration: matrix generation → (nonsymmetric)
+//! symmetrization → ordering → symbolic → numeric factor (native + PJRT)
+//! → solve → residual, plus Matrix Market round-trips — the composition
+//! the paper's Tables 1.1/4.3 rely on.
+
+use paramd::cholesky::{factor, residual, solve, DenseTail, NativeDense};
+use paramd::coordinator::{Method, OrderRequest, Service, SolveSpec};
+use paramd::graph::{mm, symmetrize};
+use paramd::matgen::{self, nonsymmetric_flow, spd_from_graph, Scale};
+use paramd::ordering::{amd_seq::AmdSeq, paramd::ParAmd, Ordering as _};
+
+#[test]
+fn suite_matrices_order_and_solve_native() {
+    for e in matgen::suite() {
+        let g = (e.gen)(Scale::Tiny);
+        let a = spd_from_graph(&g, 1.0);
+        let perm = ParAmd::new(2).order(&g).perm;
+        let f = factor(&a, &perm, DenseTail::default(), &NativeDense).unwrap();
+        let b = vec![1.0; a.nrows];
+        let x = solve(&f, &b);
+        let r = residual(&a, &x, &b);
+        assert!(r < 1e-9, "{}: residual {r:e}", e.name);
+    }
+}
+
+#[test]
+fn nonsymmetric_input_via_symmetrization_path() {
+    let a = nonsymmetric_flow(8, 8, 8, 3);
+    assert!(!a.is_pattern_symmetric());
+    let g = symmetrize(&a);
+    let r = AmdSeq::default().order(&g);
+    assert_eq!(r.perm.len(), a.nrows);
+    // The ordering applies to A + A^T; factoring the SPD proxy built from
+    // the symmetrized pattern must succeed.
+    let spd = spd_from_graph(&g, 1.0);
+    let f = factor(&spd, &r.perm, DenseTail::None, &NativeDense).unwrap();
+    let b = vec![1.0; spd.nrows];
+    let x = solve(&f, &b);
+    assert!(residual(&spd, &x, &b) < 1e-10);
+}
+
+#[test]
+fn matrix_market_roundtrip_through_pipeline() {
+    let dir = std::env::temp_dir().join("paramd_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pipe.mtx");
+    let g = matgen::mesh2d(9, 9);
+    let a = spd_from_graph(&g, 1.0);
+    mm::write_matrix_market(&path, &a).unwrap();
+    let a2 = mm::read_matrix_market(&path).unwrap();
+    assert_eq!(a, a2);
+    let g2 = symmetrize(&a2);
+    let perm = AmdSeq::default().order(&g2).perm;
+    let f = factor(&a2, &perm, DenseTail::default(), &NativeDense).unwrap();
+    let b = vec![2.0; a2.nrows];
+    let x = solve(&f, &b);
+    assert!(residual(&a2, &x, &b) < 1e-10);
+}
+
+#[test]
+fn service_runs_mixed_workload_with_metrics() {
+    let mut svc = Service::new(2);
+    for (i, e) in matgen::suite().into_iter().enumerate() {
+        let g = (e.gen)(Scale::Tiny);
+        let method = if i % 2 == 0 {
+            Method::ParAmd {
+                threads: 2,
+                mult: 1.1,
+                lim_total: 0,
+            }
+        } else {
+            Method::Amd
+        };
+        let rep = svc.order(&OrderRequest {
+            matrix: Some(spd_from_graph(&g, 1.0)),
+            pattern: None,
+            method,
+            compute_fill: true,
+        });
+        assert_eq!(rep.perm.len(), g.n);
+    }
+    assert_eq!(svc.metrics().total_requests() as usize, matgen::suite().len());
+    let report = svc.metrics().report();
+    assert!(report.contains("amd"));
+    assert!(report.contains("paramd"));
+}
+
+#[test]
+fn service_solve_via_pjrt_when_artifacts_present() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut svc = Service::new(1)
+        .with_pjrt_solver("artifacts".into())
+        .expect("pjrt init");
+    let g = matgen::mesh2d(11, 11);
+    let rep = svc
+        .solve(
+            &OrderRequest {
+                matrix: Some(spd_from_graph(&g, 1.0)),
+                pattern: None,
+                method: Method::Amd,
+                compute_fill: false,
+            },
+            &SolveSpec::OnesSolution,
+        )
+        .unwrap();
+    assert_eq!(rep.engine, "pjrt");
+    assert!(rep.residual < 1e-10, "{:e}", rep.residual);
+    assert!(rep.dense_tail_cols > 0, "expected a PJRT-factored tail");
+}
+
+#[test]
+fn ordering_reduces_solver_work_vs_natural() {
+    // The whole point of fill-reducing orderings: nnz(L) with AMD must be
+    // well below nnz(L) with the natural order on a 2D mesh.
+    let g = matgen::mesh2d(24, 24);
+    let a = spd_from_graph(&g, 1.0);
+    let natural: Vec<i32> = (0..g.n as i32).collect();
+    let amd = AmdSeq::default().order(&g).perm;
+    let f_nat = factor(&a, &natural, DenseTail::None, &NativeDense).unwrap();
+    let f_amd = factor(&a, &amd, DenseTail::None, &NativeDense).unwrap();
+    assert!(
+        (f_amd.nnz_l as f64) < 0.8 * f_nat.nnz_l as f64,
+        "amd {} vs natural {}",
+        f_amd.nnz_l,
+        f_nat.nnz_l
+    );
+}

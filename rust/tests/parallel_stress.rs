@@ -1,0 +1,120 @@
+//! Concurrency stress for ParAMD: odd thread counts, more threads than
+//! vertices, repeated seeds, and cross-thread-count quality stability.
+
+use paramd::graph::csr::SymGraph;
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::{kkt, mesh2d, mesh3d, random_graph};
+use paramd::ordering::{amd_seq::AmdSeq, paramd::ParAmd, Ordering as _};
+use paramd::symbolic::fill_in;
+
+#[test]
+fn thread_sweep_on_mesh() {
+    let g = mesh2d(18, 18);
+    for t in [1, 2, 3, 5, 7, 8, 13, 16] {
+        let r = ParAmd::new(t).order(&g);
+        assert!(is_valid_perm(&r.perm), "t={t}");
+        assert_eq!(r.perm.len(), g.n);
+    }
+}
+
+#[test]
+fn more_threads_than_vertices() {
+    let g = random_graph(20, 3, 1);
+    let r = ParAmd::new(64).order(&g);
+    assert!(is_valid_perm(&r.perm));
+}
+
+#[test]
+fn single_vertex_and_edge() {
+    for (n, edges) in [(1usize, vec![]), (2, vec![(0usize, 1usize)])] {
+        let g = SymGraph::from_edges(n, &edges);
+        let r = ParAmd::new(4).order(&g);
+        assert!(is_valid_perm(&r.perm));
+    }
+}
+
+#[test]
+fn repeated_runs_all_valid_and_quality_stable() {
+    let g = mesh3d(8, 8, 8);
+    let f_seq = fill_in(&g, &AmdSeq::default().order(&g).perm) as f64;
+    for seed in 0..6 {
+        let r = ParAmd::new(4).with_seed(seed).order(&g);
+        assert!(is_valid_perm(&r.perm), "seed={seed}");
+        let f = fill_in(&g, &r.perm) as f64;
+        assert!(
+            f < 1.8 * f_seq,
+            "seed={seed}: fill {f} vs seq {f_seq} drifted"
+        );
+    }
+}
+
+#[test]
+fn quality_stable_across_thread_counts() {
+    let g = kkt(8, 8, 8, 3, 5);
+    let fills: Vec<f64> = [1usize, 2, 4, 8]
+        .iter()
+        .map(|&t| fill_in(&g, &ParAmd::new(t).order(&g).perm) as f64)
+        .collect();
+    let lo = fills.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = fills.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        hi / lo < 1.5,
+        "fill varies too much across threads: {fills:?}"
+    );
+}
+
+#[test]
+fn dist2_property_spot_check_on_first_round() {
+    // Run with a tracing seed and assert the first-round pivot set is
+    // distance-2 independent in the *original* graph (where quotient
+    // neighborhoods equal graph neighborhoods).
+    let g = mesh2d(14, 14);
+    let (r, d) = ParAmd::new(4).order_detailed(&g);
+    assert!(is_valid_perm(&r.perm));
+    let first_round_size = d.set_sizes.first().copied().unwrap_or(0) as usize;
+    assert!(first_round_size >= 1);
+    // The first `first_round_size` pivots of the elimination order are the
+    // round-0 set (merged in round order).
+    let pivots: Vec<usize> = r
+        .perm
+        .iter()
+        .map(|&v| v as usize)
+        .take(1) // perm order within bucket starts with the pivot itself
+        .collect();
+    // Cheap sanity only: the first pivot must exist; the strong D2 check
+    // lives in the dist2 unit tests.
+    assert!(pivots[0] < g.n);
+}
+
+#[test]
+fn stress_many_small_graphs_concurrently() {
+    // Drive several ParAMD instances from parallel test threads to shake
+    // out accidental global state.
+    std::thread::scope(|s| {
+        for seed in 0..4u64 {
+            s.spawn(move || {
+                let g = random_graph(150, 5, seed);
+                let r = ParAmd::new(3).with_seed(seed).order(&g);
+                assert!(is_valid_perm(&r.perm));
+            });
+        }
+    });
+}
+
+#[test]
+fn huge_lim_and_tiny_lim_both_work() {
+    let g = mesh2d(16, 16);
+    for lim in [1usize, 2, usize::MAX / 4] {
+        let r = ParAmd::new(2).with_lim_total(lim).order(&g);
+        assert!(is_valid_perm(&r.perm), "lim={lim}");
+    }
+}
+
+#[test]
+fn non_aggressive_parallel_mode() {
+    let g = mesh3d(6, 6, 6);
+    let mut cfg = ParAmd::new(4);
+    cfg.aggressive = false;
+    let r = cfg.order(&g);
+    assert!(is_valid_perm(&r.perm));
+}
