@@ -12,9 +12,9 @@ use paramd::coordinator::{Method, OrderRequest, Service, SolveSpec};
 use paramd::matgen::{self, Scale};
 
 fn main() {
-    let mut svc = Service::new(2)
+    let svc = Service::new(2)
         .with_pjrt_solver("artifacts".into())
-        .expect("PJRT solver (run `make artifacts` first)");
+        .expect("PJRT solver (run `make artifacts`; needs the `pjrt` feature)");
 
     let methods = [
         ("SuiteSparse-style AMD", Method::Amd),

@@ -1,0 +1,94 @@
+//! Repeated-ordering throughput: cold vs warm ParAMD.
+//!
+//! Cold = the seed behavior: every `order()` spawns a fresh thread pool
+//! and allocates every O(n)/O(nnz) array. Warm = one persistent
+//! `OrderingRuntime` plus one pooled `ParAmdArena` reused across
+//! requests. Reports orders/sec for both and writes the JSON trajectory
+//! file `BENCH_paramd_throughput.json` (override with
+//! `PARAMD_BENCH_OUT`; default lands in the repository root when run via
+//! `cargo bench` from `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 20).
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::graph::csr::SymGraph;
+use paramd::matgen::{mesh2d, mesh3d, random_graph};
+use paramd::ordering::paramd::arena::ParAmdArena;
+use paramd::ordering::paramd::runtime::OrderingRuntime;
+use paramd::ordering::paramd::ParAmd;
+use paramd::ordering::Ordering as _;
+use paramd::util::timer::Timer;
+
+fn main() {
+    bench_common::banner(
+        "ParAMD repeated-ordering throughput — cold vs warm",
+        "ROADMAP warm-path PR; not a paper table",
+    );
+    let t = bench_common::threads();
+    let reps: usize = std::env::var("PARAMD_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    let graphs: Vec<(&str, SymGraph)> = vec![
+        ("mesh2d_60x60", mesh2d(60, 60)),
+        ("mesh3d_14", mesh3d(14, 14, 14)),
+        ("random_5k_d8", random_graph(5000, 8, 42)),
+    ];
+
+    println!(
+        "{:<14} {:>8} {:>10} {:>14} {:>14} {:>9}",
+        "graph", "n", "nnz", "cold ord/s", "warm ord/s", "speedup"
+    );
+    let mut rows: Vec<String> = Vec::new();
+    for (name, g) in &graphs {
+        let cfg = ParAmd::new(t);
+
+        // Cold: per-request pool spawn + fresh allocations (seed behavior).
+        let tc = Timer::new();
+        for _ in 0..reps {
+            let r = cfg.order(g);
+            assert_eq!(r.perm.len(), g.n);
+        }
+        let cold = reps as f64 / tc.secs();
+
+        // Warm: persistent pool + pooled arena; first run sizes the arena.
+        let rt = OrderingRuntime::new(t);
+        let mut arena = ParAmdArena::new();
+        cfg.order_into(&rt, &mut arena, g);
+        let tw = Timer::new();
+        for _ in 0..reps {
+            let r = cfg.order_into(&rt, &mut arena, g);
+            assert_eq!(r.perm.len(), g.n);
+        }
+        let warm = reps as f64 / tw.secs();
+        let speedup = warm / cold;
+
+        println!(
+            "{name:<14} {:>8} {:>10} {cold:>14.2} {warm:>14.2} {speedup:>8.2}x",
+            g.n,
+            g.nnz()
+        );
+        rows.push(format!(
+            "    {{\"graph\": \"{name}\", \"n\": {}, \"nnz\": {}, \"threads\": {t}, \
+             \"reps\": {reps}, \"cold_orders_per_sec\": {cold:.3}, \
+             \"warm_orders_per_sec\": {warm:.3}, \"warm_speedup\": {speedup:.3}, \
+             \"arena_grow_events\": {}}}",
+            g.n,
+            g.nnz(),
+            arena.grow_events()
+        ));
+    }
+
+    let out = std::env::var("PARAMD_BENCH_OUT")
+        .unwrap_or_else(|_| "../BENCH_paramd_throughput.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"paramd_throughput\",\n  \"status\": \"measured\",\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -2,10 +2,29 @@
 //!
 //! The paper's AMD use case is a pipeline stage inside a sparse direct
 //! solver; this module packages the library as one deployable component:
-//! a request queue, an ordering executor (ParAMD spawns its own thread
-//! pool per request), and a dedicated **solver thread** that owns the
-//! non-`Sync` PJRT engine and serves factor+solve requests over a channel.
-//! Metrics (latency summaries, counters) are collected per method.
+//! a request queue, an ordering executor, and a dedicated **solver
+//! thread** that owns the non-`Sync` PJRT engine and serves factor+solve
+//! requests over a channel. Metrics (latency summaries, counters) are
+//! collected per method.
+//!
+//! ## Warm ordering path
+//!
+//! The service owns **one persistent
+//! [`OrderingRuntime`](crate::ordering::paramd::runtime::OrderingRuntime)**
+//! — a pool of worker threads spawned at construction and parked between
+//! requests — plus an
+//! [`ArenaPool`](crate::ordering::paramd::arena::ArenaPool) of reusable
+//! per-run storage. Every ParAMD request borrows the shared runtime and a
+//! pooled arena, so the steady state neither spawns threads nor performs
+//! O(n)/O(nnz) allocations inside the ordering (the reply's owned
+//! permutation is the only per-request copy). Concurrent requests are
+//! safe: the runtime serializes jobs internally and each request checks
+//! out its own arena, so [`Service`] is `Sync` and callable through
+//! `&self` from many threads.
+//!
+//! The pool size is fixed at construction ([`Service::new`] /
+//! [`Service::with_order_threads`]); a request's `Method::ParAmd.threads`
+//! knob is superseded by the shared pool.
 
 pub mod metrics;
 pub mod request;
@@ -13,30 +32,37 @@ pub mod request;
 pub use metrics::Metrics;
 pub use request::{Method, OrderReply, OrderRequest, SolveReply, SolveSpec};
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
 
 use crate::cholesky::{self, DenseTail, NativeDense};
 use crate::graph::symmetrize_parallel;
+use crate::nd::NestedDissection;
+use crate::ordering::paramd::arena::ArenaPool;
+use crate::ordering::paramd::runtime::OrderingRuntime;
 use crate::ordering::{
     amd_seq::AmdSeq, md::MinDegree, mmd::Mmd, paramd::ParAmd, Ordering as _, OrderingResult,
 };
-use crate::nd::NestedDissection;
 use crate::symbolic;
 use crate::util::timer::Timer;
 
-/// The ordering service. Construct once, submit requests, read metrics.
+/// The ordering service. Construct once, submit requests (from any number
+/// of threads), read metrics.
 pub struct Service {
-    metrics: Metrics,
+    metrics: Mutex<Metrics>,
     /// Threads used for the symmetrization pre-processing (§4.2).
     pre_threads: usize,
     /// Dense-tail policy handed to the solver.
     tail: DenseTail,
     /// Channel to the dedicated PJRT solver thread (None = native only).
     solver: Option<SolverHandle>,
+    /// Persistent ParAMD worker pool shared by all ordering requests.
+    order_rt: OrderingRuntime,
+    /// Pooled arenas: warm storage checked out per ordering request.
+    arenas: ArenaPool,
 }
 
 struct SolverHandle {
-    tx: mpsc::Sender<SolveJob>,
+    tx: Mutex<mpsc::Sender<SolveJob>>,
     _thread: std::thread::JoinHandle<()>,
 }
 
@@ -49,14 +75,25 @@ struct SolveJob {
 }
 
 impl Service {
-    /// A service with the native dense engine only.
+    /// A service with the native dense engine only. The persistent
+    /// ordering pool is sized to `pre_threads` (see
+    /// [`Self::with_order_threads`] to size it independently).
     pub fn new(pre_threads: usize) -> Self {
+        let pre_threads = pre_threads.max(1);
         Self {
-            metrics: Metrics::default(),
-            pre_threads: pre_threads.max(1),
+            metrics: Mutex::new(Metrics::default()),
+            pre_threads,
             tail: DenseTail::default(),
             solver: None,
+            order_rt: OrderingRuntime::new(pre_threads),
+            arenas: ArenaPool::new(),
         }
+    }
+
+    /// Rebuild the persistent ordering pool with `threads` workers.
+    pub fn with_order_threads(mut self, threads: usize) -> Self {
+        self.order_rt = OrderingRuntime::new(threads.max(1));
+        self
     }
 
     /// Attach the PJRT-backed solver thread. The engine is created *on*
@@ -99,7 +136,7 @@ impl Service {
             };
         }
         self.solver = Some(SolverHandle {
-            tx,
+            tx: Mutex::new(tx),
             _thread: thread,
         });
         Ok(self)
@@ -110,14 +147,21 @@ impl Service {
         self
     }
 
-    pub fn metrics(&self) -> &Metrics {
-        &self.metrics
+    /// Snapshot of the per-method metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Number of idle pooled arenas (observability hook).
+    pub fn idle_arenas(&self) -> usize {
+        self.arenas.idle()
     }
 
     /// Run an ordering request (synchronously; ParAMD parallelism happens
-    /// inside). Includes the `|A| + |A^T|` pre-processing unless the
-    /// request says the input is already symmetric (§4.2's advice).
-    pub fn order(&mut self, req: &OrderRequest) -> OrderReply {
+    /// inside on the shared persistent pool). Includes the `|A| + |A^T|`
+    /// pre-processing unless the request says the input is already
+    /// symmetric (§4.2's advice).
+    pub fn order(&self, req: &OrderRequest) -> OrderReply {
         let total = Timer::new();
         let tpre = Timer::new();
         let g = if let Some(g) = &req.pattern {
@@ -127,46 +171,75 @@ impl Service {
         };
         let pre_secs = tpre.secs();
 
+        // What a reply needs from an ordering: the owned permutation plus
+        // three scalar stats. Extracting just these keeps the warm ParAMD
+        // arm down to a single O(n) copy (the reply's own `perm`).
+        fn parts(r: OrderingResult) -> (Vec<i32>, u64, u64, f64) {
+            (
+                r.perm,
+                r.stats.rounds,
+                r.stats.gc_count,
+                r.stats.modeled_time,
+            )
+        }
+
         let tord = Timer::new();
-        let result: OrderingResult = match &req.method {
-            Method::Amd => AmdSeq::default().order(&g),
-            Method::Mmd => Mmd::default().order(&g),
-            Method::MinDegree => MinDegree.order(&g),
-            Method::Nd => NestedDissection::default().order(&g),
+        let (perm, rounds, gc_count, modeled_time) = match &req.method {
+            Method::Amd => parts(AmdSeq::default().order(&g)),
+            Method::Mmd => parts(Mmd::default().order(&g)),
+            Method::MinDegree => parts(MinDegree.order(&g)),
+            Method::Nd => parts(NestedDissection::default().order(&g)),
             Method::ParAmd {
-                threads,
+                threads: _,
                 mult,
                 lim_total,
-            } => ParAmd::new(*threads)
-                .with_mult(*mult)
-                .with_lim_total(*lim_total)
-                .order(&g),
+            } => {
+                // Warm path: persistent pool + pooled arena. The request's
+                // `threads` knob is superseded by the shared pool size.
+                let cfg = ParAmd::new(self.order_rt.threads())
+                    .with_mult(*mult)
+                    .with_lim_total(*lim_total);
+                let mut arena = self.arenas.acquire();
+                let r = cfg.order_into(&self.order_rt, &mut arena, &g);
+                // The reply must own its permutation; everything else is
+                // read off the borrowed pooled result.
+                let out = (
+                    r.perm.clone(),
+                    r.stats.rounds,
+                    r.stats.gc_count,
+                    r.stats.modeled_time,
+                );
+                self.arenas.release(arena);
+                out
+            }
         };
         let order_secs = tord.secs();
 
         let fill = if req.compute_fill {
-            Some(symbolic::fill_in(&g, &result.perm))
+            Some(symbolic::fill_in(&g, &perm))
         } else {
             None
         };
         let reply = OrderReply {
-            perm: result.perm,
+            perm,
             fill_in: fill,
             pre_secs,
             order_secs,
             total_secs: total.secs(),
-            rounds: result.stats.rounds,
-            gc_count: result.stats.gc_count,
-            modeled_time: result.stats.modeled_time,
+            rounds,
+            gc_count,
+            modeled_time,
         };
         self.metrics
+            .lock()
+            .unwrap()
             .record(req.method.name(), reply.total_secs, reply.fill_in);
         reply
     }
 
     /// Order + factor + solve. Uses the PJRT solver thread when attached,
     /// otherwise the native dense engine inline.
-    pub fn solve(&mut self, req: &OrderRequest, spec: &SolveSpec) -> Result<SolveReply, String> {
+    pub fn solve(&self, req: &OrderRequest, spec: &SolveSpec) -> Result<SolveReply, String> {
         let a = req
             .matrix
             .as_ref()
@@ -187,6 +260,8 @@ impl Service {
             let (reply_tx, reply_rx) = mpsc::channel();
             handle
                 .tx
+                .lock()
+                .unwrap()
                 .send(SolveJob {
                     a,
                     perm: ordered.perm.clone(),
@@ -239,7 +314,7 @@ fn solve_with(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::matgen::{laplacian_matrix, mesh2d, spd_from_graph};
+    use crate::matgen::{mesh2d, spd_from_graph};
 
     fn spd_request(method: Method) -> OrderRequest {
         OrderRequest {
@@ -252,7 +327,7 @@ mod tests {
 
     #[test]
     fn order_via_every_method() {
-        let mut svc = Service::new(2);
+        let svc = Service::new(2);
         for m in [
             Method::Amd,
             Method::Mmd,
@@ -271,8 +346,55 @@ mod tests {
     }
 
     #[test]
+    fn repeated_paramd_requests_reuse_the_arena() {
+        let svc = Service::new(2);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(mesh2d(14, 14)),
+            method: Method::ParAmd {
+                threads: 2,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        for _ in 0..3 {
+            let rep = svc.order(&req);
+            assert_eq!(rep.perm.len(), 196);
+        }
+        assert_eq!(svc.idle_arenas(), 1, "sequential requests share one arena");
+    }
+
+    #[test]
+    fn concurrent_paramd_requests_pass_contract() {
+        use crate::ordering::test_support::check_ordering_contract;
+        let svc = Service::new(2);
+        std::thread::scope(|s| {
+            for i in 0..4usize {
+                let svc = &svc;
+                s.spawn(move || {
+                    let g = mesh2d(8 + i, 9);
+                    let rep = svc.order(&OrderRequest {
+                        matrix: None,
+                        pattern: Some(g.clone()),
+                        method: Method::ParAmd {
+                            threads: 2,
+                            mult: 1.1,
+                            lim_total: 0,
+                        },
+                        compute_fill: false,
+                    });
+                    let r = crate::ordering::OrderingResult::new(rep.perm);
+                    check_ordering_contract(&g, &r);
+                });
+            }
+        });
+        assert_eq!(svc.metrics().total_requests(), 4);
+    }
+
+    #[test]
     fn solve_native_end_to_end() {
-        let mut svc = Service::new(1);
+        let svc = Service::new(1);
         let req = spd_request(Method::Amd);
         let rep = svc
             .solve(&req, &SolveSpec::OnesSolution)
@@ -285,14 +407,15 @@ mod tests {
         assert_eq!(rep.engine, "native");
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn solve_pjrt_end_to_end() {
         let svc = Service::new(1).with_pjrt_solver("artifacts".into());
-        let mut svc = match svc {
+        let svc = match svc {
             Ok(s) => s,
             Err(e) => panic!("pjrt solver init failed: {e} (run `make artifacts`)"),
         };
-        let a = laplacian_matrix(10, 10);
+        let a = crate::matgen::laplacian_matrix(10, 10);
         let req = OrderRequest {
             matrix: Some(a),
             pattern: None,
@@ -308,9 +431,19 @@ mod tests {
         assert_eq!(rep.engine, "pjrt");
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_solver_reports_disabled_feature() {
+        let err = Service::new(1)
+            .with_pjrt_solver("artifacts".into())
+            .err()
+            .expect("stub must refuse");
+        assert!(err.contains("pjrt"), "unexpected error: {err}");
+    }
+
     #[test]
     fn pattern_requests_skip_preprocessing() {
-        let mut svc = Service::new(1);
+        let svc = Service::new(1);
         let req = OrderRequest {
             matrix: None,
             pattern: Some(mesh2d(10, 10)),

@@ -21,11 +21,19 @@ pub fn is_valid_perm(perm: &[i32]) -> bool {
 
 /// Invert a permutation: `out[perm[k]] = k`.
 pub fn invert_perm(perm: &[i32]) -> Vec<i32> {
-    let mut inv = vec![0i32; perm.len()];
-    for (k, &v) in perm.iter().enumerate() {
-        inv[v as usize] = k as i32;
-    }
+    let mut inv = Vec::new();
+    invert_perm_into(perm, &mut inv);
     inv
+}
+
+/// Invert a permutation into a reusable buffer (`out[perm[k]] = k`),
+/// allocating only when `out`'s capacity is too small.
+pub fn invert_perm_into(perm: &[i32], out: &mut Vec<i32>) {
+    out.clear();
+    out.resize(perm.len(), 0);
+    for (k, &v) in perm.iter().enumerate() {
+        out[v as usize] = k as i32;
+    }
 }
 
 /// Compose permutations: applying `first` then `second`.

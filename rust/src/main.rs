@@ -72,7 +72,7 @@ fn cmd_order(args: &Args) -> Result<(), String> {
     let scale = scale_of(args.get_or("scale", "small"));
     let matrix = load_matrix(args.get("matrix").ok_or("--matrix required")?, scale)?;
     let method = method_of(args)?;
-    let mut svc = Service::new(args.get_parse("pre-threads", 4usize));
+    let svc = Service::new(args.get_parse("pre-threads", 4usize));
     let req = OrderRequest {
         matrix: Some(matrix),
         pattern: None,

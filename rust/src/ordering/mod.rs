@@ -85,52 +85,80 @@ pub trait Ordering {
 /// pivot first (intra-bucket order is free — absorbed columns are
 /// indistinguishable from their pivot).
 pub(crate) fn rebuild_perm(n: usize, elim_order: &[i32], parent: &[i32]) -> Vec<i32> {
-    let mut pos_of_pivot = vec![-1i32; n];
+    let mut scratch = RebuildScratch::default();
+    let mut perm = Vec::new();
+    rebuild_perm_into(n, elim_order, parent, &mut scratch, &mut perm);
+    perm
+}
+
+/// Reusable buffers for [`rebuild_perm_into`] — lets warm-path callers
+/// (the ParAMD arena) rebuild permutations without O(n) allocations.
+#[derive(Debug, Default)]
+pub(crate) struct RebuildScratch {
+    pos_of_pivot: Vec<i32>,
+    owner: Vec<i32>,
+    cursor: Vec<usize>,
+    chain: Vec<i32>,
+}
+
+/// [`rebuild_perm`] into a caller-owned output buffer; allocates only when
+/// the scratch or output capacity is too small for `n`.
+pub(crate) fn rebuild_perm_into(
+    n: usize,
+    elim_order: &[i32],
+    parent: &[i32],
+    s: &mut RebuildScratch,
+    perm: &mut Vec<i32>,
+) {
+    s.pos_of_pivot.clear();
+    s.pos_of_pivot.resize(n, -1);
     for (k, &e) in elim_order.iter().enumerate() {
-        pos_of_pivot[e as usize] = k as i32;
+        s.pos_of_pivot[e as usize] = k as i32;
     }
-    let mut owner = vec![-1i32; n];
+    s.owner.clear();
+    s.owner.resize(n, -1);
     for v in 0..n {
-        if owner[v] != -1 {
+        if s.owner[v] != -1 {
             continue;
         }
-        let mut chain = vec![v as i32];
+        s.chain.clear();
+        s.chain.push(v as i32);
         let mut x = v;
-        while pos_of_pivot[x] == -1 {
+        while s.pos_of_pivot[x] == -1 {
             let p = parent[x];
             debug_assert!(p >= 0, "node {x} neither pivot nor absorbed");
             x = p as usize;
-            if owner[x] != -1 {
-                x = owner[x] as usize;
+            if s.owner[x] != -1 {
+                x = s.owner[x] as usize;
                 break;
             }
-            chain.push(x as i32);
+            s.chain.push(x as i32);
         }
-        for c in chain {
-            owner[c as usize] = x as i32;
+        for &c in &s.chain {
+            s.owner[c as usize] = x as i32;
         }
     }
-    let mut bucket_count = vec![0usize; elim_order.len() + 1];
+    s.cursor.clear();
+    s.cursor.resize(elim_order.len() + 1, 0);
     for v in 0..n {
-        bucket_count[pos_of_pivot[owner[v] as usize] as usize + 1] += 1;
+        s.cursor[s.pos_of_pivot[s.owner[v] as usize] as usize + 1] += 1;
     }
     for k in 0..elim_order.len() {
-        bucket_count[k + 1] += bucket_count[k];
+        s.cursor[k + 1] += s.cursor[k];
     }
-    let mut perm = vec![0i32; n];
-    let mut cursor = bucket_count;
+    perm.clear();
+    perm.resize(n, 0);
     for (k, &e) in elim_order.iter().enumerate() {
-        perm[cursor[k]] = e;
-        cursor[k] += 1;
+        perm[s.cursor[k]] = e;
+        s.cursor[k] += 1;
     }
     for v in 0..n {
-        let k = pos_of_pivot[owner[v] as usize] as usize;
+        let k = s.pos_of_pivot[s.owner[v] as usize] as usize;
         if v as i32 != elim_order[k] {
-            perm[cursor[k]] = v as i32;
-            cursor[k] += 1;
+            perm[s.cursor[k]] = v as i32;
+            s.cursor[k] += 1;
         }
     }
-    perm
 }
 
 #[cfg(test)]

@@ -89,8 +89,7 @@ pub fn closed_neighborhood(g: &SharedGraph, v: usize, out: &mut Vec<i32>, work: 
 }
 
 /// Phase 2 (lines 10–11): assign priorities and cache each candidate's
-/// closed neighborhood. Returns the priorities, aligned with
-/// `ws.candidates`.
+/// closed neighborhood. Fills `ws.prios`, aligned with `ws.candidates`.
 ///
 /// Perf: the neighborhoods are enumerated **once** here and cached in the
 /// workspace (`nbr_buf`/`nbr_ptr`) for the min and validate phases — the
@@ -98,15 +97,12 @@ pub fn closed_neighborhood(g: &SharedGraph, v: usize, out: &mut Vec<i32>, work: 
 /// them from any elimination), and the enumeration is ~half the selection
 /// cost (EXPERIMENTS.md §Perf, change #1). The explicit `l_min := ∞`
 /// reset of Alg 3.2 line 12 is subsumed by the round-stamped priorities
-/// (see [`priority`], change #2).
-pub fn luby_prepare(
-    g: &SharedGraph,
-    ws: &mut Workspace,
-    round: u32,
-    work: &mut u64,
-) -> Vec<u64> {
-    let mut prios = Vec::with_capacity(ws.candidates.len());
+/// (see [`priority`], change #2). The priorities live in the reused
+/// `ws.prios` buffer, so steady-state rounds allocate nothing.
+pub fn luby_prepare(g: &SharedGraph, ws: &mut Workspace, round: u32, work: &mut u64) {
     let candidates = std::mem::take(&mut ws.candidates);
+    let mut prios = std::mem::take(&mut ws.prios);
+    prios.clear();
     ws.nbr_buf.clear();
     ws.nbr_ptr.clear();
     ws.nbr_ptr.push(0);
@@ -118,23 +114,17 @@ pub fn luby_prepare(
         ws.nbr_ptr.push(ws.nbr_buf.len());
     }
     ws.candidates = candidates;
-    prios
+    ws.prios = prios;
 }
 
 /// Phase 3 (lines 14–16): atomic min-reduction of each candidate's
-/// priority over its (cached) closed neighborhood.
-pub fn luby_min(
-    _g: &SharedGraph,
-    ws: &mut Workspace,
-    prios: &[u64],
-    lmin: &[AtomicU64],
-    work: &mut u64,
-) {
+/// priority (`ws.prios`) over its (cached) closed neighborhood.
+pub fn luby_min(ws: &Workspace, lmin: &[AtomicU64], work: &mut u64) {
     for i in 0..ws.candidates.len() {
         let nbrs = &ws.nbr_buf[ws.nbr_ptr[i]..ws.nbr_ptr[i + 1]];
         *work += nbrs.len() as u64;
         for &u in nbrs {
-            lmin[u as usize].fetch_min(prios[i], Relaxed);
+            lmin[u as usize].fetch_min(ws.prios[i], Relaxed);
         }
     }
 }
@@ -142,24 +132,20 @@ pub fn luby_min(
 /// Phase 4 (lines 18–20): a candidate is valid iff its priority equals
 /// `l_min` everywhere in its (cached) closed neighborhood. Fills
 /// `ws.my_pivots`.
-pub fn luby_validate(
-    _g: &SharedGraph,
-    ws: &mut Workspace,
-    prios: &[u64],
-    lmin: &[AtomicU64],
-    work: &mut u64,
-) {
-    ws.my_pivots.clear();
+pub fn luby_validate(ws: &mut Workspace, lmin: &[AtomicU64], work: &mut u64) {
+    let mut pivots = std::mem::take(&mut ws.my_pivots);
+    pivots.clear();
     'cand: for i in 0..ws.candidates.len() {
         let nbrs = &ws.nbr_buf[ws.nbr_ptr[i]..ws.nbr_ptr[i + 1]];
         *work += nbrs.len() as u64;
         for &u in nbrs {
-            if lmin[u as usize].load(Relaxed) != prios[i] {
+            if lmin[u as usize].load(Relaxed) != ws.prios[i] {
                 continue 'cand;
             }
         }
-        ws.my_pivots.push(ws.candidates[i]);
+        pivots.push(ws.candidates[i]);
     }
+    ws.my_pivots = pivots;
 }
 
 #[cfg(test)]
@@ -189,9 +175,10 @@ mod tests {
         let amd = lists.lamd(&aff);
         collect_candidates(&mut lists, &aff, &mut ws, amd, 2.0, 10_000, g0.n);
         assert!(!ws.candidates.is_empty());
-        let prios = luby_prepare(&g, &mut ws, 0, &mut work);
-        luby_min(&g, &mut ws, &prios, &lmin, &mut work);
-        luby_validate(&g, &mut ws, &prios, &lmin, &mut work);
+        luby_prepare(&g, &mut ws, 0, &mut work);
+        assert_eq!(ws.prios.len(), ws.candidates.len());
+        luby_min(&ws, &lmin, &mut work);
+        luby_validate(&mut ws, &lmin, &mut work);
         let set: Vec<usize> = ws.my_pivots.iter().map(|&v| v as usize).collect();
         assert!(!set.is_empty(), "Luby round must select at least one pivot");
         // distance-2 check on the original mesh

@@ -36,6 +36,20 @@ impl Affinity {
     pub fn set(&self, v: usize, tid: i32) {
         self.flags[v].store(tid, Relaxed);
     }
+
+    /// Re-initialize for a graph of `n` vertices, growing monotonically and
+    /// reusing storage when the graph fits. Returns 1 if storage grew.
+    pub fn reset(&mut self, n: usize) -> u32 {
+        let mut grew = 0;
+        if self.flags.len() < n {
+            self.flags.resize_with(n, || AtomicI32::new(-1));
+            grew = 1;
+        }
+        for f in &self.flags[..n] {
+            f.store(-1, Relaxed);
+        }
+        grew
+    }
 }
 
 /// One thread's degree lists (Algorithm 3.1 state for a single `tid`).
@@ -64,6 +78,35 @@ impl ThreadLists {
             loc: vec![-1; n],
             lamd: n,
         }
+    }
+
+    /// Re-initialize for a graph of `n` vertices, growing monotonically and
+    /// reusing list storage when the graph fits (the arena's warm path).
+    /// Returns 1 if storage grew.
+    pub fn reset(&mut self, n: usize) -> u32 {
+        let mut grew = 0;
+        if self.dnext.len() < n {
+            self.dhead.resize(n + 1, -1);
+            self.dnext.resize(n, -1);
+            self.dprev.resize(n, -1);
+            self.loc.resize(n, -1);
+            grew = 1;
+        }
+        self.n = n;
+        self.lamd = n;
+        for x in self.dhead[..=n].iter_mut() {
+            *x = -1;
+        }
+        for x in self.dnext[..n].iter_mut() {
+            *x = -1;
+        }
+        for x in self.dprev[..n].iter_mut() {
+            *x = -1;
+        }
+        for x in self.loc[..n].iter_mut() {
+            *x = -1;
+        }
+        grew
     }
 
     /// Algorithm 3.1 `REMOVE(tid, v)` — O(1): invalidate every copy of `v`
@@ -256,6 +299,30 @@ mod tests {
         assert_eq!(l.lamd(&aff), 4);
         l.remove(&aff, 1);
         assert_eq!(l.lamd(&aff), 8);
+    }
+
+    #[test]
+    fn reset_reuses_storage_and_clears_state() {
+        let mut aff = Affinity::new(10);
+        let mut l = ThreadLists::new(0, 10);
+        l.insert(&aff, 3, 5);
+        l.insert(&aff, 7, 2);
+        // Same-size reset: no growth, all lists empty again.
+        assert_eq!(l.reset(10), 0);
+        assert_eq!(aff.reset(10), 0);
+        assert_eq!(l.lamd(&aff), 10);
+        let mut out = vec![];
+        l.get(&aff, 5, &mut out);
+        assert!(out.is_empty());
+        // Shrink then regrow: monotonic storage, correct behavior at both.
+        assert_eq!(l.reset(4), 0);
+        assert_eq!(aff.reset(4), 0);
+        l.insert(&aff, 2, 3);
+        assert_eq!(l.lamd(&aff), 3);
+        assert_eq!(l.reset(16), 1);
+        assert_eq!(aff.reset(16), 1);
+        l.insert(&aff, 15, 12);
+        assert_eq!(l.lamd(&aff), 12);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! ParAMD — the paper's contribution (§3): parallel approximate minimum
 //! degree via multiple elimination on distance-2 independent sets.
 //!
-//! Algorithm 3.3 round structure, executed by `threads` OS threads
+//! Algorithm 3.3 round structure, executed by `threads` worker threads
 //! synchronized with barriers:
 //!
 //! 1. every thread publishes its local minimum approximate degree
@@ -15,28 +15,54 @@
 //!    concurrent degree lists (§3.3.2);
 //! 5. a stop-the-world GC runs at the round boundary if any claim failed.
 //!
+//! ## Warm-path architecture (runtime + arena)
+//!
+//! The execution substrate is split from the algorithm so repeated
+//! orderings are spawn-free and allocation-free:
+//!
+//! - [`runtime::OrderingRuntime`] — a persistent worker pool. Workers are
+//!   spawned once, park on a condvar between requests, and synchronize on
+//!   a reusable round [`Barrier`] while running.
+//! - [`arena::ParAmdArena`] — pooled per-run storage: the [`SharedGraph`]
+//!   slab, per-thread [`workspace::Workspace`]/[`lists::ThreadLists`]
+//!   slots, the Luby `l_min` array, and the result-assembly scratch. All
+//!   of it grows monotonically and is reset by bulk stores or epoch
+//!   bumps, never reallocation, when the next graph fits.
+//! - The per-thread hot counters (`lamds`, `sizes`) are cache-line padded
+//!   ([`arena::CachePadded`]) against the intra-step false sharing the
+//!   paper identifies in §4.
+//!
+//! [`ParAmd::order_into`] is the warm entry point: it borrows a runtime
+//! and an arena and leaves the result in the arena's pooled buffers.
+//! [`ParAmd::order`] / [`ParAmd::order_detailed`] remain the one-shot
+//! convenience (cold: they build a transient runtime + arena per call).
+//!
 //! Memory: O(n·t) for the per-thread lists and `w` arrays plus the
 //! `1.5×nnz`-style elbow — the paper's §3.5.1 budget.
 
+pub mod arena;
 pub mod cost;
 pub mod dist2;
 pub mod elim;
 pub mod lists;
+pub mod runtime;
 pub mod shared;
 pub mod workspace;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
-use std::sync::Barrier;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{Barrier, Mutex};
 
 use crate::graph::csr::SymGraph;
-use crate::ordering::{Ordering, OrderingResult, OrderingStats};
+use crate::ordering::{Ordering, OrderingResult};
 use crate::util::chunk_range;
 use crate::util::timer::Timer;
 
+use arena::{CachePadded, ParAmdArena, ThreadSlot};
 use elim::Outcome;
-use lists::{Affinity, ThreadLists};
+use lists::Affinity;
+use runtime::OrderingRuntime;
 use shared::SharedGraph;
-use workspace::{RoundWork, Workspace};
+use workspace::RoundWork;
 
 /// ParAMD configuration (paper defaults: `mult = 1.1`,
 /// `lim = 8192 / threads`, elbow `1.5`).
@@ -133,18 +159,32 @@ pub struct ParAmdDetail {
     pub model_speedup: f64,
 }
 
-struct ThreadOutput {
-    ws: Workspace,
-    elim_log: Vec<(u32, i32)>, // (round, pivot) in local order
-    select_secs: f64,
-    elim_secs: f64,
-}
-
 impl ParAmd {
-    /// Run the ordering and return the detailed counters as well.
+    /// One-shot run with detailed counters (cold path: builds a transient
+    /// runtime and arena; thread count taken from `self.threads`).
     pub fn order_detailed(&self, g: &SymGraph) -> (OrderingResult, ParAmdDetail) {
+        let rt = OrderingRuntime::new(self.threads.max(1));
+        let mut arena = ParAmdArena::new();
+        self.order_into(&rt, &mut arena, g);
+        arena.take_results()
+    }
+
+    /// Warm entry point: run the ordering on a persistent [`OrderingRuntime`]
+    /// using pooled [`ParAmdArena`] storage, leaving the result (and the
+    /// detailed counters) in the arena's reusable buffers.
+    ///
+    /// The effective thread count is `rt.threads()` — the pool it runs on —
+    /// not `self.threads`. When the arena's retained storage fits `g`, the
+    /// whole run performs no O(n)- or O(nnz)-sized heap allocations
+    /// (observable via [`ParAmdArena::grow_events`]).
+    pub fn order_into<'a>(
+        &self,
+        rt: &OrderingRuntime,
+        arena: &'a mut ParAmdArena,
+        g: &SymGraph,
+    ) -> &'a OrderingResult {
         let n = g.n;
-        let t = self.threads.max(1);
+        let t = rt.threads();
         let lim_total = if self.lim_total == 0 {
             (n / 64).clamp(64, 8192)
         } else {
@@ -153,176 +193,90 @@ impl ParAmd {
         let lim = (lim_total / t).max(1);
         let total_timer = Timer::new();
 
-        if n == 0 {
-            return (OrderingResult::new(vec![]), ParAmdDetail::default());
-        }
-
         assert!(
             n < dist2::MAX_VERTICES,
             "ParAMD supports up to 2^24 vertices (priority packing)"
         );
-        let sg = SharedGraph::new(g, self.elbow);
-        let aff = Affinity::new(n);
-        // u64::MAX == "no candidate yet" (stale rounds also read as +∞,
-        // see dist2::priority).
-        let lmin: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(u64::MAX)).collect();
-        let lamds: Vec<AtomicUsize> = (0..t).map(|_| AtomicUsize::new(n)).collect();
-        let sizes: Vec<AtomicUsize> = (0..t).map(|_| AtomicUsize::new(0)).collect();
-        let progress_stall = AtomicUsize::new(0);
-        // Adapted relaxation factor in fixed-point (×1e6), leader-updated.
-        let adaptive_mult = AtomicUsize::new((self.mult * 1e6) as usize);
-        let poison = std::sync::atomic::AtomicBool::new(false);
-        let gc_count = AtomicUsize::new(0);
-        let barrier = Barrier::new(t);
-        let set_sizes_leader: std::sync::Mutex<Vec<u32>> = std::sync::Mutex::new(Vec::new());
+        arena.prepare(g, self, t);
+        if n == 0 {
+            return &arena.result;
+        }
 
-        let outputs: Vec<ThreadOutput> = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(t);
-            for tid in 0..t {
-                let sg = &sg;
-                let aff = &aff;
-                let lmin = &lmin;
-                let lamds = &lamds;
-                let sizes = &sizes;
-                let barrier = &barrier;
-                let progress_stall = &progress_stall;
-                let adaptive_mult = &adaptive_mult;
-                let poison = &poison;
-                let gc_count = &gc_count;
-                let set_sizes_leader = &set_sizes_leader;
-                let cfg = *self;
-                handles.push(scope.spawn(move || {
-                    run_thread(
-                        tid, t, lim, cfg, g, sg, aff, lmin, lamds, sizes, barrier,
-                        progress_stall, adaptive_mult, poison, gc_count, set_sizes_leader,
-                    )
-                }));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
+        {
+            let shared = RunShared {
+                cfg: *self,
+                g,
+                sg: &arena.sg,
+                aff: &arena.aff,
+                lmin: &arena.lmin[..n],
+                lamds: &arena.lamds[..t],
+                sizes: &arena.sizes[..t],
+                barrier: rt.barrier(),
+                progress_stall: &arena.progress_stall,
+                adaptive_mult: &arena.adaptive_mult,
+                poison: &arena.poison,
+                gc_count: &arena.gc_count,
+                set_sizes: &arena.set_sizes,
+                t,
+                lim,
+            };
+            let slots = &arena.slots;
+            rt.run(&|tid| {
+                let mut slot = slots[tid].lock().unwrap();
+                run_thread(tid, &shared, &mut slot);
+            });
+        }
 
         assert!(
-            !poison.load(Relaxed),
+            !arena.poison.load(Relaxed),
             "ParAMD stalled: elbow room exhausted even after GC — increase \
              `elbow` (paper §3.3.1: the 1.5 factor is empirical and \
              user-adjustable)"
         );
-        assert_eq!(sg.nel.load(Relaxed), n, "not all columns eliminated");
+        assert_eq!(arena.sg.nel.load(Relaxed), n, "not all columns eliminated");
 
-        // Merge elimination logs: (round, tid, local order) — deterministic
-        // given identical per-thread logs.
-        let mut merged: Vec<(u32, usize, usize, i32)> = Vec::new();
-        for (tid, out) in outputs.iter().enumerate() {
-            for (seq, &(round, p)) in out.elim_log.iter().enumerate() {
-                merged.push((round, tid, seq, p));
-            }
-        }
-        merged.sort_unstable();
-        let elim_order: Vec<i32> = merged.iter().map(|&(_, _, _, p)| p).collect();
-        let parent: Vec<i32> = sg.parent.iter().map(|a| a.load(Relaxed)).collect();
-        let perm = crate::ordering::rebuild_perm(n, &elim_order, &parent);
-
-        // Assemble detail + stats.
-        let rounds = outputs
-            .iter()
-            .map(|o| o.ws.work_log.len())
-            .max()
-            .unwrap_or(0);
-        let mut round_work = vec![vec![RoundWork::default(); t]; rounds];
-        for (tid, out) in outputs.iter().enumerate() {
-            for (r, w) in out.ws.work_log.iter().enumerate() {
-                round_work[r][tid] = *w;
-            }
-        }
-        let set_sizes = set_sizes_leader.into_inner().unwrap();
-        let model_speedup = cost::model_speedup(&round_work, cost::DEFAULT_BARRIER_COST);
-
-        let mut stats = OrderingStats {
-            rounds: rounds as u64,
-            pivots: elim_order.len() as u64,
-            set_sizes: set_sizes.clone(),
-            gc_count: gc_count.load(Relaxed) as u64,
-            work_words: round_work
-                .iter()
-                .flatten()
-                .map(|w| w.select + w.elim)
-                .sum(),
-            thread_work: outputs
-                .iter()
-                .map(|o| {
-                    vec![
-                        o.ws.work_log.iter().map(|w| w.select).sum::<u64>(),
-                        o.ws.work_log.iter().map(|w| w.elim).sum::<u64>(),
-                    ]
-                })
-                .collect(),
-            modeled_time: 0.0,
-        };
-        let total = total_timer.secs();
-        let select_total: f64 = outputs.iter().map(|o| o.select_secs).sum();
-        let elim_total: f64 = outputs.iter().map(|o| o.elim_secs).sum();
-        stats.modeled_time = if model_speedup > 0.0 {
-            (select_total + elim_total) / model_speedup
-        } else {
-            0.0
-        };
-
-        let mut r = OrderingResult::new(perm);
-        r.stats = stats;
-        r.phases.add("select", select_total);
-        r.phases.add("core", elim_total);
-        r.phases
-            .add("other", (total - select_total - elim_total).max(0.0));
-        let detail = ParAmdDetail {
-            round_work,
-            set_sizes,
-            select_secs: outputs.iter().map(|o| o.select_secs).collect(),
-            elim_secs: outputs.iter().map(|o| o.elim_secs).collect(),
-            model_speedup,
-        };
-        (r, detail)
+        arena.assemble(t, total_timer.secs());
+        &arena.result
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_thread(
-    tid: usize,
+/// Borrowed per-run state shared by every worker (all of it lives in the
+/// arena or the runtime; this struct is just the view handed to threads).
+struct RunShared<'a> {
+    cfg: ParAmd,
+    g: &'a SymGraph,
+    sg: &'a SharedGraph,
+    aff: &'a Affinity,
+    lmin: &'a [AtomicU64],
+    lamds: &'a [CachePadded<AtomicUsize>],
+    sizes: &'a [CachePadded<AtomicUsize>],
+    barrier: &'a Barrier,
+    progress_stall: &'a AtomicUsize,
+    adaptive_mult: &'a AtomicUsize,
+    poison: &'a AtomicBool,
+    gc_count: &'a AtomicUsize,
+    set_sizes: &'a Mutex<Vec<u32>>,
     t: usize,
     lim: usize,
-    cfg: ParAmd,
-    g: &SymGraph,
-    sg: &SharedGraph,
-    aff: &Affinity,
-    lmin: &[AtomicU64],
-    lamds: &[AtomicUsize],
-    sizes: &[AtomicUsize],
-    barrier: &Barrier,
-    progress_stall: &AtomicUsize,
-    adaptive_mult: &AtomicUsize,
-    poison: &std::sync::atomic::AtomicBool,
-    gc_count: &AtomicUsize,
-    set_sizes_leader: &std::sync::Mutex<Vec<u32>>,
-) -> ThreadOutput {
-    let n = g.n;
-    let mut lists = ThreadLists::new(tid, n);
-    let mut ws = Workspace::new(tid, n, cfg.seed);
-    let mut elim_log: Vec<(u32, i32)> = Vec::new();
-    let mut select_secs = 0.0;
-    let mut elim_secs = 0.0;
+}
+
+fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
+    let n = sh.g.n;
+    let cfg = sh.cfg;
 
     // Initial population: static chunk of the vertices.
-    let (lo, hi) = chunk_range(n, t, tid);
+    let (lo, hi) = chunk_range(n, sh.t, tid);
     for v in lo..hi {
-        lists.insert(aff, v, g.degree(v));
+        slot.lists.insert(sh.aff, v, sh.g.degree(v));
     }
 
     let mut round: u32 = 0;
     loop {
         let tsel = Timer::new();
         // Phase A: global minimum approximate degree.
-        lamds[tid].store(lists.lamd(aff), Relaxed);
-        barrier.wait();
-        let amd = lamds.iter().map(|a| a.load(Relaxed)).min().unwrap();
+        sh.lamds[tid].store(slot.lists.lamd(sh.aff), Relaxed);
+        sh.barrier.wait();
+        let amd = sh.lamds.iter().map(|a| a.load(Relaxed)).min().unwrap();
         if amd >= n {
             break; // no live variables anywhere
         }
@@ -333,95 +287,95 @@ fn run_thread(
         assert!(round <= dist2::MAX_ROUNDS, "round counter overflow");
         let mut work = RoundWork::default();
         let mult = if cfg.adaptive {
-            adaptive_mult.load(Relaxed) as f64 / 1e6
+            sh.adaptive_mult.load(Relaxed) as f64 / 1e6
         } else {
             cfg.mult
         };
-        dist2::collect_candidates(&mut lists, aff, &mut ws, amd, mult, lim, n);
-        let prios = dist2::luby_prepare(sg, &mut ws, round, &mut work.select);
-        dist2::luby_min(sg, &mut ws, &prios, lmin, &mut work.select);
-        barrier.wait();
-        dist2::luby_validate(sg, &mut ws, &prios, lmin, &mut work.select);
-        select_secs += tsel.secs();
+        dist2::collect_candidates(
+            &mut slot.lists,
+            sh.aff,
+            &mut slot.ws,
+            amd,
+            mult,
+            sh.lim,
+            n,
+        );
+        dist2::luby_prepare(sh.sg, &mut slot.ws, round, &mut work.select);
+        dist2::luby_min(&slot.ws, sh.lmin, &mut work.select);
+        sh.barrier.wait();
+        dist2::luby_validate(&mut slot.ws, sh.lmin, &mut work.select);
+        slot.select_secs += tsel.secs();
 
         // Phase C: eliminate this thread's pivots.
         let telim = Timer::new();
         let mut eliminated_here: usize = 0;
-        let pivots = std::mem::take(&mut ws.my_pivots);
+        let pivots = std::mem::take(&mut slot.ws.my_pivots);
         for &p in &pivots {
-            if sg.st(p as usize) != shared::ST_VAR {
+            if sh.sg.st(p as usize) != shared::ST_VAR {
                 debug_assert!(false, "pivot died before elimination");
                 continue;
             }
             match elim::eliminate_pivot(
-                sg,
-                &mut ws,
-                &mut lists,
-                aff,
+                sh.sg,
+                &mut slot.ws,
+                &mut slot.lists,
+                sh.aff,
                 p as usize,
                 cfg.aggressive,
                 &mut work.elim,
             ) {
                 Outcome::Eliminated { .. } => {
-                    elim_log.push((round, p));
+                    slot.elim_log.push((round, p));
                     eliminated_here += 1;
                 }
                 Outcome::Deferred => break, // elbow exhausted; stop batch
             }
         }
-        ws.my_pivots = pivots;
+        slot.ws.my_pivots = pivots;
         work.pivots = eliminated_here as u32;
-        sizes[tid].store(eliminated_here, Relaxed);
-        ws.work_log.push(work);
-        elim_secs += telim.secs();
-        barrier.wait();
+        sh.sizes[tid].store(eliminated_here, Relaxed);
+        slot.ws.work_log.push(work);
+        slot.elim_secs += telim.secs();
+        sh.barrier.wait();
 
         // Phase D: leader bookkeeping — GC, set sizes, stall detection.
         if tid == 0 {
-            let total: usize = sizes.iter().map(|s| s.load(Relaxed)).sum();
+            let total: usize = sh.sizes.iter().map(|s| s.load(Relaxed)).sum();
             if total > 0 {
-                set_sizes_leader.lock().unwrap().push(total as u32);
-                progress_stall.store(0, Relaxed);
+                sh.set_sizes.lock().unwrap().push(total as u32);
+                sh.progress_stall.store(0, Relaxed);
             } else {
-                progress_stall.fetch_add(1, Relaxed);
+                sh.progress_stall.fetch_add(1, Relaxed);
             }
-            if sg.gc_requested.load(Relaxed) {
-                sg.garbage_collect_exclusive();
-                gc_count.fetch_add(1, Relaxed);
+            if sh.sg.gc_requested.load(Relaxed) {
+                sh.sg.garbage_collect_exclusive();
+                sh.gc_count.fetch_add(1, Relaxed);
             }
             if cfg.adaptive {
                 // §5 extension: widen the degree window when the round was
                 // starved of parallelism; relax back otherwise.
-                let total: usize = sizes.iter().map(|s| s.load(Relaxed)).sum();
-                let cur = adaptive_mult.load(Relaxed) as f64 / 1e6;
-                let next = if total < t {
+                let cur = sh.adaptive_mult.load(Relaxed) as f64 / 1e6;
+                let next = if total < sh.t {
                     (cur * 1.05).min(cfg.adaptive_mult_max)
-                } else if total > 4 * t {
+                } else if total > 4 * sh.t {
                     (cur * 0.98).max(cfg.mult)
                 } else {
                     cur
                 };
-                adaptive_mult.store((next * 1e6) as usize, Relaxed);
+                sh.adaptive_mult.store((next * 1e6) as usize, Relaxed);
             }
-            if progress_stall.load(Relaxed) >= 3 {
+            if sh.progress_stall.load(Relaxed) >= 3 {
                 // Elbow exhausted and GC is no longer reclaiming anything:
                 // poison the run so every thread exits at the next check
                 // (a direct panic here would strand peers at the barrier).
-                poison.store(true, Relaxed);
+                sh.poison.store(true, Relaxed);
             }
         }
-        barrier.wait();
-        if poison.load(Relaxed) {
+        sh.barrier.wait();
+        if sh.poison.load(Relaxed) {
             break;
         }
         round += 1;
-    }
-
-    ThreadOutput {
-        ws,
-        elim_log,
-        select_secs,
-        elim_secs,
     }
 }
 
@@ -565,6 +519,65 @@ mod tests {
         let g = SymGraph::from_edges(7, &[]);
         let r = ParAmd::new(3).order(&g);
         check_ordering_contract(&g, &r);
+    }
+
+    #[test]
+    fn warm_arena_runs_bitmatch_cold_run() {
+        // Single-thread ParAMD is fully deterministic, so a warm rerun on
+        // pooled state must reproduce the cold run bit-for-bit.
+        let g = mesh2d(20, 20);
+        let cfg = ParAmd::new(1).with_seed(99);
+        let cold = cfg.order(&g);
+        let rt = OrderingRuntime::new(1);
+        let mut arena = ParAmdArena::new();
+        for run in 0..3 {
+            let r = cfg.order_into(&rt, &mut arena, &g);
+            assert_eq!(r.perm, cold.perm, "warm run {run} diverged from cold");
+            assert_eq!(r.stats.pivots, cold.stats.pivots);
+        }
+        assert_eq!(arena.runs(), 3);
+    }
+
+    #[test]
+    fn warm_path_does_not_grow_arena() {
+        let g = mesh3d(8, 8, 8);
+        let cfg = ParAmd::new(4);
+        let rt = OrderingRuntime::new(4);
+        let mut arena = ParAmdArena::new();
+        cfg.order_into(&rt, &mut arena, &g);
+        let after_first = arena.grow_events();
+        assert!(after_first > 0, "cold run must size the arena");
+        for _ in 0..3 {
+            let r = cfg.order_into(&rt, &mut arena, &g);
+            assert_eq!(r.perm.len(), g.n);
+        }
+        assert_eq!(
+            arena.grow_events(),
+            after_first,
+            "warm runs must reuse the arena without growing it"
+        );
+    }
+
+    #[test]
+    fn warm_arena_handles_shrinking_and_growing_graphs() {
+        let rt = OrderingRuntime::new(3);
+        let mut arena = ParAmdArena::new();
+        let cfg = ParAmd::new(3);
+        let graphs = [
+            mesh2d(15, 15),
+            mesh2d(4, 4),
+            random_graph(350, 5, 2),
+            mesh3d(6, 6, 6),
+            mesh2d(15, 15),
+        ];
+        for g in &graphs {
+            let r = cfg.order_into(&rt, &mut arena, g).clone();
+            check_ordering_contract(g, &r);
+        }
+        // A graph that fits previously-seen sizes must not grow the arena.
+        let before = arena.grow_events();
+        cfg.order_into(&rt, &mut arena, &mesh2d(10, 10));
+        assert_eq!(arena.grow_events(), before);
     }
 
     use crate::graph::csr::SymGraph;

@@ -1,0 +1,265 @@
+//! Persistent ParAMD worker pool.
+//!
+//! `ParAmd::order()` used to spawn `t` fresh OS threads per call; on a
+//! service handling repeated requests, thread spawn/join dominated
+//! request latency. An [`OrderingRuntime`] spawns its workers **once**
+//! and parks them on a condvar between jobs:
+//!
+//! - `run(job)` publishes a borrowed `Fn(usize)` to all workers, wakes
+//!   them, and blocks until every worker has finished — so the borrow
+//!   can't outlive the call even though workers hold a lifetime-erased
+//!   pointer while running;
+//! - inside a job, workers synchronize on the runtime's **reusable**
+//!   [`Barrier`] (every worker passes each round barrier the same number
+//!   of times, so the barrier is reusable across jobs too);
+//! - concurrent `run` callers serialize on a submission lock — requests
+//!   queue, which is exactly what a shared service pool wants.
+//!
+//! A worker that panics mid-job is counted and the panic re-raised from
+//! `run` once the job drains. (A panic *between* the algorithm's round
+//! barriers can still strand peers at the barrier — the same failure
+//! mode the old scoped-spawn driver had — which is why the driver
+//! converts stalls into a poison flag instead of panicking.)
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A lifetime-erased borrow of a `run` job. Only alive between job
+/// publication and the last worker's completion, both inside `run`.
+#[derive(Clone, Copy)]
+struct Job(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared calls are fine) and `run` keeps
+// the underlying borrow alive until every worker is done with it.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Job generation; bumped once per `run`.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers still running the current job.
+    remaining: usize,
+    /// Workers whose job closure panicked.
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    threads: usize,
+    /// Round barrier reused by every job (and across jobs).
+    barrier: Barrier,
+    state: Mutex<PoolState>,
+    go: Condvar,
+    done: Condvar,
+}
+
+/// A persistent, reusable pool of ParAMD worker threads. Construct once,
+/// run many orderings; drop to join the workers.
+pub struct OrderingRuntime {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+    /// Serializes concurrent `run` callers (requests queue here).
+    submit: Mutex<()>,
+}
+
+impl OrderingRuntime {
+    /// Spawn a pool of `threads` parked workers (at least one).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            threads,
+            barrier: Barrier::new(threads),
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: 0,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|tid| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("paramd-{tid}"))
+                    .spawn(move || worker_loop(tid, &sh))
+                    .expect("spawn paramd worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            submit: Mutex::new(()),
+        }
+    }
+
+    /// Pool size; the effective ParAMD thread count for jobs run here.
+    pub fn threads(&self) -> usize {
+        self.shared.threads
+    }
+
+    /// The pool's reusable round barrier (sized to [`Self::threads`]).
+    pub fn barrier(&self) -> &Barrier {
+        &self.shared.barrier
+    }
+
+    /// Run `job(tid)` on every worker and wait for all of them. Callers
+    /// from multiple threads serialize; the pool runs one job at a time.
+    ///
+    /// If any worker's job panicked, the panic is re-raised here — after
+    /// the submission guard is released, so the pool stays usable for the
+    /// next request (the workers themselves survived via `catch_unwind`).
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        let panicked = {
+            // Tolerate poison: an earlier caller panicking in this region
+            // must not brick the shared pool.
+            let _exclusive = self
+                .submit
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            // SAFETY: we erase the borrow's lifetime to park it in the
+            // shared state, but do not leave this block until
+            // `remaining == 0`, i.e. until no worker can touch it anymore.
+            let erased = Job(unsafe {
+                std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(job)
+            });
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                st.job = Some(erased);
+                st.epoch += 1;
+                st.remaining = self.shared.threads;
+                st.panicked = 0;
+            }
+            self.shared.go.notify_all();
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panicked
+        };
+        assert!(
+            panicked == 0,
+            "{panicked} ParAMD worker(s) panicked during an ordering job"
+        );
+    }
+}
+
+impl Drop for OrderingRuntime {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.go.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(tid: usize, sh: &PoolShared) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = sh.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen {
+                    if let Some(job) = st.job {
+                        seen = st.epoch;
+                        break job;
+                    }
+                }
+                st = sh.go.wait(st).unwrap();
+            }
+        };
+        // SAFETY: `run` keeps the job borrow alive until we report done.
+        let f: &(dyn Fn(usize) + Sync) = unsafe { &*job.0 };
+        let ok = catch_unwind(AssertUnwindSafe(|| f(tid))).is_ok();
+        let mut st = sh.state.lock().unwrap();
+        if !ok {
+            st.panicked += 1;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+
+    #[test]
+    fn runs_jobs_on_all_workers_and_reuses_them() {
+        let rt = OrderingRuntime::new(4);
+        assert_eq!(rt.threads(), 4);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..5 {
+            rt.run(&|_tid| {
+                hits.fetch_add(1, Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Relaxed), 20);
+    }
+
+    #[test]
+    fn tids_cover_the_pool() {
+        let rt = OrderingRuntime::new(3);
+        let seen: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        rt.run(&|tid| {
+            seen[tid].fetch_add(1, Relaxed);
+        });
+        for s in &seen {
+            assert_eq!(s.load(Relaxed), 1);
+        }
+    }
+
+    #[test]
+    fn barrier_is_usable_inside_jobs_across_jobs() {
+        let rt = OrderingRuntime::new(4);
+        let counter = AtomicUsize::new(0);
+        for round in 1..=3usize {
+            rt.run(&|_tid| {
+                counter.fetch_add(1, Relaxed);
+                rt.barrier().wait();
+                // After the barrier every worker must see all increments.
+                assert_eq!(counter.load(Relaxed), 4 * round);
+                rt.barrier().wait();
+            });
+        }
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let rt = OrderingRuntime::new(2);
+        rt.run(&|_| {});
+        drop(rt); // must not hang
+    }
+
+    #[test]
+    fn concurrent_submitters_serialize() {
+        let rt = OrderingRuntime::new(2);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let rt = &rt;
+                let total = &total;
+                s.spawn(move || {
+                    rt.run(&|_tid| {
+                        total.fetch_add(1, Relaxed);
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Relaxed), 8);
+    }
+}

@@ -54,26 +54,72 @@ impl SharedGraph {
     /// Build from a symmetric pattern with `elbow × nnz` extra space
     /// (the paper's empirical 1.5 default lives in the ParAMD config).
     pub fn new(g: &SymGraph, elbow: f64) -> Self {
-        let n = g.n;
-        let nnz = g.nnz();
-        let iwlen = nnz + (nnz as f64 * elbow) as usize + 16;
-        let iw: Vec<AtomicI32> = (0..iwlen)
-            .map(|i| AtomicI32::new(if i < nnz { g.colind[i] } else { 0 }))
-            .collect();
+        let mut sg = Self::empty();
+        sg.reset_from(g, elbow);
+        sg
+    }
+
+    /// An unsized shell whose storage is populated by [`Self::reset_from`]
+    /// — the arena's pooled slab starts here.
+    pub fn empty() -> Self {
         SharedGraph {
-            n,
-            iw,
-            pe: (0..n).map(|v| AtomicUsize::new(g.rowptr[v])).collect(),
-            len: (0..n).map(|v| AtomicI32::new(g.degree(v) as i32)).collect(),
-            elen: (0..n).map(|_| AtomicI32::new(0)).collect(),
-            nv: (0..n).map(|_| AtomicI32::new(1)).collect(),
-            degree: (0..n).map(|v| AtomicI32::new(g.degree(v) as i32)).collect(),
-            state: (0..n).map(|_| AtomicU8::new(ST_VAR)).collect(),
-            parent: (0..n).map(|_| AtomicI32::new(-1)).collect(),
-            pfree: AtomicUsize::new(nnz),
+            n: 0,
+            iw: Vec::new(),
+            pe: Vec::new(),
+            len: Vec::new(),
+            elen: Vec::new(),
+            nv: Vec::new(),
+            degree: Vec::new(),
+            state: Vec::new(),
+            parent: Vec::new(),
+            pfree: AtomicUsize::new(0),
             nel: AtomicUsize::new(0),
             gc_requested: AtomicBool::new(false),
         }
+    }
+
+    /// Re-initialize in place for a new input graph, growing the slab
+    /// monotonically and reusing it whenever the graph fits (the warm
+    /// path performs zero heap allocations). A retained slab larger than
+    /// `elbow × nnz` simply acts as extra elbow room. Returns the number
+    /// of storage groups that had to grow (0 on a fully warm reset).
+    pub fn reset_from(&mut self, g: &SymGraph, elbow: f64) -> u32 {
+        let n = g.n;
+        let nnz = g.nnz();
+        let iwlen = nnz + (nnz as f64 * elbow) as usize + 16;
+        let mut grew = 0;
+        if self.iw.len() < iwlen {
+            self.iw.resize_with(iwlen, || AtomicI32::new(0));
+            grew += 1;
+        }
+        if self.pe.len() < n {
+            self.pe.resize_with(n, || AtomicUsize::new(0));
+            self.len.resize_with(n, || AtomicI32::new(0));
+            self.elen.resize_with(n, || AtomicI32::new(0));
+            self.nv.resize_with(n, || AtomicI32::new(0));
+            self.degree.resize_with(n, || AtomicI32::new(0));
+            self.state.resize_with(n, || AtomicU8::new(ST_VAR));
+            self.parent.resize_with(n, || AtomicI32::new(-1));
+            grew += 1;
+        }
+        self.n = n;
+        for (i, &c) in g.colind.iter().enumerate() {
+            self.iw[i].store(c, Relaxed);
+        }
+        for v in 0..n {
+            let d = g.degree(v) as i32;
+            self.pe[v].store(g.rowptr[v], Relaxed);
+            self.len[v].store(d, Relaxed);
+            self.elen[v].store(0, Relaxed);
+            self.nv[v].store(1, Relaxed);
+            self.degree[v].store(d, Relaxed);
+            self.state[v].store(ST_VAR, Relaxed);
+            self.parent[v].store(-1, Relaxed);
+        }
+        self.pfree.store(nnz, Relaxed);
+        self.nel.store(0, Relaxed);
+        self.gc_requested.store(false, Relaxed);
+        grew
     }
 
     // -- relaxed accessors (all cross-thread sync comes from barriers) ---
@@ -118,16 +164,23 @@ impl SharedGraph {
     /// Claim `need` slots of elbow room with one `fetch_add` (§3.3.1).
     /// Returns the start offset, or `None` when exhausted (the caller
     /// defers its pivot and requests a GC).
+    ///
+    /// Exhaustion is **sticky**: a failed claim leaves the cursor
+    /// saturated past the end instead of rolling it back. A rollback
+    /// (`fetch_sub`) could release slots that a concurrently-winning
+    /// thread claimed in between — e.g. A fail-claims 20, B fail-claims 5,
+    /// A rolls back (making room), C successfully claims the freed tail,
+    /// then B's rollback frees C's slots for D: C and D now alias the same
+    /// words. Until the round-boundary GC recomputes the cursor exactly,
+    /// every further claim simply fails fast.
     pub fn claim(&self, need: usize) -> Option<usize> {
         let off = self.pfree.fetch_add(need, Relaxed);
-        if off + need <= self.iw.len() {
-            Some(off)
-        } else {
-            // Roll the cursor back best-effort; concurrent claims make this
-            // approximate, which is fine — GC recomputes it exactly.
-            self.pfree.fetch_sub(need, Relaxed);
-            self.gc_requested.store(true, Relaxed);
-            None
+        match off.checked_add(need) {
+            Some(end) if end <= self.iw.len() => Some(off),
+            _ => {
+                self.gc_requested.store(true, Relaxed);
+                None
+            }
         }
     }
 
@@ -219,6 +272,64 @@ mod tests {
         assert!(sg.claim(avail).is_some());
         assert!(sg.claim(1).is_none());
         assert!(sg.gc_requested.load(Relaxed));
+    }
+
+    #[test]
+    fn claim_exhaustion_is_sticky() {
+        // Regression for the rollback race: a failed claim used to
+        // `fetch_sub` the cursor back, which could release slots that a
+        // concurrently-winning claim had already taken (see `claim` docs
+        // for the interleaving). Sticky exhaustion means that after any
+        // failed claim, *no* later claim can succeed until GC recomputes
+        // the cursor — so no freed-then-reclaimed aliasing is possible.
+        let g = mesh2d(3, 3);
+        let sg = SharedGraph::new(&g, 0.5);
+        let avail = sg.iw.len() - sg.pfree.load(Relaxed);
+        assert!(sg.claim(avail + 3).is_none(), "oversized claim must fail");
+        assert!(sg.gc_requested.load(Relaxed));
+        assert!(
+            sg.pfree.load(Relaxed) > sg.iw.len(),
+            "cursor must stay saturated, not roll back"
+        );
+        // This claim would have fit before the failed one; with the old
+        // rollback it could overlap a winner's slots. Now it fails fast.
+        assert!(sg.claim(1).is_none(), "exhaustion must be sticky");
+        // The round-boundary GC recomputes the cursor exactly.
+        sg.garbage_collect_exclusive();
+        assert!(!sg.gc_requested.load(Relaxed));
+        assert!(sg.pfree.load(Relaxed) <= g.nnz());
+        assert!(sg.claim(1).is_some(), "claims work again after GC");
+    }
+
+    #[test]
+    fn reset_reuses_slab_and_mirrors_graph() {
+        let big = mesh2d(6, 6);
+        let small = mesh2d(3, 3);
+        let mut sg = SharedGraph::new(&big, 1.5);
+        let slab = sg.iw.len();
+        // Dirty some state, then warm-reset onto a smaller graph.
+        sg.set_st(0, ST_DEAD_VAR);
+        sg.nel.store(5, Relaxed);
+        assert_eq!(sg.reset_from(&small, 1.5), 0, "smaller graph must not grow");
+        assert_eq!(sg.iw.len(), slab, "slab is retained");
+        assert_eq!(sg.n, small.n);
+        assert_eq!(sg.nel.load(Relaxed), 0);
+        assert_eq!(sg.pfree.load(Relaxed), small.nnz());
+        for v in 0..small.n {
+            assert_eq!(sg.st(v), ST_VAR);
+            assert_eq!(sg.len_of(v) as usize, small.degree(v));
+            let p = sg.pe_of(v);
+            let nbrs: Vec<i32> = (0..small.degree(v)).map(|k| sg.iw_at(p + k)).collect();
+            assert_eq!(nbrs.as_slice(), small.neighbors(v));
+        }
+        // Back to the original size: the retained slab still fits (warm).
+        assert_eq!(sg.reset_from(&big, 1.5), 0, "retained slab must be reused");
+        assert_eq!(sg.n, big.n);
+        assert_eq!(sg.pfree.load(Relaxed), big.nnz());
+        // A strictly larger graph is the only thing that allocates.
+        let bigger = mesh2d(9, 9);
+        assert!(sg.reset_from(&bigger, 1.5) > 0, "larger graph must grow");
+        assert_eq!(sg.n, bigger.n);
     }
 
     #[test]

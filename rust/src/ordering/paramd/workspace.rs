@@ -39,6 +39,9 @@ pub struct Workspace {
     /// filled by the Luby reset phase and reused by min/validate.
     pub nbr_buf: Vec<i32>,
     pub nbr_ptr: Vec<usize>,
+    /// Per-round Luby priorities, aligned with `candidates` (reused across
+    /// rounds instead of a fresh `Vec<u64>` per round).
+    pub prios: Vec<u64>,
     /// Luby priority RNG.
     pub rng: Rng,
     /// Per-round work log (indexed by round).
@@ -60,10 +63,37 @@ impl Workspace {
             nbrs: Vec::new(),
             nbr_buf: Vec::new(),
             nbr_ptr: Vec::new(),
+            prios: Vec::new(),
             rng: Rng::new(seed ^ (tid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
             work_log: Vec::new(),
             hash_scratch: Vec::new(),
         }
+    }
+
+    /// Re-initialize for a fresh run over a graph of `n` vertices, reusing
+    /// every buffer that still fits (the arena's warm path). The `w`
+    /// timestamp array is reset by **epoch bumping**: the mark floor jumps
+    /// past any value a previous run could have stored (`≤ wflg + w.len()`),
+    /// so its O(n) contents are never rewritten. Returns 1 if `w` grew.
+    pub fn reset(&mut self, n: usize, seed: u64) -> u32 {
+        self.wflg += self.w.len().max(n) as u64 + 2;
+        let mut grew = 0;
+        if self.w.len() < n {
+            self.w.resize(n, 0);
+            grew = 1;
+        }
+        self.n = n;
+        self.rng = Rng::new(seed ^ (self.tid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.lme.clear();
+        self.candidates.clear();
+        self.my_pivots.clear();
+        self.nbrs.clear();
+        self.nbr_buf.clear();
+        self.nbr_ptr.clear();
+        self.prios.clear();
+        self.work_log.clear();
+        self.hash_scratch.clear();
+        grew
     }
 
     /// Start a fresh mark epoch, advanced past any stored weight
@@ -87,6 +117,30 @@ mod tests {
         let stored = m1 + 100;
         let m2 = ws.bump_epoch();
         assert!(m2 > stored);
+    }
+
+    #[test]
+    fn reset_bumps_epoch_past_stale_marks() {
+        let mut ws = Workspace::new(2, 50, 9);
+        let mark = ws.bump_epoch();
+        ws.w[10] = mark + 50; // largest value a run can store
+        let stale = ws.w[10];
+        assert_eq!(ws.reset(50, 9), 0, "same-size reset must not grow");
+        assert!(ws.wflg > stale, "stale w entries must read as expired");
+        // Shrinking then regrowing keeps the invariant too.
+        ws.reset(8, 9);
+        let stale_small = ws.wflg + 8;
+        assert_eq!(ws.reset(120, 9), 1, "larger graph must grow w");
+        assert!(ws.wflg > stale_small);
+    }
+
+    #[test]
+    fn reset_restores_seeded_rng_stream() {
+        let mut a = Workspace::new(1, 16, 77);
+        let first = a.rng.next_u64();
+        let _ = a.rng.next_u64();
+        a.reset(16, 77);
+        assert_eq!(a.rng.next_u64(), first, "reset must re-seed the stream");
     }
 
     #[test]

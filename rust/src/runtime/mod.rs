@@ -5,14 +5,15 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. One compiled executable per artifact
 //! size; the engine picks the smallest size ≥ the request and pads.
-
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
-
-use anyhow::{anyhow, Context, Result};
-
-use crate::cholesky::dense::DenseCholesky;
+//!
+//! ## Feature gate
+//!
+//! The real backend needs the image-local `xla` crate, which is not on
+//! crates.io; it compiles only with the **`pjrt` feature** enabled (add
+//! the vendored `xla` crate as a path dependency first). The default
+//! build ships an API-identical stub whose loaders return an error, so
+//! every caller — the coordinator's solver thread, the paper-table
+//! benches — compiles and degrades gracefully to the native engine.
 
 /// Kinds of artifacts emitted by `python/compile/aot.py`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -24,6 +25,7 @@ pub enum ArtifactKind {
 }
 
 impl ArtifactKind {
+    #[cfg(feature = "pjrt")]
     fn parse(s: &str) -> Option<Self> {
         match s {
             "chol" => Some(Self::Chol),
@@ -33,190 +35,289 @@ impl ArtifactKind {
     }
 }
 
-struct Loaded {
-    exe: xla::PjRtLoadedExecutable,
+/// Default artifact directory: `$PARAMD_ARTIFACTS` or `./artifacts`.
+fn default_artifacts_dir() -> String {
+    std::env::var("PARAMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
 }
 
-/// The PJRT engine: a CPU client plus compiled executables keyed by
-/// `(kind, size)`.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    execs: BTreeMap<(ArtifactKind, usize), Loaded>,
-    /// PJRT executions are serialized (single-device CPU client).
-    lock: Mutex<()>,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::BTreeMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-impl PjrtEngine {
-    /// Load every artifact listed in `<dir>/manifest.txt`.
-    pub fn load_dir(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(wrap)?;
-        let manifest = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest)
-            .with_context(|| format!("read {} — run `make artifacts` first", manifest.display()))?;
-        let mut execs = BTreeMap::new();
-        for line in text.lines() {
-            let mut it = line.split_whitespace();
-            let (Some(kind), Some(size), Some(file)) = (it.next(), it.next(), it.next()) else {
-                continue;
-            };
-            let kind = ArtifactKind::parse(kind)
-                .ok_or_else(|| anyhow!("unknown artifact kind {kind:?}"))?;
-            let size: usize = size.parse()?;
-            let path: PathBuf = dir.join(file);
-            let proto =
-                xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(wrap)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(wrap)?;
-            execs.insert((kind, size), Loaded { exe });
+    use anyhow::{anyhow, Context, Result};
+
+    use super::{default_artifacts_dir, ArtifactKind};
+    use crate::cholesky::dense::DenseCholesky;
+
+    struct Loaded {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The PJRT engine: a CPU client plus compiled executables keyed by
+    /// `(kind, size)`.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
+        execs: BTreeMap<(ArtifactKind, usize), Loaded>,
+        /// PJRT executions are serialized (single-device CPU client).
+        lock: Mutex<()>,
+    }
+
+    impl PjrtEngine {
+        /// Load every artifact listed in `<dir>/manifest.txt`.
+        pub fn load_dir(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(wrap)?;
+            let manifest = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest).with_context(|| {
+                format!("read {} — run `make artifacts` first", manifest.display())
+            })?;
+            let mut execs = BTreeMap::new();
+            for line in text.lines() {
+                let mut it = line.split_whitespace();
+                let (Some(kind), Some(size), Some(file)) = (it.next(), it.next(), it.next())
+                else {
+                    continue;
+                };
+                let kind = ArtifactKind::parse(kind)
+                    .ok_or_else(|| anyhow!("unknown artifact kind {kind:?}"))?;
+                let size: usize = size.parse()?;
+                let path: PathBuf = dir.join(file);
+                let proto =
+                    xla::HloModuleProto::from_text_file(path.to_str().unwrap()).map_err(wrap)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).map_err(wrap)?;
+                execs.insert((kind, size), Loaded { exe });
+            }
+            if execs.is_empty() {
+                return Err(anyhow!("no artifacts in {}", dir.display()));
+            }
+            Ok(Self {
+                client,
+                execs,
+                lock: Mutex::new(()),
+            })
         }
-        if execs.is_empty() {
-            return Err(anyhow!("no artifacts in {}", dir.display()));
+
+        /// Load from `$PARAMD_ARTIFACTS` or `./artifacts`.
+        pub fn load_default() -> Result<Self> {
+            Self::load_dir(Path::new(&default_artifacts_dir()))
         }
-        Ok(Self {
-            client,
-            execs,
-            lock: Mutex::new(()),
-        })
-    }
 
-    /// Default artifact directory: `$PARAMD_ARTIFACTS` or `./artifacts`.
-    pub fn load_default() -> Result<Self> {
-        let dir = std::env::var("PARAMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::load_dir(Path::new(&dir))
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+        /// Sizes available for a kind (ascending).
+        pub fn sizes(&self, kind: ArtifactKind) -> Vec<usize> {
+            self.execs
+                .keys()
+                .filter(|(k, _)| *k == kind)
+                .map(|&(_, s)| s)
+                .collect()
+        }
 
-    /// Sizes available for a kind (ascending).
-    pub fn sizes(&self, kind: ArtifactKind) -> Vec<usize> {
-        self.execs
-            .keys()
-            .filter(|(k, _)| *k == kind)
-            .map(|&(_, s)| s)
-            .collect()
-    }
+        /// Smallest compiled size ≥ `n` for `kind`.
+        pub fn pick_size(&self, kind: ArtifactKind, n: usize) -> Option<usize> {
+            self.sizes(kind).into_iter().find(|&s| s >= n)
+        }
 
-    /// Smallest compiled size ≥ `n` for `kind`.
-    pub fn pick_size(&self, kind: ArtifactKind, n: usize) -> Option<usize> {
-        self.sizes(kind).into_iter().find(|&s| s >= n)
-    }
-
-    /// Execute the Cholesky-factor artifact on an `n×n` row-major matrix,
-    /// padding up to the artifact size with an identity tail (which
-    /// factors to itself and cannot pollute the leading block).
-    pub fn dense_cholesky(&self, a: &[f64], n: usize) -> Result<Vec<f64>> {
-        assert_eq!(a.len(), n * n);
-        let size = self
-            .pick_size(ArtifactKind::Chol, n)
-            .ok_or_else(|| {
+        /// Execute the Cholesky-factor artifact on an `n×n` row-major
+        /// matrix, padding up to the artifact size with an identity tail
+        /// (which factors to itself and cannot pollute the leading block).
+        pub fn dense_cholesky(&self, a: &[f64], n: usize) -> Result<Vec<f64>> {
+            assert_eq!(a.len(), n * n);
+            let size = self.pick_size(ArtifactKind::Chol, n).ok_or_else(|| {
                 anyhow!(
                     "no chol artifact ≥ {n} (have {:?})",
                     self.sizes(ArtifactKind::Chol)
                 )
             })?;
-        let mut padded = vec![0f64; size * size];
-        for i in 0..n {
-            padded[i * size..i * size + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+            let mut padded = vec![0f64; size * size];
+            for i in 0..n {
+                padded[i * size..i * size + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+            }
+            for i in n..size {
+                padded[i * size + i] = 1.0;
+            }
+            let out = {
+                let _g = self.lock.lock().unwrap();
+                let lit = xla::Literal::vec1(&padded)
+                    .reshape(&[size as i64, size as i64])
+                    .map_err(wrap)?;
+                let exe = &self.execs[&(ArtifactKind::Chol, size)].exe;
+                let result = exe.execute::<xla::Literal>(&[lit]).map_err(wrap)?[0][0]
+                    .to_literal_sync()
+                    .map_err(wrap)?;
+                result
+                    .to_tuple1()
+                    .map_err(wrap)?
+                    .to_vec::<f64>()
+                    .map_err(wrap)?
+            };
+            let mut l = vec![0f64; n * n];
+            for i in 0..n {
+                l[i * n..(i + 1) * n].copy_from_slice(&out[i * size..i * size + n]);
+            }
+            Ok(l)
         }
-        for i in n..size {
-            padded[i * size + i] = 1.0;
+
+        /// Execute the fused factor+solve artifact: solves `A x = b`.
+        pub fn dense_solve(&self, a: &[f64], b: &[f64], n: usize) -> Result<Vec<f64>> {
+            assert_eq!(a.len(), n * n);
+            assert_eq!(b.len(), n);
+            let size = self
+                .pick_size(ArtifactKind::Solve, n)
+                .ok_or_else(|| anyhow!("no solve artifact ≥ {n}"))?;
+            let mut pa = vec![0f64; size * size];
+            for i in 0..n {
+                pa[i * size..i * size + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+            }
+            for i in n..size {
+                pa[i * size + i] = 1.0;
+            }
+            let mut pb = vec![0f64; size];
+            pb[..n].copy_from_slice(b);
+            let out = {
+                let _g = self.lock.lock().unwrap();
+                let la = xla::Literal::vec1(&pa)
+                    .reshape(&[size as i64, size as i64])
+                    .map_err(wrap)?;
+                let lb = xla::Literal::vec1(&pb)
+                    .reshape(&[size as i64])
+                    .map_err(wrap)?;
+                let exe = &self.execs[&(ArtifactKind::Solve, size)].exe;
+                let result = exe.execute::<xla::Literal>(&[la, lb]).map_err(wrap)?[0][0]
+                    .to_literal_sync()
+                    .map_err(wrap)?;
+                result
+                    .to_tuple1()
+                    .map_err(wrap)?
+                    .to_vec::<f64>()
+                    .map_err(wrap)?
+            };
+            Ok(out[..n].to_vec())
         }
-        let out = {
-            let _g = self.lock.lock().unwrap();
-            let lit = xla::Literal::vec1(&padded)
-                .reshape(&[size as i64, size as i64])
-                .map_err(wrap)?;
-            let exe = &self.execs[&(ArtifactKind::Chol, size)].exe;
-            let result = exe.execute::<xla::Literal>(&[lit]).map_err(wrap)?[0][0]
-                .to_literal_sync()
-                .map_err(wrap)?;
-            result
-                .to_tuple1()
-                .map_err(wrap)?
-                .to_vec::<f64>()
-                .map_err(wrap)?
-        };
-        let mut l = vec![0f64; n * n];
-        for i in 0..n {
-            l[i * n..(i + 1) * n].copy_from_slice(&out[i * size..i * size + n]);
-        }
-        Ok(l)
     }
 
-    /// Execute the fused factor+solve artifact: solves `A x = b`.
-    pub fn dense_solve(&self, a: &[f64], b: &[f64], n: usize) -> Result<Vec<f64>> {
-        assert_eq!(a.len(), n * n);
-        assert_eq!(b.len(), n);
-        let size = self
-            .pick_size(ArtifactKind::Solve, n)
-            .ok_or_else(|| anyhow!("no solve artifact ≥ {n}"))?;
-        let mut pa = vec![0f64; size * size];
-        for i in 0..n {
-            pa[i * size..i * size + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+    fn wrap(e: xla::Error) -> anyhow::Error {
+        anyhow!("xla: {e}")
+    }
+
+    /// [`DenseCholesky`] engine backed by the PJRT executables — plugs the
+    /// AOT Pallas kernel into the sparse solver's dense trailing block.
+    pub struct PjrtDense<'a> {
+        pub engine: &'a PjrtEngine,
+    }
+
+    impl DenseCholesky for PjrtDense<'_> {
+        fn factor(&self, a: &mut [f64], n: usize) -> Result<(), String> {
+            if n == 0 {
+                return Ok(());
+            }
+            let l = self
+                .engine
+                .dense_cholesky(a, n)
+                .map_err(|e| format!("pjrt dense cholesky: {e}"))?;
+            if l.iter().any(|v| !v.is_finite()) {
+                return Err("matrix not positive definite (NaN from kernel)".into());
+            }
+            a.copy_from_slice(&l);
+            Ok(())
         }
-        for i in n..size {
-            pa[i * size + i] = 1.0;
+
+        fn name(&self) -> &'static str {
+            "pjrt"
         }
-        let mut pb = vec![0f64; size];
-        pb[..n].copy_from_slice(b);
-        let out = {
-            let _g = self.lock.lock().unwrap();
-            let la = xla::Literal::vec1(&pa)
-                .reshape(&[size as i64, size as i64])
-                .map_err(wrap)?;
-            let lb = xla::Literal::vec1(&pb)
-                .reshape(&[size as i64])
-                .map_err(wrap)?;
-            let exe = &self.execs[&(ArtifactKind::Solve, size)].exe;
-            let result = exe.execute::<xla::Literal>(&[la, lb]).map_err(wrap)?[0][0]
-                .to_literal_sync()
-                .map_err(wrap)?;
-            result
-                .to_tuple1()
-                .map_err(wrap)?
-                .to_vec::<f64>()
-                .map_err(wrap)?
-        };
-        Ok(out[..n].to_vec())
     }
 }
 
-fn wrap(e: xla::Error) -> anyhow::Error {
-    anyhow!("xla: {e}")
-}
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::path::Path;
 
-/// [`DenseCholesky`] engine backed by the PJRT executables — plugs the
-/// AOT Pallas kernel into the sparse solver's dense trailing block.
-pub struct PjrtDense<'a> {
-    pub engine: &'a PjrtEngine,
-}
+    use anyhow::{anyhow, Result};
 
-impl DenseCholesky for PjrtDense<'_> {
-    fn factor(&self, a: &mut [f64], n: usize) -> Result<(), String> {
-        if n == 0 {
-            return Ok(());
-        }
-        let l = self
-            .engine
-            .dense_cholesky(a, n)
-            .map_err(|e| format!("pjrt dense cholesky: {e}"))?;
-        if l.iter().any(|v| !v.is_finite()) {
-            return Err("matrix not positive definite (NaN from kernel)".into());
-        }
-        a.copy_from_slice(&l);
-        Ok(())
+    use super::{default_artifacts_dir, ArtifactKind};
+    use crate::cholesky::dense::DenseCholesky;
+
+    const DISABLED: &str = "PJRT runtime disabled: built without the `pjrt` feature \
+         (vendored `xla` crate + `make artifacts` required)";
+
+    /// API-identical stub of the PJRT engine; every loader refuses, so
+    /// callers fall back to the native dense engine.
+    pub struct PjrtEngine {
+        _priv: (),
     }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+    impl PjrtEngine {
+        pub fn load_dir(dir: &Path) -> Result<Self> {
+            Err(anyhow!("{DISABLED} (artifacts dir {})", dir.display()))
+        }
+
+        pub fn load_default() -> Result<Self> {
+            Self::load_dir(Path::new(&default_artifacts_dir()))
+        }
+
+        pub fn platform(&self) -> String {
+            "disabled".into()
+        }
+
+        pub fn sizes(&self, _kind: ArtifactKind) -> Vec<usize> {
+            Vec::new()
+        }
+
+        pub fn pick_size(&self, _kind: ArtifactKind, _n: usize) -> Option<usize> {
+            None
+        }
+
+        pub fn dense_cholesky(&self, _a: &[f64], _n: usize) -> Result<Vec<f64>> {
+            Err(anyhow!(DISABLED))
+        }
+
+        pub fn dense_solve(&self, _a: &[f64], _b: &[f64], _n: usize) -> Result<Vec<f64>> {
+            Err(anyhow!(DISABLED))
+        }
+    }
+
+    /// Stub of the PJRT-backed dense engine (unreachable in practice: the
+    /// stub `PjrtEngine` cannot be constructed).
+    pub struct PjrtDense<'a> {
+        pub engine: &'a PjrtEngine,
+    }
+
+    impl DenseCholesky for PjrtDense<'_> {
+        fn factor(&self, _a: &mut [f64], _n: usize) -> Result<(), String> {
+            Err(DISABLED.into())
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
 
-#[cfg(test)]
+pub use backend::{PjrtDense, PjrtEngine};
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn stub_loaders_refuse_with_a_clear_error() {
+        let err = PjrtEngine::load_dir(Path::new("artifacts"))
+            .err()
+            .expect("stub must refuse");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        assert!(PjrtEngine::load_default().is_err());
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {
         // Tests run from the crate root.
@@ -290,6 +391,7 @@ mod tests {
 
     #[test]
     fn pjrt_dense_rejects_indefinite() {
+        use crate::cholesky::dense::DenseCholesky as _;
         let e = engine();
         let mut a = vec![-1.0, 0.0, 0.0, -1.0];
         let r = PjrtDense { engine: &e }.factor(&mut a, 2);

@@ -59,7 +59,7 @@ fn matrix_market_roundtrip_through_pipeline() {
 
 #[test]
 fn service_runs_mixed_workload_with_metrics() {
-    let mut svc = Service::new(2);
+    let svc = Service::new(2);
     for (i, e) in matgen::suite().into_iter().enumerate() {
         let g = (e.gen)(Scale::Tiny);
         let method = if i % 2 == 0 {
@@ -87,11 +87,15 @@ fn service_runs_mixed_workload_with_metrics() {
 
 #[test]
 fn service_solve_via_pjrt_when_artifacts_present() {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return;
+    }
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
         eprintln!("skipping: artifacts not built");
         return;
     }
-    let mut svc = Service::new(1)
+    let svc = Service::new(1)
         .with_pjrt_solver("artifacts".into())
         .expect("pjrt init");
     let g = matgen::mesh2d(11, 11);

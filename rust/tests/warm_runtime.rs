@@ -1,0 +1,139 @@
+//! Warm-path integration: runtime/arena reuse correctness and concurrent
+//! service requests through the shared persistent pool.
+
+use paramd::coordinator::{Method, OrderRequest, Service};
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::{mesh2d, mesh3d, random_graph};
+use paramd::ordering::paramd::arena::{ArenaPool, ParAmdArena};
+use paramd::ordering::paramd::runtime::OrderingRuntime;
+use paramd::ordering::paramd::ParAmd;
+use paramd::ordering::Ordering as _;
+
+/// The full ordering contract every reply must satisfy (mirror of the
+/// crate-internal `check_ordering_contract`, which integration tests
+/// cannot reach).
+fn assert_contract(n: usize, perm: &[i32]) {
+    assert_eq!(perm.len(), n);
+    assert!(is_valid_perm(perm), "perm is not a permutation");
+}
+
+#[test]
+fn warm_runs_bitmatch_cold_across_seeds() {
+    // Single-thread ParAMD is deterministic, so warm reuse must reproduce
+    // the cold run exactly for every seed.
+    let g = random_graph(500, 6, 17);
+    let rt = OrderingRuntime::new(1);
+    let mut arena = ParAmdArena::new();
+    for seed in [1u64, 2, 3] {
+        let cfg = ParAmd::new(1).with_seed(seed);
+        let cold = cfg.order(&g);
+        for _ in 0..2 {
+            let warm = cfg.order_into(&rt, &mut arena, &g);
+            assert_eq!(warm.perm, cold.perm, "seed {seed} diverged");
+        }
+    }
+}
+
+#[test]
+fn warm_multithread_reuse_is_valid_on_mixed_sizes() {
+    let rt = OrderingRuntime::new(4);
+    let mut arena = ParAmdArena::new();
+    let cfg = ParAmd::new(4);
+    let graphs = [
+        mesh2d(22, 22),
+        mesh3d(7, 7, 7),
+        mesh2d(3, 3),
+        random_graph(900, 6, 5),
+        mesh2d(22, 22),
+    ];
+    for g in &graphs {
+        let r = cfg.order_into(&rt, &mut arena, g);
+        assert_contract(g.n, &r.perm);
+        for k in 0..g.n {
+            assert_eq!(r.iperm[r.perm[k] as usize] as usize, k, "iperm broken");
+        }
+    }
+}
+
+#[test]
+fn arena_pool_hands_out_warm_arenas() {
+    let pool = ArenaPool::new();
+    let rt = OrderingRuntime::new(2);
+    let cfg = ParAmd::new(2);
+    let g = mesh2d(18, 18);
+
+    let mut arena = pool.acquire();
+    cfg.order_into(&rt, &mut arena, &g);
+    let grown = arena.grow_events();
+    pool.release(arena);
+
+    // Re-acquire: must be the same warm arena, and a same-size run must
+    // not grow it.
+    let mut arena = pool.acquire();
+    assert_eq!(arena.grow_events(), grown);
+    let r = cfg.order_into(&rt, &mut arena, &g);
+    assert_contract(g.n, &r.perm);
+    assert_eq!(arena.grow_events(), grown, "warm pooled run must not grow");
+    pool.release(arena);
+    assert_eq!(pool.idle(), 1);
+}
+
+#[test]
+fn concurrent_service_requests_all_satisfy_the_contract() {
+    let svc = Service::new(2);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for i in 0..6u64 {
+            let svc = &svc;
+            handles.push(s.spawn(move || {
+                let g = random_graph(200 + 60 * i as usize, 5, i);
+                let rep = svc.order(&OrderRequest {
+                    matrix: None,
+                    pattern: Some(g.clone()),
+                    method: Method::ParAmd {
+                        threads: 2,
+                        mult: 1.1,
+                        lim_total: 0,
+                    },
+                    compute_fill: false,
+                });
+                assert_contract(g.n, &rep.perm);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    assert_eq!(svc.metrics().total_requests(), 6);
+    assert!(
+        svc.idle_arenas() >= 1,
+        "arenas must return to the pool after the burst"
+    );
+}
+
+#[test]
+fn service_mixed_methods_interleave_with_warm_paramd() {
+    // ParAMD requests share the runtime while other methods run inline;
+    // interleaving must not corrupt pooled state.
+    let svc = Service::new(2);
+    let g = mesh2d(16, 16);
+    for i in 0..6 {
+        let method = if i % 2 == 0 {
+            Method::ParAmd {
+                threads: 2,
+                mult: 1.1,
+                lim_total: 0,
+            }
+        } else {
+            Method::Amd
+        };
+        let rep = svc.order(&OrderRequest {
+            matrix: None,
+            pattern: Some(g.clone()),
+            method,
+            compute_fill: true,
+        });
+        assert_contract(g.n, &rep.perm);
+        assert!(rep.fill_in.unwrap() >= 0);
+    }
+}
