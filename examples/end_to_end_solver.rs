@@ -12,7 +12,10 @@ use paramd::coordinator::{Method, OrderRequest, Service, SolveSpec};
 use paramd::matgen::{self, Scale};
 
 fn main() {
+    // Two schedulers: the ordering stage of one request overlaps the
+    // pre-processing/fill of the next (`solve` rides the same pipeline).
     let svc = Service::new(2)
+        .with_scheduler_threads(2)
         .with_pjrt_solver("artifacts".into())
         .expect("PJRT solver (run `make artifacts`; needs the `pjrt` feature)");
 
@@ -66,6 +69,7 @@ fn main() {
         }
     }
     table.print();
-    println!("\nAll systems solved through ordering -> sparse factor -> PJRT dense tail.");
+    println!("\n{}", svc.metrics().report());
+    println!("All systems solved through ordering -> sparse factor -> PJRT dense tail.");
     println!("(cf. paper Table 4.3: ordering computed on CPU, system solved by cuDSS)");
 }

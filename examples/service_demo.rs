@@ -1,9 +1,11 @@
 //! Coordinator service demo: a stream of mixed ordering requests through
-//! the `Service` queue with metrics reporting — the deployable-component
-//! view of the library. The service owns one persistent ParAMD worker
-//! pool and a pool of reusable arenas, so repeated ParAMD requests run
-//! spawn-free and allocation-free (warm path); the final section shows
-//! the warm-up effect on request latency.
+//! the `Service` pipeline with metrics reporting — the deployable-
+//! component view of the library. The service owns one persistent ParAMD
+//! worker pool and a bounded pool of reusable arenas, so repeated ParAMD
+//! requests run spawn-free and allocation-free (warm path). Sections:
+//! synchronous requests (the submit+wait shim), a solve request, the
+//! warm-up effect on latency, and an **async ticket burst** through the
+//! bounded queue showing the wait-vs-service latency split.
 //!
 //! Run: `cargo run --release --example service_demo`
 
@@ -11,7 +13,10 @@ use paramd::coordinator::{Method, OrderRequest, Service, SolveSpec};
 use paramd::matgen::{self, Scale};
 
 fn main() {
-    let svc = Service::new(2);
+    let svc = Service::new(2)
+        .with_scheduler_threads(2)
+        .with_arena_cap(2)
+        .with_queue_cap(16);
     let suite = matgen::suite();
 
     println!("== ordering requests ==");
@@ -90,6 +95,41 @@ fn main() {
         );
     }
     println!("  idle arenas pooled: {}", svc.idle_arenas());
+
+    println!("\n== async pipeline: a burst of tickets ==");
+    // Submit first, wait later: the queue absorbs the burst (bounded —
+    // submit would block at capacity) while the schedulers drain it.
+    let mut tickets = Vec::new();
+    for i in 0..8 {
+        let e = &suite[i % suite.len()];
+        let g = (e.gen)(Scale::Tiny);
+        tickets.push((
+            e.name,
+            svc.submit(OrderRequest {
+                matrix: None,
+                pattern: Some(g),
+                method: Method::ParAmd {
+                    threads: 4,
+                    mult: 1.1,
+                    lim_total: 8192,
+                },
+                compute_fill: false,
+            }),
+        ));
+    }
+    println!("  8 tickets submitted; queue depth now {}", svc.queue_depth());
+    for (name, ticket) in tickets {
+        let rep = ticket.wait();
+        println!("  {:<14} n={:<6} {:.5}s", name, rep.perm.len(), rep.order_secs);
+    }
+    let m = svc.metrics();
+    println!(
+        "  queue peak {} | cancelled {} | arena evictions {} | idle arenas {}",
+        m.pipeline.queue_depth_peak,
+        m.pipeline.cancelled,
+        m.pipeline.arena_evictions,
+        svc.idle_arenas()
+    );
 
     println!("\n== metrics ==\n{}", svc.metrics().report());
 }

@@ -8,7 +8,8 @@
 //! `PARAMD_BENCH_OUT`; default lands in the repository root when run via
 //! `cargo bench` from `rust/`).
 //!
-//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 20).
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 20), or
+//! `--smoke` for a quick compile-and-run-once CI pass.
 
 #[path = "bench_common/mod.rs"]
 #[allow(dead_code)] // shared helper module; this bench uses a subset
@@ -28,10 +29,15 @@ fn main() {
         "ROADMAP warm-path PR; not a paper table",
     );
     let t = bench_common::threads();
-    let reps: usize = std::env::var("PARAMD_REPS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(20);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let reps: usize = if smoke {
+        2
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20)
+    };
     let graphs: Vec<(&str, SymGraph)> = vec![
         ("mesh2d_60x60", mesh2d(60, 60)),
         ("mesh3d_14", mesh3d(14, 14, 14)),

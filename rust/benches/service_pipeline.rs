@@ -1,0 +1,124 @@
+//! Service pipeline throughput: blocking `order()` calls vs an async
+//! ticket burst through the bounded queue.
+//!
+//! Sync = one caller looping `order()` (submit+wait per request). Async
+//! = submit every request up front, then harvest the tickets; with 2
+//! scheduler threads the fill analysis of one request overlaps the
+//! ordering of the next, and the arena pool is capped at 4 so the run
+//! also exercises the backpressure path. Reports requests/sec for both
+//! modes, the wait-vs-service latency split, and queue/eviction gauges,
+//! and writes the JSON trajectory file `BENCH_service_pipeline.json`
+//! (override with `PARAMD_BENCH_PIPELINE_OUT`; default lands in the
+//! repository root when run via `cargo bench` from `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 12), or
+//! `--smoke` for a one-pass CI run.
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::coordinator::{Method, OrderRequest, Service, Ticket};
+use paramd::graph::csr::SymGraph;
+use paramd::matgen::{mesh2d, mesh3d, random_graph};
+use paramd::util::timer::Timer;
+
+fn requests(graphs: &[(&str, SymGraph)], reps: usize) -> Vec<OrderRequest> {
+    let mut out = Vec::new();
+    for _ in 0..reps {
+        for (_, g) in graphs {
+            out.push(OrderRequest {
+                matrix: None,
+                pattern: Some(g.clone()),
+                method: Method::ParAmd {
+                    threads: 4,
+                    mult: 1.1,
+                    lim_total: 8192,
+                },
+                compute_fill: true,
+            });
+        }
+    }
+    out
+}
+
+fn main() {
+    bench_common::banner(
+        "Service pipeline throughput — sync order() vs async ticket burst",
+        "ROADMAP async-pipeline PR; not a paper table",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let t = bench_common::threads();
+    let reps: usize = if smoke {
+        1
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(12)
+    };
+    let graphs: Vec<(&str, SymGraph)> = vec![
+        ("mesh2d_40x40", mesh2d(40, 40)),
+        ("mesh3d_10", mesh3d(10, 10, 10)),
+        ("random_2k5_d7", random_graph(2500, 7, 9)),
+    ];
+    let total = reps * graphs.len();
+
+    // Sync mode: the submit+wait shim, one caller.
+    let svc = Service::new(t);
+    let reqs = requests(&graphs, reps);
+    let ts = Timer::new();
+    for req in &reqs {
+        let rep = svc.order(req);
+        assert_eq!(rep.perm.len(), req.n());
+    }
+    let sync_rps = total as f64 / ts.secs();
+    drop(svc);
+
+    // Async mode: submit everything, then wait; 2 schedulers overlap
+    // pre/fill with ordering, arena pool capped at 4.
+    let svc = Service::new(t)
+        .with_scheduler_threads(2)
+        .with_arena_cap(4)
+        .with_queue_cap(64);
+    let reqs = requests(&graphs, reps);
+    let ta = Timer::new();
+    let tickets: Vec<Ticket> = reqs.into_iter().map(|r| svc.submit(r)).collect();
+    for ticket in tickets {
+        let rep = ticket.wait();
+        assert!(!rep.perm.is_empty());
+    }
+    let async_rps = total as f64 / ta.secs();
+    let m = svc.metrics();
+    let paramd = m.get("paramd").expect("paramd requests recorded");
+    let speedup = async_rps / sync_rps;
+
+    println!("{:<10} {:>6} {:>12} {:>12}", "mode", "reqs", "req/s", "");
+    println!("{:<10} {:>6} {:>12.2}", "sync", total, sync_rps);
+    println!("{:<10} {:>6} {:>12.2} {:>11.2}x", "async", total, async_rps, speedup);
+    println!(
+        "async wait/service split: {:.4}s / {:.4}s mean; queue peak {}; evictions {}",
+        paramd.mean_wait(),
+        paramd.mean_service(),
+        m.pipeline.queue_depth_peak,
+        m.pipeline.arena_evictions
+    );
+
+    let out = std::env::var("PARAMD_BENCH_PIPELINE_OUT")
+        .unwrap_or_else(|_| "../BENCH_service_pipeline.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"service_pipeline\",\n  \"status\": \"measured\",\n  \
+         \"threads\": {t},\n  \"requests\": {total},\n  \
+         \"sync_requests_per_sec\": {sync_rps:.3},\n  \
+         \"async_requests_per_sec\": {async_rps:.3},\n  \
+         \"async_speedup\": {speedup:.3},\n  \
+         \"mean_wait_secs\": {:.6},\n  \"mean_service_secs\": {:.6},\n  \
+         \"queue_depth_peak\": {},\n  \"arena_evictions\": {}\n}}\n",
+        paramd.mean_wait(),
+        paramd.mean_service(),
+        m.pipeline.queue_depth_peak,
+        m.pipeline.arena_evictions
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+}

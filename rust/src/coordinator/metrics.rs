@@ -1,5 +1,6 @@
-//! Per-method service metrics: request counts, latency summaries,
-//! fill-in accumulation.
+//! Per-method service metrics — request counts, latency summaries split
+//! into **queue wait** vs **service** time, fill-in accumulation — plus
+//! pipeline-wide gauges (queue depth, cancellations, arena evictions).
 
 use crate::util::stats;
 
@@ -7,7 +8,12 @@ use crate::util::stats;
 #[derive(Clone, Debug, Default)]
 pub struct MethodMetrics {
     pub requests: u64,
+    /// End-to-end latency per request (wait + service).
     pub latencies: Vec<f64>,
+    /// Time spent queued before a scheduler picked the request up.
+    pub wait_latencies: Vec<f64>,
+    /// Time spent actually processing (pre-process + order + fill).
+    pub service_latencies: Vec<f64>,
     pub total_fill: i64,
 }
 
@@ -19,16 +25,59 @@ impl MethodMetrics {
     pub fn p95_latency(&self) -> f64 {
         stats::percentile(&self.latencies, 95.0)
     }
+
+    pub fn mean_wait(&self) -> f64 {
+        stats::mean(&self.wait_latencies)
+    }
+
+    pub fn mean_service(&self) -> f64 {
+        stats::mean(&self.service_latencies)
+    }
+}
+
+/// Pipeline-wide gauges and counters. The `queue_depth` and
+/// `arena_evictions` fields are snapshots stamped by `Service::metrics`;
+/// the rest accumulate as requests flow.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineMetrics {
+    /// Tickets accepted by `submit` (including the sync shim).
+    pub submitted: u64,
+    /// Requests that produced a reply.
+    pub completed: u64,
+    /// Requests skipped or aborted because their ticket was cancelled.
+    pub cancelled: u64,
+    /// Requests whose processing panicked (ticket failed).
+    pub failed: u64,
+    /// Queue depth at snapshot time.
+    pub queue_depth: usize,
+    /// Highest queue depth observed at any submit.
+    pub queue_depth_peak: usize,
+    /// Arenas dropped by the pool's eviction policy, at snapshot time.
+    pub arena_evictions: u64,
 }
 
 /// Service-wide metrics keyed by method name.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     entries: Vec<(String, MethodMetrics)>,
+    pub pipeline: PipelineMetrics,
 }
 
 impl Metrics {
+    /// Record a request with no queue wait (direct/inline callers).
     pub fn record(&mut self, method: &str, latency_secs: f64, fill: Option<i64>) {
+        self.record_split(method, 0.0, latency_secs, fill);
+    }
+
+    /// Record a pipelined request: `wait_secs` in the queue, then
+    /// `service_secs` of processing.
+    pub fn record_split(
+        &mut self,
+        method: &str,
+        wait_secs: f64,
+        service_secs: f64,
+        fill: Option<i64>,
+    ) {
         let e = match self.entries.iter_mut().find(|(m, _)| m == method) {
             Some((_, e)) => e,
             None => {
@@ -38,8 +87,29 @@ impl Metrics {
             }
         };
         e.requests += 1;
-        e.latencies.push(latency_secs);
+        e.latencies.push(wait_secs + service_secs);
+        e.wait_latencies.push(wait_secs);
+        e.service_latencies.push(service_secs);
         e.total_fill += fill.unwrap_or(0);
+    }
+
+    /// A pipelined request produced a reply (scheduler-only; direct
+    /// `record*` callers are not pipeline traffic).
+    pub(crate) fn note_completed(&mut self) {
+        self.pipeline.completed += 1;
+    }
+
+    pub(crate) fn note_submit(&mut self, queue_depth: usize) {
+        self.pipeline.submitted += 1;
+        self.pipeline.queue_depth_peak = self.pipeline.queue_depth_peak.max(queue_depth);
+    }
+
+    pub(crate) fn note_cancelled(&mut self) {
+        self.pipeline.cancelled += 1;
+    }
+
+    pub(crate) fn note_failed(&mut self) {
+        self.pipeline.failed += 1;
     }
 
     pub fn get(&self, method: &str) -> Option<&MethodMetrics> {
@@ -56,16 +126,24 @@ impl Metrics {
 
     /// Render a compact report.
     pub fn report(&self) -> String {
-        let mut s = String::from("method     reqs   mean(s)    p95(s)\n");
+        let mut s = String::from("method     reqs   mean(s)    p95(s)     wait(s)    svc(s)\n");
         for (m, e) in self.iter() {
             s.push_str(&format!(
-                "{:<10} {:<6} {:<10.4} {:<10.4}\n",
+                "{:<10} {:<6} {:<10.4} {:<10.4} {:<10.4} {:<10.4}\n",
                 m,
                 e.requests,
                 e.mean_latency(),
-                e.p95_latency()
+                e.p95_latency(),
+                e.mean_wait(),
+                e.mean_service()
             ));
         }
+        let p = &self.pipeline;
+        s.push_str(&format!(
+            "pipeline: submitted={} completed={} cancelled={} failed={} \
+             queue_peak={} evictions={}\n",
+            p.submitted, p.completed, p.cancelled, p.failed, p.queue_depth_peak, p.arena_evictions
+        ));
         s
     }
 }
@@ -87,5 +165,36 @@ mod tests {
         assert_eq!(amd.total_fill, 300);
         assert!(m.report().contains("paramd"));
         assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn split_latencies_accumulate_both_halves() {
+        let mut m = Metrics::default();
+        m.record_split("paramd", 0.25, 0.75, None);
+        m.record_split("paramd", 0.75, 0.25, None);
+        let e = m.get("paramd").unwrap();
+        assert!((e.mean_latency() - 1.0).abs() < 1e-12);
+        assert!((e.mean_wait() - 0.5).abs() < 1e-12);
+        assert!((e.mean_service() - 0.5).abs() < 1e-12);
+        assert_eq!(
+            m.pipeline.completed, 0,
+            "direct record calls are not pipeline traffic"
+        );
+        m.note_completed();
+        assert_eq!(m.pipeline.completed, 1);
+    }
+
+    #[test]
+    fn pipeline_counters_track_submissions() {
+        let mut m = Metrics::default();
+        m.note_submit(3);
+        m.note_submit(1);
+        m.note_cancelled();
+        m.note_failed();
+        assert_eq!(m.pipeline.submitted, 2);
+        assert_eq!(m.pipeline.queue_depth_peak, 3);
+        assert_eq!(m.pipeline.cancelled, 1);
+        assert_eq!(m.pipeline.failed, 1);
+        assert!(m.report().contains("queue_peak=3"));
     }
 }

@@ -1,38 +1,77 @@
-//! The Layer-3 coordinator: an ordering/solve *service*.
+//! The Layer-3 coordinator: an asynchronous ordering/solve *service*.
 //!
 //! The paper's AMD use case is a pipeline stage inside a sparse direct
-//! solver; this module packages the library as one deployable component:
-//! a request queue, an ordering executor, and a dedicated **solver
-//! thread** that owns the non-`Sync` PJRT engine and serves factor+solve
-//! requests over a channel. Metrics (latency summaries, counters) are
-//! collected per method.
+//! solver; this module packages the library as one deployable component
+//! built around a **ticket-based request pipeline**:
+//!
+//! ```text
+//!  submit(req) ──► bounded queue ──► scheduler thread(s) ──► Ticket
+//!      │            (backpressure)     │            │
+//!      ▼                               ▼            ▼
+//!   Ticket          pre-process on   ordering on the shared
+//!  wait()/try_get()  `pre_threads`   OrderingRuntime + ArenaPool
+//! ```
+//!
+//! ## Request lifecycle
+//!
+//! [`Service::submit`] enqueues an [`OrderRequest`] onto a **bounded
+//! MPMC queue** and returns a [`Ticket`] immediately. Scheduler threads
+//! drain the queue: each request is symmetrized (pre-processing, §4.2),
+//! ordered, optionally fill-counted, and the reply is delivered through
+//! the ticket — [`Ticket::wait`] blocks for it, [`Ticket::try_get`]
+//! polls. The old synchronous [`Service::order`] is now a thin
+//! submit+wait shim, so its replies are produced by exactly the same
+//! path (and bit-match ticketed replies for deterministic methods).
+//!
+//! ## Backpressure
+//!
+//! Memory is bounded at two points and both surface as *waiting*, never
+//! as unbounded growth: the request queue has a capacity
+//! ([`Service::with_queue_cap`]) — when it is full, `submit` blocks —
+//! and the [`ArenaPool`] is bounded ([`Service::with_arena_cap`]) — when
+//! every arena is checked out, schedulers block acquiring one, the queue
+//! fills, and the stall propagates back to submitters. Idle arenas over
+//! capacity are evicted LRU-by-slab-size (see
+//! [`ArenaPool`](crate::ordering::paramd::arena::ArenaPool)).
+//!
+//! ## Cancellation
+//!
+//! **Dropping a [`Ticket`] cancels its request.** A still-queued job is
+//! skipped outright; a running ParAMD job observes the flag at its next
+//! round boundary and aborts, releasing the worker pool and arena to
+//! live requests (`ParAmd::order_into_cancellable`).
 //!
 //! ## Warm ordering path
 //!
 //! The service owns **one persistent
 //! [`OrderingRuntime`](crate::ordering::paramd::runtime::OrderingRuntime)**
 //! — a pool of worker threads spawned at construction and parked between
-//! requests — plus an
-//! [`ArenaPool`](crate::ordering::paramd::arena::ArenaPool) of reusable
-//! per-run storage. Every ParAMD request borrows the shared runtime and a
-//! pooled arena, so the steady state neither spawns threads nor performs
-//! O(n)/O(nnz) allocations inside the ordering (the reply's owned
-//! permutation is the only per-request copy). Concurrent requests are
-//! safe: the runtime serializes jobs internally and each request checks
-//! out its own arena, so [`Service`] is `Sync` and callable through
-//! `&self` from many threads.
+//! jobs, with an internal job queue ([`QueuePolicy`]: FIFO or
+//! smallest-graph-first) — plus the bounded arena pool. Every ParAMD
+//! request borrows the shared runtime and a pooled arena, so the steady
+//! state neither spawns threads nor performs O(n)/O(nnz) allocations
+//! inside the ordering. The pool size is fixed at construction
+//! ([`Service::new`] / [`Service::with_order_threads`]); a request's
+//! `Method::ParAmd.threads` knob is superseded by the shared pool.
 //!
-//! The pool size is fixed at construction ([`Service::new`] /
-//! [`Service::with_order_threads`]); a request's `Method::ParAmd.threads`
-//! knob is superseded by the shared pool.
+//! Metrics ([`Service::metrics`]) split each request's latency into
+//! queue **wait** vs **service** time and expose queue depth (current +
+//! peak), cancellations, and arena evictions.
 
 pub mod metrics;
+pub mod pipeline;
 pub mod request;
 
-pub use metrics::Metrics;
+pub use metrics::{MethodMetrics, Metrics, PipelineMetrics};
+pub use pipeline::Ticket;
 pub use request::{Method, OrderReply, OrderRequest, SolveReply, SolveSpec};
 
-use std::sync::{mpsc, Mutex};
+pub use crate::ordering::paramd::runtime::QueuePolicy;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::thread::JoinHandle;
 
 use crate::cholesky::{self, DenseTail, NativeDense};
 use crate::graph::symmetrize_parallel;
@@ -45,20 +84,39 @@ use crate::ordering::{
 use crate::symbolic;
 use crate::util::timer::Timer;
 
+use pipeline::{BorrowedRequest, BoundedQueue, PipelineJob, RequestSlot};
+
+/// Default bound of the request queue (requests, not bytes).
+const DEFAULT_QUEUE_CAP: usize = 64;
+
 /// The ordering service. Construct once, submit requests (from any number
-/// of threads), read metrics.
+/// of threads), wait on tickets, read metrics.
 pub struct Service {
-    metrics: Mutex<Metrics>,
-    /// Threads used for the symmetrization pre-processing (§4.2).
-    pre_threads: usize,
+    /// Always `Some` outside of `with_order_threads`'s rebuild window
+    /// (the `Option` exists because `Service: Drop` forbids moving the
+    /// field out directly).
+    core: Option<Arc<ServiceCore>>,
     /// Dense-tail policy handed to the solver.
     tail: DenseTail,
     /// Channel to the dedicated PJRT solver thread (None = native only).
     solver: Option<SolverHandle>,
+    /// Scheduler threads to spawn (fixed at first submit).
+    sched_threads: usize,
+    /// Lazily-spawned scheduler threads draining the request queue.
+    sched: OnceLock<Vec<JoinHandle<()>>>,
+}
+
+/// State shared between the service handle and its scheduler threads.
+struct ServiceCore {
+    metrics: Mutex<Metrics>,
+    /// Threads used for the symmetrization pre-processing (§4.2).
+    pre_threads: usize,
     /// Persistent ParAMD worker pool shared by all ordering requests.
     order_rt: OrderingRuntime,
-    /// Pooled arenas: warm storage checked out per ordering request.
+    /// Bounded pool of arenas: warm storage checked out per request.
     arenas: ArenaPool,
+    /// The bounded request queue the pipeline drains.
+    queue: BoundedQueue<PipelineJob>,
 }
 
 struct SolverHandle {
@@ -77,22 +135,82 @@ struct SolveJob {
 impl Service {
     /// A service with the native dense engine only. The persistent
     /// ordering pool is sized to `pre_threads` (see
-    /// [`Self::with_order_threads`] to size it independently).
+    /// [`Self::with_order_threads`] to size it independently); one
+    /// scheduler thread drains the pipeline (see
+    /// [`Self::with_scheduler_threads`]).
     pub fn new(pre_threads: usize) -> Self {
         let pre_threads = pre_threads.max(1);
         Self {
-            metrics: Mutex::new(Metrics::default()),
-            pre_threads,
+            core: Some(Arc::new(ServiceCore {
+                metrics: Mutex::new(Metrics::default()),
+                pre_threads,
+                order_rt: OrderingRuntime::new(pre_threads),
+                arenas: ArenaPool::new(),
+                queue: BoundedQueue::new(DEFAULT_QUEUE_CAP),
+            })),
             tail: DenseTail::default(),
             solver: None,
-            order_rt: OrderingRuntime::new(pre_threads),
-            arenas: ArenaPool::new(),
+            sched_threads: 1,
+            sched: OnceLock::new(),
         }
     }
 
-    /// Rebuild the persistent ordering pool with `threads` workers.
+    fn core(&self) -> &ServiceCore {
+        self.core.as_deref().expect("core present")
+    }
+
+    /// Rebuild the persistent ordering pool with `threads` workers. The
+    /// pipeline is drained first (queue closed, schedulers joined — so
+    /// every accepted request resolves) and the replaced runtime's
+    /// workers are explicitly shut down and joined, not leaked.
     pub fn with_order_threads(mut self, threads: usize) -> Self {
-        self.order_rt = OrderingRuntime::new(threads.max(1));
+        self.stop_schedulers();
+        let core_arc = self.core.take().expect("core present");
+        let mut core = match Arc::try_unwrap(core_arc) {
+            Ok(core) => core,
+            Err(_) => unreachable!("schedulers joined; no other owner of the core exists"),
+        };
+        let mut old = std::mem::replace(&mut core.order_rt, OrderingRuntime::new(threads.max(1)));
+        old.shutdown_join();
+        drop(old);
+        // The old queue is closed; the pipeline restarts on a fresh one.
+        core.queue = BoundedQueue::new(core.queue.capacity());
+        self.core = Some(Arc::new(core));
+        self.sched = OnceLock::new();
+        self
+    }
+
+    /// Number of scheduler threads draining the pipeline. More than one
+    /// overlaps pre-processing/fill of one request with the ordering of
+    /// another (the runtime serializes the ordering jobs themselves).
+    /// Must be called before the first submit.
+    pub fn with_scheduler_threads(mut self, n: usize) -> Self {
+        assert!(
+            self.sched.get().is_none(),
+            "set scheduler threads before the first submit"
+        );
+        self.sched_threads = n.max(1);
+        self
+    }
+
+    /// Bound the arena pool to `cap` live arenas (backpressure +
+    /// LRU-by-slab-size eviction; see the module docs).
+    pub fn with_arena_cap(self, cap: usize) -> Self {
+        self.core().arenas.set_capacity(cap);
+        self
+    }
+
+    /// Bound the request queue to `cap` queued requests; a full queue
+    /// blocks `submit` (backpressure).
+    pub fn with_queue_cap(self, cap: usize) -> Self {
+        self.core().queue.set_capacity(cap);
+        self
+    }
+
+    /// Pick how the shared runtime orders its internal job queue (FIFO by
+    /// default; `SmallestFirst` lets small graphs overtake a monster).
+    pub fn with_queue_policy(self, policy: QueuePolicy) -> Self {
+        self.core().order_rt.set_policy(policy);
         self
     }
 
@@ -147,21 +265,203 @@ impl Service {
         self
     }
 
-    /// Snapshot of the per-method metrics.
+    /// Snapshot of the per-method and pipeline metrics.
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        let core = self.core();
+        let mut m = core.metrics.lock().unwrap().clone();
+        m.pipeline.queue_depth = core.queue.len();
+        m.pipeline.arena_evictions = core.arenas.evictions();
+        m
     }
 
     /// Number of idle pooled arenas (observability hook).
     pub fn idle_arenas(&self) -> usize {
-        self.arenas.idle()
+        self.core().arenas.idle()
     }
 
-    /// Run an ordering request (synchronously; ParAMD parallelism happens
-    /// inside on the shared persistent pool). Includes the `|A| + |A^T|`
-    /// pre-processing unless the request says the input is already
-    /// symmetric (§4.2's advice).
+    /// Requests currently waiting in the pipeline queue.
+    pub fn queue_depth(&self) -> usize {
+        self.core().queue.len()
+    }
+
+    /// Submit an ordering request to the pipeline. Returns immediately
+    /// with a [`Ticket`] unless the bounded queue is full, in which case
+    /// this call blocks until a scheduler drains a slot (backpressure).
+    /// Drop the ticket to cancel the request.
+    pub fn submit(&self, req: OrderRequest) -> Ticket {
+        self.submit_slot(RequestSlot::Owned(req))
+    }
+
+    /// Run an ordering request synchronously. This is a thin submit+wait
+    /// shim over the pipeline: the request flows through the same queue
+    /// and schedulers as [`Self::submit`], so replies are identical to
+    /// the ticketed path. The request is borrowed, not cloned — the
+    /// blocking wait keeps it alive for the scheduler.
     pub fn order(&self, req: &OrderRequest) -> OrderReply {
+        // SAFETY: we block on the ticket below; the scheduler's last
+        // access to the borrow strictly precedes ticket resolution.
+        let slot = RequestSlot::Borrowed(unsafe { BorrowedRequest::new(req) });
+        self.submit_slot(slot).wait()
+    }
+
+    fn submit_slot(&self, slot: RequestSlot) -> Ticket {
+        self.ensure_schedulers();
+        let (ticket, inner) = Ticket::new();
+        let job = PipelineJob {
+            req: slot,
+            ticket: inner,
+            queued: Timer::new(),
+        };
+        match self.core().queue.push(job) {
+            // Poison-tolerant: once the job is enqueued, nothing on this
+            // path may panic — a borrowed `order()` request must stay
+            // alive until its ticket resolves.
+            Ok(depth) => self
+                .core()
+                .metrics
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .note_submit(depth),
+            // The queue only closes while `&mut self` methods run, which
+            // cannot overlap a `&self` submit.
+            Err(_) => unreachable!("submit raced a service teardown"),
+        }
+        ticket
+    }
+
+    fn ensure_schedulers(&self) {
+        let core_arc = self.core.as_ref().expect("core present");
+        self.sched.get_or_init(|| {
+            (0..self.sched_threads)
+                .map(|i| {
+                    let core = Arc::clone(core_arc);
+                    std::thread::Builder::new()
+                        .name(format!("paramd-sched-{i}"))
+                        .spawn(move || core.scheduler_loop())
+                        .expect("spawn scheduler thread")
+                })
+                .collect()
+        });
+    }
+
+    /// Close the queue and join the schedulers; every accepted request
+    /// resolves (reply or failure) before this returns.
+    fn stop_schedulers(&mut self) {
+        if let Some(core) = &self.core {
+            core.queue.close();
+        }
+        if let Some(handles) = self.sched.take() {
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Order + factor + solve. Uses the PJRT solver thread when attached,
+    /// otherwise the native dense engine inline.
+    pub fn solve(&self, req: &OrderRequest, spec: &SolveSpec) -> Result<SolveReply, String> {
+        let a = req
+            .matrix
+            .as_ref()
+            .ok_or("solve requires an explicit matrix")?
+            .clone();
+        let ordered = self.order(req);
+        // The reply's permutation is *moved* into the solve (the solver
+        // thread takes ownership; the native path borrows) — no extra
+        // O(n) copy on the request path.
+        let OrderReply {
+            perm,
+            pre_secs,
+            order_secs,
+            total_secs,
+            ..
+        } = ordered;
+        let b = match spec {
+            SolveSpec::OnesSolution => {
+                let ones = vec![1.0; a.nrows];
+                let mut b = vec![0.0; a.nrows];
+                a.matvec(&ones, &mut b);
+                b
+            }
+            other => other.rhs(a.nrows),
+        };
+        let t = Timer::new();
+        let mut out = if let Some(handle) = &self.solver {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            handle
+                .tx
+                .lock()
+                .unwrap()
+                .send(SolveJob {
+                    a,
+                    perm,
+                    b,
+                    tail: self.tail,
+                    reply: reply_tx,
+                })
+                .map_err(|e| e.to_string())?;
+            reply_rx.recv().map_err(|e| e.to_string())??
+        } else {
+            solve_with(&a, &perm, &b, self.tail, &NativeDense, "native")?
+        };
+        out.order_secs = order_secs;
+        out.pre_secs = pre_secs;
+        out.total_secs = total_secs + t.secs();
+        Ok(out)
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop_schedulers();
+        // Field drop order then joins the ordering runtime's workers
+        // (via the last `Arc<ServiceCore>`) and closes the solver channel.
+    }
+}
+
+impl ServiceCore {
+    /// Scheduler thread body: drain the queue until it closes, resolving
+    /// every job's ticket (reply, cancellation, or failure).
+    fn scheduler_loop(&self) {
+        while let Some(job) = self.queue.pop() {
+            let wait_secs = job.queued.secs();
+            if job.ticket.is_cancelled() {
+                self.metrics.lock().unwrap().note_cancelled();
+                job.ticket.fail("cancelled before processing");
+                continue;
+            }
+            let method_name = job.req.get().method.name();
+            let outcome = catch_unwind(AssertUnwindSafe(|| {
+                self.process(job.req.get(), job.ticket.cancel_flag())
+            }));
+            match outcome {
+                Ok(Some(reply)) => {
+                    // Record before fulfilling so a woken waiter already
+                    // sees its request in the metrics.
+                    {
+                        let mut m = self.metrics.lock().unwrap();
+                        m.record_split(method_name, wait_secs, reply.total_secs, reply.fill_in);
+                        m.note_completed();
+                    }
+                    job.ticket.fulfill(reply);
+                }
+                Ok(None) => {
+                    self.metrics.lock().unwrap().note_cancelled();
+                    job.ticket.fail("cancelled during processing");
+                }
+                Err(panic) => {
+                    let why = panic_message(&panic);
+                    self.metrics.lock().unwrap().note_failed();
+                    job.ticket.fail(format!("ordering panicked: {why}"));
+                }
+            }
+        }
+    }
+
+    /// Process one request end to end: pre-process, order, count fill.
+    /// Returns `None` when the request's cancellation flag fired (checked
+    /// between stages and, for ParAMD, between elimination rounds).
+    fn process(&self, req: &OrderRequest, cancel: &AtomicBool) -> Option<OrderReply> {
         let total = Timer::new();
         let tpre = Timer::new();
         let g = if let Some(g) = &req.pattern {
@@ -170,6 +470,9 @@ impl Service {
             symmetrize_parallel(req.matrix.as_ref().expect("matrix or pattern"), self.pre_threads)
         };
         let pre_secs = tpre.secs();
+        if cancel.load(Relaxed) {
+            return None;
+        }
 
         // What a reply needs from an ordering: the owned permutation plus
         // three scalar stats. Extracting just these keeps the warm ParAMD
@@ -199,28 +502,32 @@ impl Service {
                 let cfg = ParAmd::new(self.order_rt.threads())
                     .with_mult(*mult)
                     .with_lim_total(*lim_total);
-                let mut arena = self.arenas.acquire();
-                let r = cfg.order_into(&self.order_rt, &mut arena, &g);
+                // Blocks while the bounded pool is exhausted — that stall
+                // is the backpressure that fills the request queue. The
+                // guard releases on every exit path, including unwind.
+                let mut arena = self.arenas.checkout();
+                let r = cfg.order_into_cancellable(&self.order_rt, &mut arena, &g, cancel)?;
                 // The reply must own its permutation; everything else is
                 // read off the borrowed pooled result.
-                let out = (
+                (
                     r.perm.clone(),
                     r.stats.rounds,
                     r.stats.gc_count,
                     r.stats.modeled_time,
-                );
-                self.arenas.release(arena);
-                out
+                )
             }
         };
         let order_secs = tord.secs();
 
+        if cancel.load(Relaxed) {
+            return None; // don't burn fill analysis on a dropped ticket
+        }
         let fill = if req.compute_fill {
             Some(symbolic::fill_in(&g, &perm))
         } else {
             None
         };
-        let reply = OrderReply {
+        Some(OrderReply {
             perm,
             fill_in: fill,
             pre_secs,
@@ -229,55 +536,17 @@ impl Service {
             rounds,
             gc_count,
             modeled_time,
-        };
-        self.metrics
-            .lock()
-            .unwrap()
-            .record(req.method.name(), reply.total_secs, reply.fill_in);
-        reply
+        })
     }
+}
 
-    /// Order + factor + solve. Uses the PJRT solver thread when attached,
-    /// otherwise the native dense engine inline.
-    pub fn solve(&self, req: &OrderRequest, spec: &SolveSpec) -> Result<SolveReply, String> {
-        let a = req
-            .matrix
-            .as_ref()
-            .ok_or("solve requires an explicit matrix")?
-            .clone();
-        let ordered = self.order(req);
-        let b = match spec {
-            SolveSpec::OnesSolution => {
-                let ones = vec![1.0; a.nrows];
-                let mut b = vec![0.0; a.nrows];
-                a.matvec(&ones, &mut b);
-                b
-            }
-            other => other.rhs(a.nrows),
-        };
-        let t = Timer::new();
-        let mut out = if let Some(handle) = &self.solver {
-            let (reply_tx, reply_rx) = mpsc::channel();
-            handle
-                .tx
-                .lock()
-                .unwrap()
-                .send(SolveJob {
-                    a,
-                    perm: ordered.perm.clone(),
-                    b,
-                    tail: self.tail,
-                    reply: reply_tx,
-                })
-                .map_err(|e| e.to_string())?;
-            reply_rx.recv().map_err(|e| e.to_string())??
-        } else {
-            solve_with(&a, &ordered.perm, &b, self.tail, &NativeDense, "native")?
-        };
-        out.order_secs = ordered.order_secs;
-        out.pre_secs = ordered.pre_secs;
-        out.total_secs = ordered.total_secs + t.secs();
-        Ok(out)
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
     }
 }
 
@@ -368,7 +637,7 @@ mod tests {
     #[test]
     fn concurrent_paramd_requests_pass_contract() {
         use crate::ordering::test_support::check_ordering_contract;
-        let svc = Service::new(2);
+        let svc = Service::new(2).with_scheduler_threads(2);
         std::thread::scope(|s| {
             for i in 0..4usize {
                 let svc = &svc;
@@ -390,6 +659,52 @@ mod tests {
             }
         });
         assert_eq!(svc.metrics().total_requests(), 4);
+    }
+
+    #[test]
+    fn submit_returns_tickets_that_resolve() {
+        let svc = Service::new(2);
+        let t1 = svc.submit(spd_request(Method::Amd));
+        let t2 = svc.submit(spd_request(Method::ParAmd {
+            threads: 2,
+            mult: 1.1,
+            lim_total: 0,
+        }));
+        let r1 = t1.wait();
+        let r2 = t2.wait();
+        assert_eq!(r1.perm.len(), 144);
+        assert_eq!(r2.perm.len(), 144);
+        let m = svc.metrics();
+        assert_eq!(m.pipeline.submitted, 2);
+        assert_eq!(m.pipeline.completed, 2);
+        assert!(m.pipeline.queue_depth_peak >= 1);
+    }
+
+    #[test]
+    fn try_get_polls_until_ready() {
+        let svc = Service::new(1);
+        let ticket = svc.submit(spd_request(Method::Amd));
+        let reply = loop {
+            if let Some(r) = ticket.try_get() {
+                break r;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        };
+        assert_eq!(reply.perm.len(), 144);
+    }
+
+    #[test]
+    fn with_order_threads_drains_and_restarts_the_pipeline() {
+        let svc = Service::new(1);
+        let before = svc.order(&spd_request(Method::Amd)); // starts schedulers
+        let svc = svc.with_order_threads(3);
+        let after = svc.order(&spd_request(Method::Amd));
+        assert_eq!(before.perm, after.perm, "amd is deterministic");
+        assert_eq!(
+            svc.metrics().total_requests(),
+            2,
+            "metrics survive the pool rebuild"
+        );
     }
 
     #[test]

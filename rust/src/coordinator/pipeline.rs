@@ -1,0 +1,366 @@
+//! Plumbing of the async ordering pipeline: the bounded MPMC job queue
+//! the service enqueues onto, and the [`Ticket`] a submitter holds while
+//! its request flows through the scheduler.
+//!
+//! See the [`coordinator`](crate::coordinator) module docs for the
+//! request lifecycle; this module only defines the mechanisms.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::request::{OrderReply, OrderRequest};
+use crate::util::timer::Timer;
+
+/// A bounded MPMC queue. `push` blocks while the queue is full — this is
+/// the pipeline's backpressure: submitters stall instead of the service
+/// buffering unboundedly. `pop` blocks while empty and returns `None`
+/// once the queue is closed *and* drained, so consumers finish every
+/// accepted job before exiting.
+pub(crate) struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub(crate) fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                cap: cap.max(1),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Enqueue, blocking while full. Returns the resulting depth, or the
+    /// item back if the queue has been closed.
+    pub(crate) fn push(&self, item: T) -> Result<usize, T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.items.len() < st.cap {
+                st.items.push_back(item);
+                let depth = st.items.len();
+                drop(st);
+                self.not_empty.notify_one();
+                return Ok(depth);
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue, blocking while empty; `None` once closed and drained.
+    pub(crate) fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub(crate) fn capacity(&self) -> usize {
+        self.state.lock().unwrap().cap
+    }
+
+    pub(crate) fn set_capacity(&self, cap: usize) {
+        self.state.lock().unwrap().cap = cap.max(1);
+        self.not_full.notify_all();
+    }
+
+    /// Stop accepting pushes and wake everyone; queued items still drain
+    /// through `pop`.
+    pub(crate) fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+}
+
+/// Where a queued request's body lives.
+pub(crate) enum RequestSlot {
+    /// Submitted by value through `Service::submit`.
+    Owned(OrderRequest),
+    /// Lifetime-erased borrow from a blocking `Service::order` caller,
+    /// which waits on the ticket before releasing the borrow.
+    Borrowed(BorrowedRequest),
+}
+
+pub(crate) struct BorrowedRequest(*const OrderRequest);
+
+// SAFETY: the pointer crosses to the scheduler thread, but the pointee
+// is owned by an `order()` caller that blocks on the ticket until the
+// scheduler's last access (fulfill/fail happens strictly after). Shared
+// `&OrderRequest` access from another thread additionally requires
+// `OrderRequest: Sync`, enforced at compile time below so a future
+// interior-mutability field can't silently introduce a data race.
+unsafe impl Send for BorrowedRequest {}
+
+const _: () = {
+    const fn assert_sync<T: Sync>() {}
+    assert_sync::<OrderRequest>()
+};
+
+impl BorrowedRequest {
+    /// SAFETY: the caller must outlive every scheduler access, which
+    /// `Service::order` guarantees by blocking on the ticket.
+    pub(crate) unsafe fn new(req: &OrderRequest) -> Self {
+        Self(req as *const OrderRequest)
+    }
+}
+
+impl RequestSlot {
+    pub(crate) fn get(&self) -> &OrderRequest {
+        match self {
+            RequestSlot::Owned(req) => req,
+            // SAFETY: see `BorrowedRequest::new`.
+            RequestSlot::Borrowed(b) => unsafe { &*b.0 },
+        }
+    }
+}
+
+/// One queued request: its body, the submitter's ticket, and the queue
+/// stopwatch (wait-vs-service latency split).
+pub(crate) struct PipelineJob {
+    pub(crate) req: RequestSlot,
+    pub(crate) ticket: Arc<TicketInner>,
+    pub(crate) queued: Timer,
+}
+
+#[derive(Debug)]
+enum TicketState {
+    Pending,
+    Ready(OrderReply),
+    Taken,
+    Failed(String),
+}
+
+/// Shared half of a ticket: the scheduler resolves it, the submitter
+/// waits on it, and the cancel flag flows down into the ordering rounds.
+pub(crate) struct TicketInner {
+    state: Mutex<TicketState>,
+    cv: Condvar,
+    cancel: AtomicBool,
+}
+
+impl TicketInner {
+    pub(crate) fn fulfill(&self, reply: OrderReply) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, TicketState::Pending) {
+            *st = TicketState::Ready(reply);
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+
+    pub(crate) fn fail(&self, why: impl Into<String>) {
+        let mut st = self.state.lock().unwrap();
+        if matches!(*st, TicketState::Pending) {
+            *st = TicketState::Failed(why.into());
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.cancel.load(Relaxed)
+    }
+
+    /// The flag threaded into `ParAmd::order_into_cancellable`.
+    pub(crate) fn cancel_flag(&self) -> &AtomicBool {
+        &self.cancel
+    }
+}
+
+/// A claim on one submitted ordering request. [`Ticket::wait`] blocks
+/// for the reply; [`Ticket::try_get`] polls. **Dropping a ticket without
+/// consuming it cancels the request**: queued jobs are skipped outright
+/// and a running ParAMD job aborts at its next round boundary, freeing
+/// the shared pool for live requests.
+pub struct Ticket {
+    inner: Arc<TicketInner>,
+}
+
+impl Ticket {
+    pub(crate) fn new() -> (Ticket, Arc<TicketInner>) {
+        let inner = Arc::new(TicketInner {
+            state: Mutex::new(TicketState::Pending),
+            cv: Condvar::new(),
+            cancel: AtomicBool::new(false),
+        });
+        (
+            Ticket {
+                inner: Arc::clone(&inner),
+            },
+            inner,
+        )
+    }
+
+    /// Block until the reply arrives and take it.
+    ///
+    /// Panics if the pipeline abandoned the request (service shut down,
+    /// the request was cancelled, or the ordering panicked) — the same
+    /// contract the synchronous `order()` shim has always had.
+    pub fn wait(self) -> OrderReply {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, TicketState::Taken) {
+                TicketState::Ready(reply) => return reply,
+                TicketState::Pending => {
+                    *st = TicketState::Pending;
+                    st = self.inner.cv.wait(st).unwrap();
+                }
+                TicketState::Failed(why) => {
+                    drop(st);
+                    panic!("order ticket failed: {why}");
+                }
+                TicketState::Taken => {
+                    drop(st);
+                    panic!("order ticket already consumed");
+                }
+            }
+        }
+    }
+
+    /// Non-blocking poll: `Some(reply)` once ready (takes it), `None`
+    /// while pending. Panics like [`Self::wait`] on an abandoned ticket
+    /// or a double take.
+    pub fn try_get(&self) -> Option<OrderReply> {
+        let mut st = self.inner.state.lock().unwrap();
+        match std::mem::replace(&mut *st, TicketState::Taken) {
+            TicketState::Ready(reply) => Some(reply),
+            TicketState::Pending => {
+                *st = TicketState::Pending;
+                None
+            }
+            TicketState::Failed(why) => {
+                drop(st);
+                panic!("order ticket failed: {why}");
+            }
+            TicketState::Taken => {
+                drop(st);
+                panic!("order ticket already consumed");
+            }
+        }
+    }
+
+    /// Whether the ticket has resolved (reply ready, taken, or failed).
+    pub fn is_finished(&self) -> bool {
+        !matches!(*self.inner.state.lock().unwrap(), TicketState::Pending)
+    }
+
+    /// Explicitly cancel the request without dropping the ticket. After
+    /// cancellation the pipeline may fail the ticket, so `wait`/`try_get`
+    /// can panic; poll [`Self::is_finished`] if the race matters.
+    pub fn cancel(&self) {
+        self.inner.cancel.store(true, Relaxed);
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        // Withdraw interest; harmless if the reply was already taken.
+        self.inner.cancel.store(true, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_queue_push_pop_fifo() {
+        let q = BoundedQueue::new(4);
+        assert_eq!(q.push(1).unwrap(), 1);
+        assert_eq!(q.push(2).unwrap(), 2);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn bounded_queue_blocks_at_capacity() {
+        use std::sync::atomic::AtomicBool;
+        let q = BoundedQueue::new(1);
+        q.push(0u32).unwrap();
+        let pushed = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let q = &q;
+            let pushed = &pushed;
+            s.spawn(move || {
+                q.push(1).unwrap(); // blocks until the pop below
+                pushed.store(true, Relaxed);
+            });
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            assert!(!pushed.load(Relaxed), "push must block while full");
+            assert_eq!(q.pop(), Some(0));
+        });
+        assert!(pushed.load(Relaxed));
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn closed_queue_rejects_pushes_and_drains_pops() {
+        let q = BoundedQueue::new(4);
+        q.push(7u8).unwrap();
+        q.close();
+        assert_eq!(q.push(8), Err(8));
+        assert_eq!(q.pop(), Some(7), "accepted items still drain");
+        assert_eq!(q.pop(), None, "closed + empty ends the consumer");
+    }
+
+    #[test]
+    fn ticket_roundtrip_and_drop_cancels() {
+        let (ticket, inner) = Ticket::new();
+        assert!(!ticket.is_finished());
+        assert!(ticket.try_get().is_none());
+        inner.fulfill(OrderReply {
+            perm: vec![0],
+            fill_in: None,
+            pre_secs: 0.0,
+            order_secs: 0.0,
+            total_secs: 0.0,
+            rounds: 0,
+            gc_count: 0,
+            modeled_time: 0.0,
+        });
+        assert!(ticket.is_finished());
+        let reply = ticket.wait();
+        assert_eq!(reply.perm, vec![0]);
+
+        let (ticket, inner) = Ticket::new();
+        assert!(!inner.is_cancelled());
+        drop(ticket);
+        assert!(inner.is_cancelled(), "dropping a ticket must cancel it");
+    }
+
+    #[test]
+    #[should_panic(expected = "order ticket failed")]
+    fn failed_ticket_panics_on_wait() {
+        let (ticket, inner) = Ticket::new();
+        inner.fail("scheduler shut down");
+        ticket.wait();
+    }
+}

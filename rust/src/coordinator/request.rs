@@ -63,6 +63,18 @@ pub struct OrderRequest {
     pub compute_fill: bool,
 }
 
+impl OrderRequest {
+    /// Problem size (vertex count) — the scheduling weight used by
+    /// smallest-first queue policies. `0` when neither input is set.
+    pub fn n(&self) -> usize {
+        self.pattern
+            .as_ref()
+            .map(|g| g.n)
+            .or_else(|| self.matrix.as_ref().map(|m| m.nrows))
+            .unwrap_or(0)
+    }
+}
+
 /// Ordering reply.
 #[derive(Clone, Debug)]
 pub struct OrderReply {

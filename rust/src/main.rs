@@ -6,10 +6,14 @@
 //!   solve --matrix <...> [--method ...] [--pjrt] — order+factor+solve
 //!   gen   --name mini_nd24k --scale small --out m.mtx
 //!   suite — list the built-in matrix suite
-//!   serve --requests N [--pjrt] — service demo with metrics
+//!   serve --requests N [--pjrt] [--pipeline] [--sched-threads S]
+//!         [--arena-cap A] [--queue-cap Q] [--small-first]
+//!         — service demo with metrics; `--pipeline` submits every
+//!         request as a ticket up front (async, backpressured) instead
+//!         of blocking per request
 
 use paramd::cli::Args;
-use paramd::coordinator::{Method, OrderRequest, Service, SolveSpec};
+use paramd::coordinator::{Method, OrderRequest, QueuePolicy, Service, SolveSpec, Ticket};
 use paramd::graph::csr::CsrMatrix;
 use paramd::graph::mm;
 use paramd::matgen::{self, Scale};
@@ -43,7 +47,7 @@ fn method_of(args: &Args) -> Result<Method, String> {
 }
 
 fn main() {
-    let args = Args::from_env(&["pjrt", "no-fill"]);
+    let args = Args::from_env(&["pjrt", "no-fill", "pipeline", "small-first"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "order" => cmd_order(&args),
@@ -148,12 +152,18 @@ fn cmd_suite() -> Result<(), String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let n_req = args.get_parse("requests", 8usize);
-    let mut svc = Service::new(args.get_parse("pre-threads", 2usize));
+    let mut svc = Service::new(args.get_parse("pre-threads", 2usize))
+        .with_scheduler_threads(args.get_parse("sched-threads", 2usize))
+        .with_arena_cap(args.get_parse("arena-cap", usize::MAX))
+        .with_queue_cap(args.get_parse("queue-cap", 64usize));
+    if args.has("small-first") {
+        svc = svc.with_queue_policy(QueuePolicy::SmallestFirst);
+    }
     if args.has("pjrt") {
         svc = svc.with_pjrt_solver(args.get_or("artifacts", "artifacts").into())?;
     }
     let suite = matgen::suite();
-    for i in 0..n_req {
+    let build = |i: usize| {
         let e = &suite[i % suite.len()];
         let g = (e.gen)(Scale::Tiny);
         let method = if i % 2 == 0 {
@@ -171,15 +181,42 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             method,
             compute_fill: true,
         };
-        let rep = svc.order(&req);
-        println!(
-            "req {i:>3}: {:<12} {:<7} n={:<7} {:.4}s fill={:.2e}",
-            e.name,
-            method.name(),
-            rep.perm.len(),
-            rep.total_secs,
-            rep.fill_in.unwrap_or(0) as f64
-        );
+        (e.name, method, req)
+    };
+
+    if args.has("pipeline") {
+        // Async mode: enqueue everything (submit blocks only when the
+        // bounded queue is full), then harvest the tickets in order.
+        let mut pending: Vec<(usize, &str, Method, Ticket)> = Vec::new();
+        for i in 0..n_req {
+            let (name, method, req) = build(i);
+            pending.push((i, name, method, svc.submit(req)));
+        }
+        println!("submitted {n_req} tickets (queue depth now {})", svc.queue_depth());
+        for (i, name, method, ticket) in pending {
+            let rep = ticket.wait();
+            println!(
+                "req {i:>3}: {:<12} {:<7} n={:<7} {:.4}s fill={:.2e}",
+                name,
+                method.name(),
+                rep.perm.len(),
+                rep.total_secs,
+                rep.fill_in.unwrap_or(0) as f64
+            );
+        }
+    } else {
+        for i in 0..n_req {
+            let (name, method, req) = build(i);
+            let rep = svc.order(&req);
+            println!(
+                "req {i:>3}: {:<12} {:<7} n={:<7} {:.4}s fill={:.2e}",
+                name,
+                method.name(),
+                rep.perm.len(),
+                rep.total_secs,
+                rep.fill_in.unwrap_or(0) as f64
+            );
+        }
     }
     println!("\n{}", svc.metrics().report());
     Ok(())

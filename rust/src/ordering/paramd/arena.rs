@@ -21,11 +21,19 @@
 //! [`ArenaPool`] is the multi-request flavor: the coordinator checks an
 //! arena out per request and returns it afterwards, so concurrent
 //! requests never contend on a single arena while still reusing storage.
+//! The pool is **bounded**: at most [`ArenaPool::capacity`] arenas exist
+//! (idle + checked out). When every arena is checked out, `acquire`
+//! blocks until a release — the memory bound surfaces as backpressure
+//! to the caller (the coordinator's scheduler, which in turn stalls its
+//! bounded request queue) instead of unbounded allocation. When the cap
+//! shrinks below the live set, idle arenas are evicted
+//! **LRU-by-slab-size**: the smallest slab goes first (a big warm slab
+//! is the most expensive thing to rebuild), stalest first among equals.
 //!
 //! [`grow_events`]: ParAmdArena::grow_events
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use crate::graph::csr::SymGraph;
 use crate::graph::perm::invert_perm_into;
@@ -110,6 +118,9 @@ pub struct ParAmdArena {
     pub(crate) progress_stall: AtomicUsize,
     pub(crate) adaptive_mult: AtomicUsize,
     pub(crate) poison: AtomicBool,
+    /// Set by the leader when the run's cancellation flag fired; the run
+    /// exits at the next round boundary without assembling a result.
+    pub(crate) abort: AtomicBool,
     pub(crate) gc_count: AtomicUsize,
     pub(crate) set_sizes: Mutex<Vec<u32>>,
     pub(crate) slots: Vec<Mutex<ThreadSlot>>,
@@ -142,6 +153,7 @@ impl ParAmdArena {
             progress_stall: AtomicUsize::new(0),
             adaptive_mult: AtomicUsize::new(0),
             poison: AtomicBool::new(false),
+            abort: AtomicBool::new(false),
             gc_count: AtomicUsize::new(0),
             set_sizes: Mutex::new(Vec::new()),
             slots: Vec::new(),
@@ -166,6 +178,12 @@ impl ParAmdArena {
     /// Runs served by this arena so far.
     pub fn runs(&self) -> u64 {
         self.runs
+    }
+
+    /// Retained slab size in words — the dominant share of this arena's
+    /// memory and the key the pool's eviction policy ranks by.
+    pub fn slab_words(&self) -> usize {
+        self.sg.iw.len()
     }
 
     /// The pooled result of the most recent run.
@@ -219,6 +237,7 @@ impl ParAmdArena {
         self.adaptive_mult
             .store((cfg.mult * 1e6) as usize, Relaxed);
         self.poison.store(false, Relaxed);
+        self.abort.store(false, Relaxed);
         self.gc_count.store(0, Relaxed);
         self.set_sizes.get_mut().unwrap().clear();
         while self.slots.len() < t {
@@ -367,31 +386,200 @@ impl ParAmdArena {
     }
 }
 
-/// A checkout pool of arenas for concurrent request handlers: `acquire`
-/// pops a warm arena (or creates a cold one), `release` returns it.
-#[derive(Default)]
+/// A bounded checkout pool of arenas for concurrent request handlers:
+/// `acquire` pops a warm arena (preferring the largest slab), creates a
+/// fresh one while under [`Self::capacity`], and otherwise **blocks**
+/// until a release — pool exhaustion is backpressure, not growth. Idle
+/// arenas over capacity are evicted LRU-by-slab-size (smallest slab
+/// first, stalest first among equals).
 pub struct ArenaPool {
-    free: Mutex<Vec<ParAmdArena>>,
+    inner: Mutex<PoolInner>,
+    /// Signalled on release and on capacity raises.
+    freed: Condvar,
+}
+
+struct IdleArena {
+    arena: ParAmdArena,
+    /// Monotone release tick; smaller = less recently used.
+    last_used: u64,
+}
+
+struct PoolInner {
+    idle: Vec<IdleArena>,
+    /// Arenas currently checked out.
+    outstanding: usize,
+    /// Max arenas alive (idle + outstanding).
+    cap: usize,
+    tick: u64,
+    evictions: u64,
+}
+
+impl Default for ArenaPool {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl ArenaPool {
+    /// An unbounded pool (the single-tenant default).
     pub fn new() -> Self {
-        Self::default()
+        Self::bounded(usize::MAX)
     }
 
-    /// Check an arena out — warm if one is available, fresh otherwise.
+    /// A pool holding at most `cap` arenas alive (minimum 1).
+    pub fn bounded(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(PoolInner {
+                idle: Vec::new(),
+                outstanding: 0,
+                cap: cap.max(1),
+                tick: 0,
+                evictions: 0,
+            }),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Max arenas alive (idle + checked out).
+    pub fn capacity(&self) -> usize {
+        self.inner.lock().unwrap().cap
+    }
+
+    /// Re-bound the pool. Shrinking evicts surplus idle arenas
+    /// immediately; raising wakes blocked acquirers.
+    pub fn set_capacity(&self, cap: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.cap = cap.max(1);
+        Self::evict_over_cap(&mut inner);
+        drop(inner);
+        self.freed.notify_all();
+    }
+
+    /// Check an arena out — the warmest (largest-slab) idle arena if one
+    /// is available, a fresh one while under capacity, and otherwise
+    /// blocks until a release frees a slot.
     pub fn acquire(&self) -> ParAmdArena {
-        self.free.lock().unwrap().pop().unwrap_or_default()
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(arena) = Self::pop_warmest(&mut inner) {
+                inner.outstanding += 1;
+                return arena;
+            }
+            if inner.outstanding < inner.cap {
+                inner.outstanding += 1;
+                return ParAmdArena::new();
+            }
+            inner = self.freed.wait(inner).unwrap();
+        }
     }
 
-    /// Return an arena to the pool for the next request.
+    /// [`Self::acquire`] wrapped in an RAII guard that releases on drop
+    /// (including on unwind, so a panicking request can't strand the
+    /// pool's capacity accounting).
+    pub fn checkout(&self) -> PooledArena<'_> {
+        PooledArena {
+            pool: self,
+            arena: Some(self.acquire()),
+        }
+    }
+
+    /// Return an arena previously checked out with [`Self::acquire`] /
+    /// [`Self::checkout`]. Releasing an arena the pool never handed out
+    /// corrupts the capacity accounting — use [`Self::seed`] to insert
+    /// externally-built arenas instead.
     pub fn release(&self, arena: ParAmdArena) {
-        self.free.lock().unwrap().push(arena);
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert!(inner.outstanding > 0, "release without a matching acquire");
+        inner.outstanding = inner.outstanding.saturating_sub(1);
+        inner.tick += 1;
+        let last_used = inner.tick;
+        inner.idle.push(IdleArena { arena, last_used });
+        Self::evict_over_cap(&mut inner);
+        drop(inner);
+        self.freed.notify_all();
+    }
+
+    /// Insert an externally-built (e.g. pre-warmed) arena as idle
+    /// inventory, subject to the same capacity bound and eviction policy
+    /// — unlike [`Self::release`], no checkout is decremented.
+    pub fn seed(&self, arena: ParAmdArena) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let last_used = inner.tick;
+        inner.idle.push(IdleArena { arena, last_used });
+        Self::evict_over_cap(&mut inner);
+        drop(inner);
+        self.freed.notify_all();
     }
 
     /// Number of idle arenas currently pooled.
     pub fn idle(&self) -> usize {
-        self.free.lock().unwrap().len()
+        self.inner.lock().unwrap().idle.len()
+    }
+
+    /// Number of arenas currently checked out.
+    pub fn outstanding(&self) -> usize {
+        self.inner.lock().unwrap().outstanding
+    }
+
+    /// Arenas dropped by the eviction policy so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// Best arena to reuse: largest slab (most retained elbow, least
+    /// chance of growing), most recently used among equals.
+    fn pop_warmest(inner: &mut PoolInner) -> Option<ParAmdArena> {
+        let i = inner
+            .idle
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, e)| (e.arena.slab_words(), e.last_used))
+            .map(|(i, _)| i)?;
+        Some(inner.idle.swap_remove(i).arena)
+    }
+
+    /// Drop idle arenas until the alive set fits the cap: smallest slab
+    /// first (cheapest to rebuild), least recently used among equals.
+    fn evict_over_cap(inner: &mut PoolInner) {
+        while inner.idle.len() + inner.outstanding > inner.cap && !inner.idle.is_empty() {
+            let i = inner
+                .idle
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| (e.arena.slab_words(), e.last_used))
+                .map(|(i, _)| i)
+                .expect("non-empty idle list");
+            inner.idle.swap_remove(i);
+            inner.evictions += 1;
+        }
+    }
+}
+
+/// An arena checked out of an [`ArenaPool`], returned on drop.
+pub struct PooledArena<'a> {
+    pool: &'a ArenaPool,
+    arena: Option<ParAmdArena>,
+}
+
+impl std::ops::Deref for PooledArena<'_> {
+    type Target = ParAmdArena;
+    fn deref(&self) -> &ParAmdArena {
+        self.arena.as_ref().expect("arena present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledArena<'_> {
+    fn deref_mut(&mut self) -> &mut ParAmdArena {
+        self.arena.as_mut().expect("arena present until drop")
+    }
+}
+
+impl Drop for PooledArena<'_> {
+    fn drop(&mut self) {
+        if let Some(arena) = self.arena.take() {
+            self.pool.release(arena);
+        }
     }
 }
 
@@ -417,10 +605,79 @@ mod tests {
         assert_eq!(pool.idle(), 0);
         let a = pool.acquire();
         let b = pool.acquire();
+        assert_eq!(pool.outstanding(), 2);
         pool.release(a);
         pool.release(b);
         assert_eq!(pool.idle(), 2);
         let _c = pool.acquire();
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn bounded_pool_blocks_at_capacity_until_release() {
+        use std::sync::atomic::AtomicBool;
+        let pool = ArenaPool::bounded(1);
+        let only = pool.acquire();
+        let got_second = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let pool = &pool;
+            let got_second = &got_second;
+            s.spawn(move || {
+                let a = pool.acquire(); // must block until the release below
+                got_second.store(true, Relaxed);
+                pool.release(a);
+            });
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            assert!(
+                !got_second.load(Relaxed),
+                "acquire must block while the pool is exhausted"
+            );
+            pool.release(only);
+        });
+        assert!(got_second.load(Relaxed));
+        assert_eq!(pool.outstanding(), 0);
+        assert_eq!(pool.idle(), 1);
+    }
+
+    /// An arena warmed on `g` so its slab has a graph-dependent size.
+    fn warmed(g: &SymGraph) -> ParAmdArena {
+        let mut a = ParAmdArena::new();
+        a.prepare(g, &ParAmd::new(1), 1);
+        a
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts_smallest_slab_first() {
+        use crate::matgen::mesh2d;
+        let small = warmed(&mesh2d(4, 4));
+        let big = warmed(&mesh2d(12, 12));
+        assert!(big.slab_words() > small.slab_words());
+        let big_slab = big.slab_words();
+
+        let pool = ArenaPool::bounded(2);
+        pool.seed(small);
+        pool.seed(big);
+        assert_eq!(pool.idle(), 2);
+
+        pool.set_capacity(1);
+        assert_eq!(pool.idle(), 1, "one idle arena must be evicted");
+        assert_eq!(pool.evictions(), 1);
+        let survivor = pool.acquire();
+        assert_eq!(
+            survivor.slab_words(),
+            big_slab,
+            "the big warm slab must survive eviction"
+        );
+    }
+
+    #[test]
+    fn checkout_guard_releases_on_drop() {
+        let pool = ArenaPool::bounded(1);
+        {
+            let _guard = pool.checkout();
+            assert_eq!(pool.outstanding(), 1);
+        }
+        assert_eq!(pool.outstanding(), 0);
         assert_eq!(pool.idle(), 1);
     }
 }

@@ -183,6 +183,26 @@ impl ParAmd {
         arena: &'a mut ParAmdArena,
         g: &SymGraph,
     ) -> &'a OrderingResult {
+        let cancel = AtomicBool::new(false);
+        self.order_into_cancellable(rt, arena, g, &cancel)
+            .expect("a never-cancelled run always completes")
+    }
+
+    /// [`Self::order_into`] with a cooperative cancellation flag: when
+    /// `cancel` is observed set, the run aborts at the next **round
+    /// boundary** (the leader raises an abort flag in phase D and every
+    /// worker exits after the barrier) and `None` is returned — no
+    /// result is assembled and the arena's pooled state is simply reset
+    /// by its next `prepare`. The coordinator wires a dropped request
+    /// ticket into this flag so abandoned orderings stop wasting the
+    /// shared pool mid-elimination instead of running to completion.
+    pub fn order_into_cancellable<'a>(
+        &self,
+        rt: &OrderingRuntime,
+        arena: &'a mut ParAmdArena,
+        g: &SymGraph,
+        cancel: &AtomicBool,
+    ) -> Option<&'a OrderingResult> {
         let n = g.n;
         let t = rt.threads();
         let lim_total = if self.lim_total == 0 {
@@ -199,7 +219,10 @@ impl ParAmd {
         );
         arena.prepare(g, self, t);
         if n == 0 {
-            return &arena.result;
+            return Some(&arena.result);
+        }
+        if cancel.load(Relaxed) {
+            return None; // cancelled before the first round
         }
 
         {
@@ -215,18 +238,24 @@ impl ParAmd {
                 progress_stall: &arena.progress_stall,
                 adaptive_mult: &arena.adaptive_mult,
                 poison: &arena.poison,
+                abort: &arena.abort,
+                cancel,
                 gc_count: &arena.gc_count,
                 set_sizes: &arena.set_sizes,
                 t,
                 lim,
             };
             let slots = &arena.slots;
-            rt.run(&|tid| {
+            // Weight = vertex count, the SmallestFirst queue-policy key.
+            rt.run_weighted(n, &|tid| {
                 let mut slot = slots[tid].lock().unwrap();
                 run_thread(tid, &shared, &mut slot);
             });
         }
 
+        if arena.abort.load(Relaxed) {
+            return None;
+        }
         assert!(
             !arena.poison.load(Relaxed),
             "ParAMD stalled: elbow room exhausted even after GC — increase \
@@ -236,7 +265,7 @@ impl ParAmd {
         assert_eq!(arena.sg.nel.load(Relaxed), n, "not all columns eliminated");
 
         arena.assemble(t, total_timer.secs());
-        &arena.result
+        Some(&arena.result)
     }
 }
 
@@ -254,6 +283,11 @@ struct RunShared<'a> {
     progress_stall: &'a AtomicUsize,
     adaptive_mult: &'a AtomicUsize,
     poison: &'a AtomicBool,
+    /// Raised by the leader once `cancel` is observed; every worker
+    /// exits at the round boundary after it.
+    abort: &'a AtomicBool,
+    /// External cancellation request (e.g. a dropped service ticket).
+    cancel: &'a AtomicBool,
     gc_count: &'a AtomicUsize,
     set_sizes: &'a Mutex<Vec<u32>>,
     t: usize,
@@ -370,9 +404,14 @@ fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
                 // (a direct panic here would strand peers at the barrier).
                 sh.poison.store(true, Relaxed);
             }
+            if sh.cancel.load(Relaxed) {
+                // The request was abandoned (dropped ticket): abort at
+                // this round boundary instead of finishing the ordering.
+                sh.abort.store(true, Relaxed);
+            }
         }
         sh.barrier.wait();
-        if sh.poison.load(Relaxed) {
+        if sh.poison.load(Relaxed) || sh.abort.load(Relaxed) {
             break;
         }
         round += 1;
@@ -519,6 +558,45 @@ mod tests {
         let g = SymGraph::from_edges(7, &[]);
         let r = ParAmd::new(3).order(&g);
         check_ordering_contract(&g, &r);
+    }
+
+    #[test]
+    fn cancelled_run_aborts_and_arena_stays_reusable() {
+        let g = mesh2d(20, 20);
+        let cfg = ParAmd::new(2);
+        let rt = OrderingRuntime::new(2);
+        let mut arena = ParAmdArena::new();
+        let cancel = AtomicBool::new(true);
+        assert!(
+            cfg.order_into_cancellable(&rt, &mut arena, &g, &cancel)
+                .is_none(),
+            "a pre-cancelled run must not produce a result"
+        );
+        // The same arena then serves a normal run.
+        let r = cfg.order_into(&rt, &mut arena, &g);
+        check_ordering_contract(&g, r);
+    }
+
+    #[test]
+    fn mid_run_cancellation_leaves_arena_clean() {
+        let g = mesh2d(50, 50);
+        let cfg = ParAmd::new(2);
+        let rt = OrderingRuntime::new(2);
+        let mut arena = ParAmdArena::new();
+        let cancel = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let cancel = &cancel;
+            s.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                cancel.store(true, Relaxed);
+            });
+            // Either outcome is legal depending on timing: completed
+            // (Some) or aborted at a round boundary (None).
+            let _ = cfg.order_into_cancellable(&rt, &mut arena, &g, cancel);
+        });
+        // The arena must serve a clean run afterwards regardless.
+        let r = cfg.order_into(&rt, &mut arena, &g);
+        check_ordering_contract(&g, r);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! deferred and a stop-the-world GC runs at the next round boundary.
 
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU8, AtomicUsize, Ordering::Relaxed};
+use std::sync::Mutex;
 
 use crate::graph::csr::SymGraph;
 
@@ -48,6 +49,10 @@ pub struct SharedGraph {
     pub nel: AtomicUsize,
     /// Set when a thread failed to claim elbow space; triggers GC.
     pub gc_requested: AtomicBool,
+    /// Pooled GC compaction order — retained across collections (and
+    /// arena reuse) so a warm GC performs no O(live) allocation. Behind a
+    /// mutex only for interior mutability: GC runs stop-the-world.
+    gc_scratch: Mutex<Vec<u32>>,
 }
 
 impl SharedGraph {
@@ -75,6 +80,7 @@ impl SharedGraph {
             pfree: AtomicUsize::new(0),
             nel: AtomicUsize::new(0),
             gc_requested: AtomicBool::new(false),
+            gc_scratch: Mutex::new(Vec::new()),
         }
     }
 
@@ -187,16 +193,18 @@ impl SharedGraph {
     /// Stop-the-world garbage collection: compact all live lists to the
     /// front of `iw`, pruning dead entries and refreshing element weights.
     /// Must be called while every other thread is parked at a barrier.
+    /// The compaction order lives in pooled scratch whose capacity is
+    /// retained, so only the very first collection allocates.
     pub fn garbage_collect_exclusive(&self) {
-        let mut order: Vec<u32> = (0..self.n as u32)
-            .filter(|&i| {
-                let s = self.st(i as usize);
-                (s == ST_VAR || s == ST_ELEM) && self.len_of(i as usize) > 0
-            })
-            .collect();
+        let mut order = self.gc_scratch.lock().unwrap();
+        order.clear();
+        order.extend((0..self.n as u32).filter(|&i| {
+            let s = self.st(i as usize);
+            (s == ST_VAR || s == ST_ELEM) && self.len_of(i as usize) > 0
+        }));
         order.sort_by_key(|&i| self.pe_of(i as usize));
         let mut dst = 0usize;
-        for &iu in &order {
+        for &iu in order.iter() {
             let i = iu as usize;
             let src = self.pe_of(i);
             debug_assert!(src >= dst);

@@ -1,0 +1,155 @@
+//! Async pipeline integration: shim equivalence, a capped-pool stress
+//! run, cancellation via dropped tickets, and backpressure sanity.
+
+use paramd::coordinator::{Method, OrderRequest, QueuePolicy, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::{mesh2d, random_graph};
+
+/// The full ordering contract every reply must satisfy (mirror of the
+/// crate-internal `check_ordering_contract`, which integration tests
+/// cannot reach).
+fn assert_contract(n: usize, perm: &[i32]) {
+    assert_eq!(perm.len(), n, "reply matched to the wrong request");
+    assert!(is_valid_perm(perm), "perm is not a permutation");
+}
+
+fn paramd_req(g: SymGraph, compute_fill: bool) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 2,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill,
+    }
+}
+
+#[test]
+fn ticket_replies_bitmatch_the_sync_order_shim() {
+    // A 1-worker pool makes ParAMD fully deterministic (and AMD always
+    // is), so the same request through `order()` and through
+    // `submit().wait()` must produce bit-identical replies.
+    let svc = Service::new(1);
+    for seed in 0..3u64 {
+        let g = random_graph(300 + 50 * seed as usize, 5, seed);
+        let req = paramd_req(g.clone(), true);
+        let sync = svc.order(&req);
+        let ticketed = svc.submit(req).wait();
+        assert_eq!(sync.perm, ticketed.perm, "seed {seed}: perm diverged");
+        assert_eq!(sync.fill_in, ticketed.fill_in, "seed {seed}: fill diverged");
+
+        let amd = OrderRequest {
+            matrix: None,
+            pattern: Some(g),
+            method: Method::Amd,
+            compute_fill: true,
+        };
+        let sync = svc.order(&amd);
+        let ticketed = svc.submit(amd.clone()).wait();
+        assert_eq!(sync.perm, ticketed.perm);
+        assert_eq!(sync.fill_in, ticketed.fill_in);
+    }
+}
+
+#[test]
+fn stress_16_submitters_through_a_4_arena_pool() {
+    // 6 schedulers against a 4-arena cap: two schedulers are always
+    // blocked in `acquire`, so the backpressure path is genuinely
+    // exercised while 16 submitters with mixed graph sizes hammer the
+    // queue. Every reply must satisfy the contract *for its own graph*.
+    let svc = Service::new(2)
+        .with_scheduler_threads(6)
+        .with_arena_cap(4)
+        .with_queue_cap(8)
+        .with_queue_policy(QueuePolicy::SmallestFirst);
+    std::thread::scope(|s| {
+        for i in 0..16usize {
+            let svc = &svc;
+            s.spawn(move || {
+                let g = if i % 2 == 0 {
+                    mesh2d(6 + i, 7)
+                } else {
+                    random_graph(120 + 35 * i, 5, i as u64)
+                };
+                let ticket = svc.submit(paramd_req(g.clone(), i % 4 == 0));
+                let rep = ticket.wait();
+                assert_contract(g.n, &rep.perm);
+            });
+        }
+    });
+    assert!(
+        svc.idle_arenas() <= 4,
+        "idle arenas {} exceed the cap of 4",
+        svc.idle_arenas()
+    );
+    let m = svc.metrics();
+    assert_eq!(m.pipeline.submitted, 16);
+    assert_eq!(m.pipeline.completed, 16);
+    assert_eq!(m.pipeline.cancelled, 0);
+    assert_eq!(m.pipeline.failed, 0);
+    assert_eq!(m.total_requests(), 16);
+}
+
+#[test]
+fn dropped_tickets_cancel_and_free_the_pipeline() {
+    let svc = Service::new(2).with_arena_cap(2).with_queue_cap(4);
+    // Queue up more work than the queue holds and abandon every ticket;
+    // submit's backpressure (cap 4) must still let all 6 through as the
+    // scheduler drains/skips them.
+    for i in 0..6u64 {
+        drop(svc.submit(paramd_req(random_graph(600, 6, i), true)));
+    }
+    // A live request behind the abandoned ones must still come out right.
+    let g = mesh2d(13, 13);
+    let rep = svc.submit(paramd_req(g.clone(), false)).wait();
+    assert_contract(g.n, &rep.perm);
+    let m = svc.metrics();
+    assert_eq!(m.pipeline.submitted, 7);
+    assert_eq!(m.pipeline.failed, 0);
+    // Depending on timing a dropped ticket may have completed before the
+    // drop landed; every job resolves exactly one way.
+    assert_eq!(m.pipeline.completed + m.pipeline.cancelled, 7);
+    assert!(svc.idle_arenas() <= 2);
+}
+
+#[test]
+fn queue_backpressure_blocks_submitters_at_capacity() {
+    use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+    // One scheduler, tiny queue: a flood from 4 submitters must all
+    // eventually land (blocking, not erroring, when the queue is full).
+    let svc = Service::new(1).with_queue_cap(2);
+    let done = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for i in 0..4usize {
+            let svc = &svc;
+            let done = &done;
+            s.spawn(move || {
+                let g = mesh2d(8 + i, 8);
+                let rep = svc.submit(paramd_req(g.clone(), false)).wait();
+                assert_contract(g.n, &rep.perm);
+                done.fetch_add(1, Relaxed);
+            });
+        }
+    });
+    assert_eq!(done.load(Relaxed), 4);
+    assert_eq!(svc.metrics().pipeline.completed, 4);
+}
+
+#[test]
+fn wait_and_service_latencies_are_recorded() {
+    let svc = Service::new(2);
+    let g = mesh2d(14, 14);
+    svc.order(&paramd_req(g, false));
+    let m = svc.metrics();
+    let e = m.get("paramd").expect("paramd metrics recorded");
+    assert_eq!(e.wait_latencies.len(), 1);
+    assert_eq!(e.service_latencies.len(), 1);
+    assert!(e.mean_service() > 0.0, "service time must be measured");
+    assert!(
+        (e.mean_latency() - (e.mean_wait() + e.mean_service())).abs() < 1e-12,
+        "total latency must be the wait + service split"
+    );
+}
