@@ -4,8 +4,10 @@
 //! worker pool and a bounded pool of reusable arenas, so repeated ParAMD
 //! requests run spawn-free and allocation-free (warm path). Sections:
 //! synchronous requests (the submit+wait shim), a solve request, the
-//! warm-up effect on latency, and an **async ticket burst** through the
-//! bounded queue showing the wait-vs-service latency split.
+//! warm-up effect on latency, an **async ticket burst** through the
+//! bounded queue showing the wait-vs-service latency split, and a
+//! **sharded ordering engine** decomposing a disconnected request into
+//! component jobs that run concurrently across independent runtimes.
 //!
 //! Run: `cargo run --release --example service_demo`
 
@@ -130,6 +132,40 @@ fn main() {
         m.pipeline.arena_evictions,
         svc.idle_arenas()
     );
+
+    println!("\n== sharded ordering: components across independent runtimes ==");
+    // A disconnected request splits into per-component jobs; with 2
+    // shards (one wide, one narrow) the components order concurrently
+    // and the permutations stitch back in ascending-size order. A batch
+    // of follow-up requests goes through `submit_all` (one queue
+    // reservation), each bounded by a `wait_deadline`.
+    let sharded = Service::new(2).with_shards(2).with_shard_threads(2);
+    let g = paramd::matgen::multi_component(6, &[400, 150, 250]);
+    let req = OrderRequest {
+        matrix: None,
+        pattern: Some(g.clone()),
+        method: Method::ParAmd {
+            threads: 2,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    };
+    let rep = sharded.order(&req);
+    println!(
+        "  {} vertices / 6 components through 2 shards: {:.5}s",
+        g.n, rep.order_secs
+    );
+    let batch: Vec<OrderRequest> = (0..4).map(|_| req.clone()).collect();
+    let tickets = sharded.submit_all(batch);
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait_deadline(std::time::Duration::from_secs(30)) {
+            Ok(r) => println!("  batch request {i}: n={} ok", r.perm.len()),
+            Err(e) => println!("  batch request {i}: {e}"),
+        }
+    }
+    let sm = sharded.metrics().shards;
+    println!("  {}", sm.report().trim_end().replace('\n', "\n  "));
 
     println!("\n== metrics ==\n{}", svc.metrics().report());
 }

@@ -1,0 +1,127 @@
+//! Shard scaling: how the sharded ordering engine spreads work that a
+//! single runtime serializes.
+//!
+//! Two measurements per shard count (1, 2, 4), total worker threads held
+//! fixed so only the *shape* changes:
+//!
+//! - **multi-component latency** — one request whose graph has many
+//!   comparable connected components (`matgen::multi_component`); with
+//!   shards the components order concurrently, so latency should drop
+//!   toward the largest component's cost.
+//! - **burst throughput** — a `submit_all` burst of connected requests
+//!   drained by several schedulers; with shards concurrent requests stop
+//!   serializing behind one runtime.
+//!
+//! Writes the JSON trajectory file `BENCH_shard_scaling.json` (override
+//! with `PARAMD_BENCH_SHARD_OUT`; default lands in the repository root
+//! when run via `cargo bench` from `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 6), or
+//! `--smoke` for a one-pass CI run.
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::coordinator::{Method, OrderRequest, Service, ShardSpec};
+use paramd::matgen::{mesh2d, multi_component};
+use paramd::util::timer::Timer;
+
+fn paramd_req(g: paramd::graph::csr::SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 4,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+fn main() {
+    bench_common::banner(
+        "Shard scaling — component decomposition + multi-runtime routing",
+        "ROADMAP sharding PR; not a paper table",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let total_threads = bench_common::threads().max(4);
+    let reps: usize = if smoke {
+        1
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(6)
+    };
+    // 8 comparable mesh-like components; small in smoke mode.
+    let comp_sizes: Vec<usize> = if smoke {
+        vec![400, 650, 900, 500]
+    } else {
+        vec![2500, 4000, 6400, 3200]
+    };
+    let g = multi_component(8, &comp_sizes);
+    let burst: usize = if smoke { 8 } else { 24 };
+    let side = if smoke { 24 } else { 48 };
+
+    println!(
+        "graph: n={} in 8 components | burst: {burst} connected requests (mesh2d {side}x{side})",
+        g.n
+    );
+    println!(
+        "{:<8} {:>14} {:>12} {:>10}",
+        "shards", "multi-comp(s)", "burst req/s", "busy_peak"
+    );
+
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let per_shard = (total_threads / shards).max(1);
+        let svc = Service::new(2)
+            .with_shard_spec(ShardSpec::new(shards, per_shard, per_shard))
+            .with_scheduler_threads(shards.max(2));
+
+        // (a) one multi-component request, repeated.
+        let req = paramd_req(g.clone());
+        svc.order(&req); // warm the arenas
+        let t = Timer::new();
+        for _ in 0..reps {
+            let rep = svc.order(&req);
+            assert_eq!(rep.perm.len(), g.n);
+        }
+        let multi_secs = t.secs() / reps as f64;
+
+        // (b) a submit_all burst of connected requests.
+        let reqs: Vec<OrderRequest> = (0..burst).map(|_| paramd_req(mesh2d(side, side))).collect();
+        let t = Timer::new();
+        let tickets = svc.submit_all(reqs);
+        for ticket in tickets {
+            assert!(!ticket.wait().perm.is_empty());
+        }
+        let burst_rps = burst as f64 / t.secs();
+
+        let m = svc.metrics();
+        println!(
+            "{:<8} {:>14.4} {:>12.2} {:>10}",
+            shards, multi_secs, burst_rps, m.shards.busy_peak
+        );
+        rows.push(format!(
+            "    {{\"shards\": {shards}, \"threads_per_shard\": {per_shard}, \
+             \"multi_component_secs\": {multi_secs:.6}, \"burst_requests_per_sec\": \
+             {burst_rps:.3}, \"busy_peak\": {}}}",
+            m.shards.busy_peak
+        ));
+    }
+
+    let out = std::env::var("PARAMD_BENCH_SHARD_OUT")
+        .unwrap_or_else(|_| "../BENCH_shard_scaling.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"shard_scaling\",\n  \"status\": \"measured\",\n  \
+         \"total_threads\": {total_threads},\n  \"graph_n\": {},\n  \
+         \"components\": 8,\n  \"burst_requests\": {burst},\n  \"configs\": [\n{}\n  ]\n}}\n",
+        g.n,
+        rows.join(",\n")
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -1,7 +1,10 @@
 //! Per-method service metrics — request counts, latency summaries split
 //! into **queue wait** vs **service** time, fill-in accumulation — plus
-//! pipeline-wide gauges (queue depth, cancellations, arena evictions).
+//! pipeline-wide gauges (queue depth, cancellations, arena evictions)
+//! and the shard engine's snapshot (per-shard jobs/busy time, component
+//! histogram, concurrency peak).
 
+use crate::ordering::shard::ShardMetrics;
 use crate::util::stats;
 
 /// One method's accumulated numbers.
@@ -61,6 +64,8 @@ pub struct PipelineMetrics {
 pub struct Metrics {
     entries: Vec<(String, MethodMetrics)>,
     pub pipeline: PipelineMetrics,
+    /// Shard-engine snapshot, stamped by `Service::metrics`.
+    pub shards: ShardMetrics,
 }
 
 impl Metrics {
@@ -100,7 +105,12 @@ impl Metrics {
     }
 
     pub(crate) fn note_submit(&mut self, queue_depth: usize) {
-        self.pipeline.submitted += 1;
+        self.note_submit_batch(1, queue_depth);
+    }
+
+    /// A batch of `n` requests was accepted in one queue reservation.
+    pub(crate) fn note_submit_batch(&mut self, n: u64, queue_depth: usize) {
+        self.pipeline.submitted += n;
         self.pipeline.queue_depth_peak = self.pipeline.queue_depth_peak.max(queue_depth);
     }
 
@@ -144,6 +154,9 @@ impl Metrics {
              queue_peak={} evictions={}\n",
             p.submitted, p.completed, p.cancelled, p.failed, p.queue_depth_peak, p.arena_evictions
         ));
+        if !self.shards.per_shard.is_empty() {
+            s.push_str(&self.shards.report());
+        }
         s
     }
 }
@@ -182,6 +195,15 @@ mod tests {
         );
         m.note_completed();
         assert_eq!(m.pipeline.completed, 1);
+    }
+
+    #[test]
+    fn batched_submissions_count_every_request() {
+        let mut m = Metrics::default();
+        m.note_submit_batch(5, 5);
+        m.note_submit(2);
+        assert_eq!(m.pipeline.submitted, 6);
+        assert_eq!(m.pipeline.queue_depth_peak, 5);
     }
 
     #[test]

@@ -8,31 +8,37 @@
 //!  submit(req) ──► bounded queue ──► scheduler thread(s) ──► Ticket
 //!      │            (backpressure)     │            │
 //!      ▼                               ▼            ▼
-//!   Ticket          pre-process on   ordering on the shared
-//!  wait()/try_get()  `pre_threads`   OrderingRuntime + ArenaPool
+//!   Ticket          pre-process on   ordering on the sharded
+//!  wait()/try_get()  `pre_threads`   ShardEngine (N runtimes)
 //! ```
 //!
 //! ## Request lifecycle
 //!
 //! [`Service::submit`] enqueues an [`OrderRequest`] onto a **bounded
-//! MPMC queue** and returns a [`Ticket`] immediately. Scheduler threads
-//! drain the queue: each request is symmetrized (pre-processing, §4.2),
-//! ordered, optionally fill-counted, and the reply is delivered through
-//! the ticket — [`Ticket::wait`] blocks for it, [`Ticket::try_get`]
-//! polls. The old synchronous [`Service::order`] is now a thin
-//! submit+wait shim, so its replies are produced by exactly the same
-//! path (and bit-match ticketed replies for deterministic methods).
+//! MPMC queue** and returns a [`Ticket`] immediately
+//! ([`Service::submit_all`] enqueues a whole batch through one queue
+//! reservation). Scheduler threads drain the queue: each request is
+//! symmetrized (pre-processing, §4.2), ordered, optionally
+//! fill-counted, and the reply is delivered through the ticket —
+//! [`Ticket::wait`] blocks for it, [`Ticket::wait_deadline`] bounds the
+//! wait and cancels on expiry, [`Ticket::try_get`] polls. The old
+//! synchronous [`Service::order`] is now a thin submit+wait shim, so
+//! its replies are produced by exactly the same path (and bit-match
+//! ticketed replies for deterministic methods).
 //!
 //! ## Backpressure
 //!
-//! Memory is bounded at two points and both surface as *waiting*, never
-//! as unbounded growth: the request queue has a capacity
+//! Memory is bounded and the bound surfaces as *waiting*, never as
+//! unbounded growth. The request queue has a capacity
 //! ([`Service::with_queue_cap`]) — when it is full, `submit` blocks —
-//! and the [`ArenaPool`] is bounded ([`Service::with_arena_cap`]) — when
-//! every arena is checked out, schedulers block acquiring one, the queue
-//! fills, and the stall propagates back to submitters. Idle arenas over
-//! capacity are evicted LRU-by-slab-size (see
-//! [`ArenaPool`](crate::ordering::paramd::arena::ArenaPool)).
+//! and each shard processes its jobs serially, so a slow ordering
+//! stalls its shard queue, batches resolve late, schedulers stay busy,
+//! the request queue fills, and the stall propagates back to
+//! submitters. Each shard's arena pool is bounded too
+//! ([`Service::with_arena_cap`]): its single dispatcher checks out at
+//! most one arena at a time, so the cap governs *retained* warm
+//! storage, with idle arenas over capacity evicted LRU-by-slab-size
+//! (see [`ArenaPool`](crate::ordering::paramd::arena::ArenaPool)).
 //!
 //! ## Cancellation
 //!
@@ -41,32 +47,39 @@
 //! round boundary and aborts, releasing the worker pool and arena to
 //! live requests (`ParAmd::order_into_cancellable`).
 //!
-//! ## Warm ordering path
+//! ## Sharded warm ordering path
 //!
-//! The service owns **one persistent
-//! [`OrderingRuntime`](crate::ordering::paramd::runtime::OrderingRuntime)**
-//! — a pool of worker threads spawned at construction and parked between
-//! jobs, with an internal job queue ([`QueuePolicy`]: FIFO or
-//! smallest-graph-first) — plus the bounded arena pool. Every ParAMD
-//! request borrows the shared runtime and a pooled arena, so the steady
-//! state neither spawns threads nor performs O(n)/O(nnz) allocations
-//! inside the ordering. The pool size is fixed at construction
-//! ([`Service::new`] / [`Service::with_order_threads`]); a request's
-//! `Method::ParAmd.threads` knob is superseded by the shared pool.
+//! The service owns a **[`ShardEngine`]** — N independent
+//! [`OrderingRuntime`](crate::ordering::paramd::runtime::OrderingRuntime)s
+//! (size-classed: one *wide* shard plus narrow ones, see
+//! [`Service::with_shards`] / [`Service::with_shard_threads`]), each
+//! with its own bounded arena pool and dispatcher. A ParAMD request is
+//! decomposed into connected components; each component is routed to a
+//! shard as its own cancellable job and the per-component permutations
+//! are stitched back (ascending-size order) into one reply. Connected
+//! graphs skip extraction and land on the least-loaded shard, so
+//! **concurrent requests and components of one request run truly in
+//! parallel** instead of serializing behind a single runtime. Every job
+//! runs warm: persistent workers, pooled arenas, no O(n)/O(nnz)
+//! steady-state allocations. A request's `Method::ParAmd.threads` knob
+//! is superseded by the shard widths.
 //!
 //! Metrics ([`Service::metrics`]) split each request's latency into
 //! queue **wait** vs **service** time and expose queue depth (current +
-//! peak), cancellations, and arena evictions.
+//! peak), cancellations, arena evictions, and the shard snapshot
+//! ([`ShardMetrics`]): per-shard jobs/busy time, the component-size
+//! histogram, and the shard-concurrency peak.
 
 pub mod metrics;
 pub mod pipeline;
 pub mod request;
 
 pub use metrics::{MethodMetrics, Metrics, PipelineMetrics};
-pub use pipeline::Ticket;
+pub use pipeline::{Ticket, WaitTimeout};
 pub use request::{Method, OrderReply, OrderRequest, SolveReply, SolveSpec};
 
 pub use crate::ordering::paramd::runtime::QueuePolicy;
+pub use crate::ordering::shard::{ShardMetrics, ShardSpec};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
@@ -74,14 +87,15 @@ use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::cholesky::{self, DenseTail, NativeDense};
+use crate::graph::csr::SymGraph;
 use crate::graph::symmetrize_parallel;
 use crate::nd::NestedDissection;
-use crate::ordering::paramd::arena::ArenaPool;
-use crate::ordering::paramd::runtime::OrderingRuntime;
+use crate::ordering::shard::ShardEngine;
 use crate::ordering::{
     amd_seq::AmdSeq, md::MinDegree, mmd::Mmd, paramd::ParAmd, Ordering as _, OrderingResult,
 };
 use crate::symbolic;
+use crate::util::panic_message;
 use crate::util::timer::Timer;
 
 use pipeline::{BorrowedRequest, BoundedQueue, PipelineJob, RequestSlot};
@@ -111,10 +125,9 @@ struct ServiceCore {
     metrics: Mutex<Metrics>,
     /// Threads used for the symmetrization pre-processing (§4.2).
     pre_threads: usize,
-    /// Persistent ParAMD worker pool shared by all ordering requests.
-    order_rt: OrderingRuntime,
-    /// Bounded pool of arenas: warm storage checked out per request.
-    arenas: ArenaPool,
+    /// The sharded ordering engine: N persistent runtimes (each with its
+    /// own arena pool) behind a component router.
+    shards: ShardEngine,
     /// The bounded request queue the pipeline drains.
     queue: BoundedQueue<PipelineJob>,
 }
@@ -133,10 +146,10 @@ struct SolveJob {
 }
 
 impl Service {
-    /// A service with the native dense engine only. The persistent
-    /// ordering pool is sized to `pre_threads` (see
-    /// [`Self::with_order_threads`] to size it independently); one
-    /// scheduler thread drains the pipeline (see
+    /// A service with the native dense engine only. The ordering engine
+    /// starts as **one wide shard** sized to `pre_threads` (see
+    /// [`Self::with_order_threads`] / [`Self::with_shards`] to reshape
+    /// it); one scheduler thread drains the pipeline (see
     /// [`Self::with_scheduler_threads`]).
     pub fn new(pre_threads: usize) -> Self {
         let pre_threads = pre_threads.max(1);
@@ -144,8 +157,7 @@ impl Service {
             core: Some(Arc::new(ServiceCore {
                 metrics: Mutex::new(Metrics::default()),
                 pre_threads,
-                order_rt: OrderingRuntime::new(pre_threads),
-                arenas: ArenaPool::new(),
+                shards: ShardEngine::new(ShardSpec::uniform(1, pre_threads)),
                 queue: BoundedQueue::new(DEFAULT_QUEUE_CAP),
             })),
             tail: DenseTail::default(),
@@ -159,18 +171,26 @@ impl Service {
         self.core.as_deref().expect("core present")
     }
 
-    /// Rebuild the persistent ordering pool with `threads` workers. The
-    /// pipeline is drained first (queue closed, schedulers joined — so
-    /// every accepted request resolves) and the replaced runtime's
-    /// workers are explicitly shut down and joined, not leaked.
-    pub fn with_order_threads(mut self, threads: usize) -> Self {
+    /// Rebuild the shard engine with a new spec. The pipeline is drained
+    /// first (queue closed, schedulers joined — so every accepted
+    /// request resolves) and the replaced engine's dispatchers and
+    /// runtime workers are explicitly shut down and joined, not leaked.
+    /// The arena cap and queue policy carry over to the new engine; a
+    /// spec identical to the current one is a no-op.
+    fn rebuild_engine(mut self, f: impl FnOnce(ShardSpec) -> ShardSpec) -> Self {
+        let spec = f(self.core().shards.spec());
+        if spec == self.core().shards.spec() {
+            return self;
+        }
         self.stop_schedulers();
         let core_arc = self.core.take().expect("core present");
         let mut core = match Arc::try_unwrap(core_arc) {
             Ok(core) => core,
             Err(_) => unreachable!("schedulers joined; no other owner of the core exists"),
         };
-        let mut old = std::mem::replace(&mut core.order_rt, OrderingRuntime::new(threads.max(1)));
+        let mut old = std::mem::replace(&mut core.shards, ShardEngine::new(spec));
+        core.shards.set_arena_cap(old.arena_cap());
+        core.shards.set_policy(old.policy());
         old.shutdown_join();
         drop(old);
         // The old queue is closed; the pipeline restarts on a fresh one.
@@ -180,9 +200,35 @@ impl Service {
         self
     }
 
+    /// Reshape the shard engine in one step (one rebuild instead of one
+    /// per [`Self::with_shards`] / `with_*_threads` call).
+    pub fn with_shard_spec(self, spec: ShardSpec) -> Self {
+        self.rebuild_engine(|_| spec)
+    }
+
+    /// Resize the **wide shard** to `threads` workers (the effective
+    /// ParAMD thread count for connected graphs routed there).
+    pub fn with_order_threads(self, threads: usize) -> Self {
+        self.rebuild_engine(|spec| ShardSpec::new(spec.shards, threads, spec.narrow_threads))
+    }
+
+    /// Shard the ordering engine `n` ways: one wide runtime (the
+    /// current order-thread count) plus `n - 1` narrow ones. Components
+    /// of a disconnected request and concurrent requests then order
+    /// truly in parallel across the shards.
+    pub fn with_shards(self, n: usize) -> Self {
+        self.rebuild_engine(|spec| ShardSpec::new(n, spec.wide_threads, spec.narrow_threads))
+    }
+
+    /// Worker threads of each **narrow** shard (shard 0 stays at the
+    /// [`Self::with_order_threads`] width).
+    pub fn with_shard_threads(self, threads: usize) -> Self {
+        self.rebuild_engine(|spec| ShardSpec::new(spec.shards, spec.wide_threads, threads))
+    }
+
     /// Number of scheduler threads draining the pipeline. More than one
     /// overlaps pre-processing/fill of one request with the ordering of
-    /// another (the runtime serializes the ordering jobs themselves).
+    /// another (and keeps multiple shards fed with concurrent requests).
     /// Must be called before the first submit.
     pub fn with_scheduler_threads(mut self, n: usize) -> Self {
         assert!(
@@ -193,10 +239,11 @@ impl Service {
         self
     }
 
-    /// Bound the arena pool to `cap` live arenas (backpressure +
-    /// LRU-by-slab-size eviction; see the module docs).
+    /// Bound **each shard's** arena pool to `cap` live arenas — the cap
+    /// on retained warm storage per shard, with LRU-by-slab-size
+    /// eviction; see the module docs. Survives later engine rebuilds.
     pub fn with_arena_cap(self, cap: usize) -> Self {
-        self.core().arenas.set_capacity(cap);
+        self.core().shards.set_arena_cap(cap);
         self
     }
 
@@ -207,10 +254,10 @@ impl Service {
         self
     }
 
-    /// Pick how the shared runtime orders its internal job queue (FIFO by
-    /// default; `SmallestFirst` lets small graphs overtake a monster).
+    /// Pick how each shard orders its job queue (FIFO by default;
+    /// `SmallestFirst` lets small graphs overtake a monster).
     pub fn with_queue_policy(self, policy: QueuePolicy) -> Self {
-        self.core().order_rt.set_policy(policy);
+        self.core().shards.set_policy(policy);
         self
     }
 
@@ -265,18 +312,20 @@ impl Service {
         self
     }
 
-    /// Snapshot of the per-method and pipeline metrics.
+    /// Snapshot of the per-method, pipeline, and shard metrics.
     pub fn metrics(&self) -> Metrics {
         let core = self.core();
         let mut m = core.metrics.lock().unwrap().clone();
         m.pipeline.queue_depth = core.queue.len();
-        m.pipeline.arena_evictions = core.arenas.evictions();
+        m.pipeline.arena_evictions = core.shards.arena_evictions();
+        m.shards = core.shards.metrics();
         m
     }
 
-    /// Number of idle pooled arenas (observability hook).
+    /// Number of idle pooled arenas across all shards (observability
+    /// hook).
     pub fn idle_arenas(&self) -> usize {
-        self.core().arenas.idle()
+        self.core().shards.idle_arenas()
     }
 
     /// Requests currently waiting in the pipeline queue.
@@ -290,6 +339,41 @@ impl Service {
     /// Drop the ticket to cancel the request.
     pub fn submit(&self, req: OrderRequest) -> Ticket {
         self.submit_slot(RequestSlot::Owned(req))
+    }
+
+    /// Submit a batch of requests through **one queue reservation**: the
+    /// bounded queue is locked once per chunk of free slots instead of
+    /// once per request, and every ticket exists before the first job is
+    /// visible to a scheduler. Blocks (backpressure) whenever the batch
+    /// outruns the queue capacity, exactly like repeated [`Self::submit`]
+    /// calls would, and returns the tickets in request order.
+    pub fn submit_all(&self, reqs: Vec<OrderRequest>) -> Vec<Ticket> {
+        self.ensure_schedulers();
+        let mut tickets = Vec::with_capacity(reqs.len());
+        let jobs: Vec<PipelineJob> = reqs
+            .into_iter()
+            .map(|req| {
+                let (ticket, inner) = Ticket::new();
+                tickets.push(ticket);
+                PipelineJob {
+                    req: RequestSlot::Owned(req),
+                    ticket: inner,
+                    queued: Timer::new(),
+                }
+            })
+            .collect();
+        let n = jobs.len() as u64;
+        match self.core().queue.push_all(jobs) {
+            Ok(depth) => self
+                .core()
+                .metrics
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner())
+                .note_submit_batch(n, depth),
+            // See `submit_slot`: teardown cannot overlap a `&self` call.
+            Err(_) => unreachable!("submit_all raced a service teardown"),
+        }
+        tickets
     }
 
     /// Run an ordering request synchronously. This is a thin submit+wait
@@ -414,8 +498,9 @@ impl Service {
 impl Drop for Service {
     fn drop(&mut self) {
         self.stop_schedulers();
-        // Field drop order then joins the ordering runtime's workers
-        // (via the last `Arc<ServiceCore>`) and closes the solver channel.
+        // Field drop order then joins the shard engine's dispatchers and
+        // runtime workers (via the last `Arc<ServiceCore>`) and closes
+        // the solver channel.
     }
 }
 
@@ -464,10 +549,17 @@ impl ServiceCore {
     fn process(&self, req: &OrderRequest, cancel: &AtomicBool) -> Option<OrderReply> {
         let total = Timer::new();
         let tpre = Timer::new();
-        let g = if let Some(g) = &req.pattern {
-            g.clone()
+        // Borrow an explicit pattern outright — no O(nnz) copy on the
+        // steady-state path; only the symmetrize arm materializes one.
+        let symmetrized;
+        let g: &SymGraph = if let Some(g) = &req.pattern {
+            g
         } else {
-            symmetrize_parallel(req.matrix.as_ref().expect("matrix or pattern"), self.pre_threads)
+            symmetrized = symmetrize_parallel(
+                req.matrix.as_ref().expect("matrix or pattern"),
+                self.pre_threads,
+            );
+            &symmetrized
         };
         let pre_secs = tpre.secs();
         if cancel.load(Relaxed) {
@@ -488,33 +580,26 @@ impl ServiceCore {
 
         let tord = Timer::new();
         let (perm, rounds, gc_count, modeled_time) = match &req.method {
-            Method::Amd => parts(AmdSeq::default().order(&g)),
-            Method::Mmd => parts(Mmd::default().order(&g)),
-            Method::MinDegree => parts(MinDegree.order(&g)),
-            Method::Nd => parts(NestedDissection::default().order(&g)),
+            Method::Amd => parts(AmdSeq::default().order(g)),
+            Method::Mmd => parts(Mmd::default().order(g)),
+            Method::MinDegree => parts(MinDegree.order(g)),
+            Method::Nd => parts(NestedDissection::default().order(g)),
             Method::ParAmd {
                 threads: _,
                 mult,
                 lim_total,
             } => {
-                // Warm path: persistent pool + pooled arena. The request's
-                // `threads` knob is superseded by the shared pool size.
-                let cfg = ParAmd::new(self.order_rt.threads())
+                // Sharded warm path: the engine decomposes the graph into
+                // components, routes each to a shard (persistent pool +
+                // pooled arena), and stitches the permutations back. The
+                // request's `threads` knob is superseded by the shard
+                // widths. A busy shard holds its batch open — the stall
+                // that fills the request queue (backpressure).
+                let cfg = ParAmd::new(self.shards.wide_threads())
                     .with_mult(*mult)
                     .with_lim_total(*lim_total);
-                // Blocks while the bounded pool is exhausted — that stall
-                // is the backpressure that fills the request queue. The
-                // guard releases on every exit path, including unwind.
-                let mut arena = self.arenas.checkout();
-                let r = cfg.order_into_cancellable(&self.order_rt, &mut arena, &g, cancel)?;
-                // The reply must own its permutation; everything else is
-                // read off the borrowed pooled result.
-                (
-                    r.perm.clone(),
-                    r.stats.rounds,
-                    r.stats.gc_count,
-                    r.stats.modeled_time,
-                )
+                let rep = self.shards.order_cancellable(g, cfg, cancel)?;
+                (rep.perm, rep.rounds, rep.gc_count, rep.modeled_time)
             }
         };
         let order_secs = tord.secs();
@@ -523,7 +608,7 @@ impl ServiceCore {
             return None; // don't burn fill analysis on a dropped ticket
         }
         let fill = if req.compute_fill {
-            Some(symbolic::fill_in(&g, &perm))
+            Some(symbolic::fill_in(g, &perm))
         } else {
             None
         };
@@ -537,16 +622,6 @@ impl ServiceCore {
             gc_count,
             modeled_time,
         })
-    }
-}
-
-fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
-    if let Some(s) = p.downcast_ref::<&str>() {
-        (*s).to_string()
-    } else if let Some(s) = p.downcast_ref::<String>() {
-        s.clone()
-    } else {
-        "unknown panic".to_string()
     }
 }
 
@@ -705,6 +780,69 @@ mod tests {
             2,
             "metrics survive the pool rebuild"
         );
+    }
+
+    #[test]
+    fn engine_rebuilds_preserve_arena_cap_and_queue_policy() {
+        let svc = Service::new(1)
+            .with_arena_cap(2)
+            .with_queue_policy(QueuePolicy::SmallestFirst)
+            .with_shards(3)
+            .with_order_threads(2);
+        let shards = &svc.core().shards;
+        assert_eq!(shards.spec(), ShardSpec::new(3, 2, 1));
+        assert_eq!(shards.arena_cap(), 2, "arena cap must survive rebuilds");
+        assert_eq!(shards.policy(), QueuePolicy::SmallestFirst);
+    }
+
+    #[test]
+    fn with_shard_spec_reshapes_in_one_step() {
+        let svc = Service::new(1).with_shard_spec(ShardSpec::new(2, 4, 3));
+        assert_eq!(svc.core().shards.spec(), ShardSpec::new(2, 4, 3));
+        let rep = svc.order(&spd_request(Method::ParAmd {
+            threads: 4,
+            mult: 1.1,
+            lim_total: 0,
+        }));
+        assert_eq!(rep.perm.len(), 144);
+    }
+
+    #[test]
+    fn submit_all_resolves_every_ticket_in_order() {
+        let svc = Service::new(1).with_queue_cap(2);
+        let reqs: Vec<OrderRequest> = (0..5).map(|_| spd_request(Method::Amd)).collect();
+        let tickets = svc.submit_all(reqs);
+        assert_eq!(tickets.len(), 5);
+        for t in tickets {
+            assert_eq!(t.wait().perm.len(), 144);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.pipeline.submitted, 5);
+        assert_eq!(m.pipeline.completed, 5);
+    }
+
+    #[test]
+    fn sharded_service_orders_disconnected_requests() {
+        use crate::matgen::multi_component;
+        let svc = Service::new(2).with_shards(3).with_shard_threads(1);
+        let g = multi_component(6, &[50, 80]);
+        let rep = svc.order(&OrderRequest {
+            matrix: None,
+            pattern: Some(g.clone()),
+            method: Method::ParAmd {
+                threads: 2,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        });
+        assert_eq!(rep.perm.len(), g.n);
+        assert!(crate::graph::perm::is_valid_perm(&rep.perm));
+        let m = svc.metrics();
+        assert_eq!(m.shards.per_shard.len(), 3);
+        assert_eq!(m.shards.decomposed, 1);
+        assert_eq!(m.shards.components, 6);
+        assert!(m.report().contains("shards:"), "report gains a shard section");
     }
 
     #[test]

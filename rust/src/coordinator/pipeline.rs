@@ -8,6 +8,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::request::{OrderReply, OrderRequest};
 use crate::util::timer::Timer;
@@ -57,6 +58,43 @@ impl<T> BoundedQueue<T> {
                 self.not_empty.notify_one();
                 return Ok(depth);
             }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Enqueue a whole batch, blocking while full. The queue is locked
+    /// once per chunk of available slots rather than once per item — the
+    /// batched-submission fast path — and consumers are woken after each
+    /// chunk so they can drain while the tail of the batch waits.
+    /// Returns the final depth, or the unpushed remainder if the queue
+    /// closed mid-batch.
+    pub(crate) fn push_all(&self, items: Vec<T>) -> Result<usize, Vec<T>> {
+        let mut it = items.into_iter();
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(it.collect());
+            }
+            let mut pushed = false;
+            while st.items.len() < st.cap {
+                match it.next() {
+                    Some(x) => {
+                        st.items.push_back(x);
+                        pushed = true;
+                    }
+                    None => {
+                        let depth = st.items.len();
+                        drop(st);
+                        if pushed {
+                            self.not_empty.notify_all();
+                        }
+                        return Ok(depth);
+                    }
+                }
+            }
+            // Queue full with batch remaining: wake the consumers, then
+            // wait for them to free slots.
+            self.not_empty.notify_all();
             st = self.not_full.wait(st).unwrap();
         }
     }
@@ -194,8 +232,22 @@ impl TicketInner {
     }
 }
 
+/// Returned by [`Ticket::wait_deadline`] when the reply did not arrive
+/// in time; the request has been cancelled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WaitTimeout;
+
+impl std::fmt::Display for WaitTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("order ticket deadline expired; request cancelled")
+    }
+}
+
+impl std::error::Error for WaitTimeout {}
+
 /// A claim on one submitted ordering request. [`Ticket::wait`] blocks
-/// for the reply; [`Ticket::try_get`] polls. **Dropping a ticket without
+/// for the reply ([`Ticket::wait_deadline`] bounds the wait and cancels
+/// on expiry); [`Ticket::try_get`] polls. **Dropping a ticket without
 /// consuming it cancels the request**: queued jobs are skipped outright
 /// and a running ParAMD job aborts at its next round boundary, freeing
 /// the shared pool for live requests.
@@ -231,6 +283,45 @@ impl Ticket {
                 TicketState::Pending => {
                     *st = TicketState::Pending;
                     st = self.inner.cv.wait(st).unwrap();
+                }
+                TicketState::Failed(why) => {
+                    drop(st);
+                    panic!("order ticket failed: {why}");
+                }
+                TicketState::Taken => {
+                    drop(st);
+                    panic!("order ticket already consumed");
+                }
+            }
+        }
+    }
+
+    /// [`Self::wait`] with a deadline: block at most `timeout` for the
+    /// reply. **On expiry the request is cancelled** (the consumed
+    /// ticket withdraws interest exactly like a drop: a queued job is
+    /// skipped, a running ParAMD job aborts at its next round boundary)
+    /// and `Err(WaitTimeout)` is returned — the caller's tail latency is
+    /// bounded and the shared pools are not left grinding on an answer
+    /// nobody wants. A reply that lands right at the deadline is still
+    /// taken and returned.
+    ///
+    /// Panics like [`Self::wait`] if the pipeline abandoned the request
+    /// before the deadline.
+    pub fn wait_deadline(self, timeout: Duration) -> Result<OrderReply, WaitTimeout> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            match std::mem::replace(&mut *st, TicketState::Taken) {
+                TicketState::Ready(reply) => return Ok(reply),
+                TicketState::Pending => {
+                    *st = TicketState::Pending;
+                    let now = Instant::now();
+                    if now >= deadline {
+                        drop(st);
+                        self.inner.cancel.store(true, Relaxed);
+                        return Err(WaitTimeout);
+                    }
+                    st = self.inner.cv.wait_timeout(st, deadline - now).unwrap().0;
                 }
                 TicketState::Failed(why) => {
                     drop(st);
@@ -362,5 +453,68 @@ mod tests {
         let (ticket, inner) = Ticket::new();
         inner.fail("scheduler shut down");
         ticket.wait();
+    }
+
+    #[test]
+    fn push_all_fits_in_one_reservation() {
+        let q = BoundedQueue::new(8);
+        assert_eq!(q.push_all(vec![1, 2, 3]).unwrap(), 3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn push_all_larger_than_capacity_drains_through() {
+        // cap 2, batch 5: the pusher must hand chunks to a concurrent
+        // consumer instead of deadlocking.
+        let q = BoundedQueue::new(2);
+        std::thread::scope(|s| {
+            let q = &q;
+            s.spawn(move || {
+                assert!(q.push_all((0..5u32).collect()).is_ok());
+            });
+            let mut got = Vec::new();
+            for _ in 0..5 {
+                got.push(q.pop().unwrap());
+            }
+            assert_eq!(got, vec![0, 1, 2, 3, 4], "batch order preserved");
+        });
+    }
+
+    #[test]
+    fn push_all_returns_remainder_when_closed() {
+        let q = BoundedQueue::new(4);
+        q.close();
+        assert_eq!(q.push_all(vec![7u8, 8]), Err(vec![7, 8]));
+    }
+
+    #[test]
+    fn wait_deadline_returns_ready_replies() {
+        let (ticket, inner) = Ticket::new();
+        inner.fulfill(OrderReply {
+            perm: vec![0],
+            fill_in: None,
+            pre_secs: 0.0,
+            order_secs: 0.0,
+            total_secs: 0.0,
+            rounds: 0,
+            gc_count: 0,
+            modeled_time: 0.0,
+        });
+        let reply = ticket
+            .wait_deadline(Duration::from_secs(5))
+            .expect("ready ticket resolves immediately");
+        assert_eq!(reply.perm, vec![0]);
+    }
+
+    #[test]
+    fn wait_deadline_expiry_cancels_the_request() {
+        let (ticket, inner) = Ticket::new();
+        let err = ticket
+            .wait_deadline(Duration::from_millis(5))
+            .expect_err("pending ticket must time out");
+        assert_eq!(err, WaitTimeout);
+        assert!(inner.is_cancelled(), "expiry must cancel the request");
     }
 }

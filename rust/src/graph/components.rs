@@ -1,0 +1,249 @@
+//! Connected-component decomposition of a [`SymGraph`].
+//!
+//! AMD-family orderings never let elimination in one component influence
+//! another (there are no quotient-graph paths across components), so a
+//! disconnected graph is embarrassingly parallel *across* components —
+//! the cheapest source of the cross-step independence the paper's §4
+//! "limited parallelism within elimination steps" wall calls for. The
+//! shard engine ([`crate::ordering::shard`]) uses this module to split a
+//! request into per-component subproblems and later stitch the
+//! per-component permutations back together.
+//!
+//! Two operations:
+//! - [`connected_components`] — union-find (path-halving, union by size)
+//!   labeling. Component ids are assigned in **ascending size order**
+//!   (ties: smallest original vertex first), the deterministic order the
+//!   stitcher emits components in.
+//! - [`split_components`] — extract each component as its own compact
+//!   [`SymGraph`] plus the `old_of_new` vertex map needed to translate a
+//!   local permutation back to original vertex ids. Local ids are
+//!   assigned in increasing original-vertex order, so extraction
+//!   preserves the sorted-neighbor invariant without re-sorting.
+
+use crate::graph::csr::SymGraph;
+
+/// A component labeling of a graph.
+#[derive(Clone, Debug)]
+pub struct Components {
+    /// Number of connected components.
+    pub count: usize,
+    /// `label[v]` = component id of vertex `v`, in `0..count`. Ids are
+    /// ordered by ascending component size, ties by smallest vertex.
+    pub label: Vec<i32>,
+    /// `sizes[c]` = vertex count of component `c` (ascending).
+    pub sizes: Vec<usize>,
+}
+
+impl Components {
+    /// Whether the graph is connected (or empty).
+    pub fn is_connected(&self) -> bool {
+        self.count <= 1
+    }
+}
+
+/// Label the connected components of `g` with a union-find pass.
+pub fn connected_components(g: &SymGraph) -> Components {
+    let n = g.n;
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    let mut size = vec![1u32; n];
+
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            let grand = parent[parent[x as usize] as usize];
+            parent[x as usize] = grand;
+            x = grand;
+        }
+        x
+    }
+
+    for v in 0..n {
+        for &u in g.neighbors(v) {
+            let a = find(&mut parent, v as u32);
+            let b = find(&mut parent, u as u32);
+            if a != b {
+                let (big, small) = if size[a as usize] >= size[b as usize] {
+                    (a, b)
+                } else {
+                    (b, a)
+                };
+                parent[small as usize] = big;
+                size[big as usize] += size[small as usize];
+            }
+        }
+    }
+
+    // Dense temporary ids in first-seen (= smallest-vertex) order.
+    let mut root_id = vec![-1i32; n];
+    let mut found: Vec<(usize, usize)> = Vec::new(); // (size, first vertex)
+    let mut label = vec![0i32; n];
+    for v in 0..n {
+        let r = find(&mut parent, v as u32) as usize;
+        if root_id[r] < 0 {
+            root_id[r] = found.len() as i32;
+            found.push((size[r] as usize, v));
+        }
+        label[v] = root_id[r];
+    }
+
+    // Final ids: ascending by (size, first vertex) — deterministic.
+    let mut order: Vec<usize> = (0..found.len()).collect();
+    order.sort_by_key(|&i| (found[i].0, found[i].1));
+    let mut remap = vec![0i32; found.len()];
+    for (new_id, &tmp) in order.iter().enumerate() {
+        remap[tmp] = new_id as i32;
+    }
+    for l in label.iter_mut() {
+        *l = remap[*l as usize];
+    }
+    let sizes: Vec<usize> = order.iter().map(|&i| found[i].0).collect();
+    Components {
+        count: found.len(),
+        label,
+        sizes,
+    }
+}
+
+/// One extracted component: a compact subgraph plus the map back to the
+/// original vertex ids.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub graph: SymGraph,
+    /// `old_of_new[k]` = original vertex of local vertex `k`. Strictly
+    /// increasing (local ids follow original vertex order).
+    pub old_of_new: Vec<i32>,
+}
+
+/// Extract every component of `g` as its own graph, in component-id
+/// (ascending-size) order.
+pub fn split_components(g: &SymGraph, comps: &Components) -> Vec<Component> {
+    let n = g.n;
+    let mut new_of_old = vec![0i32; n];
+    let mut out: Vec<Component> = comps
+        .sizes
+        .iter()
+        .map(|&s| Component {
+            graph: SymGraph {
+                n: s,
+                rowptr: Vec::with_capacity(s + 1),
+                colind: Vec::new(),
+            },
+            old_of_new: Vec::with_capacity(s),
+        })
+        .collect();
+    for v in 0..n {
+        let c = comps.label[v] as usize;
+        new_of_old[v] = out[c].old_of_new.len() as i32;
+        out[c].old_of_new.push(v as i32);
+    }
+    for comp in out.iter_mut() {
+        let sub = &mut comp.graph;
+        sub.rowptr.push(0);
+        for &ov in &comp.old_of_new {
+            for &u in g.neighbors(ov as usize) {
+                sub.colind.push(new_of_old[u as usize]);
+            }
+            sub.rowptr.push(sub.colind.len());
+        }
+        debug_assert_eq!(sub.rowptr.len(), sub.n + 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connected_graph_is_one_component() {
+        let g = crate::matgen::mesh2d(5, 4);
+        let c = connected_components(&g);
+        assert!(c.is_connected());
+        assert_eq!(c.count, 1);
+        assert_eq!(c.sizes, vec![20]);
+        assert!(c.label.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn labels_and_sizes_ascend() {
+        // Components: {0,1,2} (path), {3,4} (edge), {5} (isolated),
+        // {6,7,8,9} (cycle) — sizes 1, 2, 3, 4 after the ascending sort.
+        let g = SymGraph::from_edges(
+            10,
+            &[(0, 1), (1, 2), (3, 4), (6, 7), (7, 8), (8, 9), (9, 6)],
+        );
+        let c = connected_components(&g);
+        assert_eq!(c.count, 4);
+        assert_eq!(c.sizes, vec![1, 2, 3, 4]);
+        assert_eq!(c.label[5], 0, "singleton is the smallest component");
+        assert_eq!(c.label[3], c.label[4]);
+        assert_eq!(c.label[0], c.label[2]);
+        assert_eq!(c.label[6], 3, "cycle is the largest component");
+    }
+
+    #[test]
+    fn equal_sizes_tie_break_by_smallest_vertex() {
+        let g = SymGraph::from_edges(4, &[(2, 3), (0, 1)]);
+        let c = connected_components(&g);
+        assert_eq!(c.count, 2);
+        assert_eq!(c.label[0], 0, "component containing vertex 0 first");
+        assert_eq!(c.label[2], 1);
+    }
+
+    #[test]
+    fn split_yields_valid_subgraphs_covering_every_vertex() {
+        let g = SymGraph::from_edges(
+            9,
+            &[(0, 4), (4, 8), (1, 3), (3, 5), (5, 1), (2, 7)],
+        );
+        let c = connected_components(&g);
+        let parts = split_components(&g, &c);
+        assert_eq!(parts.len(), c.count);
+        let mut seen = vec![false; 9];
+        let mut edges = 0;
+        for (i, p) in parts.iter().enumerate() {
+            p.graph.validate().unwrap();
+            assert_eq!(p.graph.n, c.sizes[i]);
+            assert_eq!(p.old_of_new.len(), c.sizes[i]);
+            for w in p.old_of_new.windows(2) {
+                assert!(w[0] < w[1], "old_of_new must be increasing");
+            }
+            for &ov in &p.old_of_new {
+                assert!(!seen[ov as usize], "vertex assigned twice");
+                seen[ov as usize] = true;
+            }
+            // Edges survive the relabeling.
+            for lv in 0..p.graph.n {
+                let ov = p.old_of_new[lv] as usize;
+                for &lu in p.graph.neighbors(lv) {
+                    let ou = p.old_of_new[lu as usize];
+                    assert!(g.neighbors(ov).binary_search(&ou).is_ok());
+                }
+            }
+            edges += p.graph.nedges();
+        }
+        assert!(seen.iter().all(|&s| s), "every vertex lands somewhere");
+        assert_eq!(edges, g.nedges(), "no edge lost or invented");
+    }
+
+    #[test]
+    fn empty_graph_has_no_components() {
+        let g = SymGraph::from_edges(0, &[]);
+        let c = connected_components(&g);
+        assert_eq!(c.count, 0);
+        assert!(c.is_connected());
+        assert!(split_components(&g, &c).is_empty());
+    }
+
+    #[test]
+    fn isolated_vertices_each_form_a_component() {
+        let g = SymGraph::from_edges(5, &[]);
+        let c = connected_components(&g);
+        assert_eq!(c.count, 5);
+        assert_eq!(c.sizes, vec![1; 5]);
+        let parts = split_components(&g, &c);
+        for p in &parts {
+            assert_eq!(p.graph.n, 1);
+            assert_eq!(p.graph.nnz(), 0);
+        }
+    }
+}

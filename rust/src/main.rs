@@ -8,9 +8,12 @@
 //!   suite — list the built-in matrix suite
 //!   serve --requests N [--pjrt] [--pipeline] [--sched-threads S]
 //!         [--arena-cap A] [--queue-cap Q] [--small-first]
+//!         [--shards K] [--shard-threads T]
 //!         — service demo with metrics; `--pipeline` submits every
 //!         request as a ticket up front (async, backpressured) instead
-//!         of blocking per request
+//!         of blocking per request; `--shards`/`--shard-threads` shard
+//!         the ordering engine K ways (narrow shards T threads wide) so
+//!         components and concurrent requests order in parallel
 
 use paramd::cli::Args;
 use paramd::coordinator::{Method, OrderRequest, QueuePolicy, Service, SolveSpec, Ticket};
@@ -152,7 +155,10 @@ fn cmd_suite() -> Result<(), String> {
 
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let n_req = args.get_parse("requests", 8usize);
+    let shards = args.get_parse("shards", 1usize);
     let mut svc = Service::new(args.get_parse("pre-threads", 2usize))
+        .with_shards(shards)
+        .with_shard_threads(args.get_parse("shard-threads", 2usize))
         .with_scheduler_threads(args.get_parse("sched-threads", 2usize))
         .with_arena_cap(args.get_parse("arena-cap", usize::MAX))
         .with_queue_cap(args.get_parse("queue-cap", 64usize));

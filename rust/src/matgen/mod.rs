@@ -149,6 +149,48 @@ pub fn random_graph(n: usize, deg: usize, seed: u64) -> SymGraph {
     SymGraph::from_edges(n, &edges)
 }
 
+/// A graph with **known component structure**: `k` connected components
+/// where component `i` has exactly `sizes[i % sizes.len()]` vertices
+/// (each a near-square 2D grid plus a path tail, so the components are
+/// mesh-like at any size). Vertex ids are deterministically scattered
+/// across the whole range — component decomposition must not rely on
+/// contiguous labels. The shard tests and benches build their inputs
+/// here.
+pub fn multi_component(k: usize, sizes: &[usize]) -> SymGraph {
+    assert!(k > 0, "need at least one component");
+    assert!(!sizes.is_empty(), "need at least one size");
+    let mut edges = Vec::new();
+    let mut base = 0usize;
+    for i in 0..k {
+        let s = sizes[i % sizes.len()].max(1);
+        // Near-square grid core covering most of the component...
+        let rows = (s as f64).sqrt() as usize;
+        let rows = rows.max(1);
+        let cols = s / rows;
+        let id = |x: usize, y: usize| base + x * cols + y;
+        for x in 0..rows {
+            for y in 0..cols {
+                if x + 1 < rows {
+                    edges.push((id(x, y), id(x + 1, y)));
+                }
+                if y + 1 < cols {
+                    edges.push((id(x, y), id(x, y + 1)));
+                }
+            }
+        }
+        // ...and a path tail for the remainder, hung off vertex 0.
+        for t in rows * cols..s {
+            let prev = if t == rows * cols { base } else { base + t - 1 };
+            edges.push((prev, base + t));
+        }
+        base += s;
+    }
+    let g = SymGraph::from_edges(base, &edges);
+    // Scatter the block labeling with a deterministic permutation.
+    let mut rng = Rng::new(0xC0_3B_17 ^ ((k as u64) << 32) ^ base as u64);
+    crate::graph::perm::permute_graph(&g, &rng.permutation(base))
+}
+
 /// A nonsymmetric CFD-like matrix (HV15R family): a 3D mesh pattern with
 /// one-directional "convection" arcs added, returned as a general
 /// [`CsrMatrix`] so the `|A|+|A^T|` pre-processing path is exercised.
@@ -338,6 +380,34 @@ mod tests {
                 assert!((u as usize) < np, "constraint-constraint edge");
             }
         }
+    }
+
+    #[test]
+    fn multi_component_has_exactly_the_requested_structure() {
+        use crate::graph::components::connected_components;
+        let g = multi_component(5, &[7, 12, 1]);
+        g.validate().unwrap();
+        assert_eq!(g.n, 7 + 12 + 1 + 7 + 12);
+        let c = connected_components(&g);
+        assert_eq!(c.count, 5);
+        let mut sizes = c.sizes.clone();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![1, 7, 7, 12, 12]);
+    }
+
+    #[test]
+    fn multi_component_is_deterministic() {
+        let a = multi_component(3, &[20, 9]);
+        let b = multi_component(3, &[20, 9]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn multi_component_single_is_connected() {
+        use crate::graph::components::connected_components;
+        let g = multi_component(1, &[30]);
+        assert_eq!(connected_components(&g).count, 1);
+        assert_eq!(g.n, 30);
     }
 
     #[test]

@@ -9,12 +9,15 @@
 //!   `amd_2`: the paper's baseline.
 //! - [`paramd`] — the paper's contribution: parallel AMD via multiple
 //!   elimination on distance-2 independent sets.
+//! - [`shard`] — the sharded ordering engine: component decomposition +
+//!   routing across independent ParAMD runtimes.
 
 pub mod amd_seq;
 pub mod md;
 pub mod mmd;
 pub mod rcm;
 pub mod paramd;
+pub mod shard;
 
 use crate::graph::csr::SymGraph;
 use crate::util::timer::PhaseTimes;

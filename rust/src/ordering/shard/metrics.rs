@@ -1,0 +1,175 @@
+//! Shard-engine observability: per-shard job/busy counters, the
+//! component-size histogram, and the concurrency high-water mark the
+//! stress tests assert against.
+//!
+//! The engine updates [`EngineCounters`] (interior-mutable atomics) from
+//! its dispatcher threads; [`crate::ordering::shard::ShardEngine::metrics`]
+//! snapshots them into the plain-data [`ShardMetrics`] the coordinator
+//! embeds in its service metrics.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+
+/// Number of log2 buckets in the component-size histogram: bucket `b`
+/// counts components with `2^b <= n < 2^(b+1)` (the last bucket is
+/// open-ended). 24 buckets cover ParAMD's 2^24-vertex ceiling.
+pub const SIZE_HIST_BUCKETS: usize = 24;
+
+/// One shard's snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStat {
+    /// Worker threads of this shard's `OrderingRuntime`.
+    pub threads: usize,
+    /// Component/singleton ordering jobs this shard has executed
+    /// (cancelled-before-start jobs are not counted).
+    pub jobs: u64,
+    /// Wall-clock seconds this shard's dispatcher spent running jobs.
+    pub busy_secs: f64,
+}
+
+/// Engine-wide snapshot: routing counters, the per-shard table, and the
+/// component-size histogram.
+#[derive(Clone, Debug, Default)]
+pub struct ShardMetrics {
+    /// Ordering requests routed through the engine.
+    pub requests: u64,
+    /// Requests that split into more than one component.
+    pub decomposed: u64,
+    /// Component jobs dispatched (singleton requests count one).
+    pub components: u64,
+    /// Most shards observed busy at the same time — the concurrency
+    /// witness the acceptance test asserts on.
+    pub busy_peak: usize,
+    /// Per-shard job/busy table, indexed by shard id (0 = wide shard).
+    pub per_shard: Vec<ShardStat>,
+    /// log2-bucketed component sizes ([`SIZE_HIST_BUCKETS`] buckets).
+    pub size_hist: Vec<u64>,
+}
+
+impl ShardMetrics {
+    /// Render a compact report section.
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "shards: requests={} decomposed={} components={} busy_peak={}\n",
+            self.requests, self.decomposed, self.components, self.busy_peak
+        );
+        for (i, st) in self.per_shard.iter().enumerate() {
+            s.push_str(&format!(
+                "  shard {i}: threads={} jobs={} busy={:.4}s\n",
+                st.threads, st.jobs, st.busy_secs
+            ));
+        }
+        let hist: Vec<String> = self
+            .size_hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(b, &c)| format!("2^{b}:{c}"))
+            .collect();
+        if !hist.is_empty() {
+            s.push_str(&format!("  component sizes: {}\n", hist.join(" ")));
+        }
+        s
+    }
+}
+
+/// Live engine counters, updated lock-free from dispatchers and routers.
+#[derive(Debug)]
+pub(crate) struct EngineCounters {
+    pub(crate) requests: AtomicU64,
+    pub(crate) decomposed: AtomicU64,
+    pub(crate) components: AtomicU64,
+    busy_now: AtomicUsize,
+    busy_peak: AtomicUsize,
+    size_hist: [AtomicU64; SIZE_HIST_BUCKETS],
+}
+
+impl EngineCounters {
+    pub(crate) fn new() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            decomposed: AtomicU64::new(0),
+            components: AtomicU64::new(0),
+            busy_now: AtomicUsize::new(0),
+            busy_peak: AtomicUsize::new(0),
+            size_hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one dispatched component of `n` vertices in the histogram.
+    pub(crate) fn note_component(&self, n: usize) {
+        let bucket = (n.max(1).ilog2() as usize).min(SIZE_HIST_BUCKETS - 1);
+        self.size_hist[bucket].fetch_add(1, Relaxed);
+    }
+
+    /// A shard started running a job; maintains the concurrency peak.
+    pub(crate) fn enter_busy(&self) {
+        let now = self.busy_now.fetch_add(1, Relaxed) + 1;
+        self.busy_peak.fetch_max(now, Relaxed);
+    }
+
+    /// The matching end-of-job decrement.
+    pub(crate) fn exit_busy(&self) {
+        self.busy_now.fetch_sub(1, Relaxed);
+    }
+
+    pub(crate) fn snapshot(&self, per_shard: Vec<ShardStat>) -> ShardMetrics {
+        ShardMetrics {
+            requests: self.requests.load(Relaxed),
+            decomposed: self.decomposed.load(Relaxed),
+            components: self.components.load(Relaxed),
+            busy_peak: self.busy_peak.load(Relaxed),
+            per_shard,
+            size_hist: self.size_hist.iter().map(|b| b.load(Relaxed)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_peak_tracks_the_high_water_mark() {
+        let c = EngineCounters::new();
+        c.enter_busy();
+        c.enter_busy();
+        c.exit_busy();
+        c.enter_busy();
+        let m = c.snapshot(Vec::new());
+        assert_eq!(m.busy_peak, 2);
+        c.exit_busy();
+        c.exit_busy();
+        assert_eq!(c.snapshot(Vec::new()).busy_peak, 2, "peak never decays");
+    }
+
+    #[test]
+    fn histogram_buckets_by_log2() {
+        let c = EngineCounters::new();
+        c.note_component(1); // bucket 0
+        c.note_component(2); // bucket 1
+        c.note_component(3); // bucket 1
+        c.note_component(1024); // bucket 10
+        c.note_component(usize::MAX); // clamped to the last bucket
+        let m = c.snapshot(Vec::new());
+        assert_eq!(m.size_hist[0], 1);
+        assert_eq!(m.size_hist[1], 2);
+        assert_eq!(m.size_hist[10], 1);
+        assert_eq!(m.size_hist[SIZE_HIST_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn report_lists_shards_and_hist() {
+        let c = EngineCounters::new();
+        c.requests.fetch_add(3, Relaxed);
+        c.note_component(8);
+        let m = c.snapshot(vec![ShardStat {
+            threads: 4,
+            jobs: 3,
+            busy_secs: 0.25,
+        }]);
+        let r = m.report();
+        assert!(r.contains("requests=3"));
+        assert!(r.contains("shard 0: threads=4 jobs=3"));
+        assert!(r.contains("2^3:1"));
+    }
+}

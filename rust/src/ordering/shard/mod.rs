@@ -1,0 +1,736 @@
+//! The sharded ordering engine: parallelism *across* independent
+//! orderings, layered between the coordinator pipeline and the ParAMD
+//! runtimes.
+//!
+//! PR 2 left one [`OrderingRuntime`] serializing the elimination phase —
+//! every scheduler thread funnelled into a single ParAMD instance, the
+//! exact "limited parallelism within elimination steps" wall the paper
+//! identifies (§1, §4). The paper escapes it by parallelizing across
+//! independent work; disconnected components are the cheapest such
+//! independence (AMD never lets elimination in one component influence
+//! another), and concurrent *requests* are the second. A [`ShardEngine`]
+//! exploits both:
+//!
+//! ```text
+//!            ShardEngine::order(g)
+//!                   │
+//!        connected_components(g)          (graph/components.rs)
+//!           │               │
+//!      connected        k components → split_components
+//!           │               │
+//!      router::pick     router::plan      (largest → wide shard,
+//!           │               │              rest → least finish time)
+//!           ▼               ▼
+//!   ┌─ shard 0 (wide) ─┐ ┌─ shard 1.. (narrow) ─┐
+//!   │ queue → dispatch │ │ queue → dispatch     │   each shard: its own
+//!   │ OrderingRuntime  │ │ OrderingRuntime      │   runtime + ArenaPool
+//!   │ ArenaPool        │ │ ArenaPool            │
+//!   └────────┬─────────┘ └─────────┬────────────┘
+//!            └────── batch latch ──┘
+//!                       │
+//!                stitch::stitch            (ascending-size order)
+//! ```
+//!
+//! ## Shards
+//!
+//! A shard owns an independent `OrderingRuntime` (persistent worker
+//! pool), an `ArenaPool`, a policy-aware job queue, and one dispatcher
+//! thread that drains the queue and runs each job warm
+//! (`ParAmd::order_into_cancellable` on a pooled arena). Shards are
+//! **size-classed** ([`ShardSpec`]): shard 0 is *wide* (most threads,
+//! gets the largest component of every decomposed request), the rest
+//! are *narrow*. With N shards, N orderings really do run concurrently —
+//! components of one request, or whole requests from concurrent callers.
+//!
+//! ## Jobs and cancellation
+//!
+//! Every component (or connected request) becomes its own cancellable
+//! job sharing the request's cancel flag. A cancelled job is skipped if
+//! still queued and aborts at the next elimination-round boundary if
+//! running; the submitting `order_cancellable` call always waits for
+//! every job of its batch to resolve (done, cancelled, or panicked)
+//! before returning, which is also what makes the lifetime-erased
+//! borrows in [`GraphRef`]/[`CancelRef`] sound.
+//!
+//! ## Stitching
+//!
+//! Per-component permutations merge in ascending-component-size order
+//! (deterministic, shard-placement-independent; see [`stitch`]), so a
+//! sharded ordering of a given graph is a pure function of the graph
+//! and the per-shard thread counts — with 1-thread shards it is fully
+//! deterministic, which the bit-match tests rely on.
+
+pub mod metrics;
+pub mod router;
+pub mod stitch;
+
+pub use metrics::{ShardMetrics, ShardStat};
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::graph::components::{connected_components, split_components};
+use crate::graph::csr::SymGraph;
+use crate::ordering::paramd::arena::ArenaPool;
+use crate::ordering::paramd::runtime::{OrderingRuntime, QueuePolicy};
+use crate::ordering::paramd::ParAmd;
+use crate::util::panic_message;
+use crate::util::timer::Timer;
+
+use metrics::EngineCounters;
+use stitch::ComponentResult;
+
+/// Shape of a shard engine: how many shards, and the size classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Total shards (at least 1).
+    pub shards: usize,
+    /// Worker threads of shard 0, the wide shard.
+    pub wide_threads: usize,
+    /// Worker threads of every other shard.
+    pub narrow_threads: usize,
+}
+
+impl ShardSpec {
+    pub fn new(shards: usize, wide_threads: usize, narrow_threads: usize) -> Self {
+        Self {
+            shards: shards.max(1),
+            wide_threads: wide_threads.max(1),
+            narrow_threads: narrow_threads.max(1),
+        }
+    }
+
+    /// All shards the same width.
+    pub fn uniform(shards: usize, threads: usize) -> Self {
+        Self::new(shards, threads, threads)
+    }
+
+    /// Per-shard thread counts, indexed by shard id.
+    fn thread_plan(&self) -> Vec<usize> {
+        (0..self.shards)
+            .map(|s| {
+                if s == 0 {
+                    self.wide_threads
+                } else {
+                    self.narrow_threads
+                }
+            })
+            .collect()
+    }
+}
+
+/// Reply of a sharded ordering: the stitched permutation plus the merged
+/// round log (see [`stitch`] for the merge semantics).
+#[derive(Clone, Debug)]
+pub struct ShardReply {
+    pub perm: Vec<i32>,
+    pub rounds: u64,
+    pub gc_count: u64,
+    pub modeled_time: f64,
+    /// Merged per-round pivot counts across components.
+    pub set_sizes: Vec<u32>,
+    /// Components the request split into (1 = connected fast path).
+    pub components: usize,
+}
+
+/// Where a job's graph lives: component jobs own their extracted
+/// subgraph; the connected fast path borrows the caller's graph without
+/// a copy.
+enum GraphRef {
+    Owned(SymGraph),
+    /// Lifetime-erased borrow from an `order*` caller, which blocks on
+    /// the batch until every job resolves (the same pattern as the
+    /// runtime's `Job` and the pipeline's `BorrowedRequest`).
+    Borrowed(*const SymGraph),
+}
+
+// SAFETY: the pointee is only read, and the submitting `order*` call
+// keeps the borrow alive until the dispatcher resolved the job.
+unsafe impl Send for GraphRef {}
+
+impl GraphRef {
+    fn get(&self) -> &SymGraph {
+        match self {
+            GraphRef::Owned(g) => g,
+            // SAFETY: see the `Send` impl above.
+            GraphRef::Borrowed(p) => unsafe { &**p },
+        }
+    }
+}
+
+/// Lifetime-erased borrow of the request's cancel flag (same soundness
+/// argument as [`GraphRef`]).
+struct CancelRef(*const AtomicBool);
+
+// SAFETY: `AtomicBool` is `Sync`; the submitter outlives the job.
+unsafe impl Send for CancelRef {}
+
+impl CancelRef {
+    fn get(&self) -> &AtomicBool {
+        // SAFETY: see the `Send` impl above.
+        unsafe { &*self.0 }
+    }
+}
+
+/// One queued component (or whole-graph) ordering job.
+struct ShardJob {
+    graph: GraphRef,
+    /// Vertex count — the queue's SmallestFirst key and the router's
+    /// load unit.
+    weight: usize,
+    cfg: ParAmd,
+    cancel: CancelRef,
+    batch: Arc<Batch>,
+    index: usize,
+}
+
+/// How one job of a batch resolved.
+enum SlotState {
+    Pending,
+    Done(CompDone),
+    Cancelled,
+    Panicked(String),
+}
+
+/// The data a finished job leaves for the stitcher.
+struct CompDone {
+    perm: Vec<i32>,
+    rounds: u64,
+    gc_count: u64,
+    modeled_time: f64,
+    set_sizes: Vec<u32>,
+}
+
+/// Completion latch of one request's jobs: dispatchers resolve slots,
+/// the submitter blocks until all of them did.
+struct Batch {
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+struct BatchState {
+    remaining: usize,
+    slots: Vec<SlotState>,
+}
+
+impl Batch {
+    fn new(jobs: usize) -> Arc<Self> {
+        Arc::new(Self {
+            state: Mutex::new(BatchState {
+                remaining: jobs,
+                slots: (0..jobs).map(|_| SlotState::Pending).collect(),
+            }),
+            done: Condvar::new(),
+        })
+    }
+
+    fn resolve(&self, index: usize, outcome: SlotState) {
+        let mut st = self.state.lock().unwrap();
+        debug_assert!(matches!(st.slots[index], SlotState::Pending));
+        st.slots[index] = outcome;
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            drop(st);
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Vec<SlotState> {
+        let mut st = self.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        std::mem::take(&mut st.slots)
+    }
+}
+
+/// A shard's job queue: FIFO or smallest-graph-first (the same
+/// [`QueuePolicy`] the runtimes use), closeable for shutdown.
+struct JobQueue {
+    state: Mutex<JobQueueState>,
+    available: Condvar,
+}
+
+struct JobQueueState {
+    jobs: VecDeque<ShardJob>,
+    policy: QueuePolicy,
+    closed: bool,
+}
+
+impl JobQueue {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(JobQueueState {
+                jobs: VecDeque::new(),
+                policy: QueuePolicy::Fifo,
+                closed: false,
+            }),
+            available: Condvar::new(),
+        }
+    }
+
+    fn push(&self, job: ShardJob) -> Result<(), ShardJob> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(job);
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.available.notify_one();
+        Ok(())
+    }
+
+    fn pop(&self) -> Option<ShardJob> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if !st.jobs.is_empty() {
+                let idx = match st.policy {
+                    QueuePolicy::Fifo => 0,
+                    QueuePolicy::SmallestFirst => st
+                        .jobs
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(i, j)| (j.weight, *i))
+                        .map(|(i, _)| i)
+                        .expect("non-empty queue"),
+                };
+                return st.jobs.remove(idx);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.available.wait(st).unwrap();
+        }
+    }
+
+    fn set_policy(&self, policy: QueuePolicy) {
+        self.state.lock().unwrap().policy = policy;
+    }
+
+    fn policy(&self) -> QueuePolicy {
+        self.state.lock().unwrap().policy
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.available.notify_all();
+    }
+}
+
+/// One shard: an independent warm ordering lane.
+struct Shard {
+    threads: usize,
+    rt: OrderingRuntime,
+    arenas: ArenaPool,
+    queue: JobQueue,
+    /// Pending + active vertex weight (the router's load signal).
+    load: AtomicU64,
+    jobs_done: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+fn dispatcher_loop(shard: &Shard, counters: &EngineCounters) {
+    while let Some(job) = shard.queue.pop() {
+        let weight = job.weight as u64;
+        let outcome = if job.cancel.get().load(Relaxed) {
+            SlotState::Cancelled
+        } else {
+            counters.enter_busy();
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                // The pooled warm storage; the guard releases on every
+                // exit path, including unwind.
+                let mut arena = shard.arenas.checkout();
+                let (g, cancel) = (job.graph.get(), job.cancel.get());
+                // Busy time starts after the arena is in hand, so it
+                // measures ordering work, not checkout waits.
+                let t = Timer::new();
+                let out = job
+                    .cfg
+                    .order_into_cancellable(&shard.rt, &mut arena, g, cancel)
+                    .map(|r| CompDone {
+                        perm: r.perm.clone(),
+                        rounds: r.stats.rounds,
+                        gc_count: r.stats.gc_count,
+                        modeled_time: r.stats.modeled_time,
+                        set_sizes: r.stats.set_sizes.clone(),
+                    });
+                shard.busy_nanos.fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
+                out
+            }));
+            shard.jobs_done.fetch_add(1, Relaxed);
+            counters.exit_busy();
+            match res {
+                Ok(Some(done)) => SlotState::Done(done),
+                Ok(None) => SlotState::Cancelled,
+                Err(p) => SlotState::Panicked(panic_message(&p)),
+            }
+        };
+        shard.load.fetch_sub(weight, Relaxed);
+        // Resolve last: the submitter may drop the graph/cancel borrows
+        // the moment its batch completes.
+        job.batch.resolve(job.index, outcome);
+    }
+}
+
+/// N independent ordering lanes behind a component router. See the
+/// module docs for the architecture; construct once, order many graphs,
+/// drop (or [`Self::shutdown_join`]) to stop the lanes.
+pub struct ShardEngine {
+    shards: Vec<Arc<Shard>>,
+    counters: Arc<EngineCounters>,
+    dispatchers: Vec<JoinHandle<()>>,
+    spec: ShardSpec,
+}
+
+impl ShardEngine {
+    pub fn new(spec: ShardSpec) -> Self {
+        let shards: Vec<Arc<Shard>> = spec
+            .thread_plan()
+            .into_iter()
+            .map(|t| {
+                Arc::new(Shard {
+                    threads: t,
+                    rt: OrderingRuntime::new(t),
+                    arenas: ArenaPool::new(),
+                    queue: JobQueue::new(),
+                    load: AtomicU64::new(0),
+                    jobs_done: AtomicU64::new(0),
+                    busy_nanos: AtomicU64::new(0),
+                })
+            })
+            .collect();
+        let counters = Arc::new(EngineCounters::new());
+        let dispatchers = shards
+            .iter()
+            .enumerate()
+            .map(|(i, sh)| {
+                let sh = Arc::clone(sh);
+                let c = Arc::clone(&counters);
+                std::thread::Builder::new()
+                    .name(format!("paramd-shard-{i}"))
+                    .spawn(move || dispatcher_loop(&sh, &c))
+                    .expect("spawn shard dispatcher")
+            })
+            .collect();
+        Self {
+            shards,
+            counters,
+            dispatchers,
+            spec,
+        }
+    }
+
+    /// The spec this engine was built with.
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Worker threads of the wide shard — the effective ParAMD thread
+    /// count for a connected request routed there.
+    pub fn wide_threads(&self) -> usize {
+        self.spec.wide_threads
+    }
+
+    /// Idle pooled arenas across every shard.
+    pub fn idle_arenas(&self) -> usize {
+        self.shards.iter().map(|s| s.arenas.idle()).sum()
+    }
+
+    /// Arenas evicted across every shard's pool.
+    pub fn arena_evictions(&self) -> u64 {
+        self.shards.iter().map(|s| s.arenas.evictions()).sum()
+    }
+
+    /// Bound **each shard's** arena pool to `cap` arenas. With one
+    /// dispatcher per shard at most one arena is checked out at a time,
+    /// so the cap bounds *retained* (idle) warm storage per shard.
+    pub fn set_arena_cap(&self, cap: usize) {
+        for s in &self.shards {
+            s.arenas.set_capacity(cap);
+        }
+    }
+
+    /// The per-shard arena cap currently in force.
+    pub fn arena_cap(&self) -> usize {
+        self.shards[0].arenas.capacity()
+    }
+
+    /// Apply a queue policy to every shard queue (and its runtime).
+    pub fn set_policy(&self, policy: QueuePolicy) {
+        for s in &self.shards {
+            s.queue.set_policy(policy);
+            s.rt.set_policy(policy);
+        }
+    }
+
+    /// The queue policy currently in force.
+    pub fn policy(&self) -> QueuePolicy {
+        self.shards[0].queue.policy()
+    }
+
+    /// Snapshot of the engine's metrics.
+    pub fn metrics(&self) -> ShardMetrics {
+        let per_shard = self
+            .shards
+            .iter()
+            .map(|s| ShardStat {
+                threads: s.threads,
+                jobs: s.jobs_done.load(Relaxed),
+                busy_secs: s.busy_nanos.load(Relaxed) as f64 / 1e9,
+            })
+            .collect();
+        self.counters.snapshot(per_shard)
+    }
+
+    /// Order `g`, never cancelled ([`Self::order_cancellable`] with a
+    /// flag that stays false).
+    pub fn order(&self, g: &SymGraph, cfg: ParAmd) -> ShardReply {
+        let cancel = AtomicBool::new(false);
+        self.order_cancellable(g, cfg, &cancel)
+            .expect("a never-cancelled sharded run always completes")
+    }
+
+    /// Order `g` through the shards: decompose into connected
+    /// components, route each to a shard as its own cancellable job, and
+    /// stitch the per-component permutations (ascending-size order) into
+    /// one reply. A connected graph skips extraction entirely and runs
+    /// as a single borrowed job on the least-loaded shard.
+    ///
+    /// Returns `None` when `cancel` fired: queued jobs are skipped,
+    /// running ones abort at their next round boundary, and this call
+    /// still waits for every job to resolve before returning (so the
+    /// borrows it handed out are dead by then).
+    pub fn order_cancellable(
+        &self,
+        g: &SymGraph,
+        cfg: ParAmd,
+        cancel: &AtomicBool,
+    ) -> Option<ShardReply> {
+        self.counters.requests.fetch_add(1, Relaxed);
+        let comps = connected_components(g);
+        if comps.is_connected() {
+            return self.order_connected(g, cfg, cancel);
+        }
+
+        self.counters.decomposed.fetch_add(1, Relaxed);
+        self.counters.components.fetch_add(comps.count as u64, Relaxed);
+        for &s in &comps.sizes {
+            self.counters.note_component(s);
+        }
+        let parts = split_components(g, &comps);
+        let assign = router::plan(&comps.sizes, &self.loads(), &self.thread_counts());
+        let batch = Batch::new(parts.len());
+        let mut old_maps: Vec<Vec<i32>> = Vec::with_capacity(parts.len());
+        for (index, part) in parts.into_iter().enumerate() {
+            old_maps.push(part.old_of_new);
+            let job = ShardJob {
+                graph: GraphRef::Owned(part.graph),
+                weight: comps.sizes[index],
+                cfg,
+                cancel: CancelRef(cancel as *const AtomicBool),
+                batch: Arc::clone(&batch),
+                index,
+            };
+            self.enqueue(assign[index], job);
+        }
+
+        let slots = batch.wait();
+        let mut results: Vec<ComponentResult> = Vec::with_capacity(slots.len());
+        let mut cancelled = false;
+        let mut panicked: Option<String> = None;
+        for (index, slot) in slots.into_iter().enumerate() {
+            match slot {
+                SlotState::Done(d) => results.push(ComponentResult {
+                    old_of_new: std::mem::take(&mut old_maps[index]),
+                    perm: d.perm,
+                    rounds: d.rounds,
+                    gc_count: d.gc_count,
+                    modeled_time: d.modeled_time,
+                    set_sizes: d.set_sizes,
+                }),
+                SlotState::Cancelled => cancelled = true,
+                SlotState::Panicked(why) => panicked = Some(why),
+                SlotState::Pending => unreachable!("batch resolved with a pending slot"),
+            }
+        }
+        if let Some(why) = panicked {
+            panic!("sharded ordering job panicked: {why}");
+        }
+        if cancelled {
+            return None;
+        }
+        let stitched = stitch::stitch(g.n, &results);
+        Some(ShardReply {
+            perm: stitched.perm,
+            rounds: stitched.rounds,
+            gc_count: stitched.gc_count,
+            modeled_time: stitched.modeled_time,
+            set_sizes: stitched.set_sizes,
+            components: results.len(),
+        })
+    }
+
+    /// Connected (or empty) fast path: one borrowed job, no subgraph
+    /// extraction, placed on the least-loaded shard so concurrent
+    /// requests fan out across shards.
+    fn order_connected(
+        &self,
+        g: &SymGraph,
+        cfg: ParAmd,
+        cancel: &AtomicBool,
+    ) -> Option<ShardReply> {
+        self.counters.components.fetch_add(1, Relaxed);
+        self.counters.note_component(g.n);
+        let s = router::pick_shard(g.n, &self.loads(), &self.thread_counts());
+        let batch = Batch::new(1);
+        let job = ShardJob {
+            graph: GraphRef::Borrowed(g as *const SymGraph),
+            weight: g.n,
+            cfg,
+            cancel: CancelRef(cancel as *const AtomicBool),
+            batch: Arc::clone(&batch),
+            index: 0,
+        };
+        self.enqueue(s, job);
+        let mut slots = batch.wait();
+        match slots.pop().expect("one slot") {
+            SlotState::Done(d) => Some(ShardReply {
+                perm: d.perm,
+                rounds: d.rounds,
+                gc_count: d.gc_count,
+                modeled_time: d.modeled_time,
+                set_sizes: d.set_sizes,
+                components: 1,
+            }),
+            SlotState::Cancelled => None,
+            SlotState::Panicked(why) => panic!("sharded ordering job panicked: {why}"),
+            SlotState::Pending => unreachable!("batch resolved with a pending slot"),
+        }
+    }
+
+    fn enqueue(&self, s: usize, job: ShardJob) {
+        self.shards[s].load.fetch_add(job.weight as u64, Relaxed);
+        if self.shards[s].queue.push(job).is_err() {
+            // Mirrors the runtime's loud failure: enqueueing onto closed
+            // shards would hang the submitter forever.
+            panic!("job submitted to a shut-down ShardEngine");
+        }
+    }
+
+    fn loads(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.load.load(Relaxed)).collect()
+    }
+
+    fn thread_counts(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.threads).collect()
+    }
+
+    /// Close every shard queue and join the dispatchers (their runtimes
+    /// join when the last shard handle drops). No jobs can be queued
+    /// here: submitters hold `&self` borrows and block until their batch
+    /// drains. Idempotent.
+    pub fn shutdown_join(&mut self) {
+        for s in &self.shards {
+            s.queue.close();
+        }
+        for d in self.dispatchers.drain(..) {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for ShardEngine {
+    fn drop(&mut self) {
+        self.shutdown_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::perm::is_valid_perm;
+    use crate::matgen::{mesh2d, multi_component};
+    use crate::ordering::Ordering as _;
+
+    #[test]
+    fn connected_graph_matches_the_direct_runtime_path() {
+        let g = mesh2d(18, 18);
+        let cfg = ParAmd::new(1);
+        let cold = cfg.order(&g);
+        let engine = ShardEngine::new(ShardSpec::uniform(3, 1));
+        let rep = engine.order(&g, cfg);
+        assert_eq!(rep.perm, cold.perm, "sharded connected run must bit-match");
+        assert_eq!(rep.components, 1);
+        let m = engine.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.decomposed, 0);
+        assert_eq!(m.components, 1);
+    }
+
+    #[test]
+    fn decomposed_request_covers_every_vertex() {
+        let g = multi_component(5, &[40, 90, 17]);
+        let engine = ShardEngine::new(ShardSpec::new(2, 2, 1));
+        let rep = engine.order(&g, ParAmd::new(2));
+        assert!(is_valid_perm(&rep.perm));
+        assert_eq!(rep.perm.len(), g.n);
+        assert_eq!(rep.components, 5);
+        let total: u32 = rep.set_sizes.iter().sum();
+        assert_eq!(total as usize, g.n, "merged round log covers every pivot");
+        let m = engine.metrics();
+        assert_eq!(m.decomposed, 1);
+        assert_eq!(m.components, 5);
+        let jobs: u64 = m.per_shard.iter().map(|s| s.jobs).sum();
+        assert_eq!(jobs, 5);
+    }
+
+    #[test]
+    fn sharded_result_is_placement_independent() {
+        // Same graph through 1, 2, and 4 single-thread shards: identical
+        // stitched permutations (per-component runs are deterministic and
+        // the stitch order is size-based, not shard-based).
+        let g = multi_component(6, &[30, 55, 80]);
+        let reference = ShardEngine::new(ShardSpec::uniform(1, 1)).order(&g, ParAmd::new(1));
+        for shards in [2usize, 4] {
+            let engine = ShardEngine::new(ShardSpec::uniform(shards, 1));
+            let rep = engine.order(&g, ParAmd::new(1));
+            assert_eq!(rep.perm, reference.perm, "{shards} shards diverged");
+        }
+    }
+
+    #[test]
+    fn precancelled_order_returns_none_and_engine_survives() {
+        let g = multi_component(4, &[60]);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let cancel = AtomicBool::new(true);
+        assert!(engine.order_cancellable(&g, ParAmd::new(1), &cancel).is_none());
+        // The engine still serves a live request afterwards.
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert!(is_valid_perm(&rep.perm));
+    }
+
+    #[test]
+    fn empty_graph_orders_to_the_empty_permutation() {
+        let g = crate::graph::csr::SymGraph::from_edges(0, &[]);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert!(rep.perm.is_empty());
+    }
+
+    #[test]
+    fn shutdown_join_is_idempotent_and_drop_safe() {
+        let mut engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        engine.order(&mesh2d(6, 6), ParAmd::new(1));
+        engine.shutdown_join();
+        engine.shutdown_join();
+        drop(engine); // must not hang
+    }
+}

@@ -1,0 +1,125 @@
+//! Component→shard routing: deterministic size-classed placement.
+//!
+//! Shards are *size-classed*: shard 0 is the **wide** runtime (most
+//! worker threads), the rest are **narrow**. Routing works in estimated
+//! finish time — a shard's queued vertex load divided by its thread
+//! count — so a narrow shard is only preferred when it genuinely
+//! finishes the job earlier:
+//!
+//! - [`plan`] places the components of a decomposed request: the largest
+//!   component is pinned to the wide shard (it dominates the critical
+//!   path and deserves the widest pool), the rest follow the classic
+//!   largest-first greedy (LPT) onto the shard with the least estimated
+//!   finish time, ties to the lowest shard id.
+//! - [`pick_shard`] places a whole connected request on the least-loaded
+//!   shard, so *concurrent* requests spread across shards instead of
+//!   serializing behind one runtime.
+//!
+//! Both are pure functions of their load snapshot, so placement is
+//! deterministic and unit-testable.
+
+/// Estimated finish time of putting `n` more vertices on a shard.
+fn finish_time(load: f64, n: usize, threads: usize) -> f64 {
+    load + n as f64 / threads.max(1) as f64
+}
+
+/// Least-finish-time shard for one connected graph of `n` vertices.
+/// `loads[s]` is shard `s`'s pending+active vertex count.
+pub fn pick_shard(n: usize, loads: &[u64], threads: &[usize]) -> usize {
+    debug_assert_eq!(loads.len(), threads.len());
+    debug_assert!(!threads.is_empty());
+    let mut best = 0usize;
+    let mut best_cost = f64::INFINITY;
+    for s in 0..threads.len() {
+        let cost = finish_time(loads[s] as f64 / threads[s].max(1) as f64, n, threads[s]);
+        if cost < best_cost {
+            best_cost = cost;
+            best = s;
+        }
+    }
+    best
+}
+
+/// Assign the components of one request to shards. `sizes` must be
+/// ascending (component-id order, as [`crate::graph::connected_components`]
+/// produces); the returned vector maps component id → shard id.
+pub fn plan(sizes: &[usize], loads: &[u64], threads: &[usize]) -> Vec<usize> {
+    let shards = threads.len();
+    debug_assert!(shards > 0);
+    let mut assign = vec![0usize; sizes.len()];
+    if sizes.is_empty() || shards == 1 {
+        return assign;
+    }
+    let mut load: Vec<f64> = loads
+        .iter()
+        .zip(threads)
+        .map(|(&l, &t)| l as f64 / t.max(1) as f64)
+        .collect();
+    // `sizes` ascends, so walking it backwards is the deterministic
+    // largest-first schedule.
+    for (k, c) in (0..sizes.len()).rev().enumerate() {
+        let s = if k == 0 {
+            0 // size-classing: the largest component gets the wide shard
+        } else {
+            let mut best = 0usize;
+            let mut best_cost = f64::INFINITY;
+            for s in 0..shards {
+                let cost = finish_time(load[s], sizes[c], threads[s]);
+                if cost < best_cost {
+                    best_cost = cost;
+                    best = s;
+                }
+            }
+            best
+        };
+        assign[c] = s;
+        load[s] += sizes[c] as f64 / threads[s].max(1) as f64;
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn largest_component_lands_on_the_wide_shard() {
+        // Ascending sizes; the last (largest) must go to shard 0 even
+        // though shard 0 is already the most loaded.
+        let assign = plan(&[10, 20, 1000], &[500, 0, 0], &[8, 2, 2]);
+        assert_eq!(assign[2], 0);
+    }
+
+    #[test]
+    fn equal_components_spread_over_equal_shards() {
+        let assign = plan(&[100, 100, 100, 100], &[0, 0, 0, 0], &[2, 2, 2, 2]);
+        let mut sorted = assign.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3], "one component per shard");
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let a = plan(&[5, 9, 9, 40], &[3, 0, 7], &[4, 2, 2]);
+        let b = plan(&[5, 9, 9, 40], &[3, 0, 7], &[4, 2, 2]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn single_shard_takes_everything() {
+        assert_eq!(plan(&[1, 2, 3], &[9], &[4]), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn pick_shard_prefers_idle_over_loaded() {
+        assert_eq!(pick_shard(100, &[1000, 0], &[4, 4]), 1);
+        // All idle: the wide shard wins (fastest estimated finish).
+        assert_eq!(pick_shard(100, &[0, 0], &[4, 2]), 0);
+    }
+
+    #[test]
+    fn pick_shard_accounts_for_width() {
+        // Same load, but shard 0 is twice as wide — it finishes earlier.
+        assert_eq!(pick_shard(500, &[400, 400], &[8, 4]), 0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Stitch per-component ordering results into one global ordering.
+//!
+//! Components must arrive in **ascending-size order** (component-id
+//! order, the same deterministic order [`crate::graph::components`]
+//! assigns) — smallest components are eliminated first, matching the
+//! tie-break sequential AMD applies to disconnected inputs, and keeping
+//! the stitched permutation independent of which shard ran what.
+//!
+//! Round logs merge *concurrently*, not sequentially: round `r` of the
+//! stitched log aggregates the pivots every component eliminated in its
+//! own round `r`, because the shards really do run those rounds at the
+//! same wall-clock time. Consequently `rounds` is the longest
+//! component's count and `modeled_time` the slowest component's, while
+//! pivot/GC/work counters sum.
+
+/// One component's ordering result plus its vertex map.
+#[derive(Clone, Debug)]
+pub struct ComponentResult {
+    /// Local→original vertex map from the extraction.
+    pub old_of_new: Vec<i32>,
+    /// Local permutation over the component's compact ids.
+    pub perm: Vec<i32>,
+    pub rounds: u64,
+    pub gc_count: u64,
+    pub modeled_time: f64,
+    /// Per-round distance-2 set sizes of this component's run.
+    pub set_sizes: Vec<u32>,
+}
+
+/// The merged ordering of a decomposed request.
+#[derive(Clone, Debug, Default)]
+pub struct StitchedOrdering {
+    /// Global permutation over the original vertex ids.
+    pub perm: Vec<i32>,
+    /// Longest per-component round count (rounds overlap across shards).
+    pub rounds: u64,
+    /// Total garbage collections across components.
+    pub gc_count: u64,
+    /// Slowest component's modeled parallel time.
+    pub modeled_time: f64,
+    /// Merged per-round pivot counts (element-wise sum over components).
+    pub set_sizes: Vec<u32>,
+}
+
+/// Merge `comps` (in component-id order) into one ordering of `n`
+/// original vertices. Panics if the components don't cover `n` exactly.
+pub fn stitch(n: usize, comps: &[ComponentResult]) -> StitchedOrdering {
+    let mut out = StitchedOrdering {
+        perm: Vec::with_capacity(n),
+        ..Default::default()
+    };
+    for c in comps {
+        debug_assert_eq!(c.perm.len(), c.old_of_new.len());
+        for &p in &c.perm {
+            out.perm.push(c.old_of_new[p as usize]);
+        }
+        out.rounds = out.rounds.max(c.rounds);
+        out.gc_count += c.gc_count;
+        out.modeled_time = out.modeled_time.max(c.modeled_time);
+        for (r, &s) in c.set_sizes.iter().enumerate() {
+            if out.set_sizes.len() <= r {
+                out.set_sizes.push(0);
+            }
+            out.set_sizes[r] += s;
+        }
+    }
+    assert_eq!(out.perm.len(), n, "stitched components must cover the graph");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::perm::is_valid_perm;
+
+    fn comp(old: Vec<i32>, perm: Vec<i32>, rounds: u64, sets: Vec<u32>) -> ComponentResult {
+        ComponentResult {
+            old_of_new: old,
+            perm,
+            rounds,
+            gc_count: 1,
+            modeled_time: rounds as f64,
+            set_sizes: sets,
+        }
+    }
+
+    #[test]
+    fn stitch_translates_and_concatenates() {
+        // Component 0 = {2, 5} eliminated 5-then-2; component 1 = {0, 1, 3}
+        // eliminated 1, 3, 0.
+        let s = stitch(
+            5,
+            &[
+                comp(vec![2, 5], vec![1, 0], 2, vec![1, 1]),
+                comp(vec![0, 1, 3], vec![1, 2, 0], 3, vec![1, 1, 1]),
+            ],
+        );
+        assert_eq!(s.perm, vec![5, 2, 1, 3, 0]);
+        assert_eq!(s.rounds, 3, "rounds overlap, take the max");
+        assert_eq!(s.gc_count, 2);
+        assert_eq!(s.set_sizes, vec![2, 2, 1], "round-wise sum");
+        assert!((s.modeled_time - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stitched_perm_of_a_real_split_is_valid() {
+        use crate::graph::components::{connected_components, split_components};
+        use crate::graph::csr::SymGraph;
+        use crate::matgen::mesh2d;
+
+        // Two meshes side by side in one vertex space.
+        let a = mesh2d(4, 4);
+        let mut edges = Vec::new();
+        for v in 0..a.n {
+            for &u in a.neighbors(v) {
+                if (u as usize) > v {
+                    edges.push((v, u as usize));
+                    edges.push((v + a.n, u as usize + a.n));
+                }
+            }
+        }
+        let g = SymGraph::from_edges(2 * a.n, &edges);
+        let comps = connected_components(&g);
+        assert_eq!(comps.count, 2);
+        let parts = split_components(&g, &comps);
+        // Identity local perms: the stitch is just the vertex maps.
+        let results: Vec<ComponentResult> = parts
+            .iter()
+            .map(|p| {
+                comp(
+                    p.old_of_new.clone(),
+                    (0..p.graph.n as i32).collect(),
+                    1,
+                    vec![p.graph.n as u32],
+                )
+            })
+            .collect();
+        let s = stitch(g.n, &results);
+        assert!(is_valid_perm(&s.perm));
+        assert_eq!(s.set_sizes, vec![g.n as u32]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the graph")]
+    fn stitch_rejects_missing_vertices() {
+        stitch(3, &[comp(vec![0], vec![0], 1, vec![1])]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Sharded-ordering integration: sharded-vs-unsharded equivalence, the
+//! 16-component/4-shard acceptance run (permutation validity + identical
+//! fill counts + observed shard concurrency), cancellation mid-batch,
+//! batched submission, and ticket deadlines.
+
+use std::time::Duration;
+
+use paramd::coordinator::{Method, OrderRequest, Service, WaitTimeout};
+use paramd::graph::components::connected_components;
+use paramd::graph::csr::SymGraph;
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::{mesh2d, multi_component};
+use paramd::ordering::paramd::ParAmd;
+use paramd::ordering::Ordering as _;
+use paramd::symbolic::fill_in;
+
+fn paramd_req(g: SymGraph, compute_fill: bool) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill,
+    }
+}
+
+#[test]
+fn sharded_connected_ordering_bitmatches_the_unsharded_path() {
+    // A connected graph takes the singleton fast path: one job on one
+    // shard, no extraction. With 1-thread shards ParAMD is fully
+    // deterministic, so the sharded service must reproduce the direct
+    // (unsharded) cold run bit for bit, whatever shard it lands on.
+    let g = mesh2d(24, 24);
+    assert_eq!(connected_components(&g).count, 1);
+    let reference = ParAmd::new(1).order(&g);
+    let svc = Service::new(1).with_shards(4).with_shard_threads(1);
+    for _ in 0..3 {
+        let rep = svc.order(&paramd_req(g.clone(), false));
+        assert_eq!(rep.perm, reference.perm, "sharded run diverged");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.shards.decomposed, 0, "connected graphs must not split");
+    assert_eq!(m.shards.components, 3);
+}
+
+#[test]
+fn sixteen_components_through_four_shards_match_the_unsharded_fill() {
+    // The acceptance run: a 16-component graph ordered through 4 shards
+    // must produce a valid permutation with exactly the fill count of
+    // the unsharded (1-shard) path — sharding changes where components
+    // run, never what is computed.
+    let g = multi_component(16, &[150, 90, 200, 60]);
+    assert_eq!(connected_components(&g).count, 16);
+
+    let sharded = Service::new(1).with_shards(4).with_shard_threads(1);
+    let rep4 = sharded.order(&paramd_req(g.clone(), true));
+    let unsharded = Service::new(1);
+    let rep1 = unsharded.order(&paramd_req(g.clone(), true));
+
+    assert!(is_valid_perm(&rep4.perm), "sharded perm invalid");
+    assert!(is_valid_perm(&rep1.perm), "unsharded perm invalid");
+    assert_eq!(rep4.fill_in, rep1.fill_in, "fill must not depend on sharding");
+    assert_eq!(rep4.perm, rep1.perm, "1-thread shards are deterministic");
+
+    // Quality sanity against the whole-graph cold path: ordering
+    // components independently must stay in the same fill band.
+    let whole = fill_in(&g, &ParAmd::new(1).order(&g).perm) as f64;
+    let sharded_fill = rep4.fill_in.unwrap() as f64;
+    assert!(
+        sharded_fill <= whole * 1.5 + 100.0,
+        "sharded fill {sharded_fill} out of band vs whole-graph {whole}"
+    );
+
+    let m = sharded.metrics();
+    assert_eq!(m.shards.decomposed, 1);
+    assert_eq!(m.shards.components, 16);
+    let jobs: u64 = m.shards.per_shard.iter().map(|s| s.jobs).sum();
+    assert_eq!(jobs, 16, "every component ran as its own shard job");
+}
+
+#[test]
+fn comparable_components_keep_multiple_shards_busy_concurrently() {
+    // k = 8 comparable components through 4 shards: the ShardMetrics
+    // concurrency peak must show >1 shard busy at the same time (the
+    // acceptance criterion). Components are big enough that the 4
+    // dispatchers necessarily overlap.
+    let g = multi_component(8, &[900]);
+    let svc = Service::new(2).with_shards(4).with_shard_threads(2);
+    let rep = svc.order(&paramd_req(g.clone(), false));
+    assert!(is_valid_perm(&rep.perm));
+    assert_eq!(rep.perm.len(), g.n);
+
+    let m = svc.metrics();
+    assert!(
+        m.shards.busy_peak > 1,
+        "expected >1 shard busy concurrently, peak was {}",
+        m.shards.busy_peak
+    );
+    assert_eq!(m.shards.components, 8);
+    let jobs: u64 = m.shards.per_shard.iter().map(|s| s.jobs).sum();
+    assert_eq!(jobs, 8);
+    let busy_shards = m.shards.per_shard.iter().filter(|s| s.jobs > 0).count();
+    assert!(busy_shards > 1, "work must spread over >1 shard");
+}
+
+#[test]
+fn cancellation_mid_batch_leaves_the_sharded_service_healthy() {
+    // Cancel a decomposed request while its component jobs are in
+    // flight: queued jobs are skipped, running ones abort at a round
+    // boundary, and the next request must come out clean.
+    let svc = Service::new(1).with_shards(4).with_shard_threads(1);
+    let big = multi_component(6, &[2500]);
+    let ticket = svc.submit(paramd_req(big, false));
+    std::thread::sleep(Duration::from_millis(2));
+    ticket.cancel();
+    drop(ticket);
+
+    let g = mesh2d(13, 13);
+    let rep = svc.submit(paramd_req(g.clone(), false)).wait();
+    assert!(is_valid_perm(&rep.perm));
+    assert_eq!(rep.perm.len(), g.n);
+
+    let m = svc.metrics();
+    assert_eq!(m.pipeline.submitted, 2);
+    assert_eq!(m.pipeline.failed, 0);
+    // The cancelled ticket resolves exactly one way (raced completion is
+    // legal); the live one completed.
+    assert_eq!(m.pipeline.completed + m.pipeline.cancelled, 2);
+}
+
+#[test]
+fn submit_all_through_a_tiny_queue_resolves_in_order() {
+    // Batch (8) larger than the queue cap (3): the single reservation
+    // must chunk through backpressure while schedulers drain it.
+    let svc = Service::new(1).with_queue_cap(3).with_scheduler_threads(2);
+    let reqs: Vec<OrderRequest> = (0..8)
+        .map(|i| paramd_req(mesh2d(6 + i, 7), false))
+        .collect();
+    let sizes: Vec<usize> = (0..8).map(|i| (6 + i) * 7).collect();
+    let tickets = svc.submit_all(reqs);
+    assert_eq!(tickets.len(), 8);
+    for (ticket, n) in tickets.into_iter().zip(sizes) {
+        let rep = ticket.wait();
+        assert_eq!(rep.perm.len(), n, "reply matched to the wrong request");
+        assert!(is_valid_perm(&rep.perm));
+    }
+    let m = svc.metrics();
+    assert_eq!(m.pipeline.submitted, 8);
+    assert_eq!(m.pipeline.completed, 8);
+}
+
+#[test]
+fn wait_deadline_bounds_tail_latency_and_cancels() {
+    // One scheduler, occupied by a slow request: the fast request behind
+    // it cannot start, so its deadline must fire and cancel it.
+    let svc = Service::new(1);
+    let slow = svc.submit(paramd_req(multi_component(4, &[2000]), false));
+    let fast = svc.submit(paramd_req(mesh2d(10, 10), false));
+    let err = fast
+        .wait_deadline(Duration::from_millis(1))
+        .expect_err("queued request must time out behind the slow one");
+    assert_eq!(err, WaitTimeout);
+
+    // The slow request is unaffected and the pipeline stays healthy.
+    let rep = slow.wait();
+    assert!(is_valid_perm(&rep.perm));
+    let final_rep = svc.order(&paramd_req(mesh2d(8, 8), false));
+    assert_eq!(final_rep.perm.len(), 64);
+    let m = svc.metrics();
+    assert_eq!(m.pipeline.cancelled, 1, "expired ticket must cancel its job");
+    assert_eq!(m.pipeline.failed, 0);
+}
+
+#[test]
+fn wait_deadline_returns_the_reply_when_in_time() {
+    let svc = Service::new(1);
+    let ticket = svc.submit(paramd_req(mesh2d(9, 9), false));
+    let rep = ticket
+        .wait_deadline(Duration::from_secs(60))
+        .expect("generous deadline must resolve");
+    assert_eq!(rep.perm.len(), 81);
+}
