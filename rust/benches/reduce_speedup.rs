@@ -1,0 +1,118 @@
+//! Reduction speedup: ordering throughput with the pre-ordering
+//! reduction layer on vs off, on workloads built to exercise each rule.
+//!
+//! Two workloads, each ordered warm through the `Service` pipeline:
+//!
+//! - **twin-heavy** (`matgen::twin_heavy`) — FEM-style k-DOF blow-up;
+//!   twin compression shrinks the kernel k-fold, so rounds, barriers,
+//!   and `L_e` traffic all drop. The acceptance bar is ≥ 1.3× ordering
+//!   throughput here.
+//! - **dense-rows** (`matgen::with_dense_rows`) — a sparse mesh with a
+//!   few near-dense rows; postponement keeps them out of every quotient
+//!   scan.
+//!
+//! Writes the JSON trajectory file `BENCH_reduce_speedup.json` (override
+//! with `PARAMD_BENCH_REDUCE_OUT`; default lands in the repository root
+//! when run via `cargo bench` from `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 8), or
+//! `--smoke` for a one-pass CI run.
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::coordinator::{Method, OrderRequest, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::matgen::{twin_heavy, with_dense_rows};
+use paramd::util::timer::Timer;
+
+fn paramd_req(g: SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 4,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+/// Mean warm ordering seconds of `g` on a fresh service.
+fn measure(g: &SymGraph, reduce_on: bool, threads: usize, reps: usize) -> (f64, u64) {
+    let svc = Service::new(2)
+        .with_order_threads(threads)
+        .with_reduction(reduce_on);
+    let req = paramd_req(g.clone());
+    svc.order(&req); // warm the arenas
+    let t = Timer::new();
+    for _ in 0..reps {
+        let rep = svc.order(&req);
+        assert_eq!(rep.perm.len(), g.n);
+    }
+    let secs = t.secs() / reps as f64;
+    (secs, svc.metrics().shards.twins_merged)
+}
+
+fn main() {
+    bench_common::banner(
+        "Reduction speedup — twin compression, dense postponement, leaf stripping",
+        "ISSUE 4 perf subsystem; not a paper table",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = bench_common::threads().max(4);
+    let reps: usize = if smoke {
+        2
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(8)
+    };
+
+    let workloads: Vec<(&str, SymGraph)> = if smoke {
+        vec![
+            ("twin_heavy", twin_heavy(4000, 8)),
+            ("dense_rows", with_dense_rows(3000, 900, 6)),
+        ]
+    } else {
+        vec![
+            ("twin_heavy", twin_heavy(48_000, 8)),
+            ("dense_rows", with_dense_rows(40_000, 8_000, 12)),
+        ]
+    };
+
+    println!(
+        "{:<12} {:>9} {:>12} {:>12} {:>9} {:>12}",
+        "workload", "n", "off(s)", "on(s)", "speedup", "twins_merged"
+    );
+    let mut rows = Vec::new();
+    for (name, g) in &workloads {
+        let (off_secs, _) = measure(g, false, threads, reps);
+        let (on_secs, twins) = measure(g, true, threads, reps);
+        let speedup = off_secs / on_secs.max(1e-12);
+        println!(
+            "{:<12} {:>9} {:>12.4} {:>12.4} {:>8.2}x {:>12}",
+            name, g.n, off_secs, on_secs, speedup, twins
+        );
+        rows.push(format!(
+            "    {{\"workload\": \"{name}\", \"n\": {}, \"unreduced_secs\": {off_secs:.6}, \
+             \"reduced_secs\": {on_secs:.6}, \"speedup\": {speedup:.3}, \
+             \"twins_merged\": {twins}}}",
+            g.n
+        ));
+    }
+
+    let out = std::env::var("PARAMD_BENCH_REDUCE_OUT")
+        .unwrap_or_else(|_| "../BENCH_reduce_speedup.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"reduce_speedup\",\n  \"status\": \"measured\",\n  \
+         \"threads\": {threads},\n  \"reps\": {reps},\n  \
+         \"acceptance\": \"twin_heavy speedup >= 1.3\",\n  \"workloads\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -64,6 +64,20 @@
 //! steady-state allocations. A request's `Method::ParAmd.threads` knob
 //! is superseded by the shard widths.
 //!
+//! Before routing, every ParAMD job passes through the **pre-ordering
+//! reduction layer** ([`crate::ordering::reduce`], on by default):
+//! pendant chains peel into the permutation prefix, dense rows are
+//! postponed to the tail, and indistinguishable vertices merge into
+//! seed supervariables, so the shards order a smaller weighted kernel
+//! and the router places jobs by their *post-reduction* size. Tune with
+//! [`Service::with_reduction`] / [`Service::with_dense_alpha`] (CLI:
+//! `--no-reduce`, `--dense-alpha`); per-rule counters land in the
+//! [`ShardMetrics`] snapshot.
+//!
+//! Batched callers pair [`Service::submit_all`] with
+//! [`Service::wait_all`], which harvests replies in completion order
+//! through a single batch condvar instead of one wakeup per ticket.
+//!
 //! Metrics ([`Service::metrics`]) split each request's latency into
 //! queue **wait** vs **service** time and expose queue depth (current +
 //! peak), cancellations, arena evictions, and the shard snapshot
@@ -79,6 +93,7 @@ pub use pipeline::{Ticket, WaitTimeout};
 pub use request::{Method, OrderReply, OrderRequest, SolveReply, SolveSpec};
 
 pub use crate::ordering::paramd::runtime::QueuePolicy;
+pub use crate::ordering::reduce::{ReduceConfig, ReduceStats};
 pub use crate::ordering::shard::{ShardMetrics, ShardSpec};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -98,7 +113,7 @@ use crate::symbolic;
 use crate::util::panic_message;
 use crate::util::timer::Timer;
 
-use pipeline::{BorrowedRequest, BoundedQueue, PipelineJob, RequestSlot};
+use pipeline::{BorrowedRequest, BoundedQueue, PipelineJob, RequestSlot, WaitBatch};
 
 /// Default bound of the request queue (requests, not bytes).
 const DEFAULT_QUEUE_CAP: usize = 64;
@@ -191,6 +206,12 @@ impl Service {
         let mut old = std::mem::replace(&mut core.shards, ShardEngine::new(spec));
         core.shards.set_arena_cap(old.arena_cap());
         core.shards.set_policy(old.policy());
+        // Rule switches and α carry over; the fingerprint parallelism
+        // follows the new wide-shard width.
+        core.shards.set_reduce(ReduceConfig {
+            threads: spec.wide_threads,
+            ..old.reduce_config()
+        });
         old.shutdown_join();
         drop(old);
         // The old queue is closed; the pipeline restarts on a fresh one.
@@ -258,6 +279,40 @@ impl Service {
     /// `SmallestFirst` lets small graphs overtake a monster).
     pub fn with_queue_policy(self, policy: QueuePolicy) -> Self {
         self.core().shards.set_policy(policy);
+        self
+    }
+
+    /// Switch the pre-ordering reduction layer (twin compression,
+    /// dense-row postponement, leaf stripping — **on by default**) on or
+    /// off. Disabling restores the exact pre-reduction ordering path
+    /// (the CLI's `--no-reduce`).
+    pub fn with_reduction(self, on: bool) -> Self {
+        let cur = self.core().shards.reduce_config();
+        self.core().shards.set_reduce(ReduceConfig {
+            leaves: on,
+            dense: on,
+            twins: on,
+            ..cur
+        });
+        self
+    }
+
+    /// Set the `α` of the dense-row threshold `max(16, α·√n)` (the
+    /// CLI's `--dense-alpha`; default 10.0, smaller postpones more
+    /// rows). Does not re-enable a disabled reduction layer.
+    pub fn with_dense_alpha(self, alpha: f64) -> Self {
+        let cur = self.core().shards.reduce_config();
+        self.core().shards.set_reduce(ReduceConfig {
+            dense_alpha: alpha,
+            ..cur
+        });
+        self
+    }
+
+    /// Full control over the reduction layer (rule switches, α,
+    /// fingerprint threads).
+    pub fn with_reduce_config(self, cfg: ReduceConfig) -> Self {
+        self.core().shards.set_reduce(cfg);
         self
     }
 
@@ -374,6 +429,42 @@ impl Service {
             Err(_) => unreachable!("submit_all raced a service teardown"),
         }
         tickets
+    }
+
+    /// Harvest a whole batch of tickets **in completion order** through
+    /// a single batch condvar: each resolving ticket pokes the shared
+    /// [`WaitBatch`] queue once, so a burst of `k` replies costs `k`
+    /// wakeups of one waiter instead of `k` condvars each woken for one
+    /// reply (the ROADMAP `wait_all` item). Returns `(submit index,
+    /// outcome)` pairs — `Err` carries the failure message where
+    /// [`Ticket::wait`] would panic (cancellation, scheduler panic), so
+    /// one bad request doesn't lose the rest of the batch.
+    pub fn wait_all(tickets: Vec<Ticket>) -> Vec<(usize, Result<OrderReply, String>)> {
+        let batch = WaitBatch::new();
+        let mut out = Vec::with_capacity(tickets.len());
+        let mut pending = 0usize;
+        for (index, ticket) in tickets.iter().enumerate() {
+            if ticket.attach_watcher(&batch, index) {
+                pending += 1;
+            } else {
+                // Resolved before we could watch it: harvest now (these
+                // lead the completion order — they really did finish
+                // first).
+                let outcome = ticket
+                    .take_result()
+                    .expect("a non-pending ticket has an outcome");
+                out.push((index, outcome));
+            }
+        }
+        while pending > 0 {
+            let index = batch.wait_one();
+            let outcome = tickets[index]
+                .take_result()
+                .expect("a batch notification implies resolution");
+            out.push((index, outcome));
+            pending -= 1;
+        }
+        out
     }
 
     /// Run an ordering request synchronously. This is a thin submit+wait
@@ -819,6 +910,80 @@ mod tests {
         let m = svc.metrics();
         assert_eq!(m.pipeline.submitted, 5);
         assert_eq!(m.pipeline.completed, 5);
+    }
+
+    #[test]
+    fn wait_all_harvests_every_ticket() {
+        let svc = Service::new(1).with_scheduler_threads(2);
+        let reqs: Vec<OrderRequest> = (0..6).map(|_| spd_request(Method::Amd)).collect();
+        let tickets = svc.submit_all(reqs);
+        let results = Service::wait_all(tickets);
+        assert_eq!(results.len(), 6);
+        let mut seen: Vec<usize> = results.iter().map(|(i, _)| *i).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>(), "every index exactly once");
+        for (i, outcome) in results {
+            let rep = outcome.unwrap_or_else(|e| panic!("ticket {i} failed: {e}"));
+            assert_eq!(rep.perm.len(), 144);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.pipeline.completed, 6);
+    }
+
+    #[test]
+    fn wait_all_reports_cancellations_as_errors() {
+        let svc = Service::new(1);
+        let tickets = svc.submit_all(vec![spd_request(Method::Amd), spd_request(Method::Amd)]);
+        tickets[1].cancel();
+        let results = Service::wait_all(tickets);
+        assert_eq!(results.len(), 2);
+        let oks = results.iter().filter(|(_, r)| r.is_ok()).count();
+        // The cancelled ticket may still have raced to completion, but
+        // nothing panics and both outcomes arrive.
+        assert!(oks >= 1, "the live request must succeed");
+    }
+
+    #[test]
+    fn reduction_is_on_by_default_and_togglable() {
+        use crate::matgen::twin_heavy;
+        let svc = Service::new(1);
+        let g = twin_heavy(150, 5);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(g.clone()),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        let rep = svc.order(&req);
+        assert!(crate::graph::perm::is_valid_perm(&rep.perm));
+        let m = svc.metrics();
+        assert_eq!(m.shards.reduced_jobs, 1, "reduction must be on by default");
+        assert_eq!(m.shards.twins_merged, 120, "30 classes of 5 merge 120");
+        assert!(m.report().contains("reduce: jobs=1"));
+
+        let off = Service::new(1).with_reduction(false);
+        let rep2 = off.order(&req);
+        assert!(crate::graph::perm::is_valid_perm(&rep2.perm));
+        assert_eq!(off.metrics().shards.reduced_jobs, 0);
+    }
+
+    #[test]
+    fn reduce_knobs_survive_engine_rebuilds() {
+        let svc = Service::new(1)
+            .with_dense_alpha(3.5)
+            .with_reduction(false)
+            .with_shards(2);
+        let cfg = svc.core().shards.reduce_config();
+        assert!(!cfg.leaves && !cfg.dense && !cfg.twins, "off must survive");
+        assert_eq!(cfg.dense_alpha, 3.5, "α must survive the rebuild");
+        let svc = svc.with_reduction(true);
+        let cfg = svc.core().shards.reduce_config();
+        assert!(cfg.leaves && cfg.dense && cfg.twins);
+        assert_eq!(cfg.dense_alpha, 3.5, "re-enabling keeps the tuned α");
     }
 
     #[test]

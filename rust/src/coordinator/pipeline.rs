@@ -195,31 +195,79 @@ enum TicketState {
     Failed(String),
 }
 
+/// A batch-wide completion queue: one condvar shared by every ticket of
+/// a [`wait_all`](crate::coordinator::Service::wait_all) batch. Tickets
+/// push their index here as they resolve, so the harvester wakes once
+/// per completion instead of once per ticket condvar — the wakeup-count
+/// win for large bursts.
+pub(crate) struct WaitBatch {
+    ready: Mutex<VecDeque<usize>>,
+    cv: Condvar,
+}
+
+impl WaitBatch {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(Self {
+            ready: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+        })
+    }
+
+    fn notify(&self, index: usize) {
+        self.ready.lock().unwrap().push_back(index);
+        self.cv.notify_all();
+    }
+
+    /// Block until some ticket of the batch resolved; returns its index
+    /// in completion order.
+    pub(crate) fn wait_one(&self) -> usize {
+        let mut ready = self.ready.lock().unwrap();
+        loop {
+            if let Some(i) = ready.pop_front() {
+                return i;
+            }
+            ready = self.cv.wait(ready).unwrap();
+        }
+    }
+}
+
+/// State + watcher registration behind one lock: a resolver and an
+/// attacher can never race into a lost or doubled batch notification.
+struct TicketSt {
+    state: TicketState,
+    /// Batch completion queue to poke on resolution, with this ticket's
+    /// index in the batch.
+    watcher: Option<(Arc<WaitBatch>, usize)>,
+}
+
 /// Shared half of a ticket: the scheduler resolves it, the submitter
 /// waits on it, and the cancel flag flows down into the ordering rounds.
 pub(crate) struct TicketInner {
-    state: Mutex<TicketState>,
+    st: Mutex<TicketSt>,
     cv: Condvar,
     cancel: AtomicBool,
 }
 
 impl TicketInner {
-    pub(crate) fn fulfill(&self, reply: OrderReply) {
-        let mut st = self.state.lock().unwrap();
-        if matches!(*st, TicketState::Pending) {
-            *st = TicketState::Ready(reply);
+    fn resolve(&self, to: TicketState) {
+        let mut st = self.st.lock().unwrap();
+        if matches!(st.state, TicketState::Pending) {
+            st.state = to;
+            let watcher = st.watcher.take();
             drop(st);
             self.cv.notify_all();
+            if let Some((batch, index)) = watcher {
+                batch.notify(index);
+            }
         }
     }
 
+    pub(crate) fn fulfill(&self, reply: OrderReply) {
+        self.resolve(TicketState::Ready(reply));
+    }
+
     pub(crate) fn fail(&self, why: impl Into<String>) {
-        let mut st = self.state.lock().unwrap();
-        if matches!(*st, TicketState::Pending) {
-            *st = TicketState::Failed(why.into());
-            drop(st);
-            self.cv.notify_all();
-        }
+        self.resolve(TicketState::Failed(why.into()));
     }
 
     pub(crate) fn is_cancelled(&self) -> bool {
@@ -258,7 +306,10 @@ pub struct Ticket {
 impl Ticket {
     pub(crate) fn new() -> (Ticket, Arc<TicketInner>) {
         let inner = Arc::new(TicketInner {
-            state: Mutex::new(TicketState::Pending),
+            st: Mutex::new(TicketSt {
+                state: TicketState::Pending,
+                watcher: None,
+            }),
             cv: Condvar::new(),
             cancel: AtomicBool::new(false),
         });
@@ -270,18 +321,49 @@ impl Ticket {
         )
     }
 
+    /// Register this ticket with a batch completion queue under `index`.
+    /// Returns `false` (without registering) when the ticket has already
+    /// resolved — the caller harvests it immediately instead.
+    pub(crate) fn attach_watcher(&self, batch: &Arc<WaitBatch>, index: usize) -> bool {
+        let mut st = self.inner.st.lock().unwrap();
+        if matches!(st.state, TicketState::Pending) {
+            st.watcher = Some((Arc::clone(batch), index));
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Non-blocking take of a resolved outcome: `Ok(reply)` or the
+    /// failure message. `None` while pending. A double take reports as
+    /// `Err` rather than panicking, so a batch harvest
+    /// ([`crate::coordinator::Service::wait_all`]) never loses the other
+    /// outcomes to one already-consumed ticket.
+    pub(crate) fn take_result(&self) -> Option<Result<OrderReply, String>> {
+        let mut st = self.inner.st.lock().unwrap();
+        match std::mem::replace(&mut st.state, TicketState::Taken) {
+            TicketState::Ready(reply) => Some(Ok(reply)),
+            TicketState::Failed(why) => Some(Err(why)),
+            TicketState::Pending => {
+                st.state = TicketState::Pending;
+                None
+            }
+            TicketState::Taken => Some(Err("order ticket already consumed".into())),
+        }
+    }
+
     /// Block until the reply arrives and take it.
     ///
     /// Panics if the pipeline abandoned the request (service shut down,
     /// the request was cancelled, or the ordering panicked) — the same
     /// contract the synchronous `order()` shim has always had.
     pub fn wait(self) -> OrderReply {
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.st.lock().unwrap();
         loop {
-            match std::mem::replace(&mut *st, TicketState::Taken) {
+            match std::mem::replace(&mut st.state, TicketState::Taken) {
                 TicketState::Ready(reply) => return reply,
                 TicketState::Pending => {
-                    *st = TicketState::Pending;
+                    st.state = TicketState::Pending;
                     st = self.inner.cv.wait(st).unwrap();
                 }
                 TicketState::Failed(why) => {
@@ -309,12 +391,12 @@ impl Ticket {
     /// before the deadline.
     pub fn wait_deadline(self, timeout: Duration) -> Result<OrderReply, WaitTimeout> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = self.inner.st.lock().unwrap();
         loop {
-            match std::mem::replace(&mut *st, TicketState::Taken) {
+            match std::mem::replace(&mut st.state, TicketState::Taken) {
                 TicketState::Ready(reply) => return Ok(reply),
                 TicketState::Pending => {
-                    *st = TicketState::Pending;
+                    st.state = TicketState::Pending;
                     let now = Instant::now();
                     if now >= deadline {
                         drop(st);
@@ -339,27 +421,16 @@ impl Ticket {
     /// while pending. Panics like [`Self::wait`] on an abandoned ticket
     /// or a double take.
     pub fn try_get(&self) -> Option<OrderReply> {
-        let mut st = self.inner.state.lock().unwrap();
-        match std::mem::replace(&mut *st, TicketState::Taken) {
-            TicketState::Ready(reply) => Some(reply),
-            TicketState::Pending => {
-                *st = TicketState::Pending;
-                None
-            }
-            TicketState::Failed(why) => {
-                drop(st);
-                panic!("order ticket failed: {why}");
-            }
-            TicketState::Taken => {
-                drop(st);
-                panic!("order ticket already consumed");
-            }
+        match self.take_result() {
+            Some(Ok(reply)) => Some(reply),
+            Some(Err(why)) => panic!("order ticket failed: {why}"),
+            None => None,
         }
     }
 
     /// Whether the ticket has resolved (reply ready, taken, or failed).
     pub fn is_finished(&self) -> bool {
-        !matches!(*self.inner.state.lock().unwrap(), TicketState::Pending)
+        !matches!(self.inner.st.lock().unwrap().state, TicketState::Pending)
     }
 
     /// Explicitly cancel the request without dropping the ticket. After
@@ -506,6 +577,61 @@ mod tests {
             .wait_deadline(Duration::from_secs(5))
             .expect("ready ticket resolves immediately");
         assert_eq!(reply.perm, vec![0]);
+    }
+
+    fn dummy_reply(tag: i32) -> OrderReply {
+        OrderReply {
+            perm: vec![tag],
+            fill_in: None,
+            pre_secs: 0.0,
+            order_secs: 0.0,
+            total_secs: 0.0,
+            rounds: 0,
+            gc_count: 0,
+            modeled_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn wait_batch_delivers_indices_in_completion_order() {
+        let (t0, i0) = Ticket::new();
+        let (t1, i1) = Ticket::new();
+        let (t2, i2) = Ticket::new();
+        let batch = WaitBatch::new();
+        assert!(t0.attach_watcher(&batch, 0));
+        assert!(t1.attach_watcher(&batch, 1));
+        assert!(t2.attach_watcher(&batch, 2));
+        i2.fulfill(dummy_reply(2));
+        i0.fail("cancelled");
+        i1.fulfill(dummy_reply(1));
+        assert_eq!(batch.wait_one(), 2, "completion order, not submit order");
+        assert_eq!(batch.wait_one(), 0);
+        assert_eq!(batch.wait_one(), 1);
+        assert!(t2.take_result().unwrap().is_ok());
+        assert!(t0.take_result().unwrap().is_err());
+        assert!(t1.take_result().unwrap().is_ok());
+    }
+
+    #[test]
+    fn take_result_reports_a_double_take_as_err() {
+        // A batch harvest must not lose the rest of the batch to one
+        // ticket the caller already consumed via try_get.
+        let (ticket, inner) = Ticket::new();
+        inner.fulfill(dummy_reply(3));
+        assert!(ticket.try_get().is_some());
+        assert!(ticket.take_result().unwrap().is_err(), "consumed → Err, no panic");
+    }
+
+    #[test]
+    fn attach_watcher_rejects_resolved_tickets() {
+        let (ticket, inner) = Ticket::new();
+        inner.fulfill(dummy_reply(7));
+        let batch = WaitBatch::new();
+        assert!(
+            !ticket.attach_watcher(&batch, 0),
+            "already-resolved tickets harvest immediately"
+        );
+        assert_eq!(ticket.take_result().unwrap().unwrap().perm, vec![7]);
     }
 
     #[test]

@@ -9,11 +9,16 @@
 //!   serve --requests N [--pjrt] [--pipeline] [--sched-threads S]
 //!         [--arena-cap A] [--queue-cap Q] [--small-first]
 //!         [--shards K] [--shard-threads T]
+//!         [--no-reduce] [--dense-alpha A]
 //!         — service demo with metrics; `--pipeline` submits every
 //!         request as a ticket up front (async, backpressured) instead
 //!         of blocking per request; `--shards`/`--shard-threads` shard
 //!         the ordering engine K ways (narrow shards T threads wide) so
-//!         components and concurrent requests order in parallel
+//!         components and concurrent requests order in parallel;
+//!         `--no-reduce` disables the pre-ordering reduction layer
+//!         (twin compression / dense-row postponement / leaf stripping,
+//!         on by default) and `--dense-alpha` tunes its `max(16, α·√n)`
+//!         dense-row threshold
 
 use paramd::cli::Args;
 use paramd::coordinator::{Method, OrderRequest, QueuePolicy, Service, SolveSpec, Ticket};
@@ -50,7 +55,7 @@ fn method_of(args: &Args) -> Result<Method, String> {
 }
 
 fn main() {
-    let args = Args::from_env(&["pjrt", "no-fill", "pipeline", "small-first"]);
+    let args = Args::from_env(&["pjrt", "no-fill", "pipeline", "small-first", "no-reduce"]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "order" => cmd_order(&args),
@@ -161,7 +166,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .with_shard_threads(args.get_parse("shard-threads", 2usize))
         .with_scheduler_threads(args.get_parse("sched-threads", 2usize))
         .with_arena_cap(args.get_parse("arena-cap", usize::MAX))
-        .with_queue_cap(args.get_parse("queue-cap", 64usize));
+        .with_queue_cap(args.get_parse("queue-cap", 64usize))
+        .with_dense_alpha(args.get_parse("dense-alpha", 10.0f64));
+    if args.has("no-reduce") {
+        svc = svc.with_reduction(false);
+    }
     if args.has("small-first") {
         svc = svc.with_queue_policy(QueuePolicy::SmallestFirst);
     }

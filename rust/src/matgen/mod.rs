@@ -191,6 +191,106 @@ pub fn multi_component(k: usize, sizes: &[usize]) -> SymGraph {
     crate::graph::perm::permute_graph(&g, &rng.permutation(base))
 }
 
+/// A graph that is **heavy in indistinguishable (twin) vertices**: a
+/// near-square 2D grid over `⌈n/k⌉` classes, blown up so each base
+/// vertex becomes a clique of `k` copies and each base edge a complete
+/// bipartite coupling between the copies — the structure FEM assembly
+/// with `k` degrees of freedom per node produces. Every class is a set
+/// of pairwise *true twins* (identical closed neighborhoods), so the
+/// reduction layer compresses this graph `k`-fold; vertex ids are
+/// deterministically scattered so reducers cannot rely on contiguous
+/// class labels. `n` is rounded up to a multiple of `k`.
+pub fn twin_heavy(n: usize, k: usize) -> SymGraph {
+    assert!(k >= 1, "class size must be positive");
+    let classes = crate::util::ceil_div(n.max(1), k);
+    let total = classes * k;
+    // Base grid over the classes (same shape multi_component uses).
+    let rows = ((classes as f64).sqrt() as usize).max(1);
+    let cols = crate::util::ceil_div(classes, rows);
+    let base_edges: Vec<(usize, usize)> = {
+        let id = |x: usize, y: usize| x * cols + y;
+        let mut e = Vec::new();
+        for x in 0..rows {
+            for y in 0..cols {
+                let c = id(x, y);
+                if c >= classes {
+                    continue;
+                }
+                if x + 1 < rows && id(x + 1, y) < classes {
+                    e.push((c, id(x + 1, y)));
+                }
+                if y + 1 < cols && id(x, y + 1) < classes {
+                    e.push((c, id(x, y + 1)));
+                }
+            }
+        }
+        e
+    };
+    let mut edges = Vec::with_capacity(base_edges.len() * k * k + classes * k * (k - 1) / 2);
+    for c in 0..classes {
+        for i in 0..k {
+            for j in i + 1..k {
+                edges.push((c * k + i, c * k + j)); // intra-class clique
+            }
+        }
+    }
+    for &(a, b) in &base_edges {
+        for i in 0..k {
+            for j in 0..k {
+                edges.push((a * k + i, b * k + j)); // complete bipartite
+            }
+        }
+    }
+    let g = SymGraph::from_edges(total, &edges);
+    let mut rng = Rng::new(0x7714 ^ ((classes as u64) << 16) ^ k as u64);
+    crate::graph::perm::permute_graph(&g, &rng.permutation(total))
+}
+
+/// A 2D mesh of `n` vertices plus `count` **dense rows**: extra vertices
+/// each coupled to `d` distinct mesh vertices (deterministic
+/// pseudo-random placement). Exercises the reduction layer's dense-row
+/// postponement — with the default `α = 10` threshold the injected rows
+/// only qualify when `d > max(16, 10·√n)`.
+pub fn with_dense_rows(n: usize, d: usize, count: usize) -> SymGraph {
+    assert!(d <= n, "a dense row cannot couple to more than n vertices");
+    let rows = ((n as f64).sqrt() as usize).max(1);
+    let cols = crate::util::ceil_div(n, rows);
+    let id = |x: usize, y: usize| x * cols + y;
+    let mut edges = Vec::new();
+    for x in 0..rows {
+        for y in 0..cols {
+            let v = id(x, y);
+            if v >= n {
+                continue;
+            }
+            if x + 1 < rows && id(x + 1, y) < n {
+                edges.push((v, id(x + 1, y)));
+            }
+            if y + 1 < cols && id(x, y + 1) < n {
+                edges.push((v, id(x, y + 1)));
+            }
+        }
+    }
+    let mut rng = Rng::new(0xDE52 ^ ((n as u64) << 8) ^ count as u64);
+    let mut picked = vec![false; n];
+    for c in 0..count {
+        let row = n + c;
+        let mut remaining = d;
+        for p in picked.iter_mut() {
+            *p = false;
+        }
+        while remaining > 0 {
+            let v = rng.below(n);
+            if !picked[v] {
+                picked[v] = true;
+                edges.push((row, v));
+                remaining -= 1;
+            }
+        }
+    }
+    SymGraph::from_edges(n + count, &edges)
+}
+
 /// A nonsymmetric CFD-like matrix (HV15R family): a 3D mesh pattern with
 /// one-directional "convection" arcs added, returned as a general
 /// [`CsrMatrix`] so the `|A|+|A^T|` pre-processing path is exercised.
@@ -408,6 +508,58 @@ mod tests {
         let g = multi_component(1, &[30]);
         assert_eq!(connected_components(&g).count, 1);
         assert_eq!(g.n, 30);
+    }
+
+    #[test]
+    fn twin_heavy_has_exact_twin_classes() {
+        let g = twin_heavy(60, 4);
+        g.validate().unwrap();
+        assert_eq!(g.n, 60, "60 is already a multiple of 4");
+        // Every vertex has exactly k-1 twins: vertices with identical
+        // closed neighborhoods.
+        let closed = |v: usize| {
+            let mut s: Vec<i32> = g.neighbors(v).to_vec();
+            s.push(v as i32);
+            s.sort_unstable();
+            s
+        };
+        for v in 0..g.n {
+            let mine = closed(v);
+            let twins = (0..g.n)
+                .filter(|&u| u != v && closed(u) == mine)
+                .count();
+            assert_eq!(twins, 3, "vertex {v} must have exactly 3 true twins");
+        }
+    }
+
+    #[test]
+    fn twin_heavy_rounds_up_and_stays_connected() {
+        use crate::graph::components::connected_components;
+        let g = twin_heavy(50, 4); // rounds to 52
+        g.validate().unwrap();
+        assert_eq!(g.n, 52);
+        assert_eq!(connected_components(&g).count, 1);
+        assert_eq!(twin_heavy(50, 4), twin_heavy(50, 4), "deterministic");
+    }
+
+    #[test]
+    fn with_dense_rows_injects_rows_of_requested_degree() {
+        let g = with_dense_rows(100, 40, 3);
+        g.validate().unwrap();
+        assert_eq!(g.n, 103);
+        for r in 100..103 {
+            assert_eq!(g.degree(r), 40, "dense row {r} degree");
+            // Dense rows couple only to base vertices.
+            assert!(g.neighbors(r).iter().all(|&u| (u as usize) < 100));
+        }
+        // Base mesh vertices stay sparse.
+        let max_base = (0..100).map(|v| g.degree(v)).max().unwrap();
+        assert!(max_base <= 4 + 3, "base degree {max_base} too high");
+        assert_eq!(
+            with_dense_rows(100, 40, 3),
+            with_dense_rows(100, 40, 3),
+            "deterministic"
+        );
     }
 
     #[test]

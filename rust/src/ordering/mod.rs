@@ -9,14 +9,19 @@
 //!   `amd_2`: the paper's baseline.
 //! - [`paramd`] — the paper's contribution: parallel AMD via multiple
 //!   elimination on distance-2 independent sets.
+//! - [`reduce`] — pre-ordering graph reduction (twin compression,
+//!   dense-row postponement, leaf stripping) feeding ParAMD a smaller,
+//!   weight-seeded kernel.
 //! - [`shard`] — the sharded ordering engine: component decomposition +
-//!   routing across independent ParAMD runtimes.
+//!   per-component reduction + routing across independent ParAMD
+//!   runtimes.
 
 pub mod amd_seq;
 pub mod md;
 pub mod mmd;
 pub mod rcm;
 pub mod paramd;
+pub mod reduce;
 pub mod shard;
 
 use crate::graph::csr::SymGraph;

@@ -86,8 +86,9 @@ impl ThreadSlot {
         }
     }
 
-    fn reset(&mut self, n: usize, log_hint: usize, seed: u64) -> u32 {
-        let mut grew = self.lists.reset(n) + self.ws.reset(n, seed);
+    fn reset(&mut self, n: usize, dmax: usize, log_hint: usize, seed: u64) -> u32 {
+        let mut grew = self.lists.reset(n, dmax) + self.ws.reset(n, seed);
+        self.ws.set_epoch_stride(dmax);
         self.elim_log.clear();
         // Pre-size the log to the expected per-thread share (aggregate
         // across threads is at most n pivots, so reserving n per slot
@@ -207,12 +208,22 @@ impl ParAmdArena {
     }
 
     /// Reset every pooled structure for a run of `t` threads over `g`,
-    /// growing only what doesn't fit.
-    pub(crate) fn prepare(&mut self, g: &SymGraph, cfg: &ParAmd, t: usize) {
+    /// growing only what doesn't fit. `weights` seeds supervariables
+    /// (`nv > 1`, the reduction layer's twin classes); `None` is the
+    /// ordinary unweighted setup.
+    pub(crate) fn prepare(
+        &mut self,
+        g: &SymGraph,
+        cfg: &ParAmd,
+        t: usize,
+        weights: Option<&[i32]>,
+    ) {
         let n = g.n;
         self.runs += 1;
-        let mut grew = u64::from(self.sg.reset_from(g, cfg.elbow));
+        let mut grew = u64::from(self.sg.reset_from_weighted(g, cfg.elbow, weights));
         grew += u64::from(self.aff.reset(n));
+        // Degree ceiling / empty sentinel: total column weight.
+        let wtot = self.sg.weight;
         if self.lmin.len() < n {
             self.lmin.resize_with(n, || AtomicU64::new(u64::MAX));
             grew += 1;
@@ -228,7 +239,7 @@ impl ParAmdArena {
             grew += 1;
         }
         for a in &self.lamds[..t] {
-            a.store(n, Relaxed);
+            a.store(wtot, Relaxed);
         }
         for s in &self.sizes[..t] {
             s.store(0, Relaxed);
@@ -249,7 +260,7 @@ impl ParAmdArena {
         // n pivots across all threads; the slack absorbs mild imbalance.
         let log_hint = (n / t + n / (4 * t).max(1) + 64).min(n);
         for slot in self.slots[..t].iter_mut() {
-            grew += u64::from(slot.get_mut().unwrap().reset(n, log_hint, cfg.seed));
+            grew += u64::from(slot.get_mut().unwrap().reset(n, wtot, log_hint, cfg.seed));
         }
         self.elim_order.clear();
         self.grow_events += grew;
@@ -642,7 +653,7 @@ mod tests {
     /// An arena warmed on `g` so its slab has a graph-dependent size.
     fn warmed(g: &SymGraph) -> ParAmdArena {
         let mut a = ParAmdArena::new();
-        a.prepare(g, &ParAmd::new(1), 1);
+        a.prepare(g, &ParAmd::new(1), 1, None);
         a
     }
 

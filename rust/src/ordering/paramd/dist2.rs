@@ -35,6 +35,8 @@ pub fn priority(round: u32, rand: u32, v: usize) -> u64 {
 
 /// Phase 1 (Alg 3.2 lines 4–9): gather candidates with approximate degree
 /// in `[amd, floor(mult·amd)]` from this thread's lists, capped at `lim`.
+/// `dmax` is the degree ceiling — the vertex count for ordinary runs, the
+/// total column weight when seed supervariables are in play.
 pub fn collect_candidates(
     lists: &mut ThreadLists,
     aff: &Affinity,
@@ -42,10 +44,10 @@ pub fn collect_candidates(
     amd: usize,
     mult: f64,
     lim: usize,
-    n: usize,
+    dmax: usize,
 ) {
     ws.candidates.clear();
-    let hi = (((amd as f64) * mult).floor() as usize).min(n.saturating_sub(1));
+    let hi = (((amd as f64) * mult).floor() as usize).min(dmax.saturating_sub(1));
     for d in amd..=hi {
         lists.get(aff, d, &mut ws.candidates);
         if ws.candidates.len() >= lim {

@@ -231,7 +231,9 @@ pub fn eliminate_pivot(
     for k in 0..kept {
         let v = g.iw_at(pme + k) as usize;
         let ext = (degme_final - g.nv_of(v)) as i64;
-        let bound = g.n as i64 - nel_now as i64 - g.nv_of(v) as i64;
+        // Weighted Ashcraft bound: remaining columns, not vertices (the
+        // two differ when the reduction layer seeded `nv > 1`).
+        let bound = g.weight as i64 - nel_now as i64 - g.nv_of(v) as i64;
         let d = (g.deg_of(v) as i64 + ext).min(bound).max(1) as usize;
         g.degree[v].store(d as i32, Relaxed);
         lists.insert(aff, v, d);

@@ -53,9 +53,18 @@ impl Affinity {
 }
 
 /// One thread's degree lists (Algorithm 3.1 state for a single `tid`).
+///
+/// Degrees are bucketed up to `dmax` inclusive. Ordinarily `dmax == n`
+/// (an external degree never reaches `n`); a **weighted** run — seed
+/// supervariables with `nv > 1` from the reduction layer — sets `dmax`
+/// to the total column weight, since weighted degrees can exceed the
+/// kernel's vertex count. `dmax` doubles as the "no live variable"
+/// sentinel [`Self::lamd`] returns.
 pub struct ThreadLists {
     pub tid: i32,
     n: usize,
+    /// Largest representable degree (and the empty-lists sentinel).
+    dmax: usize,
     /// `dhead[d]` -> first variable in the local degree-`d` list.
     dhead: Vec<i32>,
     dnext: Vec<i32>,
@@ -72,6 +81,7 @@ impl ThreadLists {
         Self {
             tid: tid as i32,
             n,
+            dmax: n,
             dhead: vec![-1; n + 1],
             dnext: vec![-1; n],
             dprev: vec![-1; n],
@@ -80,21 +90,27 @@ impl ThreadLists {
         }
     }
 
-    /// Re-initialize for a graph of `n` vertices, growing monotonically and
-    /// reusing list storage when the graph fits (the arena's warm path).
-    /// Returns 1 if storage grew.
-    pub fn reset(&mut self, n: usize) -> u32 {
+    /// Re-initialize for a graph of `n` vertices whose degrees are
+    /// bounded by `dmax` (pass `n` for an unweighted run), growing
+    /// monotonically and reusing list storage when the graph fits (the
+    /// arena's warm path). Returns 1 if storage grew.
+    pub fn reset(&mut self, n: usize, dmax: usize) -> u32 {
+        let dmax = dmax.max(n);
         let mut grew = 0;
         if self.dnext.len() < n {
-            self.dhead.resize(n + 1, -1);
             self.dnext.resize(n, -1);
             self.dprev.resize(n, -1);
             self.loc.resize(n, -1);
             grew = 1;
         }
+        if self.dhead.len() < dmax + 1 {
+            self.dhead.resize(dmax + 1, -1);
+            grew = 1;
+        }
         self.n = n;
-        self.lamd = n;
-        for x in self.dhead[..=n].iter_mut() {
+        self.dmax = dmax;
+        self.lamd = dmax;
+        for x in self.dhead[..=dmax].iter_mut() {
             *x = -1;
         }
         for x in self.dnext[..n].iter_mut() {
@@ -118,7 +134,7 @@ impl ThreadLists {
 
     /// Algorithm 3.1 `INSERT(tid, v, deg)`.
     pub fn insert(&mut self, aff: &Affinity, v: usize, deg: usize) {
-        let deg = deg.min(self.n);
+        let deg = deg.min(self.dmax);
         if self.loc[v] != -1 {
             self.unlink(v, self.loc[v] as usize);
         }
@@ -155,7 +171,7 @@ impl ThreadLists {
     /// degree-`deg` list into `out`, lazily unlinking entries whose
     /// affinity moved to another thread (or -1).
     pub fn get(&mut self, aff: &Affinity, deg: usize, out: &mut Vec<i32>) {
-        let mut v = self.dhead[deg.min(self.n)];
+        let mut v = self.dhead[deg.min(self.dmax)];
         while v != -1 {
             let vu = v as usize;
             let next = self.dnext[vu];
@@ -170,13 +186,13 @@ impl ThreadLists {
     }
 
     /// Algorithm 3.1 `LAMD(tid)`: advance past empty/stale lists and return
-    /// the local minimum approximate degree (`n` when empty).
+    /// the local minimum approximate degree (`dmax` when empty).
     ///
     /// Allocation-free: walks each list only until the first *live* entry,
     /// purging stale ones on the way (they would be purged by the next
     /// `get` anyway) — EXPERIMENTS.md §Perf change #3.
     pub fn lamd(&mut self, aff: &Affinity) -> usize {
-        while self.lamd < self.n {
+        while self.lamd < self.dmax {
             let mut v = self.dhead[self.lamd];
             let mut found = false;
             while v != -1 {
@@ -195,13 +211,13 @@ impl ThreadLists {
             }
             self.lamd += 1;
         }
-        self.n
+        self.dmax
     }
 
     /// Number of live entries currently linked (test helper; O(n)).
     #[cfg(test)]
     pub fn live_count(&self, aff: &Affinity) -> usize {
-        (0..=self.n)
+        (0..=self.dmax)
             .map(|d| {
                 let mut c = 0;
                 let mut v = self.dhead[d];
@@ -308,21 +324,39 @@ mod tests {
         l.insert(&aff, 3, 5);
         l.insert(&aff, 7, 2);
         // Same-size reset: no growth, all lists empty again.
-        assert_eq!(l.reset(10), 0);
+        assert_eq!(l.reset(10, 10), 0);
         assert_eq!(aff.reset(10), 0);
         assert_eq!(l.lamd(&aff), 10);
         let mut out = vec![];
         l.get(&aff, 5, &mut out);
         assert!(out.is_empty());
         // Shrink then regrow: monotonic storage, correct behavior at both.
-        assert_eq!(l.reset(4), 0);
+        assert_eq!(l.reset(4, 4), 0);
         assert_eq!(aff.reset(4), 0);
         l.insert(&aff, 2, 3);
         assert_eq!(l.lamd(&aff), 3);
-        assert_eq!(l.reset(16), 1);
+        assert_eq!(l.reset(16, 16), 1);
         assert_eq!(aff.reset(16), 1);
         l.insert(&aff, 15, 12);
         assert_eq!(l.lamd(&aff), 12);
+    }
+
+    #[test]
+    fn weighted_degree_bound_extends_the_buckets() {
+        // dmax > n: weighted runs store degrees past the vertex count
+        // and the empty sentinel moves to dmax.
+        let mut aff = Affinity::new(4);
+        let mut l = ThreadLists::new(0, 4);
+        assert_eq!(l.reset(4, 100), 1, "wider dhead must grow");
+        assert_eq!(aff.reset(4), 0);
+        assert_eq!(l.lamd(&aff), 100, "empty sentinel is dmax");
+        l.insert(&aff, 2, 57); // beyond n, within dmax: kept exactly
+        assert_eq!(l.lamd(&aff), 57);
+        let mut out = vec![];
+        l.get(&aff, 57, &mut out);
+        assert_eq!(out, vec![2]);
+        l.remove(&aff, 2);
+        assert_eq!(l.lamd(&aff), 100);
     }
 
     #[test]

@@ -203,6 +203,26 @@ impl ParAmd {
         g: &SymGraph,
         cancel: &AtomicBool,
     ) -> Option<&'a OrderingResult> {
+        self.order_into_cancellable_weighted(rt, arena, g, None, cancel)
+    }
+
+    /// [`Self::order_into_cancellable`] with **seed supervariables**:
+    /// `weights[v]` becomes vertex `v`'s initial `nv` (the reduction
+    /// layer's twin-class sizes), so elimination starts on the
+    /// pre-compressed quotient graph. All degrees, candidate windows,
+    /// and the elimination target are *weighted* (total column weight,
+    /// not vertex count) — the run behaves exactly as if AMD itself had
+    /// already merged the twins. The resulting permutation ranges over
+    /// the `g.n` kernel vertices; callers expand it back
+    /// ([`crate::ordering::reduce::ReductionPlan::expand`]).
+    pub fn order_into_cancellable_weighted<'a>(
+        &self,
+        rt: &OrderingRuntime,
+        arena: &'a mut ParAmdArena,
+        g: &SymGraph,
+        weights: Option<&[i32]>,
+        cancel: &AtomicBool,
+    ) -> Option<&'a OrderingResult> {
         let n = g.n;
         let t = rt.threads();
         let lim_total = if self.lim_total == 0 {
@@ -217,7 +237,10 @@ impl ParAmd {
             n < dist2::MAX_VERTICES,
             "ParAMD supports up to 2^24 vertices (priority packing)"
         );
-        arena.prepare(g, self, t);
+        arena.prepare(g, self, t, weights);
+        // Total column weight: the elimination target and the degree
+        // ceiling (== n unless supervariables were seeded).
+        let wtot = arena.sg.weight;
         if n == 0 {
             return Some(&arena.result);
         }
@@ -244,6 +267,7 @@ impl ParAmd {
                 set_sizes: &arena.set_sizes,
                 t,
                 lim,
+                wtot,
             };
             let slots = &arena.slots;
             // Weight = vertex count, the SmallestFirst queue-policy key.
@@ -262,7 +286,7 @@ impl ParAmd {
              `elbow` (paper §3.3.1: the 1.5 factor is empirical and \
              user-adjustable)"
         );
-        assert_eq!(arena.sg.nel.load(Relaxed), n, "not all columns eliminated");
+        assert_eq!(arena.sg.nel.load(Relaxed), wtot, "not all columns eliminated");
 
         arena.assemble(t, total_timer.secs());
         Some(&arena.result)
@@ -292,16 +316,22 @@ struct RunShared<'a> {
     set_sizes: &'a Mutex<Vec<u32>>,
     t: usize,
     lim: usize,
+    /// Total column weight (`Σ nv` at setup): the weighted-degree
+    /// ceiling and the empty-lists sentinel. Equals `n` unless seed
+    /// supervariables were fed in.
+    wtot: usize,
 }
 
 fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
     let n = sh.g.n;
     let cfg = sh.cfg;
 
-    // Initial population: static chunk of the vertices.
+    // Initial population: static chunk of the vertices. Degrees come
+    // from the quotient graph, which already holds the *weighted*
+    // external degree when supervariables were seeded.
     let (lo, hi) = chunk_range(n, sh.t, tid);
     for v in lo..hi {
-        slot.lists.insert(sh.aff, v, sh.g.degree(v));
+        slot.lists.insert(sh.aff, v, sh.sg.deg_of(v) as usize);
     }
 
     let mut round: u32 = 0;
@@ -311,7 +341,7 @@ fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
         sh.lamds[tid].store(slot.lists.lamd(sh.aff), Relaxed);
         sh.barrier.wait();
         let amd = sh.lamds.iter().map(|a| a.load(Relaxed)).min().unwrap();
-        if amd >= n {
+        if amd >= sh.wtot {
             break; // no live variables anywhere
         }
 
@@ -332,7 +362,7 @@ fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
             amd,
             mult,
             sh.lim,
-            n,
+            sh.wtot,
         );
         dist2::luby_prepare(sh.sg, &mut slot.ws, round, &mut work.select);
         dist2::luby_min(&slot.ws, sh.lmin, &mut work.select);
@@ -551,6 +581,46 @@ mod tests {
         let g = SymGraph::from_edges(0, &[]);
         let r = ParAmd::new(4).order(&g);
         assert!(r.perm.is_empty());
+    }
+
+    #[test]
+    fn weighted_run_orders_the_kernel_vertices() {
+        // A mesh kernel with non-uniform seed supervariables: the run
+        // must eliminate every kernel vertex (total weight, not vertex
+        // count, is the target) and produce a valid kernel permutation.
+        let g = mesh2d(9, 9);
+        let weights: Vec<i32> = (0..g.n as i32).map(|v| 1 + (v % 4)).collect();
+        let rt = OrderingRuntime::new(2);
+        let mut arena = ParAmdArena::new();
+        let cancel = AtomicBool::new(false);
+        let r = ParAmd::new(2)
+            .order_into_cancellable_weighted(&rt, &mut arena, &g, Some(&weights), &cancel)
+            .expect("uncancelled run completes");
+        check_ordering_contract(&g, r);
+    }
+
+    #[test]
+    fn weighted_and_unweighted_runs_share_an_arena() {
+        // Interleave weighted and unweighted runs on one arena: the
+        // epoch stride and degree-bucket bounds must reset correctly.
+        let g = mesh2d(8, 8);
+        let rt = OrderingRuntime::new(1);
+        let mut arena = ParAmdArena::new();
+        let cfg = ParAmd::new(1);
+        let cancel = AtomicBool::new(false);
+        let plain = cfg.order(&g).perm;
+        let weights = vec![5i32; g.n];
+        for _ in 0..2 {
+            let w = cfg
+                .order_into_cancellable_weighted(&rt, &mut arena, &g, Some(&weights), &cancel)
+                .unwrap();
+            check_ordering_contract(&g, w);
+            // Uniform weights scale every degree equally, so the
+            // single-thread pivot order must match the unweighted run.
+            assert_eq!(w.perm, plain, "uniform weights must not change the order");
+            let u = cfg.order_into(&rt, &mut arena, &g);
+            assert_eq!(u.perm, plain, "arena must reset cleanly after a weighted run");
+        }
     }
 
     #[test]

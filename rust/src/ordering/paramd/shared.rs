@@ -33,6 +33,12 @@ pub const ST_DEAD_ELEM: u8 = 3;
 /// The shared quotient graph.
 pub struct SharedGraph {
     pub n: usize,
+    /// Total column weight: `Σ nv` at setup. Equals `n` for an ordinary
+    /// run; larger when the reduction layer seeds supervariables with
+    /// `nv > 1` (each node then stands for `nv` original columns). This
+    /// is the elimination target (`nel` reaches it) and the upper bound
+    /// on every weighted degree.
+    pub weight: usize,
     pub iw: Vec<AtomicI32>,
     pub pe: Vec<AtomicUsize>,
     pub len: Vec<AtomicI32>,
@@ -69,6 +75,7 @@ impl SharedGraph {
     pub fn empty() -> Self {
         SharedGraph {
             n: 0,
+            weight: 0,
             iw: Vec::new(),
             pe: Vec::new(),
             len: Vec::new(),
@@ -90,7 +97,26 @@ impl SharedGraph {
     /// `elbow × nnz` simply acts as extra elbow room. Returns the number
     /// of storage groups that had to grow (0 on a fully warm reset).
     pub fn reset_from(&mut self, g: &SymGraph, elbow: f64) -> u32 {
+        self.reset_from_weighted(g, elbow, None)
+    }
+
+    /// [`Self::reset_from`] with **seed supervariables**: `weights[v]`
+    /// becomes node `v`'s initial `nv` (the number of original columns
+    /// it stands for — the reduction layer's twin-class sizes) and every
+    /// initial degree is the *weighted* external degree `Σ nv(u)` over
+    /// the neighbors, exactly the state the quotient graph would be in
+    /// had AMD itself merged those columns. `None` weights mean all-ones
+    /// (the ordinary unweighted setup).
+    pub fn reset_from_weighted(
+        &mut self,
+        g: &SymGraph,
+        elbow: f64,
+        weights: Option<&[i32]>,
+    ) -> u32 {
         let n = g.n;
+        if let Some(w) = weights {
+            assert_eq!(w.len(), n, "one weight per vertex");
+        }
         let nnz = g.nnz();
         let iwlen = nnz + (nnz as f64 * elbow) as usize + 16;
         let mut grew = 0;
@@ -112,16 +138,27 @@ impl SharedGraph {
         for (i, &c) in g.colind.iter().enumerate() {
             self.iw[i].store(c, Relaxed);
         }
+        let mut total = 0usize;
         for v in 0..n {
-            let d = g.degree(v) as i32;
+            let len = g.degree(v) as i32;
+            let (w, deg) = match weights {
+                None => (1, len),
+                Some(ws) => {
+                    debug_assert!(ws[v] > 0, "weights must be positive");
+                    let deg: i32 = g.neighbors(v).iter().map(|&u| ws[u as usize]).sum();
+                    (ws[v], deg)
+                }
+            };
+            total += w as usize;
             self.pe[v].store(g.rowptr[v], Relaxed);
-            self.len[v].store(d, Relaxed);
+            self.len[v].store(len, Relaxed);
             self.elen[v].store(0, Relaxed);
-            self.nv[v].store(1, Relaxed);
-            self.degree[v].store(d, Relaxed);
+            self.nv[v].store(w, Relaxed);
+            self.degree[v].store(deg, Relaxed);
             self.state[v].store(ST_VAR, Relaxed);
             self.parent[v].store(-1, Relaxed);
         }
+        self.weight = total;
         self.pfree.store(nnz, Relaxed);
         self.nel.store(0, Relaxed);
         self.gc_requested.store(false, Relaxed);
@@ -338,6 +375,27 @@ mod tests {
         let bigger = mesh2d(9, 9);
         assert!(sg.reset_from(&bigger, 1.5) > 0, "larger graph must grow");
         assert_eq!(sg.n, bigger.n);
+    }
+
+    #[test]
+    fn weighted_reset_seeds_nv_and_weighted_degrees() {
+        // Path 0-1-2 with weights 3,1,2: degrees must be neighbor-weight
+        // sums and `weight` the column total.
+        let g = crate::graph::csr::SymGraph::from_edges(3, &[(0, 1), (1, 2)]);
+        let mut sg = SharedGraph::empty();
+        sg.reset_from_weighted(&g, 1.5, Some(&[3, 1, 2]));
+        assert_eq!(sg.weight, 6);
+        assert_eq!(sg.nv_of(0), 3);
+        assert_eq!(sg.nv_of(1), 1);
+        assert_eq!(sg.nv_of(2), 2);
+        assert_eq!(sg.deg_of(0), 1, "0 sees only 1 (weight 1)");
+        assert_eq!(sg.deg_of(1), 5, "1 sees 0 (3) and 2 (2)");
+        assert_eq!(sg.deg_of(2), 1);
+        // An unweighted reset restores the all-ones state.
+        sg.reset_from(&g, 1.5);
+        assert_eq!(sg.weight, 3);
+        assert_eq!(sg.nv_of(0), 1);
+        assert_eq!(sg.deg_of(1), 2);
     }
 
     #[test]

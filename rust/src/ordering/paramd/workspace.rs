@@ -27,6 +27,12 @@ pub struct Workspace {
     pub w: Vec<u64>,
     pub wflg: u64,
     n: usize,
+    /// Epoch stride: the largest value a run may add to a mark (an
+    /// element weight is bounded by the quotient graph's total column
+    /// weight). `n` for unweighted runs; raised via
+    /// [`Self::set_epoch_stride`] when seed supervariables push weighted
+    /// degrees past `n`.
+    stride: u64,
     /// Scratch for building L_me.
     pub lme: Vec<i32>,
     /// Scratch for candidate collection.
@@ -57,6 +63,7 @@ impl Workspace {
             w: vec![0u64; n],
             wflg: 1,
             n,
+            stride: n as u64,
             lme: Vec::new(),
             candidates: Vec::new(),
             my_pivots: Vec::new(),
@@ -76,13 +83,16 @@ impl Workspace {
     /// past any value a previous run could have stored (`≤ wflg + w.len()`),
     /// so its O(n) contents are never rewritten. Returns 1 if `w` grew.
     pub fn reset(&mut self, n: usize, seed: u64) -> u32 {
-        self.wflg += self.w.len().max(n) as u64 + 2;
+        // Jump past anything the previous run stored: its marks advanced
+        // by at most its stride per epoch.
+        self.wflg += self.stride.max(self.w.len().max(n) as u64) + 2;
         let mut grew = 0;
         if self.w.len() < n {
             self.w.resize(n, 0);
             grew = 1;
         }
         self.n = n;
+        self.stride = n as u64;
         self.rng = Rng::new(seed ^ (self.tid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
         self.lme.clear();
         self.candidates.clear();
@@ -96,11 +106,19 @@ impl Workspace {
         grew
     }
 
+    /// Raise the epoch stride to the run's total column weight so
+    /// weighted element degrees (`mark + degree ≤ mark + weight`) can
+    /// never collide with the next epoch. Call right after
+    /// [`Self::reset`], before the first [`Self::bump_epoch`].
+    pub fn set_epoch_stride(&mut self, weight: usize) {
+        self.stride = self.stride.max(weight as u64);
+    }
+
     /// Start a fresh mark epoch, advanced past any stored weight
-    /// (`mark + degree ≤ mark + n`) to avoid epoch collisions.
+    /// (`mark + degree ≤ mark + stride`) to avoid epoch collisions.
     #[inline]
     pub fn bump_epoch(&mut self) -> u64 {
-        self.wflg += self.n as u64 + 2;
+        self.wflg += self.stride.max(self.n as u64) + 2;
         self.wflg
     }
 }
@@ -132,6 +150,21 @@ mod tests {
         let stale_small = ws.wflg + 8;
         assert_eq!(ws.reset(120, 9), 1, "larger graph must grow w");
         assert!(ws.wflg > stale_small);
+    }
+
+    #[test]
+    fn weighted_stride_keeps_epochs_apart() {
+        let mut ws = Workspace::new(0, 10, 3);
+        ws.set_epoch_stride(500); // weighted run: degrees up to 500
+        let m1 = ws.bump_epoch();
+        ws.w[3] = m1 + 500; // largest weighted element mark
+        let m2 = ws.bump_epoch();
+        assert!(m2 > m1 + 500, "next epoch must clear weighted marks");
+        // A reset after a weighted run must also clear them.
+        ws.w[4] = m2 + 500;
+        let stale = ws.w[4];
+        ws.reset(10, 3);
+        assert!(ws.wflg > stale, "reset must jump the weighted stride");
     }
 
     #[test]

@@ -1,0 +1,749 @@
+//! Pre-ordering graph reduction: shrink the quotient graph *before*
+//! elimination starts.
+//!
+//! The paper shows ParAMD's per-round parallelism is bounded by the size
+//! of the distance-2 independent sets and the per-pivot workload (§4);
+//! every vertex removed up front cuts rounds, barriers, and memory
+//! traffic at once. This module applies three classic, *exact-or-better*
+//! data reductions (cf. Ost/Schulz/Strash, "Engineering Data Reduction
+//! for Nested Dissection", and the dense-row handling in SuiteSparse
+//! AMD) and records enough bookkeeping to expand a reduced ordering back
+//! into a full permutation with exact fill accounting:
+//!
+//! 1. **Degree-0/1 leaf stripping** ([`ReduceConfig::leaves`]) —
+//!    isolated and pendant vertices are peeled iteratively (a pendant
+//!    chain unravels completely) straight into the **permutation
+//!    prefix**. A vertex with at most one live neighbor at its
+//!    elimination time causes zero fill, so the prefix is
+//!    minimum-degree-optimal and exact.
+//! 2. **Dense-row postponement** ([`ReduceConfig::dense`]) — rows with
+//!    live degree above `max(16, α·√n)` (the SuiteSparse-style
+//!    threshold; `α` is [`ReduceConfig::dense_alpha`]) are extracted and
+//!    appended to the **permutation tail**, least-dense first. A dense
+//!    row touches nearly every `L_e` scan of every round; postponing it
+//!    to the end removes it from all of them, at a bounded fill cost
+//!    (the tail rows factor as a near-dense trailing block — exactly
+//!    what they would have become anyway).
+//! 3. **Twin compression** ([`ReduceConfig::twins`]) — indistinguishable
+//!    vertices (`N(u) \ {v} = N(v) \ {u}`, covering both adjacent "true"
+//!    twins and non-adjacent "false" twins) are merged into a single
+//!    **seed supervariable** whose weight feeds ParAMD's `nv` setup
+//!    ([`crate::ordering::paramd::shared::SharedGraph::reset_from_weighted`]),
+//!    so elimination starts pre-compressed instead of rediscovering the
+//!    merge hash-by-hash mid-run. Detection is the same hash-then-verify
+//!    scheme AMD uses internally: **parallel fingerprinting** of
+//!    adjacency lists over vertex ranges, then exact comparison within
+//!    hash buckets.
+//!
+//! ## Rule ordering
+//!
+//! Leaf stripping and dense postponement alternate to a fixpoint
+//! (removing a dense row can expose new pendants; peeling pendants can
+//! only lower degrees, never create new dense rows), then twins are
+//! detected once on the surviving graph. Twin detection runs last
+//! because the other two rules change live neighborhoods, and because
+//! leaves/dense rows are cheaper to test for.
+//!
+//! ## Why expansion is exact
+//!
+//! [`ReductionPlan::expand`] emits `prefix ++ expand(kernel perm) ++
+//! tail`. The prefix is fill-free by construction. Twin-class members
+//! are emitted contiguously right after their representative — the same
+//! bucket placement [`crate::ordering::rebuild_perm`] gives columns
+//! absorbed into a supervariable mid-run, and twins are symbolically
+//! interchangeable, so every member column of a class has the identical
+//! factor-column pattern the representative's pivot established. The
+//! merge forest ([`ReductionPlan::merge_parent`]) records exactly which
+//! representative absorbed each member, so `fill_of`/`fill_in` on the
+//! expanded permutation measures the true factorization, not an
+//! approximation.
+
+use std::collections::VecDeque;
+
+use crate::graph::csr::SymGraph;
+use crate::util::chunk_range;
+use crate::util::rng::splitmix64;
+
+/// Vertex count below which fingerprinting stays single-threaded (spawn
+/// cost outweighs the scan).
+const PAR_FINGERPRINT_MIN: usize = 4096;
+
+/// Which reduction rules to apply, and their knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReduceConfig {
+    /// Iteratively peel degree-0/1 vertices into the permutation prefix.
+    pub leaves: bool,
+    /// Postpone rows with live degree > `max(16, dense_alpha·√n)` to the
+    /// permutation tail.
+    pub dense: bool,
+    /// Merge indistinguishable vertices into seed supervariables.
+    pub twins: bool,
+    /// The `α` of the dense threshold `max(16, α·√n)`. SuiteSparse AMD
+    /// uses 10·√n; smaller is more aggressive.
+    pub dense_alpha: f64,
+    /// Worker threads for the fingerprinting scan (1 = serial). The
+    /// shard engine overrides this with its wide-shard width.
+    pub threads: usize,
+}
+
+impl Default for ReduceConfig {
+    fn default() -> Self {
+        Self {
+            leaves: true,
+            dense: true,
+            twins: true,
+            dense_alpha: 10.0,
+            threads: 1,
+        }
+    }
+}
+
+impl ReduceConfig {
+    /// A config with every rule switched off ([`reduce`] then returns a
+    /// trivial plan).
+    pub fn disabled() -> Self {
+        Self {
+            leaves: false,
+            dense: false,
+            twins: false,
+            ..Self::default()
+        }
+    }
+
+    /// Whether any rule is active.
+    pub fn is_enabled(&self) -> bool {
+        self.leaves || self.dense || self.twins
+    }
+}
+
+/// The dense-row cutoff: live degree strictly above this postpones a row.
+pub fn dense_threshold(n: usize, alpha: f64) -> usize {
+    let scaled = (alpha * (n as f64).sqrt()).floor();
+    if scaled.is_finite() && scaled >= 16.0 {
+        scaled as usize
+    } else {
+        16
+    }
+}
+
+/// Per-rule reduction counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReduceStats {
+    /// Vertices peeled into the prefix by leaf stripping.
+    pub leaves: usize,
+    /// Rows postponed to the tail.
+    pub dense: usize,
+    /// Vertices folded into a twin representative (class size − 1, summed).
+    pub twins_merged: usize,
+    /// Undirected edges that vanished from the ordering problem.
+    pub edges_removed: usize,
+}
+
+/// The outcome of [`reduce`]: the kernel graph ParAMD actually orders,
+/// plus everything needed to expand a kernel permutation back to the
+/// original vertex space.
+#[derive(Clone, Debug)]
+pub struct ReductionPlan {
+    /// Original vertex count.
+    pub n: usize,
+    /// Leaf-stripped vertices, in peel order (eliminated first, zero fill).
+    pub prefix: Vec<i32>,
+    /// Postponed dense rows, least-dense first (eliminated last).
+    pub tail: Vec<i32>,
+    /// The reduced graph over twin-class representatives.
+    pub kernel: SymGraph,
+    /// `old_of_new[k]` = original vertex of kernel vertex `k` (the class
+    /// representative; strictly increasing).
+    pub old_of_new: Vec<i32>,
+    /// `weights[k]` = twin-class size of kernel vertex `k` — the `nv`
+    /// seed fed into the quotient-graph setup.
+    pub weights: Vec<i32>,
+    /// Flattened twin-class member lists (original ids, representative
+    /// first, ascending), indexed by `member_ptr` per kernel vertex.
+    pub members: Vec<i32>,
+    pub member_ptr: Vec<usize>,
+    /// Per-rule counters.
+    pub stats: ReduceStats,
+}
+
+impl ReductionPlan {
+    /// True when no rule fired: the kernel *is* the input graph and
+    /// callers should keep the original (possibly borrowed) path.
+    pub fn is_trivial(&self) -> bool {
+        self.prefix.is_empty() && self.tail.is_empty() && self.stats.twins_merged == 0
+    }
+
+    /// Vertices the kernel no longer contains (prefix + tail + merged
+    /// twin members).
+    pub fn reduced_away(&self) -> usize {
+        self.n - self.kernel.n
+    }
+
+    /// Vertices ordered outside the kernel rounds entirely (prefix +
+    /// tail) — the count the expanded round log reports as its
+    /// reduction "round".
+    pub fn pre_ordered(&self) -> usize {
+        self.prefix.len() + self.tail.len()
+    }
+
+    /// The merge forest: `parent[v]` = the representative that absorbed
+    /// twin `v`, `-1` for representatives and un-merged vertices — the
+    /// same shape as the quotient graph's absorption forest.
+    pub fn merge_parent(&self) -> Vec<i32> {
+        let mut parent = vec![-1i32; self.n];
+        for k in 0..self.kernel.n {
+            let rep = self.old_of_new[k];
+            for &m in &self.members[self.member_ptr[k] + 1..self.member_ptr[k + 1]] {
+                parent[m as usize] = rep;
+            }
+        }
+        parent
+    }
+
+    /// Expand a kernel permutation into a permutation of the original
+    /// `n` vertices: prefix, then each kernel pivot's twin class
+    /// (representative first), then the dense tail.
+    pub fn expand(&self, kernel_perm: &[i32]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.n);
+        self.expand_into(kernel_perm, &mut out);
+        out
+    }
+
+    /// [`Self::expand`] into a caller-owned buffer.
+    pub fn expand_into(&self, kernel_perm: &[i32], out: &mut Vec<i32>) {
+        assert_eq!(
+            kernel_perm.len(),
+            self.kernel.n,
+            "kernel permutation does not match the reduced graph"
+        );
+        out.clear();
+        out.extend_from_slice(&self.prefix);
+        for &p in kernel_perm {
+            let k = p as usize;
+            out.extend_from_slice(&self.members[self.member_ptr[k]..self.member_ptr[k + 1]]);
+        }
+        out.extend_from_slice(&self.tail);
+        assert_eq!(out.len(), self.n, "expansion must cover every vertex");
+    }
+}
+
+/// Parallel fingerprint scan: for every live vertex, the commutative
+/// hash of its live open neighborhood plus its live degree. Chunked
+/// over vertex ranges; deterministic regardless of thread count.
+fn fingerprints(g: &SymGraph, alive: &[bool], threads: usize) -> (Vec<u64>, Vec<u32>) {
+    let n = g.n;
+    let mut hash = vec![0u64; n];
+    let mut ldeg = vec![0u32; n];
+    let fill = |range: std::ops::Range<usize>, hash: &mut [u64], ldeg: &mut [u32]| {
+        for (i, v) in range.enumerate() {
+            if !alive[v] {
+                continue;
+            }
+            let (mut h, mut d) = (0u64, 0u32);
+            for &u in g.neighbors(v) {
+                if alive[u as usize] {
+                    // SplitMix64-mixed, summed: a commutative
+                    // (order-independent) neighborhood fingerprint.
+                    h = h.wrapping_add(splitmix64(u as u64));
+                    d += 1;
+                }
+            }
+            hash[i] = h;
+            ldeg[i] = d;
+        }
+    };
+    let t = threads.max(1).min(n.max(1));
+    if t == 1 || n < PAR_FINGERPRINT_MIN {
+        fill(0..n, &mut hash, &mut ldeg);
+    } else {
+        std::thread::scope(|s| {
+            let mut rest_h = hash.as_mut_slice();
+            let mut rest_d = ldeg.as_mut_slice();
+            for tid in 0..t {
+                let (lo, hi) = chunk_range(n, t, tid);
+                let (h, rh) = rest_h.split_at_mut(hi - lo);
+                let (d, rd) = rest_d.split_at_mut(hi - lo);
+                rest_h = rh;
+                rest_d = rd;
+                let fill = &fill;
+                s.spawn(move || fill(lo..hi, h, d));
+            }
+        });
+    }
+    (hash, ldeg)
+}
+
+/// Exact twin test: `N(a) \ {b} == N(b) \ {a}` over live vertices. Covers
+/// adjacent (true) and non-adjacent (false) twins uniformly; hashes only
+/// nominate candidates, this comparison is the ground truth.
+fn twin_eq(g: &SymGraph, alive: &[bool], a: usize, b: usize) -> bool {
+    let mut ia = g.neighbors(a).iter().filter(|&&u| {
+        let uu = u as usize;
+        alive[uu] && uu != b
+    });
+    let mut ib = g.neighbors(b).iter().filter(|&&u| {
+        let uu = u as usize;
+        alive[uu] && uu != a
+    });
+    loop {
+        match (ia.next(), ib.next()) {
+            (None, None) => return true,
+            (Some(x), Some(y)) if x == y => continue,
+            _ => return false,
+        }
+    }
+}
+
+/// Group live vertices by `(key, live degree)` and merge every verified
+/// twin pair into the bucket's first unmerged vertex. `rep` is updated in
+/// place; merged vertices are flagged in `in_class`.
+fn merge_twin_buckets(
+    g: &SymGraph,
+    alive: &[bool],
+    keys: &mut [(u64, u32, u32)],
+    rep: &mut [i32],
+    in_class: &mut [bool],
+) -> usize {
+    keys.sort_unstable();
+    let mut merged = 0usize;
+    let mut i = 0;
+    while i < keys.len() {
+        let mut j = i + 1;
+        while j < keys.len() && keys[j].0 == keys[i].0 && keys[j].1 == keys[i].1 {
+            j += 1;
+        }
+        for a_idx in i..j {
+            let a = keys[a_idx].2 as usize;
+            if rep[a] != a as i32 {
+                continue; // already absorbed into an earlier class
+            }
+            for b_idx in a_idx + 1..j {
+                let b = keys[b_idx].2 as usize;
+                if rep[b] == b as i32 && twin_eq(g, alive, a, b) {
+                    rep[b] = a as i32;
+                    in_class[a] = true;
+                    in_class[b] = true;
+                    merged += 1;
+                }
+            }
+        }
+        i = j;
+    }
+    merged
+}
+
+/// Apply the configured reduction rules to `g` and return the plan —
+/// [`try_reduce`] with a trivial identity plan (kernel = a plain copy of
+/// `g`) when no rule fired. The plan is deterministic in `g` and `cfg`
+/// (thread count included — the parallel fingerprint scan is a pure
+/// per-vertex function).
+pub fn reduce(g: &SymGraph, cfg: &ReduceConfig) -> ReductionPlan {
+    try_reduce(g, cfg).unwrap_or_else(|| trivial_plan(g))
+}
+
+/// The identity plan of an irreducible graph: the kernel *is* the graph
+/// (one bulk copy, no row relabeling), all weights 1, identity member
+/// lists.
+fn trivial_plan(g: &SymGraph) -> ReductionPlan {
+    let n = g.n;
+    ReductionPlan {
+        n,
+        prefix: Vec::new(),
+        tail: Vec::new(),
+        kernel: g.clone(),
+        old_of_new: (0..n as i32).collect(),
+        weights: vec![1; n],
+        members: (0..n as i32).collect(),
+        member_ptr: (0..=n).collect(),
+        stats: ReduceStats::default(),
+    }
+}
+
+/// [`reduce`], except a graph no rule touches returns `None` **before**
+/// any kernel assembly — the hot path for irreducible inputs (most
+/// meshes) skips the kernel copy, relabeling, and per-row sorts
+/// entirely, and callers keep their original (possibly borrowed) graph.
+pub fn try_reduce(g: &SymGraph, cfg: &ReduceConfig) -> Option<ReductionPlan> {
+    let n = g.n;
+    let mut alive = vec![true; n];
+    let mut deg: Vec<usize> = (0..n).map(|v| g.degree(v)).collect();
+    let mut prefix: Vec<i32> = Vec::new();
+    let mut tail_raw: Vec<(usize, usize)> = Vec::new(); // (degree at extraction, v)
+    let thresh = dense_threshold(n, cfg.dense_alpha);
+
+    // Leaves and dense rows alternate to a fixpoint: peeling never
+    // creates dense rows, but extracting a dense row can expose pendants.
+    // Degrees only ever decrease, so no vertex *becomes* dense after the
+    // first full dense sweep — the loop runs at most twice (leaves,
+    // dense, newly-exposed leaves, no-op dense, break): O(n + e) total.
+    loop {
+        if cfg.leaves {
+            let mut queue: VecDeque<usize> =
+                (0..n).filter(|&v| alive[v] && deg[v] <= 1).collect();
+            while let Some(v) = queue.pop_front() {
+                if !alive[v] || deg[v] > 1 {
+                    continue;
+                }
+                alive[v] = false;
+                prefix.push(v as i32);
+                for &u in g.neighbors(v) {
+                    let uu = u as usize;
+                    if alive[uu] {
+                        deg[uu] -= 1;
+                        if deg[uu] <= 1 {
+                            queue.push_back(uu);
+                        }
+                    }
+                }
+            }
+        }
+        let mut extracted = false;
+        if cfg.dense {
+            for v in 0..n {
+                if alive[v] && deg[v] > thresh {
+                    alive[v] = false;
+                    tail_raw.push((deg[v], v));
+                    for &u in g.neighbors(v) {
+                        let uu = u as usize;
+                        if alive[uu] {
+                            deg[uu] -= 1;
+                        }
+                    }
+                    extracted = true;
+                }
+            }
+        }
+        if !extracted {
+            break;
+        }
+    }
+    // Least-dense postponed row first: it re-enters the (conceptual)
+    // elimination closest to where plain AMD would have picked it.
+    tail_raw.sort_unstable();
+    let tail: Vec<i32> = tail_raw.iter().map(|&(_, v)| v as i32).collect();
+    let dense_count = tail.len();
+
+    // Twin compression on the survivors.
+    let mut rep: Vec<i32> = (0..n as i32).collect();
+    let mut twins_merged = 0usize;
+    if cfg.twins && n > 0 {
+        let (hopen, ldeg) = fingerprints(g, &alive, cfg.threads);
+        let mut in_class = vec![false; n];
+        // Pass 1 — true twins: closed-neighborhood hash (`h(N(v)) + h(v)`
+        // is invariant across members of an adjacent twin class).
+        let mut keys: Vec<(u64, u32, u32)> = (0..n)
+            .filter(|&v| alive[v])
+            .map(|v| (hopen[v].wrapping_add(splitmix64(v as u64)), ldeg[v], v as u32))
+            .collect();
+        twins_merged += merge_twin_buckets(g, &alive, &mut keys, &mut rep, &mut in_class);
+        // Pass 2 — false twins among vertices no closed class claimed:
+        // open-neighborhood hash. (A vertex cannot have both a true and
+        // a false twin — the definitions contradict — so skipping
+        // `in_class` members loses nothing.)
+        keys.clear();
+        keys.extend(
+            (0..n)
+                .filter(|&v| alive[v] && !in_class[v])
+                .map(|v| (hopen[v], ldeg[v], v as u32)),
+        );
+        twins_merged += merge_twin_buckets(g, &alive, &mut keys, &mut rep, &mut in_class);
+    }
+
+    if prefix.is_empty() && dense_count == 0 && twins_merged == 0 {
+        return None; // nothing fired — skip kernel assembly entirely
+    }
+
+    // Kernel assembly: representatives keep their relative order, so the
+    // sorted-neighbor invariant needs only a per-row sort after class
+    // relabeling.
+    let mut new_of_old = vec![-1i32; n];
+    let mut old_of_new: Vec<i32> = Vec::new();
+    for v in 0..n {
+        if alive[v] && rep[v] == v as i32 {
+            new_of_old[v] = old_of_new.len() as i32;
+            old_of_new.push(v as i32);
+        }
+    }
+    let kn = old_of_new.len();
+    let mut weights = vec![0i32; kn];
+    let mut members: Vec<i32> = Vec::with_capacity(n - prefix.len() - dense_count);
+    let mut member_ptr = vec![0usize; kn + 1];
+    for v in 0..n {
+        if alive[v] {
+            member_ptr[new_of_old[rep[v] as usize] as usize + 1] += 1;
+        }
+    }
+    for k in 0..kn {
+        member_ptr[k + 1] += member_ptr[k];
+    }
+    {
+        let mut cursor = member_ptr.clone();
+        members.resize(*member_ptr.last().unwrap(), 0);
+        // Ascending v ⇒ each class lists its members ascending, and the
+        // representative (the class minimum) lands first.
+        for v in 0..n {
+            if alive[v] {
+                let k = new_of_old[rep[v] as usize] as usize;
+                members[cursor[k]] = v as i32;
+                cursor[k] += 1;
+                weights[k] += 1;
+            }
+        }
+    }
+
+    let mut kernel = SymGraph {
+        n: kn,
+        rowptr: Vec::with_capacity(kn + 1),
+        colind: Vec::new(),
+    };
+    kernel.rowptr.push(0);
+    let mut row: Vec<i32> = Vec::new();
+    for &ov in &old_of_new {
+        row.clear();
+        for &u in g.neighbors(ov as usize) {
+            let uu = u as usize;
+            if alive[uu] {
+                let r = new_of_old[rep[uu] as usize];
+                if r != new_of_old[ov as usize] {
+                    row.push(r);
+                }
+            }
+        }
+        // Class relabeling can both reorder and duplicate (several
+        // members of one neighboring class).
+        row.sort_unstable();
+        row.dedup();
+        kernel.colind.extend_from_slice(&row);
+        kernel.rowptr.push(kernel.colind.len());
+    }
+    debug_assert!(kernel.validate().is_ok(), "kernel lost an invariant");
+
+    let stats = ReduceStats {
+        leaves: prefix.len(),
+        dense: dense_count,
+        twins_merged,
+        edges_removed: g.nedges() - kernel.nedges(),
+    };
+    debug_assert_eq!(prefix.len() + dense_count + members.len(), n);
+    Some(ReductionPlan {
+        n,
+        prefix,
+        tail,
+        kernel,
+        old_of_new,
+        weights,
+        members,
+        member_ptr,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::perm::is_valid_perm;
+    use crate::matgen::{mesh2d, twin_heavy, with_dense_rows};
+
+    fn full_cfg() -> ReduceConfig {
+        ReduceConfig::default()
+    }
+
+    /// Expansion with the identity kernel permutation must always be a
+    /// valid permutation of the original vertex space.
+    fn check_plan(g: &SymGraph, plan: &ReductionPlan) {
+        assert_eq!(plan.n, g.n);
+        plan.kernel.validate().unwrap();
+        assert_eq!(plan.weights.len(), plan.kernel.n);
+        assert_eq!(plan.old_of_new.len(), plan.kernel.n);
+        let total: i32 = plan.weights.iter().sum();
+        assert_eq!(
+            plan.prefix.len() + plan.tail.len() + total as usize,
+            g.n,
+            "every vertex is prefix, tail, or a class member"
+        );
+        let id: Vec<i32> = (0..plan.kernel.n as i32).collect();
+        let perm = plan.expand(&id);
+        assert!(is_valid_perm(&perm), "expanded identity perm invalid");
+        // Representative-first, ascending members per class.
+        for k in 0..plan.kernel.n {
+            let m = &plan.members[plan.member_ptr[k]..plan.member_ptr[k + 1]];
+            assert_eq!(m[0], plan.old_of_new[k], "representative must lead");
+            for w in m.windows(2) {
+                assert!(w[0] < w[1], "class members must ascend");
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_is_irreducible() {
+        let g = mesh2d(12, 12);
+        assert!(
+            try_reduce(&g, &full_cfg()).is_none(),
+            "a 12x12 mesh has no leaves/twins/dense rows — no plan to assemble"
+        );
+        let plan = reduce(&g, &full_cfg());
+        assert!(plan.is_trivial());
+        assert_eq!(plan.kernel, g, "trivial kernel is the graph itself");
+        assert_eq!(plan.stats.edges_removed, 0);
+        check_plan(&g, &plan);
+    }
+
+    #[test]
+    fn pendant_chain_peels_completely() {
+        // A pure path: stripping vertex 0 exposes 1, which exposes 2, ...
+        let edges: Vec<(usize, usize)> = (0..9).map(|i| (i, i + 1)).collect();
+        let g = SymGraph::from_edges(10, &edges);
+        let plan = reduce(&g, &full_cfg());
+        assert_eq!(plan.stats.leaves, 10, "the whole chain unravels");
+        assert_eq!(plan.kernel.n, 0);
+        assert!(is_valid_perm(&plan.expand(&[])));
+        check_plan(&g, &plan);
+    }
+
+    #[test]
+    fn isolated_vertices_land_in_the_prefix() {
+        let g = SymGraph::from_edges(5, &[(1, 3)]);
+        let plan = reduce(&g, &full_cfg());
+        assert_eq!(plan.stats.leaves, 5, "degree-0 and the lone edge all peel");
+        assert_eq!(plan.kernel.n, 0);
+    }
+
+    #[test]
+    fn star_center_survives_until_its_leaves_are_gone() {
+        // A star: every leaf peels, then the center is isolated and peels
+        // too — the prefix must list the center last.
+        let edges: Vec<(usize, usize)> = (1..8).map(|i| (0, i)).collect();
+        let g = SymGraph::from_edges(8, &edges);
+        let plan = reduce(&g, &ReduceConfig { dense: false, ..full_cfg() });
+        assert_eq!(plan.stats.leaves, 8);
+        assert_eq!(*plan.prefix.last().unwrap(), 0, "center peels last");
+    }
+
+    #[test]
+    fn true_twins_merge_into_weighted_representatives() {
+        // K4 blown up from an edge: {0,1} and {2,3} are adjacent twin
+        // pairs... build explicitly: class A = {0,1} clique, class B =
+        // {2,3} clique, complete bipartite between them.
+        let g = SymGraph::from_edges(
+            4,
+            &[(0, 1), (2, 3), (0, 2), (0, 3), (1, 2), (1, 3)],
+        );
+        let plan = reduce(&g, &ReduceConfig { leaves: false, dense: false, ..full_cfg() });
+        // K4: all four vertices are pairwise twins — one class of 4.
+        assert_eq!(plan.kernel.n, 1);
+        assert_eq!(plan.weights, vec![4]);
+        assert_eq!(plan.stats.twins_merged, 3);
+        check_plan(&g, &plan);
+    }
+
+    #[test]
+    fn false_twins_merge_without_adjacency() {
+        // 0 and 2 share N = {1, 3} but are not adjacent (a 4-cycle):
+        // both diagonal pairs are false twins.
+        let g = SymGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let plan = reduce(&g, &ReduceConfig { leaves: false, dense: false, ..full_cfg() });
+        assert_eq!(plan.kernel.n, 2);
+        assert_eq!(plan.weights, vec![2, 2]);
+        assert_eq!(plan.old_of_new, vec![0, 1], "class minima represent");
+        check_plan(&g, &plan);
+    }
+
+    #[test]
+    fn twin_heavy_compresses_to_the_base_graph() {
+        let g = twin_heavy(240, 6);
+        let plan = reduce(&g, &ReduceConfig { dense: false, ..full_cfg() });
+        assert_eq!(plan.kernel.n, 40, "each class of 6 folds to one vertex");
+        assert!(plan.weights.iter().all(|&w| w == 6));
+        check_plan(&g, &plan);
+    }
+
+    #[test]
+    fn dense_rows_are_postponed_least_dense_first() {
+        let g = with_dense_rows(400, 200, 2);
+        let plan = reduce(&g, &ReduceConfig { dense_alpha: 1.0, ..full_cfg() });
+        assert_eq!(plan.stats.dense, 2, "both injected rows exceed 1.0·√n");
+        assert!(plan.tail.iter().all(|&v| v as usize >= 400));
+        check_plan(&g, &plan);
+        // Expansion puts the tail at the very end.
+        let id: Vec<i32> = (0..plan.kernel.n as i32).collect();
+        let perm = plan.expand(&id);
+        for (i, &t) in plan.tail.iter().enumerate() {
+            assert_eq!(perm[g.n - plan.tail.len() + i], t);
+        }
+    }
+
+    #[test]
+    fn dense_extraction_exposes_new_leaves() {
+        // A hub joined to every path vertex: remove the hub (dense) and
+        // the path's ends become pendant again.
+        let mut edges: Vec<(usize, usize)> = (0..20).map(|i| (i, i + 1)).collect();
+        for v in 0..21 {
+            edges.push((21, v));
+        }
+        let g = SymGraph::from_edges(22, &edges);
+        let plan = reduce(&g, &ReduceConfig { dense_alpha: 0.9, ..full_cfg() });
+        assert_eq!(plan.stats.dense, 1, "only the hub is dense");
+        assert_eq!(
+            plan.stats.leaves, 21,
+            "the path unravels once the hub is gone"
+        );
+        assert_eq!(plan.kernel.n, 0);
+    }
+
+    #[test]
+    fn merge_parent_forms_the_class_forest() {
+        let g = twin_heavy(30, 3);
+        let plan = reduce(&g, &ReduceConfig { dense: false, ..full_cfg() });
+        let parent = plan.merge_parent();
+        let mut absorbed = 0;
+        for v in 0..g.n {
+            if parent[v] >= 0 {
+                absorbed += 1;
+                assert!(parent[v] < v as i32, "members point at the class minimum");
+                assert_eq!(parent[parent[v] as usize], -1, "forest depth 1");
+            }
+        }
+        assert_eq!(absorbed, plan.stats.twins_merged);
+    }
+
+    #[test]
+    fn disabled_config_is_a_noop() {
+        let g = twin_heavy(60, 3);
+        assert!(try_reduce(&g, &ReduceConfig::disabled()).is_none());
+        let plan = reduce(&g, &ReduceConfig::disabled());
+        assert!(plan.is_trivial());
+        assert_eq!(plan.kernel, g);
+        assert_eq!(plan.reduced_away(), 0);
+        check_plan(&g, &plan);
+    }
+
+    #[test]
+    fn parallel_fingerprints_match_serial() {
+        let g = twin_heavy(5000, 5); // above PAR_FINGERPRINT_MIN
+        let alive = vec![true; g.n];
+        let (h1, d1) = fingerprints(&g, &alive, 1);
+        let (h4, d4) = fingerprints(&g, &alive, 4);
+        assert_eq!(h1, h4, "fingerprints must not depend on thread count");
+        assert_eq!(d1, d4);
+    }
+
+    #[test]
+    fn reduction_is_deterministic() {
+        let g = twin_heavy(300, 4);
+        let a = reduce(&g, &full_cfg());
+        let b = reduce(&g, &full_cfg());
+        assert_eq!(a.prefix, b.prefix);
+        assert_eq!(a.tail, b.tail);
+        assert_eq!(a.kernel, b.kernel);
+        assert_eq!(a.weights, b.weights);
+        assert_eq!(a.members, b.members);
+    }
+
+    #[test]
+    fn empty_graph_reduces_to_nothing() {
+        let g = SymGraph::from_edges(0, &[]);
+        let plan = reduce(&g, &full_cfg());
+        assert!(plan.is_trivial());
+        assert_eq!(plan.expand(&[]), Vec::<i32>::new());
+    }
+}

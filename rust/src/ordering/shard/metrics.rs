@@ -39,6 +39,19 @@ pub struct ShardMetrics {
     /// Most shards observed busy at the same time — the concurrency
     /// witness the acceptance test asserts on.
     pub busy_peak: usize,
+    /// Jobs that ran on a reduced kernel (at least one reduction rule
+    /// fired) instead of the original component graph.
+    pub reduced_jobs: u64,
+    /// Vertices peeled into permutation prefixes by leaf stripping.
+    pub leaves_stripped: u64,
+    /// Rows postponed to permutation tails by the dense rule.
+    pub dense_postponed: u64,
+    /// Vertices folded into twin-class representatives.
+    pub twins_merged: u64,
+    /// Undirected edges removed from the ordering problems.
+    pub reduce_edges_removed: u64,
+    /// Wall-clock seconds spent inside the reduction layer.
+    pub reduce_secs: f64,
     /// Per-shard job/busy table, indexed by shard id (0 = wide shard).
     pub per_shard: Vec<ShardStat>,
     /// log2-bucketed component sizes ([`SIZE_HIST_BUCKETS`] buckets).
@@ -52,6 +65,15 @@ impl ShardMetrics {
             "shards: requests={} decomposed={} components={} busy_peak={}\n",
             self.requests, self.decomposed, self.components, self.busy_peak
         );
+        s.push_str(&format!(
+            "  reduce: jobs={} leaves={} dense={} twins={} edges=-{} time={:.4}s\n",
+            self.reduced_jobs,
+            self.leaves_stripped,
+            self.dense_postponed,
+            self.twins_merged,
+            self.reduce_edges_removed,
+            self.reduce_secs
+        ));
         for (i, st) in self.per_shard.iter().enumerate() {
             s.push_str(&format!(
                 "  shard {i}: threads={} jobs={} busy={:.4}s\n",
@@ -78,6 +100,12 @@ pub(crate) struct EngineCounters {
     pub(crate) requests: AtomicU64,
     pub(crate) decomposed: AtomicU64,
     pub(crate) components: AtomicU64,
+    pub(crate) reduced_jobs: AtomicU64,
+    pub(crate) leaves_stripped: AtomicU64,
+    pub(crate) dense_postponed: AtomicU64,
+    pub(crate) twins_merged: AtomicU64,
+    pub(crate) reduce_edges_removed: AtomicU64,
+    pub(crate) reduce_nanos: AtomicU64,
     busy_now: AtomicUsize,
     busy_peak: AtomicUsize,
     size_hist: [AtomicU64; SIZE_HIST_BUCKETS],
@@ -89,10 +117,26 @@ impl EngineCounters {
             requests: AtomicU64::new(0),
             decomposed: AtomicU64::new(0),
             components: AtomicU64::new(0),
+            reduced_jobs: AtomicU64::new(0),
+            leaves_stripped: AtomicU64::new(0),
+            dense_postponed: AtomicU64::new(0),
+            twins_merged: AtomicU64::new(0),
+            reduce_edges_removed: AtomicU64::new(0),
+            reduce_nanos: AtomicU64::new(0),
             busy_now: AtomicUsize::new(0),
             busy_peak: AtomicUsize::new(0),
             size_hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
+    }
+
+    /// Fold one non-trivial reduction into the counters.
+    pub(crate) fn note_reduction(&self, stats: &crate::ordering::reduce::ReduceStats) {
+        self.reduced_jobs.fetch_add(1, Relaxed);
+        self.leaves_stripped.fetch_add(stats.leaves as u64, Relaxed);
+        self.dense_postponed.fetch_add(stats.dense as u64, Relaxed);
+        self.twins_merged.fetch_add(stats.twins_merged as u64, Relaxed);
+        self.reduce_edges_removed
+            .fetch_add(stats.edges_removed as u64, Relaxed);
     }
 
     /// Record one dispatched component of `n` vertices in the histogram.
@@ -118,6 +162,12 @@ impl EngineCounters {
             decomposed: self.decomposed.load(Relaxed),
             components: self.components.load(Relaxed),
             busy_peak: self.busy_peak.load(Relaxed),
+            reduced_jobs: self.reduced_jobs.load(Relaxed),
+            leaves_stripped: self.leaves_stripped.load(Relaxed),
+            dense_postponed: self.dense_postponed.load(Relaxed),
+            twins_merged: self.twins_merged.load(Relaxed),
+            reduce_edges_removed: self.reduce_edges_removed.load(Relaxed),
+            reduce_secs: self.reduce_nanos.load(Relaxed) as f64 / 1e9,
             per_shard,
             size_hist: self.size_hist.iter().map(|b| b.load(Relaxed)).collect(),
         }
@@ -171,5 +221,30 @@ mod tests {
         assert!(r.contains("requests=3"));
         assert!(r.contains("shard 0: threads=4 jobs=3"));
         assert!(r.contains("2^3:1"));
+        assert!(r.contains("reduce: jobs=0"), "reduce line always present");
+    }
+
+    #[test]
+    fn reduction_counters_accumulate_per_rule() {
+        let c = EngineCounters::new();
+        c.note_reduction(&crate::ordering::reduce::ReduceStats {
+            leaves: 5,
+            dense: 2,
+            twins_merged: 9,
+            edges_removed: 40,
+        });
+        c.note_reduction(&crate::ordering::reduce::ReduceStats {
+            leaves: 1,
+            dense: 0,
+            twins_merged: 3,
+            edges_removed: 6,
+        });
+        let m = c.snapshot(Vec::new());
+        assert_eq!(m.reduced_jobs, 2);
+        assert_eq!(m.leaves_stripped, 6);
+        assert_eq!(m.dense_postponed, 2);
+        assert_eq!(m.twins_merged, 12);
+        assert_eq!(m.reduce_edges_removed, 46);
+        assert!(m.report().contains("reduce: jobs=2 leaves=6 dense=2 twins=12"));
     }
 }

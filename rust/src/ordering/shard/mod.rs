@@ -18,8 +18,12 @@
 //!           │               │
 //!      connected        k components → split_components
 //!           │               │
-//!      router::pick     router::plan      (largest → wide shard,
-//!           │               │              rest → least finish time)
+//!        reduce          reduce ×k        (ordering/reduce: twins, dense
+//!           │               │              rows, leaves — parallel
+//!           │               │              across components)
+//!      router::pick     router::plan      (heaviest *reduced* kernel →
+//!           │               │              wide shard, rest → least
+//!           │               │              estimated finish time)
 //!           ▼               ▼
 //!   ┌─ shard 0 (wide) ─┐ ┌─ shard 1.. (narrow) ─┐
 //!   │ queue → dispatch │ │ queue → dispatch     │   each shard: its own
@@ -41,6 +45,21 @@
 //! gets the largest component of every decomposed request), the rest
 //! are *narrow*. With N shards, N orderings really do run concurrently —
 //! components of one request, or whole requests from concurrent callers.
+//!
+//! ## Pre-ordering reduction
+//!
+//! Before routing, every component (and every connected request) passes
+//! through the [`reduce`](crate::ordering::reduce) layer — on by default,
+//! tunable via [`ShardEngine::set_reduce`]. A non-trivial
+//! [`ReductionPlan`] turns the job into a **reduced job**: the dispatcher
+//! orders the twin-compressed kernel with seed supervariables
+//! (`ParAmd::order_into_cancellable_weighted`) and expands the kernel
+//! permutation back (prefix ++ twin classes ++ dense tail) before
+//! stitching. A trivial plan keeps the original path — including the
+//! zero-copy borrow for connected requests — so irreducible graphs are
+//! bit-identical to the pre-reduction engine. The router sees
+//! post-reduction [`router::work_estimate`] units, so a component that
+//! compresses 10× no longer hogs the wide shard.
 //!
 //! ## Jobs and cancellation
 //!
@@ -72,11 +91,12 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use crate::graph::components::{connected_components, split_components};
+use crate::graph::components::{connected_components, split_components, Component};
 use crate::graph::csr::SymGraph;
 use crate::ordering::paramd::arena::ArenaPool;
 use crate::ordering::paramd::runtime::{OrderingRuntime, QueuePolicy};
 use crate::ordering::paramd::ParAmd;
+use crate::ordering::reduce::{try_reduce, ReduceConfig, ReductionPlan};
 use crate::util::panic_message;
 use crate::util::timer::Timer;
 
@@ -134,6 +154,9 @@ pub struct ShardReply {
     pub set_sizes: Vec<u32>,
     /// Components the request split into (1 = connected fast path).
     pub components: usize,
+    /// Vertices the reduction layer removed from the ordering problems
+    /// (leaf prefixes + dense tails + merged twins, summed).
+    pub reduced: usize,
 }
 
 /// Where a job's graph lives: component jobs own their extracted
@@ -175,11 +198,18 @@ impl CancelRef {
     }
 }
 
+/// What a job orders: the original graph, or a reduced kernel plus the
+/// plan that expands its permutation back to the component's vertices.
+enum JobPayload {
+    Direct(GraphRef),
+    Reduced(Box<ReductionPlan>),
+}
+
 /// One queued component (or whole-graph) ordering job.
 struct ShardJob {
-    graph: GraphRef,
-    /// Vertex count — the queue's SmallestFirst key and the router's
-    /// load unit.
+    payload: JobPayload,
+    /// Post-reduction work units ([`router::work_estimate`]) — the
+    /// queue's SmallestFirst key and the router's load unit.
     weight: usize,
     cfg: ParAmd,
     cancel: CancelRef,
@@ -326,7 +356,8 @@ struct Shard {
     rt: OrderingRuntime,
     arenas: ArenaPool,
     queue: JobQueue,
-    /// Pending + active vertex weight (the router's load signal).
+    /// Pending + active work units — post-reduction
+    /// [`router::work_estimate`] — the router's load signal.
     load: AtomicU64,
     jobs_done: AtomicU64,
     busy_nanos: AtomicU64,
@@ -343,20 +374,51 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters) {
                 // The pooled warm storage; the guard releases on every
                 // exit path, including unwind.
                 let mut arena = shard.arenas.checkout();
-                let (g, cancel) = (job.graph.get(), job.cancel.get());
+                let cancel = job.cancel.get();
                 // Busy time starts after the arena is in hand, so it
                 // measures ordering work, not checkout waits.
                 let t = Timer::new();
-                let out = job
-                    .cfg
-                    .order_into_cancellable(&shard.rt, &mut arena, g, cancel)
-                    .map(|r| CompDone {
-                        perm: r.perm.clone(),
-                        rounds: r.stats.rounds,
-                        gc_count: r.stats.gc_count,
-                        modeled_time: r.stats.modeled_time,
-                        set_sizes: r.stats.set_sizes.clone(),
-                    });
+                let out = match &job.payload {
+                    JobPayload::Direct(graph) => job
+                        .cfg
+                        .order_into_cancellable(&shard.rt, &mut arena, graph.get(), cancel)
+                        .map(|r| CompDone {
+                            perm: r.perm.clone(),
+                            rounds: r.stats.rounds,
+                            gc_count: r.stats.gc_count,
+                            modeled_time: r.stats.modeled_time,
+                            set_sizes: r.stats.set_sizes.clone(),
+                        }),
+                    JobPayload::Reduced(plan) => job
+                        .cfg
+                        .order_into_cancellable_weighted(
+                            &shard.rt,
+                            &mut arena,
+                            &plan.kernel,
+                            Some(&plan.weights),
+                            cancel,
+                        )
+                        .map(|r| {
+                            // The prefix/tail vertices never enter a
+                            // kernel round; report them as one extra
+                            // "reduction round" so the merged log still
+                            // accounts for every pre-ordered vertex.
+                            let pre = plan.pre_ordered();
+                            let mut set_sizes =
+                                Vec::with_capacity(r.stats.set_sizes.len() + 1);
+                            if pre > 0 {
+                                set_sizes.push(pre as u32);
+                            }
+                            set_sizes.extend_from_slice(&r.stats.set_sizes);
+                            CompDone {
+                                perm: plan.expand(&r.perm),
+                                rounds: r.stats.rounds + u64::from(pre > 0),
+                                gc_count: r.stats.gc_count,
+                                modeled_time: r.stats.modeled_time,
+                                set_sizes,
+                            }
+                        }),
+                };
                 shard.busy_nanos.fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
                 out
             }));
@@ -383,6 +445,8 @@ pub struct ShardEngine {
     counters: Arc<EngineCounters>,
     dispatchers: Vec<JoinHandle<()>>,
     spec: ShardSpec,
+    /// Pre-ordering reduction config (on by default; see [`Self::set_reduce`]).
+    reduce_cfg: Mutex<ReduceConfig>,
 }
 
 impl ShardEngine {
@@ -420,12 +484,28 @@ impl ShardEngine {
             counters,
             dispatchers,
             spec,
+            // Fingerprint scans parallelize over the wide pool's width.
+            reduce_cfg: Mutex::new(ReduceConfig {
+                threads: spec.wide_threads,
+                ..ReduceConfig::default()
+            }),
         }
     }
 
     /// The spec this engine was built with.
     pub fn spec(&self) -> ShardSpec {
         self.spec
+    }
+
+    /// Replace the pre-ordering reduction config (pass
+    /// [`ReduceConfig::disabled`] to switch the layer off).
+    pub fn set_reduce(&self, cfg: ReduceConfig) {
+        *self.reduce_cfg.lock().unwrap() = cfg;
+    }
+
+    /// The reduction config currently in force.
+    pub fn reduce_config(&self) -> ReduceConfig {
+        *self.reduce_cfg.lock().unwrap()
     }
 
     /// Number of shards.
@@ -526,14 +606,17 @@ impl ShardEngine {
             self.counters.note_component(s);
         }
         let parts = split_components(g, &comps);
-        let assign = router::plan(&comps.sizes, &self.loads(), &self.thread_counts());
-        let batch = Batch::new(parts.len());
-        let mut old_maps: Vec<Vec<i32>> = Vec::with_capacity(parts.len());
-        for (index, part) in parts.into_iter().enumerate() {
-            old_maps.push(part.old_of_new);
+        // Reduce every component (in parallel across components) before
+        // routing, so placement works on post-reduction sizes.
+        let (payloads, works, reduced) = self.reduce_components(parts);
+        let assign = router::plan(&works, &self.loads(), &self.thread_counts());
+        let batch = Batch::new(payloads.len());
+        let mut old_maps: Vec<Vec<i32>> = Vec::with_capacity(payloads.len());
+        for (index, (payload, old_of_new)) in payloads.into_iter().enumerate() {
+            old_maps.push(old_of_new);
             let job = ShardJob {
-                graph: GraphRef::Owned(part.graph),
-                weight: comps.sizes[index],
+                payload,
+                weight: works[index] as usize,
                 cfg,
                 cancel: CancelRef(cancel as *const AtomicBool),
                 batch: Arc::clone(&batch),
@@ -575,12 +658,89 @@ impl ShardEngine {
             modeled_time: stitched.modeled_time,
             set_sizes: stitched.set_sizes,
             components: results.len(),
+            reduced,
         })
     }
 
-    /// Connected (or empty) fast path: one borrowed job, no subgraph
-    /// extraction, placed on the least-loaded shard so concurrent
-    /// requests fan out across shards.
+    /// Run the reduction layer over extracted components — chunked over
+    /// scoped threads when there is more than one component — and turn
+    /// each into a job payload plus its post-reduction work estimate.
+    /// Returns `(payload, old_of_new)` pairs in component order, the
+    /// router's work array, and the total vertex count reduced away.
+    #[allow(clippy::type_complexity)]
+    fn reduce_components(
+        &self,
+        parts: Vec<Component>,
+    ) -> (Vec<(JobPayload, Vec<i32>)>, Vec<u64>, usize) {
+        let rcfg = self.reduce_config();
+        let t = Timer::new();
+        let k = parts.len();
+        let mut plans: Vec<Option<ReductionPlan>> = Vec::new();
+        plans.resize_with(k, || None);
+        if rcfg.is_enabled() {
+            let workers = rcfg.threads.max(1).min(k);
+            if workers <= 1 || k <= 1 {
+                for (slot, part) in plans.iter_mut().zip(&parts) {
+                    *slot = try_reduce(&part.graph, &rcfg);
+                }
+            } else {
+                // Contiguous chunks of the component list per scoped
+                // worker (fingerprint scans stay single-threaded inside —
+                // no nested scopes). Per-component reduction is a pure
+                // function, so the outcome is worker-count independent.
+                let inner = ReduceConfig { threads: 1, ..rcfg };
+                std::thread::scope(|s| {
+                    let mut rest = plans.as_mut_slice();
+                    for tid in 0..workers {
+                        let (lo, hi) = crate::util::chunk_range(k, workers, tid);
+                        let (chunk, tail) = rest.split_at_mut(hi - lo);
+                        rest = tail;
+                        let (parts, inner) = (&parts, &inner);
+                        s.spawn(move || {
+                            for (slot, part) in chunk.iter_mut().zip(&parts[lo..hi]) {
+                                *slot = try_reduce(&part.graph, inner);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+        self.counters
+            .reduce_nanos
+            .fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
+
+        let mut payloads: Vec<(JobPayload, Vec<i32>)> = Vec::with_capacity(k);
+        let mut works: Vec<u64> = Vec::with_capacity(k);
+        let mut reduced = 0usize;
+        for (part, plan) in parts.into_iter().zip(plans) {
+            match plan {
+                // `try_reduce` only returns a plan when a rule fired.
+                Some(plan) => {
+                    self.counters.note_reduction(&plan.stats);
+                    reduced += plan.reduced_away();
+                    works.push(router::work_estimate(
+                        plan.kernel.n,
+                        plan.kernel.nedges(),
+                    ));
+                    payloads.push((JobPayload::Reduced(Box::new(plan)), part.old_of_new));
+                }
+                None => {
+                    works.push(router::work_estimate(part.graph.n, part.graph.nedges()));
+                    payloads.push((
+                        JobPayload::Direct(GraphRef::Owned(part.graph)),
+                        part.old_of_new,
+                    ));
+                }
+            }
+        }
+        (payloads, works, reduced)
+    }
+
+    /// Connected (or empty) fast path: one job, no subgraph extraction,
+    /// placed on the least-finish-time shard so concurrent requests fan
+    /// out across shards. The reduction layer runs first; when no rule
+    /// fires the caller's graph is borrowed without a copy, exactly as
+    /// before, so irreducible inputs keep the zero-copy bit-match path.
     fn order_connected(
         &self,
         g: &SymGraph,
@@ -589,11 +749,36 @@ impl ShardEngine {
     ) -> Option<ShardReply> {
         self.counters.components.fetch_add(1, Relaxed);
         self.counters.note_component(g.n);
-        let s = router::pick_shard(g.n, &self.loads(), &self.thread_counts());
+        let rcfg = self.reduce_config();
+        let mut reduced = 0usize;
+        let payload = if rcfg.is_enabled() && g.n > 0 {
+            let t = Timer::new();
+            let plan = try_reduce(g, &rcfg);
+            self.counters
+                .reduce_nanos
+                .fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
+            match plan {
+                None => JobPayload::Direct(GraphRef::Borrowed(g as *const SymGraph)),
+                Some(plan) => {
+                    self.counters.note_reduction(&plan.stats);
+                    reduced = plan.reduced_away();
+                    JobPayload::Reduced(Box::new(plan))
+                }
+            }
+        } else {
+            JobPayload::Direct(GraphRef::Borrowed(g as *const SymGraph))
+        };
+        let work = match &payload {
+            JobPayload::Reduced(plan) => {
+                router::work_estimate(plan.kernel.n, plan.kernel.nedges())
+            }
+            JobPayload::Direct(_) => router::work_estimate(g.n, g.nedges()),
+        };
+        let s = router::pick_shard(work, &self.loads(), &self.thread_counts());
         let batch = Batch::new(1);
         let job = ShardJob {
-            graph: GraphRef::Borrowed(g as *const SymGraph),
-            weight: g.n,
+            payload,
+            weight: work as usize,
             cfg,
             cancel: CancelRef(cancel as *const AtomicBool),
             batch: Arc::clone(&batch),
@@ -609,6 +794,7 @@ impl ShardEngine {
                 modeled_time: d.modeled_time,
                 set_sizes: d.set_sizes,
                 components: 1,
+                reduced,
             }),
             SlotState::Cancelled => None,
             SlotState::Panicked(why) => panic!("sharded ordering job panicked: {why}"),
@@ -723,6 +909,54 @@ mod tests {
         let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
         let rep = engine.order(&g, ParAmd::new(1));
         assert!(rep.perm.is_empty());
+    }
+
+    #[test]
+    fn reduced_connected_request_expands_to_a_valid_permutation() {
+        // twin_heavy compresses ~6x; the engine must order the kernel
+        // and expand back over every original vertex.
+        let g = crate::matgen::twin_heavy(180, 6);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert!(is_valid_perm(&rep.perm));
+        assert_eq!(rep.perm.len(), g.n);
+        assert_eq!(rep.components, 1);
+        assert_eq!(rep.reduced, 150, "30-vertex kernel ← 180 vertices");
+        let m = engine.metrics();
+        assert_eq!(m.reduced_jobs, 1);
+        assert_eq!(m.twins_merged, 150);
+        assert!(m.reduce_secs >= 0.0);
+    }
+
+    #[test]
+    fn disabling_reduction_restores_the_direct_path() {
+        let g = crate::matgen::twin_heavy(120, 4);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        engine.set_reduce(crate::ordering::reduce::ReduceConfig::disabled());
+        let direct = ParAmd::new(1).order(&g);
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert_eq!(rep.perm, direct.perm, "disabled reduction must bit-match");
+        assert_eq!(rep.reduced, 0);
+        assert_eq!(engine.metrics().reduced_jobs, 0);
+    }
+
+    #[test]
+    fn reduction_survives_decomposition_and_stitching() {
+        // Components with leaf tails: prefixes strip per component and
+        // every vertex still lands in the stitched permutation exactly
+        // once, identically for any shard count.
+        let g = multi_component(6, &[40, 70]);
+        let reference = ShardEngine::new(ShardSpec::uniform(1, 1)).order(&g, ParAmd::new(1));
+        assert!(is_valid_perm(&reference.perm));
+        let engine = ShardEngine::new(ShardSpec::uniform(3, 1));
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert_eq!(rep.perm, reference.perm, "placement must not change the result");
+        assert_eq!(rep.reduced, reference.reduced);
+        let m = engine.metrics();
+        assert!(
+            m.leaves_stripped > 0,
+            "path tails must strip as leaf prefixes"
+        );
     }
 
     #[test]

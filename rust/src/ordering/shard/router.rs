@@ -2,36 +2,50 @@
 //!
 //! Shards are *size-classed*: shard 0 is the **wide** runtime (most
 //! worker threads), the rest are **narrow**. Routing works in estimated
-//! finish time — a shard's queued vertex load divided by its thread
-//! count — so a narrow shard is only preferred when it genuinely
-//! finishes the job earlier:
+//! finish time — a shard's queued **work** divided by its thread count —
+//! so a narrow shard is only preferred when it genuinely finishes the
+//! job earlier. Work is measured in [`work_estimate`] units computed
+//! from the **post-reduction** vertex/edge counts: the reduction layer
+//! can shrink a component 2–10×, and routing by the stale pre-reduction
+//! size would systematically overestimate reduced components and skew
+//! placement (ISSUE 4 satellite fix).
 //!
-//! - [`plan`] places the components of a decomposed request: the largest
-//!   component is pinned to the wide shard (it dominates the critical
-//!   path and deserves the widest pool), the rest follow the classic
-//!   largest-first greedy (LPT) onto the shard with the least estimated
-//!   finish time, ties to the lowest shard id.
-//! - [`pick_shard`] places a whole connected request on the least-loaded
-//!   shard, so *concurrent* requests spread across shards instead of
-//!   serializing behind one runtime.
+//! - [`plan`] places the components of a decomposed request: the
+//!   heaviest component is pinned to the wide shard (it dominates the
+//!   critical path and deserves the widest pool), the rest follow the
+//!   classic heaviest-first greedy (LPT) onto the shard with the least
+//!   estimated finish time, ties to the lowest shard id.
+//! - [`pick_shard`] places a whole connected request on the
+//!   least-finish-time shard, so *concurrent* requests spread across
+//!   shards instead of serializing behind one runtime.
 //!
 //! Both are pure functions of their load snapshot, so placement is
 //! deterministic and unit-testable.
 
-/// Estimated finish time of putting `n` more vertices on a shard.
-fn finish_time(load: f64, n: usize, threads: usize) -> f64 {
-    load + n as f64 / threads.max(1) as f64
+/// Scheduling work units of an ordering job: vertices plus undirected
+/// edges of the graph that will actually be ordered (the reduced kernel
+/// when reduction fired, the original graph otherwise). A linear proxy
+/// for AMD cost that is cheap, monotone in both inputs, and — unlike a
+/// vertex count alone — not fooled by twin-compressed kernels whose
+/// remaining edges dominate.
+pub fn work_estimate(vertices: usize, edges: usize) -> u64 {
+    (vertices + edges) as u64
 }
 
-/// Least-finish-time shard for one connected graph of `n` vertices.
-/// `loads[s]` is shard `s`'s pending+active vertex count.
-pub fn pick_shard(n: usize, loads: &[u64], threads: &[usize]) -> usize {
+/// Estimated finish time of putting `work` more units on a shard.
+fn finish_time(load: f64, work: u64, threads: usize) -> f64 {
+    load + work as f64 / threads.max(1) as f64
+}
+
+/// Least-finish-time shard for one job of `work` units. `loads[s]` is
+/// shard `s`'s pending+active work.
+pub fn pick_shard(work: u64, loads: &[u64], threads: &[usize]) -> usize {
     debug_assert_eq!(loads.len(), threads.len());
     debug_assert!(!threads.is_empty());
     let mut best = 0usize;
     let mut best_cost = f64::INFINITY;
     for s in 0..threads.len() {
-        let cost = finish_time(loads[s] as f64 / threads[s].max(1) as f64, n, threads[s]);
+        let cost = finish_time(loads[s] as f64 / threads[s].max(1) as f64, work, threads[s]);
         if cost < best_cost {
             best_cost = cost;
             best = s;
@@ -40,14 +54,15 @@ pub fn pick_shard(n: usize, loads: &[u64], threads: &[usize]) -> usize {
     best
 }
 
-/// Assign the components of one request to shards. `sizes` must be
-/// ascending (component-id order, as [`crate::graph::connected_components`]
-/// produces); the returned vector maps component id → shard id.
-pub fn plan(sizes: &[usize], loads: &[u64], threads: &[usize]) -> Vec<usize> {
+/// Assign the components of one request to shards. `work[c]` is
+/// component `c`'s post-reduction [`work_estimate`] (any order — the
+/// reduction layer breaks the ascending-size guarantee component ids
+/// have); the returned vector maps component id → shard id.
+pub fn plan(work: &[u64], loads: &[u64], threads: &[usize]) -> Vec<usize> {
     let shards = threads.len();
     debug_assert!(shards > 0);
-    let mut assign = vec![0usize; sizes.len()];
-    if sizes.is_empty() || shards == 1 {
+    let mut assign = vec![0usize; work.len()];
+    if work.is_empty() || shards == 1 {
         return assign;
     }
     let mut load: Vec<f64> = loads
@@ -55,16 +70,18 @@ pub fn plan(sizes: &[usize], loads: &[u64], threads: &[usize]) -> Vec<usize> {
         .zip(threads)
         .map(|(&l, &t)| l as f64 / t.max(1) as f64)
         .collect();
-    // `sizes` ascends, so walking it backwards is the deterministic
-    // largest-first schedule.
-    for (k, c) in (0..sizes.len()).rev().enumerate() {
+    // Heaviest-first (LPT) schedule; ties broken by component id so the
+    // plan is deterministic.
+    let mut order: Vec<usize> = (0..work.len()).collect();
+    order.sort_by_key(|&c| (std::cmp::Reverse(work[c]), c));
+    for (k, &c) in order.iter().enumerate() {
         let s = if k == 0 {
-            0 // size-classing: the largest component gets the wide shard
+            0 // size-classing: the heaviest component gets the wide shard
         } else {
             let mut best = 0usize;
             let mut best_cost = f64::INFINITY;
             for s in 0..shards {
-                let cost = finish_time(load[s], sizes[c], threads[s]);
+                let cost = finish_time(load[s], work[c], threads[s]);
                 if cost < best_cost {
                     best_cost = cost;
                     best = s;
@@ -73,7 +90,7 @@ pub fn plan(sizes: &[usize], loads: &[u64], threads: &[usize]) -> Vec<usize> {
             best
         };
         assign[c] = s;
-        load[s] += sizes[c] as f64 / threads[s].max(1) as f64;
+        load[s] += work[c] as f64 / threads[s].max(1) as f64;
     }
     assign
 }
@@ -83,11 +100,19 @@ mod tests {
     use super::*;
 
     #[test]
-    fn largest_component_lands_on_the_wide_shard() {
-        // Ascending sizes; the last (largest) must go to shard 0 even
-        // though shard 0 is already the most loaded.
+    fn heaviest_component_lands_on_the_wide_shard() {
+        // The heaviest must go to shard 0 even though shard 0 is already
+        // the most loaded.
         let assign = plan(&[10, 20, 1000], &[500, 0, 0], &[8, 2, 2]);
         assert_eq!(assign[2], 0);
+    }
+
+    #[test]
+    fn unsorted_work_still_pins_the_heaviest_to_shard_zero() {
+        // Post-reduction work is not ascending in component id: a large
+        // component can reduce below a small irreducible one.
+        let assign = plan(&[40, 900, 15, 60], &[0, 0], &[4, 2]);
+        assert_eq!(assign[1], 0, "argmax work → wide shard");
     }
 
     #[test]
@@ -121,5 +146,15 @@ mod tests {
     fn pick_shard_accounts_for_width() {
         // Same load, but shard 0 is twice as wide — it finishes earlier.
         assert_eq!(pick_shard(500, &[400, 400], &[8, 4]), 0);
+    }
+
+    #[test]
+    fn work_estimate_counts_vertices_and_edges() {
+        assert_eq!(work_estimate(10, 0), 10);
+        assert_eq!(work_estimate(10, 25), 35);
+        assert!(
+            work_estimate(100, 4000) > work_estimate(300, 600),
+            "edge-heavy kernels outweigh vertex-heavy ones"
+        );
     }
 }

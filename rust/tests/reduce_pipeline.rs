@@ -1,0 +1,217 @@
+//! Reduction-layer integration: reduce→order→expand must always yield a
+//! valid permutation, stay within the fill band of the unreduced path on
+//! the whole matgen suite, and flow end-to-end through the sharded
+//! service with exact per-rule metrics.
+
+use std::sync::atomic::AtomicBool;
+
+use paramd::coordinator::{Method, OrderRequest, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::{self, twin_heavy, with_dense_rows, Scale};
+use paramd::ordering::paramd::arena::ParAmdArena;
+use paramd::ordering::paramd::runtime::OrderingRuntime;
+use paramd::ordering::paramd::ParAmd;
+use paramd::ordering::reduce::{reduce, ReduceConfig};
+use paramd::ordering::Ordering as _;
+use paramd::prop::{arb_graph, forall, Config};
+use paramd::symbolic::fill_in;
+
+/// reduce → weighted kernel ordering → expand, single-threaded
+/// (deterministic).
+fn reduced_order(g: &SymGraph, cfg: &ReduceConfig) -> Vec<i32> {
+    let plan = reduce(g, cfg);
+    let rt = OrderingRuntime::new(1);
+    let mut arena = ParAmdArena::new();
+    let cancel = AtomicBool::new(false);
+    let kernel_perm = if plan.kernel.n == 0 {
+        Vec::new()
+    } else {
+        ParAmd::new(1)
+            .order_into_cancellable_weighted(
+                &rt,
+                &mut arena,
+                &plan.kernel,
+                Some(&plan.weights),
+                &cancel,
+            )
+            .expect("uncancelled run completes")
+            .perm
+            .clone()
+    };
+    plan.expand(&kernel_perm)
+}
+
+#[test]
+fn property_reduce_order_expand_is_always_a_valid_permutation() {
+    forall(
+        Config {
+            cases: 30,
+            seed: 0x2ED0CE,
+        },
+        |rng| arb_graph(rng, 150),
+        |g| {
+            let perm = reduced_order(g, &ReduceConfig::default());
+            if perm.len() != g.n {
+                return Err(format!("perm length {} != n {}", perm.len(), g.n));
+            }
+            if !is_valid_perm(&perm) {
+                return Err("expanded perm is not a permutation".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_reduced_fill_stays_in_band_on_arbitrary_graphs() {
+    forall(
+        Config {
+            cases: 15,
+            seed: 0xF111ED,
+        },
+        |rng| arb_graph(rng, 120),
+        |g| {
+            let reduced = fill_in(g, &reduced_order(g, &ReduceConfig::default())) as f64;
+            let plain = fill_in(g, &ParAmd::new(1).order(g).perm) as f64;
+            // Leaf stripping is exact and twin merging is what AMD does
+            // internally; dense postponement may trade a little fill for
+            // round count. Keep a generous band at toy scale.
+            if reduced > plain * 1.25 + 60.0 {
+                return Err(format!("fill {reduced} vs unreduced {plain}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn matgen_suite_fill_within_1_05x_of_the_unreduced_path() {
+    // The acceptance criterion: over the whole suite, the reduced
+    // pipeline stays within 1.05× of the unreduced fill (plus a tiny
+    // absolute slack for near-zero fills).
+    for e in matgen::suite() {
+        let g = (e.gen)(Scale::Tiny);
+        let reduced = fill_in(&g, &reduced_order(&g, &ReduceConfig::default())) as f64;
+        let plain = fill_in(&g, &ParAmd::new(1).order(&g).perm) as f64;
+        assert!(
+            reduced <= plain * 1.05 + 50.0,
+            "{}: reduced fill {reduced} exceeds 1.05x of unreduced {plain}",
+            e.name
+        );
+    }
+}
+
+#[test]
+fn twin_heavy_service_request_reduces_and_stays_in_the_fill_band() {
+    let g = twin_heavy(480, 8);
+    let req = |pattern: SymGraph| OrderRequest {
+        matrix: None,
+        pattern: Some(pattern),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: true,
+    };
+    let on = Service::new(1);
+    let rep_on = on.order(&req(g.clone()));
+    let off = Service::new(1).with_reduction(false);
+    let rep_off = off.order(&req(g.clone()));
+
+    assert!(is_valid_perm(&rep_on.perm));
+    assert!(is_valid_perm(&rep_off.perm));
+    let (f_on, f_off) = (
+        rep_on.fill_in.unwrap() as f64,
+        rep_off.fill_in.unwrap() as f64,
+    );
+    assert!(
+        f_on <= f_off * 1.05 + 50.0,
+        "reduced fill {f_on} vs unreduced {f_off}"
+    );
+
+    let m = on.metrics();
+    assert_eq!(m.shards.reduced_jobs, 1);
+    assert_eq!(
+        m.shards.twins_merged as usize,
+        480 - 480 / 8,
+        "8-fold compression merges 7/8 of the vertices"
+    );
+    assert_eq!(off.metrics().shards.reduced_jobs, 0);
+}
+
+#[test]
+fn dense_row_service_request_postpones_and_orders_validly() {
+    let g = with_dense_rows(900, 450, 3);
+    let svc = Service::new(1).with_dense_alpha(2.0); // threshold = 2·√903 ≈ 60
+    let rep = svc.order(&OrderRequest {
+        matrix: None,
+        pattern: Some(g.clone()),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    });
+    assert!(is_valid_perm(&rep.perm));
+    // The three injected rows must be ordered last (the dense tail).
+    let tail: Vec<i32> = rep.perm[g.n - 3..].to_vec();
+    let mut tail_sorted = tail.clone();
+    tail_sorted.sort_unstable();
+    assert_eq!(
+        tail_sorted,
+        vec![900, 901, 902],
+        "dense rows must land at the permutation tail"
+    );
+    let m = svc.metrics();
+    assert_eq!(m.shards.dense_postponed, 3);
+}
+
+#[test]
+fn pendant_tails_reduce_through_the_decomposed_path() {
+    // Components with path tails: leaves strip per component, the
+    // stitched reply covers every vertex, and the per-rule counters add
+    // up across component jobs.
+    let g = matgen::multi_component(4, &[60, 90]);
+    let svc = Service::new(1).with_shards(2).with_shard_threads(1);
+    let rep = svc.order(&OrderRequest {
+        matrix: None,
+        pattern: Some(g.clone()),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    });
+    assert!(is_valid_perm(&rep.perm));
+    assert_eq!(rep.perm.len(), g.n);
+    let m = svc.metrics();
+    assert!(
+        m.shards.leaves_stripped > 0,
+        "path tails must strip as leaves"
+    );
+    assert_eq!(m.shards.components, 4);
+}
+
+#[test]
+fn reduced_ordering_is_deterministic_across_repeats() {
+    let g = twin_heavy(300, 5);
+    let svc = Service::new(1);
+    let req = OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    };
+    let first = svc.order(&req);
+    for _ in 0..2 {
+        assert_eq!(svc.order(&req).perm, first.perm, "warm repeats must bit-match");
+    }
+}
