@@ -1,0 +1,167 @@
+//! Result-cache hot-hit vs cold-miss latency on the cache's target
+//! workload: requests sharing identical components under scattered
+//! vertex labels (`matgen::repeated_components_seeded`).
+//!
+//! Three measurements, same request stream:
+//!
+//! - **cold** — the stream on a cache-disabled twin service: full
+//!   split + reduce + route + order + stitch per request (a true
+//!   no-cache baseline — nearby archetypes share kernels after leaf
+//!   stripping, so even a first pass with the cache on is partly hot).
+//! - **hot (components)** — the identical stream with the cache on and
+//!   warmed: whole-graph CSRs differ per scatter seed, but every
+//!   component probe hits, so the shards do zero ParAMD work.
+//! - **hot (request)** — an exact repeat of one connected request,
+//!   served by the whole-request probe before reduction even runs.
+//!
+//! The acceptance bar is hot-hit latency ≥ 10× lower than the cold
+//! miss. Writes the JSON trajectory file `BENCH_cache_hot.json`
+//! (override with `PARAMD_BENCH_CACHE_OUT`; default lands in the
+//! repository root when run via `cargo bench` from `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 10), or
+//! `--smoke` for a quick CI pass.
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::coordinator::{Method, OrderRequest, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::matgen::{mesh2d, repeated_components_seeded};
+use paramd::util::timer::Timer;
+
+fn paramd_req(g: SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 4,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+fn main() {
+    bench_common::banner(
+        "Result cache — hot-hit vs cold-miss ordering latency",
+        "ISSUE 5 perf subsystem; not a paper table",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = bench_common::threads();
+    let reps: usize = if smoke {
+        3
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10)
+    };
+    let (k, n, copies) = if smoke { (4, 500, 3) } else { (6, 4000, 4) };
+    let mesh_side = if smoke { 40 } else { 120 };
+
+    // The exact request stream both laps replay: one component
+    // population, scattered differently per request (pre-built so the
+    // timers measure ordering, not graph generation).
+    let reqs = |seed0: u64| -> Vec<OrderRequest> {
+        (0..reps)
+            .map(|i| paramd_req(repeated_components_seeded(k, n, copies, seed0 + i as u64)))
+            .collect()
+    };
+
+    // Cold: the same workload on a cache-disabled twin service — a true
+    // no-cache baseline (components of nearby archetypes share kernels
+    // after leaf stripping, so a cache-enabled "first pass" would
+    // already be partially hot).
+    let cold_svc = Service::new(2)
+        .with_shards(2)
+        .with_order_threads(threads)
+        .with_scheduler_threads(2)
+        .with_result_cache(0);
+    let cold_reqs = reqs(1);
+    cold_svc.order(&paramd_req(repeated_components_seeded(k, n, copies, 0))); // warm arenas
+    let t = Timer::new();
+    for req in &cold_reqs {
+        let rep = cold_svc.order(req);
+        assert!(!rep.perm.is_empty());
+    }
+    let cold_secs = t.secs() / reps as f64;
+    drop(cold_svc);
+
+    let svc = Service::new(2)
+        .with_shards(2)
+        .with_order_threads(threads)
+        .with_scheduler_threads(2);
+
+    // Hot (components): identical request stream, cache on, entries
+    // filled by the seed-0 warm-up — every component probe hits.
+    svc.order(&paramd_req(repeated_components_seeded(k, n, copies, 0)));
+    let hot_reqs = reqs(1);
+    let t = Timer::new();
+    for req in &hot_reqs {
+        let rep = svc.order(req);
+        assert!(!rep.perm.is_empty());
+    }
+    let hot_comp_secs = t.secs() / reps as f64;
+
+    // Hot (request): an exact connected repeat short-circuits before
+    // reduction even runs.
+    let mesh = mesh2d(mesh_side, mesh_side);
+    svc.order(&paramd_req(mesh.clone()));
+    let t = Timer::new();
+    for _ in 0..reps {
+        let rep = svc.order(&paramd_req(mesh.clone()));
+        assert_eq!(rep.perm.len(), mesh.n);
+    }
+    let hot_req_secs = t.secs() / reps as f64;
+
+    let speedup = cold_secs / hot_comp_secs.max(1e-12);
+    let m = svc.metrics();
+    println!(
+        "{:<18} {:>12} {:>14}",
+        "mode", "latency(s)", "vs cold"
+    );
+    println!("{:<18} {:>12.5} {:>14}", "cold miss", cold_secs, "1.00x");
+    println!(
+        "{:<18} {:>12.5} {:>13.1}x",
+        "hot (components)", hot_comp_secs, speedup
+    );
+    println!(
+        "{:<18} {:>12.5} {:>13.1}x",
+        "hot (request)",
+        hot_req_secs,
+        cold_secs / hot_req_secs.max(1e-12)
+    );
+    println!(
+        "cache: hits={} misses={} rejects={} entries={} bytes={} saved~={:.3}s",
+        m.cache.hits,
+        m.cache.misses,
+        m.cache.verify_rejects,
+        m.cache.entries,
+        m.cache.bytes,
+        m.cache.saved_secs
+    );
+    if speedup < 10.0 {
+        eprintln!("WARNING: hot-hit speedup {speedup:.1}x below the 10x acceptance bar");
+    }
+
+    let out = std::env::var("PARAMD_BENCH_CACHE_OUT")
+        .unwrap_or_else(|_| "../BENCH_cache_hot.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"cache_hot\",\n  \"status\": \"measured\",\n  \
+         \"threads\": {threads},\n  \"reps\": {reps},\n  \
+         \"workload\": \"repeated_components(k={k}, n={n}, copies={copies})\",\n  \
+         \"acceptance\": \"hot-hit latency >= 10x lower than cold miss\",\n  \
+         \"cold_miss_secs\": {cold_secs:.6},\n  \
+         \"hot_component_hit_secs\": {hot_comp_secs:.6},\n  \
+         \"hot_request_hit_secs\": {hot_req_secs:.6},\n  \
+         \"hot_speedup\": {speedup:.3},\n  \
+         \"cache_hits\": {},\n  \"cache_misses\": {},\n  \
+         \"cache_verify_rejects\": {}\n}}\n",
+        m.cache.hits, m.cache.misses, m.cache.verify_rejects
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+}

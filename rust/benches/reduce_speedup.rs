@@ -44,7 +44,10 @@ fn paramd_req(g: SymGraph) -> OrderRequest {
 fn measure(g: &SymGraph, reduce_on: bool, threads: usize, reps: usize) -> (f64, u64) {
     let svc = Service::new(2)
         .with_order_threads(threads)
-        .with_reduction(reduce_on);
+        .with_reduction(reduce_on)
+        // This bench measures the reduction layer, not the result cache:
+        // repeats of one request must genuinely re-order.
+        .with_result_cache(0);
     let req = paramd_req(g.clone());
     svc.order(&req); // warm the arenas
     let t = Timer::new();

@@ -64,8 +64,11 @@ fn main() {
     ];
     let total = reps * graphs.len();
 
-    // Sync mode: the submit+wait shim, one caller.
-    let svc = Service::new(t);
+    // Sync mode: the submit+wait shim, one caller. The result cache is
+    // off throughout: this bench measures ordering throughput, and the
+    // request stream repeats its graphs (see benches/cache_hot.rs for
+    // the cached numbers).
+    let svc = Service::new(t).with_result_cache(0);
     let reqs = requests(&graphs, reps);
     let ts = Timer::new();
     for req in &reqs {
@@ -78,6 +81,7 @@ fn main() {
     // Async mode: submit everything, then wait; 2 schedulers overlap
     // pre/fill with ordering, arena pool capped at 4.
     let svc = Service::new(t)
+        .with_result_cache(0)
         .with_scheduler_threads(2)
         .with_arena_cap(4)
         .with_queue_cap(64);

@@ -79,7 +79,10 @@ fn main() {
         let per_shard = (total_threads / shards).max(1);
         let svc = Service::new(2)
             .with_shard_spec(ShardSpec::new(shards, per_shard, per_shard))
-            .with_scheduler_threads(shards.max(2));
+            .with_scheduler_threads(shards.max(2))
+            // Shape scaling, not caching, is under test: repeated
+            // requests must genuinely re-order on every config.
+            .with_result_cache(0);
 
         // (a) one multi-component request, repeated.
         let req = paramd_req(g.clone());

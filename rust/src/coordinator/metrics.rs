@@ -4,6 +4,7 @@
 //! and the shard engine's snapshot (per-shard jobs/busy time, component
 //! histogram, concurrency peak).
 
+use crate::ordering::cache::CacheMetrics;
 use crate::ordering::shard::ShardMetrics;
 use crate::util::stats;
 
@@ -66,6 +67,8 @@ pub struct Metrics {
     pub pipeline: PipelineMetrics,
     /// Shard-engine snapshot, stamped by `Service::metrics`.
     pub shards: ShardMetrics,
+    /// Result-cache snapshot, stamped by `Service::metrics`.
+    pub cache: CacheMetrics,
 }
 
 impl Metrics {
@@ -156,6 +159,9 @@ impl Metrics {
         ));
         if !self.shards.per_shard.is_empty() {
             s.push_str(&self.shards.report());
+        }
+        if self.cache.budget_bytes > 0 {
+            s.push_str(&self.cache.report());
         }
         s
     }

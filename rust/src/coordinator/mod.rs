@@ -78,6 +78,20 @@
 //! [`Service::wait_all`], which harvests replies in completion order
 //! through a single batch condvar instead of one wakeup per ticket.
 //!
+//! ## Result cache
+//!
+//! The engine carries a fingerprinted **result cache**
+//! ([`crate::ordering::cache`], on by default with a 64 MiB budget):
+//! repeated connected requests and repeated components replay their
+//! permutation without touching a runtime or arena at all — the
+//! batched-FEM-assembly traffic pattern where identical components
+//! recur across requests under scattered vertex labels. Budget it with
+//! [`Service::with_result_cache`] (CLI: `--cache-mb`, `--no-cache`;
+//! `0` disables); hits, misses, verify-rejects, residency, and
+//! estimated seconds saved land in the [`CacheMetrics`] section of
+//! [`Service::metrics`]. The cache survives engine rebuilds
+//! (`with_shards` et al.) — warm entries keep serving the new shape.
+//!
 //! Metrics ([`Service::metrics`]) split each request's latency into
 //! queue **wait** vs **service** time and expose queue depth (current +
 //! peak), cancellations, arena evictions, and the shard snapshot
@@ -92,6 +106,7 @@ pub use metrics::{MethodMetrics, Metrics, PipelineMetrics};
 pub use pipeline::{Ticket, WaitTimeout};
 pub use request::{Method, OrderReply, OrderRequest, SolveReply, SolveSpec};
 
+pub use crate::ordering::cache::{CacheMetrics, ResultCache};
 pub use crate::ordering::paramd::runtime::QueuePolicy;
 pub use crate::ordering::reduce::{ReduceConfig, ReduceStats};
 pub use crate::ordering::shard::{ShardMetrics, ShardSpec};
@@ -203,7 +218,12 @@ impl Service {
             Ok(core) => core,
             Err(_) => unreachable!("schedulers joined; no other owner of the core exists"),
         };
-        let mut old = std::mem::replace(&mut core.shards, ShardEngine::new(spec));
+        // The result cache is shared, not rebuilt: entries cached by the
+        // old engine keep serving the new shape (the cache key excludes
+        // shard widths by design — see the cache module docs).
+        let cache = Arc::clone(core.shards.result_cache());
+        let mut old =
+            std::mem::replace(&mut core.shards, ShardEngine::with_result_cache(spec, cache));
         core.shards.set_arena_cap(old.arena_cap());
         core.shards.set_policy(old.policy());
         // Rule switches and α carry over; the fingerprint parallelism
@@ -316,6 +336,17 @@ impl Service {
         self
     }
 
+    /// Budget the ordering **result cache** to `bytes` (default 64 MiB;
+    /// `0` disables and clears it — the CLI's `--cache-mb` /
+    /// `--no-cache`). Repeated graphs and repeated components then
+    /// replay their permutation instead of re-running ParAMD; see the
+    /// module docs. Shrinking evicts LRU entries immediately; the
+    /// setting (and the entries) survive engine rebuilds.
+    pub fn with_result_cache(self, bytes: usize) -> Self {
+        self.core().shards.result_cache().set_budget(bytes);
+        self
+    }
+
     /// Attach the PJRT-backed solver thread. The engine is created *on*
     /// the thread (its FFI handles are not `Sync`, DESIGN.md §4) from
     /// the given artifacts directory.
@@ -367,13 +398,14 @@ impl Service {
         self
     }
 
-    /// Snapshot of the per-method, pipeline, and shard metrics.
+    /// Snapshot of the per-method, pipeline, shard, and cache metrics.
     pub fn metrics(&self) -> Metrics {
         let core = self.core();
         let mut m = core.metrics.lock().unwrap().clone();
         m.pipeline.queue_depth = core.queue.len();
         m.pipeline.arena_evictions = core.shards.arena_evictions();
         m.shards = core.shards.metrics();
+        m.cache = core.shards.cache_metrics();
         m
     }
 
@@ -658,19 +690,20 @@ impl ServiceCore {
         }
 
         // What a reply needs from an ordering: the owned permutation plus
-        // three scalar stats. Extracting just these keeps the warm ParAMD
+        // four scalar stats. Extracting just these keeps the warm ParAMD
         // arm down to a single O(n) copy (the reply's own `perm`).
-        fn parts(r: OrderingResult) -> (Vec<i32>, u64, u64, f64) {
+        fn parts(r: OrderingResult) -> (Vec<i32>, u64, u64, f64, f64) {
             (
                 r.perm,
                 r.stats.rounds,
                 r.stats.gc_count,
+                r.stats.gc_secs,
                 r.stats.modeled_time,
             )
         }
 
         let tord = Timer::new();
-        let (perm, rounds, gc_count, modeled_time) = match &req.method {
+        let (perm, rounds, gc_count, gc_secs, modeled_time) = match &req.method {
             Method::Amd => parts(AmdSeq::default().order(g)),
             Method::Mmd => parts(Mmd::default().order(g)),
             Method::MinDegree => parts(MinDegree.order(g)),
@@ -690,7 +723,7 @@ impl ServiceCore {
                     .with_mult(*mult)
                     .with_lim_total(*lim_total);
                 let rep = self.shards.order_cancellable(g, cfg, cancel)?;
-                (rep.perm, rep.rounds, rep.gc_count, rep.modeled_time)
+                (rep.perm, rep.rounds, rep.gc_count, rep.gc_secs, rep.modeled_time)
             }
         };
         let order_secs = tord.secs();
@@ -711,6 +744,7 @@ impl ServiceCore {
             total_secs: total.secs(),
             rounds,
             gc_count,
+            gc_secs,
             modeled_time,
         })
     }
@@ -984,6 +1018,85 @@ mod tests {
         let cfg = svc.core().shards.reduce_config();
         assert!(cfg.leaves && cfg.dense && cfg.twins);
         assert_eq!(cfg.dense_alpha, 3.5, "re-enabling keeps the tuned α");
+    }
+
+    #[test]
+    fn result_cache_is_on_by_default_and_serves_repeats() {
+        let svc = Service::new(1);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(mesh2d(13, 13)),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        let first = svc.order(&req);
+        let jobs: u64 = svc.metrics().shards.per_shard.iter().map(|s| s.jobs).sum();
+        let second = svc.order(&req);
+        assert_eq!(second.perm, first.perm, "hit must bit-match");
+        let m = svc.metrics();
+        assert_eq!(m.cache.hits, 1);
+        assert!(m.cache.entries >= 1);
+        assert_eq!(
+            m.shards.per_shard.iter().map(|s| s.jobs).sum::<u64>(),
+            jobs,
+            "a hit performs zero ParAMD work"
+        );
+        assert!(m.report().contains("cache: hits=1"), "report gains a cache section");
+    }
+
+    #[test]
+    fn with_result_cache_zero_disables_and_hides_the_section() {
+        let svc = Service::new(1).with_result_cache(0);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(mesh2d(10, 10)),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        svc.order(&req);
+        svc.order(&req);
+        let m = svc.metrics();
+        assert_eq!((m.cache.hits, m.cache.misses), (0, 0));
+        assert_eq!(
+            m.shards.per_shard.iter().map(|s| s.jobs).sum::<u64>(),
+            2,
+            "disabled cache must re-order every repeat"
+        );
+        assert!(!m.report().contains("cache: hits="));
+    }
+
+    #[test]
+    fn cache_entries_survive_engine_rebuilds() {
+        let svc = Service::new(1);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(mesh2d(12, 12)),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        let first = svc.order(&req);
+        let svc = svc.with_shards(2); // rebuild: same cache handle carries over
+        let second = svc.order(&req);
+        assert_eq!(second.perm, first.perm);
+        let m = svc.metrics();
+        assert_eq!(m.cache.hits, 1, "warm entry must serve the rebuilt engine");
+        assert_eq!(
+            m.shards.per_shard.iter().map(|s| s.jobs).sum::<u64>(),
+            0,
+            "the rebuilt engine never ran a job for the repeat"
+        );
     }
 
     #[test]

@@ -506,6 +506,7 @@ mod tests {
             total_secs: 0.0,
             rounds: 0,
             gc_count: 0,
+            gc_secs: 0.0,
             modeled_time: 0.0,
         });
         assert!(ticket.is_finished());
@@ -571,6 +572,7 @@ mod tests {
             total_secs: 0.0,
             rounds: 0,
             gc_count: 0,
+            gc_secs: 0.0,
             modeled_time: 0.0,
         });
         let reply = ticket
@@ -588,6 +590,7 @@ mod tests {
             total_secs: 0.0,
             rounds: 0,
             gc_count: 0,
+            gc_secs: 0.0,
             modeled_time: 0.0,
         }
     }

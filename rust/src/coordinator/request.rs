@@ -85,6 +85,8 @@ pub struct OrderReply {
     pub total_secs: f64,
     pub rounds: u64,
     pub gc_count: u64,
+    /// Cumulative stop-the-world seconds spent in quotient-graph GC.
+    pub gc_secs: f64,
     pub modeled_time: f64,
 }
 

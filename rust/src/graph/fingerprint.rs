@@ -1,0 +1,143 @@
+//! 128-bit structural fingerprints of CSR graphs.
+//!
+//! The ordering result cache ([`crate::ordering::cache`]) needs a cheap,
+//! deterministic identity for "the same graph came back": batched FEM
+//! assembly traffic re-submits structurally identical components request
+//! after request, and Fahrbach et al. (*On Computing Min-Degree
+//! Elimination Orderings*) show hash-based sketching is the right
+//! primitive for recognizing repeated minimum-degree structure without
+//! comparing it. A [`Fingerprint`] is two **independent**
+//! [`splitmix64`]-mixed passes over the same structural stream —
+//! `(n, row lengths, edges)` of the CSR arrays — giving 128 bits, so an
+//! accidental collision across both halves is negligible even at
+//! millions-of-requests scale. The cache still verifies candidates with
+//! an exact CSR compare (hashes nominate, bytes decide), so a collision
+//! can cost a recompute but never a wrong permutation.
+//!
+//! The fingerprint is **label-sensitive** by design: it hashes the
+//! compact CSR exactly as the ordering kernel will consume it. Requests
+//! with scattered vertex ids still fingerprint equal at *component*
+//! granularity because [`crate::graph::components::split_components`]
+//! assigns local ids deterministically (increasing original-vertex
+//! order), producing identical compact CSRs for identical components —
+//! which is precisely where the cache probes.
+
+use crate::graph::csr::SymGraph;
+use crate::util::rng::splitmix64;
+
+/// Domain-separation seeds of the two independent passes.
+const PASS_HI: u64 = 0xF1C2_85E7_0DD5_11A0;
+const PASS_LO: u64 = 0x93B1_4A6C_26F0_83D7;
+
+/// A 128-bit structural graph fingerprint (two independent 64-bit
+/// passes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    pub hi: u64,
+    pub lo: u64,
+}
+
+impl Fingerprint {
+    /// The fingerprint as one 128-bit word (reports, debugging).
+    pub fn as_u128(&self) -> u128 {
+        ((self.hi as u128) << 64) | self.lo as u128
+    }
+}
+
+/// One chained pass over `(n, row lengths, edges)`. Sequential (not
+/// commutative) mixing: CSR rows are ordered and sorted, so position is
+/// part of the structure being identified.
+fn pass(g: &SymGraph, seed: u64) -> u64 {
+    let mut h = splitmix64(seed ^ splitmix64(g.n as u64));
+    for v in 0..g.n {
+        h = splitmix64(h ^ g.degree(v) as u64);
+    }
+    for &u in &g.colind {
+        h = splitmix64(h ^ u as u64);
+    }
+    h
+}
+
+/// Fingerprint `g`'s structure. Deterministic, platform-independent,
+/// O(n + nnz) with two word-mixes per element.
+pub fn fingerprint(g: &SymGraph) -> Fingerprint {
+    Fingerprint {
+        hi: pass(g, PASS_HI),
+        lo: pass(g, PASS_LO),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{mesh2d, random_graph};
+
+    #[test]
+    fn identical_graphs_fingerprint_equal() {
+        let a = mesh2d(9, 7);
+        let b = mesh2d(9, 7);
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn different_graphs_fingerprint_differently() {
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..8u64 {
+            let g = random_graph(200, 5, seed);
+            assert!(seen.insert(fingerprint(&g)), "collision at seed {seed}");
+        }
+        // Structure, not just size: same n/nnz class, different meshes.
+        assert_ne!(fingerprint(&mesh2d(6, 8)), fingerprint(&mesh2d(8, 6)));
+    }
+
+    #[test]
+    fn single_edge_change_flips_both_halves() {
+        let a = SymGraph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let b = SymGraph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 5)]);
+        let (fa, fb) = (fingerprint(&a), fingerprint(&b));
+        assert_ne!(fa.hi, fb.hi, "hi pass must react to one edge");
+        assert_ne!(fa.lo, fb.lo, "lo pass must react to one edge");
+    }
+
+    #[test]
+    fn passes_are_independent() {
+        let f = fingerprint(&mesh2d(10, 10));
+        assert_ne!(f.hi, f.lo, "the two passes must not degenerate");
+    }
+
+    #[test]
+    fn relabeled_graph_fingerprints_differently() {
+        // Label-sensitivity is intentional: the cache keys compact CSRs.
+        let g = random_graph(120, 4, 3);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let p = rng.permutation(g.n);
+        let h = crate::graph::perm::permute_graph(&g, &p);
+        assert_ne!(fingerprint(&g), fingerprint(&h));
+    }
+
+    #[test]
+    fn identical_components_fingerprint_equal_under_scattered_labels() {
+        use crate::graph::components::{connected_components, split_components};
+        // Two copies of one component shape, interleaved across the
+        // vertex id space: the compact extractions must fingerprint
+        // identically (extraction normalizes the scatter away).
+        let g = crate::matgen::repeated_components(1, 23, 2);
+        let c = connected_components(&g);
+        let parts = split_components(&g, &c);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].graph, parts[1].graph, "extraction must normalize");
+        assert_eq!(
+            fingerprint(&parts[0].graph),
+            fingerprint(&parts[1].graph),
+            "identical components must share a fingerprint"
+        );
+    }
+
+    #[test]
+    fn empty_graph_has_a_stable_fingerprint() {
+        let a = SymGraph::from_edges(0, &[]);
+        let b = SymGraph::from_edges(0, &[]);
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        assert_ne!(fingerprint(&a), fingerprint(&SymGraph::from_edges(1, &[])));
+    }
+}

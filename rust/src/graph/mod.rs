@@ -1,14 +1,17 @@
 //! Sparse-graph substrate: CSR symmetric graphs, Matrix Market I/O, the
 //! parallel `|A| + |A^T|` symmetrization pre-processing step (paper §4.2),
-//! connected-component decomposition, and permutation utilities.
+//! connected-component decomposition, structural fingerprints, and
+//! permutation utilities.
 
 pub mod components;
 pub mod csr;
+pub mod fingerprint;
 pub mod mm;
 pub mod perm;
 pub mod symmetrize;
 
 pub use components::{connected_components, split_components, Component, Components};
 pub use csr::{CsrMatrix, SymGraph};
+pub use fingerprint::{fingerprint, Fingerprint};
 pub use perm::{compose, invert_perm, is_valid_perm, permute_graph};
 pub use symmetrize::{symmetrize, symmetrize_parallel};

@@ -10,6 +10,7 @@
 //!         [--arena-cap A] [--queue-cap Q] [--small-first]
 //!         [--shards K] [--shard-threads T]
 //!         [--no-reduce] [--dense-alpha A]
+//!         [--cache-mb MB] [--no-cache]
 //!         — service demo with metrics; `--pipeline` submits every
 //!         request as a ticket up front (async, backpressured) instead
 //!         of blocking per request; `--shards`/`--shard-threads` shard
@@ -18,7 +19,10 @@
 //!         `--no-reduce` disables the pre-ordering reduction layer
 //!         (twin compression / dense-row postponement / leaf stripping,
 //!         on by default) and `--dense-alpha` tunes its `max(16, α·√n)`
-//!         dense-row threshold
+//!         dense-row threshold; `--cache-mb` budgets the fingerprinted
+//!         ordering result cache (default 64 MiB — repeated graphs and
+//!         components replay instead of re-ordering) and `--no-cache`
+//!         disables it
 
 use paramd::cli::Args;
 use paramd::coordinator::{Method, OrderRequest, QueuePolicy, Service, SolveSpec, Ticket};
@@ -55,7 +59,14 @@ fn method_of(args: &Args) -> Result<Method, String> {
 }
 
 fn main() {
-    let args = Args::from_env(&["pjrt", "no-fill", "pipeline", "small-first", "no-reduce"]);
+    let args = Args::from_env(&[
+        "pjrt",
+        "no-fill",
+        "pipeline",
+        "small-first",
+        "no-reduce",
+        "no-cache",
+    ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "order" => cmd_order(&args),
@@ -106,7 +117,10 @@ fn cmd_order(args: &Args) -> Result<(), String> {
         println!("fill-ins    : {:.3e}", f as f64);
     }
     if rep.gc_count > 0 {
-        println!("gc          : {}", rep.gc_count);
+        println!(
+            "gc          : {} stop-the-world collections, {:.4}s",
+            rep.gc_count, rep.gc_secs
+        );
     }
     Ok(())
 }
@@ -167,7 +181,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .with_scheduler_threads(args.get_parse("sched-threads", 2usize))
         .with_arena_cap(args.get_parse("arena-cap", usize::MAX))
         .with_queue_cap(args.get_parse("queue-cap", 64usize))
-        .with_dense_alpha(args.get_parse("dense-alpha", 10.0f64));
+        .with_dense_alpha(args.get_parse("dense-alpha", 10.0f64))
+        .with_result_cache(if args.has("no-cache") {
+            0
+        } else {
+            args.get_parse("cache-mb", 64usize) << 20
+        });
     if args.has("no-reduce") {
         svc = svc.with_reduction(false);
     }

@@ -191,6 +191,91 @@ pub fn multi_component(k: usize, sizes: &[usize]) -> SymGraph {
     crate::graph::perm::permute_graph(&g, &rng.permutation(base))
 }
 
+/// A graph of `k * copies` connected components in which every
+/// component shape **repeats exactly `copies` times**: `k` distinct
+/// mesh-like archetypes (sizes `n`, `n+1`, …, `n+k-1`, each a near-square
+/// grid plus a path tail — the same construction [`multi_component`]
+/// uses), each instantiated `copies` times, under deterministically
+/// scattered vertex labels. This is the result cache's target workload
+/// (batched FEM assembly re-submitting identical components request
+/// after request): the *whole-graph* CSR varies with the scatter, but
+/// compact component extraction is label-normalizing, so every copy of
+/// an archetype yields an identical compact CSR — and identical
+/// fingerprints.
+pub fn repeated_components(k: usize, n: usize, copies: usize) -> SymGraph {
+    repeated_components_seeded(k, n, copies, 0)
+}
+
+/// [`repeated_components`] with an explicit scatter seed: different
+/// seeds scatter the same component population differently, modeling
+/// *distinct requests* that share components (each seed's graph
+/// fingerprints differently at request level while every component still
+/// extracts — and fingerprints — identically at component level).
+pub fn repeated_components_seeded(k: usize, n: usize, copies: usize, seed: u64) -> SymGraph {
+    assert!(k > 0 && copies > 0, "need at least one component");
+    assert!(n > 0, "components need at least one vertex");
+    let mut edges = Vec::new();
+    let mut block_start = Vec::with_capacity(k * copies);
+    let mut base = 0usize;
+    // Copies of one archetype are built consecutively from the same
+    // recipe, so their block graphs are identical by construction.
+    for arch in 0..k {
+        let s = n + arch;
+        for _ in 0..copies {
+            block_start.push(base);
+            let rows = ((s as f64).sqrt() as usize).max(1);
+            let cols = s / rows;
+            let id = |x: usize, y: usize| base + x * cols + y;
+            for x in 0..rows {
+                for y in 0..cols {
+                    if x + 1 < rows {
+                        edges.push((id(x, y), id(x + 1, y)));
+                    }
+                    if y + 1 < cols {
+                        edges.push((id(x, y), id(x, y + 1)));
+                    }
+                }
+            }
+            for t in rows * cols..s {
+                let prev = if t == rows * cols { base } else { base + t - 1 };
+                edges.push((prev, base + t));
+            }
+            base += s;
+        }
+    }
+    let g = SymGraph::from_edges(base, &edges);
+
+    // Order-preserving interleave: shuffle which global id slots each
+    // component occupies, but keep every component's own vertices in
+    // increasing order — the way FEM assembly interleaves elements. (A
+    // fully random scatter would also permute labels *within* each
+    // component, and compact extraction would then yield isomorphic but
+    // non-identical CSRs, which is not the workload the cache targets.)
+    let count = k * copies;
+    let mut owner: Vec<u32> = Vec::with_capacity(base);
+    for (c, &start) in block_start.iter().enumerate() {
+        let end = block_start.get(c + 1).copied().unwrap_or(base);
+        owner.extend(std::iter::repeat(c as u32).take(end - start));
+    }
+    let mut rng = Rng::new(
+        0x2E9E_A7ED ^ ((k as u64) << 40) ^ ((copies as u64) << 20) ^ (base as u64) ^ seed,
+    );
+    rng.shuffle(&mut owner);
+    // perm[pos] = the next unconsumed block vertex of the component that
+    // owns global slot `pos` (permute_graph: old `perm[pos]` → new `pos`).
+    let mut next = vec![0usize; count];
+    let perm: Vec<i32> = owner
+        .iter()
+        .map(|&c| {
+            let c = c as usize;
+            let old = block_start[c] + next[c];
+            next[c] += 1;
+            old as i32
+        })
+        .collect();
+    crate::graph::perm::permute_graph(&g, &perm)
+}
+
 /// A graph that is **heavy in indistinguishable (twin) vertices**: a
 /// near-square 2D grid over `⌈n/k⌉` classes, blown up so each base
 /// vertex becomes a clique of `k` copies and each base edge a complete
@@ -508,6 +593,48 @@ mod tests {
         let g = multi_component(1, &[30]);
         assert_eq!(connected_components(&g).count, 1);
         assert_eq!(g.n, 30);
+    }
+
+    #[test]
+    fn repeated_components_extracts_identical_copies() {
+        use crate::graph::components::{connected_components, split_components};
+        let g = repeated_components(3, 20, 4);
+        g.validate().unwrap();
+        assert_eq!(g.n, 4 * (20 + 21 + 22));
+        let c = connected_components(&g);
+        assert_eq!(c.count, 12);
+        let parts = split_components(&g, &c);
+        // Component ids ascend by size, so the 4 copies of each
+        // archetype are adjacent — and must extract to *identical*
+        // compact CSRs (not merely isomorphic ones).
+        for arch in 0..3 {
+            let first = &parts[arch * 4].graph;
+            assert_eq!(first.n, 20 + arch);
+            for copy in 1..4 {
+                assert_eq!(
+                    &parts[arch * 4 + copy].graph, first,
+                    "copy {copy} of archetype {arch} must extract identically"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_components_seeds_scatter_requests_but_share_components() {
+        use crate::graph::components::{connected_components, split_components};
+        let a = repeated_components_seeded(2, 15, 2, 1);
+        let b = repeated_components_seeded(2, 15, 2, 2);
+        assert_ne!(a, b, "different seeds must scatter differently");
+        let pa = split_components(&a, &connected_components(&a));
+        let pb = split_components(&b, &connected_components(&b));
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.graph, y.graph, "components must match across requests");
+        }
+        assert_eq!(
+            repeated_components(2, 15, 2),
+            repeated_components(2, 15, 2),
+            "deterministic"
+        );
     }
 
     #[test]

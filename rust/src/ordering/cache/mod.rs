@@ -1,0 +1,579 @@
+//! The ordering **result cache**: a zero-recompute fast path for
+//! repeated graphs.
+//!
+//! The paper's central finding is that parallelism *within* an
+//! elimination step is contention-limited, so the wins come from
+//! restructuring the work around the kernel — and the biggest remaining
+//! restructuring is to not redo the work at all. Batched FEM/assembly
+//! traffic re-submits structurally identical components request after
+//! request; at service scale that means re-running identical ParAMD jobs
+//! end to end. This module memoizes them:
+//!
+//! - **Keys** are a 128-bit structural [`Fingerprint`] of the compact
+//!   CSR that will actually be ordered, plus a 64-bit *salt* mixing the
+//!   ordering-relevant [`ParAmd`] knobs ([`config_salt`]) and the seed
+//!   supervariable weights. The shard engine probes at two
+//!   granularities: whole connected requests (before reduction even
+//!   runs) and per-component kernels (after split + reduction, so
+//!   requests with scattered vertex labels still share entries — compact
+//!   component extraction is label-normalizing).
+//! - **Values** are the kernel permutation plus the round-log summary
+//!   (`rounds`, `set_sizes`, GC counters, `modeled_time`), everything a
+//!   [`ShardReply`](crate::ordering::shard::ShardReply) replays on a hit.
+//! - **Hits are verified**: a fingerprint match is followed by an exact
+//!   CSR + weights compare against the stored graph, so a hash collision
+//!   can cost one recompute (a *verify-reject* falls through to an
+//!   ordinary miss) but can never corrupt a result.
+//! - **Memory is byte-budgeted**: entries spread over `N` mutex shards
+//!   (keyed by fingerprint high bits, so concurrent submitters rarely
+//!   contend on lookups) under one **global** byte budget; when an
+//!   insert pushes residency over it, globally least-recently-used
+//!   entries are evicted (shards locked one at a time, never nested).
+//!   A budget of `0` disables the cache entirely.
+//!
+//! What the salt deliberately **excludes**: the executing thread count.
+//! ParAMD permutations are width-dependent, so a hit may replay a result
+//! computed by a shard of a different width than the router would pick
+//! today — a valid ordering of the same graph under the same quality
+//! knobs, exactly like placement already depends on load. Disable the
+//! cache (`Service::with_result_cache(0)` / `--no-cache`) when strict
+//! placement-reproducibility matters more than latency.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::Mutex;
+
+use crate::graph::csr::SymGraph;
+use crate::graph::fingerprint::{fingerprint, Fingerprint};
+use crate::ordering::paramd::ParAmd;
+use crate::ordering::reduce::ReduceConfig;
+use crate::util::rng::splitmix64;
+
+/// Default byte budget of a service's result cache (64 MiB).
+pub const DEFAULT_BUDGET_BYTES: usize = 64 << 20;
+
+/// Default number of mutex shards (keyed by fingerprint high bits).
+const DEFAULT_SHARDS: usize = 16;
+
+/// Hash the ordering-relevant [`ParAmd`] knobs into a cache salt. The
+/// thread count is deliberately excluded (see the module docs); every
+/// knob that changes the *pivot choice* for a fixed width is included.
+pub fn config_salt(cfg: &ParAmd) -> u64 {
+    let mut h = splitmix64(0xCA_C4E5 ^ cfg.mult.to_bits());
+    h = splitmix64(h ^ cfg.lim_total as u64);
+    h = splitmix64(h ^ cfg.elbow.to_bits());
+    h = splitmix64(h ^ cfg.seed);
+    h = splitmix64(h ^ (u64::from(cfg.aggressive) | (u64::from(cfg.adaptive) << 1)));
+    splitmix64(h ^ cfg.adaptive_mult_max.to_bits())
+}
+
+/// Hash the reduction knobs that change *what gets ordered* into the
+/// salt of **request-level** entries: those bake the whole reduction
+/// outcome (prefix/tail/twin expansion) into the stored permutation, so
+/// toggling `--no-reduce` or `α` on a warm service must miss instead of
+/// replaying a stale path. Kernel-level entries don't need this — a
+/// kernel already embodies its reduction — and the reduction thread
+/// count is excluded because plans are worker-count independent.
+pub fn reduce_salt(cfg: &ReduceConfig) -> u64 {
+    let rules =
+        u64::from(cfg.leaves) | (u64::from(cfg.dense) << 1) | (u64::from(cfg.twins) << 2);
+    splitmix64(splitmix64(0x2ED0_CE ^ rules) ^ cfg.dense_alpha.to_bits())
+}
+
+/// Chained hash of the seed supervariable weights (`None` = unweighted).
+fn weights_salt(weights: Option<&[i32]>) -> u64 {
+    match weights {
+        None => 0x57E1_64B5_0000_0001,
+        Some(ws) => {
+            let mut h = splitmix64(0x57E1_64B5 ^ ws.len() as u64);
+            for &w in ws {
+                h = splitmix64(h ^ w as u64);
+            }
+            h
+        }
+    }
+}
+
+/// A complete cache key: the graph fingerprint plus the config/weights
+/// salt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub fp: Fingerprint,
+    pub salt: u64,
+}
+
+impl CacheKey {
+    /// Key for ordering `g` with `weights` under the knobs hashed into
+    /// `cfg_salt` (from [`config_salt`]).
+    pub fn new(g: &SymGraph, weights: Option<&[i32]>, cfg_salt: u64) -> Self {
+        Self {
+            fp: fingerprint(g),
+            salt: splitmix64(cfg_salt.wrapping_add(weights_salt(weights))),
+        }
+    }
+}
+
+/// A cached ordering result: the permutation over the graph that was
+/// actually ordered, plus the round-log summary a reply replays.
+#[derive(Clone, Debug)]
+pub struct CachedOrdering {
+    pub perm: Vec<i32>,
+    pub rounds: u64,
+    pub gc_count: u64,
+    pub gc_secs: f64,
+    pub modeled_time: f64,
+    pub set_sizes: Vec<u32>,
+    /// Vertices the reduction layer removed (request-level entries only;
+    /// kernel-level entries store 0 — their caller holds the live plan).
+    pub reduced: usize,
+}
+
+struct Entry {
+    /// Exact-verify copy of the keyed graph.
+    graph: SymGraph,
+    weights: Option<Vec<i32>>,
+    value: CachedOrdering,
+    bytes: usize,
+    /// Monotone LRU tick (refreshed on every hit).
+    tick: u64,
+}
+
+fn entry_bytes(graph: &SymGraph, weights: &Option<Vec<i32>>, value: &CachedOrdering) -> usize {
+    const FIXED: usize = 160; // struct + map-slot overhead, order of magnitude
+    FIXED
+        + graph.rowptr.len() * std::mem::size_of::<usize>()
+        + graph.colind.len() * std::mem::size_of::<i32>()
+        + weights.as_ref().map_or(0, |w| w.len() * std::mem::size_of::<i32>())
+        + value.perm.len() * std::mem::size_of::<i32>()
+        + value.set_sizes.len() * std::mem::size_of::<u32>()
+}
+
+#[derive(Default)]
+struct CacheShard {
+    entries: HashMap<CacheKey, Entry>,
+    bytes: usize,
+}
+
+/// Counter snapshot of a [`ResultCache`] — the ISSUE's `CacheMetrics`
+/// report section.
+#[derive(Clone, Debug, Default)]
+pub struct CacheMetrics {
+    /// Lookups answered from the cache (verified exact matches).
+    pub hits: u64,
+    /// Lookups that found nothing usable (includes verify-rejects).
+    pub misses: u64,
+    /// Fingerprint matches whose exact CSR/weights compare failed — a
+    /// hash collision safely downgraded to a miss.
+    pub verify_rejects: u64,
+    /// Entries stored (replacements included).
+    pub insertions: u64,
+    /// Entries dropped by the LRU byte-budget policy.
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Bytes currently resident.
+    pub bytes: usize,
+    /// Total byte budget (0 = cache disabled).
+    pub budget_bytes: usize,
+    /// Estimated ordering seconds short-circuited by hits, accumulated
+    /// from each hit entry's `modeled_time`.
+    pub saved_secs: f64,
+}
+
+impl CacheMetrics {
+    /// Render a compact report section.
+    pub fn report(&self) -> String {
+        format!(
+            "cache: hits={} misses={} rejects={} entries={} bytes={}/{} \
+             evictions={} saved~={:.4}s\n",
+            self.hits,
+            self.misses,
+            self.verify_rejects,
+            self.entries,
+            self.bytes,
+            self.budget_bytes,
+            self.evictions,
+            self.saved_secs
+        )
+    }
+}
+
+/// A byte-budgeted, sharded, verifying LRU cache of ordering results.
+/// See the module docs for the design; construct once (the coordinator
+/// shares one across shard-engine rebuilds), probe with [`Self::get`],
+/// fill with [`Self::insert`].
+pub struct ResultCache {
+    shards: Vec<Mutex<CacheShard>>,
+    /// Total byte budget; 0 disables every operation.
+    budget: AtomicUsize,
+    /// Resident bytes across shards (kept in sync under shard locks).
+    bytes: AtomicUsize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    verify_rejects: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    saved_nanos: AtomicU64,
+}
+
+impl ResultCache {
+    /// A cache with `budget` bytes across [`DEFAULT_SHARDS`] mutex
+    /// shards (`0` = disabled).
+    pub fn new(budget: usize) -> Self {
+        Self::with_shards(budget, DEFAULT_SHARDS)
+    }
+
+    /// A cache with an explicit shard count (tests use 1 for
+    /// deterministic whole-cache LRU behavior).
+    pub fn with_shards(budget: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        Self {
+            shards: (0..shards).map(|_| Mutex::new(CacheShard::default())).collect(),
+            budget: AtomicUsize::new(budget),
+            bytes: AtomicUsize::new(0),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            verify_rejects: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            saved_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether the cache participates at all (budget > 0).
+    pub fn is_enabled(&self) -> bool {
+        self.budget.load(Relaxed) > 0
+    }
+
+    /// The total byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget.load(Relaxed)
+    }
+
+    /// Re-budget the cache. Shrinking evicts globally-LRU entries
+    /// immediately; `0` clears everything and disables further traffic.
+    pub fn set_budget(&self, bytes: usize) {
+        self.budget.store(bytes, Relaxed);
+        self.evict_over_budget();
+    }
+
+    /// Drop globally least-recently-used entries until residency fits
+    /// the budget. One scan gathers every candidate (shards locked one
+    /// at a time, never nested), one sort ranks them by tick, then
+    /// victims are removed oldest-first until residency fits — evicting
+    /// a whole burst costs a single O(entries log entries) pass instead
+    /// of a full rescan per victim. A concurrent hit can refresh a tick
+    /// mid-scan, which at worst evicts a slightly-stale victim, never a
+    /// wrong result.
+    fn evict_over_budget(&self) {
+        let budget = self.budget.load(Relaxed);
+        if self.bytes.load(Relaxed) <= budget {
+            return;
+        }
+        let mut candidates: Vec<(u64, usize, CacheKey)> = Vec::new();
+        for (i, shard) in self.shards.iter().enumerate() {
+            let sh = shard.lock().unwrap();
+            candidates.extend(sh.entries.iter().map(|(k, e)| (e.tick, i, *k)));
+        }
+        candidates.sort_unstable_by_key(|&(tick, _, _)| tick);
+        for (_, i, key) in candidates {
+            if self.bytes.load(Relaxed) <= budget {
+                break;
+            }
+            let mut sh = self.shards[i].lock().unwrap();
+            if let Some(e) = sh.entries.remove(&key) {
+                sh.bytes -= e.bytes;
+                self.bytes.fetch_sub(e.bytes, Relaxed);
+                self.evictions.fetch_add(1, Relaxed);
+            }
+        }
+    }
+
+    fn shard(&self, key: &CacheKey) -> &Mutex<CacheShard> {
+        // High bits of the first pass pick the shard; the full key is
+        // still compared inside.
+        let i = (key.fp.hi >> 32) as usize % self.shards.len();
+        &self.shards[i]
+    }
+
+    /// Probe for `key`. On a fingerprint match the stored graph and
+    /// weights are compared **exactly**; a mismatch counts as a
+    /// verify-reject and falls through to a miss, so collisions can
+    /// never corrupt a result. A hit refreshes the entry's LRU tick and
+    /// returns an owned copy of the cached result.
+    pub fn get(
+        &self,
+        key: &CacheKey,
+        graph: &SymGraph,
+        weights: Option<&[i32]>,
+    ) -> Option<CachedOrdering> {
+        if !self.is_enabled() {
+            return None;
+        }
+        let mut sh = self.shard(key).lock().unwrap();
+        match sh.entries.get_mut(key) {
+            Some(e) if e.graph == *graph && e.weights.as_deref() == weights => {
+                e.tick = self.tick.fetch_add(1, Relaxed) + 1;
+                self.hits.fetch_add(1, Relaxed);
+                self.saved_nanos
+                    .fetch_add((e.value.modeled_time * 1e9) as u64, Relaxed);
+                Some(e.value.clone())
+            }
+            Some(_) => {
+                self.verify_rejects.fetch_add(1, Relaxed);
+                self.misses.fetch_add(1, Relaxed);
+                None
+            }
+            None => {
+                self.misses.fetch_add(1, Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store `value` for `key`, keeping `graph`/`weights` for the exact
+    /// verification of later probes. Replaces an existing entry for the
+    /// same key; an entry larger than the whole budget is silently not
+    /// cached; otherwise globally-LRU entries are evicted until
+    /// residency fits the budget again.
+    pub fn insert(
+        &self,
+        key: CacheKey,
+        graph: SymGraph,
+        weights: Option<Vec<i32>>,
+        value: CachedOrdering,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let bytes = entry_bytes(&graph, &weights, &value);
+        if bytes > self.budget.load(Relaxed) {
+            return; // would evict everything and still not fit
+        }
+        let tick = self.tick.fetch_add(1, Relaxed) + 1;
+        {
+            let mut sh = self.shard(&key).lock().unwrap();
+            if let Some(old) = sh.entries.insert(
+                key,
+                Entry {
+                    graph,
+                    weights,
+                    value,
+                    bytes,
+                    tick,
+                },
+            ) {
+                sh.bytes -= old.bytes;
+                self.bytes.fetch_sub(old.bytes, Relaxed);
+            }
+            sh.bytes += bytes;
+            self.bytes.fetch_add(bytes, Relaxed);
+            self.insertions.fetch_add(1, Relaxed);
+        } // release before evicting — eviction re-locks shard by shard
+        self.evict_over_budget();
+    }
+
+    /// Entries currently resident (sums the shards).
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().entries.len()).sum()
+    }
+
+    /// Snapshot every counter.
+    pub fn metrics(&self) -> CacheMetrics {
+        CacheMetrics {
+            hits: self.hits.load(Relaxed),
+            misses: self.misses.load(Relaxed),
+            verify_rejects: self.verify_rejects.load(Relaxed),
+            insertions: self.insertions.load(Relaxed),
+            evictions: self.evictions.load(Relaxed),
+            entries: self.entries(),
+            bytes: self.bytes.load(Relaxed),
+            budget_bytes: self.budget.load(Relaxed),
+            saved_secs: self.saved_nanos.load(Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{mesh2d, random_graph};
+
+    fn value(n: usize, modeled: f64) -> CachedOrdering {
+        CachedOrdering {
+            perm: (0..n as i32).collect(),
+            rounds: 3,
+            gc_count: 1,
+            gc_secs: 0.0,
+            modeled_time: modeled,
+            set_sizes: vec![n as u32],
+            reduced: 0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_hit_returns_the_stored_value() {
+        let cache = ResultCache::new(1 << 20);
+        let g = mesh2d(8, 8);
+        let key = CacheKey::new(&g, None, 7);
+        assert!(cache.get(&key, &g, None).is_none(), "cold probe misses");
+        cache.insert(key, g.clone(), None, value(g.n, 0.5));
+        let hit = cache.get(&key, &g, None).expect("warm probe hits");
+        assert_eq!(hit.perm.len(), g.n);
+        assert_eq!(hit.rounds, 3);
+        let m = cache.metrics();
+        assert_eq!((m.hits, m.misses, m.verify_rejects), (1, 1, 0));
+        assert_eq!(m.entries, 1);
+        assert!(m.bytes > 0 && m.bytes <= m.budget_bytes);
+        assert!((m.saved_secs - 0.5).abs() < 1e-9, "saved = hit modeled_time");
+    }
+
+    #[test]
+    fn forged_key_verify_rejects_and_misses() {
+        // Simulate a full 128-bit collision: graph B probed under A's
+        // key. The exact compare must reject and report a miss.
+        let cache = ResultCache::with_shards(1 << 20, 1);
+        let a = mesh2d(8, 8);
+        let b = random_graph(64, 4, 1);
+        let key_a = CacheKey::new(&a, None, 7);
+        cache.insert(key_a, a.clone(), None, value(a.n, 0.0));
+        assert!(
+            cache.get(&key_a, &b, None).is_none(),
+            "forged probe must fall through to a miss"
+        );
+        let m = cache.metrics();
+        assert_eq!(m.verify_rejects, 1);
+        assert_eq!(m.misses, 1, "a verify-reject is a miss");
+        assert_eq!(m.hits, 0);
+        // The honest probe still hits afterwards — nothing was corrupted.
+        assert!(cache.get(&key_a, &a, None).is_some());
+    }
+
+    #[test]
+    fn weights_are_part_of_the_identity() {
+        // Same kernel CSR, different seed-supervariable weights: the
+        // salts differ, so the entries never alias.
+        let cache = ResultCache::new(1 << 20);
+        let g = mesh2d(6, 6);
+        let w1 = vec![1i32; g.n];
+        let w2 = vec![2i32; g.n];
+        let k1 = CacheKey::new(&g, Some(&w1), 7);
+        let k2 = CacheKey::new(&g, Some(&w2), 7);
+        assert_ne!(k1, k2);
+        cache.insert(k1, g.clone(), Some(w1.clone()), value(g.n, 0.0));
+        assert!(cache.get(&k1, &g, Some(&w1)).is_some());
+        assert!(cache.get(&k2, &g, Some(&w2)).is_none());
+    }
+
+    #[test]
+    fn config_salt_separates_quality_knobs_but_not_threads() {
+        let base = ParAmd::new(4);
+        assert_eq!(
+            config_salt(&base),
+            config_salt(&ParAmd::new(8)),
+            "thread count must not change the cache identity"
+        );
+        assert_ne!(config_salt(&base), config_salt(&base.with_mult(1.3)));
+        assert_ne!(config_salt(&base), config_salt(&base.with_lim_total(64)));
+        assert_ne!(config_salt(&base), config_salt(&base.with_seed(1)));
+        assert_ne!(config_salt(&base), config_salt(&base.with_adaptive()));
+    }
+
+    #[test]
+    fn reduce_salt_separates_rule_switches_and_alpha() {
+        let on = ReduceConfig::default();
+        assert_ne!(reduce_salt(&on), reduce_salt(&ReduceConfig::disabled()));
+        assert_ne!(
+            reduce_salt(&on),
+            reduce_salt(&ReduceConfig {
+                dense_alpha: 3.5,
+                ..on
+            })
+        );
+        assert_eq!(
+            reduce_salt(&on),
+            reduce_salt(&ReduceConfig { threads: 8, ..on }),
+            "reduction threads must not change the cache identity"
+        );
+    }
+
+    #[test]
+    fn lru_evicts_the_stalest_entry_under_a_tiny_budget() {
+        let g0 = mesh2d(10, 10);
+        let g1 = mesh2d(10, 11);
+        let g2 = mesh2d(10, 12);
+        let per_entry = entry_bytes(&g0, &None, &value(g0.n, 0.0));
+        // Budget fits two entries but not three (single shard so the
+        // whole budget is one LRU domain).
+        let cache = ResultCache::with_shards(per_entry * 2 + per_entry / 2, 1);
+        let (k0, k1, k2) = (
+            CacheKey::new(&g0, None, 7),
+            CacheKey::new(&g1, None, 7),
+            CacheKey::new(&g2, None, 7),
+        );
+        cache.insert(k0, g0.clone(), None, value(g0.n, 0.0));
+        cache.insert(k1, g1.clone(), None, value(g1.n, 0.0));
+        // Touch g0 so g1 becomes the LRU victim.
+        assert!(cache.get(&k0, &g0, None).is_some());
+        cache.insert(k2, g2.clone(), None, value(g2.n, 0.0));
+        let m = cache.metrics();
+        assert_eq!(m.evictions, 1, "third insert must evict exactly one entry");
+        assert!(m.bytes <= m.budget_bytes, "resident bytes respect the budget");
+        assert!(cache.get(&k0, &g0, None).is_some(), "recently-used survives");
+        assert!(cache.get(&k2, &g2, None).is_some(), "newest survives");
+        assert!(cache.get(&k1, &g1, None).is_none(), "LRU entry evicted");
+    }
+
+    #[test]
+    fn zero_budget_disables_everything() {
+        let cache = ResultCache::new(0);
+        let g = mesh2d(5, 5);
+        let key = CacheKey::new(&g, None, 7);
+        cache.insert(key, g.clone(), None, value(g.n, 0.0));
+        assert!(cache.get(&key, &g, None).is_none());
+        let m = cache.metrics();
+        assert_eq!((m.hits, m.misses, m.entries), (0, 0, 0));
+        assert!(!cache.is_enabled());
+    }
+
+    #[test]
+    fn shrinking_the_budget_evicts_down_and_zero_clears() {
+        let cache = ResultCache::with_shards(1 << 20, 1);
+        for i in 0..4usize {
+            let g = mesh2d(8, 8 + i);
+            cache.insert(CacheKey::new(&g, None, 7), g.clone(), None, value(g.n, 0.0));
+        }
+        assert_eq!(cache.entries(), 4);
+        let two = cache.metrics().bytes / 2;
+        cache.set_budget(two);
+        assert!(cache.metrics().bytes <= two);
+        assert!(cache.entries() < 4);
+        cache.set_budget(0);
+        assert_eq!(cache.entries(), 0, "disabling clears residency");
+        assert_eq!(cache.metrics().bytes, 0);
+    }
+
+    #[test]
+    fn oversized_entries_are_not_cached() {
+        let g = mesh2d(20, 20);
+        let cache = ResultCache::with_shards(64, 1); // far below one entry
+        let key = CacheKey::new(&g, None, 7);
+        cache.insert(key, g.clone(), None, value(g.n, 0.0));
+        assert_eq!(cache.entries(), 0);
+        assert_eq!(cache.metrics().evictions, 0);
+    }
+
+    #[test]
+    fn report_renders_the_counters() {
+        let cache = ResultCache::new(1 << 20);
+        let g = mesh2d(4, 4);
+        let key = CacheKey::new(&g, None, 7);
+        cache.insert(key, g.clone(), None, value(g.n, 0.0));
+        cache.get(&key, &g, None);
+        let r = cache.metrics().report();
+        assert!(r.contains("hits=1"), "report: {r}");
+        assert!(r.contains("entries=1"), "report: {r}");
+    }
+}

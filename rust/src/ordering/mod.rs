@@ -15,8 +15,11 @@
 //! - [`shard`] — the sharded ordering engine: component decomposition +
 //!   per-component reduction + routing across independent ParAMD
 //!   runtimes.
+//! - [`cache`] — the fingerprinted result cache: repeated graphs replay
+//!   their permutation instead of re-running the kernel at all.
 
 pub mod amd_seq;
+pub mod cache;
 pub mod md;
 pub mod mmd;
 pub mod rcm;
@@ -53,6 +56,9 @@ pub struct OrderingStats {
     pub set_sizes: Vec<u32>,
     /// Garbage collections / elbow exhaustion events.
     pub gc_count: u64,
+    /// Cumulative stop-the-world seconds spent inside those collections
+    /// (every worker is parked at a barrier while one thread compacts).
+    pub gc_secs: f64,
     /// Total quotient-graph words touched (cost-model input).
     pub work_words: u64,
     /// Per-thread per-phase work counters (cost-model input; empty for

@@ -117,12 +117,17 @@ pub struct ParAmdArena {
     /// Per-thread eliminated-this-round counts, cache-padded.
     pub(crate) sizes: Vec<CachePadded<AtomicUsize>>,
     pub(crate) progress_stall: AtomicUsize,
-    pub(crate) adaptive_mult: AtomicUsize,
+    /// The adapted relaxation factor, stored as `f64::to_bits` so any
+    /// fractional (or huge) factor round-trips exactly — the old
+    /// `(mult * 1e6) as usize` encoding quantized it lossily.
+    pub(crate) adaptive_mult: AtomicU64,
     pub(crate) poison: AtomicBool,
     /// Set by the leader when the run's cancellation flag fired; the run
     /// exits at the next round boundary without assembling a result.
     pub(crate) abort: AtomicBool,
     pub(crate) gc_count: AtomicUsize,
+    /// Cumulative stop-the-world nanoseconds spent in round-boundary GC.
+    pub(crate) gc_nanos: AtomicU64,
     pub(crate) set_sizes: Mutex<Vec<u32>>,
     pub(crate) slots: Vec<Mutex<ThreadSlot>>,
     // ---- assembly scratch (pooled like everything else) ----------------
@@ -152,10 +157,11 @@ impl ParAmdArena {
             lamds: Vec::new(),
             sizes: Vec::new(),
             progress_stall: AtomicUsize::new(0),
-            adaptive_mult: AtomicUsize::new(0),
+            adaptive_mult: AtomicU64::new(0),
             poison: AtomicBool::new(false),
             abort: AtomicBool::new(false),
             gc_count: AtomicUsize::new(0),
+            gc_nanos: AtomicU64::new(0),
             set_sizes: Mutex::new(Vec::new()),
             slots: Vec::new(),
             elim_order: Vec::new(),
@@ -245,11 +251,11 @@ impl ParAmdArena {
             s.store(0, Relaxed);
         }
         self.progress_stall.store(0, Relaxed);
-        self.adaptive_mult
-            .store((cfg.mult * 1e6) as usize, Relaxed);
+        self.adaptive_mult.store(cfg.mult.to_bits(), Relaxed);
         self.poison.store(false, Relaxed);
         self.abort.store(false, Relaxed);
         self.gc_count.store(0, Relaxed);
+        self.gc_nanos.store(0, Relaxed);
         self.set_sizes.get_mut().unwrap().clear();
         while self.slots.len() < t {
             let tid = self.slots.len();
@@ -273,6 +279,7 @@ impl ParAmdArena {
         stats.rounds = 0;
         stats.pivots = 0;
         stats.gc_count = 0;
+        stats.gc_secs = 0.0;
         stats.work_words = 0;
         stats.modeled_time = 0.0;
         stats.set_sizes.clear();
@@ -367,6 +374,7 @@ impl ParAmdArena {
         stats.pivots = self.elim_order.len() as u64;
         stats.set_sizes.clone_from(&d.set_sizes);
         stats.gc_count = self.gc_count.load(Relaxed) as u64;
+        stats.gc_secs = self.gc_nanos.load(Relaxed) as f64 / 1e9;
         stats.work_words = d
             .round_work
             .iter()
@@ -608,6 +616,21 @@ mod tests {
         let a = &v[0].0 as *const _ as usize;
         let b = &v[1].0 as *const _ as usize;
         assert!(b - a >= 128, "adjacent counters must not share a line");
+    }
+
+    #[test]
+    fn adaptive_mult_roundtrips_fractional_factors_exactly() {
+        use crate::matgen::mesh2d;
+        // 1.1 has no finite binary expansion; the old `(mult * 1e6) as
+        // usize` encoding truncated it. `f64::to_bits` must round-trip
+        // any factor bit-exactly, including large ones.
+        let g = mesh2d(4, 4);
+        let mut a = ParAmdArena::new();
+        for mult in [1.1f64, 1.000000123, 3.5e9, f64::MIN_POSITIVE] {
+            a.prepare(&g, &ParAmd::new(1).with_mult(mult), 1, None);
+            let back = f64::from_bits(a.adaptive_mult.load(Relaxed));
+            assert_eq!(back.to_bits(), mult.to_bits(), "mult {mult} mangled");
+        }
     }
 
     #[test]

@@ -264,6 +264,7 @@ impl ParAmd {
                 abort: &arena.abort,
                 cancel,
                 gc_count: &arena.gc_count,
+                gc_nanos: &arena.gc_nanos,
                 set_sizes: &arena.set_sizes,
                 t,
                 lim,
@@ -305,7 +306,8 @@ struct RunShared<'a> {
     sizes: &'a [CachePadded<AtomicUsize>],
     barrier: &'a Barrier,
     progress_stall: &'a AtomicUsize,
-    adaptive_mult: &'a AtomicUsize,
+    /// Adapted relaxation factor as `f64::to_bits` (exact round-trip).
+    adaptive_mult: &'a AtomicU64,
     poison: &'a AtomicBool,
     /// Raised by the leader once `cancel` is observed; every worker
     /// exits at the round boundary after it.
@@ -313,6 +315,8 @@ struct RunShared<'a> {
     /// External cancellation request (e.g. a dropped service ticket).
     cancel: &'a AtomicBool,
     gc_count: &'a AtomicUsize,
+    /// Stop-the-world GC nanoseconds (leader-only writes).
+    gc_nanos: &'a AtomicU64,
     set_sizes: &'a Mutex<Vec<u32>>,
     t: usize,
     lim: usize,
@@ -351,7 +355,7 @@ fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
         assert!(round <= dist2::MAX_ROUNDS, "round counter overflow");
         let mut work = RoundWork::default();
         let mult = if cfg.adaptive {
-            sh.adaptive_mult.load(Relaxed) as f64 / 1e6
+            f64::from_bits(sh.adaptive_mult.load(Relaxed))
         } else {
             cfg.mult
         };
@@ -412,13 +416,18 @@ fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
                 sh.progress_stall.fetch_add(1, Relaxed);
             }
             if sh.sg.gc_requested.load(Relaxed) {
+                // Every peer is parked at the barrier below, so this
+                // whole window is stop-the-world time.
+                let tgc = Timer::new();
                 sh.sg.garbage_collect_exclusive();
                 sh.gc_count.fetch_add(1, Relaxed);
+                sh.gc_nanos
+                    .fetch_add(tgc.elapsed().as_nanos() as u64, Relaxed);
             }
             if cfg.adaptive {
                 // §5 extension: widen the degree window when the round was
                 // starved of parallelism; relax back otherwise.
-                let cur = sh.adaptive_mult.load(Relaxed) as f64 / 1e6;
+                let cur = f64::from_bits(sh.adaptive_mult.load(Relaxed));
                 let next = if total < sh.t {
                     (cur * 1.05).min(cfg.adaptive_mult_max)
                 } else if total > 4 * sh.t {
@@ -426,7 +435,7 @@ fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
                 } else {
                     cur
                 };
-                sh.adaptive_mult.store((next * 1e6) as usize, Relaxed);
+                sh.adaptive_mult.store(next.to_bits(), Relaxed);
             }
             if sh.progress_stall.load(Relaxed) >= 3 {
                 // Elbow exhausted and GC is no longer reclaiming anything:
@@ -535,6 +544,21 @@ mod tests {
         let r = ParAmd::new(2).with_elbow(0.30).order(&g);
         check_ordering_contract(&g, &r);
         assert!(r.stats.gc_count > 0, "expected GC under a tiny elbow");
+        assert!(
+            r.stats.gc_secs > 0.0,
+            "stop-the-world GC time must be measured"
+        );
+    }
+
+    #[test]
+    fn gc_time_is_consistent_with_gc_count() {
+        let g = mesh2d(10, 10);
+        let r = ParAmd::new(1).order(&g); // default elbow: GC unexpected
+        if r.stats.gc_count == 0 {
+            assert_eq!(r.stats.gc_secs, 0.0, "no collections, no time");
+        } else {
+            assert!(r.stats.gc_secs > 0.0, "counted collections must be timed");
+        }
     }
 
     #[test]

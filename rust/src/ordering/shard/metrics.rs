@@ -34,7 +34,9 @@ pub struct ShardMetrics {
     pub requests: u64,
     /// Requests that split into more than one component.
     pub decomposed: u64,
-    /// Component jobs dispatched (singleton requests count one).
+    /// Component orderings served (singleton requests count one;
+    /// result-cache hits count here too — per-shard `jobs` is the
+    /// dispatched-work signal and does not move on a hit).
     pub components: u64,
     /// Most shards observed busy at the same time — the concurrency
     /// witness the acceptance test asserts on.
@@ -52,6 +54,12 @@ pub struct ShardMetrics {
     pub reduce_edges_removed: u64,
     /// Wall-clock seconds spent inside the reduction layer.
     pub reduce_secs: f64,
+    /// Stop-the-world quotient-graph garbage collections executed by
+    /// jobs on this engine (cache hits replay results and count none).
+    pub gc_count: u64,
+    /// Cumulative stop-the-world seconds those collections froze a
+    /// shard's worker pool for.
+    pub gc_secs: f64,
     /// Per-shard job/busy table, indexed by shard id (0 = wide shard).
     pub per_shard: Vec<ShardStat>,
     /// log2-bucketed component sizes ([`SIZE_HIST_BUCKETS`] buckets).
@@ -73,6 +81,10 @@ impl ShardMetrics {
             self.twins_merged,
             self.reduce_edges_removed,
             self.reduce_secs
+        ));
+        s.push_str(&format!(
+            "  gc: collections={} stop_the_world={:.4}s\n",
+            self.gc_count, self.gc_secs
         ));
         for (i, st) in self.per_shard.iter().enumerate() {
             s.push_str(&format!(
@@ -106,6 +118,8 @@ pub(crate) struct EngineCounters {
     pub(crate) twins_merged: AtomicU64,
     pub(crate) reduce_edges_removed: AtomicU64,
     pub(crate) reduce_nanos: AtomicU64,
+    gc_count: AtomicU64,
+    gc_nanos: AtomicU64,
     busy_now: AtomicUsize,
     busy_peak: AtomicUsize,
     size_hist: [AtomicU64; SIZE_HIST_BUCKETS],
@@ -123,6 +137,8 @@ impl EngineCounters {
             twins_merged: AtomicU64::new(0),
             reduce_edges_removed: AtomicU64::new(0),
             reduce_nanos: AtomicU64::new(0),
+            gc_count: AtomicU64::new(0),
+            gc_nanos: AtomicU64::new(0),
             busy_now: AtomicUsize::new(0),
             busy_peak: AtomicUsize::new(0),
             size_hist: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -137,6 +153,15 @@ impl EngineCounters {
         self.twins_merged.fetch_add(stats.twins_merged as u64, Relaxed);
         self.reduce_edges_removed
             .fetch_add(stats.edges_removed as u64, Relaxed);
+    }
+
+    /// Fold one finished job's stop-the-world GC tally into the engine
+    /// counters (dispatchers only — replayed cache hits never call this).
+    pub(crate) fn note_job_gc(&self, count: u64, secs: f64) {
+        if count > 0 {
+            self.gc_count.fetch_add(count, Relaxed);
+            self.gc_nanos.fetch_add((secs * 1e9) as u64, Relaxed);
+        }
     }
 
     /// Record one dispatched component of `n` vertices in the histogram.
@@ -168,6 +193,8 @@ impl EngineCounters {
             twins_merged: self.twins_merged.load(Relaxed),
             reduce_edges_removed: self.reduce_edges_removed.load(Relaxed),
             reduce_secs: self.reduce_nanos.load(Relaxed) as f64 / 1e9,
+            gc_count: self.gc_count.load(Relaxed),
+            gc_secs: self.gc_nanos.load(Relaxed) as f64 / 1e9,
             per_shard,
             size_hist: self.size_hist.iter().map(|b| b.load(Relaxed)).collect(),
         }
@@ -222,6 +249,19 @@ mod tests {
         assert!(r.contains("shard 0: threads=4 jobs=3"));
         assert!(r.contains("2^3:1"));
         assert!(r.contains("reduce: jobs=0"), "reduce line always present");
+        assert!(r.contains("gc: collections=0"), "gc line always present");
+    }
+
+    #[test]
+    fn gc_counters_accumulate_across_jobs() {
+        let c = EngineCounters::new();
+        c.note_job_gc(2, 0.25);
+        c.note_job_gc(0, 0.0); // GC-free jobs leave no trace
+        c.note_job_gc(1, 0.5);
+        let m = c.snapshot(Vec::new());
+        assert_eq!(m.gc_count, 3);
+        assert!((m.gc_secs - 0.75).abs() < 1e-6);
+        assert!(m.report().contains("gc: collections=3"));
     }
 
     #[test]

@@ -71,13 +71,30 @@
 //! before returning, which is also what makes the lifetime-erased
 //! borrows in [`GraphRef`]/[`CancelRef`] sound.
 //!
+//! ## Result cache
+//!
+//! Every engine owns a fingerprinted **result cache**
+//! ([`crate::ordering::cache`], on by default, byte-budgeted). Probes
+//! happen at two points: a whole-request probe short-circuits repeated
+//! connected requests before reduction even runs, and a per-component
+//! probe (after split + reduction, keyed on the compact kernel CSR +
+//! weights) resolves repeated components without touching a router,
+//! queue, runtime, or arena — the repeated-FEM-assembly workload where
+//! identical components recur under scattered vertex labels. Misses
+//! insert on completion; hits are exact-verified against the stored CSR
+//! so a fingerprint collision downgrades to a miss instead of
+//! corrupting a reply. A cache hit performs **zero** ParAMD work: shard
+//! job counters do not move.
+//!
 //! ## Stitching
 //!
 //! Per-component permutations merge in ascending-component-size order
 //! (deterministic, shard-placement-independent; see [`stitch`]), so a
 //! sharded ordering of a given graph is a pure function of the graph
 //! and the per-shard thread counts — with 1-thread shards it is fully
-//! deterministic, which the bit-match tests rely on.
+//! deterministic, which the bit-match tests rely on. (A cache hit
+//! replays the *first* run's result for the same graph and knobs; see
+//! the cache module docs for the width caveat.)
 
 pub mod metrics;
 pub mod router;
@@ -93,6 +110,9 @@ use std::thread::JoinHandle;
 
 use crate::graph::components::{connected_components, split_components, Component};
 use crate::graph::csr::SymGraph;
+use crate::ordering::cache::{
+    config_salt, reduce_salt, CacheKey, CacheMetrics, CachedOrdering, ResultCache,
+};
 use crate::ordering::paramd::arena::ArenaPool;
 use crate::ordering::paramd::runtime::{OrderingRuntime, QueuePolicy};
 use crate::ordering::paramd::ParAmd;
@@ -149,6 +169,8 @@ pub struct ShardReply {
     pub perm: Vec<i32>,
     pub rounds: u64,
     pub gc_count: u64,
+    /// Stop-the-world GC seconds across the request's runs.
+    pub gc_secs: f64,
     pub modeled_time: f64,
     /// Merged per-round pivot counts across components.
     pub set_sizes: Vec<u32>,
@@ -215,6 +237,9 @@ struct ShardJob {
     cancel: CancelRef,
     batch: Arc<Batch>,
     index: usize,
+    /// When set, this job was a cache miss under this key: the
+    /// dispatcher inserts the (kernel-level) result on completion.
+    cache_key: Option<CacheKey>,
 }
 
 /// How one job of a batch resolved.
@@ -230,8 +255,58 @@ struct CompDone {
     perm: Vec<i32>,
     rounds: u64,
     gc_count: u64,
+    gc_secs: f64,
     modeled_time: f64,
     set_sizes: Vec<u32>,
+}
+
+impl CompDone {
+    /// The cache-entry view of this result (kernel/component level;
+    /// `reduced` is the caller's bookkeeping, not the entry's).
+    fn to_cached(&self) -> CachedOrdering {
+        CachedOrdering {
+            perm: self.perm.clone(),
+            rounds: self.rounds,
+            gc_count: self.gc_count,
+            gc_secs: self.gc_secs,
+            modeled_time: self.modeled_time,
+            set_sizes: self.set_sizes.clone(),
+            reduced: 0,
+        }
+    }
+
+    fn from_cached(c: CachedOrdering) -> Self {
+        Self {
+            perm: c.perm,
+            rounds: c.rounds,
+            gc_count: c.gc_count,
+            gc_secs: c.gc_secs,
+            modeled_time: c.modeled_time,
+            set_sizes: c.set_sizes,
+        }
+    }
+}
+
+/// Expand a kernel-level ordering result into the component-level result
+/// a reduced job reports: the permutation expands through the plan and
+/// the prefix/tail vertices surface as one extra "reduction round" (the
+/// same accounting the live dispatch path uses, so cache hits and misses
+/// are indistinguishable downstream).
+fn expand_done(plan: &ReductionPlan, kernel: &CachedOrdering) -> CompDone {
+    let pre = plan.pre_ordered();
+    let mut set_sizes = Vec::with_capacity(kernel.set_sizes.len() + 1);
+    if pre > 0 {
+        set_sizes.push(pre as u32);
+    }
+    set_sizes.extend_from_slice(&kernel.set_sizes);
+    CompDone {
+        perm: plan.expand(&kernel.perm),
+        rounds: kernel.rounds + u64::from(pre > 0),
+        gc_count: kernel.gc_count,
+        gc_secs: kernel.gc_secs,
+        modeled_time: kernel.modeled_time,
+        set_sizes,
+    }
 }
 
 /// Completion latch of one request's jobs: dispatchers resolve slots,
@@ -363,10 +438,18 @@ struct Shard {
     busy_nanos: AtomicU64,
 }
 
-fn dispatcher_loop(shard: &Shard, counters: &EngineCounters) {
+fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache) {
     while let Some(job) = shard.queue.pop() {
-        let weight = job.weight as u64;
-        let outcome = if job.cancel.get().load(Relaxed) {
+        let ShardJob {
+            payload,
+            weight,
+            cfg,
+            cancel,
+            batch,
+            index,
+            cache_key,
+        } = job;
+        let outcome = if cancel.get().load(Relaxed) {
             SlotState::Cancelled
         } else {
             counters.enter_busy();
@@ -374,23 +457,26 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters) {
                 // The pooled warm storage; the guard releases on every
                 // exit path, including unwind.
                 let mut arena = shard.arenas.checkout();
-                let cancel = job.cancel.get();
+                let cancel = cancel.get();
                 // Busy time starts after the arena is in hand, so it
                 // measures ordering work, not checkout waits.
                 let t = Timer::new();
-                let out = match &job.payload {
-                    JobPayload::Direct(graph) => job
-                        .cfg
+                let out = match &payload {
+                    JobPayload::Direct(graph) => cfg
                         .order_into_cancellable(&shard.rt, &mut arena, graph.get(), cancel)
-                        .map(|r| CompDone {
-                            perm: r.perm.clone(),
-                            rounds: r.stats.rounds,
-                            gc_count: r.stats.gc_count,
-                            modeled_time: r.stats.modeled_time,
-                            set_sizes: r.stats.set_sizes.clone(),
+                        .map(|r| {
+                            let done = CompDone {
+                                perm: r.perm.clone(),
+                                rounds: r.stats.rounds,
+                                gc_count: r.stats.gc_count,
+                                gc_secs: r.stats.gc_secs,
+                                modeled_time: r.stats.modeled_time,
+                                set_sizes: r.stats.set_sizes.clone(),
+                            };
+                            let insert = cache_key.map(|_| done.to_cached());
+                            (done, insert)
                         }),
-                    JobPayload::Reduced(plan) => job
-                        .cfg
+                    JobPayload::Reduced(plan) => cfg
                         .order_into_cancellable_weighted(
                             &shard.rt,
                             &mut arena,
@@ -399,24 +485,25 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters) {
                             cancel,
                         )
                         .map(|r| {
-                            // The prefix/tail vertices never enter a
-                            // kernel round; report them as one extra
-                            // "reduction round" so the merged log still
-                            // accounts for every pre-ordered vertex.
-                            let pre = plan.pre_ordered();
-                            let mut set_sizes =
-                                Vec::with_capacity(r.stats.set_sizes.len() + 1);
-                            if pre > 0 {
-                                set_sizes.push(pre as u32);
-                            }
-                            set_sizes.extend_from_slice(&r.stats.set_sizes);
-                            CompDone {
-                                perm: plan.expand(&r.perm),
-                                rounds: r.stats.rounds + u64::from(pre > 0),
+                            // The cacheable unit is the *kernel* result:
+                            // a later component that reduces to the same
+                            // weighted kernel expands it through its own
+                            // plan. Expansion reports the prefix/tail
+                            // vertices as one extra "reduction round" so
+                            // the merged log still accounts for every
+                            // pre-ordered vertex.
+                            let kernel = CachedOrdering {
+                                perm: r.perm.clone(),
+                                rounds: r.stats.rounds,
                                 gc_count: r.stats.gc_count,
+                                gc_secs: r.stats.gc_secs,
                                 modeled_time: r.stats.modeled_time,
-                                set_sizes,
-                            }
+                                set_sizes: r.stats.set_sizes.clone(),
+                                reduced: 0,
+                            };
+                            let done = expand_done(plan, &kernel);
+                            let insert = cache_key.map(|_| kernel);
+                            (done, insert)
                         }),
                 };
                 shard.busy_nanos.fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
@@ -425,15 +512,33 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters) {
             shard.jobs_done.fetch_add(1, Relaxed);
             counters.exit_busy();
             match res {
-                Ok(Some(done)) => SlotState::Done(done),
+                Ok(Some((done, insert))) => {
+                    counters.note_job_gc(done.gc_count, done.gc_secs);
+                    if let (Some(key), Some(value)) = (cache_key, insert) {
+                        // A miss inserts on completion; the payload is
+                        // consumed into the entry's exact-verify copy.
+                        let (graph, weights): (SymGraph, Option<Vec<i32>>) = match payload {
+                            JobPayload::Direct(GraphRef::Owned(g)) => (g, None),
+                            JobPayload::Direct(GraphRef::Borrowed(_)) => unreachable!(
+                                "borrowed jobs use request-level inserts, never a job-level key"
+                            ),
+                            JobPayload::Reduced(plan) => {
+                                let plan = *plan;
+                                (plan.kernel, Some(plan.weights))
+                            }
+                        };
+                        cache.insert(key, graph, weights, value);
+                    }
+                    SlotState::Done(done)
+                }
                 Ok(None) => SlotState::Cancelled,
                 Err(p) => SlotState::Panicked(panic_message(&p)),
             }
         };
-        shard.load.fetch_sub(weight, Relaxed);
+        shard.load.fetch_sub(weight as u64, Relaxed);
         // Resolve last: the submitter may drop the graph/cancel borrows
         // the moment its batch completes.
-        job.batch.resolve(job.index, outcome);
+        batch.resolve(index, outcome);
     }
 }
 
@@ -447,10 +552,24 @@ pub struct ShardEngine {
     spec: ShardSpec,
     /// Pre-ordering reduction config (on by default; see [`Self::set_reduce`]).
     reduce_cfg: Mutex<ReduceConfig>,
+    /// The fingerprinted result cache, shared with every dispatcher (the
+    /// coordinator carries the same handle across engine rebuilds so
+    /// warm entries survive a reshape).
+    cache: Arc<ResultCache>,
 }
 
 impl ShardEngine {
+    /// An engine with a fresh default-budget result cache.
     pub fn new(spec: ShardSpec) -> Self {
+        Self::with_result_cache(
+            spec,
+            Arc::new(ResultCache::new(crate::ordering::cache::DEFAULT_BUDGET_BYTES)),
+        )
+    }
+
+    /// An engine sharing an existing result cache — the rebuild path:
+    /// entries cached by a replaced engine keep serving the new one.
+    pub fn with_result_cache(spec: ShardSpec, cache: Arc<ResultCache>) -> Self {
         let shards: Vec<Arc<Shard>> = spec
             .thread_plan()
             .into_iter()
@@ -473,9 +592,10 @@ impl ShardEngine {
             .map(|(i, sh)| {
                 let sh = Arc::clone(sh);
                 let c = Arc::clone(&counters);
+                let cache = Arc::clone(&cache);
                 std::thread::Builder::new()
                     .name(format!("paramd-shard-{i}"))
-                    .spawn(move || dispatcher_loop(&sh, &c))
+                    .spawn(move || dispatcher_loop(&sh, &c, &cache))
                     .expect("spawn shard dispatcher")
             })
             .collect();
@@ -489,7 +609,19 @@ impl ShardEngine {
                 threads: spec.wide_threads,
                 ..ReduceConfig::default()
             }),
+            cache,
         }
+    }
+
+    /// The engine's result cache handle (budget knobs, metrics; hand it
+    /// to [`Self::with_result_cache`] when rebuilding the engine).
+    pub fn result_cache(&self) -> &Arc<ResultCache> {
+        &self.cache
+    }
+
+    /// Snapshot of the result-cache counters.
+    pub fn cache_metrics(&self) -> CacheMetrics {
+        self.cache.metrics()
     }
 
     /// The spec this engine was built with.
@@ -595,9 +727,16 @@ impl ShardEngine {
         cancel: &AtomicBool,
     ) -> Option<ShardReply> {
         self.counters.requests.fetch_add(1, Relaxed);
+        let salt = config_salt(&cfg);
         let comps = connected_components(g);
         if comps.is_connected() {
-            return self.order_connected(g, cfg, cancel);
+            // The whole-request probe lives on the connected path (only
+            // connected replies store request-level entries) — so a
+            // disconnected request never pays a guaranteed-miss
+            // fingerprint of its full CSR; its cache identity lives at
+            // component granularity, where compact extraction
+            // normalizes scattered vertex labels away.
+            return self.order_connected(g, cfg, cancel, salt);
         }
 
         self.counters.decomposed.fetch_add(1, Relaxed);
@@ -609,36 +748,67 @@ impl ShardEngine {
         // Reduce every component (in parallel across components) before
         // routing, so placement works on post-reduction sizes.
         let (payloads, works, reduced) = self.reduce_components(parts);
-        let assign = router::plan(&works, &self.loads(), &self.thread_counts());
-        let batch = Batch::new(payloads.len());
-        let mut old_maps: Vec<Vec<i32>> = Vec::with_capacity(payloads.len());
-        for (index, (payload, old_of_new)) in payloads.into_iter().enumerate() {
+        let k = payloads.len();
+
+        // Per-component cache probe: a hit resolves its component on the
+        // spot — no router, queue, runtime, or arena — and only misses
+        // become jobs (which insert on completion). All probes precede
+        // all enqueues, so resolution within a request is deterministic.
+        let mut resolved: Vec<Option<CompDone>> = Vec::new();
+        resolved.resize_with(k, || None);
+        let mut keys: Vec<Option<CacheKey>> = vec![None; k];
+        if self.cache.is_enabled() && !cancel.load(Relaxed) {
+            for (i, (payload, _)) in payloads.iter().enumerate() {
+                let (graph, weights): (&SymGraph, Option<&[i32]>) = match payload {
+                    JobPayload::Direct(gr) => (gr.get(), None),
+                    JobPayload::Reduced(plan) => (&plan.kernel, Some(&plan.weights)),
+                };
+                let key = CacheKey::new(graph, weights, salt);
+                match self.cache.get(&key, graph, weights) {
+                    Some(hit) => {
+                        resolved[i] = Some(match payload {
+                            JobPayload::Direct(_) => CompDone::from_cached(hit),
+                            JobPayload::Reduced(plan) => expand_done(plan, &hit),
+                        })
+                    }
+                    None => keys[i] = Some(key),
+                }
+            }
+        }
+
+        let miss_works: Vec<u64> = (0..k)
+            .filter(|&i| resolved[i].is_none())
+            .map(|i| works[i])
+            .collect();
+        let assign = router::plan(&miss_works, &self.loads(), &self.thread_counts());
+        let batch = Batch::new(miss_works.len());
+        let mut comp_of_slot: Vec<usize> = Vec::with_capacity(miss_works.len());
+        let mut old_maps: Vec<Vec<i32>> = Vec::with_capacity(k);
+        for (i, (payload, old_of_new)) in payloads.into_iter().enumerate() {
             old_maps.push(old_of_new);
+            if resolved[i].is_some() {
+                continue; // cache hit: the payload (and any plan) is spent
+            }
+            let slot = comp_of_slot.len();
+            comp_of_slot.push(i);
             let job = ShardJob {
                 payload,
-                weight: works[index] as usize,
+                weight: works[i] as usize,
                 cfg,
                 cancel: CancelRef(cancel as *const AtomicBool),
                 batch: Arc::clone(&batch),
-                index,
+                index: slot,
+                cache_key: keys[i],
             };
-            self.enqueue(assign[index], job);
+            self.enqueue(assign[slot], job);
         }
 
         let slots = batch.wait();
-        let mut results: Vec<ComponentResult> = Vec::with_capacity(slots.len());
         let mut cancelled = false;
         let mut panicked: Option<String> = None;
-        for (index, slot) in slots.into_iter().enumerate() {
-            match slot {
-                SlotState::Done(d) => results.push(ComponentResult {
-                    old_of_new: std::mem::take(&mut old_maps[index]),
-                    perm: d.perm,
-                    rounds: d.rounds,
-                    gc_count: d.gc_count,
-                    modeled_time: d.modeled_time,
-                    set_sizes: d.set_sizes,
-                }),
+        for (slot, state) in slots.into_iter().enumerate() {
+            match state {
+                SlotState::Done(d) => resolved[comp_of_slot[slot]] = Some(d),
                 SlotState::Cancelled => cancelled = true,
                 SlotState::Panicked(why) => panicked = Some(why),
                 SlotState::Pending => unreachable!("batch resolved with a pending slot"),
@@ -650,16 +820,66 @@ impl ShardEngine {
         if cancelled {
             return None;
         }
+        let mut results: Vec<ComponentResult> = Vec::with_capacity(k);
+        for (i, done) in resolved.into_iter().enumerate() {
+            let d = done.expect("every uncancelled component resolves");
+            results.push(ComponentResult {
+                old_of_new: std::mem::take(&mut old_maps[i]),
+                perm: d.perm,
+                rounds: d.rounds,
+                gc_count: d.gc_count,
+                gc_secs: d.gc_secs,
+                modeled_time: d.modeled_time,
+                set_sizes: d.set_sizes,
+            });
+        }
         let stitched = stitch::stitch(g.n, &results);
         Some(ShardReply {
             perm: stitched.perm,
             rounds: stitched.rounds,
             gc_count: stitched.gc_count,
+            gc_secs: stitched.gc_secs,
             modeled_time: stitched.modeled_time,
             set_sizes: stitched.set_sizes,
             components: results.len(),
             reduced,
         })
+    }
+
+    /// A [`ShardReply`] replayed from a request-level cache entry.
+    fn reply_from_cached(hit: CachedOrdering) -> ShardReply {
+        ShardReply {
+            perm: hit.perm,
+            rounds: hit.rounds,
+            gc_count: hit.gc_count,
+            gc_secs: hit.gc_secs,
+            modeled_time: hit.modeled_time,
+            set_sizes: hit.set_sizes,
+            components: 1,
+            reduced: hit.reduced,
+        }
+    }
+
+    /// Promote a finished connected reply to a request-level cache entry
+    /// keyed on the caller's graph, so the next identical request
+    /// short-circuits before reduction even runs.
+    fn insert_request_entry(&self, key: Option<CacheKey>, g: &SymGraph, reply: &ShardReply) {
+        if let Some(key) = key {
+            self.cache.insert(
+                key,
+                g.clone(),
+                None,
+                CachedOrdering {
+                    perm: reply.perm.clone(),
+                    rounds: reply.rounds,
+                    gc_count: reply.gc_count,
+                    gc_secs: reply.gc_secs,
+                    modeled_time: reply.modeled_time,
+                    set_sizes: reply.set_sizes.clone(),
+                    reduced: reply.reduced,
+                },
+            );
+        }
     }
 
     /// Run the reduction layer over extracted components — chunked over
@@ -746,10 +966,28 @@ impl ShardEngine {
         g: &SymGraph,
         cfg: ParAmd,
         cancel: &AtomicBool,
+        salt: u64,
     ) -> Option<ShardReply> {
         self.counters.components.fetch_add(1, Relaxed);
         self.counters.note_component(g.n);
         let rcfg = self.reduce_config();
+        // Whole-request fast path, probed before reduction even runs. A
+        // request-level entry bakes the reduction outcome into its
+        // stored permutation, so its salt also folds in the reduction
+        // config — toggling `--no-reduce` or `α` on a warm engine must
+        // miss and recompute, never replay a stale path. (Hits don't
+        // move the per-shard job counters: those are the
+        // dispatched-work signal.)
+        let request_key = if self.cache.is_enabled() && g.n > 0 && !cancel.load(Relaxed) {
+            let request_salt = crate::util::rng::splitmix64(salt ^ reduce_salt(&rcfg));
+            let key = CacheKey::new(g, None, request_salt);
+            if let Some(hit) = self.cache.get(&key, g, None) {
+                return Some(Self::reply_from_cached(hit));
+            }
+            Some(key)
+        } else {
+            None
+        };
         let mut reduced = 0usize;
         let payload = if rcfg.is_enabled() && g.n > 0 {
             let t = Timer::new();
@@ -768,6 +1006,33 @@ impl ShardEngine {
         } else {
             JobPayload::Direct(GraphRef::Borrowed(g as *const SymGraph))
         };
+        // Kernel-level probe: a different request that reduces to the
+        // same weighted kernel replays it here; the expanded reply is
+        // then promoted to a request-level entry for next time. An
+        // irreducible (borrowed) request needs no job-level key — the
+        // request-level entry inserted on completion *is* its identity.
+        let mut cache_key: Option<CacheKey> = None;
+        if let JobPayload::Reduced(plan) = &payload {
+            if self.cache.is_enabled() && !cancel.load(Relaxed) {
+                let key = CacheKey::new(&plan.kernel, Some(&plan.weights), salt);
+                if let Some(hit) = self.cache.get(&key, &plan.kernel, Some(&plan.weights)) {
+                    let d = expand_done(plan, &hit);
+                    let reply = ShardReply {
+                        perm: d.perm,
+                        rounds: d.rounds,
+                        gc_count: d.gc_count,
+                        gc_secs: d.gc_secs,
+                        modeled_time: d.modeled_time,
+                        set_sizes: d.set_sizes,
+                        components: 1,
+                        reduced,
+                    };
+                    self.insert_request_entry(request_key, g, &reply);
+                    return Some(reply);
+                }
+                cache_key = Some(key);
+            }
+        }
         let work = match &payload {
             JobPayload::Reduced(plan) => {
                 router::work_estimate(plan.kernel.n, plan.kernel.nedges())
@@ -783,19 +1048,25 @@ impl ShardEngine {
             cancel: CancelRef(cancel as *const AtomicBool),
             batch: Arc::clone(&batch),
             index: 0,
+            cache_key,
         };
         self.enqueue(s, job);
         let mut slots = batch.wait();
         match slots.pop().expect("one slot") {
-            SlotState::Done(d) => Some(ShardReply {
-                perm: d.perm,
-                rounds: d.rounds,
-                gc_count: d.gc_count,
-                modeled_time: d.modeled_time,
-                set_sizes: d.set_sizes,
-                components: 1,
-                reduced,
-            }),
+            SlotState::Done(d) => {
+                let reply = ShardReply {
+                    perm: d.perm,
+                    rounds: d.rounds,
+                    gc_count: d.gc_count,
+                    gc_secs: d.gc_secs,
+                    modeled_time: d.modeled_time,
+                    set_sizes: d.set_sizes,
+                    components: 1,
+                    reduced,
+                };
+                self.insert_request_entry(request_key, g, &reply);
+                Some(reply)
+            }
             SlotState::Cancelled => None,
             SlotState::Panicked(why) => panic!("sharded ordering job panicked: {why}"),
             SlotState::Pending => unreachable!("batch resolved with a pending slot"),
@@ -966,5 +1237,107 @@ mod tests {
         engine.shutdown_join();
         engine.shutdown_join();
         drop(engine); // must not hang
+    }
+
+    fn total_jobs(engine: &ShardEngine) -> u64 {
+        engine.metrics().per_shard.iter().map(|s| s.jobs).sum()
+    }
+
+    #[test]
+    fn repeated_connected_request_hits_the_cache_with_zero_jobs() {
+        let g = mesh2d(15, 15);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let first = engine.order(&g, ParAmd::new(1));
+        let jobs = total_jobs(&engine);
+        assert_eq!(jobs, 1);
+        let second = engine.order(&g, ParAmd::new(1));
+        assert_eq!(second.perm, first.perm, "hit must bit-match the first run");
+        assert_eq!(second.rounds, first.rounds);
+        assert_eq!(second.set_sizes, first.set_sizes);
+        assert_eq!(
+            total_jobs(&engine),
+            jobs,
+            "a cache hit must perform zero ParAMD work"
+        );
+        let cm = engine.cache_metrics();
+        assert_eq!(cm.hits, 1);
+        assert!(cm.entries >= 1);
+    }
+
+    #[test]
+    fn repeated_components_hit_per_component_with_zero_jobs() {
+        // A repeat of the whole request re-splits deterministically into
+        // the same compact component CSRs, so every component probe hits.
+        let g = multi_component(6, &[40, 55, 70]);
+        let engine = ShardEngine::new(ShardSpec::uniform(3, 1));
+        let first = engine.order(&g, ParAmd::new(1));
+        let jobs = total_jobs(&engine);
+        assert_eq!(jobs, 6, "cold request orders every component");
+        let second = engine.order(&g, ParAmd::new(1));
+        assert_eq!(second.perm, first.perm);
+        assert_eq!(second.components, 6);
+        assert_eq!(
+            total_jobs(&engine),
+            jobs,
+            "repeat must be served entirely from the component cache"
+        );
+        assert_eq!(engine.cache_metrics().hits, 6);
+    }
+
+    #[test]
+    fn reduced_connected_repeat_skips_reduction_via_the_request_entry() {
+        let g = crate::matgen::twin_heavy(180, 6);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let first = engine.order(&g, ParAmd::new(1));
+        let reduce_jobs = engine.metrics().reduced_jobs;
+        assert_eq!(reduce_jobs, 1);
+        let second = engine.order(&g, ParAmd::new(1));
+        assert_eq!(second.perm, first.perm);
+        assert_eq!(second.reduced, first.reduced, "hit replays the reduced count");
+        assert_eq!(
+            engine.metrics().reduced_jobs,
+            reduce_jobs,
+            "the request-level entry must short-circuit before reduction"
+        );
+    }
+
+    #[test]
+    fn toggling_reduction_invalidates_request_entries() {
+        // A request-level entry bakes the reduction outcome into its
+        // permutation; flipping the reduction knobs must recompute, not
+        // replay the stale path.
+        let g = crate::matgen::twin_heavy(160, 4);
+        let engine = ShardEngine::new(ShardSpec::uniform(1, 1));
+        let first = engine.order(&g, ParAmd::new(1));
+        assert!(first.reduced > 0, "twin-heavy input must reduce");
+        engine.set_reduce(crate::ordering::reduce::ReduceConfig::disabled());
+        let second = engine.order(&g, ParAmd::new(1));
+        assert_eq!(second.reduced, 0, "disabled reduction must not replay");
+        assert_eq!(total_jobs(&engine), 2, "the toggled repeat must re-order");
+    }
+
+    #[test]
+    fn different_quality_knobs_do_not_share_entries() {
+        let g = mesh2d(14, 14);
+        let engine = ShardEngine::new(ShardSpec::uniform(1, 1));
+        engine.order(&g, ParAmd::new(1));
+        engine.order(&g, ParAmd::new(1).with_mult(1.4));
+        assert_eq!(
+            total_jobs(&engine),
+            2,
+            "a different mult must miss, not replay the wrong knobs"
+        );
+    }
+
+    #[test]
+    fn disabled_cache_reorders_every_repeat() {
+        let g = mesh2d(12, 12);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        engine.result_cache().set_budget(0);
+        engine.order(&g, ParAmd::new(1));
+        engine.order(&g, ParAmd::new(1));
+        assert_eq!(total_jobs(&engine), 2, "no-cache repeats must re-order");
+        let cm = engine.cache_metrics();
+        assert_eq!((cm.hits, cm.misses, cm.entries), (0, 0, 0));
     }
 }

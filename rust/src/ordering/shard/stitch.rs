@@ -22,6 +22,8 @@ pub struct ComponentResult {
     pub perm: Vec<i32>,
     pub rounds: u64,
     pub gc_count: u64,
+    /// Stop-the-world GC seconds of this component's run.
+    pub gc_secs: f64,
     pub modeled_time: f64,
     /// Per-round distance-2 set sizes of this component's run.
     pub set_sizes: Vec<u32>,
@@ -36,6 +38,9 @@ pub struct StitchedOrdering {
     pub rounds: u64,
     /// Total garbage collections across components.
     pub gc_count: u64,
+    /// Total stop-the-world GC seconds across components (GC stalls only
+    /// one shard's pool, but the seconds still sum as spent work).
+    pub gc_secs: f64,
     /// Slowest component's modeled parallel time.
     pub modeled_time: f64,
     /// Merged per-round pivot counts (element-wise sum over components).
@@ -56,6 +61,7 @@ pub fn stitch(n: usize, comps: &[ComponentResult]) -> StitchedOrdering {
         }
         out.rounds = out.rounds.max(c.rounds);
         out.gc_count += c.gc_count;
+        out.gc_secs += c.gc_secs;
         out.modeled_time = out.modeled_time.max(c.modeled_time);
         for (r, &s) in c.set_sizes.iter().enumerate() {
             if out.set_sizes.len() <= r {
@@ -79,6 +85,7 @@ mod tests {
             perm,
             rounds,
             gc_count: 1,
+            gc_secs: 0.125,
             modeled_time: rounds as f64,
             set_sizes: sets,
         }
@@ -98,6 +105,7 @@ mod tests {
         assert_eq!(s.perm, vec![5, 2, 1, 3, 0]);
         assert_eq!(s.rounds, 3, "rounds overlap, take the max");
         assert_eq!(s.gc_count, 2);
+        assert!((s.gc_secs - 0.25).abs() < 1e-12, "GC seconds sum");
         assert_eq!(s.set_sizes, vec![2, 2, 1], "round-wise sum");
         assert!((s.modeled_time - 3.0).abs() < 1e-12);
     }

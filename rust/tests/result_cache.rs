@@ -1,0 +1,173 @@
+//! Result-cache integration: hit-vs-cold bit-match, forged-fingerprint
+//! verify-reject, LRU eviction under a tiny byte cap, cross-request
+//! component sharing under scattered labels, and a concurrent-hit
+//! stress through the full service pipeline — including the acceptance
+//! criterion that a cache hit performs **zero** ParAMD work (the shard
+//! runtimes' job counters must not move for a repeated request).
+
+use paramd::coordinator::{Method, Metrics, OrderRequest, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::graph::fingerprint::fingerprint;
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::{mesh2d, repeated_components_seeded};
+use paramd::ordering::cache::{CacheKey, CachedOrdering, ResultCache};
+
+fn paramd_req(g: SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+fn shard_jobs(m: &Metrics) -> u64 {
+    m.shards.per_shard.iter().map(|s| s.jobs).sum()
+}
+
+#[test]
+fn hot_hit_bitmatches_the_cold_run_with_zero_paramd_work() {
+    let svc = Service::new(1);
+    let req = paramd_req(mesh2d(16, 16));
+    let cold = svc.order(&req);
+    let jobs_after_cold = shard_jobs(&svc.metrics());
+    assert!(jobs_after_cold >= 1, "the cold run must order for real");
+    for _ in 0..3 {
+        let hot = svc.order(&req);
+        assert_eq!(hot.perm, cold.perm, "hot hit must bit-match the cold run");
+        assert_eq!(hot.rounds, cold.rounds);
+        assert_eq!(hot.gc_count, cold.gc_count);
+    }
+    let m = svc.metrics();
+    assert_eq!(
+        shard_jobs(&m),
+        jobs_after_cold,
+        "acceptance: a cache hit performs zero ParAMD work"
+    );
+    assert_eq!(m.cache.hits, 3);
+    assert_eq!(m.pipeline.completed, 4, "every request still gets a reply");
+}
+
+#[test]
+fn forged_fingerprint_verify_rejects_into_a_correct_miss() {
+    // Simulate a full 128-bit fingerprint collision by inserting graph
+    // A's result under its key and probing with a different graph B
+    // under that same key: the exact CSR compare must reject, the probe
+    // must register as a miss, and nothing must be corrupted.
+    let cache = ResultCache::with_shards(1 << 20, 1);
+    let a = mesh2d(9, 9);
+    let b = mesh2d(9, 10); // same archetype family, different structure
+    assert_ne!(fingerprint(&a), fingerprint(&b), "honest keys differ");
+    let key_a = CacheKey::new(&a, None, 42);
+    cache.insert(
+        key_a,
+        a.clone(),
+        None,
+        CachedOrdering {
+            perm: (0..a.n as i32).collect(),
+            rounds: 1,
+            gc_count: 0,
+            gc_secs: 0.0,
+            modeled_time: 0.0,
+            set_sizes: vec![a.n as u32],
+            reduced: 0,
+        },
+    );
+    assert!(
+        cache.get(&key_a, &b, None).is_none(),
+        "forged probe must fall through to a miss, never return A's perm"
+    );
+    let m = cache.metrics();
+    assert_eq!(m.verify_rejects, 1);
+    assert_eq!(m.misses, 1);
+    assert_eq!(m.hits, 0);
+    // The honest owner of the key is still served.
+    let honest = cache.get(&key_a, &a, None).expect("entry intact");
+    assert_eq!(honest.perm.len(), a.n);
+}
+
+#[test]
+fn lru_eviction_respects_a_tiny_byte_cap_through_the_service() {
+    // A cache that holds one mesh entry but not two: alternating two
+    // graphs keeps evicting, so repeats are misses again — and the
+    // budget is never exceeded.
+    let svc = Service::new(1).with_result_cache(8 << 10);
+    let g1 = mesh2d(14, 14);
+    let g2 = mesh2d(14, 15);
+    for _ in 0..2 {
+        svc.order(&paramd_req(g1.clone()));
+        svc.order(&paramd_req(g2.clone()));
+    }
+    let m = svc.metrics();
+    assert!(m.cache.evictions > 0, "the cap must force evictions");
+    assert!(
+        m.cache.bytes <= m.cache.budget_bytes,
+        "residency {} exceeds budget {}",
+        m.cache.bytes,
+        m.cache.budget_bytes
+    );
+    assert_eq!(shard_jobs(&m), 4, "every evicted repeat re-orders");
+}
+
+#[test]
+fn scattered_label_requests_share_component_entries() {
+    // The cache's target workload: distinct requests whose whole-graph
+    // CSRs differ (different scatter seeds) but whose components are
+    // identical. The second request must be served entirely from the
+    // component cache — zero new shard jobs.
+    let svc = Service::new(1).with_shards(2).with_shard_threads(1);
+    let first = svc.order(&paramd_req(repeated_components_seeded(3, 40, 2, 1)));
+    assert!(is_valid_perm(&first.perm));
+    let jobs_cold = shard_jobs(&svc.metrics());
+    assert_eq!(jobs_cold, 6, "six components order cold");
+
+    let second = svc.order(&paramd_req(repeated_components_seeded(3, 40, 2, 2)));
+    assert!(is_valid_perm(&second.perm));
+    assert_eq!(second.perm.len(), first.perm.len());
+    let m = svc.metrics();
+    assert_eq!(
+        shard_jobs(&m),
+        jobs_cold,
+        "a scattered repeat must not touch the runtimes"
+    );
+    assert_eq!(m.cache.hits, 6, "every component of the repeat hits");
+    assert!(m.cache.saved_secs >= 0.0);
+}
+
+#[test]
+fn stress_8_submitters_hit_concurrently_through_the_pipeline() {
+    let svc = Service::new(2)
+        .with_shards(2)
+        .with_shard_threads(1)
+        .with_scheduler_threads(4);
+    let g = mesh2d(18, 18);
+    // Warm the entry once, then hammer it from 8 threads.
+    let warm = svc.order(&paramd_req(g.clone()));
+    let jobs_after_warm = shard_jobs(&svc.metrics());
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            let svc = &svc;
+            let warm = &warm;
+            let g = &g;
+            s.spawn(move || {
+                for _ in 0..4 {
+                    let rep = svc.order(&paramd_req(g.clone()));
+                    assert_eq!(rep.perm, warm.perm, "concurrent hit diverged");
+                }
+            });
+        }
+    });
+    let m = svc.metrics();
+    assert_eq!(m.cache.hits, 32, "all 32 repeats must hit");
+    assert_eq!(m.cache.verify_rejects, 0);
+    assert_eq!(
+        shard_jobs(&m),
+        jobs_after_warm,
+        "32 concurrent hits must perform zero ParAMD work"
+    );
+    assert_eq!(m.pipeline.completed, 33);
+}
