@@ -1,0 +1,136 @@
+//! ND×ParAMD hybrid vs single-wide-shard ordering of ONE huge connected
+//! mesh — the workload where component decomposition finds nothing to
+//! parallelize across.
+//!
+//! Two engines, equal total worker threads:
+//!
+//! - **baseline** — one wide shard: the connected request runs as a
+//!   single borrowed job (parallelism only *inside* elimination steps).
+//! - **hybrid** — four shards with the hybrid planner on: the mesh is
+//!   cut into independent subdomains that order concurrently across the
+//!   shards, separators last.
+//!
+//! The acceptance bar is hybrid wall-clock below the baseline with
+//! fill-in within 1.15× of pure ParAMD. Writes the JSON trajectory file
+//! `BENCH_nd_hybrid.json` (override with `PARAMD_BENCH_HYBRID_OUT`;
+//! default lands in the repository root when run via `cargo bench` from
+//! `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 3), or
+//! `--smoke` for a quick CI pass (full scale is a 450×450 mesh —
+//! 202,500 vertices, the >= 200k acceptance scenario).
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::matgen::mesh2d;
+use paramd::ordering::hybrid::HybridConfig;
+use paramd::ordering::paramd::ParAmd;
+use paramd::ordering::shard::{ShardEngine, ShardSpec};
+use paramd::symbolic::fill_in;
+use paramd::util::timer::Timer;
+
+fn main() {
+    bench_common::banner(
+        "ND x ParAMD hybrid — one huge connected mesh across shards",
+        "ISSUE 6 perf subsystem; not a paper table",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = bench_common::threads();
+    let reps: usize = if smoke {
+        1
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3)
+    };
+    let side = if smoke { 200 } else { 450 };
+    let g = mesh2d(side, side);
+    let cfg = ParAmd::new(threads);
+    let hybrid = HybridConfig {
+        enabled: true,
+        partition_threshold: 10_000,
+        recursion_depth: 2,
+        balance_factor: 1.3,
+    };
+
+    // Baseline: one wide shard, hybrid off — the whole mesh is a single
+    // job. The cache is disabled on both engines so every rep measures
+    // real ordering work.
+    let baseline = ShardEngine::new(ShardSpec::new(1, threads, 1));
+    baseline.result_cache().set_budget(0);
+    baseline.order(&g, cfg); // warm the arenas
+    let t = Timer::new();
+    let mut base_perm = Vec::new();
+    for _ in 0..reps {
+        base_perm = baseline.order(&g, cfg).perm;
+    }
+    let base_secs = t.secs() / reps as f64;
+    let base_fill = fill_in(&g, &base_perm);
+    drop(baseline);
+
+    // Hybrid: the same total thread count spread over four shards.
+    let per_shard = (threads / 4).max(1);
+    let engine = ShardEngine::new(ShardSpec::uniform(4, per_shard));
+    engine.result_cache().set_budget(0);
+    engine.set_hybrid(hybrid);
+    engine.order(&g, cfg); // warm the arenas + one partition
+    let t = Timer::new();
+    let mut hyb_perm = Vec::new();
+    for _ in 0..reps {
+        hyb_perm = engine.order(&g, cfg).perm;
+    }
+    let hyb_secs = t.secs() / reps as f64;
+    let hyb_fill = fill_in(&g, &hyb_perm);
+
+    let m = engine.metrics();
+    let speedup = base_secs / hyb_secs.max(1e-12);
+    let fill_ratio = hyb_fill as f64 / base_fill.max(1) as f64;
+    println!("{:<22} {:>12} {:>14}", "engine", "latency(s)", "fill-in");
+    println!(
+        "{:<22} {:>12.4} {:>14.3e}",
+        "1 wide shard", base_secs, base_fill as f64
+    );
+    println!(
+        "{:<22} {:>12.4} {:>14.3e}",
+        "hybrid (4 shards)", hyb_secs, hyb_fill as f64
+    );
+    println!(
+        "speedup={speedup:.2}x fill_ratio={fill_ratio:.3} subdomains={} separators={} \
+         sep_frac={:.4} partition={:.4}s busy_peak={}",
+        m.subdomains / m.hybrid_requests.max(1),
+        m.separators / m.hybrid_requests.max(1),
+        m.separator_frac(),
+        m.partition_secs,
+        m.busy_peak
+    );
+    if hyb_secs >= base_secs {
+        eprintln!("WARNING: hybrid wall-clock not below the single-wide-shard baseline");
+    }
+    if fill_ratio > 1.15 {
+        eprintln!("WARNING: hybrid fill ratio {fill_ratio:.3} above the 1.15x acceptance bar");
+    }
+
+    let out = std::env::var("PARAMD_BENCH_HYBRID_OUT")
+        .unwrap_or_else(|_| "../BENCH_nd_hybrid.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"nd_hybrid\",\n  \"status\": \"measured\",\n  \
+         \"threads\": {threads},\n  \"reps\": {reps},\n  \
+         \"workload\": \"mesh2d({side}x{side}) = {} vertices, connected\",\n  \
+         \"acceptance\": \"hybrid wall-clock < 1-wide-shard baseline; fill <= 1.15x\",\n  \
+         \"hybrid\": \"threshold=10000 depth=2 balance=1.3 over 4x{per_shard}-thread shards\",\n  \
+         \"baseline_secs\": {base_secs:.6},\n  \"hybrid_secs\": {hyb_secs:.6},\n  \
+         \"speedup\": {speedup:.3},\n  \"fill_ratio\": {fill_ratio:.4},\n  \
+         \"subdomains\": {},\n  \"separator_frac\": {:.6},\n  \
+         \"partition_secs\": {:.6},\n  \"busy_peak\": {}\n}}\n",
+        g.n,
+        m.subdomains / m.hybrid_requests.max(1),
+        m.separator_frac(),
+        m.partition_secs,
+        m.busy_peak
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -107,6 +107,7 @@ pub use pipeline::{Ticket, WaitTimeout};
 pub use request::{Method, OrderReply, OrderRequest, SolveReply, SolveSpec};
 
 pub use crate::ordering::cache::{CacheMetrics, ResultCache};
+pub use crate::ordering::hybrid::HybridConfig;
 pub use crate::ordering::paramd::runtime::QueuePolicy;
 pub use crate::ordering::reduce::{ReduceConfig, ReduceStats};
 pub use crate::ordering::shard::{ShardMetrics, ShardSpec};
@@ -232,6 +233,7 @@ impl Service {
             threads: spec.wide_threads,
             ..old.reduce_config()
         });
+        core.shards.set_hybrid(old.hybrid_config());
         old.shutdown_join();
         drop(old);
         // The old queue is closed; the pipeline restarts on a fresh one.
@@ -333,6 +335,17 @@ impl Service {
     /// fingerprint threads).
     pub fn with_reduce_config(self, cfg: ReduceConfig) -> Self {
         self.core().shards.set_reduce(cfg);
+        self
+    }
+
+    /// Configure the hybrid ND×ParAMD path (**off by default**; the
+    /// CLI's `--hybrid`, `--partition-threshold`, `--recursion-depth`,
+    /// `--balance-factor`): connected requests at or above the threshold
+    /// are cut into independent subdomains that fan out across the
+    /// shards, with the vertex separators ordered last. Survives later
+    /// engine rebuilds.
+    pub fn with_hybrid(self, cfg: HybridConfig) -> Self {
+        self.core().shards.set_hybrid(cfg);
         self
     }
 
@@ -707,7 +720,13 @@ impl ServiceCore {
             Method::Amd => parts(AmdSeq::default().order(g)),
             Method::Mmd => parts(Mmd::default().order(g)),
             Method::MinDegree => parts(MinDegree.order(g)),
-            Method::Nd => parts(NestedDissection::default().order(g)),
+            // ND leaves order through pooled ParAMD arenas at the wide
+            // shard's width instead of cold sequential AMD per leaf.
+            Method::Nd => parts(
+                NestedDissection::default()
+                    .with_paramd_leaves(self.shards.wide_threads())
+                    .order(g),
+            ),
             Method::ParAmd {
                 threads: _,
                 mult,
@@ -1018,6 +1037,42 @@ mod tests {
         let cfg = svc.core().shards.reduce_config();
         assert!(cfg.leaves && cfg.dense && cfg.twins);
         assert_eq!(cfg.dense_alpha, 3.5, "re-enabling keeps the tuned α");
+    }
+
+    #[test]
+    fn hybrid_knobs_survive_engine_rebuilds_and_reach_the_engine() {
+        let cfg = HybridConfig {
+            enabled: true,
+            partition_threshold: 2_000,
+            recursion_depth: 3,
+            balance_factor: 1.4,
+        };
+        let svc = Service::new(1).with_hybrid(cfg).with_shards(2);
+        assert_eq!(
+            svc.core().shards.hybrid_config(),
+            cfg,
+            "hybrid knobs must survive the reshape"
+        );
+        // A hybrid-sized connected request through the full service path
+        // fans out and still yields a valid permutation.
+        let g = mesh2d(50, 50);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(g.clone()),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        let rep = svc.order(&req);
+        assert!(crate::graph::perm::is_valid_perm(&rep.perm));
+        assert_eq!(rep.perm.len(), g.n);
+        let m = svc.metrics();
+        assert_eq!(m.shards.hybrid_requests, 1);
+        assert!(m.shards.subdomains >= 2);
+        assert!(m.report().contains("hybrid: requests=1"));
     }
 
     #[test]

@@ -3,6 +3,9 @@
 //! Subcommands:
 //!   order --matrix <file.mtx | gen:NAME> [--method amd|paramd|mmd|nd]
 //!         [--threads T] [--mult M] [--lim L] [--scale tiny|small|full]
+//!         [--hybrid] [--partition-threshold N] [--recursion-depth D]
+//!         [--balance-factor B]
+//!         (`--algo` is accepted as an alias of `--method`)
 //!   solve --matrix <...> [--method ...] [--pjrt] — order+factor+solve
 //!   gen   --name mini_nd24k --scale small --out m.mtx
 //!   suite — list the built-in matrix suite
@@ -11,6 +14,8 @@
 //!         [--shards K] [--shard-threads T]
 //!         [--no-reduce] [--dense-alpha A]
 //!         [--cache-mb MB] [--no-cache]
+//!         [--hybrid] [--partition-threshold N] [--recursion-depth D]
+//!         [--balance-factor B]
 //!         — service demo with metrics; `--pipeline` submits every
 //!         request as a ticket up front (async, backpressured) instead
 //!         of blocking per request; `--shards`/`--shard-threads` shard
@@ -22,10 +27,19 @@
 //!         dense-row threshold; `--cache-mb` budgets the fingerprinted
 //!         ordering result cache (default 64 MiB — repeated graphs and
 //!         components replay instead of re-ordering) and `--no-cache`
-//!         disables it
+//!         disables it; `--hybrid` turns on the nested-dissection ×
+//!         ParAMD path for huge connected graphs (cut into independent
+//!         subdomains that order in parallel across the shards,
+//!         separators last): `--partition-threshold` is the vertex
+//!         count where it engages (default 32768),
+//!         `--recursion-depth` the bisection depth (default 2, up to
+//!         2^D subdomains), `--balance-factor` the tolerated
+//!         larger-side/ideal-half ratio (default 1.3)
 
 use paramd::cli::Args;
-use paramd::coordinator::{Method, OrderRequest, QueuePolicy, Service, SolveSpec, Ticket};
+use paramd::coordinator::{
+    HybridConfig, Method, OrderRequest, QueuePolicy, Service, SolveSpec, Ticket,
+};
 use paramd::graph::csr::CsrMatrix;
 use paramd::graph::mm;
 use paramd::matgen::{self, Scale};
@@ -54,8 +68,27 @@ fn method_of(args: &Args) -> Result<Method, String> {
     let threads = args.get_parse("threads", 8usize);
     let mult = args.get_parse("mult", 1.1f64);
     let lim = args.get_parse("lim", 8192usize);
-    Method::parse(args.get_or("method", "paramd"), threads, mult, lim)
+    let name = args
+        .get("method")
+        .or_else(|| args.get("algo"))
+        .unwrap_or("paramd");
+    Method::parse(name, threads, mult, lim)
         .ok_or_else(|| "unknown method (amd|paramd|mmd|md|nd)".into())
+}
+
+/// The hybrid ND×ParAMD config the `--hybrid` flag family selects, or
+/// `None` when the switch is absent (the engine default: off).
+fn hybrid_of(args: &Args) -> Option<HybridConfig> {
+    if !args.has("hybrid") {
+        return None;
+    }
+    let d = HybridConfig::on();
+    Some(HybridConfig {
+        enabled: true,
+        partition_threshold: args.get_parse("partition-threshold", d.partition_threshold),
+        recursion_depth: args.get_parse("recursion-depth", d.recursion_depth),
+        balance_factor: args.get_parse("balance-factor", d.balance_factor),
+    })
 }
 
 fn main() {
@@ -66,6 +99,7 @@ fn main() {
         "small-first",
         "no-reduce",
         "no-cache",
+        "hybrid",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
@@ -95,7 +129,10 @@ fn cmd_order(args: &Args) -> Result<(), String> {
     let scale = scale_of(args.get_or("scale", "small"));
     let matrix = load_matrix(args.get("matrix").ok_or("--matrix required")?, scale)?;
     let method = method_of(args)?;
-    let svc = Service::new(args.get_parse("pre-threads", 4usize));
+    let mut svc = Service::new(args.get_parse("pre-threads", 4usize));
+    if let Some(h) = hybrid_of(args) {
+        svc = svc.with_hybrid(h);
+    }
     let req = OrderRequest {
         matrix: Some(matrix),
         pattern: None,
@@ -189,6 +226,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         });
     if args.has("no-reduce") {
         svc = svc.with_reduction(false);
+    }
+    if let Some(h) = hybrid_of(args) {
+        svc = svc.with_hybrid(h);
     }
     if args.has("small-first") {
         svc = svc.with_queue_policy(QueuePolicy::SmallestFirst);

@@ -9,14 +9,31 @@
 //! 4. turn the edge separator into a vertex separator (greedy cover);
 //! 5. recurse on the two parts; order leaves with AMD; emit
 //!    `[left, right, separator]`.
+//!
+//! Two consumers share this stack:
+//!
+//! - [`NestedDissection`] as an [`Ordering`] — the standalone `--algo nd`
+//!   comparator. Leaves default to sequential AMD; route them through a
+//!   pooled warm ParAMD runtime with [`NestedDissection::with_paramd_leaves`]
+//!   (one runtime + one arena reused across every leaf).
+//! - [`NestedDissection::partition`] — the reusable *partition API* the
+//!   hybrid planner ([`crate::ordering::hybrid`]) builds on: it stops the
+//!   recursion at a caller-chosen depth and returns the independent
+//!   subdomains plus the separator blocks instead of ordering anything,
+//!   recursing across sibling subtrees in parallel.
 
 pub mod bisect;
 pub mod coarsen;
 pub mod separator;
 
 use crate::graph::csr::SymGraph;
+use crate::ordering::paramd::{arena::ParAmdArena, runtime::OrderingRuntime, ParAmd};
 use crate::ordering::{amd_seq::AmdSeq, Ordering, OrderingResult};
 use crate::util::timer::Timer;
+
+/// Below this many vertices a subtree is cut sequentially: the spawn +
+/// join overhead of a scoped thread outweighs the bisection work.
+const PAR_SUBTREE_MIN: usize = 4096;
 
 /// Nested dissection configuration.
 #[derive(Clone, Copy, Debug)]
@@ -29,6 +46,10 @@ pub struct NestedDissection {
     pub fm_passes: usize,
     /// RNG seed (matching + tie-breaking).
     pub seed: u64,
+    /// When non-zero, leaves are ordered by a warm ParAMD runtime of this
+    /// width (one pooled arena reused across all leaves) instead of
+    /// sequential AMD.
+    pub leaf_threads: usize,
 }
 
 impl Default for NestedDissection {
@@ -38,7 +59,44 @@ impl Default for NestedDissection {
             coarsen_to: 200,
             fm_passes: 4,
             seed: 0x5eed,
+            leaf_threads: 0,
         }
+    }
+}
+
+/// One separator block of a [`Partition`]. `level` is the block's depth
+/// in the dissection tree: the root separator has level 0, its
+/// children's separators level 1, and so on.
+#[derive(Clone, Debug)]
+pub struct SeparatorBlock {
+    /// Tree depth of the bisection that produced this block.
+    pub level: usize,
+    /// Original vertex ids of the separator.
+    pub verts: Vec<i32>,
+}
+
+/// The output of [`NestedDissection::partition`]: pairwise-disjoint
+/// subdomains (no edge of the graph connects two of them) plus the
+/// separator blocks that cut them apart. Eliminating all subdomains
+/// first (any internal order) and then the separator blocks as returned
+/// — deepest level first, root separator last — respects the nested
+/// dissection partial order, so the concatenation is a valid elimination
+/// ordering of the whole graph.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Subdomain vertex lists (original ids), in left-to-right tree
+    /// order. Every vertex of the graph is in exactly one subdomain or
+    /// one separator block.
+    pub subdomains: Vec<Vec<i32>>,
+    /// Separator blocks sorted deepest-level-first (elimination order);
+    /// within a level, left-to-right tree order.
+    pub separators: Vec<SeparatorBlock>,
+}
+
+impl Partition {
+    /// Total vertices across the separator blocks.
+    pub fn separator_vertices(&self) -> usize {
+        self.separators.iter().map(|b| b.verts.len()).sum()
     }
 }
 
@@ -51,7 +109,20 @@ impl Ordering for NestedDissection {
         let t = Timer::new();
         let mut perm = Vec::with_capacity(g.n);
         let all: Vec<i32> = (0..g.n as i32).collect();
-        self.dissect(g, &all, &mut perm);
+        if self.leaf_threads > 0 && g.n > 2 {
+            // Pooled warm path: one runtime and one arena serve every
+            // leaf, so the per-leaf cost is ordering work, not pool
+            // spin-up or arena allocation.
+            let rt = OrderingRuntime::new(self.leaf_threads);
+            let mut arena = ParAmdArena::new();
+            let cfg = ParAmd::new(self.leaf_threads);
+            let mut leaf =
+                |sub: &SymGraph| cfg.order_into(&rt, &mut arena, sub).perm.clone();
+            self.dissect(g, &all, &mut perm, &mut leaf);
+        } else {
+            let mut leaf = |sub: &SymGraph| AmdSeq::default().order(sub).perm;
+            self.dissect(g, &all, &mut perm, &mut leaf);
+        }
         debug_assert_eq!(perm.len(), g.n);
         let mut r = OrderingResult::new(perm);
         r.phases.add("core", t.secs());
@@ -60,11 +131,25 @@ impl Ordering for NestedDissection {
 }
 
 impl NestedDissection {
+    /// Route leaves through a warm ParAMD runtime of `threads` workers
+    /// (the standalone `--algo nd` path; 0 restores sequential AMD).
+    pub fn with_paramd_leaves(mut self, threads: usize) -> Self {
+        self.leaf_threads = threads;
+        self
+    }
+
     /// Recursively order the subgraph induced by `verts` (original ids),
-    /// appending to `out` in elimination order.
-    fn dissect(&self, g: &SymGraph, verts: &[i32], out: &mut Vec<i32>) {
+    /// appending to `out` in elimination order. `leaf` orders one leaf
+    /// subgraph (compact ids) and returns its local permutation.
+    fn dissect(
+        &self,
+        g: &SymGraph,
+        verts: &[i32],
+        out: &mut Vec<i32>,
+        leaf: &mut dyn FnMut(&SymGraph) -> Vec<i32>,
+    ) {
         if verts.len() <= self.leaf_size {
-            self.order_leaf(g, verts, out);
+            self.order_leaf(g, verts, out, leaf);
             return;
         }
         let (sub, ids) = induced_subgraph(g, verts);
@@ -73,25 +158,108 @@ impl NestedDissection {
         // Degenerate split (refinement collapse): fall back to AMD on the
         // whole piece to guarantee progress.
         if left.is_empty() || right.is_empty() {
-            self.order_leaf(g, verts, out);
+            self.order_leaf(g, verts, out, leaf);
             return;
         }
         let to_orig = |v: &i32| ids[*v as usize];
         let lverts: Vec<i32> = left.iter().map(to_orig).collect();
         let rverts: Vec<i32> = right.iter().map(to_orig).collect();
-        self.dissect(g, &lverts, out);
-        self.dissect(g, &rverts, out);
+        self.dissect(g, &lverts, out, leaf);
+        self.dissect(g, &rverts, out, leaf);
         out.extend(sep.iter().map(to_orig));
     }
 
-    fn order_leaf(&self, g: &SymGraph, verts: &[i32], out: &mut Vec<i32>) {
+    fn order_leaf(
+        &self,
+        g: &SymGraph,
+        verts: &[i32],
+        out: &mut Vec<i32>,
+        leaf: &mut dyn FnMut(&SymGraph) -> Vec<i32>,
+    ) {
         if verts.len() <= 2 {
             out.extend_from_slice(verts);
             return;
         }
         let (sub, ids) = induced_subgraph(g, verts);
-        let r = AmdSeq::default().order(&sub);
-        out.extend(r.perm.iter().map(|&v| ids[v as usize]));
+        let p = leaf(&sub);
+        out.extend(p.iter().map(|&v| ids[v as usize]));
+    }
+
+    /// Cut the connected graph `g` into independent subdomains by
+    /// recursive multilevel bisection, `depth` levels deep. A node's
+    /// split is kept only when the larger side stays within
+    /// `balance_factor ×` the ideal half (and neither side is empty);
+    /// a rejected or too-small node becomes a single subdomain. Sibling
+    /// subtrees above [`PAR_SUBTREE_MIN`] vertices are cut on parallel
+    /// scoped threads — the partition itself is deterministic either
+    /// way, because every recursion is a pure function of its piece.
+    pub fn partition(&self, g: &SymGraph, depth: usize, balance_factor: f64) -> Partition {
+        let all: Vec<i32> = (0..g.n as i32).collect();
+        let mut cut = self.cut_rec(g, all, depth, balance_factor);
+        // Deepest separators are eliminated first, the root separator
+        // last; stable sort keeps left-to-right tree order in a level.
+        cut.separators.sort_by_key(|b| std::cmp::Reverse(b.level));
+        cut
+    }
+
+    fn cut_rec(&self, g: &SymGraph, verts: Vec<i32>, depth: usize, balance: f64) -> Partition {
+        if depth == 0 || verts.len() <= self.leaf_size.max(2) {
+            return Partition {
+                subdomains: vec![verts],
+                separators: Vec::new(),
+            };
+        }
+        let (sub, ids) = induced_subgraph(g, &verts);
+        let parts = bisect::multilevel_bisect(&sub, self);
+        let (left, right, sep) = separator::vertex_separator(&sub, &parts);
+        let ideal = (left.len() + right.len()) as f64 / 2.0;
+        if left.is_empty()
+            || right.is_empty()
+            || left.len().max(right.len()) as f64 > balance * ideal
+        {
+            // Degenerate or lopsided cut: keep the piece whole rather
+            // than hand the shards a skewed fan-out.
+            return Partition {
+                subdomains: vec![verts],
+                separators: Vec::new(),
+            };
+        }
+        let to_orig = |v: &i32| ids[*v as usize];
+        let lverts: Vec<i32> = left.iter().map(to_orig).collect();
+        let rverts: Vec<i32> = right.iter().map(to_orig).collect();
+        let sep_verts: Vec<i32> = sep.iter().map(to_orig).collect();
+        let (lcut, rcut) = if lverts.len().min(rverts.len()) >= PAR_SUBTREE_MIN {
+            std::thread::scope(|s| {
+                let lh = s.spawn(move || self.cut_rec(g, lverts, depth - 1, balance));
+                let rcut = self.cut_rec(g, rverts, depth - 1, balance);
+                (lh.join().expect("nd subtree cut panicked"), rcut)
+            })
+        } else {
+            (
+                self.cut_rec(g, lverts, depth - 1, balance),
+                self.cut_rec(g, rverts, depth - 1, balance),
+            )
+        };
+        let mut subdomains = lcut.subdomains;
+        subdomains.extend(rcut.subdomains);
+        let mut separators =
+            Vec::with_capacity(lcut.separators.len() + rcut.separators.len() + 1);
+        for mut b in lcut.separators {
+            b.level += 1;
+            separators.push(b);
+        }
+        for mut b in rcut.separators {
+            b.level += 1;
+            separators.push(b);
+        }
+        separators.push(SeparatorBlock {
+            level: 0,
+            verts: sep_verts,
+        });
+        Partition {
+            subdomains,
+            separators,
+        }
     }
 }
 
@@ -203,6 +371,104 @@ mod tests {
             let g = SymGraph::from_edges(n, &[]);
             let r = NestedDissection::default().order(&g);
             check_ordering_contract(&g, &r);
+        }
+    }
+
+    #[test]
+    fn paramd_leaves_produce_a_valid_ordering() {
+        let g = mesh2d(22, 22);
+        let r = NestedDissection::default().with_paramd_leaves(2).order(&g);
+        check_ordering_contract(&g, &r);
+        for n in 0..5 {
+            let t = SymGraph::from_edges(n, &[]);
+            let r = NestedDissection::default().with_paramd_leaves(2).order(&t);
+            check_ordering_contract(&t, &r);
+        }
+    }
+
+    #[test]
+    fn partition_covers_the_graph_exactly_once() {
+        let g = mesh2d(30, 30);
+        let cut = NestedDissection::default().partition(&g, 2, 1.5);
+        assert!(cut.subdomains.len() >= 2, "a mesh must split");
+        let mut seen = vec![false; g.n];
+        let mut mark = |v: i32| {
+            assert!(!seen[v as usize], "vertex {v} assigned twice");
+            seen[v as usize] = true;
+        };
+        for d in &cut.subdomains {
+            for &v in d {
+                mark(v);
+            }
+        }
+        for b in &cut.separators {
+            for &v in &b.verts {
+                mark(v);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every vertex assigned");
+    }
+
+    #[test]
+    fn partition_subdomains_are_independent() {
+        // No edge may connect two different subdomains: separators must
+        // cut them apart completely.
+        let g = mesh3d(9, 9, 9);
+        let cut = NestedDissection::default().partition(&g, 2, 1.5);
+        let mut owner = vec![-1i64; g.n];
+        for (d, verts) in cut.subdomains.iter().enumerate() {
+            for &v in verts {
+                owner[v as usize] = d as i64;
+            }
+        }
+        for v in 0..g.n {
+            if owner[v] < 0 {
+                continue; // separator vertex
+            }
+            for &u in g.neighbors(v) {
+                let o = owner[u as usize];
+                assert!(
+                    o < 0 || o == owner[v],
+                    "edge {v}-{u} crosses subdomains {} and {o}",
+                    owner[v]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_separators_come_deepest_first() {
+        let g = mesh2d(40, 40);
+        let cut = NestedDissection::default().partition(&g, 3, 1.6);
+        for w in cut.separators.windows(2) {
+            assert!(w[0].level >= w[1].level, "deepest level first");
+        }
+        assert_eq!(
+            cut.separators.last().map(|b| b.level),
+            Some(0),
+            "the root separator is eliminated last"
+        );
+    }
+
+    #[test]
+    fn partition_depth_zero_is_one_subdomain() {
+        let g = mesh2d(12, 12);
+        let cut = NestedDissection::default().partition(&g, 0, 1.3);
+        assert_eq!(cut.subdomains.len(), 1);
+        assert!(cut.separators.is_empty());
+        assert_eq!(cut.subdomains[0].len(), g.n);
+    }
+
+    #[test]
+    fn partition_is_deterministic() {
+        // The parallel subtree recursion must not perturb the result.
+        let g = mesh2d(120, 120); // halves cross PAR_SUBTREE_MIN
+        let a = NestedDissection::default().partition(&g, 2, 1.5);
+        let b = NestedDissection::default().partition(&g, 2, 1.5);
+        assert_eq!(a.subdomains, b.subdomains);
+        assert_eq!(a.separators.len(), b.separators.len());
+        for (x, y) in a.separators.iter().zip(&b.separators) {
+            assert_eq!((x.level, &x.verts), (y.level, &y.verts));
         }
     }
 }

@@ -80,6 +80,22 @@ pub fn reduce_salt(cfg: &ReduceConfig) -> u64 {
     splitmix64(splitmix64(0x2ED0_CE ^ rules) ^ cfg.dense_alpha.to_bits())
 }
 
+/// Hash the hybrid ND×ParAMD knobs into the salt of **request-level**
+/// entries, alongside [`reduce_salt`]: a hybrid ordering interleaves
+/// subdomains and separators in a way no plain run reproduces, so
+/// toggling `--hybrid` (or any partition knob while enabled) on a warm
+/// service must miss instead of replaying the other path's permutation.
+/// All disabled configs hash identically — the partition knobs are
+/// inert then and must not fragment the cache.
+pub fn hybrid_salt(cfg: &crate::ordering::hybrid::HybridConfig) -> u64 {
+    if !cfg.enabled {
+        return splitmix64(0x4B1D_0FF);
+    }
+    let mut h = splitmix64(0x4B1D_0 ^ cfg.partition_threshold as u64);
+    h = splitmix64(h ^ cfg.recursion_depth as u64);
+    splitmix64(h ^ cfg.balance_factor.to_bits())
+}
+
 /// Chained hash of the seed supervariable weights (`None` = unweighted).
 fn weights_salt(weights: Option<&[i32]>) -> u64 {
     match weights {
@@ -497,6 +513,38 @@ mod tests {
             reduce_salt(&ReduceConfig { threads: 8, ..on }),
             "reduction threads must not change the cache identity"
         );
+    }
+
+    #[test]
+    fn hybrid_salt_separates_knobs_only_while_enabled() {
+        use crate::ordering::hybrid::HybridConfig;
+        let on = HybridConfig::on();
+        assert_ne!(hybrid_salt(&on), hybrid_salt(&HybridConfig::disabled()));
+        for tweaked in [
+            HybridConfig {
+                partition_threshold: on.partition_threshold + 1,
+                ..on
+            },
+            HybridConfig {
+                recursion_depth: on.recursion_depth + 1,
+                ..on
+            },
+            HybridConfig {
+                balance_factor: on.balance_factor + 0.25,
+                ..on
+            },
+        ] {
+            assert_ne!(hybrid_salt(&on), hybrid_salt(&tweaked));
+        }
+        // Disabled configs are all one identity: inert knobs must not
+        // fragment the cache.
+        let off = HybridConfig {
+            enabled: false,
+            partition_threshold: 5,
+            recursion_depth: 9,
+            balance_factor: 7.0,
+        };
+        assert_eq!(hybrid_salt(&off), hybrid_salt(&HybridConfig::disabled()));
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Nested-dissection × ParAMD hybrid: parallelism *inside* one huge
+//! connected graph.
+//!
+//! The shard engine's cross-request parallelism (PR 3) serializes its
+//! common worst case — one giant connected FEM mesh lands on the single
+//! wide shard and every other lane idles. The paper's own scaling story
+//! (multiple elimination on independent sets, §4) points at the fix:
+//! manufacture independence where the component decomposition finds
+//! none. A [`plan`] cuts a connected graph with top-level multilevel
+//! nested dissection ([`crate::nd`]):
+//!
+//! ```text
+//!              connected g (n ≥ partition_threshold)
+//!                     │  NestedDissection::partition
+//!        ┌────────────┼───────────────┐
+//!   subdomain 0  subdomain 1 …   separator blocks
+//!        │            │          (deepest level first)
+//!   independent ParAMD jobs           │
+//!   across the shard lanes     ordered last, after all
+//!   (reduce → route → order)   subdomains resolved
+//!        └────────────┴───────────────┘
+//!          stitch::stitch_hybrid  →  one valid permutation
+//! ```
+//!
+//! Subdomains are pairwise independent (no edge connects two of them),
+//! so their elimination orders compose freely; every separator block is
+//! eliminated after everything it separates, which is exactly the nested
+//! dissection partial order — the concatenation
+//! `[subdomains…, separators…]` is a valid elimination ordering of the
+//! whole graph, with fill accounted exactly by the downstream symbolic
+//! pass.
+//!
+//! The planner is pure; the dispatch lives in
+//! [`crate::ordering::shard::ShardEngine`] (`--hybrid` et al. on the
+//! CLI), and the hybrid knobs are salted into request-level cache keys
+//! by [`crate::ordering::cache::hybrid_salt`] so hybrid and non-hybrid
+//! orderings of the same graph can never replay each other.
+
+pub mod stitch;
+
+use crate::graph::csr::SymGraph;
+use crate::nd::NestedDissection;
+
+/// Knobs of the hybrid ND×ParAMD path (the CLI's `--hybrid`,
+/// `--partition-threshold`, `--recursion-depth`, `--balance-factor`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HybridConfig {
+    /// Master switch; off by default.
+    pub enabled: bool,
+    /// Connected components below this many vertices keep the plain
+    /// single-job path — partitioning them would cost more than the
+    /// fan-out wins back.
+    pub partition_threshold: usize,
+    /// Levels of recursive bisection (depth `d` yields up to `2^d`
+    /// subdomains).
+    pub recursion_depth: usize,
+    /// A bisection is kept only while its larger side stays within this
+    /// factor of the ideal half; lopsided cuts leave the piece whole.
+    pub balance_factor: f64,
+}
+
+impl HybridConfig {
+    /// The default-off configuration with standard knob values.
+    pub fn disabled() -> Self {
+        Self {
+            enabled: false,
+            partition_threshold: 32_768,
+            recursion_depth: 2,
+            balance_factor: 1.3,
+        }
+    }
+
+    /// The hybrid path switched on with default knob values.
+    pub fn on() -> Self {
+        Self {
+            enabled: true,
+            ..Self::disabled()
+        }
+    }
+
+    /// Should a connected component of `n` vertices take the hybrid
+    /// path?
+    pub fn applies(&self, n: usize) -> bool {
+        self.enabled && self.recursion_depth > 0 && n >= self.partition_threshold.max(2)
+    }
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+/// A planned hybrid dispatch: independent subdomain jobs plus the
+/// separator tail.
+#[derive(Clone, Debug)]
+pub struct HybridPlan {
+    /// Subdomain vertex lists (original ids) — pairwise independent,
+    /// each becomes its own shard job.
+    pub subdomains: Vec<Vec<i32>>,
+    /// Separator blocks in elimination order (deepest dissection level
+    /// first, root separator last), ordered only after every subdomain
+    /// resolved.
+    pub separators: Vec<Vec<i32>>,
+    /// Total vertices across the separator blocks (the separator
+    /// fraction metric's numerator).
+    pub separator_vertices: usize,
+}
+
+/// Partition a connected graph for hybrid dispatch. Returns `None` when
+/// the dissection degenerates to a single subdomain (no balanced cut
+/// exists at the root) — the caller then falls back to the plain
+/// connected path.
+pub fn plan(g: &SymGraph, cfg: &HybridConfig) -> Option<HybridPlan> {
+    let cut = NestedDissection::default().partition(g, cfg.recursion_depth, cfg.balance_factor);
+    if cut.subdomains.len() < 2 {
+        return None;
+    }
+    let separator_vertices = cut.separator_vertices();
+    let separators: Vec<Vec<i32>> = cut
+        .separators
+        .into_iter()
+        .map(|b| b.verts)
+        // A zero-cut bisection (the piece was internally disconnected)
+        // leaves an empty block; nothing to order there.
+        .filter(|v| !v.is_empty())
+        .collect();
+    Some(HybridPlan {
+        subdomains: cut.subdomains,
+        separators,
+        separator_vertices,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::{mesh2d, random_graph};
+
+    #[test]
+    fn applies_respects_threshold_and_switch() {
+        let mut cfg = HybridConfig::on();
+        cfg.partition_threshold = 1000;
+        assert!(cfg.applies(1000));
+        assert!(!cfg.applies(999));
+        cfg.enabled = false;
+        assert!(!cfg.applies(10_000));
+        let mut flat = HybridConfig::on();
+        flat.recursion_depth = 0;
+        assert!(!flat.applies(1_000_000), "depth 0 can never split");
+    }
+
+    #[test]
+    fn plan_splits_a_mesh_and_covers_it() {
+        let g = mesh2d(40, 40);
+        let cfg = HybridConfig {
+            enabled: true,
+            partition_threshold: 100,
+            recursion_depth: 2,
+            balance_factor: 1.5,
+        };
+        let p = plan(&g, &cfg).expect("a mesh splits");
+        assert!(p.subdomains.len() >= 2);
+        assert!(!p.separators.is_empty());
+        let total: usize = p.subdomains.iter().map(|d| d.len()).sum::<usize>()
+            + p.separators.iter().map(|b| b.len()).sum::<usize>();
+        assert_eq!(total, g.n);
+        assert_eq!(
+            p.separator_vertices,
+            p.separators.iter().map(|b| b.len()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let g = random_graph(2000, 5, 7);
+        let cfg = HybridConfig {
+            enabled: true,
+            partition_threshold: 100,
+            recursion_depth: 2,
+            balance_factor: 1.5,
+        };
+        let (a, b) = (plan(&g, &cfg), plan(&g, &cfg));
+        match (a, b) {
+            (None, None) => {}
+            (Some(a), Some(b)) => {
+                assert_eq!(a.subdomains, b.subdomains);
+                assert_eq!(a.separators, b.separators);
+            }
+            _ => panic!("plan must be deterministic"),
+        }
+    }
+
+    #[test]
+    fn impossible_balance_returns_none() {
+        // balance_factor below 1.0 rejects every cut, including perfect
+        // halves — the planner must degrade to None, not panic.
+        let g = mesh2d(30, 30);
+        let cfg = HybridConfig {
+            enabled: true,
+            partition_threshold: 100,
+            recursion_depth: 2,
+            balance_factor: 0.5,
+        };
+        assert!(plan(&g, &cfg).is_none());
+    }
+}

@@ -1,0 +1,137 @@
+//! Merge a hybrid request's two phases — `[subdomains…, separators…]` —
+//! into one reply.
+//!
+//! Within a phase the jobs really do run concurrently across shards, so
+//! the phase log merges exactly like [`crate::ordering::shard::stitch`]:
+//! `rounds` and `modeled_time` take the slowest job's value, set sizes
+//! sum round-wise, GC counters add. *Across* the phases the dependency
+//! is real — no separator vertex is eliminated before every subdomain
+//! resolved — so rounds and modeled time **add** and the per-round logs
+//! **concatenate** instead of overlapping.
+
+use crate::ordering::shard::stitch::{ComponentResult, StitchedOrdering};
+
+/// The concurrent merge of one phase's results.
+struct PhaseLog {
+    rounds: u64,
+    gc_count: u64,
+    gc_secs: f64,
+    modeled_time: f64,
+    set_sizes: Vec<u32>,
+}
+
+fn merge_phase(perm: &mut Vec<i32>, comps: &[ComponentResult]) -> PhaseLog {
+    let mut log = PhaseLog {
+        rounds: 0,
+        gc_count: 0,
+        gc_secs: 0.0,
+        modeled_time: 0.0,
+        set_sizes: Vec::new(),
+    };
+    for c in comps {
+        debug_assert_eq!(c.perm.len(), c.old_of_new.len());
+        for &p in &c.perm {
+            perm.push(c.old_of_new[p as usize]);
+        }
+        log.rounds = log.rounds.max(c.rounds);
+        log.gc_count += c.gc_count;
+        log.gc_secs += c.gc_secs;
+        log.modeled_time = log.modeled_time.max(c.modeled_time);
+        for (r, &s) in c.set_sizes.iter().enumerate() {
+            if log.set_sizes.len() <= r {
+                log.set_sizes.push(0);
+            }
+            log.set_sizes[r] += s;
+        }
+    }
+    log
+}
+
+/// Merge subdomain results (plan order) and separator results
+/// (elimination order, deepest level first) into one ordering of `n`
+/// original vertices. Panics unless the phases cover `n` exactly.
+pub fn stitch_hybrid(
+    n: usize,
+    subdomains: &[ComponentResult],
+    separators: &[ComponentResult],
+) -> StitchedOrdering {
+    let mut perm = Vec::with_capacity(n);
+    let sub = merge_phase(&mut perm, subdomains);
+    let sep = merge_phase(&mut perm, separators);
+    assert_eq!(perm.len(), n, "hybrid phases must cover the graph");
+    let mut set_sizes = sub.set_sizes;
+    set_sizes.extend(sep.set_sizes);
+    StitchedOrdering {
+        perm,
+        rounds: sub.rounds + sep.rounds,
+        gc_count: sub.gc_count + sep.gc_count,
+        gc_secs: sub.gc_secs + sep.gc_secs,
+        modeled_time: sub.modeled_time + sep.modeled_time,
+        set_sizes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::perm::is_valid_perm;
+
+    fn comp(old: Vec<i32>, perm: Vec<i32>, rounds: u64, sets: Vec<u32>) -> ComponentResult {
+        ComponentResult {
+            old_of_new: old,
+            perm,
+            rounds,
+            gc_count: 1,
+            gc_secs: 0.25,
+            modeled_time: rounds as f64,
+            set_sizes: sets,
+        }
+    }
+
+    #[test]
+    fn phases_concatenate_and_logs_add_across_phases() {
+        // Subdomains {0,1} and {2,3} (concurrent), separator {4} after.
+        let s = stitch_hybrid(
+            5,
+            &[
+                comp(vec![0, 1], vec![1, 0], 2, vec![1, 1]),
+                comp(vec![2, 3], vec![0, 1], 1, vec![2]),
+            ],
+            &[comp(vec![4], vec![0], 1, vec![1])],
+        );
+        assert_eq!(s.perm, vec![1, 0, 2, 3, 4]);
+        assert!(is_valid_perm(&s.perm));
+        assert_eq!(s.rounds, 3, "phase maxima add: max(2,1) + 1");
+        assert!((s.modeled_time - 3.0).abs() < 1e-12);
+        assert_eq!(s.gc_count, 3);
+        assert!((s.gc_secs - 0.75).abs() < 1e-12);
+        assert_eq!(
+            s.set_sizes,
+            vec![3, 1, 1],
+            "subdomain rounds sum element-wise, separator rounds append"
+        );
+        let pivots: u32 = s.set_sizes.iter().sum();
+        assert_eq!(pivots, 5, "merged round log covers every pivot");
+    }
+
+    #[test]
+    fn empty_separator_phase_degrades_to_the_plain_merge() {
+        let s = stitch_hybrid(
+            3,
+            &[
+                comp(vec![2, 0], vec![0, 1], 1, vec![2]),
+                comp(vec![1], vec![0], 1, vec![1]),
+            ],
+            &[],
+        );
+        assert_eq!(s.perm, vec![2, 0, 1]);
+        assert_eq!(s.rounds, 1);
+        assert_eq!(s.set_sizes, vec![3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the graph")]
+    fn missing_vertices_panic() {
+        stitch_hybrid(4, &[comp(vec![0, 1], vec![0, 1], 1, vec![2])], &[]);
+    }
+}

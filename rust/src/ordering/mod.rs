@@ -17,9 +17,13 @@
 //!   runtimes.
 //! - [`cache`] — the fingerprinted result cache: repeated graphs replay
 //!   their permutation instead of re-running the kernel at all.
+//! - [`hybrid`] — nested-dissection × ParAMD planning: cut one huge
+//!   connected graph into independent subdomains the shard engine
+//!   orders in parallel, separators last.
 
 pub mod amd_seq;
 pub mod cache;
+pub mod hybrid;
 pub mod md;
 pub mod mmd;
 pub mod rcm;

@@ -60,10 +60,38 @@ pub struct ShardMetrics {
     /// Cumulative stop-the-world seconds those collections froze a
     /// shard's worker pool for.
     pub gc_secs: f64,
+    /// Connected requests that took the hybrid ND×ParAMD fan-out path.
+    pub hybrid_requests: u64,
+    /// Subdomain jobs dispatched by hybrid requests.
+    pub subdomains: u64,
+    /// Separator-block jobs dispatched by hybrid requests.
+    pub separators: u64,
+    /// Vertices hybrid requests placed in separator blocks; with
+    /// `hybrid_vertices` this yields the separator fraction.
+    pub separator_vertices: u64,
+    /// Total vertices across hybrid requests (fraction denominator).
+    pub hybrid_vertices: u64,
+    /// Wall-clock seconds spent inside the nested-dissection partitioner.
+    pub partition_secs: f64,
+    /// Dispatcher busy seconds attributed to hybrid **subdomain** jobs
+    /// (divide by `subdomains` for per-subdomain busy time).
+    pub subdomain_busy_secs: f64,
     /// Per-shard job/busy table, indexed by shard id (0 = wide shard).
     pub per_shard: Vec<ShardStat>,
     /// log2-bucketed component sizes ([`SIZE_HIST_BUCKETS`] buckets).
     pub size_hist: Vec<u64>,
+}
+
+impl ShardMetrics {
+    /// Fraction of hybrid-request vertices that landed in separator
+    /// blocks (0.0 when no hybrid request ran).
+    pub fn separator_frac(&self) -> f64 {
+        if self.hybrid_vertices == 0 {
+            0.0
+        } else {
+            self.separator_vertices as f64 / self.hybrid_vertices as f64
+        }
+    }
 }
 
 impl ShardMetrics {
@@ -86,6 +114,19 @@ impl ShardMetrics {
             "  gc: collections={} stop_the_world={:.4}s\n",
             self.gc_count, self.gc_secs
         ));
+        if self.hybrid_requests > 0 {
+            let per_sub = self.subdomain_busy_secs / self.subdomains.max(1) as f64;
+            s.push_str(&format!(
+                "  hybrid: requests={} subdomains={} separators={} sep_frac={:.4} \
+                 partition={:.4}s busy/subdomain={:.4}s\n",
+                self.hybrid_requests,
+                self.subdomains,
+                self.separators,
+                self.separator_frac(),
+                self.partition_secs,
+                per_sub
+            ));
+        }
         for (i, st) in self.per_shard.iter().enumerate() {
             s.push_str(&format!(
                 "  shard {i}: threads={} jobs={} busy={:.4}s\n",
@@ -118,6 +159,13 @@ pub(crate) struct EngineCounters {
     pub(crate) twins_merged: AtomicU64,
     pub(crate) reduce_edges_removed: AtomicU64,
     pub(crate) reduce_nanos: AtomicU64,
+    pub(crate) hybrid_requests: AtomicU64,
+    pub(crate) subdomain_jobs: AtomicU64,
+    pub(crate) separator_jobs: AtomicU64,
+    pub(crate) separator_vertices: AtomicU64,
+    pub(crate) hybrid_vertices: AtomicU64,
+    pub(crate) partition_nanos: AtomicU64,
+    pub(crate) subdomain_busy_nanos: AtomicU64,
     gc_count: AtomicU64,
     gc_nanos: AtomicU64,
     busy_now: AtomicUsize,
@@ -137,6 +185,13 @@ impl EngineCounters {
             twins_merged: AtomicU64::new(0),
             reduce_edges_removed: AtomicU64::new(0),
             reduce_nanos: AtomicU64::new(0),
+            hybrid_requests: AtomicU64::new(0),
+            subdomain_jobs: AtomicU64::new(0),
+            separator_jobs: AtomicU64::new(0),
+            separator_vertices: AtomicU64::new(0),
+            hybrid_vertices: AtomicU64::new(0),
+            partition_nanos: AtomicU64::new(0),
+            subdomain_busy_nanos: AtomicU64::new(0),
             gc_count: AtomicU64::new(0),
             gc_nanos: AtomicU64::new(0),
             busy_now: AtomicUsize::new(0),
@@ -195,6 +250,13 @@ impl EngineCounters {
             reduce_secs: self.reduce_nanos.load(Relaxed) as f64 / 1e9,
             gc_count: self.gc_count.load(Relaxed),
             gc_secs: self.gc_nanos.load(Relaxed) as f64 / 1e9,
+            hybrid_requests: self.hybrid_requests.load(Relaxed),
+            subdomains: self.subdomain_jobs.load(Relaxed),
+            separators: self.separator_jobs.load(Relaxed),
+            separator_vertices: self.separator_vertices.load(Relaxed),
+            hybrid_vertices: self.hybrid_vertices.load(Relaxed),
+            partition_secs: self.partition_nanos.load(Relaxed) as f64 / 1e9,
+            subdomain_busy_secs: self.subdomain_busy_nanos.load(Relaxed) as f64 / 1e9,
             per_shard,
             size_hist: self.size_hist.iter().map(|b| b.load(Relaxed)).collect(),
         }
@@ -250,6 +312,22 @@ mod tests {
         assert!(r.contains("2^3:1"));
         assert!(r.contains("reduce: jobs=0"), "reduce line always present");
         assert!(r.contains("gc: collections=0"), "gc line always present");
+    }
+
+    #[test]
+    fn hybrid_line_appears_only_after_a_hybrid_request() {
+        let c = EngineCounters::new();
+        assert!(!c.snapshot(Vec::new()).report().contains("hybrid:"));
+        c.hybrid_requests.fetch_add(1, Relaxed);
+        c.subdomain_jobs.fetch_add(4, Relaxed);
+        c.separator_jobs.fetch_add(3, Relaxed);
+        c.separator_vertices.fetch_add(50, Relaxed);
+        c.hybrid_vertices.fetch_add(1000, Relaxed);
+        let m = c.snapshot(Vec::new());
+        assert!((m.separator_frac() - 0.05).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("hybrid: requests=1 subdomains=4 separators=3"));
+        assert!(r.contains("sep_frac=0.0500"));
     }
 
     #[test]

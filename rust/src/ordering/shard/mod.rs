@@ -61,6 +61,22 @@
 //! post-reduction [`router::work_estimate`] units, so a component that
 //! compresses 10× no longer hogs the wide shard.
 //!
+//! ## Hybrid ND×AMD path
+//!
+//! One huge *connected* graph defeats both parallelism sources above: it
+//! is a single component and a single request. When the engine's
+//! [`HybridConfig`] is enabled and the request clears its size
+//! threshold, [`hybrid::plan`] runs recursive multilevel bisection
+//! (reusing the `nd` stack) to cut the graph into independent
+//! subdomains plus vertex-separator blocks. The subdomains then flow
+//! through the *same* machinery as the components of a decomposed
+//! request — reduction, kernel-level cache probes, LPT routing across
+//! shards — as one concurrent batch; the separator blocks run as a
+//! second batch strictly after, and
+//! [`hybrid::stitch::stitch_hybrid`] merges `[subdomains…,
+//! separators…]` into one valid elimination order. See the `hybrid`
+//! module docs for the fill trade-off.
+//!
 //! ## Jobs and cancellation
 //!
 //! Every component (or connected request) becomes its own cancellable
@@ -111,8 +127,9 @@ use std::thread::JoinHandle;
 use crate::graph::components::{connected_components, split_components, Component};
 use crate::graph::csr::SymGraph;
 use crate::ordering::cache::{
-    config_salt, reduce_salt, CacheKey, CacheMetrics, CachedOrdering, ResultCache,
+    config_salt, hybrid_salt, reduce_salt, CacheKey, CacheMetrics, CachedOrdering, ResultCache,
 };
+use crate::ordering::hybrid::{self, HybridConfig};
 use crate::ordering::paramd::arena::ArenaPool;
 use crate::ordering::paramd::runtime::{OrderingRuntime, QueuePolicy};
 use crate::ordering::paramd::ParAmd;
@@ -258,6 +275,9 @@ struct CompDone {
     gc_secs: f64,
     modeled_time: f64,
     set_sizes: Vec<u32>,
+    /// Dispatcher seconds this job actually burned (0.0 for cache
+    /// replays) — the hybrid path's per-subdomain busy attribution.
+    busy_secs: f64,
 }
 
 impl CompDone {
@@ -283,6 +303,7 @@ impl CompDone {
             gc_secs: c.gc_secs,
             modeled_time: c.modeled_time,
             set_sizes: c.set_sizes,
+            busy_secs: 0.0,
         }
     }
 }
@@ -306,6 +327,7 @@ fn expand_done(plan: &ReductionPlan, kernel: &CachedOrdering) -> CompDone {
         gc_secs: kernel.gc_secs,
         modeled_time: kernel.modeled_time,
         set_sizes,
+        busy_secs: 0.0,
     }
 }
 
@@ -461,7 +483,7 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                 // Busy time starts after the arena is in hand, so it
                 // measures ordering work, not checkout waits.
                 let t = Timer::new();
-                let out = match &payload {
+                let mut out = match &payload {
                     JobPayload::Direct(graph) => cfg
                         .order_into_cancellable(&shard.rt, &mut arena, graph.get(), cancel)
                         .map(|r| {
@@ -472,6 +494,7 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                                 gc_secs: r.stats.gc_secs,
                                 modeled_time: r.stats.modeled_time,
                                 set_sizes: r.stats.set_sizes.clone(),
+                                busy_secs: 0.0,
                             };
                             let insert = cache_key.map(|_| done.to_cached());
                             (done, insert)
@@ -506,7 +529,11 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                             (done, insert)
                         }),
                 };
-                shard.busy_nanos.fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
+                let elapsed = t.elapsed();
+                shard.busy_nanos.fetch_add(elapsed.as_nanos() as u64, Relaxed);
+                if let Some((done, _)) = &mut out {
+                    done.busy_secs = elapsed.as_secs_f64();
+                }
                 out
             }));
             shard.jobs_done.fetch_add(1, Relaxed);
@@ -552,6 +579,9 @@ pub struct ShardEngine {
     spec: ShardSpec,
     /// Pre-ordering reduction config (on by default; see [`Self::set_reduce`]).
     reduce_cfg: Mutex<ReduceConfig>,
+    /// ND×AMD hybrid planning for huge connected requests (off by
+    /// default; see [`Self::set_hybrid`]).
+    hybrid_cfg: Mutex<HybridConfig>,
     /// The fingerprinted result cache, shared with every dispatcher (the
     /// coordinator carries the same handle across engine rebuilds so
     /// warm entries survive a reshape).
@@ -609,6 +639,7 @@ impl ShardEngine {
                 threads: spec.wide_threads,
                 ..ReduceConfig::default()
             }),
+            hybrid_cfg: Mutex::new(HybridConfig::disabled()),
             cache,
         }
     }
@@ -638,6 +669,17 @@ impl ShardEngine {
     /// The reduction config currently in force.
     pub fn reduce_config(&self) -> ReduceConfig {
         *self.reduce_cfg.lock().unwrap()
+    }
+
+    /// Replace the hybrid ND×AMD config (pass [`HybridConfig::on`] to
+    /// partition huge connected requests into parallel subdomain jobs).
+    pub fn set_hybrid(&self, cfg: HybridConfig) {
+        *self.hybrid_cfg.lock().unwrap() = cfg;
+    }
+
+    /// The hybrid config currently in force.
+    pub fn hybrid_config(&self) -> HybridConfig {
+        *self.hybrid_cfg.lock().unwrap()
     }
 
     /// Number of shards.
@@ -730,13 +772,47 @@ impl ShardEngine {
         let salt = config_salt(&cfg);
         let comps = connected_components(g);
         if comps.is_connected() {
+            self.counters.components.fetch_add(1, Relaxed);
+            self.counters.note_component(g.n);
+            let rcfg = self.reduce_config();
+            let hcfg = self.hybrid_config();
             // The whole-request probe lives on the connected path (only
             // connected replies store request-level entries) — so a
             // disconnected request never pays a guaranteed-miss
             // fingerprint of its full CSR; its cache identity lives at
             // component granularity, where compact extraction
-            // normalizes scattered vertex labels away.
-            return self.order_connected(g, cfg, cancel, salt);
+            // normalizes scattered vertex labels away. A request-level
+            // entry bakes the reduction *and* hybrid outcomes into its
+            // stored permutation, so its salt folds in both configs —
+            // toggling `--no-reduce`, `α`, or any hybrid knob on a warm
+            // engine must miss and recompute, never replay a stale
+            // path. (Hits don't move the per-shard job counters: those
+            // are the dispatched-work signal.)
+            let request_key = if self.cache.is_enabled() && g.n > 0 && !cancel.load(Relaxed) {
+                let request_salt =
+                    crate::util::rng::splitmix64(salt ^ reduce_salt(&rcfg) ^ hybrid_salt(&hcfg));
+                let key = CacheKey::new(g, None, request_salt);
+                if let Some(hit) = self.cache.get(&key, g, None) {
+                    return Some(Self::reply_from_cached(hit));
+                }
+                Some(key)
+            } else {
+                None
+            };
+            if hcfg.applies(g.n) && !cancel.load(Relaxed) {
+                let t = Timer::new();
+                let plan = hybrid::plan(g, &hcfg);
+                self.counters
+                    .partition_nanos
+                    .fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
+                // A degenerate partition (no balanced cut) falls back to
+                // the single-job path — deterministically, so the
+                // hybrid-salted request entry stays coherent.
+                if let Some(plan) = plan {
+                    return self.order_hybrid(g, plan, cfg, cancel, salt, request_key);
+                }
+            }
+            return self.order_connected(g, cfg, cancel, salt, rcfg, request_key);
         }
 
         self.counters.decomposed.fetch_add(1, Relaxed);
@@ -745,15 +821,47 @@ impl ShardEngine {
             self.counters.note_component(s);
         }
         let parts = split_components(g, &comps);
-        // Reduce every component (in parallel across components) before
-        // routing, so placement works on post-reduction sizes.
+        let (results, reduced, _busy) = self.run_parts(parts, cfg, cancel, salt)?;
+        let k = results.len();
+        let stitched = stitch::stitch(g.n, &results);
+        Some(ShardReply {
+            perm: stitched.perm,
+            rounds: stitched.rounds,
+            gc_count: stitched.gc_count,
+            gc_secs: stitched.gc_secs,
+            modeled_time: stitched.modeled_time,
+            set_sizes: stitched.set_sizes,
+            components: k,
+            reduced,
+        })
+    }
+
+    /// Reduce, cache-probe, route, dispatch, and collect a set of
+    /// independent parts — the connected components of a decomposed
+    /// request, or the subdomains / separator blocks of one hybrid
+    /// phase — as one batch of shard jobs. Results come back in part
+    /// order; `None` means `cancel` fired. Alongside the results: the
+    /// total vertex count the reduction layer removed, and the
+    /// dispatcher busy seconds the batch's live jobs consumed (cache
+    /// hits contribute zero).
+    ///
+    /// Reduction runs first (in parallel across parts) so routing works
+    /// on post-reduction sizes. Per-part cache probe: a hit resolves
+    /// its part on the spot — no router, queue, runtime, or arena — and
+    /// only misses become jobs (which insert on completion). All probes
+    /// precede all enqueues, so resolution within a batch is
+    /// deterministic.
+    #[allow(clippy::type_complexity)]
+    fn run_parts(
+        &self,
+        parts: Vec<Component>,
+        cfg: ParAmd,
+        cancel: &AtomicBool,
+        salt: u64,
+    ) -> Option<(Vec<ComponentResult>, usize, f64)> {
         let (payloads, works, reduced) = self.reduce_components(parts);
         let k = payloads.len();
 
-        // Per-component cache probe: a hit resolves its component on the
-        // spot — no router, queue, runtime, or arena — and only misses
-        // become jobs (which insert on completion). All probes precede
-        // all enqueues, so resolution within a request is deterministic.
         let mut resolved: Vec<Option<CompDone>> = Vec::new();
         resolved.resize_with(k, || None);
         let mut keys: Vec<Option<CacheKey>> = vec![None; k];
@@ -820,9 +928,11 @@ impl ShardEngine {
         if cancelled {
             return None;
         }
+        let mut busy = 0.0f64;
         let mut results: Vec<ComponentResult> = Vec::with_capacity(k);
         for (i, done) in resolved.into_iter().enumerate() {
-            let d = done.expect("every uncancelled component resolves");
+            let d = done.expect("every uncancelled part resolves");
+            busy += d.busy_secs;
             results.push(ComponentResult {
                 old_of_new: std::mem::take(&mut old_maps[i]),
                 perm: d.perm,
@@ -833,17 +943,7 @@ impl ShardEngine {
                 set_sizes: d.set_sizes,
             });
         }
-        let stitched = stitch::stitch(g.n, &results);
-        Some(ShardReply {
-            perm: stitched.perm,
-            rounds: stitched.rounds,
-            gc_count: stitched.gc_count,
-            gc_secs: stitched.gc_secs,
-            modeled_time: stitched.modeled_time,
-            set_sizes: stitched.set_sizes,
-            components: results.len(),
-            reduced,
-        })
+        Some((results, reduced, busy))
     }
 
     /// A [`ShardReply`] replayed from a request-level cache entry.
@@ -967,27 +1067,9 @@ impl ShardEngine {
         cfg: ParAmd,
         cancel: &AtomicBool,
         salt: u64,
+        rcfg: ReduceConfig,
+        request_key: Option<CacheKey>,
     ) -> Option<ShardReply> {
-        self.counters.components.fetch_add(1, Relaxed);
-        self.counters.note_component(g.n);
-        let rcfg = self.reduce_config();
-        // Whole-request fast path, probed before reduction even runs. A
-        // request-level entry bakes the reduction outcome into its
-        // stored permutation, so its salt also folds in the reduction
-        // config — toggling `--no-reduce` or `α` on a warm engine must
-        // miss and recompute, never replay a stale path. (Hits don't
-        // move the per-shard job counters: those are the
-        // dispatched-work signal.)
-        let request_key = if self.cache.is_enabled() && g.n > 0 && !cancel.load(Relaxed) {
-            let request_salt = crate::util::rng::splitmix64(salt ^ reduce_salt(&rcfg));
-            let key = CacheKey::new(g, None, request_salt);
-            if let Some(hit) = self.cache.get(&key, g, None) {
-                return Some(Self::reply_from_cached(hit));
-            }
-            Some(key)
-        } else {
-            None
-        };
         let mut reduced = 0usize;
         let payload = if rcfg.is_enabled() && g.n > 0 {
             let t = Timer::new();
@@ -1071,6 +1153,99 @@ impl ShardEngine {
             SlotState::Panicked(why) => panic!("sharded ordering job panicked: {why}"),
             SlotState::Pending => unreachable!("batch resolved with a pending slot"),
         }
+    }
+
+    /// Extract the induced subgraphs of `lists` (original-vertex-id
+    /// lists, pairwise disjoint) as independent parts — in parallel
+    /// across lists on scoped threads sized by the wide shard's width,
+    /// since extraction of a hybrid plan's subdomains is O(n + m) work
+    /// that would otherwise serialize ahead of the fan-out.
+    fn extract_parts(&self, g: &SymGraph, lists: &[Vec<i32>]) -> Vec<Component> {
+        let k = lists.len();
+        let workers = self.spec.wide_threads.max(1).min(k.max(1));
+        let mut parts: Vec<Option<Component>> = Vec::new();
+        parts.resize_with(k, || None);
+        if workers <= 1 || k <= 1 {
+            for (slot, list) in parts.iter_mut().zip(lists) {
+                let (graph, old_of_new) = crate::nd::induced_subgraph(g, list);
+                *slot = Some(Component { graph, old_of_new });
+            }
+        } else {
+            std::thread::scope(|s| {
+                let mut rest = parts.as_mut_slice();
+                for tid in 0..workers {
+                    let (lo, hi) = crate::util::chunk_range(k, workers, tid);
+                    let (chunk, tail) = rest.split_at_mut(hi - lo);
+                    rest = tail;
+                    s.spawn(move || {
+                        for (slot, list) in chunk.iter_mut().zip(&lists[lo..hi]) {
+                            let (graph, old_of_new) = crate::nd::induced_subgraph(g, list);
+                            *slot = Some(Component { graph, old_of_new });
+                        }
+                    });
+                }
+            });
+        }
+        parts
+            .into_iter()
+            .map(|p| p.expect("every list extracted"))
+            .collect()
+    }
+
+    /// The hybrid fan-out of one huge connected request: order the
+    /// plan's independent subdomains as concurrent shard jobs — each
+    /// through reduction, kernel-level cache probes, and LPT routing
+    /// like any component — then, strictly after every subdomain
+    /// resolved, order the separator blocks (deepest level first) the
+    /// same way, and stitch `[subdomains…, separators…]` into one
+    /// permutation. The two-phase barrier is what keeps the result a
+    /// valid elimination order: no separator vertex precedes a
+    /// subdomain vertex, matching the ND partial order. Separator
+    /// blocks that the reduction layer compresses run through the
+    /// weighted ParAMD entry point exactly like reduced components.
+    fn order_hybrid(
+        &self,
+        g: &SymGraph,
+        plan: hybrid::HybridPlan,
+        cfg: ParAmd,
+        cancel: &AtomicBool,
+        salt: u64,
+        request_key: Option<CacheKey>,
+    ) -> Option<ShardReply> {
+        self.counters.hybrid_requests.fetch_add(1, Relaxed);
+        self.counters
+            .subdomain_jobs
+            .fetch_add(plan.subdomains.len() as u64, Relaxed);
+        self.counters
+            .separator_jobs
+            .fetch_add(plan.separators.len() as u64, Relaxed);
+        self.counters
+            .separator_vertices
+            .fetch_add(plan.separator_vertices as u64, Relaxed);
+        self.counters.hybrid_vertices.fetch_add(g.n as u64, Relaxed);
+
+        let sub_parts = self.extract_parts(g, &plan.subdomains);
+        let (sub_results, sub_reduced, sub_busy) = self.run_parts(sub_parts, cfg, cancel, salt)?;
+        self.counters
+            .subdomain_busy_nanos
+            .fetch_add((sub_busy * 1e9) as u64, Relaxed);
+
+        let sep_parts = self.extract_parts(g, &plan.separators);
+        let (sep_results, sep_reduced, _sep_busy) = self.run_parts(sep_parts, cfg, cancel, salt)?;
+
+        let stitched = hybrid::stitch::stitch_hybrid(g.n, &sub_results, &sep_results);
+        let reply = ShardReply {
+            perm: stitched.perm,
+            rounds: stitched.rounds,
+            gc_count: stitched.gc_count,
+            gc_secs: stitched.gc_secs,
+            modeled_time: stitched.modeled_time,
+            set_sizes: stitched.set_sizes,
+            components: 1,
+            reduced: sub_reduced + sep_reduced,
+        };
+        self.insert_request_entry(request_key, g, &reply);
+        Some(reply)
     }
 
     fn enqueue(&self, s: usize, job: ShardJob) {
@@ -1339,5 +1514,103 @@ mod tests {
         assert_eq!(total_jobs(&engine), 2, "no-cache repeats must re-order");
         let cm = engine.cache_metrics();
         assert_eq!((cm.hits, cm.misses, cm.entries), (0, 0, 0));
+    }
+
+    fn test_hybrid() -> HybridConfig {
+        HybridConfig {
+            enabled: true,
+            partition_threshold: 1_000,
+            recursion_depth: 2,
+            balance_factor: 1.5,
+        }
+    }
+
+    #[test]
+    fn hybrid_fans_one_connected_mesh_across_shards() {
+        let g = mesh2d(60, 60);
+        let engine = ShardEngine::new(ShardSpec::uniform(4, 1));
+        // Congruent mesh quadrants can fingerprint-collide as identical
+        // kernels; disable the cache so every plan part really runs.
+        engine.result_cache().set_budget(0);
+        engine.set_hybrid(test_hybrid());
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert!(is_valid_perm(&rep.perm));
+        assert_eq!(rep.perm.len(), g.n);
+        assert_eq!(rep.components, 1, "hybrid reply is still one component");
+        let total: u32 = rep.set_sizes.iter().sum();
+        assert_eq!(total as usize, g.n, "merged round log covers every pivot");
+        let m = engine.metrics();
+        assert_eq!(m.hybrid_requests, 1);
+        assert!(m.subdomains >= 4, "depth 2 must yield 4 subdomain jobs");
+        assert!(m.separators >= 1, "bisections must surface separators");
+        let frac = m.separator_frac();
+        assert!(frac > 0.0 && frac < 0.5, "separator fraction {frac}");
+        assert_eq!(
+            total_jobs(&engine),
+            m.subdomains + m.separators,
+            "every plan part becomes exactly one shard job"
+        );
+        assert!(m.partition_secs >= 0.0);
+    }
+
+    #[test]
+    fn hybrid_below_threshold_keeps_the_single_job_path() {
+        let g = mesh2d(10, 10);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        engine.set_hybrid(HybridConfig {
+            partition_threshold: 10_000,
+            ..test_hybrid()
+        });
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert!(is_valid_perm(&rep.perm));
+        assert_eq!(total_jobs(&engine), 1, "below threshold: one borrowed job");
+        assert_eq!(engine.metrics().hybrid_requests, 0);
+    }
+
+    #[test]
+    fn hybrid_result_is_placement_independent() {
+        // The plan is a pure function of the graph and knobs, per-part
+        // single-thread runs are deterministic, and the stitch follows
+        // plan order — so shard count must not change the permutation.
+        let g = mesh2d(50, 50);
+        let mut perms = Vec::new();
+        for shards in [2usize, 4] {
+            let engine = ShardEngine::new(ShardSpec::uniform(shards, 1));
+            engine.set_hybrid(test_hybrid());
+            perms.push(engine.order(&g, ParAmd::new(1)).perm);
+        }
+        assert_eq!(perms[0], perms[1], "shard count changed the hybrid result");
+    }
+
+    #[test]
+    fn hybrid_repeat_hits_the_request_cache_with_zero_jobs() {
+        let g = mesh2d(50, 50);
+        let engine = ShardEngine::new(ShardSpec::uniform(4, 1));
+        engine.set_hybrid(test_hybrid());
+        let first = engine.order(&g, ParAmd::new(1));
+        let jobs = total_jobs(&engine);
+        let second = engine.order(&g, ParAmd::new(1));
+        assert_eq!(second.perm, first.perm, "hit must bit-match the first run");
+        assert_eq!(
+            total_jobs(&engine),
+            jobs,
+            "a hybrid repeat must be served from the request entry"
+        );
+        assert_eq!(
+            engine.metrics().hybrid_requests,
+            1,
+            "the repeat never re-partitions"
+        );
+    }
+
+    #[test]
+    fn precancelled_hybrid_request_returns_none() {
+        let g = mesh2d(50, 50);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        engine.set_hybrid(test_hybrid());
+        let cancel = AtomicBool::new(true);
+        assert!(engine.order_cancellable(&g, ParAmd::new(1), &cancel).is_none());
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert!(is_valid_perm(&rep.perm), "engine survives a cancelled hybrid");
     }
 }

@@ -1,0 +1,135 @@
+//! ND×ParAMD hybrid integration: stitched-permutation validity across
+//! the knob space, the fill-quality bound against pure ParAMD on 2D/3D
+//! meshes, observed subdomain concurrency on one connected mesh, the
+//! request-cache replay, and the disconnected-input bypass.
+
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::{mesh2d, mesh3d, multi_component};
+use paramd::ordering::hybrid::HybridConfig;
+use paramd::ordering::paramd::ParAmd;
+use paramd::ordering::shard::{ShardEngine, ShardSpec};
+use paramd::ordering::Ordering as _;
+use paramd::symbolic::fill_in;
+
+fn hybrid(threshold: usize, depth: usize, balance: f64) -> HybridConfig {
+    HybridConfig {
+        enabled: true,
+        partition_threshold: threshold,
+        recursion_depth: depth,
+        balance_factor: balance,
+    }
+}
+
+#[test]
+fn stitched_permutation_is_valid_across_the_knob_space() {
+    let g = mesh2d(48, 48);
+    for depth in 1..=3 {
+        for balance in [1.2, 1.5, 2.0] {
+            let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+            engine.set_hybrid(hybrid(500, depth, balance));
+            let rep = engine.order(&g, ParAmd::new(1));
+            assert!(
+                is_valid_perm(&rep.perm),
+                "invalid perm at depth={depth} balance={balance}"
+            );
+            assert_eq!(rep.perm.len(), g.n);
+            let pivots: u32 = rep.set_sizes.iter().sum();
+            assert_eq!(pivots as usize, g.n, "round log must cover every pivot");
+        }
+    }
+}
+
+#[test]
+fn hybrid_fill_is_within_bounds_of_pure_paramd_on_mesh2d() {
+    let g = mesh2d(64, 64);
+    let pure = ParAmd::new(1).order(&g);
+    let fill_pure = fill_in(&g, &pure.perm);
+    let engine = ShardEngine::new(ShardSpec::uniform(4, 1));
+    engine.set_hybrid(hybrid(1_000, 2, 1.5));
+    let rep = engine.order(&g, ParAmd::new(1));
+    assert!(is_valid_perm(&rep.perm));
+    assert_eq!(engine.metrics().hybrid_requests, 1, "hybrid must engage");
+    let fill_h = fill_in(&g, &rep.perm);
+    assert!(
+        (fill_h as f64) <= 1.15 * fill_pure as f64,
+        "mesh2d hybrid fill {fill_h} exceeds 1.15x pure ParAMD {fill_pure}"
+    );
+}
+
+#[test]
+fn hybrid_fill_is_within_bounds_of_pure_paramd_on_mesh3d() {
+    let g = mesh3d(12, 12, 12);
+    let pure = ParAmd::new(1).order(&g);
+    let fill_pure = fill_in(&g, &pure.perm);
+    let engine = ShardEngine::new(ShardSpec::uniform(4, 1));
+    engine.set_hybrid(hybrid(500, 1, 1.5));
+    let rep = engine.order(&g, ParAmd::new(1));
+    assert!(is_valid_perm(&rep.perm));
+    assert_eq!(engine.metrics().hybrid_requests, 1, "hybrid must engage");
+    let fill_h = fill_in(&g, &rep.perm);
+    assert!(
+        (fill_h as f64) <= 1.15 * fill_pure as f64,
+        "mesh3d hybrid fill {fill_h} exceeds 1.15x pure ParAMD {fill_pure}"
+    );
+}
+
+#[test]
+fn one_connected_mesh_fans_out_and_runs_shards_concurrently() {
+    // The whole point of the hybrid path: a single connected graph —
+    // which the plain engine orders as ONE job on ONE shard — becomes
+    // >= 4 independent subdomain jobs that demonstrably overlap
+    // (busy_peak > 1 needs two dispatchers inside jobs at once).
+    let g = mesh2d(120, 120);
+    let engine = ShardEngine::new(ShardSpec::uniform(4, 1));
+    engine.result_cache().set_budget(0); // every subdomain must dispatch
+    engine.set_hybrid(hybrid(1_000, 2, 1.6));
+    let rep = engine.order(&g, ParAmd::new(1));
+    assert!(is_valid_perm(&rep.perm));
+    assert_eq!(rep.perm.len(), g.n);
+    let m = engine.metrics();
+    assert_eq!(m.hybrid_requests, 1);
+    assert!(m.subdomains >= 4, "depth 2 must cut >= 4 subdomains");
+    assert!(
+        m.busy_peak > 1,
+        "subdomain jobs of one connected request must overlap (peak {})",
+        m.busy_peak
+    );
+    let frac = m.separator_frac();
+    assert!(frac > 0.0 && frac < 0.2, "separator fraction {frac}");
+    assert!(m.subdomain_busy_secs > 0.0);
+}
+
+#[test]
+fn repeated_hybrid_request_replays_from_the_request_cache() {
+    let g = mesh2d(50, 50);
+    let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+    engine.set_hybrid(hybrid(1_000, 2, 1.5));
+    let first = engine.order(&g, ParAmd::new(1));
+    let jobs: u64 = engine.metrics().per_shard.iter().map(|s| s.jobs).sum();
+    let second = engine.order(&g, ParAmd::new(1));
+    assert_eq!(second.perm, first.perm, "replay must bit-match");
+    assert_eq!(second.rounds, first.rounds);
+    let after: u64 = engine.metrics().per_shard.iter().map(|s| s.jobs).sum();
+    assert_eq!(after, jobs, "a hybrid repeat must dispatch zero jobs");
+    assert_eq!(
+        engine.metrics().hybrid_requests,
+        1,
+        "the repeat must not re-partition"
+    );
+}
+
+#[test]
+fn disconnected_input_bypasses_the_hybrid_path() {
+    // Hybrid planning targets one huge connected graph; a decomposed
+    // request already has component parallelism and must not pay for
+    // partitioning.
+    let g = multi_component(4, &[400, 700]);
+    let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+    engine.set_hybrid(hybrid(100, 2, 1.5));
+    let rep = engine.order(&g, ParAmd::new(1));
+    assert!(is_valid_perm(&rep.perm));
+    assert_eq!(rep.components, 4);
+    let m = engine.metrics();
+    assert_eq!(m.hybrid_requests, 0);
+    assert_eq!(m.partition_secs, 0.0);
+}

@@ -139,6 +139,50 @@ fn scattered_label_requests_share_component_entries() {
 }
 
 #[test]
+fn hybrid_knobs_are_part_of_the_request_cache_identity() {
+    // A request-level entry bakes the hybrid outcome into its stored
+    // permutation, so configs differing only in hybrid knobs must miss
+    // each other — and the *same* knobs must still hit.
+    use paramd::coordinator::HybridConfig;
+    let g = mesh2d(40, 40);
+    let depth2 = HybridConfig {
+        enabled: true,
+        partition_threshold: 500,
+        recursion_depth: 2,
+        balance_factor: 1.5,
+    };
+
+    let svc = Service::new(1).with_hybrid(HybridConfig {
+        recursion_depth: 1,
+        ..depth2
+    });
+    svc.order(&paramd_req(g.clone()));
+    let jobs_d1 = shard_jobs(&svc.metrics());
+
+    // Deeper recursion: a different partition, must re-order.
+    let svc = svc.with_hybrid(depth2);
+    let at_depth2 = svc.order(&paramd_req(g.clone()));
+    let jobs_d2 = shard_jobs(&svc.metrics());
+    assert!(jobs_d2 > jobs_d1, "a deeper recursion must miss, not replay");
+
+    // Hybrid off: the plain single-job path, again a distinct identity.
+    let svc = svc.with_hybrid(HybridConfig::disabled());
+    svc.order(&paramd_req(g.clone()));
+    let jobs_off = shard_jobs(&svc.metrics());
+    assert!(jobs_off > jobs_d2, "toggling hybrid off must miss too");
+
+    // Back to depth 2: the warm entry for those exact knobs replays.
+    let svc = svc.with_hybrid(depth2);
+    let replay = svc.order(&paramd_req(g.clone()));
+    assert_eq!(replay.perm, at_depth2.perm, "same knobs must bit-match");
+    assert_eq!(
+        shard_jobs(&svc.metrics()),
+        jobs_off,
+        "the depth-2 replay must dispatch zero jobs"
+    );
+}
+
+#[test]
 fn stress_8_submitters_hit_concurrently_through_the_pipeline() {
     let svc = Service::new(2)
         .with_shards(2)
