@@ -1,0 +1,178 @@
+//! Mid-elimination re-reduction speedup: kernel throughput with the
+//! round-boundary sweep (global twin re-compression + dense
+//! re-postponement + aggressive element absorption) on vs off.
+//!
+//! Two workloads, ordered at the kernel level with the pre-ordering
+//! reduction layer out of the picture, so every collapse the sweep
+//! finds is work the baseline really pays for:
+//!
+//! - **twin_heavy** (`matgen::twin_heavy`) — k-DOF twins visible from
+//!   round one; the first sweep folds them k-fold, shedding the rounds
+//!   and `L_e` traffic the baseline spends telling copies apart.
+//! - **emergent_twins** (`matgen::emergent_twins`) — vertices that
+//!   become twins only after the early elimination waves retire their
+//!   distinguishing structure; invisible to any up-front pass, and the
+//!   baseline eliminates the near-twins one at a time because shared
+//!   hubs keep them distance-2 dependent.
+//!
+//! Reported columns include eliminated weight per round (how much
+//! each stop-the-world round retires — the sweep's whole point is
+//! raising it) and the seconds spent inside the sweep itself.
+//!
+//! Writes `BENCH_midelim_rereduce.json` (override with
+//! `PARAMD_BENCH_MIDELIM_OUT`; default lands in the repository root
+//! when run via `cargo bench` from `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 6), or
+//! `--smoke` for a one-pass CI run. In smoke mode the run *asserts*
+//! the acceptance bars: >= 1.2x throughput over the sweep-disabled
+//! baseline and fill within 1.05x, on both workloads.
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::graph::csr::SymGraph;
+use paramd::matgen::{emergent_twins, twin_heavy};
+use paramd::ordering::paramd::ParAmd;
+use paramd::ordering::Ordering as _;
+use paramd::symbolic::fill_in;
+use paramd::util::timer::Timer;
+
+struct Meas {
+    secs: f64,
+    fill: f64,
+    weight_per_round: f64,
+    rereduce_secs: f64,
+    rereduce_count: u64,
+    twins: u64,
+    absorbed: u64,
+}
+
+/// Best-of-`reps` kernel ordering time for `cfg` on `g`, plus the
+/// sweep tallies and fill of the (deterministic) result.
+fn measure(g: &SymGraph, cfg: ParAmd, reps: usize) -> Meas {
+    let mut best = f64::MAX;
+    let mut last = None;
+    for _ in 0..reps {
+        let t = Timer::new();
+        let r = cfg.order(g);
+        best = best.min(t.secs());
+        assert_eq!(r.perm.len(), g.n);
+        last = Some(r);
+    }
+    let r = last.expect("reps >= 1");
+    Meas {
+        secs: best,
+        fill: fill_in(g, &r.perm) as f64,
+        weight_per_round: g.n as f64 / r.stats.rounds.max(1) as f64,
+        rereduce_secs: r.stats.rereduce_secs,
+        rereduce_count: r.stats.rereduce_count,
+        twins: r.stats.mid_twins_merged,
+        absorbed: r.stats.elements_absorbed,
+    }
+}
+
+fn main() {
+    bench_common::banner(
+        "Mid-elimination re-reduction — sweep on vs off kernel throughput",
+        "ISSUE 7 perf subsystem; not a paper table",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = bench_common::threads().max(4);
+    let reps: usize = if smoke {
+        2
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(6)
+    };
+
+    let workloads: Vec<(&str, SymGraph)> = if smoke {
+        vec![
+            ("twin_heavy", twin_heavy(4000, 8)),
+            ("emergent_twins", emergent_twins(2100, 3)),
+        ]
+    } else {
+        vec![
+            ("twin_heavy", twin_heavy(32_000, 8)),
+            ("emergent_twins", emergent_twins(9_100, 3)),
+        ]
+    };
+
+    println!(
+        "{:<15} {:>7} {:>10} {:>10} {:>8} {:>10} {:>10} {:>9} {:>7} {:>9}",
+        "workload",
+        "n",
+        "off(s)",
+        "on(s)",
+        "speedup",
+        "w/rnd off",
+        "w/rnd on",
+        "rr(s)",
+        "twins",
+        "absorbed"
+    );
+    let mut rows = Vec::new();
+    for (name, g) in &workloads {
+        let off = measure(g, ParAmd::new(threads).with_rereduce(false), reps);
+        let on = measure(g, ParAmd::new(threads).with_rereduce_every(1), reps);
+        let speedup = off.secs / on.secs.max(1e-12);
+        let fill_ratio = on.fill / off.fill.max(1.0);
+        println!(
+            "{:<15} {:>7} {:>10.4} {:>10.4} {:>7.2}x {:>10.1} {:>10.1} {:>9.4} {:>7} {:>9}",
+            name,
+            g.n,
+            off.secs,
+            on.secs,
+            speedup,
+            off.weight_per_round,
+            on.weight_per_round,
+            on.rereduce_secs,
+            on.twins,
+            on.absorbed
+        );
+        assert!(on.rereduce_count > 0, "{name}: the sweep must have fired");
+        if smoke {
+            assert!(
+                speedup >= 1.2,
+                "{name}: sweep speedup {speedup:.2}x below the 1.2x acceptance bar"
+            );
+            assert!(
+                on.fill <= off.fill * 1.05 + 50.0,
+                "{name}: sweep fill {} exceeds 1.05x of baseline {}",
+                on.fill,
+                off.fill
+            );
+        }
+        rows.push(format!(
+            "    {{\"workload\": \"{name}\", \"n\": {}, \"off_secs\": {:.6}, \
+             \"on_secs\": {:.6}, \"speedup\": {speedup:.3}, \"fill_ratio\": {fill_ratio:.4}, \
+             \"weight_per_round_off\": {:.2}, \"weight_per_round_on\": {:.2}, \
+             \"rereduce_secs\": {:.6}, \"rereduce_passes\": {}, \
+             \"mid_twins_merged\": {}, \"elements_absorbed\": {}}}",
+            g.n,
+            off.secs,
+            on.secs,
+            off.weight_per_round,
+            on.weight_per_round,
+            on.rereduce_secs,
+            on.rereduce_count,
+            on.twins,
+            on.absorbed
+        ));
+    }
+
+    let out = std::env::var("PARAMD_BENCH_MIDELIM_OUT")
+        .unwrap_or_else(|_| "../BENCH_midelim_rereduce.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"midelim_rereduce\",\n  \"status\": \"measured\",\n  \
+         \"threads\": {threads},\n  \"reps\": {reps},\n  \
+         \"acceptance\": \"speedup >= 1.2 and fill_ratio <= 1.05 on both workloads\",\n  \
+         \"workloads\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -110,7 +110,7 @@ pub use crate::ordering::cache::{CacheMetrics, ResultCache};
 pub use crate::ordering::hybrid::HybridConfig;
 pub use crate::ordering::paramd::runtime::QueuePolicy;
 pub use crate::ordering::reduce::{ReduceConfig, ReduceStats};
-pub use crate::ordering::shard::{ShardMetrics, ShardSpec};
+pub use crate::ordering::shard::{RereduceSettings, ShardMetrics, ShardSpec};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
@@ -234,6 +234,7 @@ impl Service {
             ..old.reduce_config()
         });
         core.shards.set_hybrid(old.hybrid_config());
+        core.shards.set_rereduce(old.rereduce_config());
         old.shutdown_join();
         drop(old);
         // The old queue is closed; the pipeline restarts on a fresh one.
@@ -335,6 +336,40 @@ impl Service {
     /// fingerprint threads).
     pub fn with_reduce_config(self, cfg: ReduceConfig) -> Self {
         self.core().shards.set_reduce(cfg);
+        self
+    }
+
+    /// Switch the **mid-elimination re-reduction sweep** (global twin
+    /// re-compression, dense re-postponement, aggressive element
+    /// absorption on the live quotient graph — **on by default**) on or
+    /// off (the CLI's `--no-rereduce`). Survives later engine rebuilds.
+    pub fn with_rereduce(self, on: bool) -> Self {
+        let cur = self.core().shards.rereduce_config();
+        self.core()
+            .shards
+            .set_rereduce(RereduceSettings { enabled: on, ..cur });
+        self
+    }
+
+    /// Fire the sweep every `every` rounds (the CLI's
+    /// `--rereduce-every`; default 4, 0 disables the cadence trigger).
+    /// Does not re-enable a disabled sweep.
+    pub fn with_rereduce_every(self, every: u32) -> Self {
+        let cur = self.core().shards.rereduce_config();
+        self.core()
+            .shards
+            .set_rereduce(RereduceSettings { every, ..cur });
+        self
+    }
+
+    /// Fire the sweep when a round eliminates fewer than
+    /// `elbow × threads` pivots — the distance-2 set-size elbow (the
+    /// CLI's `--rereduce-elbow`; default 0.0 = off).
+    pub fn with_rereduce_elbow(self, elbow: f64) -> Self {
+        let cur = self.core().shards.rereduce_config();
+        self.core()
+            .shards
+            .set_rereduce(RereduceSettings { elbow, ..cur });
         self
     }
 
@@ -1037,6 +1072,41 @@ mod tests {
         let cfg = svc.core().shards.reduce_config();
         assert!(cfg.leaves && cfg.dense && cfg.twins);
         assert_eq!(cfg.dense_alpha, 3.5, "re-enabling keeps the tuned α");
+    }
+
+    #[test]
+    fn rereduce_knobs_survive_engine_rebuilds_and_reach_the_engine() {
+        let svc = Service::new(1)
+            .with_rereduce_every(1)
+            .with_rereduce_elbow(2.5)
+            .with_rereduce(false)
+            .with_shards(2);
+        let cfg = svc.core().shards.rereduce_config();
+        assert!(!cfg.enabled, "off must survive the reshape");
+        assert_eq!(cfg.every, 1, "cadence must survive the reshape");
+        assert_eq!(cfg.elbow, 2.5, "elbow must survive the reshape");
+        let svc = svc.with_rereduce(true);
+        assert!(svc.core().shards.rereduce_config().enabled);
+        // A sweep-heavy request through the full service path surfaces
+        // the tally in the service metrics report.
+        let g = crate::matgen::emergent_twins(220, 3);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(g.clone()),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        let rep = svc.order(&req);
+        assert!(crate::graph::perm::is_valid_perm(&rep.perm));
+        let m = svc.metrics();
+        assert!(m.shards.rereduce_passes > 0);
+        assert!(m.shards.mid_twins_merged > 0);
+        assert!(m.shards.elements_absorbed > 0);
+        assert!(m.report().contains("rereduce: passes="));
     }
 
     #[test]

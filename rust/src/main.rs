@@ -13,6 +13,7 @@
 //!         [--arena-cap A] [--queue-cap Q] [--small-first]
 //!         [--shards K] [--shard-threads T]
 //!         [--no-reduce] [--dense-alpha A]
+//!         [--no-rereduce] [--rereduce-every K] [--rereduce-elbow E]
 //!         [--cache-mb MB] [--no-cache]
 //!         [--hybrid] [--partition-threshold N] [--recursion-depth D]
 //!         [--balance-factor B]
@@ -24,7 +25,15 @@
 //!         `--no-reduce` disables the pre-ordering reduction layer
 //!         (twin compression / dense-row postponement / leaf stripping,
 //!         on by default) and `--dense-alpha` tunes its `max(16, α·√n)`
-//!         dense-row threshold; `--cache-mb` budgets the fingerprinted
+//!         dense-row threshold; `--no-rereduce` disables the
+//!         mid-elimination re-reduction sweep (global twin
+//!         re-compression + dense re-postponement + aggressive element
+//!         absorption on the live quotient graph at round boundaries,
+//!         on by default), `--rereduce-every` sets its round cadence
+//!         (default 4, 0 = off) and `--rereduce-elbow` adds a
+//!         set-starvation trigger (fire when a round eliminates fewer
+//!         than E×threads pivots; default 0 = off);
+//!         `--cache-mb` budgets the fingerprinted
 //!         ordering result cache (default 64 MiB — repeated graphs and
 //!         components replay instead of re-ordering) and `--no-cache`
 //!         disables it; `--hybrid` turns on the nested-dissection ×
@@ -98,6 +107,7 @@ fn main() {
         "pipeline",
         "small-first",
         "no-reduce",
+        "no-rereduce",
         "no-cache",
         "hybrid",
     ]);
@@ -219,6 +229,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         .with_arena_cap(args.get_parse("arena-cap", usize::MAX))
         .with_queue_cap(args.get_parse("queue-cap", 64usize))
         .with_dense_alpha(args.get_parse("dense-alpha", 10.0f64))
+        .with_rereduce_every(args.get_parse("rereduce-every", 4u32))
+        .with_rereduce_elbow(args.get_parse("rereduce-elbow", 0.0f64))
         .with_result_cache(if args.has("no-cache") {
             0
         } else {
@@ -226,6 +238,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         });
     if args.has("no-reduce") {
         svc = svc.with_reduction(false);
+    }
+    if args.has("no-rereduce") {
+        svc = svc.with_rereduce(false);
     }
     if let Some(h) = hybrid_of(args) {
         svc = svc.with_hybrid(h);

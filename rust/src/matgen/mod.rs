@@ -331,6 +331,67 @@ pub fn twin_heavy(n: usize, k: usize) -> SymGraph {
     crate::graph::perm::permute_graph(&g, &rng.permutation(total))
 }
 
+/// A graph whose vertices are **not twins initially but become twins
+/// mid-elimination** — the mid-elimination re-reduction sweep's target
+/// workload ([`crate::ordering::reduce::live`]). Classes of `k` members
+/// share one class *seed* vertex, every member carries one private
+/// *distinguisher* (adjacent only to the member and the seed), and a
+/// few global hubs tie the classes together:
+///
+/// - initially no two vertices share a neighborhood (each member is
+///   distinguished by its private distinguisher, each distinguisher by
+///   its member, each seed by its class, each hub by the one seed it
+///   additionally touches);
+/// - the first waves eliminate the distinguishers (degree 2, the
+///   minimum): `x_i`'s element is `{m_i, seed}`. The seeds go next;
+///   because the seed's own weight is counted in `x_i`'s element's
+///   degree, that element keeps a phantom external degree at the
+///   seed's elimination and is **not** absorbed locally — every member
+///   leaves the wave holding the class element plus a private element
+///   whose only *live* vertex is itself. The per-pivot supervariable
+///   detection can therefore never merge the members (their element
+///   lists always differ, and no later pivot holds two members until
+///   the hubs go). Only the global sweep sees that each private
+///   element's live list is a subset of the class element, absorbs it,
+///   and collapses the members of each class into one supervariable;
+/// - the hubs (degree ≈ total members) cross the dense threshold
+///   mid-run once enough of the graph has been eliminated.
+///
+/// `n` is a target total vertex count (rounded to the class grid);
+/// `k ≥ 2` is the class size — keep `k ≤ 4` so the seed wave strictly
+/// precedes the member wave. Vertex ids are deterministically scattered.
+pub fn emergent_twins(n: usize, k: usize) -> SymGraph {
+    const HUBS: usize = 3;
+    let k = k.max(2);
+    // Per class: k members + k distinguishers + 1 seed.
+    let per = 2 * k + 1;
+    let classes = crate::util::ceil_div(n.max(per + HUBS).saturating_sub(HUBS), per).max(HUBS);
+    let total = classes * per + HUBS;
+    let member = |c: usize, i: usize| c * per + i;
+    let distinguisher = |c: usize, i: usize| c * per + k + i;
+    let seed_of = |c: usize| c * per + 2 * k;
+    let hub = |j: usize| classes * per + j;
+    let mut edges = Vec::with_capacity(classes * k * (3 + HUBS) + HUBS);
+    for c in 0..classes {
+        for i in 0..k {
+            edges.push((member(c, i), distinguisher(c, i)));
+            edges.push((distinguisher(c, i), seed_of(c)));
+            edges.push((member(c, i), seed_of(c)));
+            for j in 0..HUBS {
+                edges.push((member(c, i), hub(j)));
+            }
+        }
+    }
+    for j in 0..HUBS {
+        // Touching one distinct seed keeps the hubs from being twins of
+        // each other at time zero.
+        edges.push((hub(j), seed_of(j)));
+    }
+    let g = SymGraph::from_edges(total, &edges);
+    let mut rng = Rng::new(0xE41C ^ ((classes as u64) << 16) ^ k as u64);
+    crate::graph::perm::permute_graph(&g, &rng.permutation(total))
+}
+
 /// A 2D mesh of `n` vertices plus `count` **dense rows**: extra vertices
 /// each coupled to `d` distinct mesh vertices (deterministic
 /// pseudo-random placement). Exercises the reduction layer's dense-row
@@ -667,6 +728,49 @@ mod tests {
         assert_eq!(g.n, 52);
         assert_eq!(connected_components(&g).count, 1);
         assert_eq!(twin_heavy(50, 4), twin_heavy(50, 4), "deterministic");
+    }
+
+    #[test]
+    fn emergent_twins_has_no_initial_twins() {
+        let g = emergent_twins(120, 3);
+        g.validate().unwrap();
+        // No two vertices may share an open OR a closed neighborhood:
+        // the twins only *emerge* once elimination starts.
+        let open = |v: usize| {
+            let mut s: Vec<i32> = g.neighbors(v).to_vec();
+            s.sort_unstable();
+            s
+        };
+        let closed = |v: usize| {
+            let mut s: Vec<i32> = g.neighbors(v).to_vec();
+            s.push(v as i32);
+            s.sort_unstable();
+            s
+        };
+        let mut opens: Vec<Vec<i32>> = (0..g.n).map(open).collect();
+        opens.sort_unstable();
+        opens.dedup();
+        assert_eq!(opens.len(), g.n, "open-neighborhood (false) twins exist");
+        let mut closeds: Vec<Vec<i32>> = (0..g.n).map(closed).collect();
+        closeds.sort_unstable();
+        closeds.dedup();
+        assert_eq!(closeds.len(), g.n, "closed-neighborhood (true) twins exist");
+    }
+
+    #[test]
+    fn emergent_twins_is_connected_and_deterministic() {
+        use crate::graph::components::connected_components;
+        let g = emergent_twins(150, 3);
+        g.validate().unwrap();
+        assert_eq!(connected_components(&g).count, 1);
+        assert_eq!(emergent_twins(150, 3), emergent_twins(150, 3));
+        // Degree structure: distinguishers (2, the strict minimum —
+        // they form the first elimination wave), members (5), seeds
+        // (2k or 2k+1), hubs (≈ member count).
+        let mut degs: Vec<usize> = (0..g.n).map(|v| g.degree(v)).collect();
+        degs.sort_unstable();
+        assert_eq!(degs[0], 2, "distinguishers lead the degree order");
+        assert!(*degs.last().unwrap() > g.n / 4, "hubs see every member");
     }
 
     #[test]

@@ -64,7 +64,11 @@ pub fn config_salt(cfg: &ParAmd) -> u64 {
     h = splitmix64(h ^ cfg.elbow.to_bits());
     h = splitmix64(h ^ cfg.seed);
     h = splitmix64(h ^ (u64::from(cfg.aggressive) | (u64::from(cfg.adaptive) << 1)));
-    splitmix64(h ^ cfg.adaptive_mult_max.to_bits())
+    h = splitmix64(h ^ cfg.adaptive_mult_max.to_bits());
+    // Mid-elimination re-reduction changes merges, tails, and pivot
+    // choices, so every sweep knob is ordering-relevant.
+    h = splitmix64(h ^ (u64::from(cfg.rereduce) | ((cfg.rereduce_every as u64) << 1)));
+    splitmix64(h ^ cfg.rereduce_elbow.to_bits())
 }
 
 /// Hash the reduction knobs that change *what gets ordered* into the
@@ -495,6 +499,21 @@ mod tests {
         assert_ne!(config_salt(&base), config_salt(&base.with_lim_total(64)));
         assert_ne!(config_salt(&base), config_salt(&base.with_seed(1)));
         assert_ne!(config_salt(&base), config_salt(&base.with_adaptive()));
+        // Every mid-elimination sweep knob is ordering-relevant.
+        assert_ne!(config_salt(&base), config_salt(&base.with_rereduce(false)));
+        assert_ne!(
+            config_salt(&base),
+            config_salt(&base.with_rereduce_every(1))
+        );
+        assert_ne!(
+            config_salt(&base),
+            config_salt(&base.with_rereduce_elbow(0.5))
+        );
+        // Repeating the same sweep config is the same identity.
+        assert_eq!(
+            config_salt(&base.with_rereduce_every(2)),
+            config_salt(&base.with_rereduce_every(2))
+        );
     }
 
     #[test]

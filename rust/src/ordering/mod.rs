@@ -63,6 +63,17 @@ pub struct OrderingStats {
     /// Cumulative stop-the-world seconds spent inside those collections
     /// (every worker is parked at a barrier while one thread compacts).
     pub gc_secs: f64,
+    /// Global twins merged by the mid-elimination re-reduction sweep
+    /// ([`reduce::live`]); 0 when the sweep is off or never fired.
+    pub mid_twins_merged: u64,
+    /// Rows re-postponed to the permutation tail mid-elimination.
+    pub mid_dense_postponed: u64,
+    /// Elements absorbed by a superset element mid-elimination.
+    pub elements_absorbed: u64,
+    /// Re-reduction sweeps executed (trigger count).
+    pub rereduce_count: u64,
+    /// Stop-the-world seconds spent inside those sweeps.
+    pub rereduce_secs: f64,
     /// Total quotient-graph words touched (cost-model input).
     pub work_words: u64,
     /// Per-thread per-phase work counters (cost-model input; empty for

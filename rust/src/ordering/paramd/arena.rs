@@ -32,7 +32,7 @@
 //!
 //! [`grow_events`]: ParAmdArena::grow_events
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering::Relaxed};
 use std::sync::{Condvar, Mutex};
 
 use crate::graph::csr::SymGraph;
@@ -105,6 +105,68 @@ impl ThreadSlot {
     }
 }
 
+/// Pooled state for the mid-elimination re-reduction sweep
+/// ([`crate::ordering::reduce::live`]): the leader-armed trigger flag,
+/// the shared fingerprint scratch every worker writes its chunk of, the
+/// leader's nomination/postponement buffers, and the cumulative sweep
+/// counters that [`ParAmdArena::assemble`] folds into the run's stats.
+pub struct RereduceState {
+    /// Armed by the leader in phase D; phase E runs the sweep when set.
+    pub(crate) flag: AtomicBool,
+    /// Per-vertex commutative live-adjacency fingerprints.
+    pub(crate) fp: Vec<AtomicU64>,
+    /// Per-vertex live-adjacency lengths (bucket discriminator).
+    pub(crate) cnt: Vec<AtomicU32>,
+    /// Leader scratch: `(hash, live_len, v)` nomination keys.
+    pub(crate) keys: Mutex<Vec<(u64, u32, u32)>>,
+    /// Dense rows re-postponed mid-run, in postponement order — appended
+    /// to the elimination order's tail at assembly.
+    pub(crate) postponed: Mutex<Vec<i32>>,
+    pub(crate) passes: AtomicUsize,
+    pub(crate) twins: AtomicUsize,
+    pub(crate) dense: AtomicUsize,
+    pub(crate) absorbed: AtomicUsize,
+    /// Leader-side sweep nanoseconds (inside the stop-the-world window).
+    pub(crate) nanos: AtomicU64,
+}
+
+impl RereduceState {
+    fn new() -> Self {
+        Self {
+            flag: AtomicBool::new(false),
+            fp: Vec::new(),
+            cnt: Vec::new(),
+            keys: Mutex::new(Vec::new()),
+            postponed: Mutex::new(Vec::new()),
+            passes: AtomicUsize::new(0),
+            twins: AtomicUsize::new(0),
+            dense: AtomicUsize::new(0),
+            absorbed: AtomicUsize::new(0),
+            nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Per-run reset, growing the fingerprint scratch to `n` vertices.
+    /// Returns 1 if anything grew (the arena's grow-event accounting).
+    fn reset(&mut self, n: usize) -> u32 {
+        let mut grew = 0;
+        if self.fp.len() < n {
+            self.fp.resize_with(n, || AtomicU64::new(0));
+            self.cnt.resize_with(n, || AtomicU32::new(0));
+            grew = 1;
+        }
+        self.flag.store(false, Relaxed);
+        self.keys.get_mut().unwrap().clear();
+        self.postponed.get_mut().unwrap().clear();
+        self.passes.store(0, Relaxed);
+        self.twins.store(0, Relaxed);
+        self.dense.store(0, Relaxed);
+        self.absorbed.store(0, Relaxed);
+        self.nanos.store(0, Relaxed);
+        grew
+    }
+}
+
 /// All storage one ParAMD run needs, owned across runs. See the module
 /// docs for the reuse rules.
 pub struct ParAmdArena {
@@ -128,6 +190,8 @@ pub struct ParAmdArena {
     pub(crate) gc_count: AtomicUsize,
     /// Cumulative stop-the-world nanoseconds spent in round-boundary GC.
     pub(crate) gc_nanos: AtomicU64,
+    /// Mid-elimination re-reduction state (phase E).
+    pub(crate) rereduce: RereduceState,
     pub(crate) set_sizes: Mutex<Vec<u32>>,
     pub(crate) slots: Vec<Mutex<ThreadSlot>>,
     // ---- assembly scratch (pooled like everything else) ----------------
@@ -162,6 +226,7 @@ impl ParAmdArena {
             abort: AtomicBool::new(false),
             gc_count: AtomicUsize::new(0),
             gc_nanos: AtomicU64::new(0),
+            rereduce: RereduceState::new(),
             set_sizes: Mutex::new(Vec::new()),
             slots: Vec::new(),
             elim_order: Vec::new(),
@@ -256,6 +321,7 @@ impl ParAmdArena {
         self.abort.store(false, Relaxed);
         self.gc_count.store(0, Relaxed);
         self.gc_nanos.store(0, Relaxed);
+        grew += u64::from(self.rereduce.reset(n));
         self.set_sizes.get_mut().unwrap().clear();
         while self.slots.len() < t {
             let tid = self.slots.len();
@@ -280,6 +346,11 @@ impl ParAmdArena {
         stats.pivots = 0;
         stats.gc_count = 0;
         stats.gc_secs = 0.0;
+        stats.mid_twins_merged = 0;
+        stats.mid_dense_postponed = 0;
+        stats.elements_absorbed = 0;
+        stats.rereduce_count = 0;
+        stats.rereduce_secs = 0.0;
         stats.work_words = 0;
         stats.modeled_time = 0.0;
         stats.set_sizes.clear();
@@ -327,6 +398,12 @@ impl ParAmdArena {
             }
         }
         debug_assert_eq!(self.elim_order.len(), logged, "log merge lost pivots");
+        // Rows the re-reduction sweep postponed come last: they are their
+        // own roots (parent -1, nv kept), exactly the pre-ordering dense
+        // rule's tail placement, so appending them after every logged
+        // pivot yields the same permutation shape mid-run.
+        self.elim_order
+            .append(self.rereduce.postponed.get_mut().unwrap());
 
         self.parent_snap.clear();
         self.parent_snap.resize(n, -1);
@@ -375,6 +452,11 @@ impl ParAmdArena {
         stats.set_sizes.clone_from(&d.set_sizes);
         stats.gc_count = self.gc_count.load(Relaxed) as u64;
         stats.gc_secs = self.gc_nanos.load(Relaxed) as f64 / 1e9;
+        stats.mid_twins_merged = self.rereduce.twins.load(Relaxed) as u64;
+        stats.mid_dense_postponed = self.rereduce.dense.load(Relaxed) as u64;
+        stats.elements_absorbed = self.rereduce.absorbed.load(Relaxed) as u64;
+        stats.rereduce_count = self.rereduce.passes.load(Relaxed) as u64;
+        stats.rereduce_secs = self.rereduce.nanos.load(Relaxed) as f64 / 1e9;
         stats.work_words = d
             .round_work
             .iter()

@@ -246,6 +246,12 @@ pub fn eliminate_pivot(
 
 /// Hash-grouped exact-comparison supervariable merging among the pivot's
 /// updated neighbors (`ws.hash_scratch` holds `(hash, v)` pairs).
+///
+/// Deliberately local: only variables inside this pivot's `L_me` are
+/// compared, because those are the only ones this thread owns. Twins
+/// that form *across* pivots (global twins) are merged by the round-
+/// boundary re-reduction sweep (`ordering::reduce::live`), which runs
+/// stop-the-world and therefore may compare arbitrary pairs.
 fn detect_supervariables(
     g: &SharedGraph,
     ws: &mut Workspace,

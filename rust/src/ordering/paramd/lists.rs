@@ -16,6 +16,12 @@ use std::sync::atomic::{AtomicI32, Ordering::Relaxed};
 
 /// Shared affinity flags: `affinity[v] = tid` of the owner of the freshest
 /// degree info for `v`, or -1 when `v` has been removed (eliminated).
+///
+/// The mid-elimination sweep ([`crate::ordering::reduce::live`]) uses the
+/// same -1 protocol for the twins it merges and the rows it re-postpones:
+/// stale entries left in thread-local degree lists are reclaimed lazily by
+/// the next [`ThreadLists::get`] traversal, exactly like eliminated
+/// variables.
 pub struct Affinity {
     flags: Vec<AtomicI32>,
 }

@@ -13,7 +13,13 @@
 //! 4. each thread eliminates the pivots it proposed, with concurrent
 //!    connection updates (single elbow claim per pivot, §3.3.1) and
 //!    concurrent degree lists (§3.3.2);
-//! 5. a stop-the-world GC runs at the round boundary if any claim failed.
+//! 5. a stop-the-world GC runs at the round boundary if any claim failed;
+//! 6. at configured triggers (every K rounds and/or a small-set elbow) a
+//!    **mid-elimination re-reduction** sweep runs in the same
+//!    stop-the-world window ([`crate::ordering::reduce::live`]): all
+//!    threads fingerprint the live quotient graph in parallel, then the
+//!    leader merges global twins, absorbs subset elements, and
+//!    re-postpones rows that crossed the dense threshold.
 //!
 //! ## Warm-path architecture (runtime + arena)
 //!
@@ -53,6 +59,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering::Relaxed};
 use std::sync::{Barrier, Mutex};
 
 use crate::graph::csr::SymGraph;
+use crate::ordering::reduce::live;
 use crate::ordering::{Ordering, OrderingResult};
 use crate::util::chunk_range;
 use crate::util::timer::Timer;
@@ -91,6 +98,18 @@ pub struct ParAmd {
     pub adaptive: bool,
     /// Upper bound for the adapted relaxation factor.
     pub adaptive_mult_max: f64,
+    /// Mid-elimination re-reduction master switch: run the
+    /// [`crate::ordering::reduce::live`] sweep (global twin
+    /// re-compression + subset element absorption + dense
+    /// re-postponement) at round boundaries.
+    pub rereduce: bool,
+    /// Run the sweep every K rounds (`0` disables the periodic trigger).
+    pub rereduce_every: u32,
+    /// Elbow trigger: sweep when the last distance-2 set was smaller
+    /// than `rereduce_elbow × threads` — elimination is starved, so
+    /// shrinking the graph is the best use of the boundary
+    /// (`0.0` disables).
+    pub rereduce_elbow: f64,
 }
 
 impl ParAmd {
@@ -104,6 +123,9 @@ impl ParAmd {
             seed: 0x9a_2a_3d,
             adaptive: false,
             adaptive_mult_max: 1.5,
+            rereduce: true,
+            rereduce_every: 4,
+            rereduce_elbow: 0.0,
         }
     }
 
@@ -130,6 +152,25 @@ impl ParAmd {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Toggle mid-elimination re-reduction (on by default).
+    pub fn with_rereduce(mut self, on: bool) -> Self {
+        self.rereduce = on;
+        self
+    }
+
+    /// Periodic trigger: sweep every `every` rounds (`0` = never).
+    pub fn with_rereduce_every(mut self, every: u32) -> Self {
+        self.rereduce_every = every;
+        self
+    }
+
+    /// Starvation trigger: sweep when the last distance-2 set dropped
+    /// below `elbow × threads` (`0.0` = never).
+    pub fn with_rereduce_elbow(mut self, elbow: f64) -> Self {
+        self.rereduce_elbow = elbow;
         self
     }
 }
@@ -265,6 +306,7 @@ impl ParAmd {
                 cancel,
                 gc_count: &arena.gc_count,
                 gc_nanos: &arena.gc_nanos,
+                rr: &arena.rereduce,
                 set_sizes: &arena.set_sizes,
                 t,
                 lim,
@@ -317,6 +359,9 @@ struct RunShared<'a> {
     gc_count: &'a AtomicUsize,
     /// Stop-the-world GC nanoseconds (leader-only writes).
     gc_nanos: &'a AtomicU64,
+    /// Mid-elimination re-reduction state: the leader-armed trigger
+    /// flag, the shared fingerprint scratch, and the sweep counters.
+    rr: &'a arena::RereduceState,
     set_sizes: &'a Mutex<Vec<u32>>,
     t: usize,
     lim: usize,
@@ -448,10 +493,58 @@ fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
                 // this round boundary instead of finishing the ordering.
                 sh.abort.store(true, Relaxed);
             }
+            // Arm (or disarm) the re-reduction sweep for phase E. The
+            // leader stores every round, so the flag never goes stale.
+            let by_round =
+                cfg.rereduce_every > 0 && (round + 1) % cfg.rereduce_every == 0;
+            let by_elbow =
+                cfg.rereduce_elbow > 0.0 && (total as f64) < cfg.rereduce_elbow * sh.t as f64;
+            sh.rr.flag.store(cfg.rereduce && (by_round || by_elbow), Relaxed);
         }
         sh.barrier.wait();
         if sh.poison.load(Relaxed) || sh.abort.load(Relaxed) {
             break;
+        }
+
+        // Phase E: mid-elimination re-reduction, inside the same
+        // stop-the-world regime as GC. Every thread fingerprints its
+        // static vertex chunk of the live quotient graph; after the
+        // barrier the leader (sole mutator — peers park at the second
+        // barrier) nominates, verifies and merges global twins, absorbs
+        // subset elements, and re-postpones dense rows.
+        if sh.rr.flag.load(Relaxed) {
+            live::fingerprint_chunk(sh.sg, lo, hi, &sh.rr.fp[..n], &sh.rr.cnt[..n]);
+            sh.barrier.wait();
+            if tid == 0 {
+                let trr = Timer::new();
+                let mut keys = sh.rr.keys.lock().unwrap();
+                let mut postponed = sh.rr.postponed.lock().unwrap();
+                let out = live::rereduce_exclusive(
+                    sh.sg,
+                    sh.aff,
+                    &mut slot.ws,
+                    &sh.rr.fp[..n],
+                    &sh.rr.cnt[..n],
+                    &mut keys,
+                    &mut postponed,
+                );
+                if out.dense_postponed > 0 {
+                    // Postponed rows reach the permutation through the
+                    // arena's tail, outside every per-thread elim log;
+                    // an extra set-sizes entry keeps Σ sizes == pivots.
+                    sh.set_sizes
+                        .lock()
+                        .unwrap()
+                        .push(out.dense_postponed as u32);
+                }
+                sh.rr.passes.fetch_add(1, Relaxed);
+                sh.rr.twins.fetch_add(out.twins_merged, Relaxed);
+                sh.rr.dense.fetch_add(out.dense_postponed, Relaxed);
+                sh.rr.absorbed.fetch_add(out.elements_absorbed, Relaxed);
+                sh.rr.nanos
+                    .fetch_add(trr.elapsed().as_nanos() as u64, Relaxed);
+            }
+            sh.barrier.wait();
         }
         round += 1;
     }
@@ -750,6 +843,97 @@ mod tests {
         let before = arena.grow_events();
         cfg.order_into(&rt, &mut arena, &mesh2d(10, 10));
         assert_eq!(arena.grow_events(), before);
+    }
+
+    #[test]
+    fn rereduce_merges_emergent_twins_and_flows_into_stats() {
+        // `emergent_twins` is built so its twin classes only become
+        // fingerprint-identical after their private distinguisher
+        // elements are absorbed by the class element — a merge the
+        // per-pivot local detection can never make. A sweep every
+        // round must absorb those elements, merge the members, and
+        // surface both counts in the run's stats.
+        let g = crate::matgen::emergent_twins(240, 3);
+        let r = ParAmd::new(2).with_rereduce_every(1).order(&g);
+        check_ordering_contract(&g, &r);
+        assert!(r.stats.rereduce_count > 0, "sweep never fired");
+        assert!(
+            r.stats.rereduce_secs > 0.0,
+            "fired sweeps must be timed like GC pauses"
+        );
+        assert!(
+            r.stats.elements_absorbed > 0,
+            "distinguisher elements must be absorbed by class elements"
+        );
+        assert!(
+            r.stats.mid_twins_merged > 0,
+            "emergent twins must be merged mid-elimination"
+        );
+        // Postponed rows are logged as their own pseudo-set, so the
+        // set-size ledger still accounts for every pivot.
+        let total: u32 = r.stats.set_sizes.iter().sum();
+        assert_eq!(total as u64, r.stats.pivots);
+    }
+
+    #[test]
+    fn rereduce_disabled_keeps_counters_zero() {
+        let g = crate::matgen::emergent_twins(240, 3);
+        let r = ParAmd::new(2).with_rereduce(false).order(&g);
+        check_ordering_contract(&g, &r);
+        assert_eq!(r.stats.rereduce_count, 0);
+        assert_eq!(r.stats.mid_twins_merged, 0);
+        assert_eq!(r.stats.mid_dense_postponed, 0);
+        assert_eq!(r.stats.elements_absorbed, 0);
+        assert_eq!(r.stats.rereduce_secs, 0.0);
+    }
+
+    #[test]
+    fn rereduce_single_thread_deterministic() {
+        // The sweep sorts its nomination keys and merges in vertex
+        // order, so a single-thread run with the sweep on is as
+        // deterministic as one without it.
+        let g = crate::matgen::emergent_twins(200, 3);
+        let a = ParAmd::new(1).with_seed(5).with_rereduce_every(1).order(&g);
+        let b = ParAmd::new(1).with_seed(5).with_rereduce_every(1).order(&g);
+        assert_eq!(a.perm, b.perm);
+        assert_eq!(a.stats.mid_twins_merged, b.stats.mid_twins_merged);
+        assert_eq!(a.stats.elements_absorbed, b.stats.elements_absorbed);
+        assert_eq!(a.stats.mid_dense_postponed, b.stats.mid_dense_postponed);
+    }
+
+    #[test]
+    fn rereduce_elbow_trigger_fires_on_set_starvation() {
+        // An absurdly high elbow fraction makes every round "starved",
+        // so the trigger must fire even with the round cadence off.
+        let g = mesh2d(16, 16);
+        let r = ParAmd::new(2)
+            .with_rereduce_every(0)
+            .with_rereduce_elbow(1.0e6)
+            .order(&g);
+        check_ordering_contract(&g, &r);
+        assert!(r.stats.rereduce_count > 0, "elbow trigger never fired");
+    }
+
+    #[test]
+    fn skewed_weights_survive_mid_flight_merges() {
+        // ISSUE regression: a weighted kernel run whose seed
+        // supervariables carry highly skewed weights must keep a valid
+        // kernel permutation when the sweep merges mid-flight — the
+        // run's own `nel == wtot` completion assert guards the exact
+        // weight total.
+        let g = crate::matgen::emergent_twins(180, 3);
+        let weights: Vec<i32> = (0..g.n as i32).map(|v| if v % 3 == 0 { 50 } else { 1 }).collect();
+        let rt = OrderingRuntime::new(2);
+        let mut arena = ParAmdArena::new();
+        let cancel = AtomicBool::new(false);
+        let cfg = ParAmd::new(2).with_rereduce_every(1);
+        let r = cfg
+            .order_into_cancellable_weighted(&rt, &mut arena, &g, Some(&weights), &cancel)
+            .expect("uncancelled run completes");
+        check_ordering_contract(&g, r);
+        // The arena must stay reusable after a sweep-heavy run.
+        let again = cfg.order_into(&rt, &mut arena, &g);
+        check_ordering_contract(&g, again);
     }
 
     use crate::graph::csr::SymGraph;

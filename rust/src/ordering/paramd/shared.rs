@@ -18,6 +18,14 @@
 //! after the pivot's connection updates are collected in thread-local
 //! scratch, exactly as §3.3.1 prescribes. On exhaustion the pivot is
 //! deferred and a stop-the-world GC runs at the next round boundary.
+//!
+//! The same stop-the-world round-boundary window also hosts the
+//! mid-elimination re-reduction sweep ([`crate::ordering::reduce::live`]):
+//! like GC it runs with every worker parked at a barrier, so it may
+//! mutate `state`/`parent`/`nv` without any claim protocol. Dead entries
+//! it leaves behind (`ST_DEAD_VAR` twins, `ST_DEAD_ELEM` absorbed
+//! elements) are pruned by the next collection exactly like the
+//! elimination phases' own casualties.
 
 use std::sync::atomic::{AtomicBool, AtomicI32, AtomicU8, AtomicUsize, Ordering::Relaxed};
 use std::sync::Mutex;

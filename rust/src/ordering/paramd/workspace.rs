@@ -33,7 +33,9 @@ pub struct Workspace {
     /// [`Self::set_epoch_stride`] when seed supervariables push weighted
     /// degrees past `n`.
     stride: u64,
-    /// Scratch for building L_me.
+    /// Scratch for building L_me; the mid-elimination sweep
+    /// ([`crate::ordering::reduce::live`]) borrows it for element
+    /// member lists between rounds, when no pivot owns it.
     pub lme: Vec<i32>,
     /// Scratch for candidate collection.
     pub candidates: Vec<i32>,
@@ -52,7 +54,8 @@ pub struct Workspace {
     pub rng: Rng,
     /// Per-round work log (indexed by round).
     pub work_log: Vec<RoundWork>,
-    /// Scratch for supervariable hashing: (hash, var).
+    /// Scratch for supervariable hashing: (hash, var). Also reused by
+    /// the mid-elimination sweep's dense-candidate sort.
     pub hash_scratch: Vec<(u64, i32)>,
 }
 

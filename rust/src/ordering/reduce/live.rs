@@ -1,0 +1,591 @@
+//! Mid-elimination re-reduction on the **live quotient graph** — the
+//! round-boundary analogue of the parent module's pre-ordering rules.
+//!
+//! PR 4's reduction runs exactly once, up front; matrices become
+//! twin-heavy and dense-row-heavy *as elimination proceeds*, and the
+//! kernel's own supervariable detection
+//! ([`crate::ordering::paramd::elim`]) only looks inside each pivot's
+//! `L_me` — twins formed globally, across pivots, are never merged.
+//! This module reuses the parent module's hash-nominate / exact-verify
+//! shape directly on [`SharedGraph`] state so the ParAMD driver can run
+//! it inside the stop-the-world round boundary (alongside GC, where
+//! exclusive access is already guaranteed):
+//!
+//! - [`fingerprint_chunk`] — each worker thread fingerprints a vertex
+//!   range of the live graph (commutative SplitMix64 sums over live
+//!   adjacency, exactly like the parent's `fingerprints` scan but over
+//!   quotient-graph element + variable lists instead of CSR rows);
+//! - [`rereduce_exclusive`] — the leader thread then (a) absorbs
+//!   elements whose live vertex list is a subset of another element's
+//!   (shrinking every later Phase-2 set union, and — by erasing the
+//!   lists' last differences — turning emergent twins into actual
+//!   fingerprint twins), (b) merges verified global twins through the
+//!   existing absorption forest (`parent`) with weighted `nv`
+//!   bookkeeping, and (c) re-postpones variables whose live weighted
+//!   degree crossed the dense threshold, pushing them to the
+//!   permutation tail via the arena's postponed list.
+//!
+//! ## Why the merges are AMD-legal
+//!
+//! Twin merge: two live variables with identical live adjacency
+//! (elements **and** variables, mutually excluded) are
+//! indistinguishable supervariables — the same condition
+//! `detect_supervariables` verifies locally — so folding `b` into `a`
+//! (`nv[a] += nv[b]`, `b` dead, `parent[b] = a`) preserves the
+//! elimination semantics; `a`'s stored degree stays a valid *upper
+//! bound* (AMD degrees are approximate by contract) and the Ashcraft
+//! bound is re-applied from live `nel`/`nv` at elimination time, so it
+//! remains exact after merges. Element absorption: if the live vertex
+//! list of `e` is contained in that of `f`, every clique edge `e`
+//! implies is already implied by `f` and every member variable still
+//! reaches `f` through its element list, so dropping `e` loses nothing
+//! and only tightens degree approximations. Dense postponement: a
+//! postponed variable is its own elimination root (parent stays `-1`,
+//! `nv` kept, `nel += nv`), appended to the permutation tail by the
+//! arena — the mid-run form of the parent module's
+//! [`ReductionPlan`](super::ReductionPlan) tail accounting.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering::Relaxed};
+
+use super::dense_threshold;
+use crate::ordering::paramd::lists::Affinity;
+use crate::ordering::paramd::shared::{
+    SharedGraph, ST_DEAD_ELEM, ST_DEAD_VAR, ST_ELEM, ST_VAR,
+};
+use crate::ordering::paramd::workspace::Workspace;
+use crate::util::rng::splitmix64;
+
+/// The `α` of the mid-elimination dense threshold
+/// `max(16, α·√live_n) × avg_live_weight` — the same SuiteSparse-style
+/// default the pre-ordering pass uses. Degrees are compared in *average
+/// live column weight* units so a uniformly-weighted run postpones
+/// exactly the rows its unweighted counterpart would.
+pub const MID_DENSE_ALPHA: f64 = 10.0;
+
+/// Counters from one [`rereduce_exclusive`] sweep.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RereduceOutcome {
+    /// Variables folded into a global twin representative.
+    pub twins_merged: usize,
+    /// Variables re-postponed to the permutation tail.
+    pub dense_postponed: usize,
+    /// Elements absorbed by a superset element (plus none for elements
+    /// that simply ran out of live vertices — those are dropped
+    /// silently, they carry no structure).
+    pub elements_absorbed: usize,
+}
+
+/// The live entry at offset `k` of a variable's adjacency list
+/// (elements first, then variables), or `None` for stale/dead entries.
+#[inline]
+fn live_entry(g: &SharedGraph, p: usize, k: usize, elen: usize) -> Option<usize> {
+    let x = g.iw_at(p + k);
+    debug_assert!(x >= 0, "adjacency entries are node ids");
+    let xu = x as usize;
+    let want = if k < elen { ST_ELEM } else { ST_VAR };
+    (g.st(xu) == want).then_some(xu)
+}
+
+/// Fingerprint the live variables in `lo..hi`: `fp[v]` = commutative
+/// SplitMix64 sum over `v`'s live adjacency (elements + variables —
+/// they share one id space), `cnt[v]` = its live length. Non-variables
+/// store zeros so stale values from an earlier sweep never leak.
+/// Deterministic per vertex regardless of how the range is chunked
+/// across threads.
+pub fn fingerprint_chunk(
+    g: &SharedGraph,
+    lo: usize,
+    hi: usize,
+    fp: &[AtomicU64],
+    cnt: &[AtomicU32],
+) {
+    for v in lo..hi {
+        if g.st(v) != ST_VAR {
+            fp[v].store(0, Relaxed);
+            cnt[v].store(0, Relaxed);
+            continue;
+        }
+        let p = g.pe_of(v);
+        let el = g.elen_of(v) as usize;
+        let ln = g.len_of(v) as usize;
+        let (mut h, mut c) = (0u64, 0u32);
+        for k in 0..ln {
+            if let Some(x) = live_entry(g, p, k, el) {
+                h = h.wrapping_add(splitmix64(x as u64));
+                c += 1;
+            }
+        }
+        fp[v].store(h, Relaxed);
+        cnt[v].store(c, Relaxed);
+    }
+}
+
+/// Exact live-adjacency twin test: the live entries of `a` excluding
+/// `b` equal the live entries of `b` excluding `a`. Covers adjacent
+/// ("true") and non-adjacent ("false") twins uniformly — for false
+/// twins the exclusions are no-ops. Unlike the kernel's
+/// `lists_identical` this skips dead entries and tolerates unequal raw
+/// list lengths, which is exactly the state a mid-run quotient graph is
+/// in. Hashes only nominate; this comparison is the ground truth.
+fn live_twin_eq(g: &SharedGraph, ws: &mut Workspace, a: usize, b: usize) -> bool {
+    let mark = ws.bump_epoch();
+    let pa = g.pe_of(a);
+    let ea = g.elen_of(a) as usize;
+    let la = g.len_of(a) as usize;
+    let mut ca = 0usize;
+    for k in 0..la {
+        if let Some(x) = live_entry(g, pa, k, ea) {
+            if x != b && ws.w[x] != mark {
+                ws.w[x] = mark;
+                ca += 1;
+            }
+        }
+    }
+    let pb = g.pe_of(b);
+    let eb = g.elen_of(b) as usize;
+    let lb = g.len_of(b) as usize;
+    let mut cb = 0usize;
+    for k in 0..lb {
+        if let Some(x) = live_entry(g, pb, k, eb) {
+            if x != a {
+                if ws.w[x] != mark {
+                    return false;
+                }
+                cb += 1;
+            }
+        }
+    }
+    ca == cb
+}
+
+/// Sort `(hash, live_len, v)` keys, bucket by `(hash, live_len)`, and
+/// merge every verified twin pair into the bucket's first still-live
+/// variable — the quotient-graph mirror of the parent module's
+/// `merge_twin_buckets`, writing the kernel's own merge protocol:
+/// `nv[a] += nv[b]`, `b` dead, `parent[b] = a`, affinity cleared so
+/// every thread's degree-list copy of `b` is lazily reclaimed.
+fn merge_nominated(
+    g: &SharedGraph,
+    aff: &Affinity,
+    ws: &mut Workspace,
+    keys: &mut [(u64, u32, u32)],
+) -> usize {
+    keys.sort_unstable();
+    let mut merged = 0usize;
+    let mut i = 0;
+    while i < keys.len() {
+        let mut j = i + 1;
+        while j < keys.len() && keys[j].0 == keys[i].0 && keys[j].1 == keys[i].1 {
+            j += 1;
+        }
+        for ai in i..j {
+            let a = keys[ai].2 as usize;
+            if g.st(a) != ST_VAR {
+                continue; // absorbed earlier in this sweep
+            }
+            for bi in ai + 1..j {
+                let b = keys[bi].2 as usize;
+                if g.st(b) == ST_VAR && live_twin_eq(g, ws, a, b) {
+                    let w = g.nv_of(b);
+                    g.nv[a].fetch_add(w, Relaxed);
+                    g.nv[b].store(0, Relaxed);
+                    g.set_st(b, ST_DEAD_VAR);
+                    g.parent[b].store(a as i32, Relaxed);
+                    aff.set(b, -1);
+                    merged += 1;
+                }
+            }
+        }
+        i = j;
+    }
+    merged
+}
+
+/// One re-reduction sweep over the live quotient graph. **Stop-the-world
+/// only**: the caller must guarantee every other worker is parked at a
+/// barrier (the ParAMD driver runs this from the leader thread at the
+/// round boundary, the same exclusion regime as
+/// [`SharedGraph::garbage_collect_exclusive`]). `fp`/`cnt` must hold a
+/// fresh [`fingerprint_chunk`] pass over `0..n`; `keys` and `postponed`
+/// are caller-pooled scratch/output (postponed variables are appended —
+/// the arena empties them into the elimination order's tail).
+/// Deterministic for a fixed graph state.
+pub fn rereduce_exclusive(
+    g: &SharedGraph,
+    aff: &Affinity,
+    ws: &mut Workspace,
+    fp: &[AtomicU64],
+    cnt: &[AtomicU32],
+    keys: &mut Vec<(u64, u32, u32)>,
+    postponed: &mut Vec<i32>,
+) -> RereduceOutcome {
+    let n = g.n;
+    let mut out = RereduceOutcome::default();
+
+    // (a) Aggressive element absorption, FIRST — absorbing a subset
+    // element is precisely what turns emergent twins into actual
+    // fingerprint twins (their lists stop differing by the absorbed
+    // element), so running it before nomination lets one sweep both
+    // absorb and merge. `e` dies when another element `f` (found
+    // through the first live member's element list — every absorber of
+    // `e` must contain that member) covers all of `e`'s live vertices.
+    // Each member's fingerprint is patched incrementally (the
+    // commutative sum makes removal exact), so the twin pass below
+    // nominates against post-absorption state. Elements with no live
+    // vertex left carry no structure and are dropped outright.
+    for e in 0..n {
+        if g.st(e) != ST_ELEM {
+            continue;
+        }
+        let pe = g.pe_of(e);
+        let le = g.len_of(e) as usize;
+        ws.lme.clear();
+        for k in 0..le {
+            let x = g.iw_at(pe + k) as usize;
+            if g.st(x) == ST_VAR {
+                ws.lme.push(x as i32);
+            }
+        }
+        if ws.lme.is_empty() {
+            g.set_st(e, ST_DEAD_ELEM);
+            continue;
+        }
+        let needed = ws.lme.len();
+        let v = ws.lme[0] as usize;
+        let pv = g.pe_of(v);
+        let ev = g.elen_of(v) as usize;
+        for kf in 0..ev {
+            let f = g.iw_at(pv + kf) as usize;
+            if f == e || g.st(f) != ST_ELEM {
+                continue;
+            }
+            // Mark e's live members, then count how many f covers;
+            // clearing each mark as it is found makes duplicates in
+            // L_f harmless (a member can count at most once).
+            let mark = ws.bump_epoch();
+            for &u in &ws.lme {
+                ws.w[u as usize] = mark;
+            }
+            let pf = g.pe_of(f);
+            let lf = g.len_of(f) as usize;
+            let mut found = 0usize;
+            for k in 0..lf {
+                let u = g.iw_at(pf + k) as usize;
+                if g.st(u) == ST_VAR && ws.w[u] == mark {
+                    ws.w[u] = 0;
+                    found += 1;
+                }
+            }
+            if found == needed {
+                g.set_st(e, ST_DEAD_ELEM);
+                out.elements_absorbed += 1;
+                // Patch the members' fingerprints: they no longer see e.
+                for &u in &ws.lme {
+                    fp[u as usize].fetch_sub(splitmix64(e as u64), Relaxed);
+                    cnt[u as usize].fetch_sub(1, Relaxed);
+                }
+                break;
+            }
+        }
+    }
+
+    // (b) Global twin re-compression, two passes like the pre-ordering
+    // rule: closed keys (`fp + h(v)` is invariant across an adjacent
+    // twin class) then open keys for the remaining false twins.
+    // Fingerprints of a merge survivor go stale the moment its twin
+    // dies, but staleness is symmetric inside a class — every member
+    // hashed the same now-dead neighbors — so nomination still
+    // collides, and `live_twin_eq` re-checks against the *current*
+    // graph before any merge; stale hashes can only miss merges, never
+    // manufacture one. (Twin merges cannot create new element-subset
+    // relations — exact twins share their whole element list — so
+    // nothing is lost by not looping back to (a).)
+    keys.clear();
+    keys.extend((0..n).filter(|&v| g.st(v) == ST_VAR).map(|v| {
+        let closed = fp[v].load(Relaxed).wrapping_add(splitmix64(v as u64));
+        (closed, cnt[v].load(Relaxed), v as u32)
+    }));
+    out.twins_merged += merge_nominated(g, aff, ws, keys);
+    keys.clear();
+    keys.extend(
+        (0..n)
+            .filter(|&v| g.st(v) == ST_VAR)
+            .map(|v| (fp[v].load(Relaxed), cnt[v].load(Relaxed), v as u32)),
+    );
+    out.twins_merged += merge_nominated(g, aff, ws, keys);
+
+    // (c) Dense re-postponement, last — it must see post-merge
+    // liveness. The cutoff is the pre-ordering threshold in units of
+    // average live column weight (scale-invariant: a uniformly-weighted
+    // run postpones exactly what its unweighted twin would), against
+    // the live vertex count. Ascending (degree, v) order keeps the tail
+    // least-dense-first and the sweep deterministic.
+    let mut live_n = 0usize;
+    for v in 0..n {
+        if g.st(v) == ST_VAR {
+            live_n += 1;
+        }
+    }
+    if live_n > 0 {
+        let live_weight = g.weight.saturating_sub(g.nel.load(Relaxed));
+        let avg = (live_weight as f64 / live_n as f64).max(1.0);
+        let thresh = dense_threshold(live_n, MID_DENSE_ALPHA) as f64 * avg;
+        ws.hash_scratch.clear();
+        for v in 0..n {
+            if g.st(v) == ST_VAR && g.deg_of(v) as f64 > thresh {
+                ws.hash_scratch.push((g.deg_of(v) as u64, v as i32));
+            }
+        }
+        ws.hash_scratch.sort_unstable();
+        for &(_, vi) in ws.hash_scratch.iter() {
+            let v = vi as usize;
+            // A postponed variable is its own root: parent stays -1,
+            // nv is kept, and the arena appends it to the elimination
+            // order's tail; `nel += nv` keeps the elimination target
+            // and every later Ashcraft bound exact.
+            g.set_st(v, ST_DEAD_VAR);
+            g.nel.fetch_add(g.nv_of(v) as usize, Relaxed);
+            aff.set(v, -1);
+            postponed.push(vi);
+            out.dense_postponed += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::SymGraph;
+
+    fn scratch(n: usize) -> (Vec<AtomicU64>, Vec<AtomicU32>) {
+        (
+            (0..n).map(|_| AtomicU64::new(u64::MAX)).collect(),
+            (0..n).map(|_| AtomicU32::new(u32::MAX)).collect(),
+        )
+    }
+
+    fn sweep(g: &SharedGraph, aff: &Affinity, ws: &mut Workspace) -> (RereduceOutcome, Vec<i32>) {
+        let (fp, cnt) = scratch(g.n);
+        fingerprint_chunk(g, 0, g.n, &fp, &cnt);
+        let mut keys = Vec::new();
+        let mut postponed = Vec::new();
+        let out = rereduce_exclusive(g, aff, ws, &fp, &cnt, &mut keys, &mut postponed);
+        (out, postponed)
+    }
+
+    #[test]
+    fn fingerprints_are_chunking_invariant() {
+        let g = crate::matgen::mesh2d(6, 6);
+        let sg = SharedGraph::new(&g, 1.0);
+        let (f1, c1) = scratch(sg.n);
+        fingerprint_chunk(&sg, 0, sg.n, &f1, &c1);
+        let (f2, c2) = scratch(sg.n);
+        fingerprint_chunk(&sg, 0, 13, &f2, &c2);
+        fingerprint_chunk(&sg, 13, sg.n, &f2, &c2);
+        for v in 0..sg.n {
+            assert_eq!(f1[v].load(Relaxed), f2[v].load(Relaxed));
+            assert_eq!(c1[v].load(Relaxed), c2[v].load(Relaxed));
+        }
+    }
+
+    #[test]
+    fn k4_collapses_to_one_weighted_supervariable() {
+        // All four K4 vertices are pairwise (true) twins.
+        let g = SymGraph::from_edges(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        let sg = SharedGraph::new(&g, 1.0);
+        let aff = Affinity::new(4);
+        let mut ws = Workspace::new(0, 4, 7);
+        let (out, postponed) = sweep(&sg, &aff, &mut ws);
+        assert_eq!(out.twins_merged, 3);
+        assert_eq!(out.dense_postponed, 0);
+        assert!(postponed.is_empty());
+        assert_eq!(sg.st(0), ST_VAR);
+        assert_eq!(sg.nv_of(0), 4, "class weight accumulates on the rep");
+        for v in 1..4 {
+            assert_eq!(sg.st(v), ST_DEAD_VAR);
+            assert_eq!(sg.nv_of(v), 0);
+            assert_eq!(sg.parent[v].load(Relaxed), 0, "forest points at the rep");
+            assert_eq!(aff.get(v), -1, "degree-list copies invalidated");
+        }
+    }
+
+    #[test]
+    fn four_cycle_merges_both_false_twin_pairs() {
+        let g = SymGraph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let sg = SharedGraph::new(&g, 1.0);
+        let aff = Affinity::new(4);
+        let mut ws = Workspace::new(0, 4, 7);
+        let (out, _) = sweep(&sg, &aff, &mut ws);
+        assert_eq!(out.twins_merged, 2, "both diagonals are false twins");
+        assert_eq!(sg.st(0), ST_VAR);
+        assert_eq!(sg.st(1), ST_VAR);
+        assert_eq!(sg.parent[2].load(Relaxed), 0);
+        assert_eq!(sg.parent[3].load(Relaxed), 1);
+    }
+
+    #[test]
+    fn mesh_rows_are_not_twins() {
+        let g = crate::matgen::mesh2d(5, 5);
+        let sg = SharedGraph::new(&g, 1.0);
+        let aff = Affinity::new(sg.n);
+        let mut ws = Workspace::new(0, sg.n, 7);
+        let (out, _) = sweep(&sg, &aff, &mut ws);
+        assert_eq!(out, RereduceOutcome::default(), "a mesh is irreducible");
+        assert!((0..sg.n).all(|v| sg.st(v) == ST_VAR));
+    }
+
+    #[test]
+    fn subset_element_is_absorbed_and_its_members_merge() {
+        // Hand-built quotient state over 5 nodes: element 0 with
+        // L = {1,2}, element 4 with L = {1,2,3}; variables 1 and 2 see
+        // exactly {e0, e4} (twins), variable 3 sees {e4}. Absorption
+        // runs first and patches the members' fingerprints, so the twin
+        // pass of the same sweep still nominates 1 and 2 correctly.
+        let g = SymGraph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let sg = SharedGraph::new(&g, 4.0);
+        let put = |node: usize, elems: &[i32], vars: &[i32]| {
+            let off = sg.claim(elems.len() + vars.len()).unwrap();
+            for (k, &x) in elems.iter().chain(vars.iter()).enumerate() {
+                sg.iw_set(off + k, x);
+            }
+            sg.pe[node].store(off, Relaxed);
+            sg.elen[node].store(elems.len() as i32, Relaxed);
+            sg.len[node].store((elems.len() + vars.len()) as i32, Relaxed);
+        };
+        sg.set_st(0, ST_ELEM);
+        put(0, &[], &[1, 2]); // element lists are all-vars (elen unused)
+        sg.set_st(4, ST_ELEM);
+        put(4, &[], &[1, 2, 3]);
+        put(1, &[0, 4], &[]);
+        put(2, &[0, 4], &[]);
+        put(3, &[4], &[]);
+        sg.nel.store(2, Relaxed); // the two pivots are eliminated
+        let aff = Affinity::new(5);
+        let mut ws = Workspace::new(0, 5, 7);
+        let (out, postponed) = sweep(&sg, &aff, &mut ws);
+        assert_eq!(out.twins_merged, 1, "vars 1 and 2 are quotient twins");
+        assert_eq!(sg.st(2), ST_DEAD_VAR);
+        assert_eq!(sg.nv_of(1), 2);
+        assert_eq!(out.elements_absorbed, 1, "L_0 = {1} is inside L_4");
+        assert_eq!(sg.st(0), ST_DEAD_ELEM);
+        assert_eq!(sg.st(4), ST_ELEM, "the absorber survives");
+        assert_eq!(out.dense_postponed, 0);
+        assert!(postponed.is_empty());
+    }
+
+    #[test]
+    fn absorption_turns_emergent_twins_into_merges_in_one_sweep() {
+        // Vars 2 and 3 are NOT twins: both see the big element 0
+        // (L = {2,3}) but each also sees a private singleton element
+        // (1 = {2}, 5 = {3}) — the state left behind when their private
+        // distinguishers were eliminated by different pivots. Absorbing
+        // the singletons into element 0 erases the difference, and the
+        // same sweep's twin pass (running on the patched fingerprints)
+        // must then merge them.
+        let g = SymGraph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let sg = SharedGraph::new(&g, 4.0);
+        let put = |node: usize, elems: &[i32], vars: &[i32]| {
+            let off = sg.claim(elems.len() + vars.len()).unwrap();
+            for (k, &x) in elems.iter().chain(vars.iter()).enumerate() {
+                sg.iw_set(off + k, x);
+            }
+            sg.pe[node].store(off, Relaxed);
+            sg.elen[node].store(elems.len() as i32, Relaxed);
+            sg.len[node].store((elems.len() + vars.len()) as i32, Relaxed);
+        };
+        for e in [0usize, 1, 5] {
+            sg.set_st(e, ST_ELEM);
+        }
+        put(0, &[], &[2, 3]);
+        put(1, &[], &[2]);
+        put(5, &[], &[3]);
+        put(2, &[0, 1], &[]);
+        put(3, &[0, 5], &[]);
+        put(4, &[], &[]); // an unrelated isolated live variable
+        sg.nel.store(3, Relaxed);
+        let aff = Affinity::new(6);
+        let mut ws = Workspace::new(0, 6, 7);
+        let (out, _) = sweep(&sg, &aff, &mut ws);
+        assert_eq!(out.elements_absorbed, 2, "both singletons fold into e0");
+        assert_eq!(sg.st(1), ST_DEAD_ELEM);
+        assert_eq!(sg.st(5), ST_DEAD_ELEM);
+        assert_eq!(out.twins_merged, 1, "2 and 3 became twins mid-sweep");
+        assert_eq!(sg.st(2), ST_VAR);
+        assert_eq!(sg.st(3), ST_DEAD_VAR);
+        assert_eq!(sg.parent[3].load(Relaxed), 2);
+        assert_eq!(sg.nv_of(2), 2);
+    }
+
+    #[test]
+    fn exhausted_element_is_dropped() {
+        let g = SymGraph::from_edges(3, &[(0, 1), (1, 2)]);
+        let sg = SharedGraph::new(&g, 2.0);
+        sg.set_st(1, ST_ELEM); // its two "live vars" below are killed
+        sg.set_st(0, ST_DEAD_VAR);
+        sg.set_st(2, ST_DEAD_VAR);
+        let aff = Affinity::new(3);
+        let mut ws = Workspace::new(0, 3, 7);
+        let (out, _) = sweep(&sg, &aff, &mut ws);
+        assert_eq!(sg.st(1), ST_DEAD_ELEM, "no live vertex left");
+        assert_eq!(out.elements_absorbed, 0, "drop, not absorption");
+    }
+
+    /// Hub-on-a-cycle: 151 vertices, the hub's live degree (150) tops
+    /// `max(16, 10·√151) = 122`, every cycle vertex stays (degree 3).
+    fn hub_on_cycle() -> SymGraph {
+        let n = 150usize;
+        let mut edges: Vec<(usize, usize)> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+        edges.extend((0..n).map(|i| (n, i)));
+        SymGraph::from_edges(n + 1, &edges)
+    }
+
+    #[test]
+    fn dense_hub_is_postponed_to_the_tail() {
+        let g = hub_on_cycle();
+        let sg = SharedGraph::new(&g, 1.0);
+        let aff = Affinity::new(sg.n);
+        aff.set(150, 0);
+        let mut ws = Workspace::new(0, sg.n, 7);
+        let (out, postponed) = sweep(&sg, &aff, &mut ws);
+        assert_eq!(out.twins_merged, 0, "cycle neighborhoods are distinct");
+        assert_eq!(out.dense_postponed, 1);
+        assert_eq!(postponed, vec![150]);
+        assert_eq!(sg.st(150), ST_DEAD_VAR);
+        assert_eq!(sg.nv_of(150), 1, "a postponed root keeps its weight");
+        assert_eq!(sg.parent[150].load(Relaxed), -1, "tail rows are roots");
+        assert_eq!(sg.nel.load(Relaxed), 1, "the target advances by nv");
+        assert_eq!(aff.get(150), -1);
+    }
+
+    #[test]
+    fn dense_cutoff_is_invariant_under_uniform_weights() {
+        // Uniform weight 5 scales every degree and the average alike:
+        // the postponed set must be identical to the unweighted run.
+        let g = hub_on_cycle();
+        let mut sg = SharedGraph::empty();
+        sg.reset_from_weighted(&g, 1.0, Some(&vec![5i32; g.n]));
+        assert_eq!(sg.deg_of(150), 750, "weighted hub degree");
+        let aff = Affinity::new(sg.n);
+        let mut ws = Workspace::new(0, sg.n, 7);
+        ws.set_epoch_stride(sg.weight);
+        let (out, postponed) = sweep(&sg, &aff, &mut ws);
+        assert_eq!(out.dense_postponed, 1);
+        assert_eq!(postponed, vec![150]);
+        assert_eq!(sg.nel.load(Relaxed), 5, "target advances by weighted nv");
+    }
+
+    #[test]
+    fn sweep_is_deterministic() {
+        let g = crate::matgen::twin_heavy(120, 4);
+        let run = || {
+            let sg = SharedGraph::new(&g, 1.0);
+            let aff = Affinity::new(sg.n);
+            let mut ws = Workspace::new(0, sg.n, 7);
+            let (out, postponed) = sweep(&sg, &aff, &mut ws);
+            let parents: Vec<i32> = sg.parent.iter().map(|p| p.load(Relaxed)).collect();
+            (out, postponed, parents)
+        };
+        assert_eq!(run(), run());
+    }
+}

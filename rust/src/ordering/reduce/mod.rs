@@ -58,6 +58,8 @@
 //! expanded permutation measures the true factorization, not an
 //! approximation.
 
+pub mod live;
+
 use std::collections::VecDeque;
 
 use crate::graph::csr::SymGraph;

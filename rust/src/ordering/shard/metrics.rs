@@ -60,6 +60,17 @@ pub struct ShardMetrics {
     /// Cumulative stop-the-world seconds those collections froze a
     /// shard's worker pool for.
     pub gc_secs: f64,
+    /// Mid-elimination re-reduction sweeps executed by jobs on this
+    /// engine (cache hits replay results and count none).
+    pub rereduce_passes: u64,
+    /// Global twins merged on live quotient graphs by those sweeps.
+    pub mid_twins_merged: u64,
+    /// Rows re-postponed to permutation tails mid-elimination.
+    pub mid_dense_postponed: u64,
+    /// Elements absorbed by superset elements mid-elimination.
+    pub elements_absorbed: u64,
+    /// Cumulative stop-the-world seconds spent inside those sweeps.
+    pub rereduce_secs: f64,
     /// Connected requests that took the hybrid ND×ParAMD fan-out path.
     pub hybrid_requests: u64,
     /// Subdomain jobs dispatched by hybrid requests.
@@ -113,6 +124,14 @@ impl ShardMetrics {
         s.push_str(&format!(
             "  gc: collections={} stop_the_world={:.4}s\n",
             self.gc_count, self.gc_secs
+        ));
+        s.push_str(&format!(
+            "  rereduce: passes={} twins={} dense={} absorbed={} time={:.4}s\n",
+            self.rereduce_passes,
+            self.mid_twins_merged,
+            self.mid_dense_postponed,
+            self.elements_absorbed,
+            self.rereduce_secs
         ));
         if self.hybrid_requests > 0 {
             let per_sub = self.subdomain_busy_secs / self.subdomains.max(1) as f64;
@@ -168,6 +187,11 @@ pub(crate) struct EngineCounters {
     pub(crate) subdomain_busy_nanos: AtomicU64,
     gc_count: AtomicU64,
     gc_nanos: AtomicU64,
+    rereduce_passes: AtomicU64,
+    mid_twins_merged: AtomicU64,
+    mid_dense_postponed: AtomicU64,
+    elements_absorbed: AtomicU64,
+    rereduce_nanos: AtomicU64,
     busy_now: AtomicUsize,
     busy_peak: AtomicUsize,
     size_hist: [AtomicU64; SIZE_HIST_BUCKETS],
@@ -194,6 +218,11 @@ impl EngineCounters {
             subdomain_busy_nanos: AtomicU64::new(0),
             gc_count: AtomicU64::new(0),
             gc_nanos: AtomicU64::new(0),
+            rereduce_passes: AtomicU64::new(0),
+            mid_twins_merged: AtomicU64::new(0),
+            mid_dense_postponed: AtomicU64::new(0),
+            elements_absorbed: AtomicU64::new(0),
+            rereduce_nanos: AtomicU64::new(0),
             busy_now: AtomicUsize::new(0),
             busy_peak: AtomicUsize::new(0),
             size_hist: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -216,6 +245,25 @@ impl EngineCounters {
         if count > 0 {
             self.gc_count.fetch_add(count, Relaxed);
             self.gc_nanos.fetch_add((secs * 1e9) as u64, Relaxed);
+        }
+    }
+
+    /// Fold one finished job's mid-elimination re-reduction tally into
+    /// the engine counters (dispatchers only, like [`Self::note_job_gc`]).
+    pub(crate) fn note_job_rereduce(
+        &self,
+        passes: u64,
+        twins: u64,
+        dense: u64,
+        absorbed: u64,
+        secs: f64,
+    ) {
+        if passes > 0 {
+            self.rereduce_passes.fetch_add(passes, Relaxed);
+            self.mid_twins_merged.fetch_add(twins, Relaxed);
+            self.mid_dense_postponed.fetch_add(dense, Relaxed);
+            self.elements_absorbed.fetch_add(absorbed, Relaxed);
+            self.rereduce_nanos.fetch_add((secs * 1e9) as u64, Relaxed);
         }
     }
 
@@ -250,6 +298,11 @@ impl EngineCounters {
             reduce_secs: self.reduce_nanos.load(Relaxed) as f64 / 1e9,
             gc_count: self.gc_count.load(Relaxed),
             gc_secs: self.gc_nanos.load(Relaxed) as f64 / 1e9,
+            rereduce_passes: self.rereduce_passes.load(Relaxed),
+            mid_twins_merged: self.mid_twins_merged.load(Relaxed),
+            mid_dense_postponed: self.mid_dense_postponed.load(Relaxed),
+            elements_absorbed: self.elements_absorbed.load(Relaxed),
+            rereduce_secs: self.rereduce_nanos.load(Relaxed) as f64 / 1e9,
             hybrid_requests: self.hybrid_requests.load(Relaxed),
             subdomains: self.subdomain_jobs.load(Relaxed),
             separators: self.separator_jobs.load(Relaxed),
@@ -312,6 +365,10 @@ mod tests {
         assert!(r.contains("2^3:1"));
         assert!(r.contains("reduce: jobs=0"), "reduce line always present");
         assert!(r.contains("gc: collections=0"), "gc line always present");
+        assert!(
+            r.contains("rereduce: passes=0"),
+            "rereduce line always present"
+        );
     }
 
     #[test]
@@ -340,6 +397,23 @@ mod tests {
         assert_eq!(m.gc_count, 3);
         assert!((m.gc_secs - 0.75).abs() < 1e-6);
         assert!(m.report().contains("gc: collections=3"));
+    }
+
+    #[test]
+    fn rereduce_counters_accumulate_across_jobs() {
+        let c = EngineCounters::new();
+        c.note_job_rereduce(2, 10, 1, 4, 0.25);
+        c.note_job_rereduce(0, 0, 0, 0, 0.0); // sweep-free jobs leave no trace
+        c.note_job_rereduce(1, 5, 0, 2, 0.5);
+        let m = c.snapshot(Vec::new());
+        assert_eq!(m.rereduce_passes, 3);
+        assert_eq!(m.mid_twins_merged, 15);
+        assert_eq!(m.mid_dense_postponed, 1);
+        assert_eq!(m.elements_absorbed, 6);
+        assert!((m.rereduce_secs - 0.75).abs() < 1e-6);
+        assert!(m
+            .report()
+            .contains("rereduce: passes=3 twins=15 dense=1 absorbed=6"));
     }
 
     #[test]

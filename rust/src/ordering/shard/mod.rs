@@ -179,6 +179,51 @@ impl ShardSpec {
     }
 }
 
+/// Engine-level mid-elimination re-reduction settings, overriding the
+/// corresponding [`ParAmd`] knobs of every job the engine dispatches
+/// (see [`ShardEngine::set_rereduce`]) — the same layering as the
+/// pre-ordering [`ReduceConfig`], but for the sweep that runs *inside*
+/// the kernel at round boundaries.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RereduceSettings {
+    /// Master switch for the sweep.
+    pub enabled: bool,
+    /// Fire every `every` rounds (0 disables the cadence trigger).
+    pub every: u32,
+    /// Fire when a round's pivot count drops below `elbow × threads`
+    /// (0.0 disables the starvation trigger).
+    pub elbow: f64,
+}
+
+impl Default for RereduceSettings {
+    fn default() -> Self {
+        let d = ParAmd::new(1);
+        Self {
+            enabled: d.rereduce,
+            every: d.rereduce_every,
+            elbow: d.rereduce_elbow,
+        }
+    }
+}
+
+impl RereduceSettings {
+    /// The settings a [`ParAmd`] config carries.
+    pub fn from_paramd(cfg: &ParAmd) -> Self {
+        Self {
+            enabled: cfg.rereduce,
+            every: cfg.rereduce_every,
+            elbow: cfg.rereduce_elbow,
+        }
+    }
+
+    /// Impose these settings on a job config.
+    fn apply(&self, cfg: ParAmd) -> ParAmd {
+        cfg.with_rereduce(self.enabled)
+            .with_rereduce_every(self.every)
+            .with_rereduce_elbow(self.elbow)
+    }
+}
+
 /// Reply of a sharded ordering: the stitched permutation plus the merged
 /// round log (see [`stitch`] for the merge semantics).
 #[derive(Clone, Debug)]
@@ -278,6 +323,13 @@ struct CompDone {
     /// Dispatcher seconds this job actually burned (0.0 for cache
     /// replays) — the hybrid path's per-subdomain busy attribution.
     busy_secs: f64,
+    /// Mid-elimination re-reduction tally of this job's live kernel run
+    /// (all zero for cache replays: no sweeps executed).
+    rereduce_count: u64,
+    mid_twins_merged: u64,
+    mid_dense_postponed: u64,
+    elements_absorbed: u64,
+    rereduce_secs: f64,
 }
 
 impl CompDone {
@@ -304,6 +356,11 @@ impl CompDone {
             modeled_time: c.modeled_time,
             set_sizes: c.set_sizes,
             busy_secs: 0.0,
+            rereduce_count: 0,
+            mid_twins_merged: 0,
+            mid_dense_postponed: 0,
+            elements_absorbed: 0,
+            rereduce_secs: 0.0,
         }
     }
 }
@@ -328,6 +385,11 @@ fn expand_done(plan: &ReductionPlan, kernel: &CachedOrdering) -> CompDone {
         modeled_time: kernel.modeled_time,
         set_sizes,
         busy_secs: 0.0,
+        rereduce_count: 0,
+        mid_twins_merged: 0,
+        mid_dense_postponed: 0,
+        elements_absorbed: 0,
+        rereduce_secs: 0.0,
     }
 }
 
@@ -495,6 +557,11 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                                 modeled_time: r.stats.modeled_time,
                                 set_sizes: r.stats.set_sizes.clone(),
                                 busy_secs: 0.0,
+                                rereduce_count: r.stats.rereduce_count,
+                                mid_twins_merged: r.stats.mid_twins_merged,
+                                mid_dense_postponed: r.stats.mid_dense_postponed,
+                                elements_absorbed: r.stats.elements_absorbed,
+                                rereduce_secs: r.stats.rereduce_secs,
                             };
                             let insert = cache_key.map(|_| done.to_cached());
                             (done, insert)
@@ -524,7 +591,15 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                                 set_sizes: r.stats.set_sizes.clone(),
                                 reduced: 0,
                             };
-                            let done = expand_done(plan, &kernel);
+                            let mut done = expand_done(plan, &kernel);
+                            // `expand_done` zeroes the sweep tally (its
+                            // other caller replays cache hits); this run
+                            // was live, so report its actual sweeps.
+                            done.rereduce_count = r.stats.rereduce_count;
+                            done.mid_twins_merged = r.stats.mid_twins_merged;
+                            done.mid_dense_postponed = r.stats.mid_dense_postponed;
+                            done.elements_absorbed = r.stats.elements_absorbed;
+                            done.rereduce_secs = r.stats.rereduce_secs;
                             let insert = cache_key.map(|_| kernel);
                             (done, insert)
                         }),
@@ -541,6 +616,13 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
             match res {
                 Ok(Some((done, insert))) => {
                     counters.note_job_gc(done.gc_count, done.gc_secs);
+                    counters.note_job_rereduce(
+                        done.rereduce_count,
+                        done.mid_twins_merged,
+                        done.mid_dense_postponed,
+                        done.elements_absorbed,
+                        done.rereduce_secs,
+                    );
                     if let (Some(key), Some(value)) = (cache_key, insert) {
                         // A miss inserts on completion; the payload is
                         // consumed into the entry's exact-verify copy.
@@ -579,6 +661,9 @@ pub struct ShardEngine {
     spec: ShardSpec,
     /// Pre-ordering reduction config (on by default; see [`Self::set_reduce`]).
     reduce_cfg: Mutex<ReduceConfig>,
+    /// Mid-elimination re-reduction settings imposed on every job's
+    /// kernel config (on by default; see [`Self::set_rereduce`]).
+    rereduce_cfg: Mutex<RereduceSettings>,
     /// ND×AMD hybrid planning for huge connected requests (off by
     /// default; see [`Self::set_hybrid`]).
     hybrid_cfg: Mutex<HybridConfig>,
@@ -639,6 +724,7 @@ impl ShardEngine {
                 threads: spec.wide_threads,
                 ..ReduceConfig::default()
             }),
+            rereduce_cfg: Mutex::new(RereduceSettings::default()),
             hybrid_cfg: Mutex::new(HybridConfig::disabled()),
             cache,
         }
@@ -669,6 +755,20 @@ impl ShardEngine {
     /// The reduction config currently in force.
     pub fn reduce_config(&self) -> ReduceConfig {
         *self.reduce_cfg.lock().unwrap()
+    }
+
+    /// Replace the mid-elimination re-reduction settings. They override
+    /// the matching [`ParAmd`] knobs of every subsequently dispatched
+    /// job, and fold into each job's cache salt — toggling them on a
+    /// warm engine misses and recomputes rather than replaying the
+    /// other configuration's permutation.
+    pub fn set_rereduce(&self, cfg: RereduceSettings) {
+        *self.rereduce_cfg.lock().unwrap() = cfg;
+    }
+
+    /// The mid-elimination re-reduction settings currently in force.
+    pub fn rereduce_config(&self) -> RereduceSettings {
+        *self.rereduce_cfg.lock().unwrap()
     }
 
     /// Replace the hybrid ND×AMD config (pass [`HybridConfig::on`] to
@@ -769,6 +869,9 @@ impl ShardEngine {
         cancel: &AtomicBool,
     ) -> Option<ShardReply> {
         self.counters.requests.fetch_add(1, Relaxed);
+        // The engine-level sweep settings are imposed before the salt is
+        // taken, so the cache identity always reflects what actually ran.
+        let cfg = self.rereduce_config().apply(cfg);
         let salt = config_salt(&cfg);
         let comps = connected_components(g);
         if comps.is_connected() {
@@ -1502,6 +1605,56 @@ mod tests {
             2,
             "a different mult must miss, not replay the wrong knobs"
         );
+    }
+
+    #[test]
+    fn rereduce_settings_shape_the_cache_identity() {
+        let g = crate::matgen::emergent_twins(220, 3);
+        let engine = ShardEngine::new(ShardSpec::uniform(1, 1));
+        let first = engine.order(&g, ParAmd::new(1));
+        assert_eq!(total_jobs(&engine), 1);
+        // An identical repeat replays bit-for-bit from the cache.
+        let again = engine.order(&g, ParAmd::new(1));
+        assert_eq!(again.perm, first.perm);
+        assert_eq!(total_jobs(&engine), 1, "identical knobs must hit");
+        // Changing any sweep knob on the warm engine must miss.
+        engine.set_rereduce(RereduceSettings {
+            every: 1,
+            ..RereduceSettings::default()
+        });
+        engine.order(&g, ParAmd::new(1));
+        assert_eq!(total_jobs(&engine), 2, "a new cadence must re-order");
+        engine.set_rereduce(RereduceSettings {
+            enabled: false,
+            ..RereduceSettings::default()
+        });
+        engine.order(&g, ParAmd::new(1));
+        assert_eq!(total_jobs(&engine), 3, "disabling the sweep must re-order");
+        // Back to the defaults: the original entry is still warm.
+        engine.set_rereduce(RereduceSettings::default());
+        let replay = engine.order(&g, ParAmd::new(1));
+        assert_eq!(replay.perm, first.perm);
+        assert_eq!(total_jobs(&engine), 3, "the default entry must survive");
+    }
+
+    #[test]
+    fn rereduce_tallies_surface_in_engine_metrics() {
+        let g = crate::matgen::emergent_twins(220, 3);
+        let engine = ShardEngine::new(ShardSpec::uniform(1, 1));
+        engine.set_rereduce(RereduceSettings {
+            every: 1,
+            ..RereduceSettings::default()
+        });
+        engine.order(&g, ParAmd::new(1));
+        let m = engine.metrics();
+        assert!(m.rereduce_passes > 0, "sweeps must fire every round");
+        assert!(m.elements_absorbed > 0, "sweeps must absorb elements");
+        assert!(m.mid_twins_merged > 0, "sweeps must merge emergent twins");
+        assert!(m.rereduce_secs > 0.0);
+        assert!(m.report().contains("rereduce: passes="));
+        // A cache replay performs no sweeps: the tallies must not move.
+        engine.order(&g, ParAmd::new(1));
+        assert_eq!(engine.metrics().rereduce_passes, m.rereduce_passes);
     }
 
     #[test]

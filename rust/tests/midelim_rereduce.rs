@@ -1,0 +1,150 @@
+//! Mid-elimination re-reduction integration: the round-boundary sweep
+//! (global twin re-compression + dense re-postponement + aggressive
+//! element absorption) must keep valid permutations across the whole
+//! knob grid, stay within the fill band of the sweep-free path, fold
+//! into the request-cache identity, and surface its tallies in the
+//! service metrics report.
+
+use paramd::coordinator::{Method, OrderRequest, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::{emergent_twins, mesh2d, twin_heavy};
+use paramd::ordering::paramd::ParAmd;
+use paramd::ordering::Ordering as _;
+use paramd::symbolic::fill_in;
+
+fn request(pattern: SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(pattern),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+fn dispatched_jobs(svc: &Service) -> u64 {
+    svc.metrics().shards.per_shard.iter().map(|s| s.jobs).sum()
+}
+
+#[test]
+fn knob_grid_yields_valid_permutations() {
+    let graphs = [
+        ("mesh2d", mesh2d(16, 16)),
+        ("twin_heavy", twin_heavy(200, 4)),
+        ("emergent_twins", emergent_twins(180, 3)),
+    ];
+    let grid: &[(bool, u32, f64)] = &[
+        (true, 1, 0.0),
+        (true, 2, 0.0),
+        (true, 4, 0.0),
+        (true, 0, 2.0), // elbow-only trigger
+        (true, 2, 1.5), // both triggers
+        (false, 1, 2.0), // master switch wins over both triggers
+    ];
+    for (name, g) in &graphs {
+        for threads in [1usize, 2] {
+            for &(on, every, elbow) in grid {
+                let r = ParAmd::new(threads)
+                    .with_rereduce(on)
+                    .with_rereduce_every(every)
+                    .with_rereduce_elbow(elbow)
+                    .order(g);
+                assert_eq!(r.perm.len(), g.n, "{name} t={threads}");
+                assert!(
+                    is_valid_perm(&r.perm),
+                    "{name} t={threads} on={on} every={every} elbow={elbow}"
+                );
+                if !on {
+                    assert_eq!(r.stats.rereduce_count, 0, "{name}: off means off");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fill_stays_within_1_05x_of_the_sweep_free_baseline() {
+    // The acceptance band: merging exact twins and postponing
+    // near-complete rows must not cost meaningful fill.
+    let graphs = [
+        ("mesh2d", mesh2d(24, 24)),
+        ("twin_heavy", twin_heavy(300, 5)),
+        ("emergent_twins", emergent_twins(240, 3)),
+    ];
+    for (name, g) in &graphs {
+        let base = fill_in(g, &ParAmd::new(1).with_rereduce(false).order(g).perm) as f64;
+        for every in [1u32, 4] {
+            let swept =
+                fill_in(g, &ParAmd::new(1).with_rereduce_every(every).order(g).perm) as f64;
+            assert!(
+                swept <= base * 1.05 + 50.0,
+                "{name}: every={every} fill {swept} exceeds 1.05x of {base}"
+            );
+        }
+    }
+}
+
+#[test]
+fn request_cache_distinguishes_rereduce_configs() {
+    let g = emergent_twins(220, 3);
+    let svc = Service::new(1);
+    let first = svc.order(&request(g.clone()));
+    assert!(is_valid_perm(&first.perm));
+    assert_eq!(dispatched_jobs(&svc), 1);
+    // Identical knobs replay bit-for-bit with zero dispatched work.
+    let second = svc.order(&request(g.clone()));
+    assert_eq!(second.perm, first.perm, "warm repeat must bit-match");
+    assert_eq!(dispatched_jobs(&svc), 1, "repeat must be a cache hit");
+    // Every sweep knob is part of the cache identity: changing one on
+    // the warm service must miss and recompute, never replay.
+    let svc = svc.with_rereduce_every(1);
+    assert!(is_valid_perm(&svc.order(&request(g.clone())).perm));
+    assert_eq!(dispatched_jobs(&svc), 2, "a new cadence must recompute");
+    let svc = svc.with_rereduce(false);
+    assert!(is_valid_perm(&svc.order(&request(g.clone())).perm));
+    assert_eq!(dispatched_jobs(&svc), 3, "disabling the sweep must recompute");
+    let svc = svc.with_rereduce(true).with_rereduce_every(4);
+    let replay = svc.order(&request(g.clone()));
+    assert_eq!(replay.perm, first.perm, "default knobs find the first entry");
+    assert_eq!(dispatched_jobs(&svc), 3, "the original entry is still warm");
+}
+
+#[test]
+fn sweep_tallies_flow_into_the_service_report() {
+    let g = emergent_twins(240, 3);
+    let svc = Service::new(1).with_rereduce_every(1);
+    let rep = svc.order(&request(g));
+    assert!(is_valid_perm(&rep.perm));
+    let m = svc.metrics();
+    assert!(m.shards.rereduce_passes > 0, "sweeps must fire");
+    assert!(
+        m.shards.elements_absorbed > 0,
+        "distinguisher elements must be absorbed mid-run"
+    );
+    assert!(
+        m.shards.mid_twins_merged > 0,
+        "emergent twins must be merged mid-run"
+    );
+    let r = m.shards.report();
+    assert!(r.contains("rereduce: passes="), "report line present: {r}");
+    assert!(!r.contains("rereduce: passes=0"), "tallies rendered: {r}");
+}
+
+#[test]
+fn sweep_composes_with_the_pre_ordering_reduction_layer() {
+    // twin_heavy reduces heavily up front; the sweep then runs on the
+    // weighted kernel. Both layers on must still be valid and within
+    // the band of both layers off.
+    let g = twin_heavy(480, 8);
+    let both = Service::new(1).with_rereduce_every(1);
+    let rep_both = both.order(&request(g.clone()));
+    let neither = Service::new(1).with_reduction(false).with_rereduce(false);
+    let rep_neither = neither.order(&request(g.clone()));
+    assert!(is_valid_perm(&rep_both.perm));
+    assert!(is_valid_perm(&rep_neither.perm));
+    assert_eq!(both.metrics().shards.reduced_jobs, 1);
+}
