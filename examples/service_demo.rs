@@ -8,8 +8,12 @@
 //! bounded queue showing the wait-vs-service latency split, a
 //! **sharded ordering engine** decomposing a disconnected request into
 //! component jobs that run concurrently across independent runtimes,
-//! and the **result cache** replaying repeated graphs — and repeated
-//! components under scattered labels — without re-running ParAMD.
+//! the **result cache** replaying repeated graphs — and repeated
+//! components under scattered labels — without re-running ParAMD, and
+//! the **telemetry** view of one request: its flight-recorder trace
+//! (submit → fetch the ticket's `RequestTrace` → render Chrome
+//! trace-event JSON), the per-round elimination samples in the reply,
+//! and the Prometheus exposition of the service metrics.
 //!
 //! Run: `cargo run --release --example service_demo`
 
@@ -281,6 +285,64 @@ fn main() {
         sm.rereduce_secs,
         rep.order_secs
     );
+
+    println!("\n== telemetry: one request's flight recorder and round samples ==");
+    // Every ticket carries a `RequestTrace`. Grab it before waiting,
+    // then read the spans after the reply lands: queued/preprocess/
+    // order/fill on the pipeline lane, cc-split/reduce/cache-probe/
+    // route/stitch on the engine lane, dispatch/elimination per shard.
+    // `to_chrome_json()` renders the whole thing for Perfetto; a
+    // `Service::with_trace_dump(dir, slow_ms)` sink does this
+    // automatically for slow requests (CLI: `--trace-dir`,
+    // `--trace-slow-ms`).
+    let traced = Service::new(2);
+    let tg = paramd::matgen::mesh2d(40, 40);
+    let treq = OrderRequest {
+        matrix: None,
+        pattern: Some(tg.clone()),
+        method: Method::ParAmd {
+            threads: 2,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: true,
+    };
+    let ticket = traced.submit(treq);
+    let trace = ticket.trace();
+    let rep = ticket.wait();
+    println!(
+        "  req {}: {} spans cover {:.1}% of the wall",
+        trace.id(),
+        trace.spans().len(),
+        100.0 * trace.coverage()
+    );
+    for s in trace.spans() {
+        println!("    lane {} {:<14} +{:>6}us {:>6}us", s.lane, s.name, s.start_us, s.dur_us);
+    }
+    println!(
+        "  chrome trace-event JSON: {} bytes (load in Perfetto)",
+        trace.to_chrome_json().len()
+    );
+    // The reply's round samples are the paper's Fig-4 decay curve: per
+    // outer round, pivots retired, live vertices/weight remaining, and
+    // the claim-failure (memory contention) count.
+    println!("  {} elimination rounds sampled:", rep.round_samples.len());
+    for s in rep.round_samples.iter().take(4) {
+        println!(
+            "    round {:>2}: pivots={:<5} live_vars={:<6} claim_failures={}",
+            s.round, s.pivots, s.live_vars, s.claim_failures
+        );
+    }
+    // Fixed-footprint exposition: the same `Metrics` snapshot renders as
+    // a Prometheus text page (or `export::json_snapshot`) — latency
+    // quantiles come from log-bucketed histograms, so memory stays
+    // constant no matter how many requests flow.
+    let page = paramd::telemetry::export::prometheus(&traced.metrics());
+    let shown: Vec<&str> = page.lines().filter(|l| !l.starts_with('#')).take(6).collect();
+    println!("  prometheus page: {} lines, e.g.", page.lines().count());
+    for line in shown {
+        println!("    {line}");
+    }
 
     println!("\n== metrics ==\n{}", svc.metrics().report());
 }

@@ -3,39 +3,69 @@
 //! pipeline-wide gauges (queue depth, cancellations, arena evictions)
 //! and the shard engine's snapshot (per-shard jobs/busy time, component
 //! histogram, concurrency peak).
+//!
+//! Latency storage is **constant in the request count**: every series
+//! lives in a fixed-footprint log-bucketed
+//! [`LogHistogram`](crate::util::stats::LogHistogram) (exact mean/sum,
+//! ±1-bucket quantiles) instead of an unbounded `Vec<f64>` — the
+//! millions-of-users memory bound. The Prometheus/JSON renderers in
+//! [`crate::telemetry::export`] read these snapshots.
 
 use crate::ordering::cache::CacheMetrics;
 use crate::ordering::shard::ShardMetrics;
-use crate::util::stats;
+use crate::util::stats::LogHistogram;
 
-/// One method's accumulated numbers.
+/// One method's accumulated numbers. Fixed memory footprint: the three
+/// latency series are log-bucketed histograms, not sample vectors.
 #[derive(Clone, Debug, Default)]
 pub struct MethodMetrics {
     pub requests: u64,
     /// End-to-end latency per request (wait + service).
-    pub latencies: Vec<f64>,
+    latency: LogHistogram,
     /// Time spent queued before a scheduler picked the request up.
-    pub wait_latencies: Vec<f64>,
+    wait: LogHistogram,
     /// Time spent actually processing (pre-process + order + fill).
-    pub service_latencies: Vec<f64>,
+    service: LogHistogram,
     pub total_fill: i64,
 }
 
 impl MethodMetrics {
+    /// Exact mean end-to-end latency (the histogram carries an exact sum).
     pub fn mean_latency(&self) -> f64 {
-        stats::mean(&self.latencies)
+        self.latency.mean()
     }
 
+    /// Approximate 95th-percentile end-to-end latency (±1 bucket).
     pub fn p95_latency(&self) -> f64 {
-        stats::percentile(&self.latencies, 95.0)
+        self.latency.quantile(0.95)
+    }
+
+    /// Approximate end-to-end latency quantile, `q` in [0, 1].
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        self.latency.quantile(q)
+    }
+
+    /// Exact sum of end-to-end latencies (Prometheus summary `_sum`).
+    pub fn latency_sum(&self) -> f64 {
+        self.latency.sum()
     }
 
     pub fn mean_wait(&self) -> f64 {
-        stats::mean(&self.wait_latencies)
+        self.wait.mean()
+    }
+
+    /// Approximate queue-wait quantile, `q` in [0, 1].
+    pub fn wait_quantile(&self, q: f64) -> f64 {
+        self.wait.quantile(q)
     }
 
     pub fn mean_service(&self) -> f64 {
-        stats::mean(&self.service_latencies)
+        self.service.mean()
+    }
+
+    /// Approximate service-time quantile, `q` in [0, 1].
+    pub fn service_quantile(&self, q: f64) -> f64 {
+        self.service.quantile(q)
     }
 }
 
@@ -95,9 +125,9 @@ impl Metrics {
             }
         };
         e.requests += 1;
-        e.latencies.push(wait_secs + service_secs);
-        e.wait_latencies.push(wait_secs);
-        e.service_latencies.push(service_secs);
+        e.latency.record(wait_secs + service_secs);
+        e.wait.record(wait_secs);
+        e.service.record(service_secs);
         e.total_fill += fill.unwrap_or(0);
     }
 
@@ -210,6 +240,46 @@ mod tests {
         m.note_submit(2);
         assert_eq!(m.pipeline.submitted, 6);
         assert_eq!(m.pipeline.queue_depth_peak, 5);
+    }
+
+    #[test]
+    fn latency_storage_is_constant_in_request_count() {
+        // The millions-of-users bound: 10k recorded requests must not
+        // grow the metrics' memory. MethodMetrics holds only inline
+        // histograms (no Vec), so the entries table's heap usage is the
+        // method-name strings + one fixed-size struct per method —
+        // identical after 10 and after 10 000 requests.
+        fn heap_bytes(m: &Metrics) -> usize {
+            m.iter()
+                .map(|(name, e)| name.len() + std::mem::size_of_val(e))
+                .sum()
+        }
+        let mut m = Metrics::default();
+        for i in 0..10 {
+            m.record_split("paramd", 1e-4 * i as f64, 1e-3, Some(1));
+        }
+        let early = heap_bytes(&m);
+        for i in 10..10_000u32 {
+            m.record_split("paramd", 1e-4 * (i % 97) as f64, 1e-3 * (i % 13) as f64, Some(1));
+        }
+        assert_eq!(heap_bytes(&m), early, "10k requests must not grow metrics memory");
+        let e = m.get("paramd").unwrap();
+        assert_eq!(e.requests, 10_000);
+        assert!(e.mean_latency() > 0.0);
+        assert!(e.p95_latency() >= e.latency_quantile(0.5));
+    }
+
+    #[test]
+    fn quantile_accessors_cover_all_three_series() {
+        let mut m = Metrics::default();
+        for _ in 0..100 {
+            m.record_split("amd", 0.2, 0.8, None);
+        }
+        let e = m.get("amd").unwrap();
+        assert!((e.latency_quantile(0.5) - 1.0).abs() < 0.4, "p50 within a bucket");
+        assert!((e.wait_quantile(0.5) - 0.2).abs() < 0.1);
+        assert!((e.service_quantile(0.5) - 0.8).abs() < 0.35);
+        assert!((e.latency_sum() - 100.0).abs() < 1e-9, "summary sum is exact");
     }
 
     #[test]

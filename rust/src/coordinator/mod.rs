@@ -96,7 +96,21 @@
 //! queue **wait** vs **service** time and expose queue depth (current +
 //! peak), cancellations, arena evictions, and the shard snapshot
 //! ([`ShardMetrics`]): per-shard jobs/busy time, the component-size
-//! histogram, and the shard-concurrency peak.
+//! histogram, and the shard-concurrency peak. Latency series are
+//! log-bucketed histograms, so the snapshot's footprint is constant in
+//! the request count; [`crate::telemetry::export`] renders it as
+//! Prometheus text or JSON.
+//!
+//! ## Flight recorder
+//!
+//! Every ticket carries a [`RequestTrace`](crate::telemetry::RequestTrace):
+//! per-request spans (queued → preprocess → order → fill on the pipeline
+//! lane, plus the shard engine's cc-split/reduce/cache-probe/route/stitch
+//! phases and per-shard dispatch/elimination lanes) retrievable via
+//! [`Ticket::trace`] and renderable as Chrome trace-event JSON. Point the
+//! service at a dump directory with [`Service::with_trace_dump`] and every
+//! request slower than the threshold auto-dumps its trace (the serve
+//! CLI's `--trace-dir` / `--trace-slow-ms`).
 
 pub mod metrics;
 pub mod pipeline;
@@ -113,7 +127,7 @@ pub use crate::ordering::reduce::{ReduceConfig, ReduceStats};
 pub use crate::ordering::shard::{RereduceSettings, ShardMetrics, ShardSpec};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
@@ -124,9 +138,12 @@ use crate::nd::NestedDissection;
 use crate::ordering::shard::ShardEngine;
 use crate::ordering::{
     amd_seq::AmdSeq, md::MinDegree, mmd::Mmd, paramd::ParAmd, Ordering as _, OrderingResult,
+    RoundSample,
 };
 use crate::symbolic;
+use crate::telemetry::{RequestTrace, LANE_PIPELINE};
 use crate::util::panic_message;
+use crate::util::panic_message_for;
 use crate::util::timer::Timer;
 
 use pipeline::{BorrowedRequest, BoundedQueue, PipelineJob, RequestSlot, WaitBatch};
@@ -161,6 +178,20 @@ struct ServiceCore {
     shards: ShardEngine,
     /// The bounded request queue the pipeline drains.
     queue: BoundedQueue<PipelineJob>,
+    /// Monotone request-id source: every submitted ticket's trace is
+    /// tagged from it (ids start at 1; 0 marks a never-submitted trace).
+    submit_seq: AtomicU64,
+    /// Slow-request trace dump target (`None` = no dumps). Lives on the
+    /// core so engine rebuilds preserve it and schedulers can reach it.
+    trace_sink: Mutex<Option<TraceSink>>,
+}
+
+/// Where (and above what latency) the schedulers dump flight-recorder
+/// traces; see [`Service::with_trace_dump`].
+struct TraceSink {
+    dir: std::path::PathBuf,
+    /// Dump only requests at least this slow end to end (0 = all).
+    slow_ms: u64,
 }
 
 struct SolverHandle {
@@ -190,6 +221,8 @@ impl Service {
                 pre_threads,
                 shards: ShardEngine::new(ShardSpec::uniform(1, pre_threads)),
                 queue: BoundedQueue::new(DEFAULT_QUEUE_CAP),
+                submit_seq: AtomicU64::new(0),
+                trace_sink: Mutex::new(None),
             })),
             tail: DenseTail::default(),
             solver: None,
@@ -395,6 +428,18 @@ impl Service {
         self
     }
 
+    /// Dump the flight-recorder trace of every request slower than
+    /// `slow_ms` milliseconds (queue wait + service, end to end) as a
+    /// Chrome trace-event JSON file `trace-req<id>.json` under `dir`
+    /// (the CLI's `--trace-dir` / `--trace-slow-ms`; `slow_ms = 0`
+    /// dumps every request). The directory is created on the first
+    /// dump; I/O failures never fail the request. Survives engine
+    /// rebuilds.
+    pub fn with_trace_dump(self, dir: std::path::PathBuf, slow_ms: u64) -> Self {
+        *self.core().trace_sink.lock().unwrap() = Some(TraceSink { dir, slow_ms });
+        self
+    }
+
     /// Attach the PJRT-backed solver thread. The engine is created *on*
     /// the thread (its FFI handles are not `Sync`, DESIGN.md §4) from
     /// the given artifacts directory.
@@ -489,6 +534,7 @@ impl Service {
             .into_iter()
             .map(|req| {
                 let (ticket, inner) = Ticket::new();
+                self.tag_trace(inner.trace());
                 tickets.push(ticket);
                 PipelineJob {
                     req: RequestSlot::Owned(req),
@@ -559,9 +605,15 @@ impl Service {
         self.submit_slot(slot).wait()
     }
 
+    /// Tag a fresh ticket's trace with the next request id (1-based).
+    fn tag_trace(&self, trace: &RequestTrace) {
+        trace.set_id(self.core().submit_seq.fetch_add(1, Relaxed) + 1);
+    }
+
     fn submit_slot(&self, slot: RequestSlot) -> Ticket {
         self.ensure_schedulers();
         let (ticket, inner) = Ticket::new();
+        self.tag_trace(inner.trace());
         let job = PipelineJob {
             req: slot,
             ticket: inner,
@@ -681,14 +733,18 @@ impl ServiceCore {
     fn scheduler_loop(&self) {
         while let Some(job) = self.queue.pop() {
             let wait_secs = job.queued.secs();
+            let trace = Arc::clone(job.ticket.trace());
             if job.ticket.is_cancelled() {
                 self.metrics.lock().unwrap().note_cancelled();
                 job.ticket.fail("cancelled before processing");
                 continue;
             }
+            // The queue dwell ends the moment a scheduler claims the
+            // job; its span starts at the trace epoch (ticket creation).
+            trace.record("queued", LANE_PIPELINE, 0);
             let method_name = job.req.get().method.name();
             let outcome = catch_unwind(AssertUnwindSafe(|| {
-                self.process(job.req.get(), job.ticket.cancel_flag())
+                self.process(job.req.get(), job.ticket.cancel_flag(), &trace)
             }));
             match outcome {
                 Ok(Some(reply)) => {
@@ -699,6 +755,9 @@ impl ServiceCore {
                         m.record_split(method_name, wait_secs, reply.total_secs, reply.fill_in);
                         m.note_completed();
                     }
+                    // Dump before fulfilling too: when the waiter wakes,
+                    // its trace file (if any) is already on disk.
+                    self.dump_slow_trace(&trace, wait_secs + reply.total_secs);
                     job.ticket.fulfill(reply);
                 }
                 Ok(None) => {
@@ -706,7 +765,12 @@ impl ServiceCore {
                     job.ticket.fail("cancelled during processing");
                 }
                 Err(panic) => {
-                    let why = panic_message(&panic);
+                    // Name the request id in the failure so a crash in a
+                    // fleet of concurrent requests stays attributable.
+                    let why = match trace.id() {
+                        0 => panic_message(&panic),
+                        id => panic_message_for(id, &panic),
+                    };
                     self.metrics.lock().unwrap().note_failed();
                     job.ticket.fail(format!("ordering panicked: {why}"));
                 }
@@ -714,12 +778,33 @@ impl ServiceCore {
         }
     }
 
-    /// Process one request end to end: pre-process, order, count fill.
+    /// Dump a finished request's flight recorder as Chrome trace-event
+    /// JSON when a sink is configured and the request was slow enough.
+    /// Best-effort: I/O failures must never fail the request itself.
+    fn dump_slow_trace(&self, trace: &RequestTrace, latency_secs: f64) {
+        let guard = self.trace_sink.lock().unwrap();
+        if let Some(sink) = guard.as_ref() {
+            if latency_secs * 1e3 >= sink.slow_ms as f64 {
+                let _ = std::fs::create_dir_all(&sink.dir);
+                let path = sink.dir.join(format!("trace-req{}.json", trace.id()));
+                let _ = std::fs::write(path, trace.to_chrome_json());
+            }
+        }
+    }
+
+    /// Process one request end to end: pre-process, order, count fill —
+    /// each stage recorded as a span on the trace's pipeline lane.
     /// Returns `None` when the request's cancellation flag fired (checked
     /// between stages and, for ParAMD, between elimination rounds).
-    fn process(&self, req: &OrderRequest, cancel: &AtomicBool) -> Option<OrderReply> {
+    fn process(
+        &self,
+        req: &OrderRequest,
+        cancel: &AtomicBool,
+        trace: &Arc<RequestTrace>,
+    ) -> Option<OrderReply> {
         let total = Timer::new();
         let tpre = Timer::new();
+        let pre0 = trace.now_us();
         // Borrow an explicit pattern outright — no O(nnz) copy on the
         // steady-state path; only the symmetrize arm materializes one.
         let symmetrized;
@@ -733,25 +818,29 @@ impl ServiceCore {
             &symmetrized
         };
         let pre_secs = tpre.secs();
+        trace.record("preprocess", LANE_PIPELINE, pre0);
         if cancel.load(Relaxed) {
             return None;
         }
 
         // What a reply needs from an ordering: the owned permutation plus
-        // four scalar stats. Extracting just these keeps the warm ParAMD
-        // arm down to a single O(n) copy (the reply's own `perm`).
-        fn parts(r: OrderingResult) -> (Vec<i32>, u64, u64, f64, f64) {
+        // four scalar stats and the round-sample trail. Extracting just
+        // these keeps the warm ParAMD arm down to a single O(n) copy
+        // (the reply's own `perm`).
+        fn parts(r: OrderingResult) -> (Vec<i32>, u64, u64, f64, f64, Vec<RoundSample>) {
             (
                 r.perm,
                 r.stats.rounds,
                 r.stats.gc_count,
                 r.stats.gc_secs,
                 r.stats.modeled_time,
+                r.stats.round_samples,
             )
         }
 
         let tord = Timer::new();
-        let (perm, rounds, gc_count, gc_secs, modeled_time) = match &req.method {
+        let ord0 = trace.now_us();
+        let (perm, rounds, gc_count, gc_secs, modeled_time, round_samples) = match &req.method {
             Method::Amd => parts(AmdSeq::default().order(g)),
             Method::Mmd => parts(Mmd::default().order(g)),
             Method::MinDegree => parts(MinDegree.order(g)),
@@ -776,17 +865,28 @@ impl ServiceCore {
                 let cfg = ParAmd::new(self.shards.wide_threads())
                     .with_mult(*mult)
                     .with_lim_total(*lim_total);
-                let rep = self.shards.order_cancellable(g, cfg, cancel)?;
-                (rep.perm, rep.rounds, rep.gc_count, rep.gc_secs, rep.modeled_time)
+                let rep = self.shards.order_traced(g, cfg, cancel, Some(trace))?;
+                (
+                    rep.perm,
+                    rep.rounds,
+                    rep.gc_count,
+                    rep.gc_secs,
+                    rep.modeled_time,
+                    rep.round_samples,
+                )
             }
         };
         let order_secs = tord.secs();
+        trace.record("order", LANE_PIPELINE, ord0);
 
         if cancel.load(Relaxed) {
             return None; // don't burn fill analysis on a dropped ticket
         }
         let fill = if req.compute_fill {
-            Some(symbolic::fill_in(g, &perm))
+            let fill0 = trace.now_us();
+            let f = symbolic::fill_in(g, &perm);
+            trace.record("fill", LANE_PIPELINE, fill0);
+            Some(f)
         } else {
             None
         };
@@ -800,6 +900,7 @@ impl ServiceCore {
             gc_count,
             gc_secs,
             modeled_time,
+            round_samples,
         })
     }
 }
@@ -1308,5 +1409,92 @@ mod tests {
         };
         let rep = svc.order(&req);
         assert_eq!(rep.perm.len(), 100);
+    }
+
+    #[test]
+    fn warm_request_traces_cover_the_wall_and_render_valid_json() {
+        let svc = Service::new(2);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(mesh2d(16, 16)),
+            method: Method::ParAmd {
+                threads: 2,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: true,
+        };
+        svc.order(&req); // cold pass: spawns schedulers, warms the pools
+        let ticket = svc.submit(req);
+        let trace = ticket.trace();
+        let rep = ticket.wait();
+        assert_eq!(rep.perm.len(), 256);
+        assert_eq!(trace.id(), 2, "submits tag monotone 1-based request ids");
+        let spans = trace.spans();
+        for name in ["queued", "preprocess", "order", "fill"] {
+            let hit = spans.iter().any(|s| s.name == name && s.lane == LANE_PIPELINE);
+            assert!(hit, "missing pipeline span {name}: {spans:?}");
+        }
+        let violations = trace.invariant_violations();
+        assert!(violations.is_empty(), "mis-nested spans: {violations:?}");
+        assert!(
+            trace.coverage() >= 0.95,
+            "spans must explain >=95% of the wall, got {}",
+            trace.coverage()
+        );
+        crate::telemetry::validate_json(&trace.to_chrome_json()).expect("chrome trace JSON");
+    }
+
+    #[test]
+    fn paramd_replies_carry_round_samples_that_close_the_books() {
+        let svc = Service::new(1);
+        let g = mesh2d(18, 18);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(g.clone()),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        let rep = svc.order(&req);
+        assert!(!rep.round_samples.is_empty(), "a live run must sample rounds");
+        let weight: u64 = rep.round_samples.iter().map(|s| u64::from(s.weight)).sum();
+        assert_eq!(weight, g.n as u64, "round retirements must account for every column");
+        let pivots: u64 = rep.round_samples.iter().map(|s| u64::from(s.pivots)).sum();
+        assert!(pivots > 0 && pivots <= g.n as u64);
+        // Replays and sequential methods are honest about not sampling.
+        let again = svc.order(&req);
+        assert!(again.round_samples.is_empty(), "cache replays record no rounds");
+        let amd = svc.order(&OrderRequest {
+            method: Method::Amd,
+            ..req.clone()
+        });
+        assert!(amd.round_samples.is_empty());
+    }
+
+    #[test]
+    fn slow_request_traces_dump_as_chrome_json() {
+        let dir = std::env::temp_dir().join(format!("paramd-trace-dump-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let svc = Service::new(1).with_trace_dump(dir.clone(), 0);
+        svc.order(&spd_request(Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        }));
+        let dumped: Vec<_> = std::fs::read_dir(&dir)
+            .expect("dump directory must exist")
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert_eq!(dumped.len(), 1, "slow_ms = 0 dumps every request");
+        let name = dumped[0].file_name().unwrap().to_string_lossy().into_owned();
+        assert!(name.starts_with("trace-req") && name.ends_with(".json"), "{name}");
+        let text = std::fs::read_to_string(&dumped[0]).unwrap();
+        crate::telemetry::validate_json(&text).expect("dumped trace must parse");
+        assert!(text.contains("\"name\":\"order\""), "order span missing: {text}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

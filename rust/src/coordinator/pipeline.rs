@@ -11,6 +11,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::request::{OrderReply, OrderRequest};
+use crate::telemetry::RequestTrace;
 use crate::util::timer::Timer;
 
 /// A bounded MPMC queue. `push` blocks while the queue is full — this is
@@ -246,6 +247,10 @@ pub(crate) struct TicketInner {
     st: Mutex<TicketSt>,
     cv: Condvar,
     cancel: AtomicBool,
+    /// The request's flight recorder — created with the ticket (its
+    /// epoch is submit time) and shared down the scheduler, engine, and
+    /// shard dispatchers.
+    trace: Arc<RequestTrace>,
 }
 
 impl TicketInner {
@@ -277,6 +282,11 @@ impl TicketInner {
     /// The flag threaded into `ParAmd::order_into_cancellable`.
     pub(crate) fn cancel_flag(&self) -> &AtomicBool {
         &self.cancel
+    }
+
+    /// The request's flight recorder.
+    pub(crate) fn trace(&self) -> &Arc<RequestTrace> {
+        &self.trace
     }
 }
 
@@ -312,6 +322,7 @@ impl Ticket {
             }),
             cv: Condvar::new(),
             cancel: AtomicBool::new(false),
+            trace: Arc::new(RequestTrace::new()),
         });
         (
             Ticket {
@@ -433,6 +444,14 @@ impl Ticket {
         !matches!(self.inner.st.lock().unwrap().state, TicketState::Pending)
     }
 
+    /// The request's flight recorder: inspect the recorded spans,
+    /// measure [`RequestTrace::coverage`], or render
+    /// [`RequestTrace::to_chrome_json`] once the reply arrived. Clone
+    /// the handle out before `wait` consumes the ticket to keep it.
+    pub fn trace(&self) -> Arc<RequestTrace> {
+        Arc::clone(&self.inner.trace)
+    }
+
     /// Explicitly cancel the request without dropping the ticket. After
     /// cancellation the pipeline may fail the ticket, so `wait`/`try_get`
     /// can panic; poll [`Self::is_finished`] if the race matters.
@@ -508,6 +527,7 @@ mod tests {
             gc_count: 0,
             gc_secs: 0.0,
             modeled_time: 0.0,
+            round_samples: Vec::new(),
         });
         assert!(ticket.is_finished());
         let reply = ticket.wait();
@@ -574,6 +594,7 @@ mod tests {
             gc_count: 0,
             gc_secs: 0.0,
             modeled_time: 0.0,
+            round_samples: Vec::new(),
         });
         let reply = ticket
             .wait_deadline(Duration::from_secs(5))
@@ -592,6 +613,7 @@ mod tests {
             gc_count: 0,
             gc_secs: 0.0,
             modeled_time: 0.0,
+            round_samples: Vec::new(),
         }
     }
 

@@ -1,6 +1,7 @@
 //! Request/reply types of the ordering service.
 
 use crate::graph::csr::{CsrMatrix, SymGraph};
+use crate::ordering::RoundSample;
 use crate::util::rng::Rng;
 
 /// Which ordering algorithm to run.
@@ -88,6 +89,10 @@ pub struct OrderReply {
     /// Cumulative stop-the-world seconds spent in quotient-graph GC.
     pub gc_secs: f64,
     pub modeled_time: f64,
+    /// Per-round elimination samples of the request's dominant live
+    /// ParAMD run (the Fig-4 decay curve); empty for non-ParAMD methods
+    /// and cache replays.
+    pub round_samples: Vec<RoundSample>,
 }
 
 /// Right-hand-side specification for solve requests.

@@ -44,4 +44,5 @@ pub mod ordering;
 pub mod prop;
 pub mod runtime;
 pub mod symbolic;
+pub mod telemetry;
 pub mod util;

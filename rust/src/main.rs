@@ -17,6 +17,7 @@
 //!         [--cache-mb MB] [--no-cache]
 //!         [--hybrid] [--partition-threshold N] [--recursion-depth D]
 //!         [--balance-factor B]
+//!         [--metrics-every N] [--trace-dir D] [--trace-slow-ms MS]
 //!         — service demo with metrics; `--pipeline` submits every
 //!         request as a ticket up front (async, backpressured) instead
 //!         of blocking per request; `--shards`/`--shard-threads` shard
@@ -43,7 +44,13 @@
 //!         count where it engages (default 32768),
 //!         `--recursion-depth` the bisection depth (default 2, up to
 //!         2^D subdomains), `--balance-factor` the tolerated
-//!         larger-side/ideal-half ratio (default 1.3)
+//!         larger-side/ideal-half ratio (default 1.3);
+//!         `--metrics-every N` prints the Prometheus metrics page after
+//!         every N completed requests (0 = off), `--trace-dir D` dumps
+//!         per-request flight-recorder traces as Chrome trace-event
+//!         JSON files into D (loadable in Perfetto / about:tracing) and
+//!         `--trace-slow-ms MS` restricts the dumps to requests at
+//!         least MS milliseconds end to end (default 0 = every request)
 
 use paramd::cli::Args;
 use paramd::coordinator::{
@@ -251,6 +258,15 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if args.has("pjrt") {
         svc = svc.with_pjrt_solver(args.get_or("artifacts", "artifacts").into())?;
     }
+    if let Some(dir) = args.get("trace-dir") {
+        svc = svc.with_trace_dump(dir.into(), args.get_parse("trace-slow-ms", 0u64));
+    }
+    let metrics_every = args.get_parse("metrics-every", 0usize);
+    let expose = |svc: &Service, completed: usize| {
+        if metrics_every > 0 && completed % metrics_every == 0 {
+            println!("{}", paramd::telemetry::export::prometheus(&svc.metrics()));
+        }
+    };
     let suite = matgen::suite();
     let build = |i: usize| {
         let e = &suite[i % suite.len()];
@@ -292,6 +308,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 rep.total_secs,
                 rep.fill_in.unwrap_or(0) as f64
             );
+            expose(&svc, i + 1);
         }
     } else {
         for i in 0..n_req {
@@ -305,6 +322,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 rep.total_secs,
                 rep.fill_in.unwrap_or(0) as f64
             );
+            expose(&svc, i + 1);
         }
     }
     println!("\n{}", svc.metrics().report());

@@ -47,6 +47,39 @@ pub struct OrderingResult {
     pub stats: OrderingStats,
 }
 
+/// One outer elimination round's telemetry, recorded by the ParAMD
+/// leader at each round boundary (the paper's Fig-4-style decay curve).
+/// All rate-like fields are **deltas since the previous sample**; the
+/// sweep time of round `r`'s boundary lands on sample `r + 1` (the sweep
+/// runs after bookkeeping), with any post-final-round remainder folded
+/// into a tail sample at assembly, so per-job sums are exact:
+/// Σ`pivots` = total supervariable pivots, Σ`weight` = the kernel's
+/// total column weight (= `n` for unreduced, unweighted runs).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundSample {
+    /// Outer round index (0-based; `u32::MAX` tags the assembly tail
+    /// sample that closes the books after the last round).
+    pub round: u32,
+    /// Supervariable pivots retired this round (mass eliminations and
+    /// postponed pseudo-sets included).
+    pub pivots: u32,
+    /// Original columns retired this round (elimination-count delta —
+    /// supervariable weights counted, so these sum to the kernel weight).
+    pub weight: u32,
+    /// Live (still-active) supervariables after the round.
+    pub live_vars: u32,
+    /// Live column weight after the round (total weight − eliminated).
+    pub live_weight: u32,
+    /// Elbow `claim` failures (memory contention → deferral + GC
+    /// request) observed this round.
+    pub claim_failures: u32,
+    /// Stop-the-world GC seconds charged to this round.
+    pub gc_secs: f64,
+    /// Re-reduction sweep seconds charged to this round (the previous
+    /// round boundary's sweep; see above).
+    pub sweep_secs: f64,
+}
+
 /// Counters shared across ordering implementations; a superset — each
 /// algorithm fills what applies to it.
 #[derive(Clone, Debug, Default)]
@@ -82,6 +115,16 @@ pub struct OrderingStats {
     /// Simulated parallel time from the critical-path cost model (seconds),
     /// 0.0 when not applicable.
     pub modeled_time: f64,
+    /// Per-round telemetry samples (ParAMD only; at most
+    /// [`paramd::arena::ROUND_RING_CAP`] retained, oldest dropped — see
+    /// `round_samples_dropped`).
+    pub round_samples: Vec<RoundSample>,
+    /// Round samples dropped by the fixed-capacity ring (0 in practice —
+    /// the cap far exceeds realistic round counts).
+    pub round_samples_dropped: u64,
+    /// Total elbow `claim` failures over the run (memory-contention
+    /// signal; each one deferred a pivot and requested a GC).
+    pub claim_failures: u64,
 }
 
 impl OrderingResult {

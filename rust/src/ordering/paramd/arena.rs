@@ -37,7 +37,9 @@ use std::sync::{Condvar, Mutex};
 
 use crate::graph::csr::SymGraph;
 use crate::graph::perm::invert_perm_into;
-use crate::ordering::{rebuild_perm_into, OrderingResult, RebuildScratch};
+use crate::ordering::{
+    rebuild_perm_into, OrderingResult, OrderingStats, RebuildScratch, RoundSample,
+};
 use crate::util::timer::PhaseTimes;
 
 use super::cost;
@@ -167,6 +169,169 @@ impl RereduceState {
     }
 }
 
+/// Capacity of the per-run [`RoundLog`] ring: at most this many
+/// [`RoundSample`]s are retained per job (oldest overwritten first). Far
+/// above realistic outer-round counts — multiple elimination retires
+/// thousands of pivots per round — so drops are a pathology signal, not
+/// a steady-state behavior.
+pub const ROUND_RING_CAP: usize = 256;
+
+/// Fixed-footprint ring of per-round telemetry samples, written by the
+/// phase-D leader and folded into [`OrderingStats::round_samples`] at
+/// assembly. Pooled like everything else in the arena: the ring storage
+/// is preallocated to [`ROUND_RING_CAP`] once and reset per run, so
+/// recording a round is a mutex lock plus a slot write — no allocation,
+/// no unbounded growth on long jobs.
+///
+/// The writer hands in *cumulative* counters (`nel`, claim failures,
+/// GC/sweep nanos); the ring differentiates them against its previous
+/// cursors so every sample carries per-round **deltas**. Cumulative
+/// pivot/weight totals over everything ever recorded (dropped samples
+/// included) are kept so [`Self::fold_into`] can close the books with an
+/// exact tail sample.
+pub(crate) struct RoundLog {
+    inner: Mutex<RoundLogInner>,
+}
+
+struct RoundLogInner {
+    /// Ring storage (≤ [`ROUND_RING_CAP`] entries, preallocated).
+    samples: Vec<RoundSample>,
+    /// Next overwrite slot once the ring is full.
+    head: usize,
+    dropped: u64,
+    /// Pivots/weight over *all* recorded samples (dropped included).
+    recorded_pivots: u64,
+    recorded_weight: u64,
+    /// Previous cumulative cursors for delta computation.
+    prev_nel: usize,
+    prev_claims: usize,
+    prev_gc_nanos: u64,
+    prev_rr_nanos: u64,
+}
+
+impl RoundLog {
+    fn new() -> Self {
+        Self {
+            inner: Mutex::new(RoundLogInner {
+                samples: Vec::new(),
+                head: 0,
+                dropped: 0,
+                recorded_pivots: 0,
+                recorded_weight: 0,
+                prev_nel: 0,
+                prev_claims: 0,
+                prev_gc_nanos: 0,
+                prev_rr_nanos: 0,
+            }),
+        }
+    }
+
+    /// Per-run reset; preallocates the ring storage on first use.
+    /// Returns 1 if anything grew (the arena's grow-event accounting).
+    fn reset(&mut self) -> u32 {
+        let i = self.inner.get_mut().unwrap();
+        let mut grew = 0;
+        if i.samples.capacity() < ROUND_RING_CAP {
+            i.samples.reserve_exact(ROUND_RING_CAP - i.samples.len());
+            grew = 1;
+        }
+        i.samples.clear();
+        i.head = 0;
+        i.dropped = 0;
+        i.recorded_pivots = 0;
+        i.recorded_weight = 0;
+        i.prev_nel = 0;
+        i.prev_claims = 0;
+        i.prev_gc_nanos = 0;
+        i.prev_rr_nanos = 0;
+        grew
+    }
+
+    /// Record round `round`'s sample from the leader's cumulative
+    /// counters. `pivots` is this round's eliminated supervariable
+    /// count; everything else is differentiated against the previous
+    /// call. The sweep nanos passed here are the cumulative total
+    /// *before* this boundary's phase-E sweep runs, so a sweep's time
+    /// lands on the **next** round's sample (see
+    /// [`RoundSample::sweep_secs`]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn note_round(
+        &self,
+        round: u32,
+        pivots: u32,
+        live_vars: u32,
+        nel_now: usize,
+        wtot: usize,
+        claims_now: usize,
+        gc_nanos_now: u64,
+        rr_nanos_now: u64,
+    ) {
+        let mut i = self.inner.lock().unwrap();
+        let weight = nel_now.saturating_sub(i.prev_nel) as u32;
+        let sample = RoundSample {
+            round,
+            pivots,
+            weight,
+            live_vars,
+            live_weight: wtot.saturating_sub(nel_now) as u32,
+            claim_failures: claims_now.saturating_sub(i.prev_claims) as u32,
+            gc_secs: gc_nanos_now.saturating_sub(i.prev_gc_nanos) as f64 / 1e9,
+            sweep_secs: rr_nanos_now.saturating_sub(i.prev_rr_nanos) as f64 / 1e9,
+        };
+        i.prev_nel = nel_now;
+        i.prev_claims = claims_now;
+        i.prev_gc_nanos = gc_nanos_now;
+        i.prev_rr_nanos = rr_nanos_now;
+        i.recorded_pivots += u64::from(pivots);
+        i.recorded_weight += u64::from(weight);
+        if i.samples.len() < ROUND_RING_CAP {
+            i.samples.push(sample);
+        } else {
+            let h = i.head;
+            i.samples[h] = sample;
+            i.head = (h + 1) % ROUND_RING_CAP;
+            i.dropped += 1;
+        }
+    }
+
+    /// Copy the retained samples (oldest first) into `stats`, then close
+    /// the books: whatever the run eliminated outside the recorded
+    /// rounds — the final phase-A exit, sweep-postponed pseudo-sets, the
+    /// boundary GC/sweep time after the last sample — lands in a tail
+    /// sample tagged `round == u32::MAX`, so Σ`pivots` = `total_pivots`
+    /// and Σ`weight` = `wtot` exactly whenever nothing was dropped.
+    pub(crate) fn fold_into(
+        &mut self,
+        stats: &mut OrderingStats,
+        wtot: u64,
+        total_pivots: u64,
+        gc_nanos_end: u64,
+        rr_nanos_end: u64,
+    ) {
+        let i = self.inner.get_mut().unwrap();
+        stats.round_samples.clear();
+        stats.round_samples.extend_from_slice(&i.samples[i.head..]);
+        stats.round_samples.extend_from_slice(&i.samples[..i.head]);
+        stats.round_samples_dropped = i.dropped;
+        let pivots = total_pivots.saturating_sub(i.recorded_pivots);
+        let weight = wtot.saturating_sub(i.recorded_weight);
+        let gc_secs = gc_nanos_end.saturating_sub(i.prev_gc_nanos) as f64 / 1e9;
+        let sweep_secs = rr_nanos_end.saturating_sub(i.prev_rr_nanos) as f64 / 1e9;
+        if pivots > 0 || weight > 0 || gc_secs > 0.0 || sweep_secs > 0.0 {
+            stats.round_samples.push(RoundSample {
+                round: u32::MAX,
+                pivots: pivots as u32,
+                weight: weight as u32,
+                live_vars: 0,
+                live_weight: 0,
+                claim_failures: 0,
+                gc_secs,
+                sweep_secs,
+            });
+        }
+    }
+}
+
 /// All storage one ParAMD run needs, owned across runs. See the module
 /// docs for the reuse rules.
 pub struct ParAmdArena {
@@ -192,6 +357,8 @@ pub struct ParAmdArena {
     pub(crate) gc_nanos: AtomicU64,
     /// Mid-elimination re-reduction state (phase E).
     pub(crate) rereduce: RereduceState,
+    /// Per-round telemetry ring (phase-D leader writes).
+    pub(crate) round_log: RoundLog,
     pub(crate) set_sizes: Mutex<Vec<u32>>,
     pub(crate) slots: Vec<Mutex<ThreadSlot>>,
     // ---- assembly scratch (pooled like everything else) ----------------
@@ -227,6 +394,7 @@ impl ParAmdArena {
             gc_count: AtomicUsize::new(0),
             gc_nanos: AtomicU64::new(0),
             rereduce: RereduceState::new(),
+            round_log: RoundLog::new(),
             set_sizes: Mutex::new(Vec::new()),
             slots: Vec::new(),
             elim_order: Vec::new(),
@@ -322,6 +490,7 @@ impl ParAmdArena {
         self.gc_count.store(0, Relaxed);
         self.gc_nanos.store(0, Relaxed);
         grew += u64::from(self.rereduce.reset(n));
+        grew += u64::from(self.round_log.reset());
         self.set_sizes.get_mut().unwrap().clear();
         while self.slots.len() < t {
             let tid = self.slots.len();
@@ -355,6 +524,9 @@ impl ParAmdArena {
         stats.modeled_time = 0.0;
         stats.set_sizes.clear();
         stats.thread_work.clear();
+        stats.round_samples.clear();
+        stats.round_samples_dropped = 0;
+        stats.claim_failures = 0;
         if n == 0 {
             // Only the empty-graph early return skips `assemble`, which
             // otherwise rebuilds the detail in place (reusing the
@@ -457,6 +629,15 @@ impl ParAmdArena {
         stats.elements_absorbed = self.rereduce.absorbed.load(Relaxed) as u64;
         stats.rereduce_count = self.rereduce.passes.load(Relaxed) as u64;
         stats.rereduce_secs = self.rereduce.nanos.load(Relaxed) as f64 / 1e9;
+        stats.claim_failures = self.sg.claim_failures.load(Relaxed) as u64;
+        let (wtot, pivots) = (self.sg.weight as u64, stats.pivots);
+        self.round_log.fold_into(
+            stats,
+            wtot,
+            pivots,
+            self.gc_nanos.load(Relaxed),
+            self.rereduce.nanos.load(Relaxed),
+        );
         stats.work_words = d
             .round_work
             .iter()

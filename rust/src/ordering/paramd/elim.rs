@@ -6,6 +6,12 @@
 //! `L_me` is first collected into thread-local scratch, then exactly-sized
 //! space is claimed with a single `fetch_add`, then the connection updates
 //! are published.
+//!
+//! Each [`Outcome`] feeds the round-level telemetry: `Eliminated` masses
+//! accumulate into the round's pivot/weight tallies and every `Deferred`
+//! counts as one claim failure in the per-round
+//! [`RoundSample`](crate::ordering::RoundSample) ring (the memory-contention
+//! signal surfaced through `OrderingStats` and the service metrics).
 
 use std::sync::atomic::Ordering::Relaxed;
 

@@ -307,6 +307,7 @@ impl ParAmd {
                 gc_count: &arena.gc_count,
                 gc_nanos: &arena.gc_nanos,
                 rr: &arena.rereduce,
+                round_log: &arena.round_log,
                 set_sizes: &arena.set_sizes,
                 t,
                 lim,
@@ -362,6 +363,8 @@ struct RunShared<'a> {
     /// Mid-elimination re-reduction state: the leader-armed trigger
     /// flag, the shared fingerprint scratch, and the sweep counters.
     rr: &'a arena::RereduceState,
+    /// Per-round telemetry ring (leader-only writes, phase D).
+    round_log: &'a arena::RoundLog,
     set_sizes: &'a Mutex<Vec<u32>>,
     t: usize,
     lim: usize,
@@ -500,6 +503,22 @@ fn run_thread(tid: usize, sh: &RunShared<'_>, slot: &mut ThreadSlot) {
             let by_elbow =
                 cfg.rereduce_elbow > 0.0 && (total as f64) < cfg.rereduce_elbow * sh.t as f64;
             sh.rr.flag.store(cfg.rereduce && (by_round || by_elbow), Relaxed);
+            // Round telemetry: pivot/weight deltas, live census, and the
+            // stop-the-world charges. Peers are parked at the barrier, so
+            // the O(n) live scan runs inside time already accounted as a
+            // round boundary. This boundary's phase-E sweep runs *after*
+            // this record, so its time lands on the next sample.
+            let live_vars = (0..n).filter(|&v| sh.sg.st(v) == shared::ST_VAR).count();
+            sh.round_log.note_round(
+                round,
+                total as u32,
+                live_vars as u32,
+                sh.sg.nel.load(Relaxed),
+                sh.wtot,
+                sh.sg.claim_failures.load(Relaxed),
+                sh.gc_nanos.load(Relaxed),
+                sh.rr.nanos.load(Relaxed),
+            );
         }
         sh.barrier.wait();
         if sh.poison.load(Relaxed) || sh.abort.load(Relaxed) {
@@ -640,6 +659,59 @@ mod tests {
         assert!(
             r.stats.gc_secs > 0.0,
             "stop-the-world GC time must be measured"
+        );
+        assert!(
+            r.stats.claim_failures > 0,
+            "every GC is triggered by at least one failed elbow claim"
+        );
+        let sampled: u64 = r
+            .stats
+            .round_samples
+            .iter()
+            .map(|s| u64::from(s.claim_failures))
+            .sum();
+        assert_eq!(
+            sampled, r.stats.claim_failures,
+            "per-round claim-failure deltas must sum to the run total"
+        );
+    }
+
+    #[test]
+    fn round_samples_close_the_books() {
+        let g = mesh2d(20, 20);
+        let r = ParAmd::new(2).order(&g);
+        assert!(!r.stats.round_samples.is_empty(), "rounds must be sampled");
+        assert_eq!(r.stats.round_samples_dropped, 0, "cap far exceeds rounds");
+        let weight: u64 = r.stats.round_samples.iter().map(|s| u64::from(s.weight)).sum();
+        assert_eq!(weight, g.n as u64, "weight deltas sum to the column total");
+        let pivots: u64 = r.stats.round_samples.iter().map(|s| u64::from(s.pivots)).sum();
+        assert_eq!(pivots, r.stats.pivots, "pivot deltas sum to the run total");
+        // The live census decays monotonically across real rounds, and
+        // the per-round indices are the outer round counter.
+        for (i, w) in r.stats.round_samples.windows(2).enumerate() {
+            if w[1].round != u32::MAX {
+                assert_eq!(w[0].round as usize, i);
+                assert!(w[1].live_weight <= w[0].live_weight, "live weight grew");
+                assert!(w[1].live_vars <= w[0].live_vars, "live vars grew");
+            }
+        }
+    }
+
+    #[test]
+    fn round_samples_reset_between_warm_runs() {
+        let g = mesh2d(12, 12);
+        let cfg = ParAmd::new(2);
+        let rt = OrderingRuntime::new(2);
+        let mut arena = ParAmdArena::new();
+        cfg.order_into(&rt, &mut arena, &g);
+        let first = arena.result().stats.round_samples.clone();
+        let r = cfg.order_into(&rt, &mut arena, &g);
+        let weight: u64 = r.stats.round_samples.iter().map(|s| u64::from(s.weight)).sum();
+        assert_eq!(weight, g.n as u64, "stale samples must not accumulate");
+        assert_eq!(
+            r.stats.round_samples.len(),
+            first.len(),
+            "warm rerun records the same round count"
         );
     }
 

@@ -63,6 +63,9 @@ pub struct SharedGraph {
     pub nel: AtomicUsize,
     /// Set when a thread failed to claim elbow space; triggers GC.
     pub gc_requested: AtomicBool,
+    /// Total failed `claim`s this run — the memory-contention signal the
+    /// round telemetry samples (each failure deferred a pivot).
+    pub claim_failures: AtomicUsize,
     /// Pooled GC compaction order — retained across collections (and
     /// arena reuse) so a warm GC performs no O(live) allocation. Behind a
     /// mutex only for interior mutability: GC runs stop-the-world.
@@ -95,6 +98,7 @@ impl SharedGraph {
             pfree: AtomicUsize::new(0),
             nel: AtomicUsize::new(0),
             gc_requested: AtomicBool::new(false),
+            claim_failures: AtomicUsize::new(0),
             gc_scratch: Mutex::new(Vec::new()),
         }
     }
@@ -170,6 +174,7 @@ impl SharedGraph {
         self.pfree.store(nnz, Relaxed);
         self.nel.store(0, Relaxed);
         self.gc_requested.store(false, Relaxed);
+        self.claim_failures.store(0, Relaxed);
         grew
     }
 
@@ -230,6 +235,7 @@ impl SharedGraph {
             Some(end) if end <= self.iw.len() => Some(off),
             _ => {
                 self.gc_requested.store(true, Relaxed);
+                self.claim_failures.fetch_add(1, Relaxed);
                 None
             }
         }
@@ -347,6 +353,11 @@ mod tests {
         // This claim would have fit before the failed one; with the old
         // rollback it could overlap a winner's slots. Now it fails fast.
         assert!(sg.claim(1).is_none(), "exhaustion must be sticky");
+        assert_eq!(
+            sg.claim_failures.load(Relaxed),
+            2,
+            "every failed claim counts toward the contention telemetry"
+        );
         // The round-boundary GC recomputes the cursor exactly.
         sg.garbage_collect_exclusive();
         assert!(!sg.gc_requested.load(Relaxed));

@@ -24,6 +24,9 @@ pub struct ShardStat {
     pub jobs: u64,
     /// Wall-clock seconds this shard's dispatcher spent running jobs.
     pub busy_secs: f64,
+    /// Approximate 95th-percentile per-job busy seconds (±1 bucket of
+    /// the shard's log-bucketed busy histogram).
+    pub busy_p95_secs: f64,
 }
 
 /// Engine-wide snapshot: routing counters, the per-shard table, and the
@@ -71,6 +74,9 @@ pub struct ShardMetrics {
     pub elements_absorbed: u64,
     /// Cumulative stop-the-world seconds spent inside those sweeps.
     pub rereduce_secs: f64,
+    /// Elbow `claim` failures (memory contention → pivot deferral + GC
+    /// request) across every job on this engine.
+    pub claim_failures: u64,
     /// Connected requests that took the hybrid ND×ParAMD fan-out path.
     pub hybrid_requests: u64,
     /// Subdomain jobs dispatched by hybrid requests.
@@ -148,8 +154,8 @@ impl ShardMetrics {
         }
         for (i, st) in self.per_shard.iter().enumerate() {
             s.push_str(&format!(
-                "  shard {i}: threads={} jobs={} busy={:.4}s\n",
-                st.threads, st.jobs, st.busy_secs
+                "  shard {i}: threads={} jobs={} busy={:.4}s p95={:.4}s\n",
+                st.threads, st.jobs, st.busy_secs, st.busy_p95_secs
             ));
         }
         let hist: Vec<String> = self
@@ -192,6 +198,7 @@ pub(crate) struct EngineCounters {
     mid_dense_postponed: AtomicU64,
     elements_absorbed: AtomicU64,
     rereduce_nanos: AtomicU64,
+    claim_failures: AtomicU64,
     busy_now: AtomicUsize,
     busy_peak: AtomicUsize,
     size_hist: [AtomicU64; SIZE_HIST_BUCKETS],
@@ -223,6 +230,7 @@ impl EngineCounters {
             mid_dense_postponed: AtomicU64::new(0),
             elements_absorbed: AtomicU64::new(0),
             rereduce_nanos: AtomicU64::new(0),
+            claim_failures: AtomicU64::new(0),
             busy_now: AtomicUsize::new(0),
             busy_peak: AtomicUsize::new(0),
             size_hist: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -267,6 +275,14 @@ impl EngineCounters {
         }
     }
 
+    /// Fold one finished job's elbow `claim`-failure tally into the
+    /// engine counters (dispatchers only, like [`Self::note_job_gc`]).
+    pub(crate) fn note_job_claim_failures(&self, count: u64) {
+        if count > 0 {
+            self.claim_failures.fetch_add(count, Relaxed);
+        }
+    }
+
     /// Record one dispatched component of `n` vertices in the histogram.
     pub(crate) fn note_component(&self, n: usize) {
         let bucket = (n.max(1).ilog2() as usize).min(SIZE_HIST_BUCKETS - 1);
@@ -303,6 +319,7 @@ impl EngineCounters {
             mid_dense_postponed: self.mid_dense_postponed.load(Relaxed),
             elements_absorbed: self.elements_absorbed.load(Relaxed),
             rereduce_secs: self.rereduce_nanos.load(Relaxed) as f64 / 1e9,
+            claim_failures: self.claim_failures.load(Relaxed),
             hybrid_requests: self.hybrid_requests.load(Relaxed),
             subdomains: self.subdomain_jobs.load(Relaxed),
             separators: self.separator_jobs.load(Relaxed),
@@ -358,10 +375,14 @@ mod tests {
             threads: 4,
             jobs: 3,
             busy_secs: 0.25,
+            busy_p95_secs: 0.125,
         }]);
         let r = m.report();
         assert!(r.contains("requests=3"));
-        assert!(r.contains("shard 0: threads=4 jobs=3"));
+        assert!(
+            r.contains("shard 0: threads=4 jobs=3 busy=0.2500s p95=0.1250s"),
+            "per-shard line carries the p95 busy time: {r}"
+        );
         assert!(r.contains("2^3:1"));
         assert!(r.contains("reduce: jobs=0"), "reduce line always present");
         assert!(r.contains("gc: collections=0"), "gc line always present");
@@ -414,6 +435,15 @@ mod tests {
         assert!(m
             .report()
             .contains("rereduce: passes=3 twins=15 dense=1 absorbed=6"));
+    }
+
+    #[test]
+    fn claim_failure_counters_accumulate_across_jobs() {
+        let c = EngineCounters::new();
+        c.note_job_claim_failures(3);
+        c.note_job_claim_failures(0); // contention-free jobs leave no trace
+        c.note_job_claim_failures(2);
+        assert_eq!(c.snapshot(Vec::new()).claim_failures, 5);
     }
 
     #[test]

@@ -134,7 +134,11 @@ use crate::ordering::paramd::arena::ArenaPool;
 use crate::ordering::paramd::runtime::{OrderingRuntime, QueuePolicy};
 use crate::ordering::paramd::ParAmd;
 use crate::ordering::reduce::{try_reduce, ReduceConfig, ReductionPlan};
+use crate::ordering::RoundSample;
+use crate::telemetry::{shard_lane, RequestTrace, LANE_ENGINE};
 use crate::util::panic_message;
+use crate::util::panic_message_for;
+use crate::util::stats::LogHistogram;
 use crate::util::timer::Timer;
 
 use metrics::EngineCounters;
@@ -241,6 +245,12 @@ pub struct ShardReply {
     /// Vertices the reduction layer removed from the ordering problems
     /// (leaf prefixes + dense tails + merged twins, summed).
     pub reduced: usize,
+    /// Per-round elimination samples of the request's **dominant** (most
+    /// vertices) live kernel run — the Fig-4-style decay curve. Empty
+    /// for cache replays (no elimination ran) and non-ParAMD configs.
+    pub round_samples: Vec<RoundSample>,
+    /// Elbow `claim` failures summed over the request's live jobs.
+    pub claim_failures: u64,
 }
 
 /// Where a job's graph lives: component jobs own their extracted
@@ -302,6 +312,10 @@ struct ShardJob {
     /// When set, this job was a cache miss under this key: the
     /// dispatcher inserts the (kernel-level) result on completion.
     cache_key: Option<CacheKey>,
+    /// The submitting request's flight recorder, when it carries one:
+    /// the dispatcher records its dispatch/elimination spans on
+    /// [`shard_lane`]`(shard id)`.
+    trace: Option<Arc<RequestTrace>>,
 }
 
 /// How one job of a batch resolved.
@@ -330,6 +344,11 @@ struct CompDone {
     mid_dense_postponed: u64,
     elements_absorbed: u64,
     rereduce_secs: f64,
+    /// Per-round samples of this job's kernel run (empty for cache
+    /// replays — the entry stores the permutation, not the telemetry).
+    round_samples: Vec<RoundSample>,
+    /// Elbow `claim` failures of this job's kernel run (0 for replays).
+    claim_failures: u64,
 }
 
 impl CompDone {
@@ -361,6 +380,8 @@ impl CompDone {
             mid_dense_postponed: 0,
             elements_absorbed: 0,
             rereduce_secs: 0.0,
+            round_samples: Vec::new(),
+            claim_failures: 0,
         }
     }
 }
@@ -390,7 +411,24 @@ fn expand_done(plan: &ReductionPlan, kernel: &CachedOrdering) -> CompDone {
         mid_dense_postponed: 0,
         elements_absorbed: 0,
         rereduce_secs: 0.0,
+        round_samples: Vec::new(),
+        claim_failures: 0,
     }
+}
+
+/// Batch-level observability aggregates a `run_parts` call returns
+/// alongside its component results.
+#[derive(Default)]
+struct PartsTelemetry {
+    /// Vertices the reduction layer removed across the batch.
+    reduced: usize,
+    /// Dispatcher busy seconds the batch's live jobs consumed (cache
+    /// hits contribute zero).
+    busy_secs: f64,
+    /// Round samples of the batch's dominant (most vertices) live run.
+    round_samples: Vec<RoundSample>,
+    /// Elbow `claim` failures summed over the batch's live jobs.
+    claim_failures: u64,
 }
 
 /// Completion latch of one request's jobs: dispatchers resolve slots,
@@ -511,6 +549,8 @@ impl JobQueue {
 
 /// One shard: an independent warm ordering lane.
 struct Shard {
+    /// Shard index — the trace lane key ([`shard_lane`]).
+    id: usize,
     threads: usize,
     rt: OrderingRuntime,
     arenas: ArenaPool,
@@ -520,6 +560,9 @@ struct Shard {
     load: AtomicU64,
     jobs_done: AtomicU64,
     busy_nanos: AtomicU64,
+    /// Fixed-footprint per-job busy-seconds distribution (the p95 line
+    /// in [`ShardMetrics::report`]); cache replays never record.
+    busy_hist: Mutex<LogHistogram>,
 }
 
 fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache) {
@@ -532,10 +575,12 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
             batch,
             index,
             cache_key,
+            trace,
         } = job;
         let outcome = if cancel.get().load(Relaxed) {
             SlotState::Cancelled
         } else {
+            let dispatch_start = trace.as_ref().map(|t| t.now_us());
             counters.enter_busy();
             let res = catch_unwind(AssertUnwindSafe(|| {
                 // The pooled warm storage; the guard releases on every
@@ -544,6 +589,7 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                 let cancel = cancel.get();
                 // Busy time starts after the arena is in hand, so it
                 // measures ordering work, not checkout waits.
+                let elim_start = trace.as_ref().map(|tr| tr.now_us());
                 let t = Timer::new();
                 let mut out = match &payload {
                     JobPayload::Direct(graph) => cfg
@@ -562,6 +608,8 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                                 mid_dense_postponed: r.stats.mid_dense_postponed,
                                 elements_absorbed: r.stats.elements_absorbed,
                                 rereduce_secs: r.stats.rereduce_secs,
+                                round_samples: r.stats.round_samples.clone(),
+                                claim_failures: r.stats.claim_failures,
                             };
                             let insert = cache_key.map(|_| done.to_cached());
                             (done, insert)
@@ -600,20 +648,41 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                             done.mid_dense_postponed = r.stats.mid_dense_postponed;
                             done.elements_absorbed = r.stats.elements_absorbed;
                             done.rereduce_secs = r.stats.rereduce_secs;
+                            done.round_samples = r.stats.round_samples.clone();
+                            done.claim_failures = r.stats.claim_failures;
                             let insert = cache_key.map(|_| kernel);
                             (done, insert)
                         }),
                 };
                 let elapsed = t.elapsed();
                 shard.busy_nanos.fetch_add(elapsed.as_nanos() as u64, Relaxed);
+                shard
+                    .busy_hist
+                    .lock()
+                    .unwrap()
+                    .record(elapsed.as_secs_f64());
                 if let Some((done, _)) = &mut out {
                     done.busy_secs = elapsed.as_secs_f64();
+                    if let (Some(tr), Some(s0)) = (&trace, elim_start) {
+                        tr.record("elimination", shard_lane(shard.id), s0);
+                        // Synthesized aggregate: the in-elimination sweep
+                        // total, nested at the elimination span's start.
+                        let sweep_us = (done.rereduce_secs * 1e6) as u64;
+                        if sweep_us > 0 {
+                            tr.record_at(
+                                "rereduce-sweeps",
+                                shard_lane(shard.id),
+                                s0,
+                                sweep_us,
+                            );
+                        }
+                    }
                 }
                 out
             }));
             shard.jobs_done.fetch_add(1, Relaxed);
             counters.exit_busy();
-            match res {
+            let outcome = match res {
                 Ok(Some((done, insert))) => {
                     counters.note_job_gc(done.gc_count, done.gc_secs);
                     counters.note_job_rereduce(
@@ -623,6 +692,7 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                         done.elements_absorbed,
                         done.rereduce_secs,
                     );
+                    counters.note_job_claim_failures(done.claim_failures);
                     if let (Some(key), Some(value)) = (cache_key, insert) {
                         // A miss inserts on completion; the payload is
                         // consumed into the entry's exact-verify copy.
@@ -641,13 +711,37 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                     SlotState::Done(done)
                 }
                 Ok(None) => SlotState::Cancelled,
-                Err(p) => SlotState::Panicked(panic_message(&p)),
+                // Tag the panic with the request id when the job carries
+                // a tagged trace, so a failed reply names its request.
+                Err(p) => SlotState::Panicked(match &trace {
+                    Some(tr) if tr.id() != 0 => panic_message_for(tr.id(), &p),
+                    _ => panic_message(&p),
+                }),
+            };
+            // The dispatch span wraps the elimination span (arena
+            // checkout + ordering + cache insert) on the shard's lane.
+            if let (Some(tr), Some(s0)) = (&trace, dispatch_start) {
+                tr.record("dispatch", shard_lane(shard.id), s0);
             }
+            outcome
         };
         shard.load.fetch_sub(weight as u64, Relaxed);
         // Resolve last: the submitter may drop the graph/cancel borrows
         // the moment its batch completes.
         batch.resolve(index, outcome);
+    }
+}
+
+/// Take a span start for [`engine_span`] — `None` when untraced, so the
+/// clock is never read on the untraced hot path.
+fn span_start(trace: Option<&Arc<RequestTrace>>) -> Option<u64> {
+    trace.map(|t| t.now_us())
+}
+
+/// Record `name` on [`LANE_ENGINE`] when the request carries a trace.
+fn engine_span(trace: Option<&Arc<RequestTrace>>, name: &'static str, start: Option<u64>) {
+    if let (Some(t), Some(s)) = (trace, start) {
+        t.record(name, LANE_ENGINE, s);
     }
 }
 
@@ -688,8 +782,10 @@ impl ShardEngine {
         let shards: Vec<Arc<Shard>> = spec
             .thread_plan()
             .into_iter()
-            .map(|t| {
+            .enumerate()
+            .map(|(id, t)| {
                 Arc::new(Shard {
+                    id,
                     threads: t,
                     rt: OrderingRuntime::new(t),
                     arenas: ArenaPool::new(),
@@ -697,6 +793,7 @@ impl ShardEngine {
                     load: AtomicU64::new(0),
                     jobs_done: AtomicU64::new(0),
                     busy_nanos: AtomicU64::new(0),
+                    busy_hist: Mutex::new(LogHistogram::default()),
                 })
             })
             .collect();
@@ -839,6 +936,7 @@ impl ShardEngine {
                 threads: s.threads,
                 jobs: s.jobs_done.load(Relaxed),
                 busy_secs: s.busy_nanos.load(Relaxed) as f64 / 1e9,
+                busy_p95_secs: s.busy_hist.lock().unwrap().quantile(0.95),
             })
             .collect();
         self.counters.snapshot(per_shard)
@@ -868,12 +966,30 @@ impl ShardEngine {
         cfg: ParAmd,
         cancel: &AtomicBool,
     ) -> Option<ShardReply> {
+        self.order_traced(g, cfg, cancel, None)
+    }
+
+    /// [`Self::order_cancellable`] with a flight recorder: every engine
+    /// phase (cc-split, reduce, cache-probe, route, stitch) records a
+    /// span on [`LANE_ENGINE`], and each dispatched job records its
+    /// dispatch/elimination spans on its shard's lane — so concurrent
+    /// component jobs render as parallel tracks in the Chrome trace.
+    /// `trace: None` is exactly the untraced path (no clock reads).
+    pub fn order_traced(
+        &self,
+        g: &SymGraph,
+        cfg: ParAmd,
+        cancel: &AtomicBool,
+        trace: Option<&Arc<RequestTrace>>,
+    ) -> Option<ShardReply> {
         self.counters.requests.fetch_add(1, Relaxed);
         // The engine-level sweep settings are imposed before the salt is
         // taken, so the cache identity always reflects what actually ran.
         let cfg = self.rereduce_config().apply(cfg);
         let salt = config_salt(&cfg);
+        let t0 = span_start(trace);
         let comps = connected_components(g);
+        engine_span(trace, "cc-split", t0);
         if comps.is_connected() {
             self.counters.components.fetch_add(1, Relaxed);
             self.counters.note_component(g.n);
@@ -892,10 +1008,13 @@ impl ShardEngine {
             // path. (Hits don't move the per-shard job counters: those
             // are the dispatched-work signal.)
             let request_key = if self.cache.is_enabled() && g.n > 0 && !cancel.load(Relaxed) {
+                let p0 = span_start(trace);
                 let request_salt =
                     crate::util::rng::splitmix64(salt ^ reduce_salt(&rcfg) ^ hybrid_salt(&hcfg));
                 let key = CacheKey::new(g, None, request_salt);
-                if let Some(hit) = self.cache.get(&key, g, None) {
+                let hit = self.cache.get(&key, g, None);
+                engine_span(trace, "cache-probe", p0);
+                if let Some(hit) = hit {
                     return Some(Self::reply_from_cached(hit));
                 }
                 Some(key)
@@ -903,19 +1022,21 @@ impl ShardEngine {
                 None
             };
             if hcfg.applies(g.n) && !cancel.load(Relaxed) {
+                let p0 = span_start(trace);
                 let t = Timer::new();
                 let plan = hybrid::plan(g, &hcfg);
                 self.counters
                     .partition_nanos
                     .fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
+                engine_span(trace, "partition", p0);
                 // A degenerate partition (no balanced cut) falls back to
                 // the single-job path — deterministically, so the
                 // hybrid-salted request entry stays coherent.
                 if let Some(plan) = plan {
-                    return self.order_hybrid(g, plan, cfg, cancel, salt, request_key);
+                    return self.order_hybrid(g, plan, cfg, cancel, salt, request_key, trace);
                 }
             }
-            return self.order_connected(g, cfg, cancel, salt, rcfg, request_key);
+            return self.order_connected(g, cfg, cancel, salt, rcfg, request_key, trace);
         }
 
         self.counters.decomposed.fetch_add(1, Relaxed);
@@ -923,10 +1044,14 @@ impl ShardEngine {
         for &s in &comps.sizes {
             self.counters.note_component(s);
         }
+        let p0 = span_start(trace);
         let parts = split_components(g, &comps);
-        let (results, reduced, _busy) = self.run_parts(parts, cfg, cancel, salt)?;
+        engine_span(trace, "split", p0);
+        let (results, tel) = self.run_parts(parts, cfg, cancel, salt, trace)?;
         let k = results.len();
+        let p0 = span_start(trace);
         let stitched = stitch::stitch(g.n, &results);
+        engine_span(trace, "stitch", p0);
         Some(ShardReply {
             perm: stitched.perm,
             rounds: stitched.rounds,
@@ -935,7 +1060,9 @@ impl ShardEngine {
             modeled_time: stitched.modeled_time,
             set_sizes: stitched.set_sizes,
             components: k,
-            reduced,
+            reduced: tel.reduced,
+            round_samples: tel.round_samples,
+            claim_failures: tel.claim_failures,
         })
     }
 
@@ -943,10 +1070,8 @@ impl ShardEngine {
     /// independent parts — the connected components of a decomposed
     /// request, or the subdomains / separator blocks of one hybrid
     /// phase — as one batch of shard jobs. Results come back in part
-    /// order; `None` means `cancel` fired. Alongside the results: the
-    /// total vertex count the reduction layer removed, and the
-    /// dispatcher busy seconds the batch's live jobs consumed (cache
-    /// hits contribute zero).
+    /// order; `None` means `cancel` fired. A [`PartsTelemetry`] rides
+    /// along with the batch-level observability aggregates.
     ///
     /// Reduction runs first (in parallel across parts) so routing works
     /// on post-reduction sizes. Per-part cache probe: a hit resolves
@@ -954,21 +1079,24 @@ impl ShardEngine {
     /// only misses become jobs (which insert on completion). All probes
     /// precede all enqueues, so resolution within a batch is
     /// deterministic.
-    #[allow(clippy::type_complexity)]
     fn run_parts(
         &self,
         parts: Vec<Component>,
         cfg: ParAmd,
         cancel: &AtomicBool,
         salt: u64,
-    ) -> Option<(Vec<ComponentResult>, usize, f64)> {
+        trace: Option<&Arc<RequestTrace>>,
+    ) -> Option<(Vec<ComponentResult>, PartsTelemetry)> {
+        let p0 = span_start(trace);
         let (payloads, works, reduced) = self.reduce_components(parts);
+        engine_span(trace, "reduce", p0);
         let k = payloads.len();
 
         let mut resolved: Vec<Option<CompDone>> = Vec::new();
         resolved.resize_with(k, || None);
         let mut keys: Vec<Option<CacheKey>> = vec![None; k];
         if self.cache.is_enabled() && !cancel.load(Relaxed) {
+            let p0 = span_start(trace);
             for (i, (payload, _)) in payloads.iter().enumerate() {
                 let (graph, weights): (&SymGraph, Option<&[i32]>) = match payload {
                     JobPayload::Direct(gr) => (gr.get(), None),
@@ -985,13 +1113,16 @@ impl ShardEngine {
                     None => keys[i] = Some(key),
                 }
             }
+            engine_span(trace, "cache-probe", p0);
         }
 
         let miss_works: Vec<u64> = (0..k)
             .filter(|&i| resolved[i].is_none())
             .map(|i| works[i])
             .collect();
+        let p0 = span_start(trace);
         let assign = router::plan(&miss_works, &self.loads(), &self.thread_counts());
+        engine_span(trace, "route", p0);
         let batch = Batch::new(miss_works.len());
         let mut comp_of_slot: Vec<usize> = Vec::with_capacity(miss_works.len());
         let mut old_maps: Vec<Vec<i32>> = Vec::with_capacity(k);
@@ -1010,6 +1141,7 @@ impl ShardEngine {
                 batch: Arc::clone(&batch),
                 index: slot,
                 cache_key: keys[i],
+                trace: trace.cloned(),
             };
             self.enqueue(assign[slot], job);
         }
@@ -1031,11 +1163,23 @@ impl ShardEngine {
         if cancelled {
             return None;
         }
-        let mut busy = 0.0f64;
+        let mut tel = PartsTelemetry {
+            reduced,
+            ..PartsTelemetry::default()
+        };
+        let mut dominant = 0usize;
         let mut results: Vec<ComponentResult> = Vec::with_capacity(k);
         for (i, done) in resolved.into_iter().enumerate() {
             let d = done.expect("every uncancelled part resolves");
-            busy += d.busy_secs;
+            tel.busy_secs += d.busy_secs;
+            tel.claim_failures += d.claim_failures;
+            // The reply surfaces the *dominant* part's decay curve (the
+            // request-level signal a caller plots); smaller parts keep
+            // theirs in the engine's aggregate counters.
+            if !d.round_samples.is_empty() && d.perm.len() > dominant {
+                dominant = d.perm.len();
+                tel.round_samples = d.round_samples;
+            }
             results.push(ComponentResult {
                 old_of_new: std::mem::take(&mut old_maps[i]),
                 perm: d.perm,
@@ -1046,7 +1190,7 @@ impl ShardEngine {
                 set_sizes: d.set_sizes,
             });
         }
-        Some((results, reduced, busy))
+        Some((results, tel))
     }
 
     /// A [`ShardReply`] replayed from a request-level cache entry.
@@ -1060,6 +1204,9 @@ impl ShardEngine {
             set_sizes: hit.set_sizes,
             components: 1,
             reduced: hit.reduced,
+            // A replay ran no elimination: no samples, no contention.
+            round_samples: Vec::new(),
+            claim_failures: 0,
         }
     }
 
@@ -1164,6 +1311,7 @@ impl ShardEngine {
     /// out across shards. The reduction layer runs first; when no rule
     /// fires the caller's graph is borrowed without a copy, exactly as
     /// before, so irreducible inputs keep the zero-copy bit-match path.
+    #[allow(clippy::too_many_arguments)]
     fn order_connected(
         &self,
         g: &SymGraph,
@@ -1172,14 +1320,17 @@ impl ShardEngine {
         salt: u64,
         rcfg: ReduceConfig,
         request_key: Option<CacheKey>,
+        trace: Option<&Arc<RequestTrace>>,
     ) -> Option<ShardReply> {
         let mut reduced = 0usize;
         let payload = if rcfg.is_enabled() && g.n > 0 {
+            let p0 = span_start(trace);
             let t = Timer::new();
             let plan = try_reduce(g, &rcfg);
             self.counters
                 .reduce_nanos
                 .fetch_add(t.elapsed().as_nanos() as u64, Relaxed);
+            engine_span(trace, "reduce", p0);
             match plan {
                 None => JobPayload::Direct(GraphRef::Borrowed(g as *const SymGraph)),
                 Some(plan) => {
@@ -1199,8 +1350,11 @@ impl ShardEngine {
         let mut cache_key: Option<CacheKey> = None;
         if let JobPayload::Reduced(plan) = &payload {
             if self.cache.is_enabled() && !cancel.load(Relaxed) {
+                let p0 = span_start(trace);
                 let key = CacheKey::new(&plan.kernel, Some(&plan.weights), salt);
-                if let Some(hit) = self.cache.get(&key, &plan.kernel, Some(&plan.weights)) {
+                let hit = self.cache.get(&key, &plan.kernel, Some(&plan.weights));
+                engine_span(trace, "cache-probe", p0);
+                if let Some(hit) = hit {
                     let d = expand_done(plan, &hit);
                     let reply = ShardReply {
                         perm: d.perm,
@@ -1211,6 +1365,8 @@ impl ShardEngine {
                         set_sizes: d.set_sizes,
                         components: 1,
                         reduced,
+                        round_samples: Vec::new(),
+                        claim_failures: 0,
                     };
                     self.insert_request_entry(request_key, g, &reply);
                     return Some(reply);
@@ -1224,7 +1380,9 @@ impl ShardEngine {
             }
             JobPayload::Direct(_) => router::work_estimate(g.n, g.nedges()),
         };
+        let p0 = span_start(trace);
         let s = router::pick_shard(work, &self.loads(), &self.thread_counts());
+        engine_span(trace, "route", p0);
         let batch = Batch::new(1);
         let job = ShardJob {
             payload,
@@ -1234,6 +1392,7 @@ impl ShardEngine {
             batch: Arc::clone(&batch),
             index: 0,
             cache_key,
+            trace: trace.cloned(),
         };
         self.enqueue(s, job);
         let mut slots = batch.wait();
@@ -1248,6 +1407,8 @@ impl ShardEngine {
                     set_sizes: d.set_sizes,
                     components: 1,
                     reduced,
+                    round_samples: d.round_samples,
+                    claim_failures: d.claim_failures,
                 };
                 self.insert_request_entry(request_key, g, &reply);
                 Some(reply)
@@ -1306,6 +1467,7 @@ impl ShardEngine {
     /// subdomain vertex, matching the ND partial order. Separator
     /// blocks that the reduction layer compresses run through the
     /// weighted ParAMD entry point exactly like reduced components.
+    #[allow(clippy::too_many_arguments)]
     fn order_hybrid(
         &self,
         g: &SymGraph,
@@ -1314,6 +1476,7 @@ impl ShardEngine {
         cancel: &AtomicBool,
         salt: u64,
         request_key: Option<CacheKey>,
+        trace: Option<&Arc<RequestTrace>>,
     ) -> Option<ShardReply> {
         self.counters.hybrid_requests.fetch_add(1, Relaxed);
         self.counters
@@ -1328,15 +1491,17 @@ impl ShardEngine {
         self.counters.hybrid_vertices.fetch_add(g.n as u64, Relaxed);
 
         let sub_parts = self.extract_parts(g, &plan.subdomains);
-        let (sub_results, sub_reduced, sub_busy) = self.run_parts(sub_parts, cfg, cancel, salt)?;
+        let (sub_results, sub_tel) = self.run_parts(sub_parts, cfg, cancel, salt, trace)?;
         self.counters
             .subdomain_busy_nanos
-            .fetch_add((sub_busy * 1e9) as u64, Relaxed);
+            .fetch_add((sub_tel.busy_secs * 1e9) as u64, Relaxed);
 
         let sep_parts = self.extract_parts(g, &plan.separators);
-        let (sep_results, sep_reduced, _sep_busy) = self.run_parts(sep_parts, cfg, cancel, salt)?;
+        let (sep_results, sep_tel) = self.run_parts(sep_parts, cfg, cancel, salt, trace)?;
 
+        let p0 = span_start(trace);
         let stitched = hybrid::stitch::stitch_hybrid(g.n, &sub_results, &sep_results);
+        engine_span(trace, "stitch", p0);
         let reply = ShardReply {
             perm: stitched.perm,
             rounds: stitched.rounds,
@@ -1345,7 +1510,11 @@ impl ShardEngine {
             modeled_time: stitched.modeled_time,
             set_sizes: stitched.set_sizes,
             components: 1,
-            reduced: sub_reduced + sep_reduced,
+            reduced: sub_tel.reduced + sep_tel.reduced,
+            // The dominant subdomain's decay curve stands in for the
+            // request (separator blocks are strictly smaller).
+            round_samples: sub_tel.round_samples,
+            claim_failures: sub_tel.claim_failures + sep_tel.claim_failures,
         };
         self.insert_request_entry(request_key, g, &reply);
         Some(reply)
@@ -1754,6 +1923,73 @@ mod tests {
             1,
             "the repeat never re-partitions"
         );
+    }
+
+    #[test]
+    fn reply_round_samples_close_the_books_and_replays_are_empty() {
+        let g = mesh2d(18, 18);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let rep = engine.order(&g, ParAmd::new(1));
+        let weight: u64 = rep.round_samples.iter().map(|s| u64::from(s.weight)).sum();
+        assert_eq!(weight as usize, g.n, "samples account for every column");
+        let pivots: u64 = rep.round_samples.iter().map(|s| u64::from(s.pivots)).sum();
+        assert!(pivots > 0);
+        let m = engine.metrics();
+        assert!(
+            m.per_shard.iter().any(|s| s.busy_p95_secs > 0.0),
+            "the live job must land in a shard's busy histogram"
+        );
+        assert!(m.report().contains("p95="));
+        // The cached replay ran no elimination: honestly empty samples.
+        let again = engine.order(&g, ParAmd::new(1));
+        assert!(again.round_samples.is_empty());
+        assert_eq!(again.claim_failures, 0);
+    }
+
+    #[test]
+    fn decomposed_reply_surfaces_the_dominant_components_samples() {
+        let g = multi_component(5, &[40, 90, 17]);
+        let engine = ShardEngine::new(ShardSpec::new(2, 2, 1));
+        let rep = engine.order(&g, ParAmd::new(2));
+        assert!(
+            !rep.round_samples.is_empty(),
+            "a live decomposed request must carry a decay curve"
+        );
+        let weight: u64 = rep.round_samples.iter().map(|s| u64::from(s.weight)).sum();
+        assert!(
+            weight > 0 && weight <= 90,
+            "dominant component's kernel weight, got {weight}"
+        );
+    }
+
+    #[test]
+    fn traced_request_records_engine_and_shard_spans() {
+        let g = multi_component(4, &[30, 50]);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let trace = Arc::new(RequestTrace::new());
+        let cancel = AtomicBool::new(false);
+        let rep = engine
+            .order_traced(&g, ParAmd::new(1), &cancel, Some(&trace))
+            .expect("uncancelled run completes");
+        assert!(is_valid_perm(&rep.perm));
+        let spans = trace.spans();
+        for name in ["cc-split", "split", "reduce", "cache-probe", "route", "stitch"] {
+            assert!(
+                spans.iter().any(|s| s.name == name && s.lane == LANE_ENGINE),
+                "missing engine span {name}: {spans:?}"
+            );
+        }
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.name == "elimination" && s.lane >= shard_lane(0)),
+            "shard lanes must record eliminations: {spans:?}"
+        );
+        assert!(trace.invariant_violations().is_empty());
+        // The untraced entry point records nothing and still works.
+        let cached = engine.order_cancellable(&g, ParAmd::new(1), &cancel);
+        assert!(cached.is_some());
+        assert_eq!(trace.spans().len(), spans.len());
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Pull-based metrics exposition: render a
+//! [`Metrics`](crate::coordinator::Metrics) snapshot as Prometheus text
+//! format ([`prometheus`]) or as one JSON document ([`json_snapshot`]).
+//!
+//! Both renderers are pure functions over the snapshot — no I/O, no
+//! global registry — so they cost O(methods + shards) per call and
+//! nothing between calls. Latency quantiles come from the fixed-footprint
+//! [`LogHistogram`](crate::util::stats::LogHistogram)s inside
+//! [`MethodMetrics`](crate::coordinator::MethodMetrics), rendered as
+//! Prometheus *summaries* (`quantile` labels plus exact `_sum`/`_count`).
+//!
+//! The serve CLI prints the Prometheus page under `--metrics-every N`;
+//! a scrape endpoint would serve the same string verbatim.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::Metrics;
+
+/// The `quantile` labels every latency summary exposes.
+const SUMMARY_QUANTILES: [f64; 3] = [0.5, 0.95, 0.99];
+
+fn help(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+/// Render the snapshot in Prometheus text exposition format (one page of
+/// `paramd_*` families). Counters end in `_total`, gauges don't;
+/// per-method latencies are summaries with `quantile` labels.
+pub fn prometheus(m: &Metrics) -> String {
+    let mut out = String::with_capacity(4096);
+
+    help(&mut out, "paramd_requests_total", "counter", "Requests recorded, by ordering method.");
+    for (name, e) in m.iter() {
+        let _ = writeln!(out, "paramd_requests_total{{method=\"{name}\"}} {}", e.requests);
+    }
+
+    help(
+        &mut out,
+        "paramd_request_latency_seconds",
+        "summary",
+        "End-to-end request latency (queue wait + service).",
+    );
+    for (name, e) in m.iter() {
+        for q in SUMMARY_QUANTILES {
+            let _ = writeln!(
+                out,
+                "paramd_request_latency_seconds{{method=\"{name}\",quantile=\"{q}\"}} {}",
+                e.latency_quantile(q)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "paramd_request_latency_seconds_sum{{method=\"{name}\"}} {}",
+            e.latency_sum()
+        );
+        let _ = writeln!(
+            out,
+            "paramd_request_latency_seconds_count{{method=\"{name}\"}} {}",
+            e.requests
+        );
+    }
+
+    help(
+        &mut out,
+        "paramd_request_wait_seconds",
+        "summary",
+        "Time queued before a scheduler picked the request up.",
+    );
+    for (name, e) in m.iter() {
+        for q in SUMMARY_QUANTILES {
+            let _ = writeln!(
+                out,
+                "paramd_request_wait_seconds{{method=\"{name}\",quantile=\"{q}\"}} {}",
+                e.wait_quantile(q)
+            );
+        }
+    }
+
+    help(&mut out, "paramd_fill_in_total", "counter", "Accumulated fill-in, by method.");
+    for (name, e) in m.iter() {
+        let _ = writeln!(out, "paramd_fill_in_total{{method=\"{name}\"}} {}", e.total_fill);
+    }
+
+    let p = &m.pipeline;
+    help(&mut out, "paramd_pipeline_submitted_total", "counter", "Tickets accepted by submit.");
+    let _ = writeln!(out, "paramd_pipeline_submitted_total {}", p.submitted);
+    help(&mut out, "paramd_pipeline_completed_total", "counter", "Requests that produced a reply.");
+    let _ = writeln!(out, "paramd_pipeline_completed_total {}", p.completed);
+    help(&mut out, "paramd_pipeline_cancelled_total", "counter", "Requests cancelled before completion.");
+    let _ = writeln!(out, "paramd_pipeline_cancelled_total {}", p.cancelled);
+    help(&mut out, "paramd_pipeline_failed_total", "counter", "Requests whose processing panicked.");
+    let _ = writeln!(out, "paramd_pipeline_failed_total {}", p.failed);
+    help(&mut out, "paramd_queue_depth", "gauge", "Queue depth at snapshot time.");
+    let _ = writeln!(out, "paramd_queue_depth {}", p.queue_depth);
+    help(&mut out, "paramd_queue_depth_peak", "gauge", "Highest queue depth observed.");
+    let _ = writeln!(out, "paramd_queue_depth_peak {}", p.queue_depth_peak);
+    help(&mut out, "paramd_arena_evictions_total", "counter", "Arenas dropped by the pool policy.");
+    let _ = writeln!(out, "paramd_arena_evictions_total {}", p.arena_evictions);
+
+    let sh = &m.shards;
+    help(&mut out, "paramd_engine_requests_total", "counter", "Requests routed through the shard engine.");
+    let _ = writeln!(out, "paramd_engine_requests_total {}", sh.requests);
+    help(&mut out, "paramd_engine_components_total", "counter", "Component orderings served.");
+    let _ = writeln!(out, "paramd_engine_components_total {}", sh.components);
+    help(&mut out, "paramd_engine_busy_peak", "gauge", "Most shards observed busy at once.");
+    let _ = writeln!(out, "paramd_engine_busy_peak {}", sh.busy_peak);
+    help(&mut out, "paramd_gc_collections_total", "counter", "Stop-the-world quotient-graph GCs.");
+    let _ = writeln!(out, "paramd_gc_collections_total {}", sh.gc_count);
+    help(&mut out, "paramd_gc_seconds_total", "counter", "Seconds frozen inside those GCs.");
+    let _ = writeln!(out, "paramd_gc_seconds_total {}", sh.gc_secs);
+    help(&mut out, "paramd_rereduce_passes_total", "counter", "Mid-elimination re-reduction sweeps.");
+    let _ = writeln!(out, "paramd_rereduce_passes_total {}", sh.rereduce_passes);
+    help(&mut out, "paramd_rereduce_seconds_total", "counter", "Seconds inside those sweeps.");
+    let _ = writeln!(out, "paramd_rereduce_seconds_total {}", sh.rereduce_secs);
+    help(
+        &mut out,
+        "paramd_claim_failures_total",
+        "counter",
+        "Elbow claim failures (memory contention) across all jobs.",
+    );
+    let _ = writeln!(out, "paramd_claim_failures_total {}", sh.claim_failures);
+
+    help(&mut out, "paramd_shard_jobs_total", "counter", "Ordering jobs executed, by shard.");
+    for (i, st) in sh.per_shard.iter().enumerate() {
+        let _ = writeln!(out, "paramd_shard_jobs_total{{shard=\"{i}\"}} {}", st.jobs);
+    }
+    help(&mut out, "paramd_shard_busy_seconds_total", "counter", "Dispatcher busy seconds, by shard.");
+    for (i, st) in sh.per_shard.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "paramd_shard_busy_seconds_total{{shard=\"{i}\"}} {}",
+            st.busy_secs
+        );
+    }
+    help(
+        &mut out,
+        "paramd_shard_busy_p95_seconds",
+        "gauge",
+        "Approximate p95 of per-job busy seconds, by shard.",
+    );
+    for (i, st) in sh.per_shard.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "paramd_shard_busy_p95_seconds{{shard=\"{i}\"}} {}",
+            st.busy_p95_secs
+        );
+    }
+
+    let c = &m.cache;
+    help(&mut out, "paramd_cache_hits_total", "counter", "Result-cache verified hits.");
+    let _ = writeln!(out, "paramd_cache_hits_total {}", c.hits);
+    help(&mut out, "paramd_cache_misses_total", "counter", "Result-cache misses (verify-rejects included).");
+    let _ = writeln!(out, "paramd_cache_misses_total {}", c.misses);
+    help(&mut out, "paramd_cache_evictions_total", "counter", "Entries dropped by the LRU byte budget.");
+    let _ = writeln!(out, "paramd_cache_evictions_total {}", c.evictions);
+    help(&mut out, "paramd_cache_bytes", "gauge", "Result-cache resident bytes.");
+    let _ = writeln!(out, "paramd_cache_bytes {}", c.bytes);
+    help(&mut out, "paramd_cache_budget_bytes", "gauge", "Result-cache byte budget (0 = disabled).");
+    let _ = writeln!(out, "paramd_cache_budget_bytes {}", c.budget_bytes);
+    help(&mut out, "paramd_cache_saved_seconds_total", "counter", "Modeled ordering seconds short-circuited by hits.");
+    let _ = writeln!(out, "paramd_cache_saved_seconds_total {}", c.saved_secs);
+
+    out
+}
+
+/// Render a finite float as JSON (JSON has no NaN/Inf; degenerate values
+/// collapse to 0).
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "0".into()
+    }
+}
+
+/// Render the snapshot as one JSON document (the machine-readable twin of
+/// [`prometheus`]); always passes [`crate::telemetry::validate_json`].
+pub fn json_snapshot(m: &Metrics) -> String {
+    let mut out = String::with_capacity(2048);
+    out.push_str("{\"methods\":[");
+    for (i, (name, e)) in m.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"method\":\"{name}\",\"requests\":{},\"mean_latency\":{},\
+             \"p95_latency\":{},\"mean_wait\":{},\"mean_service\":{},\"fill\":{}}}",
+            e.requests,
+            jf(e.mean_latency()),
+            jf(e.p95_latency()),
+            jf(e.mean_wait()),
+            jf(e.mean_service()),
+            e.total_fill
+        );
+    }
+    let p = &m.pipeline;
+    let _ = write!(
+        out,
+        "],\"pipeline\":{{\"submitted\":{},\"completed\":{},\"cancelled\":{},\
+         \"failed\":{},\"queue_depth\":{},\"queue_depth_peak\":{},\
+         \"arena_evictions\":{}}}",
+        p.submitted, p.completed, p.cancelled, p.failed, p.queue_depth, p.queue_depth_peak,
+        p.arena_evictions
+    );
+    let sh = &m.shards;
+    let _ = write!(
+        out,
+        ",\"shards\":{{\"requests\":{},\"components\":{},\"busy_peak\":{},\
+         \"gc_count\":{},\"gc_secs\":{},\"rereduce_passes\":{},\
+         \"claim_failures\":{},\"per_shard\":[",
+        sh.requests,
+        sh.components,
+        sh.busy_peak,
+        sh.gc_count,
+        jf(sh.gc_secs),
+        sh.rereduce_passes,
+        sh.claim_failures
+    );
+    for (i, st) in sh.per_shard.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"shard\":{i},\"threads\":{},\"jobs\":{},\"busy_secs\":{},\
+             \"busy_p95_secs\":{}}}",
+            st.threads,
+            st.jobs,
+            jf(st.busy_secs),
+            jf(st.busy_p95_secs)
+        );
+    }
+    let c = &m.cache;
+    let _ = write!(
+        out,
+        "]}},\"cache\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\
+         \"bytes\":{},\"budget_bytes\":{},\"saved_secs\":{}}}}}",
+        c.hits,
+        c.misses,
+        c.evictions,
+        c.bytes,
+        c.budget_bytes,
+        jf(c.saved_secs)
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_metrics() -> Metrics {
+        let mut m = Metrics::default();
+        m.record_split("paramd", 0.1, 0.4, Some(100));
+        m.record_split("paramd", 0.2, 0.3, Some(50));
+        m.record("amd", 0.25, None);
+        m.pipeline.submitted = 3;
+        m.pipeline.completed = 2;
+        m.shards.requests = 3;
+        m.shards.claim_failures = 7;
+        m.shards.per_shard.push(crate::ordering::shard::ShardStat {
+            threads: 4,
+            jobs: 3,
+            busy_secs: 0.5,
+            busy_p95_secs: 0.2,
+        });
+        m.cache.hits = 1;
+        m.cache.budget_bytes = 1 << 20;
+        m
+    }
+
+    #[test]
+    fn prometheus_page_exposes_every_family() {
+        let page = prometheus(&sample_metrics());
+        for family in [
+            "paramd_requests_total{method=\"paramd\"} 2",
+            "paramd_request_latency_seconds{method=\"paramd\",quantile=\"0.95\"}",
+            "paramd_request_latency_seconds_count{method=\"paramd\"} 2",
+            "paramd_pipeline_submitted_total 3",
+            "paramd_queue_depth 0",
+            "paramd_claim_failures_total 7",
+            "paramd_shard_jobs_total{shard=\"0\"} 3",
+            "paramd_shard_busy_p95_seconds{shard=\"0\"} 0.2",
+            "paramd_cache_hits_total 1",
+        ] {
+            assert!(page.contains(family), "missing {family:?} in:\n{page}");
+        }
+        // Every non-comment line is `name[{labels}] value`.
+        for line in page.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(name.starts_with("paramd_"), "family prefix: {line}");
+            assert!(value.parse::<f64>().is_ok(), "numeric value: {line}");
+        }
+    }
+
+    #[test]
+    fn latency_summary_sum_is_exact() {
+        let m = sample_metrics();
+        let page = prometheus(&m);
+        let sum_line = page
+            .lines()
+            .find(|l| l.starts_with("paramd_request_latency_seconds_sum{method=\"paramd\"}"))
+            .unwrap();
+        let v: f64 = sum_line.rsplit_once(' ').unwrap().1.parse().unwrap();
+        assert!((v - 1.0).abs() < 1e-9, "0.5 + 0.5 = 1.0 exactly: {sum_line}");
+    }
+
+    #[test]
+    fn json_snapshot_is_valid_and_carries_the_counters() {
+        let j = json_snapshot(&sample_metrics());
+        crate::telemetry::validate_json(&j).expect("snapshot must be valid JSON");
+        assert!(j.contains("\"method\":\"paramd\""));
+        assert!(j.contains("\"claim_failures\":7"));
+        assert!(j.contains("\"busy_p95_secs\":0.2"));
+        // Empty metrics render a valid document too.
+        crate::telemetry::validate_json(&json_snapshot(&Metrics::default())).unwrap();
+    }
+}

@@ -1,0 +1,216 @@
+//! End-to-end request telemetry: the per-request flight recorder and the
+//! fixed-footprint metrics exposition.
+//!
+//! Two halves, both bounded in memory no matter how many requests flow:
+//!
+//! - [`trace`] — the **flight recorder**: a [`RequestTrace`] of
+//!   timestamped spans (queued → preprocess → cc-split → reduce →
+//!   cache-probe → route → per-shard dispatch → elimination → rereduce
+//!   sweeps → stitch → fill) carried with every pipeline ticket and
+//!   renderable as Chrome trace-event JSON
+//!   ([`RequestTrace::to_chrome_json`]) for Perfetto / `about:tracing`.
+//! - [`export`] — pull-based **exposition** of the coordinator's
+//!   [`Metrics`](crate::coordinator::Metrics) snapshot: Prometheus text
+//!   format ([`export::prometheus`]) and a JSON document
+//!   ([`export::json_snapshot`]). Latency series behind these renderers
+//!   are log-bucketed [`LogHistogram`](crate::util::stats::LogHistogram)s,
+//!   so exposition cost and storage are constant in the request count.
+//!
+//! The serve CLI wires both up: `--metrics-every N` prints the
+//! Prometheus page every N completions, `--trace-dir D` (with
+//! `--trace-slow-ms`) dumps slow requests' Chrome traces into `D`.
+
+pub mod export;
+pub mod trace;
+
+pub use trace::{shard_lane, RequestTrace, SpanRecord, LANE_ENGINE, LANE_PIPELINE};
+
+/// Structural JSON validation (no deserialization): checks that `s` is
+/// exactly one well-formed JSON value. Used by tests and the CI smoke to
+/// guarantee the hand-rolled renderers ([`RequestTrace::to_chrome_json`],
+/// [`export::json_snapshot`]) always emit parseable documents.
+pub fn validate_json(s: &str) -> Result<(), String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    skip_ws(b, &mut i);
+    parse_value(b, &mut i)?;
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing garbage at byte {i}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> Result<(), String> {
+    match b.get(*i) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => parse_object(b, i),
+        Some(b'[') => parse_array(b, i),
+        Some(b'"') => parse_string(b, i),
+        Some(b't') => parse_lit(b, i, "true"),
+        Some(b'f') => parse_lit(b, i, "false"),
+        Some(b'n') => parse_lit(b, i, "null"),
+        Some(c) if *c == b'-' || c.is_ascii_digit() => parse_number(b, i),
+        Some(c) => Err(format!("unexpected byte {:?} at {}", *c as char, *i)),
+    }
+}
+
+fn parse_lit(b: &[u8], i: &mut usize, lit: &str) -> Result<(), String> {
+    if b[*i..].starts_with(lit.as_bytes()) {
+        *i += lit.len();
+        Ok(())
+    } else {
+        Err(format!("bad literal at byte {}", *i))
+    }
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<(), String> {
+    *i += 1; // opening quote
+    while let Some(&c) = b.get(*i) {
+        match c {
+            b'"' => {
+                *i += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                *i += 2; // escape + escaped byte (\uXXXX hex is benign)
+            }
+            _ => *i += 1,
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn parse_number(b: &[u8], i: &mut usize) -> Result<(), String> {
+    let start = *i;
+    if b.get(*i) == Some(&b'-') {
+        *i += 1;
+    }
+    let digits = |b: &[u8], i: &mut usize| {
+        let s = *i;
+        while matches!(b.get(*i), Some(c) if c.is_ascii_digit()) {
+            *i += 1;
+        }
+        *i > s
+    };
+    if !digits(b, i) {
+        return Err(format!("bad number at byte {start}"));
+    }
+    if b.get(*i) == Some(&b'.') {
+        *i += 1;
+        if !digits(b, i) {
+            return Err(format!("bad fraction at byte {start}"));
+        }
+    }
+    if matches!(b.get(*i), Some(b'e' | b'E')) {
+        *i += 1;
+        if matches!(b.get(*i), Some(b'+' | b'-')) {
+            *i += 1;
+        }
+        if !digits(b, i) {
+            return Err(format!("bad exponent at byte {start}"));
+        }
+    }
+    Ok(())
+}
+
+fn parse_array(b: &[u8], i: &mut usize) -> Result<(), String> {
+    *i += 1; // '['
+    skip_ws(b, i);
+    if b.get(*i) == Some(&b']') {
+        *i += 1;
+        return Ok(());
+    }
+    loop {
+        parse_value(b, i)?;
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => {
+                *i += 1;
+                skip_ws(b, i);
+            }
+            Some(b']') => {
+                *i += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or ']' at byte {}", *i)),
+        }
+    }
+}
+
+fn parse_object(b: &[u8], i: &mut usize) -> Result<(), String> {
+    *i += 1; // '{'
+    skip_ws(b, i);
+    if b.get(*i) == Some(&b'}') {
+        *i += 1;
+        return Ok(());
+    }
+    loop {
+        if b.get(*i) != Some(&b'"') {
+            return Err(format!("expected object key at byte {}", *i));
+        }
+        parse_string(b, i)?;
+        skip_ws(b, i);
+        if b.get(*i) != Some(&b':') {
+            return Err(format!("expected ':' at byte {}", *i));
+        }
+        *i += 1;
+        skip_ws(b, i);
+        parse_value(b, i)?;
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => {
+                *i += 1;
+                skip_ws(b, i);
+            }
+            Some(b'}') => {
+                *i += 1;
+                return Ok(());
+            }
+            _ => return Err(format!("expected ',' or '}}' at byte {}", *i)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_json_accepts_well_formed_documents() {
+        for ok in [
+            "{}",
+            "[]",
+            "0",
+            "-1.5e-3",
+            "\"x\"",
+            "true",
+            " {\"a\": [1, 2.5, {\"b\": null}], \"c\": \"d\\\"e\"} ",
+        ] {
+            validate_json(ok).unwrap_or_else(|e| panic!("{ok:?} rejected: {e}"));
+        }
+    }
+
+    #[test]
+    fn validate_json_rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "{} {}",
+            "1.",
+            "\"unterminated",
+            "{a: 1}",
+        ] {
+            assert!(validate_json(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

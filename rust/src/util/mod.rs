@@ -22,6 +22,12 @@ pub fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// [`panic_message`] prefixed with the request id (the service's submit
+/// counter), so a `failed` ticket is attributable in logs and traces.
+pub fn panic_message_for(req_id: u64, p: &(dyn std::any::Any + Send)) -> String {
+    format!("req {req_id}: {}", panic_message(p))
+}
+
 /// Split `n` items into `t` contiguous chunks as evenly as possible and
 /// return the `[start, end)` range of chunk `tid`.
 ///
@@ -40,6 +46,14 @@ pub fn chunk_range(n: usize, t: usize, tid: usize) -> (usize, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn panic_message_carries_request_id() {
+        let payload: Box<dyn std::any::Any + Send> = Box::new("boom".to_string());
+        assert_eq!(panic_message_for(42, payload.as_ref()), "req 42: boom");
+        let opaque: Box<dyn std::any::Any + Send> = Box::new(3usize);
+        assert_eq!(panic_message_for(7, opaque.as_ref()), "req 7: unknown panic");
+    }
 
     #[test]
     fn ceil_div_basic() {

@@ -20,19 +20,153 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Linear-interpolated percentile, `q` in [0, 100]. Sorts a copy.
+///
+/// Total-order safe: `0.0` for an empty slice (never panics), `q` is
+/// clamped to [0, 100], and NaN samples sort to the top via `total_cmp`
+/// instead of panicking the comparator.
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pos = q / 100.0 * (v.len() - 1) as f64;
+    v.sort_by(f64::total_cmp);
+    let pos = (q / 100.0).clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     if lo == hi {
         v[lo]
     } else {
         v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Number of buckets of a [`LogHistogram`] (fixed: the whole struct is
+/// inline, no heap).
+pub const LOG_HIST_BUCKETS: usize = 128;
+
+/// Smallest distinguishable value of a [`LogHistogram`]; everything at or
+/// below it (and every non-finite sample) lands in bucket 0.
+const LOG_HIST_MIN: f64 = 1e-9;
+
+/// Largest bucket edge; ~`1e9` with 128 buckets. Values beyond it clamp
+/// into the last bucket.
+const LOG_HIST_SPAN: f64 = 1e18;
+
+/// A fixed-footprint, mergeable, log-bucketed histogram for latency-style
+/// positive samples.
+///
+/// `LOG_HIST_BUCKETS` buckets span `[1e-9, 1e9]` seconds with geometric
+/// width (~38% per bucket), so memory is **constant in the sample count**
+/// — the replacement for unbounded `Vec<f64>` latency logs. The exact
+/// `sum`/`count`/`min`/`max` ride along, so [`Self::mean`] is exact and
+/// only the interior of [`Self::quantile`] is approximate (to within one
+/// bucket's relative width).
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; LOG_HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self {
+            counts: [0; LOG_HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Bucket index of `v` (clamped; non-finite and non-positive samples
+    /// land in bucket 0).
+    fn bucket(v: f64) -> usize {
+        if !v.is_finite() || v <= LOG_HIST_MIN {
+            return 0;
+        }
+        let ln_growth = LOG_HIST_SPAN.ln() / LOG_HIST_BUCKETS as f64;
+        let b = ((v / LOG_HIST_MIN).ln() / ln_growth) as usize;
+        b.min(LOG_HIST_BUCKETS - 1)
+    }
+
+    /// Low edge of bucket `b`.
+    fn edge(b: usize) -> f64 {
+        let ln_growth = LOG_HIST_SPAN.ln() / LOG_HIST_BUCKETS as f64;
+        LOG_HIST_MIN * (ln_growth * b as f64).exp()
+    }
+
+    /// Record one sample. O(1), allocation-free.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() { v } else { 0.0 };
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold `other` into `self` (both keep constant footprint).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Exact sum of all samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact mean (0 when empty) — sum and count are carried exactly, so
+    /// this does not suffer bucket quantization.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile, `q` in [0, 1]: cumulative walk over the
+    /// buckets with linear interpolation inside the target bucket,
+    /// clamped to the exact observed `[min, max]`. 0 when empty; accurate
+    /// to within one bucket's geometric width (~38%) in the interior and
+    /// exact at q=0 / q=1.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = q * (self.count - 1) as f64;
+        let mut below = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (below + c) as f64 > rank {
+                // Interpolate within bucket b by rank position.
+                let frac = ((rank - below as f64) / c as f64).clamp(0.0, 1.0);
+                let lo = Self::edge(b);
+                let hi = Self::edge(b + 1);
+                return (lo + frac * (hi - lo)).clamp(self.min, self.max);
+            }
+            below += c;
+        }
+        self.max
     }
 }
 
@@ -141,5 +275,111 @@ mod tests {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert!((frac_below(&xs, 3.0) - 0.5).abs() < 1e-12);
         assert_eq!(frac_below(&[], 3.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_tiny_inputs_and_extremes() {
+        // 0-element: safe zero, any q.
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        // 1-element: every q is that element.
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 50.0), 7.5);
+        assert_eq!(percentile(&[7.5], 100.0), 7.5);
+        // 2-element: p0/p100 are the ends, p50 interpolates halfway.
+        assert_eq!(percentile(&[2.0, 10.0], 0.0), 2.0);
+        assert_eq!(percentile(&[2.0, 10.0], 100.0), 10.0);
+        assert!((percentile(&[2.0, 10.0], 50.0) - 6.0).abs() < 1e-12);
+        // Out-of-range q clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&[1.0, 2.0], -5.0), 1.0);
+        assert_eq!(percentile(&[1.0, 2.0], 250.0), 2.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_samples() {
+        // total_cmp sorts NaN to the top instead of panicking.
+        let xs = [3.0, f64::NAN, 1.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+    }
+
+    #[test]
+    fn log_histogram_mean_is_exact() {
+        let mut h = LogHistogram::default();
+        for v in [0.5, 1.0, 1.5] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 1.0).abs() < 1e-12, "mean carries exact sum");
+        assert!((h.sum() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_within_one_bucket_of_exact() {
+        // 10k synthetic samples over 5 decades; the histogram quantile
+        // must stay within one geometric bucket (~38% relative) of the
+        // exact percentile.
+        let mut h = LogHistogram::default();
+        let mut xs = Vec::new();
+        let mut state = 0x9E3779B97F4A7C15u64;
+        for _ in 0..10_000 {
+            state = crate::util::rng::splitmix64(state);
+            // Log-uniform in [1e-4, 10).
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64;
+            let v = 1e-4 * 10f64.powf(5.0 * u);
+            xs.push(v);
+            h.record(v);
+        }
+        let bucket_ratio = (LOG_HIST_SPAN.ln() / LOG_HIST_BUCKETS as f64).exp();
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99] {
+            let exact = percentile(&xs, q * 100.0);
+            let approx = h.quantile(q);
+            let ratio = approx / exact;
+            assert!(
+                ratio < bucket_ratio * 1.01 && ratio > 1.0 / (bucket_ratio * 1.01),
+                "q={q}: approx {approx:.6} vs exact {exact:.6} (ratio {ratio:.3})"
+            );
+        }
+        // Extremes are exact (clamped to observed min/max).
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(h.quantile(0.0), lo);
+        assert_eq!(h.quantile(1.0), hi);
+    }
+
+    #[test]
+    fn log_histogram_merge_equals_combined_recording() {
+        let mut a = LogHistogram::default();
+        let mut b = LogHistogram::default();
+        let mut all = LogHistogram::default();
+        for i in 0..500 {
+            let v = 1e-3 * (1.0 + i as f64);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert!((a.sum() - all.sum()).abs() < 1e-9);
+        for q in [0.0, 0.25, 0.5, 0.9, 1.0] {
+            assert_eq!(a.quantile(q), all.quantile(q), "merge must be lossless");
+        }
+    }
+
+    #[test]
+    fn log_histogram_handles_degenerate_samples() {
+        let mut h = LogHistogram::default();
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        h.record(1e30); // beyond the last edge: clamps, never panics
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile(0.5).is_finite());
+        let empty = LogHistogram::default();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        assert_eq!(empty.mean(), 0.0);
     }
 }
