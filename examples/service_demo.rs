@@ -13,11 +13,15 @@
 //! the **telemetry** view of one request: its flight-recorder trace
 //! (submit → fetch the ticket's `RequestTrace` → render Chrome
 //! trace-event JSON), the per-round elimination samples in the reply,
-//! and the Prometheus exposition of the service metrics.
+//! and the Prometheus exposition of the service metrics. The final
+//! section walks the **failure modes & overload behavior**: admission
+//! control shedding a burst past the in-flight budget, a dead-on-arrival
+//! deadline resolving to a typed error instead of running, and
+//! quality-shedding ordering small components inline under pressure.
 //!
 //! Run: `cargo run --release --example service_demo`
 
-use paramd::coordinator::{Method, OrderRequest, Service, SolveSpec};
+use paramd::coordinator::{Method, OrderRequest, Service, SolveSpec, SubmitOptions};
 use paramd::matgen::{self, Scale};
 
 fn main() {
@@ -343,6 +347,95 @@ fn main() {
     for line in shown {
         println!("    {line}");
     }
+
+    println!("\n== failure modes & overload behavior ==");
+    // The service sheds load instead of queueing it without bound. With
+    // a global in-flight budget (CLI: `--max-inflight`; per-caller token
+    // quotas via `--quota RATE[:BURST]`), `try_submit` answers
+    // immediately: `Ok(ticket)` or a typed `OrderError::Rejected` whose
+    // `retry_after_hint` sizes the backoff and whose `Rejection` hands
+    // the request back untouched for a zero-clone retry. Deadlines
+    // (`--deadline-ms`, `SubmitOptions::with_deadline_in`) ride with the
+    // request and are checked at every stage boundary — preprocess,
+    // reduce, cache probe, dispatch, and between elimination rounds — so
+    // expired work resolves its ticket to `OrderError::DeadlineExceeded`
+    // rather than burning a core. `wait_result()` surfaces all of this
+    // as a `Result`; the plain `wait()` used above is the panicking
+    // shim. Under `--shed-quality` the engine degrades quality before
+    // availability: hybrid partitioning off, re-reduction sweeps off,
+    // small components ordered inline by sequential AMD (each shed shows
+    // up in the shard metrics and the request trace). Named failpoints
+    // (`--failpoints`, env `PARAMD_FAILPOINTS`) inject panics, latency,
+    // and verify-rejects at those same seams; the chaos suite uses them
+    // to prove one poisoned request never wedges the service.
+    let guarded = Service::new(1)
+        .with_scheduler_threads(1)
+        .with_queue_cap(4)
+        .with_max_inflight(2);
+    let big = paramd::matgen::mesh2d(60, 60);
+    let mk = || OrderRequest {
+        matrix: None,
+        pattern: Some(big.clone()),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    };
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for i in 0..6 {
+        match guarded.try_submit(mk()) {
+            Ok(t) => accepted.push((i, t)),
+            Err(r) => {
+                shed += 1;
+                println!("  request {i}: {}", r.error);
+            }
+        }
+    }
+    println!("  burst of 6 under a 2-request budget: {} accepted, {shed} shed", accepted.len());
+    for (i, t) in accepted {
+        match t.wait_result() {
+            Ok(rep) => println!("  request {i}: n={} {:.5}s", rep.perm.len(), rep.order_secs),
+            Err(e) => println!("  request {i}: {e}"),
+        }
+    }
+    // A deadline that has already lapsed never reaches a worker: the
+    // first stage boundary resolves the ticket to the typed error.
+    let doa = guarded.submit_opts(
+        mk(),
+        &SubmitOptions::default().with_deadline_in(std::time::Duration::ZERO),
+    );
+    match doa.wait_result() {
+        Err(e) => println!("  dead-on-arrival deadline: {e}"),
+        Ok(_) => println!("  (request beat its zero deadline)"),
+    }
+    // Quality shedding: with the threshold at 0 every request sheds, so
+    // these four small components order inline — no jobs dispatched.
+    let degraded = Service::new(1).with_shed_quality(true).with_shed_threshold(0);
+    let rep = degraded.order(&OrderRequest {
+        matrix: None,
+        pattern: Some(paramd::matgen::multi_component(4, &[40, 60])),
+        method: Method::ParAmd {
+            threads: 2,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    });
+    let dm = degraded.metrics();
+    let jobs: u64 = dm.shards.per_shard.iter().map(|s| s.jobs).sum();
+    println!(
+        "  shed-quality: n={} ordered with {} sequential sheds, {jobs} shard jobs",
+        rep.perm.len(),
+        dm.shards.shed_sequential
+    );
+    let gm = guarded.metrics();
+    println!(
+        "  pipeline counters: rejected={} deadline_exceeded={}",
+        gm.pipeline.rejected, gm.pipeline.deadline_exceeded
+    );
 
     println!("\n== metrics ==\n{}", svc.metrics().report());
 }

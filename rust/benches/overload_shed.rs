@@ -1,0 +1,148 @@
+//! Overload behavior: what a shed costs versus what service costs, and
+//! what quality shedding buys under pressure.
+//!
+//! Two measurements:
+//!
+//! - **shed cost** — a service pinned at `max_inflight = 1` while a
+//!   large request occupies its only scheduler; `try_submit` must
+//!   answer each excess request immediately with a structured
+//!   rejection. Reported as nanoseconds per shed — the price of saying
+//!   no, which must stay microseconds-scale so admission control can
+//!   front a hot loop.
+//! - **quality shed throughput** — a many-small-components request
+//!   ordered at full quality (reduction, sweeps, per-component shard
+//!   dispatch) versus under `shed_quality` (sweeps off, small
+//!   components inline through sequential AMD). The degraded path
+//!   trades fill quality for latency; this prints what that trade buys.
+//!
+//! Writes the JSON trajectory file `BENCH_overload_shed.json`
+//! (override with `PARAMD_BENCH_OVERLOAD_OUT`; default lands in the
+//! repository root when run via `cargo bench` from `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 10), or
+//! `--smoke` for a quick CI pass.
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::coordinator::{Method, OrderRequest, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::matgen::{mesh2d, multi_component};
+use paramd::util::timer::Timer;
+
+fn paramd_req(g: SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 4,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+fn main() {
+    bench_common::banner(
+        "Overload — admission shed cost and quality-shed throughput",
+        "ISSUE 9 robustness subsystem; not a paper table",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = bench_common::threads();
+    let reps: usize = if smoke {
+        3
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10)
+    };
+    let shed_reps = if smoke { 200 } else { 5000 };
+
+    // Shed cost: one scheduler, in-flight budget 1, and a blocker big
+    // enough to hold the budget for the whole measurement loop — every
+    // try_submit below must shed immediately.
+    let guarded = Service::new(2).with_scheduler_threads(1).with_max_inflight(1);
+    let blocker_side = if smoke { 100 } else { 250 };
+    let blocker = guarded.submit(paramd_req(mesh2d(blocker_side, blocker_side)));
+    let tiny = mesh2d(8, 8);
+    let t = Timer::new();
+    let mut sheds = 0usize;
+    for _ in 0..shed_reps {
+        // An accepted ticket (possible once the blocker resolves late
+        // in the loop) is dropped, which cancels it — never waited.
+        if guarded.try_submit(paramd_req(tiny.clone())).is_err() {
+            sheds += 1;
+        }
+    }
+    let shed_ns = t.secs() * 1e9 / shed_reps.max(1) as f64;
+    let rep = blocker.wait_result().expect("blocker must complete");
+    assert!(!rep.perm.is_empty());
+    drop(guarded);
+
+    // Quality shed throughput: the same many-small-components request
+    // at full quality vs under shed (threshold 0 = shed every request).
+    let comps = if smoke { 8 } else { 32 };
+    let g = multi_component(comps, &[300, 500, 800]);
+    let full = Service::new(2)
+        .with_shards(2)
+        .with_order_threads(threads)
+        .with_result_cache(0);
+    full.order(&paramd_req(g.clone())); // warm arenas
+    let t = Timer::new();
+    for _ in 0..reps {
+        let rep = full.order(&paramd_req(g.clone()));
+        assert_eq!(rep.perm.len(), g.n);
+    }
+    let full_secs = t.secs() / reps as f64;
+    drop(full);
+
+    let degraded = Service::new(2)
+        .with_shards(2)
+        .with_order_threads(threads)
+        .with_result_cache(0)
+        .with_shed_quality(true)
+        .with_shed_threshold(0);
+    degraded.order(&paramd_req(g.clone()));
+    let t = Timer::new();
+    for _ in 0..reps {
+        let rep = degraded.order(&paramd_req(g.clone()));
+        assert_eq!(rep.perm.len(), g.n);
+    }
+    let shed_secs = t.secs() / reps as f64;
+    let m = degraded.metrics();
+    let speedup = full_secs / shed_secs.max(1e-12);
+
+    println!("{:<22} {:>14}", "measurement", "value");
+    println!("{:<22} {:>11.0} ns", "cost per shed", shed_ns);
+    println!("{:<22} {:>12.5}s", "full quality", full_secs);
+    println!("{:<22} {:>12.5}s", "shed quality", shed_secs);
+    println!("{:<22} {:>13.2}x", "degraded speedup", speedup);
+    println!(
+        "sheds: admission={sheds} sequential={} rereduce={} hybrid={}",
+        m.shards.shed_sequential, m.shards.shed_rereduce, m.shards.shed_hybrid
+    );
+    if shed_ns > 50_000.0 {
+        eprintln!("WARNING: shed cost {shed_ns:.0}ns above the 50us bar");
+    }
+
+    let out = std::env::var("PARAMD_BENCH_OVERLOAD_OUT")
+        .unwrap_or_else(|_| "../BENCH_overload_shed.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"overload_shed\",\n  \"status\": \"measured\",\n  \
+         \"threads\": {threads},\n  \"reps\": {reps},\n  \
+         \"workload\": \"multi_component({comps}, [300, 500, 800])\",\n  \
+         \"acceptance\": \"shed answers in microseconds; degraded mode never slower\",\n  \
+         \"shed_cost_ns\": {shed_ns:.1},\n  \
+         \"admission_sheds\": {sheds},\n  \
+         \"full_quality_secs\": {full_secs:.6},\n  \
+         \"shed_quality_secs\": {shed_secs:.6},\n  \
+         \"degraded_speedup\": {speedup:.3},\n  \
+         \"shed_sequential\": {},\n  \"shed_rereduce\": {}\n}}\n",
+        m.shards.shed_sequential, m.shards.shed_rereduce
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -82,6 +82,12 @@ pub struct PipelineMetrics {
     pub cancelled: u64,
     /// Requests whose processing panicked (ticket failed).
     pub failed: u64,
+    /// `try_submit`s shed by admission control (in-flight budget, full
+    /// queue, or caller quota) with a structured `Rejected` reply.
+    pub rejected: u64,
+    /// Requests abandoned because their request-carried deadline expired
+    /// (resolved to `OrderError::DeadlineExceeded`).
+    pub deadline_exceeded: u64,
     /// Queue depth at snapshot time.
     pub queue_depth: usize,
     /// Highest queue depth observed at any submit.
@@ -155,6 +161,14 @@ impl Metrics {
         self.pipeline.failed += 1;
     }
 
+    pub(crate) fn note_rejected(&mut self) {
+        self.pipeline.rejected += 1;
+    }
+
+    pub(crate) fn note_deadline_exceeded(&mut self) {
+        self.pipeline.deadline_exceeded += 1;
+    }
+
     pub fn get(&self, method: &str) -> Option<&MethodMetrics> {
         self.entries.iter().find(|(m, _)| m == method).map(|(_, e)| e)
     }
@@ -184,8 +198,15 @@ impl Metrics {
         let p = &self.pipeline;
         s.push_str(&format!(
             "pipeline: submitted={} completed={} cancelled={} failed={} \
-             queue_peak={} evictions={}\n",
-            p.submitted, p.completed, p.cancelled, p.failed, p.queue_depth_peak, p.arena_evictions
+             rejected={} deadline_exceeded={} queue_peak={} evictions={}\n",
+            p.submitted,
+            p.completed,
+            p.cancelled,
+            p.failed,
+            p.rejected,
+            p.deadline_exceeded,
+            p.queue_depth_peak,
+            p.arena_evictions
         ));
         if !self.shards.per_shard.is_empty() {
             s.push_str(&self.shards.report());
@@ -289,10 +310,17 @@ mod tests {
         m.note_submit(1);
         m.note_cancelled();
         m.note_failed();
+        m.note_rejected();
+        m.note_rejected();
+        m.note_deadline_exceeded();
         assert_eq!(m.pipeline.submitted, 2);
         assert_eq!(m.pipeline.queue_depth_peak, 3);
         assert_eq!(m.pipeline.cancelled, 1);
         assert_eq!(m.pipeline.failed, 1);
+        assert_eq!(m.pipeline.rejected, 2);
+        assert_eq!(m.pipeline.deadline_exceeded, 1);
         assert!(m.report().contains("queue_peak=3"));
+        assert!(m.report().contains("rejected=2"));
+        assert!(m.report().contains("deadline_exceeded=1"));
     }
 }

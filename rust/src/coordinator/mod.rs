@@ -111,14 +111,61 @@
 //! service at a dump directory with [`Service::with_trace_dump`] and every
 //! request slower than the threshold auto-dumps its trace (the serve
 //! CLI's `--trace-dir` / `--trace-slow-ms`).
+//!
+//! ## Admission control & overload
+//!
+//! Blocking `submit` applies backpressure; **[`Service::try_submit`]**
+//! applies *admission control*: it never blocks, and sheds with a
+//! structured [`OrderError::Rejected`] — carrying a retry-after hint,
+//! and handing the request back ([`Rejection`]) so a retry costs no
+//! clone — whenever the global in-flight budget
+//! ([`Service::with_max_inflight`]), the queue bound, or the caller's
+//! token quota ([`Service::with_caller_quota`]) is exhausted. Every
+//! submission carries a priority [`Lane`] ([`SubmitOptions`]):
+//! interactive traffic overtakes batch work in the pipeline queue *and*
+//! in every shard's job queue — priority reorders service, it never
+//! grows a buffer.
+//!
+//! ## Deadline propagation
+//!
+//! A [`SubmitOptions::with_deadline_in`] budget rides the request. A
+//! reaper thread fires expiry into the job's cancel flag (the same flag
+//! ParAMD already polls between elimination rounds), and every stage
+//! boundary — queue pickup, preprocess, order, fill, plus the engine's
+//! reduce/cache-probe/route seams — re-checks the deadline, so doomed
+//! work is abandoned at the next boundary and the ticket resolves to
+//! [`OrderError::DeadlineExceeded`] through [`Ticket::wait_result`]:
+//! never a panic, never a wedged waiter.
+//!
+//! ## Graceful degradation
+//!
+//! With [`Service::with_shed_quality`] armed, overload — queue depth at
+//! or over the [`Service::with_shed_threshold`] watermark, or arena
+//! pressure — sheds *quality* before availability: hybrid partitioning
+//! is skipped, mid-elimination re-reduction sweeps are skipped, and
+//! small components fall back to sequential AMD instead of waiting for
+//! a shard slot. Every shed is tallied in [`ShardMetrics`] and visible
+//! on the request trace; shed replies are still valid orderings — they
+//! may just admit more fill.
+//!
+//! ## Fault injection
+//!
+//! The failure-critical sites (pipeline scheduler, shard dispatcher,
+//! arena checkout, result-cache verify, the order stage) carry named
+//! [failpoints](crate::util::failpoint) — one relaxed atomic load when
+//! disarmed; armable from tests, `serve --failpoints`, or
+//! `PARAMD_FAILPOINTS` — which the chaos suite uses to prove that one
+//! poisoned request fails alone: its arena returns to the pool, the
+//! queue keeps draining, and follow-up requests produce bit-identical
+//! permutations.
 
 pub mod metrics;
 pub mod pipeline;
 pub mod request;
 
 pub use metrics::{MethodMetrics, Metrics, PipelineMetrics};
-pub use pipeline::{Ticket, WaitTimeout};
-pub use request::{Method, OrderReply, OrderRequest, SolveReply, SolveSpec};
+pub use pipeline::{OrderError, Ticket, WaitTimeout};
+pub use request::{Lane, Method, OrderReply, OrderRequest, SolveReply, SolveSpec, SubmitOptions};
 
 pub use crate::ordering::cache::{CacheMetrics, ResultCache};
 pub use crate::ordering::hybrid::HybridConfig;
@@ -126,30 +173,86 @@ pub use crate::ordering::paramd::runtime::QueuePolicy;
 pub use crate::ordering::reduce::{ReduceConfig, ReduceStats};
 pub use crate::ordering::shard::{RereduceSettings, ShardMetrics, ShardSpec};
 
+use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
-use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock, Weak};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::cholesky::{self, DenseTail, NativeDense};
 use crate::graph::csr::SymGraph;
 use crate::graph::symmetrize_parallel;
 use crate::nd::NestedDissection;
-use crate::ordering::shard::ShardEngine;
+use crate::ordering::shard::{OrderOptions, ShardEngine};
 use crate::ordering::{
     amd_seq::AmdSeq, md::MinDegree, mmd::Mmd, paramd::ParAmd, Ordering as _, OrderingResult,
     RoundSample,
 };
 use crate::symbolic;
 use crate::telemetry::{RequestTrace, LANE_PIPELINE};
+use crate::util::failpoint;
+use crate::util::lock_unpoisoned;
 use crate::util::panic_message;
 use crate::util::panic_message_for;
 use crate::util::timer::Timer;
 
-use pipeline::{BorrowedRequest, BoundedQueue, PipelineJob, RequestSlot, WaitBatch};
+use pipeline::{
+    BorrowedRequest, BoundedQueue, PipelineJob, RequestSlot, TicketInner, TryPushError, WaitBatch,
+};
 
 /// Default bound of the request queue (requests, not bytes).
 const DEFAULT_QUEUE_CAP: usize = 64;
+
+/// A shed [`Service::try_submit`]: the typed reason plus the request
+/// handed back unchanged, so a caller can back off and retry without
+/// ever cloning the graph.
+#[derive(Debug)]
+pub struct Rejection {
+    /// Why admission refused — always [`OrderError::Rejected`] today,
+    /// carrying the retry-after hint.
+    pub error: OrderError,
+    /// The request, returned to the caller.
+    pub request: OrderRequest,
+}
+
+/// Per-caller token-bucket quota: `rate_per_sec` sustained, `burst`
+/// peak (see [`Service::with_caller_quota`]).
+#[derive(Clone, Copy, Debug)]
+struct QuotaConfig {
+    rate_per_sec: f64,
+    burst: f64,
+}
+
+/// One caller's bucket; refilled lazily on access.
+struct QuotaBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Quota configuration + per-caller buckets behind one lock.
+#[derive(Default)]
+struct QuotaState {
+    cfg: Option<QuotaConfig>,
+    buckets: HashMap<String, QuotaBucket>,
+}
+
+/// When to trade ordering quality for availability (see
+/// [`Service::with_shed_quality`]).
+struct ShedPolicy {
+    enabled: AtomicBool,
+    /// Shed once the pipeline queue is at least this deep (`0` = always
+    /// shed while enabled — the forced-degraded mode tests use).
+    queue_depth: AtomicUsize,
+}
+
+/// Deadline-reaper worklist: `(expiry, ticket)` pairs. Weak handles so
+/// a resolved/abandoned ticket never outlives its waiters here.
+#[derive(Default)]
+struct ReaperState {
+    entries: Vec<(Instant, Weak<TicketInner>)>,
+    closed: bool,
+}
 
 /// The ordering service. Construct once, submit requests (from any number
 /// of threads), wait on tickets, read metrics.
@@ -184,6 +287,20 @@ struct ServiceCore {
     /// Slow-request trace dump target (`None` = no dumps). Lives on the
     /// core so engine rebuilds preserve it and schedulers can reach it.
     trace_sink: Mutex<Option<TraceSink>>,
+    /// Admitted-but-unresolved requests (queued + processing) — the
+    /// gauge `try_submit`'s in-flight budget gates on. Signed so a
+    /// transient decrement race can never wrap a usize.
+    inflight: AtomicI64,
+    /// In-flight budget enforced by `try_submit` (`0` = unlimited).
+    max_inflight: AtomicUsize,
+    /// Per-caller token quotas (`cfg: None` = unmetered).
+    quota: Mutex<QuotaState>,
+    /// Quality-shedding policy for graceful degradation.
+    shed: ShedPolicy,
+    /// Deadline-reaper worklist; the reaper thread sleeps on the condvar
+    /// until the earliest registered expiry.
+    reaper: Mutex<ReaperState>,
+    reaper_cv: Condvar,
 }
 
 /// Where (and above what latency) the schedulers dump flight-recorder
@@ -223,6 +340,15 @@ impl Service {
                 queue: BoundedQueue::new(DEFAULT_QUEUE_CAP),
                 submit_seq: AtomicU64::new(0),
                 trace_sink: Mutex::new(None),
+                inflight: AtomicI64::new(0),
+                max_inflight: AtomicUsize::new(0),
+                quota: Mutex::new(QuotaState::default()),
+                shed: ShedPolicy {
+                    enabled: AtomicBool::new(false),
+                    queue_depth: AtomicUsize::new(1),
+                },
+                reaper: Mutex::new(ReaperState::default()),
+                reaper_cv: Condvar::new(),
             })),
             tail: DenseTail::default(),
             solver: None,
@@ -271,7 +397,10 @@ impl Service {
         old.shutdown_join();
         drop(old);
         // The old queue is closed; the pipeline restarts on a fresh one.
+        // Admission state (budget, quotas, shed policy) lives on the core
+        // and carries over untouched; the reaper worklist restarts empty.
         core.queue = BoundedQueue::new(core.queue.capacity());
+        core.reaper = Mutex::new(ReaperState::default());
         self.core = Some(Arc::new(core));
         self.sched = OnceLock::new();
         self
@@ -335,6 +464,52 @@ impl Service {
     /// `SmallestFirst` lets small graphs overtake a monster).
     pub fn with_queue_policy(self, policy: QueuePolicy) -> Self {
         self.core().shards.set_policy(policy);
+        self
+    }
+
+    /// Bound the number of **admitted-but-unresolved** requests
+    /// [`Self::try_submit`] will accept (the CLI's `--max-inflight`;
+    /// `0` = unlimited, the default). Over the budget, `try_submit`
+    /// sheds with [`OrderError::Rejected`] instead of queueing. Blocking
+    /// `submit` ignores the budget — its backpressure *is* the bound.
+    /// Survives engine rebuilds.
+    pub fn with_max_inflight(self, n: usize) -> Self {
+        self.core().max_inflight.store(n, Relaxed);
+        self
+    }
+
+    /// Meter callers named via [`SubmitOptions::with_caller`] with a
+    /// token bucket: `rate_per_sec` sustained requests, `burst` peak
+    /// (the CLI's `--quota`). Out-of-token submissions shed with
+    /// [`OrderError::Rejected`] whose hint says when the next token
+    /// lands. Unnamed callers are unmetered. Survives engine rebuilds.
+    pub fn with_caller_quota(self, rate_per_sec: f64, burst: f64) -> Self {
+        let mut q = lock_unpoisoned(self.core().quota.lock());
+        q.cfg = Some(QuotaConfig {
+            rate_per_sec: rate_per_sec.max(0.0),
+            burst: burst.max(1.0),
+        });
+        q.buckets.clear();
+        drop(q);
+        self
+    }
+
+    /// Switch **graceful degradation** on: under overload (queue depth
+    /// at or over the [`Self::with_shed_threshold`] watermark, or arena
+    /// pressure) requests shed ordering *quality* — hybrid partitioning
+    /// and re-reduction sweeps are skipped, small components fall back
+    /// to sequential AMD — instead of shedding availability (the CLI's
+    /// `--shed-quality`). Off by default. Survives engine rebuilds.
+    pub fn with_shed_quality(self, on: bool) -> Self {
+        self.core().shed.enabled.store(on, Relaxed);
+        self
+    }
+
+    /// Queue depth at which [`Self::with_shed_quality`] starts shedding
+    /// (default 1: any backlog counts as overload; `0` sheds every
+    /// request while shedding is enabled — the forced-degraded mode).
+    pub fn with_shed_threshold(self, queued: usize) -> Self {
+        self.core().shed.queue_depth.store(queued, Relaxed);
         self
     }
 
@@ -436,7 +611,7 @@ impl Service {
     /// dump; I/O failures never fail the request. Survives engine
     /// rebuilds.
     pub fn with_trace_dump(self, dir: std::path::PathBuf, slow_ms: u64) -> Self {
-        *self.core().trace_sink.lock().unwrap() = Some(TraceSink { dir, slow_ms });
+        *lock_unpoisoned(self.core().trace_sink.lock()) = Some(TraceSink { dir, slow_ms });
         self
     }
 
@@ -494,7 +669,7 @@ impl Service {
     /// Snapshot of the per-method, pipeline, shard, and cache metrics.
     pub fn metrics(&self) -> Metrics {
         let core = self.core();
-        let mut m = core.metrics.lock().unwrap().clone();
+        let mut m = lock_unpoisoned(core.metrics.lock()).clone();
         m.pipeline.queue_depth = core.queue.len();
         m.pipeline.arena_evictions = core.shards.arena_evictions();
         m.shards = core.shards.metrics();
@@ -518,7 +693,91 @@ impl Service {
     /// this call blocks until a scheduler drains a slot (backpressure).
     /// Drop the ticket to cancel the request.
     pub fn submit(&self, req: OrderRequest) -> Ticket {
-        self.submit_slot(RequestSlot::Owned(req))
+        self.submit_slot(RequestSlot::Owned(req), &SubmitOptions::default())
+    }
+
+    /// [`Self::submit`] with explicit scheduling attributes: the
+    /// priority [`Lane`], a request-carried deadline, a caller name.
+    /// Still blocks on a full queue (backpressure); admission control is
+    /// [`Self::try_submit_opts`]'s job.
+    pub fn submit_opts(&self, req: OrderRequest, opts: &SubmitOptions) -> Ticket {
+        self.submit_slot(RequestSlot::Owned(req), opts)
+    }
+
+    /// Non-blocking, admission-controlled submit: either the request is
+    /// in (a [`Ticket`], exactly like [`Self::submit`]) or it is shed
+    /// **immediately** with a structured [`Rejection`] — in-flight
+    /// budget exhausted, queue full, or caller out of quota tokens —
+    /// that hands the request back for a later retry. Never blocks,
+    /// never drops a request silently.
+    pub fn try_submit(&self, req: OrderRequest) -> Result<Ticket, Rejection> {
+        self.try_submit_opts(req, &SubmitOptions::default())
+    }
+
+    /// [`Self::try_submit`] with explicit scheduling attributes.
+    pub fn try_submit_opts(
+        &self,
+        req: OrderRequest,
+        opts: &SubmitOptions,
+    ) -> Result<Ticket, Rejection> {
+        self.ensure_schedulers();
+        let core = self.core();
+        if let Some(hint) = core.quota_deficit(opts.caller.as_deref()) {
+            lock_unpoisoned(core.metrics.lock()).note_rejected();
+            return Err(Rejection {
+                error: OrderError::Rejected {
+                    retry_after_hint: hint,
+                },
+                request: req,
+            });
+        }
+        let max = core.max_inflight.load(Relaxed);
+        if max > 0 && core.inflight.fetch_add(1, Relaxed) >= max as i64 {
+            core.inflight.fetch_sub(1, Relaxed);
+            lock_unpoisoned(core.metrics.lock()).note_rejected();
+            return Err(Rejection {
+                error: OrderError::Rejected {
+                    retry_after_hint: core.retry_hint(),
+                },
+                request: req,
+            });
+        }
+        if max == 0 {
+            core.inflight.fetch_add(1, Relaxed);
+        }
+        let (ticket, inner) = Ticket::new();
+        self.tag_trace(inner.trace());
+        let reaper_entry = opts.deadline.map(|at| (at, Arc::clone(&inner)));
+        let job = PipelineJob {
+            req: RequestSlot::Owned(req),
+            ticket: inner,
+            queued: Timer::new(),
+            lane: opts.lane,
+            deadline: opts.deadline,
+        };
+        match core.queue.try_push(job, opts.lane) {
+            Ok(depth) => {
+                lock_unpoisoned(core.metrics.lock()).note_submit(depth);
+                if let Some((at, inner)) = reaper_entry {
+                    core.register_deadline(at, &inner);
+                }
+                Ok(ticket)
+            }
+            Err(TryPushError::Full(job)) | Err(TryPushError::Closed(job)) => {
+                core.inflight.fetch_sub(1, Relaxed);
+                lock_unpoisoned(core.metrics.lock()).note_rejected();
+                let request = match job.req {
+                    RequestSlot::Owned(r) => r,
+                    RequestSlot::Borrowed(_) => unreachable!("try_submit owns its request"),
+                };
+                Err(Rejection {
+                    error: OrderError::Rejected {
+                        retry_after_hint: core.retry_hint(),
+                    },
+                    request,
+                })
+            }
+        }
     }
 
     /// Submit a batch of requests through **one queue reservation**: the
@@ -540,17 +799,15 @@ impl Service {
                     req: RequestSlot::Owned(req),
                     ticket: inner,
                     queued: Timer::new(),
+                    lane: Lane::Batch,
+                    deadline: None,
                 }
             })
             .collect();
         let n = jobs.len() as u64;
-        match self.core().queue.push_all(jobs) {
-            Ok(depth) => self
-                .core()
-                .metrics
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .note_submit_batch(n, depth),
+        self.core().inflight.fetch_add(n as i64, Relaxed);
+        match self.core().queue.push_all(jobs, Lane::Batch) {
+            Ok(depth) => lock_unpoisoned(self.core().metrics.lock()).note_submit_batch(n, depth),
             // See `submit_slot`: teardown cannot overlap a `&self` call.
             Err(_) => unreachable!("submit_all raced a service teardown"),
         }
@@ -602,7 +859,7 @@ impl Service {
         // SAFETY: we block on the ticket below; the scheduler's last
         // access to the borrow strictly precedes ticket resolution.
         let slot = RequestSlot::Borrowed(unsafe { BorrowedRequest::new(req) });
-        self.submit_slot(slot).wait()
+        self.submit_slot(slot, &SubmitOptions::default()).wait()
     }
 
     /// Tag a fresh ticket's trace with the next request id (1-based).
@@ -610,28 +867,30 @@ impl Service {
         trace.set_id(self.core().submit_seq.fetch_add(1, Relaxed) + 1);
     }
 
-    fn submit_slot(&self, slot: RequestSlot) -> Ticket {
+    fn submit_slot(&self, slot: RequestSlot, opts: &SubmitOptions) -> Ticket {
         self.ensure_schedulers();
         let (ticket, inner) = Ticket::new();
         self.tag_trace(inner.trace());
+        let reaper_entry = opts.deadline.map(|at| (at, Arc::clone(&inner)));
         let job = PipelineJob {
             req: slot,
             ticket: inner,
             queued: Timer::new(),
+            lane: opts.lane,
+            deadline: opts.deadline,
         };
-        match self.core().queue.push(job) {
+        self.core().inflight.fetch_add(1, Relaxed);
+        match self.core().queue.push_lane(job, opts.lane) {
             // Poison-tolerant: once the job is enqueued, nothing on this
             // path may panic — a borrowed `order()` request must stay
             // alive until its ticket resolves.
-            Ok(depth) => self
-                .core()
-                .metrics
-                .lock()
-                .unwrap_or_else(|poisoned| poisoned.into_inner())
-                .note_submit(depth),
+            Ok(depth) => lock_unpoisoned(self.core().metrics.lock()).note_submit(depth),
             // The queue only closes while `&mut self` methods run, which
             // cannot overlap a `&self` submit.
             Err(_) => unreachable!("submit raced a service teardown"),
+        }
+        if let Some((at, inner)) = reaper_entry {
+            self.core().register_deadline(at, &inner);
         }
         ticket
     }
@@ -639,7 +898,7 @@ impl Service {
     fn ensure_schedulers(&self) {
         let core_arc = self.core.as_ref().expect("core present");
         self.sched.get_or_init(|| {
-            (0..self.sched_threads)
+            let mut handles: Vec<JoinHandle<()>> = (0..self.sched_threads)
                 .map(|i| {
                     let core = Arc::clone(core_arc);
                     std::thread::Builder::new()
@@ -647,15 +906,31 @@ impl Service {
                         .spawn(move || core.scheduler_loop())
                         .expect("spawn scheduler thread")
                 })
-                .collect()
+                .collect();
+            // The deadline reaper rides with the schedulers: parked on
+            // its condvar until a deadline is registered, joined with
+            // them at teardown.
+            let core = Arc::clone(core_arc);
+            handles.push(
+                std::thread::Builder::new()
+                    .name("paramd-reaper".into())
+                    .spawn(move || core.reaper_loop())
+                    .expect("spawn reaper thread"),
+            );
+            handles
         });
     }
 
-    /// Close the queue and join the schedulers; every accepted request
-    /// resolves (reply or failure) before this returns.
+    /// Close the queue and join the schedulers (and the reaper); every
+    /// accepted request resolves (reply or failure) before this returns.
     fn stop_schedulers(&mut self) {
         if let Some(core) = &self.core {
             core.queue.close();
+            let mut st = lock_unpoisoned(core.reaper.lock());
+            st.closed = true;
+            st.entries.clear();
+            drop(st);
+            core.reaper_cv.notify_all();
         }
         if let Some(handles) = self.sched.take() {
             for h in handles {
@@ -695,10 +970,7 @@ impl Service {
         let t = Timer::new();
         let mut out = if let Some(handle) = &self.solver {
             let (reply_tx, reply_rx) = mpsc::channel();
-            handle
-                .tx
-                .lock()
-                .unwrap()
+            lock_unpoisoned(handle.tx.lock())
                 .send(SolveJob {
                     a,
                     perm,
@@ -729,51 +1001,77 @@ impl Drop for Service {
 
 impl ServiceCore {
     /// Scheduler thread body: drain the queue until it closes, resolving
-    /// every job's ticket (reply, cancellation, or failure).
+    /// every job's ticket (reply, cancellation, deadline expiry, or
+    /// failure). The in-flight gauge drops exactly once per job, after
+    /// its ticket resolved.
     fn scheduler_loop(&self) {
         while let Some(job) = self.queue.pop() {
-            let wait_secs = job.queued.secs();
-            let trace = Arc::clone(job.ticket.trace());
-            if job.ticket.is_cancelled() {
-                self.metrics.lock().unwrap().note_cancelled();
-                job.ticket.fail("cancelled before processing");
-                continue;
+            self.run_job(job);
+            self.inflight.fetch_sub(1, Relaxed);
+        }
+    }
+
+    /// An abandoned job's typed outcome: a fired (or lapsed) deadline
+    /// routes to `DeadlineExceeded`, anything else was a cancellation.
+    fn abandonment(job: &PipelineJob) -> OrderError {
+        if job.ticket.deadline_fired() || job.deadline.is_some_and(|d| Instant::now() >= d) {
+            OrderError::DeadlineExceeded
+        } else {
+            OrderError::Cancelled
+        }
+    }
+
+    fn fail_abandoned(&self, job: &PipelineJob) {
+        let err = Self::abandonment(job);
+        let mut m = lock_unpoisoned(self.metrics.lock());
+        match err {
+            OrderError::DeadlineExceeded => m.note_deadline_exceeded(),
+            _ => m.note_cancelled(),
+        }
+        drop(m);
+        job.ticket.fail_with(err);
+    }
+
+    fn run_job(&self, job: PipelineJob) {
+        let wait_secs = job.queued.secs();
+        let trace = Arc::clone(job.ticket.trace());
+        let lapsed = job.deadline.is_some_and(|d| Instant::now() >= d);
+        if job.ticket.is_cancelled() || lapsed {
+            self.fail_abandoned(&job);
+            return;
+        }
+        // The queue dwell ends the moment a scheduler claims the
+        // job; its span starts at the trace epoch (ticket creation).
+        trace.record("queued", LANE_PIPELINE, 0);
+        let method_name = job.req.get().method.name();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            failpoint::hit(failpoint::SCHEDULER_PANIC);
+            self.process(&job, &trace)
+        }));
+        match outcome {
+            Ok(Some(reply)) => {
+                // Record before fulfilling so a woken waiter already
+                // sees its request in the metrics.
+                {
+                    let mut m = lock_unpoisoned(self.metrics.lock());
+                    m.record_split(method_name, wait_secs, reply.total_secs, reply.fill_in);
+                    m.note_completed();
+                }
+                // Dump before fulfilling too: when the waiter wakes,
+                // its trace file (if any) is already on disk.
+                self.dump_slow_trace(&trace, wait_secs + reply.total_secs);
+                job.ticket.fulfill(reply);
             }
-            // The queue dwell ends the moment a scheduler claims the
-            // job; its span starts at the trace epoch (ticket creation).
-            trace.record("queued", LANE_PIPELINE, 0);
-            let method_name = job.req.get().method.name();
-            let outcome = catch_unwind(AssertUnwindSafe(|| {
-                self.process(job.req.get(), job.ticket.cancel_flag(), &trace)
-            }));
-            match outcome {
-                Ok(Some(reply)) => {
-                    // Record before fulfilling so a woken waiter already
-                    // sees its request in the metrics.
-                    {
-                        let mut m = self.metrics.lock().unwrap();
-                        m.record_split(method_name, wait_secs, reply.total_secs, reply.fill_in);
-                        m.note_completed();
-                    }
-                    // Dump before fulfilling too: when the waiter wakes,
-                    // its trace file (if any) is already on disk.
-                    self.dump_slow_trace(&trace, wait_secs + reply.total_secs);
-                    job.ticket.fulfill(reply);
-                }
-                Ok(None) => {
-                    self.metrics.lock().unwrap().note_cancelled();
-                    job.ticket.fail("cancelled during processing");
-                }
-                Err(panic) => {
-                    // Name the request id in the failure so a crash in a
-                    // fleet of concurrent requests stays attributable.
-                    let why = match trace.id() {
-                        0 => panic_message(&panic),
-                        id => panic_message_for(id, &panic),
-                    };
-                    self.metrics.lock().unwrap().note_failed();
-                    job.ticket.fail(format!("ordering panicked: {why}"));
-                }
+            Ok(None) => self.fail_abandoned(&job),
+            Err(panic) => {
+                // Name the request id in the failure so a crash in a
+                // fleet of concurrent requests stays attributable.
+                let why = match trace.id() {
+                    0 => panic_message(&panic),
+                    id => panic_message_for(id, &panic),
+                };
+                lock_unpoisoned(self.metrics.lock()).note_failed();
+                job.ticket.fail(format!("ordering panicked: {why}"));
             }
         }
     }
@@ -781,8 +1079,87 @@ impl ServiceCore {
     /// Dump a finished request's flight recorder as Chrome trace-event
     /// JSON when a sink is configured and the request was slow enough.
     /// Best-effort: I/O failures must never fail the request itself.
+    /// Consume one quota token for `caller`. `None` = admitted (or
+    /// unmetered); `Some(hint)` = out of tokens, with the time until the
+    /// next token lands as the retry hint.
+    fn quota_deficit(&self, caller: Option<&str>) -> Option<Duration> {
+        let caller = caller?;
+        let mut q = lock_unpoisoned(self.quota.lock());
+        let cfg = q.cfg?;
+        let now = Instant::now();
+        let bucket = q.buckets.entry(caller.to_string()).or_insert(QuotaBucket {
+            tokens: cfg.burst,
+            last: now,
+        });
+        let dt = now.duration_since(bucket.last).as_secs_f64();
+        bucket.last = now;
+        bucket.tokens = (bucket.tokens + dt * cfg.rate_per_sec).min(cfg.burst);
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            None
+        } else {
+            let deficit = 1.0 - bucket.tokens;
+            Some(Duration::from_secs_f64(
+                (deficit / cfg.rate_per_sec.max(1e-9)).min(3600.0),
+            ))
+        }
+    }
+
+    /// Back-off hint for budget/queue sheds: scale with the visible
+    /// backlog so callers spread their retries under deeper overload.
+    fn retry_hint(&self) -> Duration {
+        let backlog = self.queue.len() as u64 + self.inflight.load(Relaxed).max(0) as u64;
+        Duration::from_millis(5 * (backlog + 1))
+    }
+
+    /// Hand a ticket to the deadline reaper.
+    fn register_deadline(&self, at: Instant, inner: &Arc<TicketInner>) {
+        let mut st = lock_unpoisoned(self.reaper.lock());
+        st.entries.push((at, Arc::downgrade(inner)));
+        drop(st);
+        self.reaper_cv.notify_all();
+    }
+
+    /// Reaper thread body: sleep until the earliest registered deadline,
+    /// then fire expiry into the ticket's cancel flag
+    /// ([`TicketInner::expire_deadline`]) so queued jobs are skipped at
+    /// pickup and running eliminations abort at their next round
+    /// boundary. The reaper only *flags* — it never resolves a ticket
+    /// itself, because a borrowed `order()` request must stay alive
+    /// until the scheduler's last access, which strictly precedes
+    /// resolution.
+    fn reaper_loop(&self) {
+        let mut st = lock_unpoisoned(self.reaper.lock());
+        loop {
+            if st.closed {
+                return;
+            }
+            let now = Instant::now();
+            st.entries.retain(|(at, weak)| match weak.upgrade() {
+                Some(inner) if inner.is_pending() => {
+                    if now >= *at {
+                        inner.expire_deadline();
+                        false
+                    } else {
+                        true
+                    }
+                }
+                // Resolved or dropped: nothing left to reap.
+                _ => false,
+            });
+            let next = st.entries.iter().map(|(at, _)| *at).min();
+            st = match next {
+                Some(at) => {
+                    let wait = at.saturating_duration_since(now);
+                    lock_unpoisoned(self.reaper_cv.wait_timeout(st, wait)).0
+                }
+                None => lock_unpoisoned(self.reaper_cv.wait(st)),
+            };
+        }
+    }
+
     fn dump_slow_trace(&self, trace: &RequestTrace, latency_secs: f64) {
-        let guard = self.trace_sink.lock().unwrap();
+        let guard = lock_unpoisoned(self.trace_sink.lock());
         if let Some(sink) = guard.as_ref() {
             if latency_secs * 1e3 >= sink.slow_ms as f64 {
                 let _ = std::fs::create_dir_all(&sink.dir);
@@ -792,16 +1169,25 @@ impl ServiceCore {
         }
     }
 
+    /// Whether this moment calls for trading ordering quality for
+    /// availability: shedding armed and either the pipeline queue at its
+    /// watermark or every arena in use with waiters behind them.
+    fn shed_quality_now(&self) -> bool {
+        self.shed.enabled.load(Relaxed)
+            && (self.queue.len() >= self.shed.queue_depth.load(Relaxed)
+                || self.shards.arena_pressure())
+    }
+
     /// Process one request end to end: pre-process, order, count fill —
     /// each stage recorded as a span on the trace's pipeline lane.
-    /// Returns `None` when the request's cancellation flag fired (checked
-    /// between stages and, for ParAMD, between elimination rounds).
-    fn process(
-        &self,
-        req: &OrderRequest,
-        cancel: &AtomicBool,
-        trace: &Arc<RequestTrace>,
-    ) -> Option<OrderReply> {
+    /// Returns `None` when the request's cancellation flag fired or its
+    /// deadline lapsed (checked between stages and, for ParAMD, between
+    /// elimination rounds).
+    fn process(&self, job: &PipelineJob, trace: &Arc<RequestTrace>) -> Option<OrderReply> {
+        let req = job.req.get();
+        let cancel = job.ticket.cancel_flag();
+        let deadline = job.deadline;
+        let expired = || deadline.is_some_and(|d| Instant::now() >= d);
         let total = Timer::new();
         let tpre = Timer::new();
         let pre0 = trace.now_us();
@@ -819,9 +1205,10 @@ impl ServiceCore {
         };
         let pre_secs = tpre.secs();
         trace.record("preprocess", LANE_PIPELINE, pre0);
-        if cancel.load(Relaxed) {
+        if cancel.load(Relaxed) || expired() {
             return None;
         }
+        failpoint::hit(failpoint::STAGE_LATENCY);
 
         // What a reply needs from an ordering: the owned permutation plus
         // four scalar stats and the round-sample trail. Extracting just
@@ -865,7 +1252,17 @@ impl ServiceCore {
                 let cfg = ParAmd::new(self.shards.wide_threads())
                     .with_mult(*mult)
                     .with_lim_total(*lim_total);
-                let rep = self.shards.order_traced(g, cfg, cancel, Some(trace))?;
+                let rep = self.shards.order_opts(
+                    g,
+                    cfg,
+                    &OrderOptions {
+                        cancel,
+                        deadline,
+                        lane: job.lane,
+                        shed_quality: self.shed_quality_now(),
+                        trace: Some(trace),
+                    },
+                )?;
                 (
                     rep.perm,
                     rep.rounds,
@@ -879,8 +1276,8 @@ impl ServiceCore {
         let order_secs = tord.secs();
         trace.record("order", LANE_PIPELINE, ord0);
 
-        if cancel.load(Relaxed) {
-            return None; // don't burn fill analysis on a dropped ticket
+        if cancel.load(Relaxed) || expired() {
+            return None; // don't burn fill analysis on a doomed ticket
         }
         let fill = if req.compute_fill {
             let fill0 = trace.now_us();
@@ -1496,5 +1893,168 @@ mod tests {
         crate::telemetry::validate_json(&text).expect("dumped trace must parse");
         assert!(text.contains("\"name\":\"order\""), "order span missing: {text}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn try_submit_sheds_over_the_inflight_budget_and_recovers() {
+        let svc = Service::new(1).with_max_inflight(1);
+        let slow = OrderRequest {
+            matrix: None,
+            pattern: Some(mesh2d(60, 60)),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: true,
+        };
+        let first = svc.submit(slow);
+        // The budget of one is spent on the in-flight request above, so
+        // a non-blocking submit sheds immediately instead of queueing.
+        let rej = svc
+            .try_submit(spd_request(Method::Amd))
+            .expect_err("over the in-flight budget");
+        match rej.error {
+            OrderError::Rejected { retry_after_hint } => {
+                assert!(retry_after_hint > Duration::ZERO)
+            }
+            ref other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(rej.request.n(), 144, "request handed back for retry");
+        assert_eq!(first.wait_result().unwrap().perm.len(), 3600);
+        // Budget freed: the handed-back request is admitted on retry
+        // (polling absorbs the scheduler's post-resolution decrement).
+        let mut req = rej.request;
+        let ticket = loop {
+            match svc.try_submit(req) {
+                Ok(t) => break t,
+                Err(r) => {
+                    req = r.request;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        };
+        assert_eq!(ticket.wait_result().unwrap().perm.len(), 144);
+        let m = svc.metrics();
+        assert!(m.pipeline.rejected >= 1);
+        assert_eq!(m.pipeline.completed, 2);
+    }
+
+    #[test]
+    fn caller_quota_sheds_with_a_retry_hint() {
+        let svc = Service::new(1).with_caller_quota(0.001, 1.0);
+        let opts = SubmitOptions::default().with_caller("tenant-a");
+        let t = svc
+            .try_submit_opts(spd_request(Method::Amd), &opts)
+            .expect("the burst token admits the first request");
+        assert_eq!(t.wait_result().unwrap().perm.len(), 144);
+        let rej = svc
+            .try_submit_opts(spd_request(Method::Amd), &opts)
+            .expect_err("tenant-a is out of tokens");
+        match rej.error {
+            OrderError::Rejected { retry_after_hint } => assert!(
+                retry_after_hint > Duration::from_secs(60),
+                "hint must reflect the 1000s refill: {retry_after_hint:?}"
+            ),
+            ref other => panic!("expected Rejected, got {other:?}"),
+        }
+        // Unnamed callers are unmetered.
+        let t = svc.try_submit(spd_request(Method::Amd)).expect("unmetered");
+        t.wait_result().unwrap();
+        assert_eq!(svc.metrics().pipeline.rejected, 1);
+    }
+
+    #[test]
+    fn lapsed_deadline_resolves_to_deadline_exceeded_at_pickup() {
+        let svc = Service::new(1);
+        let opts = SubmitOptions::default().with_deadline_in(Duration::ZERO);
+        let t = svc.submit_opts(spd_request(Method::Amd), &opts);
+        assert_eq!(t.wait_result(), Err(OrderError::DeadlineExceeded));
+        let m = svc.metrics();
+        assert_eq!(m.pipeline.deadline_exceeded, 1);
+        assert_eq!(m.pipeline.cancelled, 0, "a deadline is not a cancellation");
+    }
+
+    #[test]
+    fn reaper_aborts_a_running_request_at_its_deadline() {
+        let svc = Service::new(1);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(mesh2d(160, 160)),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: true,
+        };
+        let opts = SubmitOptions::default().with_deadline_in(Duration::from_millis(5));
+        let t = svc.submit_opts(req, &opts);
+        assert_eq!(
+            t.wait_result(),
+            Err(OrderError::DeadlineExceeded),
+            "the reaper must abort the elimination at a round boundary"
+        );
+        assert_eq!(svc.metrics().pipeline.deadline_exceeded, 1);
+        // The service is healthy afterwards: pools released, clean reply.
+        let rep = svc.order(&spd_request(Method::Amd));
+        assert_eq!(rep.perm.len(), 144);
+    }
+
+    #[test]
+    fn shed_quality_skips_hybrid_and_rereduce_under_pressure() {
+        let hybrid = HybridConfig {
+            enabled: true,
+            partition_threshold: 2_000,
+            recursion_depth: 3,
+            balance_factor: 1.4,
+        };
+        let svc = Service::new(1)
+            .with_hybrid(hybrid)
+            .with_shed_quality(true)
+            .with_shed_threshold(0); // forced-degraded: shed every request
+        let g = mesh2d(50, 50);
+        let req = OrderRequest {
+            matrix: None,
+            pattern: Some(g.clone()),
+            method: Method::ParAmd {
+                threads: 1,
+                mult: 1.1,
+                lim_total: 0,
+            },
+            compute_fill: false,
+        };
+        let rep = svc.order(&req);
+        assert!(crate::graph::perm::is_valid_perm(&rep.perm));
+        assert_eq!(rep.perm.len(), g.n);
+        let m = svc.metrics();
+        assert_eq!(m.shards.hybrid_requests, 0, "shedding skips partitioning");
+        assert!(m.shards.shed_hybrid >= 1, "the skip is tallied");
+        assert!(m.shards.shed_rereduce >= 1, "sweeps are shed too");
+        assert!(m.report().contains("shed:"), "report gains a shed section");
+    }
+
+    #[test]
+    fn interactive_submissions_complete_like_batch_ones() {
+        let svc = Service::new(1);
+        let t = svc.submit_opts(spd_request(Method::Amd), &SubmitOptions::interactive());
+        assert_eq!(t.wait_result().unwrap().perm.len(), 144);
+        assert_eq!(svc.metrics().pipeline.completed, 1);
+    }
+
+    #[test]
+    fn admission_settings_survive_engine_rebuilds() {
+        let svc = Service::new(1)
+            .with_max_inflight(7)
+            .with_shed_quality(true)
+            .with_shed_threshold(3)
+            .with_shards(2);
+        let core = svc.core();
+        assert_eq!(core.max_inflight.load(Relaxed), 7);
+        assert!(core.shed.enabled.load(Relaxed));
+        assert_eq!(core.shed.queue_depth.load(Relaxed), 3);
+        // The rebuilt pipeline still serves.
+        let rep = svc.order(&spd_request(Method::Amd));
+        assert_eq!(rep.perm.len(), 144);
     }
 }

@@ -10,15 +10,27 @@ use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::request::{OrderReply, OrderRequest};
+use super::request::{Lane, OrderReply, OrderRequest};
 use crate::telemetry::RequestTrace;
+use crate::util::lock_unpoisoned;
 use crate::util::timer::Timer;
 
-/// A bounded MPMC queue. `push` blocks while the queue is full — this is
-/// the pipeline's backpressure: submitters stall instead of the service
-/// buffering unboundedly. `pop` blocks while empty and returns `None`
-/// once the queue is closed *and* drained, so consumers finish every
-/// accepted job before exiting.
+/// Why a non-blocking enqueue did not happen, carrying the item back.
+pub(crate) enum TryPushError<T> {
+    /// The queue is at capacity — admission control turns this into a
+    /// structured [`OrderError::Rejected`] shed.
+    Full(T),
+    /// The queue is closed (service tearing down).
+    Closed(T),
+}
+
+/// A bounded MPMC queue with two priority lanes. `push` blocks while the
+/// queue is full — this is the pipeline's backpressure: submitters stall
+/// instead of the service buffering unboundedly ([`Self::try_push`] is
+/// the non-blocking admission-control variant that hands the item back).
+/// `pop` serves the interactive lane first, FIFO within each lane, and
+/// blocks while empty, returning `None` once the queue is closed *and*
+/// drained, so consumers finish every accepted job before exiting.
 pub(crate) struct BoundedQueue<T> {
     state: Mutex<QueueState<T>>,
     not_full: Condvar,
@@ -26,16 +38,23 @@ pub(crate) struct BoundedQueue<T> {
 }
 
 struct QueueState<T> {
-    items: VecDeque<T>,
+    /// Indexed by [`Lane::index`]: interactive, then batch.
+    lanes: [VecDeque<T>; 2],
     cap: usize,
     closed: bool,
+}
+
+impl<T> QueueState<T> {
+    fn len(&self) -> usize {
+        self.lanes.iter().map(VecDeque::len).sum()
+    }
 }
 
 impl<T> BoundedQueue<T> {
     pub(crate) fn new(cap: usize) -> Self {
         Self {
             state: Mutex::new(QueueState {
-                items: VecDeque::new(),
+                lanes: [VecDeque::new(), VecDeque::new()],
                 cap: cap.max(1),
                 closed: false,
             }),
@@ -44,47 +63,75 @@ impl<T> BoundedQueue<T> {
         }
     }
 
-    /// Enqueue, blocking while full. Returns the resulting depth, or the
-    /// item back if the queue has been closed.
+    /// Enqueue on the batch lane, blocking while full. Returns the
+    /// resulting depth, or the item back if the queue has been closed.
     pub(crate) fn push(&self, item: T) -> Result<usize, T> {
-        let mut st = self.state.lock().unwrap();
+        self.push_lane(item, Lane::Batch)
+    }
+
+    /// Enqueue on `lane`, blocking while full. The capacity bound is
+    /// shared across lanes (priority changes *service order*, not how
+    /// much the service buffers).
+    pub(crate) fn push_lane(&self, item: T, lane: Lane) -> Result<usize, T> {
+        // Poisoned locks recover via `into_inner`: the queue state is a
+        // pair of deques plus plain flags, never left mid-mutation by a
+        // panicking holder.
+        let mut st = lock_unpoisoned(self.state.lock());
         loop {
             if st.closed {
                 return Err(item);
             }
-            if st.items.len() < st.cap {
-                st.items.push_back(item);
-                let depth = st.items.len();
+            if st.len() < st.cap {
+                st.lanes[lane.index()].push_back(item);
+                let depth = st.len();
                 drop(st);
                 self.not_empty.notify_one();
                 return Ok(depth);
             }
-            st = self.not_full.wait(st).unwrap();
+            st = lock_unpoisoned(self.not_full.wait(st));
         }
     }
 
-    /// Enqueue a whole batch, blocking while full. The queue is locked
-    /// once per chunk of available slots rather than once per item — the
-    /// batched-submission fast path — and consumers are woken after each
-    /// chunk so they can drain while the tail of the batch waits.
-    /// Returns the final depth, or the unpushed remainder if the queue
-    /// closed mid-batch.
-    pub(crate) fn push_all(&self, items: Vec<T>) -> Result<usize, Vec<T>> {
+    /// Non-blocking enqueue on `lane`: either the item is in (returning
+    /// the depth) or it comes straight back with the reason — the shed
+    /// path never stalls the caller.
+    pub(crate) fn try_push(&self, item: T, lane: Lane) -> Result<usize, TryPushError<T>> {
+        let mut st = lock_unpoisoned(self.state.lock());
+        if st.closed {
+            return Err(TryPushError::Closed(item));
+        }
+        if st.len() >= st.cap {
+            return Err(TryPushError::Full(item));
+        }
+        st.lanes[lane.index()].push_back(item);
+        let depth = st.len();
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(depth)
+    }
+
+    /// Enqueue a whole batch on one lane, blocking while full. The queue
+    /// is locked once per chunk of available slots rather than once per
+    /// item — the batched-submission fast path — and consumers are woken
+    /// after each chunk so they can drain while the tail of the batch
+    /// waits. Returns the final depth, or the unpushed remainder if the
+    /// queue closed mid-batch.
+    pub(crate) fn push_all(&self, items: Vec<T>, lane: Lane) -> Result<usize, Vec<T>> {
         let mut it = items.into_iter();
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(self.state.lock());
         loop {
             if st.closed {
                 return Err(it.collect());
             }
             let mut pushed = false;
-            while st.items.len() < st.cap {
+            while st.len() < st.cap {
                 match it.next() {
                     Some(x) => {
-                        st.items.push_back(x);
+                        st.lanes[lane.index()].push_back(x);
                         pushed = true;
                     }
                     None => {
-                        let depth = st.items.len();
+                        let depth = st.len();
                         drop(st);
                         if pushed {
                             self.not_empty.notify_all();
@@ -96,15 +143,19 @@ impl<T> BoundedQueue<T> {
             // Queue full with batch remaining: wake the consumers, then
             // wait for them to free slots.
             self.not_empty.notify_all();
-            st = self.not_full.wait(st).unwrap();
+            st = lock_unpoisoned(self.not_full.wait(st));
         }
     }
 
     /// Dequeue, blocking while empty; `None` once closed and drained.
+    /// The interactive lane always overtakes the batch lane.
     pub(crate) fn pop(&self) -> Option<T> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(self.state.lock());
         loop {
-            if let Some(item) = st.items.pop_front() {
+            if let Some(item) = st.lanes[Lane::Interactive.index()]
+                .pop_front()
+                .or_else(|| st.lanes[Lane::Batch.index()].pop_front())
+            {
                 drop(st);
                 self.not_full.notify_one();
                 return Some(item);
@@ -112,27 +163,27 @@ impl<T> BoundedQueue<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = lock_unpoisoned(self.not_empty.wait(st));
         }
     }
 
     pub(crate) fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        lock_unpoisoned(self.state.lock()).len()
     }
 
     pub(crate) fn capacity(&self) -> usize {
-        self.state.lock().unwrap().cap
+        lock_unpoisoned(self.state.lock()).cap
     }
 
     pub(crate) fn set_capacity(&self, cap: usize) {
-        self.state.lock().unwrap().cap = cap.max(1);
+        lock_unpoisoned(self.state.lock()).cap = cap.max(1);
         self.not_full.notify_all();
     }
 
     /// Stop accepting pushes and wake everyone; queued items still drain
     /// through `pop`.
     pub(crate) fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_unpoisoned(self.state.lock()).closed = true;
         self.not_full.notify_all();
         self.not_empty.notify_all();
     }
@@ -180,20 +231,67 @@ impl RequestSlot {
     }
 }
 
-/// One queued request: its body, the submitter's ticket, and the queue
-/// stopwatch (wait-vs-service latency split).
+/// One queued request: its body, the submitter's ticket, the queue
+/// stopwatch (wait-vs-service latency split), and the admission-time
+/// scheduling attributes (lane + request-carried deadline).
 pub(crate) struct PipelineJob {
     pub(crate) req: RequestSlot,
     pub(crate) ticket: Arc<TicketInner>,
     pub(crate) queued: Timer,
+    pub(crate) lane: Lane,
+    pub(crate) deadline: Option<Instant>,
 }
+
+/// Why an ordering request did not produce a reply — the typed half of
+/// [`Ticket::wait_result`]. Every abandonment path in the pipeline maps
+/// to exactly one variant; none of them panic the waiter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OrderError {
+    /// Processing failed: the ordering panicked (contained by the
+    /// scheduler/dispatcher `catch_unwind`) or the service shut down
+    /// with the request still queued. The message says which.
+    Failed(String),
+    /// The request was cancelled — ticket dropped, [`Ticket::cancel`]
+    /// called, or a [`Ticket::wait_deadline`] expiry withdrew interest.
+    Cancelled,
+    /// The request-carried deadline expired before completion; doomed
+    /// work was abandoned at a stage boundary or between elimination
+    /// rounds.
+    DeadlineExceeded,
+    /// Shed at admission (`try_submit`): the service is over its
+    /// in-flight budget, the queue is full, or the caller is out of
+    /// quota tokens. Back off for roughly the hint before retrying.
+    Rejected {
+        /// How long the service suggests waiting before a retry.
+        retry_after_hint: Duration,
+    },
+}
+
+impl std::fmt::Display for OrderError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // Bare message: `wait()` prefixes "order ticket failed: ",
+            // preserving the historical panic text verbatim.
+            OrderError::Failed(why) => f.write_str(why),
+            OrderError::Cancelled => f.write_str("request cancelled"),
+            OrderError::DeadlineExceeded => f.write_str("request deadline exceeded"),
+            OrderError::Rejected { retry_after_hint } => write!(
+                f,
+                "request rejected by admission control; retry after ~{}ms",
+                retry_after_hint.as_millis()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for OrderError {}
 
 #[derive(Debug)]
 enum TicketState {
     Pending,
     Ready(OrderReply),
     Taken,
-    Failed(String),
+    Failed(OrderError),
 }
 
 /// A batch-wide completion queue: one condvar shared by every ticket of
@@ -215,19 +313,21 @@ impl WaitBatch {
     }
 
     fn notify(&self, index: usize) {
-        self.ready.lock().unwrap().push_back(index);
+        // Plain index queue: recover from poison rather than losing the
+        // whole batch harvest to one panicked resolver.
+        lock_unpoisoned(self.ready.lock()).push_back(index);
         self.cv.notify_all();
     }
 
     /// Block until some ticket of the batch resolved; returns its index
     /// in completion order.
     pub(crate) fn wait_one(&self) -> usize {
-        let mut ready = self.ready.lock().unwrap();
+        let mut ready = lock_unpoisoned(self.ready.lock());
         loop {
             if let Some(i) = ready.pop_front() {
                 return i;
             }
-            ready = self.cv.wait(ready).unwrap();
+            ready = lock_unpoisoned(self.cv.wait(ready));
         }
     }
 }
@@ -247,6 +347,10 @@ pub(crate) struct TicketInner {
     st: Mutex<TicketSt>,
     cv: Condvar,
     cancel: AtomicBool,
+    /// Set by the deadline reaper (or a stage-boundary check) when the
+    /// request-carried deadline expired: distinguishes a deadline abort
+    /// from an ordinary cancellation when the engine unwinds.
+    deadline_fired: AtomicBool,
     /// The request's flight recorder — created with the ticket (its
     /// epoch is submit time) and shared down the scheduler, engine, and
     /// shard dispatchers.
@@ -255,7 +359,9 @@ pub(crate) struct TicketInner {
 
 impl TicketInner {
     fn resolve(&self, to: TicketState) {
-        let mut st = self.st.lock().unwrap();
+        // Ticket state is a plain enum swap; recover from poison so one
+        // panicked waiter can't wedge resolution for the scheduler.
+        let mut st = lock_unpoisoned(self.st.lock());
         if matches!(st.state, TicketState::Pending) {
             st.state = to;
             let watcher = st.watcher.take();
@@ -272,11 +378,35 @@ impl TicketInner {
     }
 
     pub(crate) fn fail(&self, why: impl Into<String>) {
-        self.resolve(TicketState::Failed(why.into()));
+        self.resolve(TicketState::Failed(OrderError::Failed(why.into())));
+    }
+
+    /// Resolve with a typed error (cancellation, deadline, rejection).
+    pub(crate) fn fail_with(&self, err: OrderError) {
+        self.resolve(TicketState::Failed(err));
     }
 
     pub(crate) fn is_cancelled(&self) -> bool {
         self.cancel.load(Relaxed)
+    }
+
+    /// Mark the request-carried deadline as expired and abort the work:
+    /// sets the same cancel flag the elimination rounds already poll, so
+    /// an in-flight kernel stops at its next round boundary, while the
+    /// `deadline_fired` bit routes the outcome to
+    /// [`OrderError::DeadlineExceeded`] instead of `Cancelled`.
+    pub(crate) fn expire_deadline(&self) {
+        self.deadline_fired.store(true, Relaxed);
+        self.cancel.store(true, Relaxed);
+    }
+
+    pub(crate) fn deadline_fired(&self) -> bool {
+        self.deadline_fired.load(Relaxed)
+    }
+
+    /// Whether the ticket is still unresolved (reaper housekeeping).
+    pub(crate) fn is_pending(&self) -> bool {
+        matches!(lock_unpoisoned(self.st.lock()).state, TicketState::Pending)
     }
 
     /// The flag threaded into `ParAmd::order_into_cancellable`.
@@ -322,6 +452,7 @@ impl Ticket {
             }),
             cv: Condvar::new(),
             cancel: AtomicBool::new(false),
+            deadline_fired: AtomicBool::new(false),
             trace: Arc::new(RequestTrace::new()),
         });
         (
@@ -336,7 +467,7 @@ impl Ticket {
     /// Returns `false` (without registering) when the ticket has already
     /// resolved — the caller harvests it immediately instead.
     pub(crate) fn attach_watcher(&self, batch: &Arc<WaitBatch>, index: usize) -> bool {
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = lock_unpoisoned(self.inner.st.lock());
         if matches!(st.state, TicketState::Pending) {
             st.watcher = Some((Arc::clone(batch), index));
             true
@@ -351,7 +482,12 @@ impl Ticket {
     /// ([`crate::coordinator::Service::wait_all`]) never loses the other
     /// outcomes to one already-consumed ticket.
     pub(crate) fn take_result(&self) -> Option<Result<OrderReply, String>> {
-        let mut st = self.inner.st.lock().unwrap();
+        self.take_result_typed().map(|r| r.map_err(|e| e.to_string()))
+    }
+
+    /// [`Self::take_result`] with the typed error preserved.
+    pub(crate) fn take_result_typed(&self) -> Option<Result<OrderReply, OrderError>> {
+        let mut st = lock_unpoisoned(self.inner.st.lock());
         match std::mem::replace(&mut st.state, TicketState::Taken) {
             TicketState::Ready(reply) => Some(Ok(reply)),
             TicketState::Failed(why) => Some(Err(why)),
@@ -359,7 +495,32 @@ impl Ticket {
                 st.state = TicketState::Pending;
                 None
             }
-            TicketState::Taken => Some(Err("order ticket already consumed".into())),
+            TicketState::Taken => {
+                Some(Err(OrderError::Failed("order ticket already consumed".into())))
+            }
+        }
+    }
+
+    /// Block until the request resolves and return the typed outcome:
+    /// the reply, or exactly why the pipeline abandoned it
+    /// ([`OrderError::Failed`] / `Cancelled` / `DeadlineExceeded` /
+    /// `Rejected`). Never panics — this is the API services should wait
+    /// on; [`Self::wait`] is the panicking shim kept for the synchronous
+    /// `order()` contract.
+    pub fn wait_result(self) -> Result<OrderReply, OrderError> {
+        let mut st = lock_unpoisoned(self.inner.st.lock());
+        loop {
+            match std::mem::replace(&mut st.state, TicketState::Taken) {
+                TicketState::Ready(reply) => return Ok(reply),
+                TicketState::Pending => {
+                    st.state = TicketState::Pending;
+                    st = lock_unpoisoned(self.inner.cv.wait(st));
+                }
+                TicketState::Failed(why) => return Err(why),
+                TicketState::Taken => {
+                    return Err(OrderError::Failed("order ticket already consumed".into()))
+                }
+            }
         }
     }
 
@@ -367,25 +528,15 @@ impl Ticket {
     ///
     /// Panics if the pipeline abandoned the request (service shut down,
     /// the request was cancelled, or the ordering panicked) — the same
-    /// contract the synchronous `order()` shim has always had.
+    /// contract the synchronous `order()` shim has always had. Prefer
+    /// [`Self::wait_result`] for a typed, non-panicking outcome.
     pub fn wait(self) -> OrderReply {
-        let mut st = self.inner.st.lock().unwrap();
-        loop {
-            match std::mem::replace(&mut st.state, TicketState::Taken) {
-                TicketState::Ready(reply) => return reply,
-                TicketState::Pending => {
-                    st.state = TicketState::Pending;
-                    st = self.inner.cv.wait(st).unwrap();
-                }
-                TicketState::Failed(why) => {
-                    drop(st);
-                    panic!("order ticket failed: {why}");
-                }
-                TicketState::Taken => {
-                    drop(st);
-                    panic!("order ticket already consumed");
-                }
+        match self.wait_result() {
+            Ok(reply) => reply,
+            Err(OrderError::Failed(why)) if why == "order ticket already consumed" => {
+                panic!("order ticket already consumed")
             }
+            Err(why) => panic!("order ticket failed: {why}"),
         }
     }
 
@@ -402,7 +553,7 @@ impl Ticket {
     /// before the deadline.
     pub fn wait_deadline(self, timeout: Duration) -> Result<OrderReply, WaitTimeout> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = lock_unpoisoned(self.inner.st.lock());
         loop {
             match std::mem::replace(&mut st.state, TicketState::Taken) {
                 TicketState::Ready(reply) => return Ok(reply),
@@ -414,7 +565,7 @@ impl Ticket {
                         self.inner.cancel.store(true, Relaxed);
                         return Err(WaitTimeout);
                     }
-                    st = self.inner.cv.wait_timeout(st, deadline - now).unwrap().0;
+                    st = lock_unpoisoned(self.inner.cv.wait_timeout(st, deadline - now)).0;
                 }
                 TicketState::Failed(why) => {
                     drop(st);
@@ -441,7 +592,7 @@ impl Ticket {
 
     /// Whether the ticket has resolved (reply ready, taken, or failed).
     pub fn is_finished(&self) -> bool {
-        !matches!(self.inner.st.lock().unwrap().state, TicketState::Pending)
+        !self.inner.is_pending()
     }
 
     /// The request's flight recorder: inspect the recorded spans,
@@ -550,7 +701,7 @@ mod tests {
     #[test]
     fn push_all_fits_in_one_reservation() {
         let q = BoundedQueue::new(8);
-        assert_eq!(q.push_all(vec![1, 2, 3]).unwrap(), 3);
+        assert_eq!(q.push_all(vec![1, 2, 3], Lane::Batch).unwrap(), 3);
         assert_eq!(q.pop(), Some(1));
         assert_eq!(q.pop(), Some(2));
         assert_eq!(q.pop(), Some(3));
@@ -564,7 +715,7 @@ mod tests {
         std::thread::scope(|s| {
             let q = &q;
             s.spawn(move || {
-                assert!(q.push_all((0..5u32).collect()).is_ok());
+                assert!(q.push_all((0..5u32).collect(), Lane::Batch).is_ok());
             });
             let mut got = Vec::new();
             for _ in 0..5 {
@@ -578,7 +729,7 @@ mod tests {
     fn push_all_returns_remainder_when_closed() {
         let q = BoundedQueue::new(4);
         q.close();
-        assert_eq!(q.push_all(vec![7u8, 8]), Err(vec![7, 8]));
+        assert_eq!(q.push_all(vec![7u8, 8], Lane::Batch), Err(vec![7, 8]));
     }
 
     #[test]
@@ -667,5 +818,77 @@ mod tests {
             .expect_err("pending ticket must time out");
         assert_eq!(err, WaitTimeout);
         assert!(inner.is_cancelled(), "expiry must cancel the request");
+    }
+
+    #[test]
+    fn interactive_lane_overtakes_batch_in_pop_order() {
+        let q = BoundedQueue::new(8);
+        q.push_lane('b', Lane::Batch).unwrap();
+        q.push_lane('c', Lane::Batch).unwrap();
+        q.push_lane('i', Lane::Interactive).unwrap();
+        q.push_lane('j', Lane::Interactive).unwrap();
+        assert_eq!(q.len(), 4, "capacity accounting spans both lanes");
+        let order: Vec<char> = (0..4).map(|_| q.pop().unwrap()).collect();
+        assert_eq!(order, vec!['i', 'j', 'b', 'c'], "interactive first, FIFO within");
+    }
+
+    #[test]
+    fn try_push_sheds_instead_of_blocking() {
+        let q = BoundedQueue::new(1);
+        assert!(q.try_push(1u8, Lane::Batch).is_ok());
+        match q.try_push(2, Lane::Interactive) {
+            Err(TryPushError::Full(item)) => assert_eq!(item, 2, "item handed back"),
+            _ => panic!("full queue must shed, not block"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        q.close();
+        match q.try_push(3, Lane::Batch) {
+            Err(TryPushError::Closed(item)) => assert_eq!(item, 3),
+            _ => panic!("closed queue must report Closed"),
+        }
+    }
+
+    #[test]
+    fn wait_result_returns_typed_errors_without_panicking() {
+        let (ticket, inner) = Ticket::new();
+        inner.fail("boom");
+        assert_eq!(ticket.wait_result(), Err(OrderError::Failed("boom".into())));
+
+        let (ticket, inner) = Ticket::new();
+        inner.fail_with(OrderError::Cancelled);
+        assert_eq!(ticket.wait_result(), Err(OrderError::Cancelled));
+
+        let (ticket, inner) = Ticket::new();
+        inner.fail_with(OrderError::DeadlineExceeded);
+        assert_eq!(ticket.wait_result(), Err(OrderError::DeadlineExceeded));
+
+        let (ticket, inner) = Ticket::new();
+        inner.fulfill(dummy_reply(4));
+        assert_eq!(ticket.wait_result().unwrap().perm, vec![4]);
+    }
+
+    #[test]
+    fn expire_deadline_sets_cancel_and_routes_the_outcome() {
+        let (ticket, inner) = Ticket::new();
+        assert!(!inner.deadline_fired());
+        inner.expire_deadline();
+        assert!(inner.is_cancelled(), "expiry aborts via the existing cancel flag");
+        assert!(inner.deadline_fired());
+        inner.fail_with(OrderError::DeadlineExceeded);
+        assert_eq!(ticket.wait_result(), Err(OrderError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn order_error_displays_are_stable() {
+        assert_eq!(OrderError::Failed("x".into()).to_string(), "x");
+        assert_eq!(OrderError::Cancelled.to_string(), "request cancelled");
+        assert_eq!(
+            OrderError::DeadlineExceeded.to_string(),
+            "request deadline exceeded"
+        );
+        let r = OrderError::Rejected {
+            retry_after_hint: Duration::from_millis(25),
+        };
+        assert!(r.to_string().contains("retry after ~25ms"), "{r}");
     }
 }

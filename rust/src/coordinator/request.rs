@@ -1,8 +1,81 @@
-//! Request/reply types of the ordering service.
+//! Request/reply types of the ordering service, plus the per-submission
+//! scheduling attributes (priority lane, request-carried deadline,
+//! caller identity for quotas).
+
+use std::time::{Duration, Instant};
 
 use crate::graph::csr::{CsrMatrix, SymGraph};
 use crate::ordering::RoundSample;
 use crate::util::rng::Rng;
+
+/// Priority lane of a submission. Interactive requests overtake batch
+/// requests in the pipeline queue *and* in every shard's job queue —
+/// priority changes service order, never how much the service buffers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Latency-sensitive traffic: served before any queued batch work.
+    Interactive,
+    /// Throughput traffic (the default): drained FIFO behind interactive.
+    #[default]
+    Batch,
+}
+
+impl Lane {
+    /// Queue-array index: interactive lane first.
+    pub(crate) fn index(self) -> usize {
+        match self {
+            Lane::Interactive => 0,
+            Lane::Batch => 1,
+        }
+    }
+}
+
+/// Per-submission scheduling attributes, all optional: the lane, a
+/// request-carried deadline (checked at every pipeline stage boundary
+/// and, via the abort flag, between elimination rounds), and a caller
+/// name for per-caller token quotas. `Default` is a batch-lane request
+/// with no deadline and no caller identity.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitOptions {
+    pub lane: Lane,
+    /// Absolute deadline; expired work resolves the ticket to
+    /// [`OrderError::DeadlineExceeded`](super::OrderError::DeadlineExceeded).
+    pub deadline: Option<Instant>,
+    /// Caller identity for admission quotas (`None` = unmetered).
+    pub caller: Option<String>,
+}
+
+impl SubmitOptions {
+    /// An interactive-lane submission.
+    pub fn interactive() -> Self {
+        Self {
+            lane: Lane::Interactive,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_lane(mut self, lane: Lane) -> Self {
+        self.lane = lane;
+        self
+    }
+
+    /// Set an absolute deadline.
+    pub fn with_deadline(mut self, at: Instant) -> Self {
+        self.deadline = Some(at);
+        self
+    }
+
+    /// Set a deadline `budget` from now.
+    pub fn with_deadline_in(self, budget: Duration) -> Self {
+        self.with_deadline(Instant::now() + budget)
+    }
+
+    /// Attribute the submission to `caller` for quota accounting.
+    pub fn with_caller(mut self, caller: impl Into<String>) -> Self {
+        self.caller = Some(caller.into());
+        self
+    }
+}
 
 /// Which ordering algorithm to run.
 #[derive(Clone, Copy, Debug, PartialEq)]

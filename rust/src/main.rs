@@ -17,6 +17,8 @@
 //!         [--cache-mb MB] [--no-cache]
 //!         [--hybrid] [--partition-threshold N] [--recursion-depth D]
 //!         [--balance-factor B]
+//!         [--max-inflight N] [--quota RATE[:BURST]] [--deadline-ms MS]
+//!         [--shed-quality] [--shed-threshold Q] [--failpoints SPEC]
 //!         [--metrics-every N] [--trace-dir D] [--trace-slow-ms MS]
 //!         — service demo with metrics; `--pipeline` submits every
 //!         request as a ticket up front (async, backpressured) instead
@@ -51,14 +53,39 @@
 //!         JSON files into D (loadable in Perfetto / about:tracing) and
 //!         `--trace-slow-ms MS` restricts the dumps to requests at
 //!         least MS milliseconds end to end (default 0 = every request)
+//!
+//! Overload & fault-injection flags (`serve --pipeline`):
+//!   `--max-inflight N` caps admitted-but-unresolved requests; with it
+//!   (or `--quota`) set, submissions go through the non-blocking
+//!   admission path and excess requests are shed immediately with a
+//!   structured rejection (counted in
+//!   `paramd_pipeline_rejected_total`) instead of queueing. `--quota
+//!   RATE[:BURST]` meters the demo caller with a token bucket of RATE
+//!   sustained requests/s and BURST peak (default BURST = 2×RATE).
+//!   `--deadline-ms MS` attaches a deadline MS milliseconds out to
+//!   every request: work lapsing past it is abandoned at the next
+//!   stage boundary and the ticket resolves to a typed
+//!   deadline-exceeded error (`paramd_pipeline_deadline_exceeded_total`).
+//!   `--shed-quality` trades ordering quality for availability under
+//!   pressure (skip hybrid partitioning, skip re-reduction sweeps,
+//!   sequential AMD for small components — `paramd_shed_*_total`);
+//!   `--shed-threshold Q` sets the queue depth where shedding starts
+//!   (default 1; 0 = shed every request while enabled). `--failpoints
+//!   'name=action[*count],...'` arms named fault-injection points
+//!   (actions: panic | reject | sleep:<ms>; the `PARAMD_FAILPOINTS`
+//!   env var arms the same grammar at startup) so the chaos suite and
+//!   CI can prove one poisoned request never wedges the service.
+
+use std::time::Duration;
 
 use paramd::cli::Args;
 use paramd::coordinator::{
-    HybridConfig, Method, OrderRequest, QueuePolicy, Service, SolveSpec, Ticket,
+    HybridConfig, Method, OrderRequest, QueuePolicy, Service, SolveSpec, SubmitOptions, Ticket,
 };
 use paramd::graph::csr::CsrMatrix;
 use paramd::graph::mm;
 use paramd::matgen::{self, Scale};
+use paramd::util::failpoint;
 
 fn scale_of(s: &str) -> Scale {
     match s {
@@ -108,6 +135,10 @@ fn hybrid_of(args: &Args) -> Option<HybridConfig> {
 }
 
 fn main() {
+    if let Err(e) = failpoint::arm_from_env() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
     let args = Args::from_env(&[
         "pjrt",
         "no-fill",
@@ -117,6 +148,7 @@ fn main() {
         "no-rereduce",
         "no-cache",
         "hybrid",
+        "shed-quality",
     ]);
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
@@ -229,6 +261,9 @@ fn cmd_suite() -> Result<(), String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let n_req = args.get_parse("requests", 8usize);
     let shards = args.get_parse("shards", 1usize);
+    if let Some(spec) = args.get("failpoints") {
+        failpoint::arm_spec(spec)?;
+    }
     let mut svc = Service::new(args.get_parse("pre-threads", 2usize))
         .with_shards(shards)
         .with_shard_threads(args.get_parse("shard-threads", 2usize))
@@ -249,6 +284,41 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if args.has("no-rereduce") {
         svc = svc.with_rereduce(false);
     }
+    // Admission control: either knob flips --pipeline submissions onto
+    // the non-blocking try_submit path (excess requests shed, never
+    // queued behind the cap).
+    let admission = args.get("max-inflight").is_some() || args.get("quota").is_some();
+    if let Some(n) = args.get("max-inflight") {
+        let n: usize = n.parse().map_err(|_| format!("bad --max-inflight '{n}'"))?;
+        svc = svc.with_max_inflight(n);
+    }
+    if let Some(spec) = args.get("quota") {
+        let (rate, burst) = match spec.split_once(':') {
+            Some((r, b)) => (
+                r.parse().map_err(|_| format!("bad --quota rate '{r}'"))?,
+                b.parse().map_err(|_| format!("bad --quota burst '{b}'"))?,
+            ),
+            None => {
+                let r: f64 = spec.parse().map_err(|_| format!("bad --quota '{spec}'"))?;
+                (r, (r * 2.0).max(1.0))
+            }
+        };
+        svc = svc.with_caller_quota(rate, burst);
+    }
+    if args.has("shed-quality") {
+        svc = svc
+            .with_shed_quality(true)
+            .with_shed_threshold(args.get_parse("shed-threshold", 1usize));
+    }
+    let deadline_ms = args.get_parse("deadline-ms", 0u64);
+    let submit_opts = || {
+        let opts = SubmitOptions::default().with_caller("serve-demo");
+        if deadline_ms > 0 {
+            opts.with_deadline_in(Duration::from_millis(deadline_ms))
+        } else {
+            opts
+        }
+    };
     if let Some(h) = hybrid_of(args) {
         svc = svc.with_hybrid(h);
     }
@@ -291,23 +361,42 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
     if args.has("pipeline") {
         // Async mode: enqueue everything (submit blocks only when the
-        // bounded queue is full), then harvest the tickets in order.
+        // bounded queue is full; with admission control on, excess
+        // requests shed immediately instead), then harvest the tickets
+        // in order — failures print as typed errors, never panic.
         let mut pending: Vec<(usize, &str, Method, Ticket)> = Vec::new();
+        let mut shed = 0usize;
         for i in 0..n_req {
             let (name, method, req) = build(i);
-            pending.push((i, name, method, svc.submit(req)));
+            if admission {
+                match svc.try_submit_opts(req, &submit_opts()) {
+                    Ok(t) => pending.push((i, name, method, t)),
+                    Err(r) => {
+                        shed += 1;
+                        println!("req {i:>3}: {:<12} shed: {}", name, r.error);
+                    }
+                }
+            } else {
+                pending.push((i, name, method, svc.submit_opts(req, &submit_opts())));
+            }
         }
-        println!("submitted {n_req} tickets (queue depth now {})", svc.queue_depth());
+        println!(
+            "submitted {} tickets, shed {shed} (queue depth now {})",
+            pending.len(),
+            svc.queue_depth()
+        );
         for (i, name, method, ticket) in pending {
-            let rep = ticket.wait();
-            println!(
-                "req {i:>3}: {:<12} {:<7} n={:<7} {:.4}s fill={:.2e}",
-                name,
-                method.name(),
-                rep.perm.len(),
-                rep.total_secs,
-                rep.fill_in.unwrap_or(0) as f64
-            );
+            match ticket.wait_result() {
+                Ok(rep) => println!(
+                    "req {i:>3}: {:<12} {:<7} n={:<7} {:.4}s fill={:.2e}",
+                    name,
+                    method.name(),
+                    rep.perm.len(),
+                    rep.total_secs,
+                    rep.fill_in.unwrap_or(0) as f64
+                ),
+                Err(e) => println!("req {i:>3}: {:<12} {:<7} error: {e}", name, method.name()),
+            }
             expose(&svc, i + 1);
         }
     } else {

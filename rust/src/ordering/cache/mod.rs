@@ -47,6 +47,8 @@ use crate::graph::csr::SymGraph;
 use crate::graph::fingerprint::{fingerprint, Fingerprint};
 use crate::ordering::paramd::ParAmd;
 use crate::ordering::reduce::ReduceConfig;
+use crate::util::failpoint;
+use crate::util::lock_unpoisoned;
 use crate::util::rng::splitmix64;
 
 /// Default byte budget of a service's result cache (64 MiB).
@@ -294,7 +296,7 @@ impl ResultCache {
         }
         let mut candidates: Vec<(u64, usize, CacheKey)> = Vec::new();
         for (i, shard) in self.shards.iter().enumerate() {
-            let sh = shard.lock().unwrap();
+            let sh = lock_unpoisoned(shard.lock());
             candidates.extend(sh.entries.iter().map(|(k, e)| (e.tick, i, *k)));
         }
         candidates.sort_unstable_by_key(|&(tick, _, _)| tick);
@@ -302,7 +304,7 @@ impl ResultCache {
             if self.bytes.load(Relaxed) <= budget {
                 break;
             }
-            let mut sh = self.shards[i].lock().unwrap();
+            let mut sh = lock_unpoisoned(self.shards[i].lock());
             if let Some(e) = sh.entries.remove(&key) {
                 sh.bytes -= e.bytes;
                 self.bytes.fetch_sub(e.bytes, Relaxed);
@@ -323,6 +325,11 @@ impl ResultCache {
     /// verify-reject and falls through to a miss, so collisions can
     /// never corrupt a result. A hit refreshes the entry's LRU tick and
     /// returns an owned copy of the cached result.
+    ///
+    /// The chaos suite forces the reject path through the
+    /// [`failpoint::CACHE_VERIFY`] failpoint: armed with `reject`, a
+    /// would-be hit downgrades to a verify-reject miss — proving the
+    /// callers really treat rejects as misses and recompute.
     pub fn get(
         &self,
         key: &CacheKey,
@@ -332,9 +339,16 @@ impl ResultCache {
         if !self.is_enabled() {
             return None;
         }
-        let mut sh = self.shard(key).lock().unwrap();
+        // Poison recovery: shard state is a plain map + byte tally kept
+        // consistent within each critical section, so a panicking thread
+        // (e.g. an armed failpoint) must not wedge every later probe.
+        let mut sh = lock_unpoisoned(self.shard(key).lock());
         match sh.entries.get_mut(key) {
-            Some(e) if e.graph == *graph && e.weights.as_deref() == weights => {
+            Some(e)
+                if e.graph == *graph
+                    && e.weights.as_deref() == weights
+                    && !failpoint::should_reject(failpoint::CACHE_VERIFY) =>
+            {
                 e.tick = self.tick.fetch_add(1, Relaxed) + 1;
                 self.hits.fetch_add(1, Relaxed);
                 self.saved_nanos
@@ -374,7 +388,7 @@ impl ResultCache {
         }
         let tick = self.tick.fetch_add(1, Relaxed) + 1;
         {
-            let mut sh = self.shard(&key).lock().unwrap();
+            let mut sh = lock_unpoisoned(self.shard(&key).lock());
             if let Some(old) = sh.entries.insert(
                 key,
                 Entry {
@@ -397,7 +411,10 @@ impl ResultCache {
 
     /// Entries currently resident (sums the shards).
     pub fn entries(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().entries.len()).sum()
+        self.shards
+            .iter()
+            .map(|s| lock_unpoisoned(s.lock()).entries.len())
+            .sum()
     }
 
     /// Snapshot every counter.

@@ -40,6 +40,7 @@ use crate::graph::perm::invert_perm_into;
 use crate::ordering::{
     rebuild_perm_into, OrderingResult, OrderingStats, RebuildScratch, RoundSample,
 };
+use crate::util::failpoint;
 use crate::util::timer::PhaseTimes;
 
 use super::cost;
@@ -758,7 +759,13 @@ impl ArenaPool {
     /// [`Self::acquire`] wrapped in an RAII guard that releases on drop
     /// (including on unwind, so a panicking request can't strand the
     /// pool's capacity accounting).
+    ///
+    /// The [`failpoint::ARENA_CHECKOUT`] hook fires *before* the acquire
+    /// — an injected allocation failure panics with no arena checked
+    /// out, so the chaos suite can prove exhaustion never corrupts the
+    /// pool's accounting.
     pub fn checkout(&self) -> PooledArena<'_> {
+        failpoint::hit(failpoint::ARENA_CHECKOUT);
         PooledArena {
             pool: self,
             arena: Some(self.acquire()),

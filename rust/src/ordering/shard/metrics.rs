@@ -93,6 +93,15 @@ pub struct ShardMetrics {
     /// Dispatcher busy seconds attributed to hybrid **subdomain** jobs
     /// (divide by `subdomains` for per-subdomain busy time).
     pub subdomain_busy_secs: f64,
+    /// Quality sheds that skipped the hybrid ND×ParAMD partition on a
+    /// connected request (served single-job instead).
+    pub shed_hybrid: u64,
+    /// Quality sheds that disabled the mid-elimination re-reduction
+    /// sweep for a request.
+    pub shed_rereduce: u64,
+    /// Components/kernels a quality shed ordered inline with sequential
+    /// AMD instead of dispatching a ParAMD shard job.
+    pub shed_sequential: u64,
     /// Per-shard job/busy table, indexed by shard id (0 = wide shard).
     pub per_shard: Vec<ShardStat>,
     /// log2-bucketed component sizes ([`SIZE_HIST_BUCKETS`] buckets).
@@ -152,6 +161,12 @@ impl ShardMetrics {
                 per_sub
             ));
         }
+        if self.shed_hybrid + self.shed_rereduce + self.shed_sequential > 0 {
+            s.push_str(&format!(
+                "  shed: hybrid={} rereduce={} sequential={}\n",
+                self.shed_hybrid, self.shed_rereduce, self.shed_sequential
+            ));
+        }
         for (i, st) in self.per_shard.iter().enumerate() {
             s.push_str(&format!(
                 "  shard {i}: threads={} jobs={} busy={:.4}s p95={:.4}s\n",
@@ -191,6 +206,9 @@ pub(crate) struct EngineCounters {
     pub(crate) hybrid_vertices: AtomicU64,
     pub(crate) partition_nanos: AtomicU64,
     pub(crate) subdomain_busy_nanos: AtomicU64,
+    pub(crate) shed_hybrid: AtomicU64,
+    pub(crate) shed_rereduce: AtomicU64,
+    pub(crate) shed_sequential: AtomicU64,
     gc_count: AtomicU64,
     gc_nanos: AtomicU64,
     rereduce_passes: AtomicU64,
@@ -223,6 +241,9 @@ impl EngineCounters {
             hybrid_vertices: AtomicU64::new(0),
             partition_nanos: AtomicU64::new(0),
             subdomain_busy_nanos: AtomicU64::new(0),
+            shed_hybrid: AtomicU64::new(0),
+            shed_rereduce: AtomicU64::new(0),
+            shed_sequential: AtomicU64::new(0),
             gc_count: AtomicU64::new(0),
             gc_nanos: AtomicU64::new(0),
             rereduce_passes: AtomicU64::new(0),
@@ -327,6 +348,9 @@ impl EngineCounters {
             hybrid_vertices: self.hybrid_vertices.load(Relaxed),
             partition_secs: self.partition_nanos.load(Relaxed) as f64 / 1e9,
             subdomain_busy_secs: self.subdomain_busy_nanos.load(Relaxed) as f64 / 1e9,
+            shed_hybrid: self.shed_hybrid.load(Relaxed),
+            shed_rereduce: self.shed_rereduce.load(Relaxed),
+            shed_sequential: self.shed_sequential.load(Relaxed),
             per_shard,
             size_hist: self.size_hist.iter().map(|b| b.load(Relaxed)).collect(),
         }
@@ -406,6 +430,21 @@ mod tests {
         let r = m.report();
         assert!(r.contains("hybrid: requests=1 subdomains=4 separators=3"));
         assert!(r.contains("sep_frac=0.0500"));
+    }
+
+    #[test]
+    fn shed_line_appears_only_after_a_shed() {
+        let c = EngineCounters::new();
+        assert!(!c.snapshot(Vec::new()).report().contains("shed:"));
+        c.shed_hybrid.fetch_add(1, Relaxed);
+        c.shed_rereduce.fetch_add(2, Relaxed);
+        c.shed_sequential.fetch_add(3, Relaxed);
+        let m = c.snapshot(Vec::new());
+        assert_eq!(
+            (m.shed_hybrid, m.shed_rereduce, m.shed_sequential),
+            (1, 2, 3)
+        );
+        assert!(m.report().contains("shed: hybrid=1 rereduce=2 sequential=3"));
     }
 
     #[test]

@@ -87,6 +87,24 @@
 //! before returning, which is also what makes the lifetime-erased
 //! borrows in [`GraphRef`]/[`CancelRef`] sound.
 //!
+//! ## Deadlines, lanes, and quality shedding
+//!
+//! [`ShardEngine::order_opts`] carries the coordinator's per-request
+//! scheduling attributes into the engine. A request-carried deadline is
+//! re-checked at every engine seam — before reduction, before routing,
+//! and at dispatch — and an expired request resolves to `None` without
+//! dispatching further work. Interactive-lane jobs overtake queued
+//! batch jobs in every shard queue (priority changes service order,
+//! never buffering). Under `shed_quality` the engine trades ordering
+//! quality for availability: the hybrid partition and the
+//! mid-elimination sweeps are skipped — by transforming the *effective*
+//! configs before any cache salt is taken, so cache identity always
+//! reflects what actually ran — and small components run inline through
+//! sequential AMD, bypassing router, queue, runtime, and arena
+//! entirely. Sequential stand-ins are valid orderings but not ParAMD's,
+//! so they never enter the result cache. Every shed is tallied in
+//! [`ShardMetrics`].
+//!
 //! ## Result cache
 //!
 //! Every engine owns a fingerprinted **result cache**
@@ -123,9 +141,12 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
+use crate::coordinator::Lane;
 use crate::graph::components::{connected_components, split_components, Component};
 use crate::graph::csr::SymGraph;
+use crate::ordering::amd_seq::AmdSeq;
 use crate::ordering::cache::{
     config_salt, hybrid_salt, reduce_salt, CacheKey, CacheMetrics, CachedOrdering, ResultCache,
 };
@@ -134,8 +155,10 @@ use crate::ordering::paramd::arena::ArenaPool;
 use crate::ordering::paramd::runtime::{OrderingRuntime, QueuePolicy};
 use crate::ordering::paramd::ParAmd;
 use crate::ordering::reduce::{try_reduce, ReduceConfig, ReductionPlan};
-use crate::ordering::RoundSample;
+use crate::ordering::{Ordering as _, RoundSample};
 use crate::telemetry::{shard_lane, RequestTrace, LANE_ENGINE};
+use crate::util::failpoint;
+use crate::util::lock_unpoisoned;
 use crate::util::panic_message;
 use crate::util::panic_message_for;
 use crate::util::stats::LogHistogram;
@@ -253,6 +276,52 @@ pub struct ShardReply {
     pub claim_failures: u64,
 }
 
+/// Components (or post-reduction kernels) at or under this vertex count
+/// run inline through sequential AMD when a request sheds quality —
+/// small enough that the sequential pass is cheap, large enough to
+/// relieve the shard queues of most FEM-style component swarms.
+pub const SEQ_SHED_MAX_N: usize = 2048;
+
+/// Per-request scheduling and degradation options of
+/// [`ShardEngine::order_opts`] — the engine-side view of the
+/// coordinator's admission, deadline, and shedding machinery.
+pub struct OrderOptions<'a> {
+    /// Cooperative cancellation flag shared with the submitter.
+    pub cancel: &'a AtomicBool,
+    /// Absolute deadline, re-checked at every engine seam (before
+    /// reduction, before routing, at dispatch); an expired request
+    /// resolves to `None` without dispatching further work.
+    pub deadline: Option<Instant>,
+    /// Priority lane: interactive jobs overtake queued batch jobs in
+    /// every shard queue.
+    pub lane: Lane,
+    /// Trade ordering quality for availability: skip the hybrid
+    /// partition and the mid-elimination sweeps, and order components
+    /// at or under [`SEQ_SHED_MAX_N`] vertices inline through
+    /// sequential AMD.
+    pub shed_quality: bool,
+    /// Flight recorder of the submitting request, when it carries one.
+    pub trace: Option<&'a Arc<RequestTrace>>,
+}
+
+impl<'a> OrderOptions<'a> {
+    /// Default options: batch lane, no deadline, full quality, untraced.
+    pub fn new(cancel: &'a AtomicBool) -> Self {
+        Self {
+            cancel,
+            deadline: None,
+            lane: Lane::Batch,
+            shed_quality: false,
+            trace: None,
+        }
+    }
+}
+
+/// Has the request-carried deadline lapsed?
+fn expired(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
+}
+
 /// Where a job's graph lives: component jobs own their extracted
 /// subgraph; the connected fast path borrows the caller's graph without
 /// a copy.
@@ -312,6 +381,11 @@ struct ShardJob {
     /// When set, this job was a cache miss under this key: the
     /// dispatcher inserts the (kernel-level) result on completion.
     cache_key: Option<CacheKey>,
+    /// Priority lane: interactive jobs overtake batch jobs at pop time.
+    lane: Lane,
+    /// The submitting request's deadline: a job found expired at pop
+    /// time resolves `Cancelled` without dispatching.
+    deadline: Option<Instant>,
     /// The submitting request's flight recorder, when it carries one:
     /// the dispatcher records its dispatch/elimination spans on
     /// [`shard_lane`]`(shard id)`.
@@ -416,6 +490,30 @@ fn expand_done(plan: &ReductionPlan, kernel: &CachedOrdering) -> CompDone {
     }
 }
 
+/// Order `g` inline with sequential AMD — the quality-shed stand-in for
+/// a small component. The whole component surfaces as one "round" in
+/// the merged log (sequential AMD has no independent-set structure),
+/// and the result carries no ParAMD telemetry.
+fn sequential_done(g: &SymGraph) -> CompDone {
+    let r = AmdSeq::default().order(g);
+    CompDone {
+        perm: r.perm,
+        rounds: r.stats.rounds,
+        gc_count: r.stats.gc_count,
+        gc_secs: r.stats.gc_secs,
+        modeled_time: r.stats.modeled_time,
+        set_sizes: if g.n > 0 { vec![g.n as u32] } else { Vec::new() },
+        busy_secs: 0.0,
+        rereduce_count: 0,
+        mid_twins_merged: 0,
+        mid_dense_postponed: 0,
+        elements_absorbed: 0,
+        rereduce_secs: 0.0,
+        round_samples: Vec::new(),
+        claim_failures: 0,
+    }
+}
+
 /// Batch-level observability aggregates a `run_parts` call returns
 /// alongside its component results.
 #[derive(Default)]
@@ -455,7 +553,10 @@ impl Batch {
     }
 
     fn resolve(&self, index: usize, outcome: SlotState) {
-        let mut st = self.state.lock().unwrap();
+        // Poison recovery: slot/counter updates are single-assignment,
+        // so a panicking peer can never leave them mid-mutation — and a
+        // poisoned batch latch would wedge its blocked submitter.
+        let mut st = lock_unpoisoned(self.state.lock());
         debug_assert!(matches!(st.slots[index], SlotState::Pending));
         st.slots[index] = outcome;
         st.remaining -= 1;
@@ -466,9 +567,9 @@ impl Batch {
     }
 
     fn wait(&self) -> Vec<SlotState> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(self.state.lock());
         while st.remaining > 0 {
-            st = self.done.wait(st).unwrap();
+            st = lock_unpoisoned(self.done.wait(st));
         }
         std::mem::take(&mut st.slots)
     }
@@ -500,7 +601,7 @@ impl JobQueue {
     }
 
     fn push(&self, job: ShardJob) -> Result<(), ShardJob> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(self.state.lock());
         if st.closed {
             return Err(job);
         }
@@ -510,39 +611,49 @@ impl JobQueue {
         Ok(())
     }
 
+    /// Pop the next job: the interactive lane drains before any queued
+    /// batch work, and within a lane the configured policy picks (FIFO
+    /// age or smallest weight). Blocks until a job arrives or the queue
+    /// closes.
     fn pop(&self) -> Option<ShardJob> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(self.state.lock());
         loop {
             if !st.jobs.is_empty() {
-                let idx = match st.policy {
-                    QueuePolicy::Fifo => 0,
-                    QueuePolicy::SmallestFirst => st
+                let pick = |st: &JobQueueState, interactive_only: bool| -> Option<usize> {
+                    let candidates = st
                         .jobs
                         .iter()
                         .enumerate()
-                        .min_by_key(|(i, j)| (j.weight, *i))
-                        .map(|(i, _)| i)
-                        .expect("non-empty queue"),
+                        .filter(|(_, j)| !interactive_only || j.lane == Lane::Interactive);
+                    match st.policy {
+                        QueuePolicy::Fifo => candidates.map(|(i, _)| i).next(),
+                        QueuePolicy::SmallestFirst => candidates
+                            .min_by_key(|(i, j)| (j.weight, *i))
+                            .map(|(i, _)| i),
+                    }
                 };
+                let idx = pick(&st, true)
+                    .or_else(|| pick(&st, false))
+                    .expect("non-empty queue");
                 return st.jobs.remove(idx);
             }
             if st.closed {
                 return None;
             }
-            st = self.available.wait(st).unwrap();
+            st = lock_unpoisoned(self.available.wait(st));
         }
     }
 
     fn set_policy(&self, policy: QueuePolicy) {
-        self.state.lock().unwrap().policy = policy;
+        lock_unpoisoned(self.state.lock()).policy = policy;
     }
 
     fn policy(&self) -> QueuePolicy {
-        self.state.lock().unwrap().policy
+        lock_unpoisoned(self.state.lock()).policy
     }
 
     fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_unpoisoned(self.state.lock()).closed = true;
         self.available.notify_all();
     }
 }
@@ -575,9 +686,14 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
             batch,
             index,
             cache_key,
+            lane: _,
+            deadline,
             trace,
         } = job;
-        let outcome = if cancel.get().load(Relaxed) {
+        // An expired deadline is handled like a cancellation at pickup:
+        // the slot resolves without dispatching (the submitter's pipeline
+        // classifies the abandonment as deadline-exceeded).
+        let outcome = if cancel.get().load(Relaxed) || expired(deadline) {
             SlotState::Cancelled
         } else {
             let dispatch_start = trace.as_ref().map(|t| t.now_us());
@@ -586,6 +702,10 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                 // The pooled warm storage; the guard releases on every
                 // exit path, including unwind.
                 let mut arena = shard.arenas.checkout();
+                // Armed by the chaos suite: a worker panic right before
+                // elimination, with the arena checked out — the unwind
+                // must return it to the pool through the guard.
+                failpoint::hit(failpoint::DISPATCHER_PANIC);
                 let cancel = cancel.get();
                 // Busy time starts after the arena is in hand, so it
                 // measures ordering work, not checkout waits.
@@ -656,11 +776,7 @@ fn dispatcher_loop(shard: &Shard, counters: &EngineCounters, cache: &ResultCache
                 };
                 let elapsed = t.elapsed();
                 shard.busy_nanos.fetch_add(elapsed.as_nanos() as u64, Relaxed);
-                shard
-                    .busy_hist
-                    .lock()
-                    .unwrap()
-                    .record(elapsed.as_secs_f64());
+                lock_unpoisoned(shard.busy_hist.lock()).record(elapsed.as_secs_f64());
                 if let Some((done, _)) = &mut out {
                     done.busy_secs = elapsed.as_secs_f64();
                     if let (Some(tr), Some(s0)) = (&trace, elim_start) {
@@ -846,12 +962,12 @@ impl ShardEngine {
     /// Replace the pre-ordering reduction config (pass
     /// [`ReduceConfig::disabled`] to switch the layer off).
     pub fn set_reduce(&self, cfg: ReduceConfig) {
-        *self.reduce_cfg.lock().unwrap() = cfg;
+        *lock_unpoisoned(self.reduce_cfg.lock()) = cfg;
     }
 
     /// The reduction config currently in force.
     pub fn reduce_config(&self) -> ReduceConfig {
-        *self.reduce_cfg.lock().unwrap()
+        *lock_unpoisoned(self.reduce_cfg.lock())
     }
 
     /// Replace the mid-elimination re-reduction settings. They override
@@ -860,23 +976,23 @@ impl ShardEngine {
     /// warm engine misses and recomputes rather than replaying the
     /// other configuration's permutation.
     pub fn set_rereduce(&self, cfg: RereduceSettings) {
-        *self.rereduce_cfg.lock().unwrap() = cfg;
+        *lock_unpoisoned(self.rereduce_cfg.lock()) = cfg;
     }
 
     /// The mid-elimination re-reduction settings currently in force.
     pub fn rereduce_config(&self) -> RereduceSettings {
-        *self.rereduce_cfg.lock().unwrap()
+        *lock_unpoisoned(self.rereduce_cfg.lock())
     }
 
     /// Replace the hybrid ND×AMD config (pass [`HybridConfig::on`] to
     /// partition huge connected requests into parallel subdomain jobs).
     pub fn set_hybrid(&self, cfg: HybridConfig) {
-        *self.hybrid_cfg.lock().unwrap() = cfg;
+        *lock_unpoisoned(self.hybrid_cfg.lock()) = cfg;
     }
 
     /// The hybrid config currently in force.
     pub fn hybrid_config(&self) -> HybridConfig {
-        *self.hybrid_cfg.lock().unwrap()
+        *lock_unpoisoned(self.hybrid_cfg.lock())
     }
 
     /// Number of shards.
@@ -898,6 +1014,16 @@ impl ShardEngine {
     /// Arenas evicted across every shard's pool.
     pub fn arena_evictions(&self) -> u64 {
         self.shards.iter().map(|s| s.arenas.evictions()).sum()
+    }
+
+    /// Every shard's arena pool saturated: no idle arena anywhere and
+    /// each pool at its checkout capacity — the memory-pressure signal
+    /// the coordinator's quality shedding keys on. Unbounded pools
+    /// (the `usize::MAX` default cap) never report pressure.
+    pub fn arena_pressure(&self) -> bool {
+        self.shards
+            .iter()
+            .all(|s| s.arenas.idle() == 0 && s.arenas.outstanding() >= s.arenas.capacity())
     }
 
     /// Bound **each shard's** arena pool to `cap` arenas. With one
@@ -936,7 +1062,7 @@ impl ShardEngine {
                 threads: s.threads,
                 jobs: s.jobs_done.load(Relaxed),
                 busy_secs: s.busy_nanos.load(Relaxed) as f64 / 1e9,
-                busy_p95_secs: s.busy_hist.lock().unwrap().quantile(0.95),
+                busy_p95_secs: lock_unpoisoned(s.busy_hist.lock()).quantile(0.95),
             })
             .collect();
         self.counters.snapshot(per_shard)
@@ -982,10 +1108,49 @@ impl ShardEngine {
         cancel: &AtomicBool,
         trace: Option<&Arc<RequestTrace>>,
     ) -> Option<ShardReply> {
+        self.order_opts(
+            g,
+            cfg,
+            &OrderOptions {
+                trace,
+                ..OrderOptions::new(cancel)
+            },
+        )
+    }
+
+    /// [`Self::order_traced`] with the full per-request option set —
+    /// deadline propagation, priority lane, and quality shedding (see
+    /// the module docs). This is the coordinator pipeline's entry
+    /// point; the narrower `order*` wrappers all funnel here.
+    pub fn order_opts(
+        &self,
+        g: &SymGraph,
+        cfg: ParAmd,
+        opts: &OrderOptions<'_>,
+    ) -> Option<ShardReply> {
         self.counters.requests.fetch_add(1, Relaxed);
+        if expired(opts.deadline) {
+            return None;
+        }
+        let cancel = opts.cancel;
+        let trace = opts.trace;
         // The engine-level sweep settings are imposed before the salt is
-        // taken, so the cache identity always reflects what actually ran.
-        let cfg = self.rereduce_config().apply(cfg);
+        // taken, so the cache identity always reflects what actually
+        // ran. A quality shed disables the sweep through the same
+        // transform — ahead of the salt — so a shed request's cache
+        // identity is the disabled-sweep configuration, never a lie.
+        let rr = self.rereduce_config();
+        let rr = if opts.shed_quality && rr.enabled {
+            self.counters.shed_rereduce.fetch_add(1, Relaxed);
+            RereduceSettings {
+                enabled: false,
+                every: 0,
+                elbow: 0.0,
+            }
+        } else {
+            rr
+        };
+        let cfg = rr.apply(cfg);
         let salt = config_salt(&cfg);
         let t0 = span_start(trace);
         let comps = connected_components(g);
@@ -995,6 +1160,15 @@ impl ShardEngine {
             self.counters.note_component(g.n);
             let rcfg = self.reduce_config();
             let hcfg = self.hybrid_config();
+            // Shedding skips the partition entirely — subdomain quality
+            // and partition latency traded for availability — again by
+            // transforming the effective config ahead of its salt.
+            let hcfg = if opts.shed_quality && hcfg.applies(g.n) {
+                self.counters.shed_hybrid.fetch_add(1, Relaxed);
+                HybridConfig::disabled()
+            } else {
+                hcfg
+            };
             // The whole-request probe lives on the connected path (only
             // connected replies store request-level entries) — so a
             // disconnected request never pays a guaranteed-miss
@@ -1021,6 +1195,28 @@ impl ShardEngine {
             } else {
                 None
             };
+            // A shed request small enough for the sequential fallback
+            // runs inline on this thread: no router, queue, runtime, or
+            // arena. The stand-in is a valid ordering but not ParAMD's
+            // answer under these knobs, so it never enters the cache —
+            // `request_key` is deliberately dropped. (The full-quality
+            // probe above still applies: a warm hit is strictly better.)
+            if opts.shed_quality && g.n <= SEQ_SHED_MAX_N {
+                self.counters.shed_sequential.fetch_add(1, Relaxed);
+                let d = sequential_done(g);
+                return Some(ShardReply {
+                    perm: d.perm,
+                    rounds: d.rounds,
+                    gc_count: d.gc_count,
+                    gc_secs: d.gc_secs,
+                    modeled_time: d.modeled_time,
+                    set_sizes: d.set_sizes,
+                    components: 1,
+                    reduced: 0,
+                    round_samples: Vec::new(),
+                    claim_failures: 0,
+                });
+            }
             if hcfg.applies(g.n) && !cancel.load(Relaxed) {
                 let p0 = span_start(trace);
                 let t = Timer::new();
@@ -1033,10 +1229,10 @@ impl ShardEngine {
                 // the single-job path — deterministically, so the
                 // hybrid-salted request entry stays coherent.
                 if let Some(plan) = plan {
-                    return self.order_hybrid(g, plan, cfg, cancel, salt, request_key, trace);
+                    return self.order_hybrid(g, plan, cfg, salt, request_key, opts);
                 }
             }
-            return self.order_connected(g, cfg, cancel, salt, rcfg, request_key, trace);
+            return self.order_connected(g, cfg, salt, rcfg, request_key, opts);
         }
 
         self.counters.decomposed.fetch_add(1, Relaxed);
@@ -1047,7 +1243,7 @@ impl ShardEngine {
         let p0 = span_start(trace);
         let parts = split_components(g, &comps);
         engine_span(trace, "split", p0);
-        let (results, tel) = self.run_parts(parts, cfg, cancel, salt, trace)?;
+        let (results, tel) = self.run_parts(parts, cfg, salt, opts)?;
         let k = results.len();
         let p0 = span_start(trace);
         let stitched = stitch::stitch(g.n, &results);
@@ -1083,10 +1279,16 @@ impl ShardEngine {
         &self,
         parts: Vec<Component>,
         cfg: ParAmd,
-        cancel: &AtomicBool,
         salt: u64,
-        trace: Option<&Arc<RequestTrace>>,
+        opts: &OrderOptions<'_>,
     ) -> Option<(Vec<ComponentResult>, PartsTelemetry)> {
+        let cancel = opts.cancel;
+        let trace = opts.trace;
+        // Deadline seam: nothing is reduced or enqueued yet, so lapsing
+        // here abandons the batch with zero work dispatched.
+        if expired(opts.deadline) {
+            return None;
+        }
         let p0 = span_start(trace);
         let (payloads, works, reduced) = self.reduce_components(parts);
         engine_span(trace, "reduce", p0);
@@ -1116,6 +1318,59 @@ impl ShardEngine {
             engine_span(trace, "cache-probe", p0);
         }
 
+        // Quality shed: small parts (post-reduction kernels included)
+        // resolve inline through sequential AMD on this thread — no
+        // router, queue, runtime, or arena. The stand-ins are valid
+        // orderings but not ParAMD's under these knobs, so their keys
+        // are dropped: a shed result must never enter the result cache.
+        if opts.shed_quality && !cancel.load(Relaxed) {
+            for (i, (payload, _)) in payloads.iter().enumerate() {
+                if resolved[i].is_some() {
+                    continue;
+                }
+                let done = match payload {
+                    JobPayload::Direct(gr) if gr.get().n <= SEQ_SHED_MAX_N => {
+                        Some(sequential_done(gr.get()))
+                    }
+                    JobPayload::Reduced(plan) if plan.kernel.n <= SEQ_SHED_MAX_N => {
+                        let d = sequential_done(&plan.kernel);
+                        // The single synthesized "round" covers the
+                        // kernel's *weighted* vertex total, so the merged
+                        // round log still accounts for twin-merged
+                        // vertices (Σ set_sizes == component n).
+                        let covered: i32 = plan.weights.iter().sum();
+                        Some(expand_done(
+                            plan,
+                            &CachedOrdering {
+                                perm: d.perm,
+                                rounds: d.rounds,
+                                gc_count: d.gc_count,
+                                gc_secs: d.gc_secs,
+                                modeled_time: d.modeled_time,
+                                set_sizes: if covered > 0 {
+                                    vec![covered as u32]
+                                } else {
+                                    Vec::new()
+                                },
+                                reduced: 0,
+                            },
+                        ))
+                    }
+                    _ => None,
+                };
+                if let Some(d) = done {
+                    self.counters.shed_sequential.fetch_add(1, Relaxed);
+                    keys[i] = None;
+                    resolved[i] = Some(d);
+                }
+            }
+        }
+
+        // Deadline seam: the router and queues are still untouched, so
+        // an expiry here sheds the batch without orphaning a slot.
+        if expired(opts.deadline) {
+            return None;
+        }
         let miss_works: Vec<u64> = (0..k)
             .filter(|&i| resolved[i].is_none())
             .map(|i| works[i])
@@ -1141,6 +1396,8 @@ impl ShardEngine {
                 batch: Arc::clone(&batch),
                 index: slot,
                 cache_key: keys[i],
+                lane: opts.lane,
+                deadline: opts.deadline,
                 trace: trace.cloned(),
             };
             self.enqueue(assign[slot], job);
@@ -1316,12 +1573,13 @@ impl ShardEngine {
         &self,
         g: &SymGraph,
         cfg: ParAmd,
-        cancel: &AtomicBool,
         salt: u64,
         rcfg: ReduceConfig,
         request_key: Option<CacheKey>,
-        trace: Option<&Arc<RequestTrace>>,
+        opts: &OrderOptions<'_>,
     ) -> Option<ShardReply> {
+        let cancel = opts.cancel;
+        let trace = opts.trace;
         let mut reduced = 0usize;
         let payload = if rcfg.is_enabled() && g.n > 0 {
             let p0 = span_start(trace);
@@ -1374,6 +1632,11 @@ impl ShardEngine {
                 cache_key = Some(key);
             }
         }
+        // Deadline seam: the job is not yet routed or enqueued, so an
+        // expiry here abandons the request with zero dispatched work.
+        if expired(opts.deadline) {
+            return None;
+        }
         let work = match &payload {
             JobPayload::Reduced(plan) => {
                 router::work_estimate(plan.kernel.n, plan.kernel.nedges())
@@ -1392,6 +1655,8 @@ impl ShardEngine {
             batch: Arc::clone(&batch),
             index: 0,
             cache_key,
+            lane: opts.lane,
+            deadline: opts.deadline,
             trace: trace.cloned(),
         };
         self.enqueue(s, job);
@@ -1473,11 +1738,11 @@ impl ShardEngine {
         g: &SymGraph,
         plan: hybrid::HybridPlan,
         cfg: ParAmd,
-        cancel: &AtomicBool,
         salt: u64,
         request_key: Option<CacheKey>,
-        trace: Option<&Arc<RequestTrace>>,
+        opts: &OrderOptions<'_>,
     ) -> Option<ShardReply> {
+        let trace = opts.trace;
         self.counters.hybrid_requests.fetch_add(1, Relaxed);
         self.counters
             .subdomain_jobs
@@ -1491,13 +1756,13 @@ impl ShardEngine {
         self.counters.hybrid_vertices.fetch_add(g.n as u64, Relaxed);
 
         let sub_parts = self.extract_parts(g, &plan.subdomains);
-        let (sub_results, sub_tel) = self.run_parts(sub_parts, cfg, cancel, salt, trace)?;
+        let (sub_results, sub_tel) = self.run_parts(sub_parts, cfg, salt, opts)?;
         self.counters
             .subdomain_busy_nanos
             .fetch_add((sub_tel.busy_secs * 1e9) as u64, Relaxed);
 
         let sep_parts = self.extract_parts(g, &plan.separators);
-        let (sep_results, sep_tel) = self.run_parts(sep_parts, cfg, cancel, salt, trace)?;
+        let (sep_results, sep_tel) = self.run_parts(sep_parts, cfg, salt, opts)?;
 
         let p0 = span_start(trace);
         let stitched = hybrid::stitch::stitch_hybrid(g.n, &sub_results, &sep_results);
@@ -2001,5 +2266,89 @@ mod tests {
         assert!(engine.order_cancellable(&g, ParAmd::new(1), &cancel).is_none());
         let rep = engine.order(&g, ParAmd::new(1));
         assert!(is_valid_perm(&rep.perm), "engine survives a cancelled hybrid");
+    }
+
+    #[test]
+    fn interactive_jobs_overtake_queued_batch_work() {
+        static CANCEL: AtomicBool = AtomicBool::new(false);
+        let make = |weight: usize, lane: Lane, index: usize, batch: &Arc<Batch>| ShardJob {
+            payload: JobPayload::Direct(GraphRef::Owned(SymGraph::from_edges(0, &[]))),
+            weight,
+            cfg: ParAmd::new(1),
+            cancel: CancelRef(&CANCEL as *const AtomicBool),
+            batch: Arc::clone(batch),
+            index,
+            cache_key: None,
+            lane,
+            deadline: None,
+            trace: None,
+        };
+        // Two batch jobs queued first, two interactive jobs after: the
+        // interactive lane drains first under either in-lane policy, and
+        // within a lane the policy still decides (FIFO age vs weight).
+        for (policy, want) in [
+            (QueuePolicy::Fifo, [2usize, 3, 0, 1]),
+            (QueuePolicy::SmallestFirst, [3, 2, 1, 0]),
+        ] {
+            let q = JobQueue::new();
+            q.set_policy(policy);
+            let batch = Batch::new(4);
+            assert!(q.push(make(50, Lane::Batch, 0, &batch)).is_ok());
+            assert!(q.push(make(10, Lane::Batch, 1, &batch)).is_ok());
+            assert!(q.push(make(40, Lane::Interactive, 2, &batch)).is_ok());
+            assert!(q.push(make(20, Lane::Interactive, 3, &batch)).is_ok());
+            let got: Vec<usize> = (0..4).map(|_| q.pop().expect("queued job").index).collect();
+            assert_eq!(got, want, "{policy:?} lane order");
+        }
+    }
+
+    #[test]
+    fn lapsed_deadline_abandons_before_any_dispatch() {
+        let g = mesh2d(20, 20);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let cancel = AtomicBool::new(false);
+        let opts = OrderOptions {
+            deadline: Some(Instant::now()),
+            ..OrderOptions::new(&cancel)
+        };
+        assert!(engine.order_opts(&g, ParAmd::new(1), &opts).is_none());
+        assert_eq!(total_jobs(&engine), 0, "expired request must dispatch nothing");
+        // The engine still serves a live request afterwards.
+        let rep = engine.order(&g, ParAmd::new(1));
+        assert!(is_valid_perm(&rep.perm));
+    }
+
+    #[test]
+    fn shed_quality_orders_small_components_sequentially() {
+        let g = multi_component(4, &[40, 60]);
+        let engine = ShardEngine::new(ShardSpec::uniform(2, 1));
+        let cancel = AtomicBool::new(false);
+        let rep = engine
+            .order_opts(
+                &g,
+                ParAmd::new(1),
+                &OrderOptions {
+                    shed_quality: true,
+                    ..OrderOptions::new(&cancel)
+                },
+            )
+            .expect("a shed run still completes");
+        assert!(is_valid_perm(&rep.perm));
+        assert_eq!(rep.perm.len(), g.n);
+        let total: u32 = rep.set_sizes.iter().sum();
+        assert_eq!(total as usize, g.n, "merged round log covers every vertex");
+        let m = engine.metrics();
+        assert_eq!(m.shed_sequential, 4, "every small component runs inline");
+        assert_eq!(total_jobs(&engine), 0, "a shed request dispatches no shard job");
+        assert_eq!(
+            engine.cache_metrics().entries,
+            0,
+            "shed stand-ins must never enter the result cache"
+        );
+        assert!(m.report().contains("shed:"), "{}", m.report());
+        // A full-quality repeat really recomputes through the shards.
+        let full = engine.order(&g, ParAmd::new(1));
+        assert!(is_valid_perm(&full.perm));
+        assert!(total_jobs(&engine) > 0, "full quality dispatches jobs again");
     }
 }

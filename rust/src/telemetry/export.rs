@@ -91,6 +91,10 @@ pub fn prometheus(m: &Metrics) -> String {
     let _ = writeln!(out, "paramd_pipeline_cancelled_total {}", p.cancelled);
     help(&mut out, "paramd_pipeline_failed_total", "counter", "Requests whose processing panicked.");
     let _ = writeln!(out, "paramd_pipeline_failed_total {}", p.failed);
+    help(&mut out, "paramd_pipeline_rejected_total", "counter", "try_submits shed by admission control.");
+    let _ = writeln!(out, "paramd_pipeline_rejected_total {}", p.rejected);
+    help(&mut out, "paramd_pipeline_deadline_exceeded_total", "counter", "Requests abandoned past their deadline.");
+    let _ = writeln!(out, "paramd_pipeline_deadline_exceeded_total {}", p.deadline_exceeded);
     help(&mut out, "paramd_queue_depth", "gauge", "Queue depth at snapshot time.");
     let _ = writeln!(out, "paramd_queue_depth {}", p.queue_depth);
     help(&mut out, "paramd_queue_depth_peak", "gauge", "Highest queue depth observed.");
@@ -120,6 +124,17 @@ pub fn prometheus(m: &Metrics) -> String {
         "Elbow claim failures (memory contention) across all jobs.",
     );
     let _ = writeln!(out, "paramd_claim_failures_total {}", sh.claim_failures);
+    help(&mut out, "paramd_shed_hybrid_total", "counter", "Quality sheds that skipped the hybrid partition.");
+    let _ = writeln!(out, "paramd_shed_hybrid_total {}", sh.shed_hybrid);
+    help(&mut out, "paramd_shed_rereduce_total", "counter", "Quality sheds that disabled the re-reduction sweep.");
+    let _ = writeln!(out, "paramd_shed_rereduce_total {}", sh.shed_rereduce);
+    help(
+        &mut out,
+        "paramd_shed_sequential_total",
+        "counter",
+        "Components ordered by the sequential-AMD quality shed.",
+    );
+    let _ = writeln!(out, "paramd_shed_sequential_total {}", sh.shed_sequential);
 
     help(&mut out, "paramd_shard_jobs_total", "counter", "Ordering jobs executed, by shard.");
     for (i, st) in sh.per_shard.iter().enumerate() {
@@ -199,9 +214,16 @@ pub fn json_snapshot(m: &Metrics) -> String {
     let _ = write!(
         out,
         "],\"pipeline\":{{\"submitted\":{},\"completed\":{},\"cancelled\":{},\
-         \"failed\":{},\"queue_depth\":{},\"queue_depth_peak\":{},\
-         \"arena_evictions\":{}}}",
-        p.submitted, p.completed, p.cancelled, p.failed, p.queue_depth, p.queue_depth_peak,
+         \"failed\":{},\"rejected\":{},\"deadline_exceeded\":{},\
+         \"queue_depth\":{},\"queue_depth_peak\":{},\"arena_evictions\":{}}}",
+        p.submitted,
+        p.completed,
+        p.cancelled,
+        p.failed,
+        p.rejected,
+        p.deadline_exceeded,
+        p.queue_depth,
+        p.queue_depth_peak,
         p.arena_evictions
     );
     let sh = &m.shards;
@@ -209,14 +231,18 @@ pub fn json_snapshot(m: &Metrics) -> String {
         out,
         ",\"shards\":{{\"requests\":{},\"components\":{},\"busy_peak\":{},\
          \"gc_count\":{},\"gc_secs\":{},\"rereduce_passes\":{},\
-         \"claim_failures\":{},\"per_shard\":[",
+         \"claim_failures\":{},\"shed_hybrid\":{},\"shed_rereduce\":{},\
+         \"shed_sequential\":{},\"per_shard\":[",
         sh.requests,
         sh.components,
         sh.busy_peak,
         sh.gc_count,
         jf(sh.gc_secs),
         sh.rereduce_passes,
-        sh.claim_failures
+        sh.claim_failures,
+        sh.shed_hybrid,
+        sh.shed_rereduce,
+        sh.shed_sequential
     );
     for (i, st) in sh.per_shard.iter().enumerate() {
         if i > 0 {
@@ -258,8 +284,13 @@ mod tests {
         m.record("amd", 0.25, None);
         m.pipeline.submitted = 3;
         m.pipeline.completed = 2;
+        m.pipeline.rejected = 4;
+        m.pipeline.deadline_exceeded = 1;
         m.shards.requests = 3;
         m.shards.claim_failures = 7;
+        m.shards.shed_hybrid = 1;
+        m.shards.shed_rereduce = 2;
+        m.shards.shed_sequential = 5;
         m.shards.per_shard.push(crate::ordering::shard::ShardStat {
             threads: 4,
             jobs: 3,
@@ -279,8 +310,13 @@ mod tests {
             "paramd_request_latency_seconds{method=\"paramd\",quantile=\"0.95\"}",
             "paramd_request_latency_seconds_count{method=\"paramd\"} 2",
             "paramd_pipeline_submitted_total 3",
+            "paramd_pipeline_rejected_total 4",
+            "paramd_pipeline_deadline_exceeded_total 1",
             "paramd_queue_depth 0",
             "paramd_claim_failures_total 7",
+            "paramd_shed_hybrid_total 1",
+            "paramd_shed_rereduce_total 2",
+            "paramd_shed_sequential_total 5",
             "paramd_shard_jobs_total{shard=\"0\"} 3",
             "paramd_shard_busy_p95_seconds{shard=\"0\"} 0.2",
             "paramd_cache_hits_total 1",
@@ -313,6 +349,9 @@ mod tests {
         crate::telemetry::validate_json(&j).expect("snapshot must be valid JSON");
         assert!(j.contains("\"method\":\"paramd\""));
         assert!(j.contains("\"claim_failures\":7"));
+        assert!(j.contains("\"rejected\":4"));
+        assert!(j.contains("\"deadline_exceeded\":1"));
+        assert!(j.contains("\"shed_sequential\":5"));
         assert!(j.contains("\"busy_p95_secs\":0.2"));
         // Empty metrics render a valid document too.
         crate::telemetry::validate_json(&json_snapshot(&Metrics::default())).unwrap();

@@ -1,0 +1,264 @@
+//! Named **failpoints**: runtime-armed fault injection for the serving
+//! stack.
+//!
+//! A failpoint is a named hook compiled into a failure-critical site —
+//! the pipeline scheduler, the shard dispatcher, the arena checkout, the
+//! result-cache verify — that does nothing until armed. Armed, it
+//! performs a configured [`FailAction`] (panic, injected latency, forced
+//! verify-reject) for a bounded number of firings, letting the chaos
+//! suite prove that one poisoned request never wedges the service, leaks
+//! an arena, or corrupts a later permutation.
+//!
+//! The disarmed fast path is a single relaxed atomic load, so the hooks
+//! are free in production. Arm programmatically ([`arm`]/[`arm_spec`]),
+//! from the CLI (`serve --failpoints`), or from the environment
+//! (`PARAMD_FAILPOINTS`, read by the binary at startup) with the grammar
+//!
+//! ```text
+//! name=action[*count][,name=action[*count]...]
+//! action := panic | reject | sleep:<millis>
+//! ```
+//!
+//! e.g. `shard-dispatch=panic*1,stage-latency=sleep:30`. Without `*N`
+//! the point fires every time until [`disarm_all`]. Firings are counted
+//! per point ([`fired`]) so tests can assert a fault actually happened.
+//!
+//! The registry is process-global: tests that arm failpoints must
+//! serialize themselves (the chaos suite does) and use the real site
+//! names only in their own test binary.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+use super::lock_unpoisoned;
+
+/// Site: the pipeline scheduler, just before a request is processed.
+pub const SCHEDULER_PANIC: &str = "pipeline-scheduler";
+/// Site: a shard dispatcher, just before elimination starts.
+pub const DISPATCHER_PANIC: &str = "shard-dispatch";
+/// Site: the arena-pool checkout (simulated allocation failure).
+pub const ARENA_CHECKOUT: &str = "arena-checkout";
+/// Site: the pipeline's order stage (inject latency with `sleep:<ms>`).
+pub const STAGE_LATENCY: &str = "stage-latency";
+/// Site: the result cache's exact-verify compare (`reject` forces a
+/// verify-reject, downgrading a hit to a miss).
+pub const CACHE_VERIFY: &str = "cache-verify";
+
+/// What an armed failpoint does when its site is hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailAction {
+    /// Panic with `failpoint <name> fired` — exercises the
+    /// `catch_unwind` containment around the site.
+    Panic,
+    /// Sleep for the duration (injected stage latency).
+    Sleep(Duration),
+    /// Make [`should_reject`] report `true` at the site (e.g. force the
+    /// cache's exact-verify to fail).
+    Reject,
+}
+
+struct FailPoint {
+    action: FailAction,
+    /// Remaining firings; `None` = unlimited, `Some(0)` = exhausted
+    /// (kept resident so [`fired`] still reports its count).
+    remaining: Option<u64>,
+    fired: u64,
+}
+
+/// Disarmed fast path: one relaxed load, no lock.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Mutex<HashMap<String, FailPoint>> {
+    static REG: OnceLock<Mutex<HashMap<String, FailPoint>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Arm `name` with `action`, firing at most `limit` times (`None` =
+/// until [`disarm_all`]). Re-arming an exhausted or active point resets
+/// its budget but keeps its fired count.
+pub fn arm(name: &str, action: FailAction, limit: Option<u64>) {
+    let mut reg = lock_unpoisoned(registry().lock());
+    let fired = reg.get(name).map_or(0, |p| p.fired);
+    reg.insert(
+        name.to_string(),
+        FailPoint {
+            action,
+            remaining: limit,
+            fired,
+        },
+    );
+    ARMED.store(true, Relaxed);
+}
+
+/// Disarm everything and clear fired counts.
+pub fn disarm_all() {
+    lock_unpoisoned(registry().lock()).clear();
+    ARMED.store(false, Relaxed);
+}
+
+/// Times `name` has actually fired (0 if never armed).
+pub fn fired(name: &str) -> u64 {
+    lock_unpoisoned(registry().lock()).get(name).map_or(0, |p| p.fired)
+}
+
+/// Parse and arm a `name=action[*count],...` schedule; returns how many
+/// points were armed or a message describing the malformed entry.
+pub fn arm_spec(spec: &str) -> Result<usize, String> {
+    let mut armed = 0usize;
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, rest) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint entry '{entry}' is missing '='"))?;
+        let (action_str, limit) = match rest.split_once('*') {
+            Some((a, n)) => {
+                let n: u64 = n
+                    .parse()
+                    .map_err(|_| format!("failpoint '{name}': bad count '{n}'"))?;
+                (a, Some(n))
+            }
+            None => (rest, None),
+        };
+        let action = match action_str {
+            "panic" => FailAction::Panic,
+            "reject" => FailAction::Reject,
+            _ => match action_str.strip_prefix("sleep:") {
+                Some(ms) => {
+                    let ms: u64 = ms
+                        .parse()
+                        .map_err(|_| format!("failpoint '{name}': bad sleep '{ms}'"))?;
+                    FailAction::Sleep(Duration::from_millis(ms))
+                }
+                None => {
+                    return Err(format!(
+                        "failpoint '{name}': unknown action '{action_str}' \
+                         (expected panic | reject | sleep:<ms>)"
+                    ))
+                }
+            },
+        };
+        arm(name.trim(), action, limit);
+        armed += 1;
+    }
+    Ok(armed)
+}
+
+/// Arm from the `PARAMD_FAILPOINTS` environment variable if set; returns
+/// how many points were armed.
+pub fn arm_from_env() -> Result<usize, String> {
+    match std::env::var("PARAMD_FAILPOINTS") {
+        Ok(spec) if !spec.is_empty() => arm_spec(&spec),
+        _ => Ok(0),
+    }
+}
+
+/// Consume one firing of `name` if armed with budget left.
+fn take(name: &str) -> Option<FailAction> {
+    let mut reg = lock_unpoisoned(registry().lock());
+    let p = reg.get_mut(name)?;
+    match p.remaining {
+        Some(0) => return None,
+        Some(ref mut n) => *n -= 1,
+        None => {}
+    }
+    p.fired += 1;
+    Some(p.action)
+}
+
+/// The site hook: no-op while disarmed; otherwise perform the armed
+/// action (`Panic` panics, `Sleep` sleeps, `Reject` is a no-op here —
+/// sites that can reject consult [`should_reject`] instead).
+#[inline]
+pub fn hit(name: &str) {
+    if !ARMED.load(Relaxed) {
+        return;
+    }
+    match take(name) {
+        Some(FailAction::Panic) => panic!("failpoint {name} fired"),
+        Some(FailAction::Sleep(d)) => std::thread::sleep(d),
+        Some(FailAction::Reject) | None => {}
+    }
+}
+
+/// Site hook for reject-capable sites: `true` exactly when `name` is
+/// armed with [`FailAction::Reject`] and has budget left (consumes one
+/// firing).
+#[inline]
+pub fn should_reject(name: &str) -> bool {
+    if !ARMED.load(Relaxed) {
+        return false;
+    }
+    match take(name) {
+        Some(FailAction::Reject) => true,
+        Some(FailAction::Panic) => panic!("failpoint {name} fired"),
+        Some(FailAction::Sleep(d)) => {
+            std::thread::sleep(d);
+            false
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and unit tests run concurrently:
+    // serialize this module's tests and use names no production site
+    // consults, so arming here can never poison a neighboring test's
+    // service.
+    fn serial() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        lock_unpoisoned(GATE.lock())
+    }
+
+    #[test]
+    fn disarmed_points_are_free_and_silent() {
+        let _g = serial();
+        hit("test-fp-never-armed");
+        assert!(!should_reject("test-fp-never-armed"));
+        assert_eq!(fired("test-fp-never-armed"), 0);
+    }
+
+    #[test]
+    fn limited_point_fires_exactly_n_times() {
+        let _g = serial();
+        arm("test-fp-limit", FailAction::Reject, Some(2));
+        assert!(should_reject("test-fp-limit"));
+        assert!(should_reject("test-fp-limit"));
+        assert!(!should_reject("test-fp-limit"), "budget exhausted");
+        assert_eq!(fired("test-fp-limit"), 2);
+        disarm_all();
+    }
+
+    #[test]
+    fn panic_action_panics_with_the_point_name() {
+        let _g = serial();
+        arm("test-fp-panic", FailAction::Panic, Some(1));
+        let caught = std::panic::catch_unwind(|| hit("test-fp-panic"));
+        let msg = crate::util::panic_message(caught.expect_err("must panic").as_ref());
+        assert!(msg.contains("failpoint test-fp-panic fired"), "{msg}");
+        hit("test-fp-panic"); // exhausted: silent
+        assert_eq!(fired("test-fp-panic"), 1);
+        disarm_all();
+    }
+
+    #[test]
+    fn spec_grammar_parses_and_rejects_malformed_entries() {
+        let _g = serial();
+        let n = arm_spec("test-fp-a=panic*1, test-fp-b=sleep:5, test-fp-c=reject").unwrap();
+        assert_eq!(n, 3);
+        let t0 = std::time::Instant::now();
+        hit("test-fp-b");
+        assert!(t0.elapsed() >= Duration::from_millis(5), "sleep action waits");
+        assert!(should_reject("test-fp-c"));
+        disarm_all();
+
+        assert!(arm_spec("no-equals").is_err());
+        assert!(arm_spec("x=explode").is_err());
+        assert!(arm_spec("x=sleep:abc").is_err());
+        assert!(arm_spec("x=panic*z").is_err());
+        disarm_all();
+    }
+}

@@ -1,5 +1,7 @@
-//! Small shared utilities: deterministic RNG, timers, statistics, logging.
+//! Small shared utilities: deterministic RNG, timers, statistics,
+//! fault-injection failpoints, logging.
 
+pub mod failpoint;
 pub mod rng;
 pub mod stats;
 pub mod timer;
@@ -9,6 +11,19 @@ pub mod timer;
 pub fn ceil_div(a: usize, b: usize) -> usize {
     debug_assert!(b > 0);
     a.div_ceil(b)
+}
+
+/// Recover a guard from a poisoned lock (or poisoned condvar wait).
+///
+/// Used wherever the protected state is a plain counter, flag, or
+/// container that no panicking holder leaves mid-mutation — queue deques,
+/// ticket state enums, metric tallies. Propagating the poison there would
+/// turn one contained panic into a wedged service; recovering keeps the
+/// pipeline draining. Sites whose invariants genuinely span several
+/// mutations (none today) should keep `.unwrap()` and say why.
+#[inline]
+pub fn lock_unpoisoned<T>(r: Result<T, std::sync::PoisonError<T>>) -> T {
+    r.unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Best-effort human-readable message of a caught panic payload.

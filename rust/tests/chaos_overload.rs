@@ -1,0 +1,302 @@
+//! Chaos & overload integration suite: admission control sheds instead
+//! of blocking, interactive traffic overtakes queued batch work end to
+//! end, deadlines resolve to typed errors, and every production
+//! failpoint — scheduler panic, dispatcher panic, arena exhaustion,
+//! stage latency, cache verify-reject — leaves the service able to
+//! serve a clean follow-up: no wedged waiter, no leaked arena, no
+//! corrupted later permutation.
+//!
+//! The failpoint registry is process-global, so every test here takes
+//! the `serial()` gate and disarms on entry and exit. This binary is
+//! the one place the production site names may be armed (library unit
+//! tests use `test-fp-*` names so they can never poison a service).
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use paramd::coordinator::{Method, OrderError, OrderRequest, Service, SubmitOptions};
+use paramd::graph::csr::SymGraph;
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::mesh2d;
+use paramd::util::failpoint::{self, FailAction};
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn req(g: SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+#[test]
+fn overload_sheds_with_rejected_instead_of_blocking() {
+    let _g = serial();
+    failpoint::disarm_all();
+    // Every accepted request sleeps 40ms in the order stage, so the
+    // in-flight gauge stays pinned while the burst lands.
+    failpoint::arm(
+        failpoint::STAGE_LATENCY,
+        FailAction::Sleep(Duration::from_millis(40)),
+        None,
+    );
+    let svc = Service::new(1)
+        .with_scheduler_threads(1)
+        .with_queue_cap(4)
+        .with_max_inflight(2);
+    let g = mesh2d(20, 20);
+    let t0 = Instant::now();
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..12 {
+        match svc.try_submit(req(g.clone())) {
+            Ok(t) => accepted.push(t),
+            Err(r) => {
+                match r.error {
+                    OrderError::Rejected { retry_after_hint } => {
+                        assert!(retry_after_hint > Duration::ZERO, "hint must size a backoff")
+                    }
+                    ref other => panic!("expected Rejected, got {other:?}"),
+                }
+                // The shed hands the request back untouched for retry.
+                assert!(r.request.pattern.is_some());
+                shed += 1;
+            }
+        }
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "try_submit must answer immediately, not block on the budget"
+    );
+    assert_eq!(accepted.len(), 2, "exactly the in-flight budget is admitted");
+    assert_eq!(shed, 10);
+    for t in accepted {
+        let rep = t.wait_result().expect("admitted requests must complete");
+        assert!(is_valid_perm(&rep.perm));
+    }
+    assert_eq!(svc.metrics().pipeline.rejected, 10);
+    // Budget free again: a retry is admitted. The gauge drops just
+    // *after* each ticket resolves, so back off briefly like a real
+    // caller instead of asserting on the first attempt.
+    let t1 = Instant::now();
+    let ticket = loop {
+        match svc.try_submit(req(g.clone())) {
+            Ok(t) => break t,
+            Err(_) if t1.elapsed() < Duration::from_secs(5) => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(r) => panic!("budget never drained: {}", r.error),
+        }
+    };
+    assert!(is_valid_perm(&ticket.wait_result().unwrap().perm));
+    failpoint::disarm_all();
+}
+
+#[test]
+fn caller_quota_sheds_the_second_burst_token() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let svc = Service::new(1).with_scheduler_threads(1).with_caller_quota(1.0, 1.0);
+    let opts = SubmitOptions::default().with_caller("tester");
+    let g = mesh2d(10, 10);
+    let first = svc.try_submit_opts(req(g.clone()), &opts).expect("burst token admits");
+    let second = svc.try_submit_opts(req(g.clone()), &opts);
+    match second {
+        Err(r) => match r.error {
+            OrderError::Rejected { retry_after_hint } => {
+                assert!(retry_after_hint > Duration::ZERO)
+            }
+            ref other => panic!("expected Rejected, got {other:?}"),
+        },
+        Ok(_) => panic!("second submission must be out of quota tokens"),
+    }
+    // An anonymous submission is unmetered.
+    let anon = svc.try_submit(req(g.clone())).expect("no caller, no quota");
+    assert!(first.wait_result().is_ok());
+    assert!(anon.wait_result().is_ok());
+    failpoint::disarm_all();
+}
+
+#[test]
+fn interactive_requests_overtake_queued_batch_work() {
+    let _g = serial();
+    failpoint::disarm_all();
+    // One scheduler, every job slowed to 120ms: the blocker occupies
+    // the scheduler while three batch jobs and one interactive job
+    // queue behind it. The interactive lane must drain first.
+    failpoint::arm(
+        failpoint::STAGE_LATENCY,
+        FailAction::Sleep(Duration::from_millis(120)),
+        None,
+    );
+    let svc = Service::new(1).with_scheduler_threads(1).with_queue_cap(16);
+    let g = mesh2d(12, 12);
+    let blocker = svc.submit(req(g.clone()));
+    std::thread::sleep(Duration::from_millis(60));
+    let mut work = vec![("blocker", blocker)];
+    for tag in ["batch-a", "batch-b", "batch-c"] {
+        work.push((tag, svc.submit(req(g.clone()))));
+    }
+    let inter = svc.submit_opts(req(g.clone()), &SubmitOptions::interactive());
+    work.push(("interactive", inter));
+    let done: Mutex<Vec<(&str, Instant)>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for (tag, ticket) in work {
+            let done = &done;
+            s.spawn(move || {
+                ticket.wait_result().unwrap_or_else(|e| panic!("{tag} failed: {e}"));
+                done.lock().unwrap().push((tag, Instant::now()));
+            });
+        }
+    });
+    let done = done.into_inner().unwrap();
+    let at = |tag: &str| {
+        done.iter()
+            .find(|(t, _)| *t == tag)
+            .unwrap_or_else(|| panic!("{tag} never completed"))
+            .1
+    };
+    for batch in ["batch-a", "batch-b", "batch-c"] {
+        assert!(
+            at("interactive") < at(batch),
+            "interactive must complete before queued batch job {batch}"
+        );
+    }
+    failpoint::disarm_all();
+}
+
+#[test]
+fn deadlines_resolve_to_the_typed_error_never_a_panic() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let svc = Service::new(1).with_scheduler_threads(1);
+    let g = mesh2d(10, 10);
+    // Dead on arrival: the pickup check abandons it with zero work.
+    let expired = SubmitOptions::default().with_deadline_in(Duration::ZERO);
+    let doa = svc.submit_opts(req(g.clone()), &expired);
+    assert_eq!(doa.wait_result(), Err(OrderError::DeadlineExceeded));
+    // Mid-flight: the stage sleeps past the budget, and the next stage
+    // boundary abandons the request.
+    failpoint::arm(
+        failpoint::STAGE_LATENCY,
+        FailAction::Sleep(Duration::from_millis(100)),
+        Some(1),
+    );
+    let late = svc.submit_opts(
+        req(g.clone()),
+        &SubmitOptions::default().with_deadline_in(Duration::from_millis(30)),
+    );
+    assert_eq!(late.wait_result(), Err(OrderError::DeadlineExceeded));
+    // A deadline-free follow-up is untouched by the expiries.
+    let rep = svc.submit(req(g.clone())).wait_result().expect("clean follow-up");
+    assert!(is_valid_perm(&rep.perm));
+    assert_eq!(svc.metrics().pipeline.deadline_exceeded, 2);
+    failpoint::disarm_all();
+}
+
+#[test]
+fn worker_panic_is_contained_and_the_arena_returns_to_the_pool() {
+    let _g = serial();
+    failpoint::disarm_all();
+    // 1 shard x 1 thread x 1 arena, cache off: fully deterministic
+    // recompute path, and a leaked arena would deadlock the follow-ups.
+    let svc = Service::new(1)
+        .with_scheduler_threads(1)
+        .with_shards(1)
+        .with_shard_threads(1)
+        .with_arena_cap(1)
+        .with_result_cache(0);
+    let g = mesh2d(15, 15);
+    let reference = svc.order(&req(g.clone())).perm;
+    assert!(is_valid_perm(&reference));
+
+    // Poison one request: the dispatcher panics with the arena checked
+    // out, mid-elimination setup.
+    failpoint::arm(failpoint::DISPATCHER_PANIC, FailAction::Panic, Some(1));
+    match svc.submit(req(g.clone())).wait_result() {
+        Err(OrderError::Failed(why)) => {
+            assert!(why.contains("panicked"), "failure must name the panic: {why}")
+        }
+        other => panic!("poisoned request must fail typed, got {other:?}"),
+    }
+    assert_eq!(failpoint::fired(failpoint::DISPATCHER_PANIC), 1);
+    assert_eq!(
+        svc.idle_arenas(),
+        1,
+        "the unwind must return the checked-out arena to the pool"
+    );
+
+    // The service is clean: 100 follow-ups, all bit-identical to the
+    // pre-panic reference.
+    for i in 0..100 {
+        let rep = svc
+            .submit(req(g.clone()))
+            .wait_result()
+            .unwrap_or_else(|e| panic!("follow-up {i} failed after the contained panic: {e}"));
+        assert_eq!(rep.perm, reference, "follow-up {i} diverged after the contained panic");
+    }
+    failpoint::disarm_all();
+}
+
+#[test]
+fn every_failpoint_leaves_the_service_serviceable() {
+    let _g = serial();
+    failpoint::disarm_all();
+    // Cache off so every request reaches the dispatcher/arena sites;
+    // arena cap 1 so a leak would hang the follow-up instead of hiding.
+    let svc = Service::new(1)
+        .with_scheduler_threads(1)
+        .with_shard_threads(1)
+        .with_arena_cap(1)
+        .with_result_cache(0);
+    let g = mesh2d(18, 18);
+    let cases: [(&str, FailAction, Option<u64>); 4] = [
+        (failpoint::SCHEDULER_PANIC, FailAction::Panic, Some(1)),
+        (failpoint::DISPATCHER_PANIC, FailAction::Panic, Some(1)),
+        (failpoint::ARENA_CHECKOUT, FailAction::Panic, Some(1)),
+        (
+            failpoint::STAGE_LATENCY,
+            FailAction::Sleep(Duration::from_millis(25)),
+            Some(1),
+        ),
+    ];
+    for (name, action, limit) in cases {
+        failpoint::arm(name, action, limit);
+        match svc.submit(req(g.clone())).wait_result() {
+            Ok(rep) => assert!(is_valid_perm(&rep.perm), "{name}: bad perm"),
+            Err(OrderError::Failed(why)) => {
+                assert!(why.contains("panicked"), "{name}: unexpected failure: {why}")
+            }
+            Err(other) => panic!("{name}: unexpected outcome {other:?}"),
+        }
+        assert!(failpoint::fired(name) >= 1, "{name} never fired");
+        let rep = svc
+            .submit(req(g.clone()))
+            .wait_result()
+            .unwrap_or_else(|e| panic!("{name}: clean follow-up failed: {e}"));
+        assert!(is_valid_perm(&rep.perm), "{name}: follow-up perm invalid");
+        assert_eq!(svc.idle_arenas(), 1, "{name}: arena leaked");
+        failpoint::disarm_all();
+    }
+
+    // Cache verify-reject: a forced reject downgrades a would-be hit to
+    // a miss; the request still answers with the same permutation.
+    let cached = Service::new(1).with_scheduler_threads(1).with_shard_threads(1);
+    let cg = mesh2d(16, 16);
+    let first = cached.order(&req(cg.clone()));
+    failpoint::arm(failpoint::CACHE_VERIFY, FailAction::Reject, Some(1));
+    let second = cached.order(&req(cg.clone()));
+    assert_eq!(failpoint::fired(failpoint::CACHE_VERIFY), 1);
+    assert_eq!(first.perm, second.perm, "verify-reject must never corrupt the reply");
+    assert!(cached.metrics().cache.verify_rejects >= 1);
+    failpoint::disarm_all();
+}
