@@ -13,11 +13,16 @@
 //! the **telemetry** view of one request: its flight-recorder trace
 //! (submit → fetch the ticket's `RequestTrace` → render Chrome
 //! trace-event JSON), the per-round elimination samples in the reply,
-//! and the Prometheus exposition of the service metrics. The final
-//! section walks the **failure modes & overload behavior**: admission
-//! control shedding a burst past the in-flight budget, a dead-on-arrival
-//! deadline resolving to a typed error instead of running, and
-//! quality-shedding ordering small components inline under pressure.
+//! and the Prometheus exposition of the service metrics. Then the
+//! **failure modes & overload behavior**: admission control shedding a
+//! burst past the in-flight budget, a dead-on-arrival deadline
+//! resolving to a typed error instead of running, and quality-shedding
+//! ordering small components inline under pressure. The final section
+//! shows **persistence**: the crash-safe on-disk cache tier surviving
+//! a service restart — the cold pass appends checksummed record frames
+//! write-behind, the reopened service warm-starts from recovery
+//! (snapshot → log replay, torn tails truncated, corrupt records
+//! quarantined and counted) and answers the repeat from verified hits.
 //!
 //! Run: `cargo run --release --example service_demo`
 
@@ -436,6 +441,58 @@ fn main() {
         "  pipeline counters: rejected={} deadline_exceeded={}",
         gm.pipeline.rejected, gm.pipeline.deadline_exceeded
     );
+
+    println!("\n== persistence: the result cache survives a restart ==");
+    // With `with_persist` (CLI: `--persist-dir`, `--persist-max-mb`,
+    // `--cache-ttl-secs`, `--cache-version`) every cache insert is also
+    // appended — write-behind, one group-commit fsync per batch — to an
+    // on-disk log of independently checksummed, length-prefixed record
+    // frames. Reopening the directory replays snapshot → log: torn tail
+    // writes are truncated (never replayed), corrupt records are
+    // quarantined into a counted `recovery_rejects` bucket, and every
+    // recovered entry is exact-verified against its stored CSR on first
+    // hit. Records carry a version tag — bump `--cache-version` when
+    // graph ids are reused with changed structure to invalidate the
+    // whole store — and an optional TTL expires stale entries.
+    let pdir = std::env::temp_dir().join(format!("paramd_demo_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&pdir);
+    let preq = OrderRequest {
+        matrix: None,
+        pattern: Some(paramd::matgen::mesh2d(50, 50)),
+        method: Method::ParAmd {
+            threads: 2,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    };
+    let persistent = Service::new(2).with_persist(&pdir).expect("persist dir must open");
+    let cold = persistent.order(&preq);
+    println!(
+        "  cold order: n={} {:.5}s (written behind to {}/log.bin)",
+        cold.perm.len(),
+        cold.order_secs,
+        pdir.display()
+    );
+    drop(persistent); // drains the dirty queue, fsyncs, joins the flusher
+
+    let restarted = Service::new(2).with_persist(&pdir).expect("persist dir must reopen");
+    let pm = restarted.metrics().shards.persist.expect("tier attached");
+    println!(
+        "  restart recovered {} entries / {} bytes (rejects={}, aborts={})",
+        pm.warm_start_entries, pm.recovered_bytes, pm.recovery_rejects, pm.recovery_aborts
+    );
+    let warm = restarted.order(&preq);
+    println!(
+        "  warm order after restart: {:.5}s ({})",
+        warm.order_secs,
+        if restarted.metrics().cache.hits > 0 {
+            "replayed from the recovered cache"
+        } else {
+            "recomputed"
+        }
+    );
+    let _ = std::fs::remove_dir_all(&pdir);
 
     println!("\n== metrics ==\n{}", svc.metrics().report());
 }

@@ -1,0 +1,156 @@
+//! Persistent result-cache tier — cold vs warm-restart throughput.
+//!
+//! Three laps over the same request stream of distinct meshes:
+//!
+//! - **cold populate** — a fresh service with `--persist-dir` on an
+//!   empty directory: every request computes end to end while the
+//!   write-behind flusher appends it to the log.
+//! - **warm restart** — the service is dropped (draining the dirty
+//!   queue) and reopened on the same directory: recovery replays the
+//!   log into the in-memory cache, so the identical stream answers
+//!   from verified warm-start hits.
+//! - **cold restart** — the same reopen against an empty directory, as
+//!   the recompute baseline a restart without persistence pays.
+//!
+//! The acceptance bar is warm-restart throughput ≥ 3× the cold
+//! restart. Writes the JSON trajectory file `BENCH_cache_persist.json`
+//! (override with `PARAMD_BENCH_CACHE_PERSIST_OUT`; default lands in
+//! the repository root when run via `cargo bench` from `rust/`).
+//!
+//! Knobs: `PARAMD_THREADS` (default 8), `PARAMD_REPS` (default 24
+//! requests), or `--smoke` for a quick CI pass.
+
+#[path = "bench_common/mod.rs"]
+#[allow(dead_code)] // shared helper module; this bench uses a subset
+mod bench_common;
+
+use paramd::coordinator::{Method, OrderRequest, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::matgen::mesh2d;
+use paramd::util::timer::Timer;
+
+fn paramd_req(g: SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 4,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+fn service(threads: usize, dir: &std::path::Path) -> Service {
+    Service::new(2)
+        .with_shards(2)
+        .with_order_threads(threads)
+        .with_scheduler_threads(2)
+        .with_persist(dir)
+        .expect("persist dir must open")
+}
+
+fn run(svc: &Service, graphs: &[SymGraph]) -> f64 {
+    let t = Timer::new();
+    for g in graphs {
+        let rep = svc.order(&paramd_req(g.clone()));
+        assert!(!rep.perm.is_empty());
+    }
+    t.secs()
+}
+
+fn main() {
+    bench_common::banner(
+        "Persistent result cache — cold vs warm-restart throughput",
+        "ISSUE 10 robustness tier; not a paper table",
+    );
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads = bench_common::threads();
+    let requests: usize = if smoke {
+        6
+    } else {
+        std::env::var("PARAMD_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(24)
+    };
+    let side = if smoke { 30 } else { 90 };
+    let graphs: Vec<SymGraph> = (0..requests).map(|i| mesh2d(side, side + i)).collect();
+
+    let warm_dir = std::env::temp_dir().join(format!("paramd_bench_persist_{}", std::process::id()));
+    let cold_dir =
+        std::env::temp_dir().join(format!("paramd_bench_persist_cold_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&warm_dir);
+    let _ = std::fs::remove_dir_all(&cold_dir);
+
+    // Cold populate: compute everything once, write-behind to the log.
+    let svc = service(threads, &warm_dir);
+    let cold_populate_secs = run(&svc, &graphs);
+    drop(svc); // drains the dirty queue and fsyncs
+
+    // Warm restart: recovery replays the log, the stream hits.
+    let svc = service(threads, &warm_dir);
+    let pm = svc.metrics().shards.persist.expect("tier attached");
+    let warm_secs = run(&svc, &graphs);
+    let hits = svc.metrics().cache.hits;
+    drop(svc);
+
+    // Cold restart: the same reopen with nothing on disk to replay.
+    let svc = service(threads, &cold_dir);
+    let cold_restart_secs = run(&svc, &graphs);
+    drop(svc);
+
+    let speedup = cold_restart_secs / warm_secs.max(1e-12);
+    let thr = |secs: f64| requests as f64 / secs.max(1e-12);
+    println!("{:<16} {:>12} {:>12} {:>10}", "lap", "secs", "req/s", "vs cold");
+    println!(
+        "{:<16} {:>12.4} {:>12.1} {:>10}",
+        "cold populate",
+        cold_populate_secs,
+        thr(cold_populate_secs),
+        "-"
+    );
+    println!(
+        "{:<16} {:>12.4} {:>12.1} {:>9.1}x",
+        "cold restart",
+        cold_restart_secs,
+        thr(cold_restart_secs),
+        1.0
+    );
+    println!(
+        "{:<16} {:>12.4} {:>12.1} {:>9.1}x",
+        "warm restart", warm_secs, thr(warm_secs), speedup
+    );
+    println!(
+        "persist: warm_start={} recovered_bytes={} rejects={} hits_after_restart={hits}",
+        pm.warm_start_entries, pm.recovered_bytes, pm.recovery_rejects
+    );
+    if pm.warm_start_entries == 0 {
+        eprintln!("WARNING: warm restart recovered nothing — persistence is not engaging");
+    }
+    if speedup < 3.0 {
+        eprintln!("WARNING: warm-restart speedup {speedup:.1}x below the 3x acceptance bar");
+    }
+
+    let out = std::env::var("PARAMD_BENCH_CACHE_PERSIST_OUT")
+        .unwrap_or_else(|_| "../BENCH_cache_persist.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"cache_persist\",\n  \"status\": \"measured\",\n  \
+         \"threads\": {threads},\n  \"requests\": {requests},\n  \
+         \"workload\": \"distinct mesh2d({side}, {side}..{side}+{requests}) stream, \
+         persisted then restarted\",\n  \
+         \"acceptance\": \"warm-restart throughput >= 3x cold restart\",\n  \
+         \"cold_populate_secs\": {cold_populate_secs:.6},\n  \
+         \"cold_restart_secs\": {cold_restart_secs:.6},\n  \
+         \"warm_restart_secs\": {warm_secs:.6},\n  \
+         \"warm_speedup\": {speedup:.3},\n  \
+         \"warm_start_entries\": {},\n  \"recovered_bytes\": {},\n  \
+         \"recovery_rejects\": {}\n}}\n",
+        pm.warm_start_entries, pm.recovered_bytes, pm.recovery_rejects
+    );
+    std::fs::write(&out, &json).expect("write bench json");
+    println!("\nwrote {out}");
+    let _ = std::fs::remove_dir_all(&warm_dir);
+    let _ = std::fs::remove_dir_all(&cold_dir);
+}

@@ -184,6 +184,7 @@ use crate::cholesky::{self, DenseTail, NativeDense};
 use crate::graph::csr::SymGraph;
 use crate::graph::symmetrize_parallel;
 use crate::nd::NestedDissection;
+use crate::ordering::cache::persist::{PersistConfig, PersistError, PersistTier};
 use crate::ordering::shard::{OrderOptions, ShardEngine};
 use crate::ordering::{
     amd_seq::AmdSeq, md::MinDegree, mmd::Mmd, paramd::ParAmd, Ordering as _, OrderingResult,
@@ -601,6 +602,40 @@ impl Service {
     pub fn with_result_cache(self, bytes: usize) -> Self {
         self.core().shards.result_cache().set_budget(bytes);
         self
+    }
+
+    /// Attach the **crash-consistent on-disk tier** under the result
+    /// cache at `dir` with default knobs ([`PersistConfig`]); see
+    /// [`Self::with_persist_config`]. The CLI's `serve --persist-dir`.
+    pub fn with_persist(self, dir: &std::path::Path) -> Result<Self, PersistError> {
+        self.with_persist_config(dir, PersistConfig::default())
+    }
+
+    /// Attach the on-disk tier with explicit knobs: open (or create)
+    /// the persist directory, replay snapshot → log into the in-memory
+    /// cache (torn/corrupt records are quarantined and counted, never
+    /// replayed — see [`crate::ordering::cache::persist`]), and start
+    /// the write-behind flusher. Call **after**
+    /// [`Self::with_result_cache`] so the warm start loads under the
+    /// final budget. The tier rides on the shared cache handle, so it
+    /// survives engine rebuilds (`with_shards` et al.) exactly like
+    /// the in-memory entries; recovered entries are exact-verified
+    /// against their stored CSR on first hit like any other entry.
+    /// Only environmental failures (unusable directory) error.
+    pub fn with_persist_config(
+        self,
+        dir: &std::path::Path,
+        cfg: PersistConfig,
+    ) -> Result<Self, PersistError> {
+        let cache = Arc::clone(self.core().shards.result_cache());
+        let (tier, recovered) = PersistTier::open(dir, cfg)?;
+        for rec in recovered {
+            cache.insert(rec.key, rec.graph, rec.weights, rec.value);
+        }
+        // Attach *after* the warm start so recovered entries are not
+        // re-appended to the log they just came from.
+        cache.attach_persist(tier);
+        Ok(self)
     }
 
     /// Dump the flight-recorder trace of every request slower than

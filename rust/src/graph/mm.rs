@@ -3,11 +3,18 @@
 //! Supports the `matrix coordinate` format with `real | integer | pattern`
 //! fields and `general | symmetric | skew-symmetric` symmetries — the
 //! subset covering the SuiteSparse Matrix Collection files the paper uses.
+//!
+//! The read path is hardened against malformed input: truncated headers,
+//! non-numeric tokens, 0/out-of-range indices, and header dimensions that
+//! lie about the body (or overflow the `i32` index space the CSR layer
+//! uses) all come back as a typed [`MmError`] — never a panic and never
+//! an unbounded allocation — so a long-running service can reject a bad
+//! upload and keep serving.
 
 use std::io::{BufRead, BufReader, Write as _};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use crate::graph::csr::CsrMatrix;
 
@@ -19,71 +26,204 @@ pub enum MmSymmetry {
     SkewSymmetric,
 }
 
+/// Typed error from [`read_matrix_market`].
+#[derive(Debug)]
+pub enum MmError {
+    /// The file could not be opened or read.
+    Io {
+        /// Operation that failed (`"open"` or `"read"`).
+        op: &'static str,
+        /// File being read.
+        path: PathBuf,
+        /// Underlying I/O error.
+        source: std::io::Error,
+    },
+    /// The file contents violate the Matrix Market grammar.
+    Malformed {
+        /// File being read.
+        path: PathBuf,
+        /// 1-based line number of the offending line (0 when the file
+        /// ended before the expected line existed).
+        line: u64,
+        /// Human-readable description of the violation.
+        reason: String,
+    },
+}
+
+impl std::fmt::Display for MmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            MmError::Io { op, path, source } => {
+                write!(f, "{op} {}: {source}", path.display())
+            }
+            MmError::Malformed { path, line, reason } => {
+                write!(f, "{}:{line}: malformed MatrixMarket file: {reason}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for MmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MmError::Io { source, .. } => Some(source),
+            MmError::Malformed { .. } => None,
+        }
+    }
+}
+
+fn malformed(path: &Path, line: u64, reason: impl Into<String>) -> MmError {
+    MmError::Malformed { path: path.to_path_buf(), line, reason: reason.into() }
+}
+
+/// Read one line into `buf`, bumping the 1-based line counter.
+/// Returns `Ok(false)` at EOF.
+fn next_line(
+    r: &mut impl BufRead,
+    buf: &mut String,
+    lineno: &mut u64,
+    path: &Path,
+) -> Result<bool, MmError> {
+    buf.clear();
+    let n = r
+        .read_line(buf)
+        .map_err(|e| MmError::Io { op: "read", path: path.to_path_buf(), source: e })?;
+    if n == 0 {
+        return Ok(false);
+    }
+    *lineno += 1;
+    Ok(true)
+}
+
+/// Parse one whitespace token as `T`; overflow and garbage both come
+/// back as a typed [`MmError::Malformed`] carrying the line number.
+fn parse_num<T: std::str::FromStr>(
+    tok: &str,
+    what: &str,
+    path: &Path,
+    lineno: u64,
+) -> Result<T, MmError> {
+    tok.parse::<T>()
+        .map_err(|_| malformed(path, lineno, format!("non-numeric or overflowing {what} {tok:?}")))
+}
+
 /// Read a Matrix Market coordinate file into a [`CsrMatrix`].
 /// Symmetric/skew storage is expanded to full storage.
-pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+///
+/// Any malformed input — truncated header or body, non-numeric tokens,
+/// 0-based or out-of-range indices, extra tokens on a data line, or
+/// dimensions beyond the `i32` index range — returns [`MmError`]
+/// instead of panicking.
+pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix, MmError> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| MmError::Io { op: "open", path: path.to_path_buf(), source: e })?;
     let mut reader = BufReader::new(f);
     let mut line = String::new();
-    reader.read_line(&mut line)?;
+    let mut lineno = 0u64;
+
+    if !next_line(&mut reader, &mut line, &mut lineno, path)? {
+        return Err(malformed(path, 0, "empty file: missing %%MatrixMarket header"));
+    }
     let header: Vec<String> = line.trim().split_whitespace().map(|s| s.to_lowercase()).collect();
     if header.len() < 5 || header[0] != "%%matrixmarket" || header[1] != "matrix" {
-        bail!("not a MatrixMarket matrix file: {line:?}");
+        return Err(malformed(
+            path,
+            lineno,
+            format!("not a MatrixMarket matrix header: {:?}", line.trim()),
+        ));
     }
     if header[2] != "coordinate" {
-        bail!("only coordinate format supported, got {}", header[2]);
+        return Err(malformed(
+            path,
+            lineno,
+            format!("only coordinate format supported, got {:?}", header[2]),
+        ));
     }
-    let field = header[3].as_str();
-    if !matches!(field, "real" | "integer" | "pattern") {
-        bail!("unsupported field type {field}");
+    let field = header[3].clone();
+    if !matches!(field.as_str(), "real" | "integer" | "pattern") {
+        return Err(malformed(path, lineno, format!("unsupported field type {field:?}")));
     }
     let sym = match header[4].as_str() {
         "general" => MmSymmetry::General,
         "symmetric" => MmSymmetry::Symmetric,
         "skew-symmetric" => MmSymmetry::SkewSymmetric,
-        s => bail!("unsupported symmetry {s}"),
+        s => return Err(malformed(path, lineno, format!("unsupported symmetry {s:?}"))),
     };
 
     // Skip comments, read size line.
     let (nrows, ncols, nnz) = loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            bail!("missing size line");
+        if !next_line(&mut reader, &mut line, &mut lineno, path)? {
+            return Err(malformed(path, lineno, "unexpected EOF before the size line"));
         }
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
-        let mut it = t.split_whitespace();
-        let nr: usize = it.next().context("nrows")?.parse()?;
-        let nc: usize = it.next().context("ncols")?.parse()?;
-        let nz: usize = it.next().context("nnz")?.parse()?;
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        if toks.len() != 3 {
+            return Err(malformed(
+                path,
+                lineno,
+                format!("size line needs exactly 3 tokens (rows cols nnz), got {}", toks.len()),
+            ));
+        }
+        let nr: usize = parse_num(toks[0], "nrows", path, lineno)?;
+        let nc: usize = parse_num(toks[1], "ncols", path, lineno)?;
+        let nz: usize = parse_num(toks[2], "nnz", path, lineno)?;
+        // The CSR layer indexes columns with i32; a header past that
+        // range can never produce a valid matrix, so reject it up front
+        // rather than overflow during conversion.
+        if nr > i32::MAX as usize || nc > i32::MAX as usize {
+            return Err(malformed(
+                path,
+                lineno,
+                format!("dimensions {nr}x{nc} exceed the supported i32 index range"),
+            ));
+        }
         break (nr, nc, nz);
     };
 
-    let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(
-        nnz * if sym == MmSymmetry::General { 1 } else { 2 },
-    );
+    // Pre-size from the header but cap the trusted allocation: a lying
+    // header (`nnz` in the billions over a 3-line body) must not OOM the
+    // reader before the truncated-body check can fire.
+    let want = nnz.saturating_mul(if sym == MmSymmetry::General { 1 } else { 2 });
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::with_capacity(want.min(1 << 20));
     let mut count = 0usize;
     while count < nnz {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            bail!("unexpected EOF: read {count} of {nnz} entries");
+        if !next_line(&mut reader, &mut line, &mut lineno, path)? {
+            return Err(malformed(
+                path,
+                lineno,
+                format!("unexpected EOF: read {count} of {nnz} entries"),
+            ));
         }
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
-        let mut it = t.split_whitespace();
-        let r: usize = it.next().context("row")?.parse::<usize>()? - 1;
-        let c: usize = it.next().context("col")?.parse::<usize>()? - 1;
-        let v: f64 = if field == "pattern" {
-            1.0
-        } else {
-            it.next().context("value")?.parse()?
-        };
+        let toks: Vec<&str> = t.split_whitespace().collect();
+        let want_toks = if field == "pattern" { 2 } else { 3 };
+        if toks.len() != want_toks {
+            return Err(malformed(
+                path,
+                lineno,
+                format!("entry line needs exactly {want_toks} tokens, got {}", toks.len()),
+            ));
+        }
+        let r1: usize = parse_num(toks[0], "row index", path, lineno)?;
+        let c1: usize = parse_num(toks[1], "col index", path, lineno)?;
+        if r1 == 0 || c1 == 0 {
+            return Err(malformed(path, lineno, "indices are 1-based; found 0"));
+        }
+        let (r, c) = (r1 - 1, c1 - 1);
+        let v: f64 =
+            if field == "pattern" { 1.0 } else { parse_num(toks[2], "value", path, lineno)? };
         if r >= nrows || c >= ncols {
-            bail!("entry ({},{}) out of bounds {}x{}", r + 1, c + 1, nrows, ncols);
+            return Err(malformed(
+                path,
+                lineno,
+                format!("entry ({r1},{c1}) out of bounds {nrows}x{ncols}"),
+            ));
         }
         triplets.push((r, c, v));
         if r != c {
@@ -179,20 +319,119 @@ mod tests {
     }
 
     #[test]
-    fn rejects_garbage() {
-        let p = tmp("bad.mtx");
-        std::fs::write(&p, "hello world\n").unwrap();
-        assert!(read_matrix_market(&p).is_err());
+    fn missing_file_is_a_typed_io_error() {
+        let e = read_matrix_market(Path::new("/nonexistent/paramd.mtx")).unwrap_err();
+        assert!(matches!(e, MmError::Io { op: "open", .. }), "{e}");
+    }
+
+    /// Malformed-corpus sweep: every corrupt shape returns a typed
+    /// `MmError::Malformed` (with the offending line number in its
+    /// Display form) — no panics, no unbounded allocation, no
+    /// arithmetic underflow on 0-based indices.
+    #[test]
+    fn malformed_corpus_returns_typed_errors() {
+        let corpus: &[(&str, &str, &str)] = &[
+            ("empty", "", "missing %%MatrixMarket header"),
+            ("truncated_header", "%%MatrixMarket matrix\n2 2 1\n1 1 1.0\n", "header"),
+            ("not_mm", "hello world\n2 2 1\n1 1 1.0\n", "header"),
+            ("bad_format", "%%MatrixMarket matrix array real general\n2 2\n", "coordinate"),
+            ("bad_field", "%%MatrixMarket matrix coordinate complex general\n", "field type"),
+            ("bad_symmetry", "%%MatrixMarket matrix coordinate real hermitian\n", "symmetry"),
+            ("no_size_line", "%%MatrixMarket matrix coordinate real general\n% only\n", "EOF"),
+            (
+                "short_size_line",
+                "%%MatrixMarket matrix coordinate real general\n2 2\n",
+                "exactly 3 tokens",
+            ),
+            (
+                "dup_size_tokens",
+                "%%MatrixMarket matrix coordinate real general\n2 2 1 1\n1 1 1.0\n",
+                "exactly 3 tokens",
+            ),
+            (
+                "non_numeric_dims",
+                "%%MatrixMarket matrix coordinate real general\na b c\n",
+                "non-numeric",
+            ),
+            (
+                "overflowing_dims",
+                "%%MatrixMarket matrix coordinate real general\n\
+                 99999999999999999999999999 2 1\n1 1 1.0\n",
+                "overflowing",
+            ),
+            (
+                "dims_past_i32",
+                "%%MatrixMarket matrix coordinate real general\n3000000000 2 1\n1 1 1.0\n",
+                "i32 index range",
+            ),
+            (
+                "zero_based_index",
+                "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n",
+                "1-based",
+            ),
+            (
+                "row_out_of_range",
+                "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+                "out of bounds",
+            ),
+            (
+                "col_out_of_range",
+                "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 9 1.0\n",
+                "out of bounds",
+            ),
+            (
+                "non_numeric_index",
+                "%%MatrixMarket matrix coordinate real general\n2 2 1\nx 1 1.0\n",
+                "non-numeric",
+            ),
+            (
+                "non_numeric_value",
+                "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 abc\n",
+                "non-numeric",
+            ),
+            (
+                "missing_value_token",
+                "%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1\n",
+                "exactly 3 tokens",
+            ),
+            (
+                "extra_entry_tokens",
+                "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 1 1.0\n",
+                "exactly 2 tokens",
+            ),
+            (
+                "truncated_body",
+                "%%MatrixMarket matrix coordinate real general\n2 2 3\n1 1 1.0\n",
+                "read 1 of 3 entries",
+            ),
+            (
+                "lying_huge_nnz",
+                "%%MatrixMarket matrix coordinate real symmetric\n\
+                 2 2 18446744073709551615\n1 1 1.0\n",
+                "entries",
+            ),
+        ];
+        for (name, body, want) in corpus {
+            let p = tmp(&format!("bad_{name}.mtx"));
+            std::fs::write(&p, body).unwrap();
+            let e = read_matrix_market(&p).unwrap_err();
+            assert!(matches!(e, MmError::Malformed { .. }), "{name}: expected Malformed, got {e}");
+            let msg = e.to_string();
+            assert!(msg.contains(want), "{name}: {msg:?} missing {want:?}");
+        }
     }
 
     #[test]
-    fn rejects_out_of_bounds() {
-        let p = tmp("oob.mtx");
+    fn malformed_error_carries_the_line_number() {
+        let p = tmp("lineno.mtx");
         std::fs::write(
             &p,
-            "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+            "%%MatrixMarket matrix coordinate real general\n% c\n2 2 2\n1 1 1.0\n2 9 1.0\n",
         )
         .unwrap();
-        assert!(read_matrix_market(&p).is_err());
+        match read_matrix_market(&p).unwrap_err() {
+            MmError::Malformed { line, .. } => assert_eq!(line, 5),
+            e => panic!("expected Malformed, got {e}"),
+        }
     }
 }

@@ -15,6 +15,8 @@
 //!         [--no-reduce] [--dense-alpha A]
 //!         [--no-rereduce] [--rereduce-every K] [--rereduce-elbow E]
 //!         [--cache-mb MB] [--no-cache]
+//!         [--persist-dir D] [--persist-max-mb MB] [--cache-ttl-secs S]
+//!         [--cache-version V]
 //!         [--hybrid] [--partition-threshold N] [--recursion-depth D]
 //!         [--balance-factor B]
 //!         [--max-inflight N] [--quota RATE[:BURST]] [--deadline-ms MS]
@@ -39,7 +41,27 @@
 //!         `--cache-mb` budgets the fingerprinted
 //!         ordering result cache (default 64 MiB — repeated graphs and
 //!         components replay instead of re-ordering) and `--no-cache`
-//!         disables it; `--hybrid` turns on the nested-dissection ×
+//!         disables it; `--persist-dir D` attaches the crash-consistent
+//!         **on-disk tier** under the result cache: every insert is
+//!         appended (write-behind, group-commit fsync) to `D/log.bin`
+//!         and a restarted serve warms straight from `D` — recovery
+//!         replays `snapshot.bin` then `log.bin`, truncates torn tail
+//!         writes, and quarantines corrupt records into the counted
+//!         `paramd_cache_recovery_rejects_total` family instead of
+//!         replaying them. On-disk records are length-prefixed frames
+//!         (`magic | payload_len | checksum | payload`, all
+//!         little-endian) carrying the fingerprint + config/weights
+//!         salt, a **version tag**, a creation timestamp, the
+//!         exact-verify CSR and the permutation payload; files start
+//!         with a `magic | format_version` header. `--persist-max-mb`
+//!         bounds the on-disk footprint (compaction drops
+//!         oldest-created records beyond it, default 256 MiB),
+//!         `--cache-ttl-secs S` expires records older than S seconds
+//!         at recovery (default 0 = keep forever), and
+//!         `--cache-version V` sets the version tag — callers that
+//!         reuse graph ids with changed structure bump V to invalidate
+//!         every record written under the old tag;
+//!         `--hybrid` turns on the nested-dissection ×
 //!         ParAMD path for huge connected graphs (cut into independent
 //!         subdomains that order in parallel across the shards,
 //!         separators last): `--partition-threshold` is the vertex
@@ -278,6 +300,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         } else {
             args.get_parse("cache-mb", 64usize) << 20
         });
+    if let Some(dir) = args.get("persist-dir") {
+        let cfg = paramd::ordering::cache::persist::PersistConfig {
+            max_bytes: (args.get_parse("persist-max-mb", 256u64)) << 20,
+            ttl_secs: args.get_parse("cache-ttl-secs", 0u64),
+            version: args.get_parse("cache-version", 0u64),
+        };
+        svc = svc
+            .with_persist_config(std::path::Path::new(dir), cfg)
+            .map_err(|e| e.to_string())?;
+    }
     if args.has("no-reduce") {
         svc = svc.with_reduction(false);
     }

@@ -39,9 +39,11 @@
 //! cache (`Service::with_result_cache(0)` / `--no-cache`) when strict
 //! placement-reproducibility matters more than latency.
 
+pub mod persist;
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering::Relaxed};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::graph::csr::SymGraph;
 use crate::graph::fingerprint::{fingerprint, Fingerprint};
@@ -237,6 +239,9 @@ pub struct ResultCache {
     insertions: AtomicU64,
     evictions: AtomicU64,
     saved_nanos: AtomicU64,
+    /// Optional crash-consistent on-disk tier ([`persist`]): attached
+    /// once, write-behind on every insert, warm-started on open.
+    persist: OnceLock<Arc<persist::PersistTier>>,
 }
 
 impl ResultCache {
@@ -261,7 +266,26 @@ impl ResultCache {
             insertions: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             saved_nanos: AtomicU64::new(0),
+            persist: OnceLock::new(),
         }
+    }
+
+    /// Attach the crash-consistent on-disk tier (first call wins).
+    /// Every later [`Self::insert`] is also queued to the tier's
+    /// flusher; load recovered entries **before** attaching so the
+    /// warm start is not re-appended to the log it just came from.
+    pub fn attach_persist(&self, tier: Arc<persist::PersistTier>) {
+        let _ = self.persist.set(tier);
+    }
+
+    /// The attached on-disk tier, if any.
+    pub fn persist(&self) -> Option<&Arc<persist::PersistTier>> {
+        self.persist.get()
+    }
+
+    /// Counter snapshot of the attached on-disk tier, if any.
+    pub fn persist_metrics(&self) -> Option<persist::PersistMetrics> {
+        self.persist.get().map(|t| t.metrics())
     }
 
     /// Whether the cache participates at all (budget > 0).
@@ -386,6 +410,13 @@ impl ResultCache {
         if bytes > self.budget.load(Relaxed) {
             return; // would evict everything and still not fit
         }
+        // Write-behind: encode the durable frame before the entry is
+        // moved into the shard (no locks held), enqueue after the
+        // locks are released.
+        let frame = self
+            .persist
+            .get()
+            .map(|t| t.encode_frame(&key, &graph, weights.as_deref(), &value));
         let tick = self.tick.fetch_add(1, Relaxed) + 1;
         {
             let mut sh = lock_unpoisoned(self.shard(&key).lock());
@@ -407,6 +438,9 @@ impl ResultCache {
             self.insertions.fetch_add(1, Relaxed);
         } // release before evicting — eviction re-locks shard by shard
         self.evict_over_budget();
+        if let (Some(tier), Some(frame)) = (self.persist.get(), frame) {
+            tier.enqueue_frame(frame);
+        }
     }
 
     /// Entries currently resident (sums the shards).

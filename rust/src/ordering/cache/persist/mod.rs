@@ -1,0 +1,800 @@
+//! **Crash-consistent on-disk tier** under the in-memory
+//! [`ResultCache`](super::ResultCache): a restarted service warms
+//! straight from disk instead of re-paying every ordering it ever
+//! computed.
+//!
+//! # Layout
+//!
+//! A persist directory holds at most three files:
+//!
+//! - `log.bin` — the append-only record log. Every insert into the
+//!   in-memory tier is encoded into a checksummed, length-prefixed
+//!   frame ([`record`]) and appended by a background flusher thread.
+//! - `snapshot.bin` — a periodic compaction of snapshot + log into one
+//!   deduplicated, TTL/version-filtered file, published by atomic
+//!   rename so it is always either the old or the new snapshot, never
+//!   a half-written one.
+//! - `snapshot.tmp` — the in-progress compaction target; ignored (and
+//!   overwritten) by recovery.
+//!
+//! # Recovery
+//!
+//! [`PersistTier::open`] replays **snapshot → log** (last write wins),
+//! then filters by store version tag and TTL. A torn tail — the frame
+//! a killed process was half way through appending — fails its length
+//! or checksum check, is counted into `recovery_rejects`, and the log
+//! is truncated back to the last complete frame so the garbage is
+//! never replayed and never followed. A record that checksums but does
+//! not decode is likewise quarantined and counted. Corruption is a
+//! typed [`PersistError`], never a panic; the first few quarantined
+//! errors are kept for inspection ([`PersistTier::recovery_errors`]).
+//! Recovered entries are loaded into the in-memory tier, whose
+//! exact-verify-on-hit then re-checks each one against its stored CSR
+//! on first use — a disk-corrupted-but-checksum-colliding entry still
+//! cannot corrupt a result.
+//!
+//! # Write path
+//!
+//! Inserts are **write-behind**: the submitting thread encodes the
+//! frame (no locks held) and pushes it onto a bounded dirty queue;
+//! when the queue is over its byte cap the push blocks — backpressure,
+//! not unbounded memory. One flusher thread drains batches, appends,
+//! and group-commits with a single fsync per batch. A panicking flush
+//! (see the `persist-append` / `persist-fsync` failpoints) is caught
+//! and repaired by truncating back to the last fsynced offset: the
+//! service degrades to losing at most the in-flight batch, never to a
+//! wedged cache.
+//!
+//! # Failpoints
+//!
+//! Four sites drive the crash suite: [`failpoint::PERSIST_APPEND`]
+//! (between a frame's header and payload — a panic or kill here is a
+//! torn tail), [`failpoint::PERSIST_FSYNC`] (before the group commit —
+//! `sleep` holds the window open for kill -9 tests),
+//! [`failpoint::PERSIST_SNAPSHOT`] (between writing `snapshot.tmp` and
+//! the rename), and [`failpoint::PERSIST_RECOVER`] (before replay; a
+//! contained panic degrades to an empty warm start on an untouched
+//! dir, so the next open replays everything).
+
+pub mod record;
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use super::{CacheKey, CachedOrdering};
+use crate::graph::csr::SymGraph;
+use crate::util::{failpoint, lock_unpoisoned};
+use record::{FrameRead, Record};
+
+/// Byte cap of the dirty queue; pushes block (backpressure) above it.
+const QUEUE_CAP_BYTES: usize = 8 << 20;
+
+/// How many quarantined-record errors are kept for inspection.
+const MAX_KEPT_ERRORS: usize = 16;
+
+/// A typed persistence failure. Corruption found during recovery is
+/// quarantined and counted (`recovery_rejects`), not returned — only
+/// environmental failures (unusable directory, failed writes) surface
+/// from [`PersistTier::open`] and the flusher.
+#[derive(Debug)]
+pub enum PersistError {
+    /// An OS-level I/O failure, tagged with the operation and path.
+    Io {
+        /// What the tier was doing (e.g. `"append"`, `"create dir"`).
+        op: &'static str,
+        /// The file or directory involved.
+        path: PathBuf,
+        /// The underlying OS error.
+        source: std::io::Error,
+    },
+    /// A record that failed its frame or payload validation.
+    Corrupt {
+        /// The file the record was read from.
+        path: PathBuf,
+        /// Byte offset of the offending frame.
+        offset: u64,
+        /// What check failed.
+        reason: String,
+    },
+}
+
+impl fmt::Display for PersistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PersistError::Io { op, path, source } => {
+                write!(f, "persist {op} failed at {}: {source}", path.display())
+            }
+            PersistError::Corrupt {
+                path,
+                offset,
+                reason,
+            } => write!(
+                f,
+                "corrupt persist record in {} at byte {offset}: {reason}",
+                path.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            PersistError::Io { source, .. } => Some(source),
+            PersistError::Corrupt { .. } => None,
+        }
+    }
+}
+
+fn io_err(op: &'static str, path: &Path, source: std::io::Error) -> PersistError {
+    PersistError::Io {
+        op,
+        path: path.to_path_buf(),
+        source,
+    }
+}
+
+/// Knobs of the on-disk tier.
+#[derive(Clone, Copy, Debug)]
+pub struct PersistConfig {
+    /// On-disk byte budget; compaction drops oldest-created records
+    /// beyond it (`serve --persist-max-mb`).
+    pub max_bytes: u64,
+    /// Seconds a record stays replayable; `0` = no expiry
+    /// (`serve --cache-ttl-secs`).
+    pub ttl_secs: u64,
+    /// Store **version tag**: recovery drops every record written
+    /// under a different tag, so callers that reuse graph ids with
+    /// changed structure invalidate the whole tier by bumping it.
+    pub version: u64,
+}
+
+impl Default for PersistConfig {
+    fn default() -> Self {
+        Self {
+            max_bytes: 256 << 20,
+            ttl_secs: 0,
+            version: 0,
+        }
+    }
+}
+
+/// Counter snapshot of a [`PersistTier`], surfaced through
+/// `ShardMetrics::report()` and `telemetry::export`.
+#[derive(Clone, Debug, Default)]
+pub struct PersistMetrics {
+    /// Entries replayed into the in-memory tier at the last open.
+    pub warm_start_entries: u64,
+    /// Payload bytes of those replayed entries.
+    pub recovered_bytes: u64,
+    /// Corrupt/torn records quarantined (recovery and compaction).
+    pub recovery_rejects: u64,
+    /// Recovery passes aborted by a contained panic (empty warm start).
+    pub recovery_aborts: u64,
+    /// Records dropped at recovery/compaction for a version-tag mismatch.
+    pub version_drops: u64,
+    /// Records dropped at recovery/compaction for TTL expiry.
+    pub ttl_drops: u64,
+    /// Frames appended and fsynced to the log since open.
+    pub appended_records: u64,
+    /// Bytes appended and fsynced to the log since open.
+    pub appended_bytes: u64,
+    /// Frames currently waiting in the dirty queue.
+    pub flush_lag: u64,
+    /// Flusher batches lost to a contained panic (log repaired back to
+    /// the last fsynced offset).
+    pub flush_panics: u64,
+    /// Flusher batches lost to an I/O error.
+    pub io_errors: u64,
+    /// Compacted snapshots published.
+    pub snapshots: u64,
+    /// Wall seconds spent compacting.
+    pub snapshot_secs: f64,
+    /// Records dropped by the on-disk byte budget at last compaction.
+    pub snapshot_dropped: u64,
+    /// Durable log length after the last flush.
+    pub log_bytes: u64,
+    /// Length of the last published snapshot.
+    pub snapshot_bytes: u64,
+}
+
+impl PersistMetrics {
+    /// Render a compact report section (one line).
+    pub fn report(&self) -> String {
+        format!(
+            "persist: warm_start={} recovered_bytes={} rejects={} appends={} \
+             flush_lag={} flush_panics={} snapshots={} snapshot~={:.3}s \
+             log_bytes={} snapshot_bytes={}\n",
+            self.warm_start_entries,
+            self.recovered_bytes,
+            self.recovery_rejects,
+            self.appended_records,
+            self.flush_lag,
+            self.flush_panics,
+            self.snapshots,
+            self.snapshot_secs,
+            self.log_bytes,
+            self.snapshot_bytes
+        )
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    warm_start_entries: AtomicU64,
+    recovered_bytes: AtomicU64,
+    recovery_rejects: AtomicU64,
+    recovery_aborts: AtomicU64,
+    version_drops: AtomicU64,
+    ttl_drops: AtomicU64,
+    appended_records: AtomicU64,
+    appended_bytes: AtomicU64,
+    flush_panics: AtomicU64,
+    io_errors: AtomicU64,
+    snapshots: AtomicU64,
+    snapshot_nanos: AtomicU64,
+    snapshot_dropped: AtomicU64,
+    log_bytes: AtomicU64,
+    snapshot_bytes: AtomicU64,
+}
+
+#[derive(Default)]
+struct FlushQueue {
+    frames: VecDeque<Vec<u8>>,
+    queued_bytes: usize,
+    enqueued: u64,
+    flushed: u64,
+    shutdown: bool,
+}
+
+struct LogIo {
+    file: File,
+    /// Length through the last successful fsync; repairs truncate back
+    /// to it so torn bytes are never followed by live appends.
+    good_len: u64,
+    path: PathBuf,
+}
+
+impl LogIo {
+    fn open(path: PathBuf, initial_len: u64) -> Result<Self, PersistError> {
+        let mut file = OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(&path)
+            .map_err(|e| io_err("open log", &path, e))?;
+        let good_len = if initial_len < record::FILE_HEADER_BYTES as u64 {
+            file.set_len(0).map_err(|e| io_err("reset log", &path, e))?;
+            file.write_all(&record::file_header())
+                .map_err(|e| io_err("write log header", &path, e))?;
+            file.sync_data().map_err(|e| io_err("sync log", &path, e))?;
+            record::FILE_HEADER_BYTES as u64
+        } else {
+            initial_len
+        };
+        Ok(Self {
+            file,
+            good_len,
+            path,
+        })
+    }
+}
+
+struct Inner {
+    dir: PathBuf,
+    log_path: PathBuf,
+    snap_path: PathBuf,
+    cfg: PersistConfig,
+    queue: Mutex<FlushQueue>,
+    /// Signaled when the queue gains work or shuts down.
+    work: Condvar,
+    /// Signaled when the flusher makes progress (drain/ack) — wakes
+    /// backpressure waiters and [`PersistTier::flush`].
+    done: Condvar,
+    counters: Counters,
+    io: Mutex<LogIo>,
+    recovery_errors: Mutex<Vec<PersistError>>,
+}
+
+/// The on-disk tier handle. Construct with [`PersistTier::open`],
+/// attach to a cache with
+/// [`ResultCache::attach_persist`](super::ResultCache::attach_persist);
+/// the coordinator shares one cache (and therefore one tier) across
+/// shard-engine rebuilds. Dropping the handle drains the dirty queue,
+/// flushes, and joins the flusher thread.
+pub struct PersistTier {
+    inner: Arc<Inner>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+}
+
+fn unix_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map_or(0, |d| d.as_secs())
+}
+
+/// Version/TTL admission shared by recovery and compaction.
+fn admit(cfg: &PersistConfig, counters: &Counters, rec: Record, now: u64) -> Option<Record> {
+    if rec.version != cfg.version {
+        counters.version_drops.fetch_add(1, Relaxed);
+        return None;
+    }
+    if cfg.ttl_secs > 0 && now.saturating_sub(rec.created_at) > cfg.ttl_secs {
+        counters.ttl_drops.fetch_add(1, Relaxed);
+        return None;
+    }
+    Some(rec)
+}
+
+fn keep_error(errors: &Mutex<Vec<PersistError>>, e: PersistError) {
+    let mut errs = lock_unpoisoned(errors.lock());
+    if errs.len() < MAX_KEPT_ERRORS {
+        errs.push(e);
+    }
+}
+
+struct Replayed {
+    /// Offset of the first unreadable byte (`None` = clean to EOF).
+    torn_at: Option<u64>,
+}
+
+/// Replay one persist file into `map` (last write wins), counting
+/// quarantined records. Returns where the file turned unreadable, if
+/// anywhere, so the caller can truncate a torn log.
+fn replay_file(
+    path: &Path,
+    cfg: &PersistConfig,
+    counters: &Counters,
+    errors: &Mutex<Vec<PersistError>>,
+    map: &mut HashMap<CacheKey, (Record, usize)>,
+    now: u64,
+) -> Replayed {
+    let buf = match fs::read(path) {
+        Ok(b) => b,
+        Err(_) => return Replayed { torn_at: None }, // absent: nothing to replay
+    };
+    if buf.is_empty() {
+        return Replayed { torn_at: None };
+    }
+    if !record::check_file_header(&buf) {
+        counters.recovery_rejects.fetch_add(1, Relaxed);
+        keep_error(
+            errors,
+            PersistError::Corrupt {
+                path: path.to_path_buf(),
+                offset: 0,
+                reason: "bad or incompatible file header".into(),
+            },
+        );
+        return Replayed { torn_at: Some(0) };
+    }
+    let mut off = record::FILE_HEADER_BYTES;
+    loop {
+        match record::read_frame(&buf, off) {
+            FrameRead::Eof => return Replayed { torn_at: None },
+            FrameRead::Torn(reason) => {
+                counters.recovery_rejects.fetch_add(1, Relaxed);
+                keep_error(
+                    errors,
+                    PersistError::Corrupt {
+                        path: path.to_path_buf(),
+                        offset: off as u64,
+                        reason,
+                    },
+                );
+                return Replayed {
+                    torn_at: Some(off as u64),
+                };
+            }
+            FrameRead::Frame { payload, next } => {
+                match record::decode_payload(payload) {
+                    Ok(rec) => {
+                        if let Some(rec) = admit(cfg, counters, rec, now) {
+                            map.insert(rec.key, (rec, payload.len()));
+                        }
+                    }
+                    Err(reason) => {
+                        // Framing is intact (the length prefix
+                        // checksummed), so quarantine just this record
+                        // and keep walking.
+                        counters.recovery_rejects.fetch_add(1, Relaxed);
+                        keep_error(
+                            errors,
+                            PersistError::Corrupt {
+                                path: path.to_path_buf(),
+                                offset: off as u64,
+                                reason,
+                            },
+                        );
+                    }
+                }
+                off = next;
+            }
+        }
+    }
+}
+
+/// Snapshot→log replay; truncates a torn log tail so it is never
+/// followed. Panics (the `persist-recover` failpoint) are contained by
+/// the caller.
+fn recover(
+    log_path: &Path,
+    snap_path: &Path,
+    cfg: &PersistConfig,
+    counters: &Counters,
+    errors: &Mutex<Vec<PersistError>>,
+) -> Vec<Record> {
+    failpoint::hit(failpoint::PERSIST_RECOVER);
+    let now = unix_now();
+    let mut map: HashMap<CacheKey, (Record, usize)> = HashMap::new();
+    // Snapshots are published by atomic rename; a torn one is real
+    // corruption — quarantine and use what decoded.
+    replay_file(snap_path, cfg, counters, errors, &mut map, now);
+    let replayed = replay_file(log_path, cfg, counters, errors, &mut map, now);
+    if let Some(at) = replayed.torn_at {
+        if let Ok(f) = OpenOptions::new().write(true).open(log_path) {
+            let _ = f.set_len(at);
+            let _ = f.sync_data();
+        }
+    }
+    let mut bytes = 0u64;
+    let recs: Vec<Record> = map
+        .into_values()
+        .map(|(rec, len)| {
+            bytes += len as u64;
+            rec
+        })
+        .collect();
+    counters.warm_start_entries.store(recs.len() as u64, Relaxed);
+    counters.recovered_bytes.store(bytes, Relaxed);
+    recs
+}
+
+impl PersistTier {
+    /// Open (or create) the tier at `dir`: run recovery, repair any
+    /// torn log tail, start the flusher, and return the handle plus
+    /// every recovered record for the caller to load into the
+    /// in-memory tier. Only environmental failures error; corruption
+    /// is quarantined and counted, and a panic during recovery (the
+    /// `persist-recover` failpoint) degrades to an empty warm start on
+    /// an untouched directory.
+    #[allow(clippy::type_complexity)]
+    pub fn open(dir: &Path, cfg: PersistConfig) -> Result<(Arc<Self>, Vec<Record>), PersistError> {
+        fs::create_dir_all(dir).map_err(|e| io_err("create dir", dir, e))?;
+        let log_path = dir.join("log.bin");
+        let snap_path = dir.join("snapshot.bin");
+        let counters = Counters::default();
+        let errors = Mutex::new(Vec::new());
+        let recovered = match catch_unwind(AssertUnwindSafe(|| {
+            recover(&log_path, &snap_path, &cfg, &counters, &errors)
+        })) {
+            Ok(recs) => recs,
+            Err(_) => {
+                counters.recovery_aborts.fetch_add(1, Relaxed);
+                Vec::new()
+            }
+        };
+        let log_len = fs::metadata(&log_path).map_or(0, |m| m.len());
+        let io = LogIo::open(log_path.clone(), log_len)?;
+        counters.log_bytes.store(io.good_len, Relaxed);
+        counters
+            .snapshot_bytes
+            .store(fs::metadata(&snap_path).map_or(0, |m| m.len()), Relaxed);
+        let inner = Arc::new(Inner {
+            dir: dir.to_path_buf(),
+            log_path,
+            snap_path,
+            cfg,
+            queue: Mutex::new(FlushQueue::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            counters,
+            io: Mutex::new(io),
+            recovery_errors: errors,
+        });
+        let worker = {
+            let inner = Arc::clone(&inner);
+            thread::Builder::new()
+                .name("paramd-persist".into())
+                .spawn(move || worker_loop(&inner))
+                .map_err(|e| io_err("spawn flusher", dir, e))?
+        };
+        Ok((
+            Arc::new(Self {
+                inner,
+                worker: Mutex::new(Some(worker)),
+            }),
+            recovered,
+        ))
+    }
+
+    /// The persist directory.
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    /// The tier's configuration.
+    pub fn config(&self) -> PersistConfig {
+        self.inner.cfg
+    }
+
+    /// Encode one cache entry as a durable frame (no locks held; the
+    /// hot insert path calls this before moving the entry into the
+    /// in-memory tier) stamped with the tier's version tag and the
+    /// current time.
+    pub fn encode_frame(
+        &self,
+        key: &CacheKey,
+        graph: &SymGraph,
+        weights: Option<&[i32]>,
+        value: &CachedOrdering,
+    ) -> Vec<u8> {
+        record::encode(key, self.inner.cfg.version, unix_now(), graph, weights, value)
+    }
+
+    /// Queue an encoded frame for the flusher. Blocks while the dirty
+    /// queue is over its byte cap — bounded backpressure, not
+    /// unbounded memory.
+    pub fn enqueue_frame(&self, frame: Vec<u8>) {
+        let inner = &self.inner;
+        let mut q = lock_unpoisoned(inner.queue.lock());
+        while q.queued_bytes >= QUEUE_CAP_BYTES && !q.shutdown {
+            q = lock_unpoisoned(inner.done.wait(q));
+        }
+        if q.shutdown {
+            return;
+        }
+        q.queued_bytes += frame.len();
+        q.frames.push_back(frame);
+        q.enqueued += 1;
+        inner.work.notify_one();
+    }
+
+    /// Block until everything queued so far has been offered to disk
+    /// (fsynced, or counted lost to a contained flusher failure).
+    pub fn flush(&self) {
+        let inner = &self.inner;
+        let mut q = lock_unpoisoned(inner.queue.lock());
+        let target = q.enqueued;
+        while q.flushed < target && !q.shutdown {
+            q = lock_unpoisoned(inner.done.wait(q));
+        }
+    }
+
+    /// Flush, then compact snapshot + log into a fresh snapshot now
+    /// (tests and operational tooling; the flusher also compacts
+    /// automatically once the log outgrows its threshold).
+    pub fn compact_now(&self) -> Result<(), PersistError> {
+        self.flush();
+        let mut io = lock_unpoisoned(self.inner.io.lock());
+        self.inner.compact(&mut io)
+    }
+
+    /// Snapshot every counter.
+    pub fn metrics(&self) -> PersistMetrics {
+        let flush_lag = lock_unpoisoned(self.inner.queue.lock()).frames.len() as u64;
+        let c = &self.inner.counters;
+        PersistMetrics {
+            warm_start_entries: c.warm_start_entries.load(Relaxed),
+            recovered_bytes: c.recovered_bytes.load(Relaxed),
+            recovery_rejects: c.recovery_rejects.load(Relaxed),
+            recovery_aborts: c.recovery_aborts.load(Relaxed),
+            version_drops: c.version_drops.load(Relaxed),
+            ttl_drops: c.ttl_drops.load(Relaxed),
+            appended_records: c.appended_records.load(Relaxed),
+            appended_bytes: c.appended_bytes.load(Relaxed),
+            flush_lag,
+            flush_panics: c.flush_panics.load(Relaxed),
+            io_errors: c.io_errors.load(Relaxed),
+            snapshots: c.snapshots.load(Relaxed),
+            snapshot_secs: c.snapshot_nanos.load(Relaxed) as f64 / 1e9,
+            snapshot_dropped: c.snapshot_dropped.load(Relaxed),
+            log_bytes: c.log_bytes.load(Relaxed),
+            snapshot_bytes: c.snapshot_bytes.load(Relaxed),
+        }
+    }
+
+    /// The first few corruption errors quarantined during recovery /
+    /// compaction (rendered; bounded).
+    pub fn recovery_errors(&self) -> Vec<String> {
+        lock_unpoisoned(self.inner.recovery_errors.lock())
+            .iter()
+            .map(ToString::to_string)
+            .collect()
+    }
+}
+
+impl Drop for PersistTier {
+    fn drop(&mut self) {
+        {
+            let mut q = lock_unpoisoned(self.inner.queue.lock());
+            q.shutdown = true;
+            self.inner.work.notify_all();
+            self.inner.done.notify_all();
+        }
+        if let Some(h) = lock_unpoisoned(self.worker.lock()).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Inner {
+    /// Block for the next batch; `None` = shut down with an empty
+    /// queue (a shutdown with queued frames drains them first).
+    fn next_batch(&self) -> Option<Vec<Vec<u8>>> {
+        let mut q = lock_unpoisoned(self.queue.lock());
+        loop {
+            if !q.frames.is_empty() {
+                let batch: Vec<Vec<u8>> = q.frames.drain(..).collect();
+                q.queued_bytes = 0;
+                self.done.notify_all(); // free backpressure waiters
+                return Some(batch);
+            }
+            if q.shutdown {
+                return None;
+            }
+            q = lock_unpoisoned(self.work.wait(q));
+        }
+    }
+
+    fn ack(&self, n: u64) {
+        let mut q = lock_unpoisoned(self.queue.lock());
+        q.flushed += n;
+        self.done.notify_all();
+    }
+
+    /// Append a batch and group-commit it with one fsync. The
+    /// `persist-append` failpoint sits between a frame's header and
+    /// payload — a panic or kill there leaves exactly the torn tail
+    /// recovery must truncate.
+    fn flush_batch(&self, io: &mut LogIo, batch: &[Vec<u8>]) -> Result<(), PersistError> {
+        let mut appended = 0u64;
+        for f in batch {
+            io.file
+                .write_all(&f[..record::FRAME_HEADER_BYTES])
+                .map_err(|e| io_err("append", &io.path, e))?;
+            failpoint::hit(failpoint::PERSIST_APPEND);
+            io.file
+                .write_all(&f[record::FRAME_HEADER_BYTES..])
+                .map_err(|e| io_err("append", &io.path, e))?;
+            appended += f.len() as u64;
+        }
+        failpoint::hit(failpoint::PERSIST_FSYNC);
+        io.file
+            .sync_data()
+            .map_err(|e| io_err("fsync", &io.path, e))?;
+        io.good_len += appended;
+        self.counters
+            .appended_records
+            .fetch_add(batch.len() as u64, Relaxed);
+        self.counters.appended_bytes.fetch_add(appended, Relaxed);
+        self.counters.log_bytes.store(io.good_len, Relaxed);
+        Ok(())
+    }
+
+    /// Truncate back to the last fsynced offset after a failed or
+    /// panicked flush, so torn bytes are never followed by live
+    /// appends (the handle is in append mode — later writes go to the
+    /// repaired EOF).
+    fn repair(&self, io: &mut LogIo) {
+        let _ = io.file.set_len(io.good_len);
+        let _ = io.file.sync_data();
+        self.counters.log_bytes.store(io.good_len, Relaxed);
+    }
+
+    fn compact_threshold(&self) -> u64 {
+        (self.cfg.max_bytes / 2).max(64 * 1024)
+    }
+
+    /// Merge snapshot + log into a fresh deduplicated snapshot
+    /// (published by atomic rename), then truncate the log. Oldest
+    /// records are dropped first if the result would exceed the
+    /// on-disk budget.
+    fn compact(&self, io: &mut LogIo) -> Result<(), PersistError> {
+        let t0 = Instant::now();
+        let now = unix_now();
+        let mut map: HashMap<CacheKey, (Record, usize)> = HashMap::new();
+        for path in [&self.snap_path, &self.log_path] {
+            replay_file(
+                path,
+                &self.cfg,
+                &self.counters,
+                &self.recovery_errors,
+                &mut map,
+                now,
+            );
+        }
+        let mut recs: Vec<Record> = map.into_values().map(|(rec, _)| rec).collect();
+        recs.sort_by_key(|r| std::cmp::Reverse(r.created_at));
+        let mut frames: Vec<Vec<u8>> = Vec::new();
+        let mut total = record::FILE_HEADER_BYTES as u64;
+        let mut dropped = 0u64;
+        for r in &recs {
+            let f = record::encode(
+                &r.key,
+                r.version,
+                r.created_at,
+                &r.graph,
+                r.weights.as_deref(),
+                &r.value,
+            );
+            if total + f.len() as u64 > self.cfg.max_bytes {
+                dropped += 1;
+                continue;
+            }
+            total += f.len() as u64;
+            frames.push(f);
+        }
+        let tmp = self.dir.join("snapshot.tmp");
+        {
+            let mut f = File::create(&tmp).map_err(|e| io_err("create snapshot", &tmp, e))?;
+            f.write_all(&record::file_header())
+                .map_err(|e| io_err("write snapshot", &tmp, e))?;
+            for fr in &frames {
+                f.write_all(fr).map_err(|e| io_err("write snapshot", &tmp, e))?;
+            }
+            f.sync_all().map_err(|e| io_err("sync snapshot", &tmp, e))?;
+        }
+        failpoint::hit(failpoint::PERSIST_SNAPSHOT);
+        fs::rename(&tmp, &self.snap_path)
+            .map_err(|e| io_err("publish snapshot", &self.snap_path, e))?;
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all(); // best-effort rename durability
+        }
+        io.file
+            .set_len(record::FILE_HEADER_BYTES as u64)
+            .map_err(|e| io_err("truncate log", &io.path, e))?;
+        let _ = io.file.sync_data();
+        io.good_len = record::FILE_HEADER_BYTES as u64;
+        self.counters.snapshots.fetch_add(1, Relaxed);
+        self.counters
+            .snapshot_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Relaxed);
+        self.counters.snapshot_dropped.store(dropped, Relaxed);
+        self.counters.snapshot_bytes.store(total, Relaxed);
+        self.counters.log_bytes.store(io.good_len, Relaxed);
+        Ok(())
+    }
+}
+
+fn worker_loop(inner: &Arc<Inner>) {
+    while let Some(batch) = inner.next_batch() {
+        let n = batch.len() as u64;
+        {
+            let mut io = lock_unpoisoned(inner.io.lock());
+            match catch_unwind(AssertUnwindSafe(|| inner.flush_batch(&mut io, &batch))) {
+                Ok(Ok(())) => {}
+                Ok(Err(_)) => {
+                    inner.counters.io_errors.fetch_add(1, Relaxed);
+                    inner.repair(&mut io);
+                }
+                Err(_) => {
+                    // A panicked flush (e.g. the persist-append
+                    // failpoint) loses at most this batch; the log is
+                    // repaired and the flusher keeps serving.
+                    inner.counters.flush_panics.fetch_add(1, Relaxed);
+                    inner.repair(&mut io);
+                }
+            }
+            if io.good_len > inner.compact_threshold() {
+                match catch_unwind(AssertUnwindSafe(|| inner.compact(&mut io))) {
+                    Ok(Ok(())) => {}
+                    Ok(Err(_)) => {
+                        inner.counters.io_errors.fetch_add(1, Relaxed);
+                    }
+                    Err(_) => {
+                        inner.counters.flush_panics.fetch_add(1, Relaxed);
+                    }
+                }
+            }
+        }
+        inner.ack(n);
+    }
+}

@@ -1,0 +1,450 @@
+//! The **on-disk record format** of the persistent result-cache tier.
+//!
+//! Both persist files (`log.bin`, `snapshot.bin`) share one layout, all
+//! fields little-endian:
+//!
+//! ```text
+//! file   := file_header frame*
+//! file_header := FILE_MAGIC:u32  FORMAT_VERSION:u32
+//! frame  := RECORD_MAGIC:u32  payload_len:u32  checksum:u64  payload
+//! ```
+//!
+//! Every frame is **independently checksummed and length-prefixed**, so
+//! a torn tail write (process killed mid-append) is detectable by
+//! construction: the partial frame fails its length or checksum check
+//! and the reader truncates there instead of replaying garbage. The
+//! checksum is a [`splitmix64`] chain over the payload's 8-byte chunks,
+//! seeded with the payload length — dependency-free and strong enough
+//! to catch torn writes and bit rot (full collisions additionally have
+//! to survive the in-memory tier's exact CSR verify on first hit).
+//!
+//! The payload carries the complete cache identity and value:
+//! fingerprint + config/weights salt ([`CacheKey`]), the **store
+//! version tag** (callers that reuse graph ids with changed structure
+//! bump it to invalidate every older record at recovery), a creation
+//! timestamp for TTL expiry, the exact-verify CSR + weights, and the
+//! [`CachedOrdering`] replayed on a hit.
+//!
+//! Decoding never panics: every read is bounds-checked and every
+//! failure is a reason string the caller wraps into a typed
+//! [`PersistError`](super::PersistError) or a counted recovery reject.
+
+use crate::graph::csr::SymGraph;
+use crate::graph::fingerprint::Fingerprint;
+use crate::ordering::cache::{CacheKey, CachedOrdering};
+use crate::util::rng::splitmix64;
+
+/// First 4 bytes of every persist file ("PMC1").
+pub const FILE_MAGIC: u32 = 0x504D_4331;
+/// On-disk format revision; bumping it orphans (quarantines) old files.
+pub const FORMAT_VERSION: u32 = 1;
+/// First 4 bytes of every record frame ("PCRE").
+pub const RECORD_MAGIC: u32 = 0x5043_5245;
+/// Bytes of the per-file header (`FILE_MAGIC` + `FORMAT_VERSION`).
+pub const FILE_HEADER_BYTES: usize = 8;
+/// Bytes of the per-frame header (magic + length + checksum).
+pub const FRAME_HEADER_BYTES: usize = 16;
+/// Upper bound on a single payload; larger length prefixes are treated
+/// as corruption rather than allocated.
+pub const MAX_RECORD_BYTES: usize = 1 << 30;
+
+/// A fully decoded persisted cache entry.
+#[derive(Clone, Debug)]
+pub struct Record {
+    /// The cache identity: fingerprint + config/weights salt.
+    pub key: CacheKey,
+    /// Store version tag the record was written under.
+    pub version: u64,
+    /// Creation time, seconds since the Unix epoch (TTL expiry).
+    pub created_at: u64,
+    /// Exact-verify copy of the keyed graph.
+    pub graph: SymGraph,
+    /// Exact-verify copy of the seed supervariable weights.
+    pub weights: Option<Vec<i32>>,
+    /// The ordering replayed on a hit.
+    pub value: CachedOrdering,
+}
+
+/// The file header every persist file starts with.
+pub fn file_header() -> [u8; FILE_HEADER_BYTES] {
+    let mut h = [0u8; FILE_HEADER_BYTES];
+    h[..4].copy_from_slice(&FILE_MAGIC.to_le_bytes());
+    h[4..].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+    h
+}
+
+/// Whether `buf` starts with a current-format file header.
+pub fn check_file_header(buf: &[u8]) -> bool {
+    buf.len() >= FILE_HEADER_BYTES && buf[..FILE_HEADER_BYTES] == file_header()
+}
+
+/// Frame checksum: a [`splitmix64`] chain over 8-byte little-endian
+/// chunks (zero-padded tail), seeded with the payload length.
+pub fn checksum(payload: &[u8]) -> u64 {
+    let mut h = splitmix64(0x5045_5253 ^ payload.len() as u64);
+    let mut chunks = payload.chunks_exact(8);
+    for c in &mut chunks {
+        h = splitmix64(h ^ u64::from_le_bytes(c.try_into().expect("8-byte chunk")));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut last = [0u8; 8];
+        last[..rem.len()].copy_from_slice(rem);
+        h = splitmix64(h ^ u64::from_le_bytes(last));
+    }
+    h
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+/// Wrap `payload` in a checksummed, length-prefixed frame.
+pub fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len());
+    put_u32(&mut out, RECORD_MAGIC);
+    put_u32(&mut out, payload.len() as u32);
+    put_u64(&mut out, checksum(payload));
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode one cache entry as a complete frame (header + payload),
+/// borrowing everything — the hot insert path encodes before the entry
+/// is moved into the in-memory tier.
+pub fn encode(
+    key: &CacheKey,
+    version: u64,
+    created_at: u64,
+    graph: &SymGraph,
+    weights: Option<&[i32]>,
+    value: &CachedOrdering,
+) -> Vec<u8> {
+    let mut p = Vec::with_capacity(
+        160 + graph.rowptr.len() * 8
+            + graph.colind.len() * 4
+            + weights.map_or(0, |w| w.len() * 4)
+            + value.perm.len() * 4
+            + value.set_sizes.len() * 4,
+    );
+    put_u64(&mut p, key.fp.hi);
+    put_u64(&mut p, key.fp.lo);
+    put_u64(&mut p, key.salt);
+    put_u64(&mut p, version);
+    put_u64(&mut p, created_at);
+    put_u64(&mut p, graph.n as u64);
+    put_u64(&mut p, graph.rowptr.len() as u64);
+    for &r in &graph.rowptr {
+        put_u64(&mut p, r as u64);
+    }
+    put_u64(&mut p, graph.colind.len() as u64);
+    for &c in &graph.colind {
+        p.extend_from_slice(&c.to_le_bytes());
+    }
+    match weights {
+        None => put_u64(&mut p, 0),
+        Some(ws) => {
+            put_u64(&mut p, 1);
+            put_u64(&mut p, ws.len() as u64);
+            for &w in ws {
+                p.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+    }
+    put_u64(&mut p, value.perm.len() as u64);
+    for &v in &value.perm {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    put_u64(&mut p, value.rounds);
+    put_u64(&mut p, value.gc_count);
+    put_f64(&mut p, value.gc_secs);
+    put_f64(&mut p, value.modeled_time);
+    put_u64(&mut p, value.set_sizes.len() as u64);
+    for &s in &value.set_sizes {
+        p.extend_from_slice(&s.to_le_bytes());
+    }
+    put_u64(&mut p, value.reduced as u64);
+    frame(&p)
+}
+
+/// Outcome of reading one frame at `off`.
+pub enum FrameRead<'a> {
+    /// Clean end of file.
+    Eof,
+    /// The bytes at `off` are not a complete, checksum-valid frame — a
+    /// torn tail write or corruption. Nothing at or past `off` can be
+    /// trusted (frame lengths chain the walk), so the reader truncates
+    /// here.
+    Torn(String),
+    /// A complete, checksum-valid payload; the next frame starts at
+    /// `next`.
+    Frame { payload: &'a [u8], next: usize },
+}
+
+/// Read the frame starting at byte `off` of `buf` (which excludes the
+/// file header — pass `FILE_HEADER_BYTES` for the first frame).
+pub fn read_frame(buf: &[u8], off: usize) -> FrameRead<'_> {
+    if off >= buf.len() {
+        return FrameRead::Eof;
+    }
+    let rest = &buf[off..];
+    if rest.len() < FRAME_HEADER_BYTES {
+        return FrameRead::Torn(format!(
+            "truncated frame header at offset {off}: {} of {FRAME_HEADER_BYTES} bytes",
+            rest.len()
+        ));
+    }
+    let magic = u32::from_le_bytes(rest[..4].try_into().expect("4 bytes"));
+    if magic != RECORD_MAGIC {
+        return FrameRead::Torn(format!("bad record magic {magic:#x} at offset {off}"));
+    }
+    let len = u32::from_le_bytes(rest[4..8].try_into().expect("4 bytes")) as usize;
+    if len > MAX_RECORD_BYTES {
+        return FrameRead::Torn(format!("implausible record length {len} at offset {off}"));
+    }
+    let sum = u64::from_le_bytes(rest[8..16].try_into().expect("8 bytes"));
+    if rest.len() - FRAME_HEADER_BYTES < len {
+        return FrameRead::Torn(format!(
+            "truncated payload at offset {off}: {} of {len} bytes",
+            rest.len() - FRAME_HEADER_BYTES
+        ));
+    }
+    let payload = &rest[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + len];
+    if checksum(payload) != sum {
+        return FrameRead::Torn(format!("checksum mismatch at offset {off}"));
+    }
+    FrameRead::Frame {
+        payload,
+        next: off + FRAME_HEADER_BYTES + len,
+    }
+}
+
+/// A bounds-checked little-endian reader; every failure is a reason
+/// string, never a panic.
+struct Cursor<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.buf.len() < n {
+            return Err(format!(
+                "payload truncated: wanted {n} bytes, {} left",
+                self.buf.len()
+            ));
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length prefix for `elem`-byte elements, validated against the
+    /// bytes actually remaining so corruption can't trigger a huge
+    /// allocation.
+    fn len(&mut self, elem: usize, what: &str) -> Result<usize, String> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(elem) {
+            Some(b) if b <= self.buf.len() => Ok(n),
+            _ => Err(format!("{what} length {n} exceeds remaining payload")),
+        }
+    }
+
+    fn vec_u64_as_usize(&mut self, what: &str) -> Result<Vec<usize>, String> {
+        let n = self.len(8, what)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8 bytes")) as usize)
+            .collect())
+    }
+
+    fn vec_i32(&mut self, what: &str) -> Result<Vec<i32>, String> {
+        let n = self.len(4, what)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+
+    fn vec_u32(&mut self, what: &str) -> Result<Vec<u32>, String> {
+        let n = self.len(4, what)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+}
+
+/// Decode a checksum-valid payload back into a [`Record`]. Structural
+/// inconsistencies (a `rowptr` that doesn't match `n`, truncated
+/// vectors) are reported as reasons — a record that checksums but does
+/// not decode is quarantined by the caller, never replayed.
+pub fn decode_payload(payload: &[u8]) -> Result<Record, String> {
+    let mut c = Cursor { buf: payload };
+    let hi = c.u64()?;
+    let lo = c.u64()?;
+    let salt = c.u64()?;
+    let version = c.u64()?;
+    let created_at = c.u64()?;
+    let n = c.u64()? as usize;
+    let rowptr = c.vec_u64_as_usize("rowptr")?;
+    if n.checked_add(1) != Some(rowptr.len()) {
+        return Err(format!("rowptr length {} does not match n={n}", rowptr.len()));
+    }
+    let colind = c.vec_i32("colind")?;
+    if *rowptr.last().expect("rowptr is non-empty") != colind.len() {
+        return Err(format!(
+            "rowptr end {} does not match colind length {}",
+            rowptr.last().expect("rowptr is non-empty"),
+            colind.len()
+        ));
+    }
+    let weights = match c.u64()? {
+        0 => None,
+        1 => Some(c.vec_i32("weights")?),
+        w => return Err(format!("bad weights flag {w}")),
+    };
+    let perm = c.vec_i32("perm")?;
+    let rounds = c.u64()?;
+    let gc_count = c.u64()?;
+    let gc_secs = c.f64()?;
+    let modeled_time = c.f64()?;
+    let set_sizes = c.vec_u32("set_sizes")?;
+    let reduced = c.u64()? as usize;
+    if !c.buf.is_empty() {
+        return Err(format!("{} trailing payload bytes", c.buf.len()));
+    }
+    Ok(Record {
+        key: CacheKey {
+            fp: Fingerprint { hi, lo },
+            salt,
+        },
+        version,
+        created_at,
+        graph: SymGraph { n, rowptr, colind },
+        weights,
+        value: CachedOrdering {
+            perm,
+            rounds,
+            gc_count,
+            gc_secs,
+            modeled_time,
+            set_sizes,
+            reduced,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matgen::mesh2d;
+
+    fn sample(weights: bool) -> (CacheKey, SymGraph, Option<Vec<i32>>, CachedOrdering) {
+        let g = mesh2d(6, 7);
+        let w = weights.then(|| vec![2i32; g.n]);
+        let key = CacheKey::new(&g, w.as_deref(), 99);
+        let value = CachedOrdering {
+            perm: (0..g.n as i32).rev().collect(),
+            rounds: 5,
+            gc_count: 2,
+            gc_secs: 0.25,
+            modeled_time: 1.5,
+            set_sizes: vec![3, 4, 5],
+            reduced: 11,
+        };
+        (key, g, w, value)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        for weighted in [false, true] {
+            let (key, g, w, value) = sample(weighted);
+            let f = encode(&key, 7, 1234, &g, w.as_deref(), &value);
+            let FrameRead::Frame { payload, next } = read_frame(&f, 0) else {
+                panic!("frame must read back");
+            };
+            assert_eq!(next, f.len());
+            let rec = decode_payload(payload).expect("payload must decode");
+            assert_eq!(rec.key, key);
+            assert_eq!(rec.version, 7);
+            assert_eq!(rec.created_at, 1234);
+            assert_eq!(rec.graph, g);
+            assert_eq!(rec.weights, w);
+            assert_eq!(rec.value.perm, value.perm);
+            assert_eq!(rec.value.rounds, value.rounds);
+            assert_eq!(rec.value.set_sizes, value.set_sizes);
+            assert_eq!(rec.value.reduced, value.reduced);
+            assert!((rec.value.modeled_time - value.modeled_time).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn any_single_bit_flip_is_detected() {
+        let (key, g, w, value) = sample(true);
+        let f = encode(&key, 0, 0, &g, w.as_deref(), &value);
+        // Flip one bit in a spread of positions across header + payload.
+        for pos in [0, 5, 9, FRAME_HEADER_BYTES, FRAME_HEADER_BYTES + 33, f.len() - 1] {
+            let mut bad = f.clone();
+            bad[pos] ^= 0x10;
+            match read_frame(&bad, 0) {
+                FrameRead::Torn(_) => {}
+                FrameRead::Eof => panic!("flip at {pos} read as EOF"),
+                FrameRead::Frame { .. } => panic!("flip at {pos} went undetected"),
+            }
+        }
+    }
+
+    #[test]
+    fn torn_tail_is_detected_at_every_truncation_point() {
+        let (key, g, w, value) = sample(false);
+        let f = encode(&key, 0, 0, &g, w.as_deref(), &value);
+        for cut in [1, FRAME_HEADER_BYTES - 1, FRAME_HEADER_BYTES, f.len() - 1] {
+            match read_frame(&f[..cut], 0) {
+                FrameRead::Torn(_) => {}
+                _ => panic!("cut at {cut} bytes not reported torn"),
+            }
+        }
+        assert!(matches!(read_frame(&f, f.len()), FrameRead::Eof));
+    }
+
+    #[test]
+    fn checksummed_but_malformed_payload_is_a_typed_reject() {
+        // A frame whose payload checksums correctly but is semantic
+        // garbage must decode to an error, never panic.
+        let garbage = vec![0xABu8; 40];
+        let f = frame(&garbage);
+        let FrameRead::Frame { payload, .. } = read_frame(&f, 0) else {
+            panic!("well-framed garbage must pass the frame check");
+        };
+        assert!(decode_payload(payload).is_err());
+    }
+
+    #[test]
+    fn file_header_roundtrips_and_rejects_other_versions() {
+        let h = file_header();
+        assert!(check_file_header(&h));
+        assert!(!check_file_header(&h[..4]));
+        let mut old = h;
+        old[4] = 0xFF; // other format version
+        assert!(!check_file_header(&old));
+    }
+}

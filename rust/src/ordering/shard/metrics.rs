@@ -106,6 +106,10 @@ pub struct ShardMetrics {
     pub per_shard: Vec<ShardStat>,
     /// log2-bucketed component sizes ([`SIZE_HIST_BUCKETS`] buckets).
     pub size_hist: Vec<u64>,
+    /// Persistent result-cache tier counters (`None` unless the engine's
+    /// cache has an attached [`persist`](crate::ordering::cache::persist)
+    /// tier; filled by `ShardEngine::metrics`, not by the counters).
+    pub persist: Option<crate::ordering::cache::persist::PersistMetrics>,
 }
 
 impl ShardMetrics {
@@ -166,6 +170,10 @@ impl ShardMetrics {
                 "  shed: hybrid={} rereduce={} sequential={}\n",
                 self.shed_hybrid, self.shed_rereduce, self.shed_sequential
             ));
+        }
+        if let Some(p) = &self.persist {
+            s.push_str("  ");
+            s.push_str(&p.report());
         }
         for (i, st) in self.per_shard.iter().enumerate() {
             s.push_str(&format!(
@@ -353,6 +361,7 @@ impl EngineCounters {
             shed_sequential: self.shed_sequential.load(Relaxed),
             per_shard,
             size_hist: self.size_hist.iter().map(|b| b.load(Relaxed)).collect(),
+            persist: None,
         }
     }
 }

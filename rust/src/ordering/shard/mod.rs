@@ -1065,7 +1065,9 @@ impl ShardEngine {
                 busy_p95_secs: lock_unpoisoned(s.busy_hist.lock()).quantile(0.95),
             })
             .collect();
-        self.counters.snapshot(per_shard)
+        let mut m = self.counters.snapshot(per_shard);
+        m.persist = self.cache.persist_metrics();
+        m
     }
 
     /// Order `g`, never cancelled ([`Self::order_cancellable`] with a

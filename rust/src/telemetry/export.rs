@@ -176,6 +176,29 @@ pub fn prometheus(m: &Metrics) -> String {
     help(&mut out, "paramd_cache_saved_seconds_total", "counter", "Modeled ordering seconds short-circuited by hits.");
     let _ = writeln!(out, "paramd_cache_saved_seconds_total {}", c.saved_secs);
 
+    // Persistent-tier families appear only once a persist dir is
+    // attached (`serve --persist-dir`), mirroring the report section.
+    if let Some(pm) = &m.shards.persist {
+        help(&mut out, "paramd_cache_warm_start_entries", "gauge", "Entries replayed from disk at the last open.");
+        let _ = writeln!(out, "paramd_cache_warm_start_entries {}", pm.warm_start_entries);
+        help(&mut out, "paramd_cache_recovered_bytes", "gauge", "Payload bytes replayed from disk at the last open.");
+        let _ = writeln!(out, "paramd_cache_recovered_bytes {}", pm.recovered_bytes);
+        help(&mut out, "paramd_cache_recovery_rejects_total", "counter", "Torn or corrupt records quarantined at recovery/compaction.");
+        let _ = writeln!(out, "paramd_cache_recovery_rejects_total {}", pm.recovery_rejects);
+        help(&mut out, "paramd_cache_persist_appends_total", "counter", "Frames appended and fsynced to the record log.");
+        let _ = writeln!(out, "paramd_cache_persist_appends_total {}", pm.appended_records);
+        help(&mut out, "paramd_cache_persist_flush_lag", "gauge", "Frames waiting in the flusher's dirty queue.");
+        let _ = writeln!(out, "paramd_cache_persist_flush_lag {}", pm.flush_lag);
+        help(&mut out, "paramd_cache_persist_flush_panics_total", "counter", "Flusher batches lost to a contained panic.");
+        let _ = writeln!(out, "paramd_cache_persist_flush_panics_total {}", pm.flush_panics);
+        help(&mut out, "paramd_cache_persist_snapshots_total", "counter", "Compacted snapshots published.");
+        let _ = writeln!(out, "paramd_cache_persist_snapshots_total {}", pm.snapshots);
+        help(&mut out, "paramd_cache_persist_snapshot_seconds_total", "counter", "Wall seconds spent compacting snapshots.");
+        let _ = writeln!(out, "paramd_cache_persist_snapshot_seconds_total {}", pm.snapshot_secs);
+        help(&mut out, "paramd_cache_persist_log_bytes", "gauge", "Durable record-log length after the last flush.");
+        let _ = writeln!(out, "paramd_cache_persist_log_bytes {}", pm.log_bytes);
+    }
+
     out
 }
 
@@ -262,7 +285,7 @@ pub fn json_snapshot(m: &Metrics) -> String {
     let _ = write!(
         out,
         "]}},\"cache\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\
-         \"bytes\":{},\"budget_bytes\":{},\"saved_secs\":{}}}}}",
+         \"bytes\":{},\"budget_bytes\":{},\"saved_secs\":{}",
         c.hits,
         c.misses,
         c.evictions,
@@ -270,6 +293,30 @@ pub fn json_snapshot(m: &Metrics) -> String {
         c.budget_bytes,
         jf(c.saved_secs)
     );
+    if let Some(pm) = &m.shards.persist {
+        let _ = write!(
+            out,
+            ",\"persist\":{{\"warm_start_entries\":{},\"recovered_bytes\":{},\
+             \"recovery_rejects\":{},\"version_drops\":{},\"ttl_drops\":{},\
+             \"appended_records\":{},\"flush_lag\":{},\"flush_panics\":{},\
+             \"io_errors\":{},\"snapshots\":{},\"snapshot_secs\":{},\
+             \"log_bytes\":{},\"snapshot_bytes\":{}}}",
+            pm.warm_start_entries,
+            pm.recovered_bytes,
+            pm.recovery_rejects,
+            pm.version_drops,
+            pm.ttl_drops,
+            pm.appended_records,
+            pm.flush_lag,
+            pm.flush_panics,
+            pm.io_errors,
+            pm.snapshots,
+            jf(pm.snapshot_secs),
+            pm.log_bytes,
+            pm.snapshot_bytes
+        );
+    }
+    out.push_str("}}");
     out
 }
 
@@ -341,6 +388,43 @@ mod tests {
             .unwrap();
         let v: f64 = sum_line.rsplit_once(' ').unwrap().1.parse().unwrap();
         assert!((v - 1.0).abs() < 1e-9, "0.5 + 0.5 = 1.0 exactly: {sum_line}");
+    }
+
+    #[test]
+    fn persist_families_appear_only_with_an_attached_tier() {
+        let mut m = sample_metrics();
+        assert!(
+            !prometheus(&m).contains("paramd_cache_warm_start_entries"),
+            "no persist tier, no persist families"
+        );
+        assert!(!json_snapshot(&m).contains("\"persist\""));
+        m.shards.persist = Some(crate::ordering::cache::persist::PersistMetrics {
+            warm_start_entries: 5,
+            recovered_bytes: 4096,
+            recovery_rejects: 1,
+            appended_records: 9,
+            ..Default::default()
+        });
+        let page = prometheus(&m);
+        for family in [
+            "paramd_cache_warm_start_entries 5",
+            "paramd_cache_recovered_bytes 4096",
+            "paramd_cache_recovery_rejects_total 1",
+            "paramd_cache_persist_appends_total 9",
+            "paramd_cache_persist_flush_lag 0",
+            "paramd_cache_persist_log_bytes 0",
+        ] {
+            assert!(page.contains(family), "missing {family:?} in:\n{page}");
+        }
+        for line in page.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(name.starts_with("paramd_"), "family prefix: {line}");
+            assert!(value.parse::<f64>().is_ok(), "numeric value: {line}");
+        }
+        let j = json_snapshot(&m);
+        crate::telemetry::validate_json(&j).expect("snapshot must stay valid JSON");
+        assert!(j.contains("\"persist\":{\"warm_start_entries\":5"));
+        assert!(j.contains("\"recovery_rejects\":1"));
     }
 
     #[test]

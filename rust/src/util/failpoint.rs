@@ -45,6 +45,18 @@ pub const STAGE_LATENCY: &str = "stage-latency";
 /// Site: the result cache's exact-verify compare (`reject` forces a
 /// verify-reject, downgrading a hit to a miss).
 pub const CACHE_VERIFY: &str = "cache-verify";
+/// Site: the persist flusher, between writing a record's frame header
+/// and its payload — `panic` here leaves a torn tail on disk, exactly
+/// the shape recovery must truncate.
+pub const PERSIST_APPEND: &str = "persist-append";
+/// Site: the persist flusher, just before the group-commit fsync
+/// (`sleep:<ms>` holds the window open for kill -9 crash tests).
+pub const PERSIST_FSYNC: &str = "persist-fsync";
+/// Site: snapshot compaction, after writing the temp snapshot but
+/// before the atomic rename that publishes it.
+pub const PERSIST_SNAPSHOT: &str = "persist-snapshot";
+/// Site: recovery-on-open, before the snapshot→log replay begins.
+pub const PERSIST_RECOVER: &str = "persist-recover";
 
 /// What an armed failpoint does when its site is hit.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

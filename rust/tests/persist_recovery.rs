@@ -1,0 +1,492 @@
+//! Crash-recovery suite for the persistent result-cache tier: every
+//! `persist-*` failpoint armed with `panic` loses at most the in-flight
+//! batch and leaves a restartable store; checksummed-complete records
+//! replay bit-identically; torn tails are truncated and counted into
+//! `recovery_rejects` (never replayed); version tags and TTLs
+//! invalidate at recovery; and a panicked flusher degrades to a lost
+//! batch — cache miss on restart — not a cascade.
+//!
+//! The failpoint registry is process-global, so every test takes the
+//! `serial()` gate and disarms on entry and exit, exactly like the
+//! chaos suite.
+
+use std::fs;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+use paramd::coordinator::{Method, OrderError, OrderRequest, Service};
+use paramd::graph::csr::SymGraph;
+use paramd::graph::perm::is_valid_perm;
+use paramd::matgen::mesh2d;
+use paramd::ordering::cache::persist::record;
+use paramd::ordering::cache::persist::{PersistConfig, PersistError, PersistTier};
+use paramd::ordering::cache::{CacheKey, CachedOrdering};
+use paramd::util::failpoint::{self, FailAction};
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn req(g: SymGraph) -> OrderRequest {
+    OrderRequest {
+        matrix: None,
+        pattern: Some(g),
+        method: Method::ParAmd {
+            threads: 1,
+            mult: 1.1,
+            lim_total: 0,
+        },
+        compute_fill: false,
+    }
+}
+
+/// A deterministic single-scheduler, single-shard service with the
+/// persist tier attached at `dir` — recomputes are bit-reproducible, so
+/// "replays bit-identically" is distinguishable from "recomputed
+/// differently".
+fn persistent_service(dir: &std::path::Path) -> Service {
+    Service::new(1)
+        .with_scheduler_threads(1)
+        .with_shard_threads(1)
+        .with_persist(dir)
+        .expect("persist dir must open")
+}
+
+fn fresh_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("paramd_persist_{}_{name}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn unix_now() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map_or(0, |d| d.as_secs())
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !cond() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timeout waiting for {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// A synthetic cache entry over `g` (tier-level tests never execute the
+/// permutation, so only bit-exactness matters).
+fn value_for(g: &SymGraph, seed: i32) -> CachedOrdering {
+    CachedOrdering {
+        perm: (0..g.n as i32).map(|i| (i + seed) % g.n as i32).collect(),
+        rounds: 4,
+        gc_count: 1,
+        gc_secs: 0.125,
+        modeled_time: 0.25,
+        set_sizes: vec![g.n as u32],
+        reduced: 0,
+    }
+}
+
+#[test]
+fn warm_restart_replays_bit_identical_through_the_service() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let dir = fresh_dir("warm");
+    let (g1, g2) = (mesh2d(15, 15), mesh2d(12, 18));
+    let svc = persistent_service(&dir);
+    let p1 = svc.order(&req(g1.clone())).perm;
+    let p2 = svc.order(&req(g2.clone())).perm;
+    assert!(is_valid_perm(&p1) && is_valid_perm(&p2));
+    drop(svc); // drains the dirty queue and joins the flusher
+
+    let svc2 = persistent_service(&dir);
+    let pm = svc2.metrics().shards.persist.expect("tier attached");
+    assert!(pm.warm_start_entries >= 2, "warm start empty: {pm:?}");
+    assert!(pm.recovered_bytes > 0);
+    assert_eq!(pm.recovery_rejects, 0, "clean shutdown must replay clean");
+    assert_eq!(svc2.order(&req(g1.clone())).perm, p1, "g1 must replay bit-identically");
+    assert_eq!(svc2.order(&req(g2.clone())).perm, p2, "g2 must replay bit-identically");
+    assert!(
+        svc2.metrics().cache.hits >= 2,
+        "warm-started entries must answer as cache hits"
+    );
+    failpoint::disarm_all();
+}
+
+#[test]
+fn append_and_fsync_panics_lose_at_most_the_inflight_batch() {
+    let _g = serial();
+    failpoint::disarm_all();
+    for name in [failpoint::PERSIST_APPEND, failpoint::PERSIST_FSYNC] {
+        let dir = fresh_dir(&format!("crash_{}", name.replace('-', "_")));
+        let (ga, gb) = (mesh2d(14, 14), mesh2d(11, 16));
+        let svc = persistent_service(&dir);
+        // The first flushed batch dies mid-write: a torn tail for
+        // `persist-append`, an unsynced batch for `persist-fsync`. The
+        // flusher repairs the log back to the last fsynced offset.
+        failpoint::arm(name, FailAction::Panic, Some(1));
+        let pa = svc.order(&req(ga.clone())).perm;
+        wait_until("the armed flush panic", || failpoint::fired(name) >= 1);
+        let pb = svc.order(&req(gb.clone())).perm;
+        let pm = svc.metrics().shards.persist.expect("tier attached");
+        assert!(pm.flush_panics >= 1, "{name}: panic not contained+counted: {pm:?}");
+        // Still serviceable after the contained panic.
+        assert!(is_valid_perm(&svc.order(&req(ga.clone())).perm), "{name}: wedged");
+        drop(svc);
+        failpoint::disarm_all();
+
+        let svc2 = persistent_service(&dir);
+        let pm = svc2.metrics().shards.persist.expect("tier attached");
+        assert_eq!(
+            pm.recovery_rejects, 0,
+            "{name}: runtime repair must leave no torn tail for recovery"
+        );
+        // Whatever survived replays bit-identically; whatever was lost
+        // recomputes to the same answer on this deterministic config.
+        assert_eq!(svc2.order(&req(ga)).perm, pa, "{name}: ga diverged after restart");
+        assert_eq!(svc2.order(&req(gb)).perm, pb, "{name}: gb diverged after restart");
+    }
+    failpoint::disarm_all();
+}
+
+#[test]
+fn aborted_recovery_degrades_to_empty_warm_start_and_the_next_open_replays() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let dir = fresh_dir("recover_panic");
+    let g = mesh2d(13, 13);
+    let svc = persistent_service(&dir);
+    let p = svc.order(&req(g.clone())).perm;
+    drop(svc);
+
+    // A panic inside recovery is contained: the service opens with an
+    // empty warm start on an untouched directory and keeps serving.
+    failpoint::arm(failpoint::PERSIST_RECOVER, FailAction::Panic, Some(1));
+    let degraded = persistent_service(&dir);
+    assert_eq!(failpoint::fired(failpoint::PERSIST_RECOVER), 1);
+    let pm = degraded.metrics().shards.persist.expect("tier attached");
+    assert_eq!(pm.recovery_aborts, 1, "{pm:?}");
+    assert_eq!(pm.warm_start_entries, 0);
+    assert_eq!(degraded.order(&req(g.clone())).perm, p, "degraded open must still serve");
+    drop(degraded);
+    failpoint::disarm_all();
+
+    // Nothing was lost: the next clean open replays everything.
+    let svc3 = persistent_service(&dir);
+    let pm = svc3.metrics().shards.persist.expect("tier attached");
+    assert!(pm.warm_start_entries >= 1, "{pm:?}");
+    assert_eq!(pm.recovery_rejects, 0);
+    assert_eq!(svc3.order(&req(g)).perm, p);
+    failpoint::disarm_all();
+}
+
+#[test]
+fn snapshot_panic_keeps_old_state_and_the_next_compaction_succeeds() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let dir = fresh_dir("snapshot_panic");
+    let cfg = PersistConfig::default();
+    let (tier, recovered) = PersistTier::open(&dir, cfg).expect("open");
+    assert!(recovered.is_empty());
+    let g = mesh2d(9, 9);
+    let keys: Vec<CacheKey> = (0..3).map(|s| CacheKey::new(&g, None, s)).collect();
+    for (i, k) in keys.iter().enumerate() {
+        tier.enqueue_frame(tier.encode_frame(k, &g, None, &value_for(&g, i as i32)));
+    }
+    tier.flush();
+
+    // Compaction dies between writing snapshot.tmp and the publishing
+    // rename: no snapshot appears, the log is untouched.
+    failpoint::arm(failpoint::PERSIST_SNAPSHOT, FailAction::Panic, Some(1));
+    assert!(catch_unwind(AssertUnwindSafe(|| tier.compact_now())).is_err());
+    failpoint::disarm_all();
+    let m = tier.metrics();
+    assert_eq!(m.snapshots, 0, "{m:?}");
+    assert!(!dir.join("snapshot.bin").exists(), "no half-published snapshot");
+    assert!(m.log_bytes > record::FILE_HEADER_BYTES as u64, "log must be untouched");
+
+    // The retry publishes cleanly and truncates the log.
+    tier.compact_now().expect("second compaction");
+    let m = tier.metrics();
+    assert_eq!(m.snapshots, 1, "{m:?}");
+    assert!(dir.join("snapshot.bin").exists());
+    assert_eq!(m.log_bytes, record::FILE_HEADER_BYTES as u64);
+    drop(tier);
+
+    let (_tier2, recovered) = PersistTier::open(&dir, cfg).expect("reopen");
+    assert_eq!(recovered.len(), keys.len(), "every record survives the failed compaction");
+    failpoint::disarm_all();
+}
+
+#[test]
+fn torn_tail_is_truncated_and_counted_while_complete_records_replay() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let dir = fresh_dir("torn_tail");
+    let cfg = PersistConfig::default();
+    let (tier, _) = PersistTier::open(&dir, cfg).expect("open");
+    let (ga, gb) = (mesh2d(8, 8), mesh2d(7, 9));
+    let (ka, kb) = (CacheKey::new(&ga, None, 1), CacheKey::new(&gb, None, 2));
+    let (va, vb) = (value_for(&ga, 3), value_for(&gb, 5));
+    tier.enqueue_frame(tier.encode_frame(&ka, &ga, None, &va));
+    tier.enqueue_frame(tier.encode_frame(&kb, &gb, None, &vb));
+    tier.flush();
+    let clean_len = tier.metrics().log_bytes;
+    drop(tier);
+
+    // Simulate a kill mid-append: a partial frame header on the tail.
+    let log = dir.join("log.bin");
+    let mut bytes = fs::read(&log).expect("log readable");
+    assert_eq!(bytes.len() as u64, clean_len);
+    bytes.extend_from_slice(&[0xDE, 0xAD, 0xBE, 0xEF, 0x00, 0x01, 0x02]);
+    fs::write(&log, &bytes).expect("append torn tail");
+
+    let (tier2, recovered) = PersistTier::open(&dir, cfg).expect("reopen");
+    let m = tier2.metrics();
+    assert_eq!(m.recovery_rejects, 1, "the torn tail is counted: {m:?}");
+    assert_eq!(m.warm_start_entries, 2, "complete records all replay: {m:?}");
+    assert!(!tier2.recovery_errors().is_empty(), "quarantine keeps the reason");
+    assert_eq!(
+        fs::metadata(&log).expect("log present").len(),
+        clean_len,
+        "recovery truncates the torn tail so it is never replayed or followed"
+    );
+    // Bit-identical replay of every complete record.
+    for (key, graph, value) in [(ka, &ga, &va), (kb, &gb, &vb)] {
+        let rec = recovered
+            .iter()
+            .find(|r| r.key == key)
+            .unwrap_or_else(|| panic!("record {key:?} missing from recovery"));
+        assert_eq!(rec.graph, *graph);
+        assert_eq!(rec.value.perm, value.perm);
+        assert_eq!(rec.value.rounds, value.rounds);
+        assert_eq!(rec.value.set_sizes, value.set_sizes);
+        assert_eq!(rec.value.reduced, value.reduced);
+    }
+    failpoint::disarm_all();
+}
+
+#[test]
+fn checksummed_garbage_is_quarantined_and_the_walk_continues() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let dir = fresh_dir("garbage_record");
+    fs::create_dir_all(&dir).unwrap();
+    let (ga, gb) = (mesh2d(6, 6), mesh2d(5, 7));
+    let (ka, kb) = (CacheKey::new(&ga, None, 1), CacheKey::new(&gb, None, 2));
+    let now = unix_now();
+    // valid frame | well-framed semantic garbage | valid frame: the
+    // garbage checksums, so the walk quarantines it and keeps going.
+    let mut buf = record::file_header().to_vec();
+    buf.extend_from_slice(&record::encode(&ka, 0, now, &ga, None, &value_for(&ga, 1)));
+    buf.extend_from_slice(&record::frame(&[0xAB; 48]));
+    buf.extend_from_slice(&record::encode(&kb, 0, now, &gb, None, &value_for(&gb, 2)));
+    fs::write(dir.join("log.bin"), &buf).unwrap();
+
+    let (tier, recovered) = PersistTier::open(&dir, PersistConfig::default()).expect("open");
+    let m = tier.metrics();
+    assert_eq!(m.recovery_rejects, 1, "{m:?}");
+    assert_eq!(m.warm_start_entries, 2, "records on both sides of the garbage replay");
+    assert!(recovered.iter().any(|r| r.key == ka));
+    assert!(recovered.iter().any(|r| r.key == kb));
+    let errs = tier.recovery_errors();
+    assert!(
+        errs.iter().any(|e| e.contains("corrupt persist record")),
+        "quarantine reasons: {errs:?}"
+    );
+    assert_eq!(
+        fs::metadata(dir.join("log.bin")).unwrap().len() as usize,
+        buf.len(),
+        "an interior quarantine is not a torn tail: nothing is truncated"
+    );
+    failpoint::disarm_all();
+}
+
+#[test]
+fn version_tag_and_ttl_invalidate_at_recovery() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let dir = fresh_dir("version_ttl");
+    fs::create_dir_all(&dir).unwrap();
+    let g = mesh2d(6, 8);
+    let (fresh_key, stale_key) = (CacheKey::new(&g, None, 1), CacheKey::new(&g, None, 2));
+    let now = unix_now();
+    let mut buf = record::file_header().to_vec();
+    buf.extend_from_slice(&record::encode(&fresh_key, 0, now, &g, None, &value_for(&g, 1)));
+    buf.extend_from_slice(&record::encode(&stale_key, 0, 1000, &g, None, &value_for(&g, 2)));
+    fs::write(dir.join("log.bin"), &buf).unwrap();
+
+    // TTL: the ancient record expires, the fresh one replays.
+    let ttl_cfg = PersistConfig {
+        ttl_secs: 3600,
+        ..PersistConfig::default()
+    };
+    let (tier, recovered) = PersistTier::open(&dir, ttl_cfg).expect("ttl open");
+    let m = tier.metrics();
+    assert_eq!(m.ttl_drops, 1, "{m:?}");
+    assert_eq!(m.warm_start_entries, 1);
+    assert_eq!(recovered[0].key, fresh_key);
+    drop(tier);
+
+    // Version tag: bumping the store version orphans every record
+    // written under the old tag — the "reused graph id, changed
+    // structure" invalidation path.
+    let bumped = PersistConfig {
+        version: 1,
+        ..PersistConfig::default()
+    };
+    let (tier, recovered) = PersistTier::open(&dir, bumped).expect("bumped open");
+    let m = tier.metrics();
+    assert_eq!(m.version_drops, 2, "{m:?}");
+    assert_eq!(m.warm_start_entries, 0);
+    assert!(recovered.is_empty());
+    drop(tier);
+
+    // The matching tag still replays both (nothing was truncated).
+    let (tier, recovered) = PersistTier::open(&dir, PersistConfig::default()).expect("open");
+    assert_eq!(recovered.len(), 2);
+    assert_eq!(tier.metrics().recovery_rejects, 0);
+    failpoint::disarm_all();
+}
+
+#[test]
+fn flusher_panic_degrades_to_a_lost_batch_not_a_cascade() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let dir = fresh_dir("flusher_panic");
+    let cfg = PersistConfig::default();
+    let (tier, _) = PersistTier::open(&dir, cfg).expect("open");
+    let g = mesh2d(8, 10);
+    let (k1, k2) = (CacheKey::new(&g, None, 1), CacheKey::new(&g, None, 2));
+
+    // Batch 1 panics mid-append; flush() must still return (the batch
+    // is acked as lost), the panic is counted, and the log is repaired.
+    failpoint::arm(failpoint::PERSIST_APPEND, FailAction::Panic, Some(1));
+    tier.enqueue_frame(tier.encode_frame(&k1, &g, None, &value_for(&g, 1)));
+    tier.flush();
+    assert_eq!(failpoint::fired(failpoint::PERSIST_APPEND), 1);
+    let m = tier.metrics();
+    assert_eq!(m.flush_panics, 1, "{m:?}");
+    assert_eq!(m.log_bytes, record::FILE_HEADER_BYTES as u64, "repaired to last fsync");
+
+    // The flusher thread survived its contained panic: batch 2 lands.
+    tier.enqueue_frame(tier.encode_frame(&k2, &g, None, &value_for(&g, 2)));
+    tier.flush();
+    let m = tier.metrics();
+    assert_eq!(m.appended_records, 1, "{m:?}");
+    assert!(m.log_bytes > record::FILE_HEADER_BYTES as u64);
+    drop(tier);
+    failpoint::disarm_all();
+
+    // Restart: the lost record is a cache miss, the later one replays.
+    let (tier2, recovered) = PersistTier::open(&dir, cfg).expect("reopen");
+    assert_eq!(tier2.metrics().recovery_rejects, 0, "repair left no torn bytes");
+    assert_eq!(recovered.len(), 1);
+    assert_eq!(recovered[0].key, k2);
+    failpoint::disarm_all();
+}
+
+#[test]
+fn compaction_dedups_last_wins_and_drops_over_budget_oldest_first() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let g = mesh2d(7, 7);
+    let (k1, k2) = (CacheKey::new(&g, None, 1), CacheKey::new(&g, None, 2));
+    let (old_v, new_v, other_v) = (value_for(&g, 1), value_for(&g, 9), value_for(&g, 4));
+
+    // Dedup: two generations of k1 plus one k2; the snapshot keeps the
+    // newer k1 (last write in log order wins).
+    let dir = fresh_dir("compact_dedup");
+    let cfg = PersistConfig::default();
+    let (tier, _) = PersistTier::open(&dir, cfg).expect("open");
+    tier.enqueue_frame(record::encode(&k1, 0, 100, &g, None, &old_v));
+    tier.enqueue_frame(record::encode(&k2, 0, 200, &g, None, &other_v));
+    tier.enqueue_frame(record::encode(&k1, 0, 300, &g, None, &new_v));
+    tier.compact_now().expect("compact");
+    let m = tier.metrics();
+    assert_eq!(m.snapshots, 1, "{m:?}");
+    assert_eq!(m.snapshot_dropped, 0);
+    drop(tier);
+    let (_t, recovered) = PersistTier::open(&dir, cfg).expect("reopen");
+    assert_eq!(recovered.len(), 2, "compaction deduplicates by key");
+    let k1_rec = recovered.iter().find(|r| r.key == k1).expect("k1 survives");
+    assert_eq!(k1_rec.value.perm, new_v.perm, "last write wins");
+    assert_eq!(k1_rec.created_at, 300);
+    drop(_t);
+
+    // Budget: a snapshot that only fits one record keeps the newest.
+    let dir = fresh_dir("compact_budget");
+    let frame_len = record::encode(&k1, 0, 100, &g, None, &old_v).len() as u64;
+    let tight = PersistConfig {
+        max_bytes: record::FILE_HEADER_BYTES as u64 + frame_len,
+        ..PersistConfig::default()
+    };
+    let (tier, _) = PersistTier::open(&dir, tight).expect("open tight");
+    tier.enqueue_frame(record::encode(&k1, 0, 100, &g, None, &old_v));
+    tier.enqueue_frame(record::encode(&k2, 0, 300, &g, None, &other_v));
+    tier.compact_now().expect("compact tight");
+    let m = tier.metrics();
+    assert_eq!(m.snapshot_dropped, 1, "{m:?}");
+    drop(tier);
+    let (_t, recovered) = PersistTier::open(&dir, tight).expect("reopen tight");
+    assert_eq!(recovered.len(), 1, "over-budget records are dropped");
+    assert_eq!(recovered[0].key, k2, "oldest-created is dropped first");
+    failpoint::disarm_all();
+}
+
+#[test]
+fn opening_over_a_plain_file_is_a_typed_io_error() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let path = fresh_dir("not_a_dir");
+    fs::write(&path, b"occupied").unwrap();
+    match PersistTier::open(&path, PersistConfig::default()) {
+        Err(PersistError::Io { op, .. }) => assert_eq!(op, "create dir"),
+        Err(other) => panic!("expected Io, got {other}"),
+        Ok(_) => panic!("opening over a plain file must fail"),
+    }
+    failpoint::disarm_all();
+}
+
+#[test]
+fn chaos_failpoints_leave_a_persistent_service_serviceable() {
+    let _g = serial();
+    failpoint::disarm_all();
+    let dir = fresh_dir("chaos");
+    let svc = persistent_service(&dir);
+    let cases: [(&str, FailAction, Option<u64>); 3] = [
+        (failpoint::DISPATCHER_PANIC, FailAction::Panic, Some(1)),
+        (
+            failpoint::STAGE_LATENCY,
+            FailAction::Sleep(Duration::from_millis(25)),
+            Some(1),
+        ),
+        (failpoint::CACHE_VERIFY, FailAction::Reject, Some(1)),
+    ];
+    for (i, (name, action, limit)) in cases.into_iter().enumerate() {
+        let g = mesh2d(10, 10 + i);
+        failpoint::arm(name, action, limit);
+        match svc.submit(req(g.clone())).wait_result() {
+            Ok(rep) => assert!(is_valid_perm(&rep.perm), "{name}: bad perm"),
+            Err(OrderError::Failed(why)) => {
+                assert!(why.contains("panicked"), "{name}: unexpected failure: {why}")
+            }
+            Err(other) => panic!("{name}: unexpected outcome {other:?}"),
+        }
+        let rep = svc
+            .submit(req(g.clone()))
+            .wait_result()
+            .unwrap_or_else(|e| panic!("{name}: follow-up failed with persistence on: {e}"));
+        assert!(is_valid_perm(&rep.perm), "{name}: follow-up perm invalid");
+        failpoint::disarm_all();
+    }
+    drop(svc);
+
+    // The chaos run left a usable store behind.
+    let svc2 = persistent_service(&dir);
+    let pm = svc2.metrics().shards.persist.expect("tier attached");
+    assert!(pm.warm_start_entries >= 1, "{pm:?}");
+    assert_eq!(pm.recovery_rejects, 0);
+    assert!(is_valid_perm(&svc2.order(&req(mesh2d(10, 10))).perm));
+    failpoint::disarm_all();
+}
